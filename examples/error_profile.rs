@@ -1,0 +1,27 @@
+//! The statistical profiling study of Section IV (Fig 1): relative
+//! estimation error across cardinalities for (p, H) ∈ {14,16} × {32,64}.
+//!
+//! Run: `cargo run --release --example error_profile [-- --quick]`
+//! `--quick` sweeps to 10^6 with 3 trials (CI-friendly); the default
+//! goes to 10^7 with 5 trials; `--full` matches the paper's 10^9 reach.
+
+use hll_fpga::repro::fig1::{check_claims, curves, render, Fig1Options};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let full = args.iter().any(|a| a == "--full");
+
+    let opts = Fig1Options {
+        full,
+        trials: if quick { 3 } else { 5 },
+        max_exp: if quick { Some(6) } else { None },
+    };
+    let curves = curves(&opts);
+
+    println!("{}", render(&curves));
+    println!("claims:");
+    for (claim, holds, detail) in check_claims(&curves) {
+        println!("  [{}] {claim} ({detail})", if holds { "ok" } else { "MISS" });
+    }
+}

@@ -1,0 +1,59 @@
+//! Deployment (a): the FPGA as a PCIe co-processor (Section VI).
+//!
+//! Sweeps pipeline counts through the XDMA/PCIe model (Fig 4a) and runs
+//! one functional multi-pipeline engine end to end, demonstrating that
+//! the simulated dataflow architecture computes the exact sketch.
+//!
+//! Run: `cargo run --release --example pcie_coprocessor`
+
+use hll_fpga::fpga::ParallelHll;
+use hll_fpga::hll::HllConfig;
+use hll_fpga::pcie::CoProcessorModel;
+use hll_fpga::repro::fig4;
+use hll_fpga::stats::DistinctStream;
+
+fn main() {
+    // --- Fig 4(a): throughput vs #pipelines against the PCIe bound ---
+    let rows = fig4::fig4a_rows(256 << 20);
+    println!("{}", fig4::render_fig4a(&rows));
+
+    let model = CoProcessorModel::default();
+    println!(
+        "PCIe saturation at {} pipelines (paper: 10).\n",
+        model.saturation_pipelines()
+    );
+
+    // --- Functional run: 10-pipeline engine over 2M distinct values ---
+    let n = 2_000_000u64;
+    let words: Vec<u32> = DistinctStream::new(n, 7).collect();
+    let mut engine = ParallelHll::new(HllConfig::PAPER, 10);
+    engine.feed(&words);
+    let result = engine.finish();
+
+    println!("functional 10-pipeline run over {n} distinct values:");
+    println!("  estimate:          {:.0}", result.breakdown.estimate);
+    println!(
+        "  error:             {:.3}%",
+        (result.breakdown.estimate - n as f64).abs() / n as f64 * 100.0
+    );
+    println!(
+        "  aggregation time:  {} (simulated @322 MHz)",
+        hll_fpga::util::fmt::duration_s(result.aggregation_seconds())
+    );
+    println!(
+        "  drain (constant):  {}",
+        hll_fpga::util::fmt::duration_s(result.clock.cycles_to_seconds(result.drain_cycles))
+    );
+    println!(
+        "  sim throughput:    {}",
+        hll_fpga::util::fmt::gbytes_per_s(result.throughput_bytes_per_s())
+    );
+
+    // Model a full co-processor invocation (PCIe transfer + compute).
+    let run = model.run(&HllConfig::PAPER, 10, (n * 4) as u64);
+    println!(
+        "  incl. PCIe model:  {} end-to-end ({} effective)",
+        hll_fpga::util::fmt::duration_s(run.total_seconds),
+        hll_fpga::util::fmt::gbytes_per_s(run.throughput_bytes_per_s())
+    );
+}

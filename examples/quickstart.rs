@@ -1,0 +1,60 @@
+//! Quickstart: the core HLL public API in five minutes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hll_fpga::hll::{AdaptiveSketch, HashKind, HllConfig, HllSketch};
+
+fn main() {
+    // 1. The paper's hardware configuration: p=16, 64-bit Murmur3.
+    let mut sketch = HllSketch::paper();
+
+    // 2. Insert 32-bit stream words (the paper's data type) ...
+    for v in 0u32..100_000 {
+        sketch.insert_u32(v.wrapping_mul(2_654_435_761)); // distinct values
+    }
+    // ... and arbitrary byte strings (URLs, user IDs, ...).
+    sketch.insert_bytes(b"https://systems.ethz.ch");
+    sketch.insert_bytes(b"https://systems.ethz.ch"); // duplicate: no effect
+
+    let b = sketch.estimate_breakdown();
+    println!("estimate:       {:.0} (truth: 100,001)", b.estimate);
+    println!("raw estimate:   {:.0}", b.raw);
+    println!("correction:     {:?}", b.correction);
+    println!("zero registers: {}", b.zero_registers);
+    println!(
+        "error:          {:.3}% (expected sigma = {:.2}%)",
+        (b.estimate - 100_001.0).abs() / 100_001.0 * 100.0,
+        sketch.config().standard_error() * 100.0
+    );
+
+    // 3. Distributed counting: sketches merge losslessly (Fig 3).
+    let mut east = HllSketch::paper();
+    let mut west = HllSketch::paper();
+    for v in 0u32..50_000 {
+        east.insert_u32(v);
+    }
+    for v in 25_000u32..75_000 {
+        west.insert_u32(v); // 25k overlap
+    }
+    east.merge(&west).expect("same config");
+    println!("\nmerged estimate: {:.0} (truth: 75,000)", east.estimate());
+
+    // 4. Other configurations: any p in [4,16], 32- or 64-bit hash.
+    let small = HllConfig::new(12, HashKind::H32).expect("valid");
+    println!(
+        "\np=12/H32 footprint: {:.1} KiB (paper eq. (3)), sigma {:.2}%",
+        small.footprint_kib(),
+        small.standard_error() * 100.0
+    );
+
+    // 5. Memory-adaptive sketch: starts sparse, upgrades to dense.
+    let mut adaptive = AdaptiveSketch::new(HllConfig::PAPER);
+    for v in 0u32..100 {
+        adaptive.insert_u32(v);
+    }
+    println!(
+        "adaptive (100 values): sparse={} estimate={:.1}",
+        adaptive.is_sparse(),
+        adaptive.estimate()
+    );
+}

@@ -1,0 +1,143 @@
+"""AOT export: lower the Layer-2 model to HLO text for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Produces, under --out (default ../artifacts):
+
+* one `<name>.hlo.txt` per model variant;
+* `manifest.tsv` — the machine-readable index the Rust loader parses
+  (columns: name, file, kind, p, h_bits, batch, m, outputs);
+* `manifest.json` — the same, for humans and tooling.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .kernels import _x64  # noqa: F401
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper's hardware configuration is (p=16, H=64); additional variants
+# cover the profiling study (p=14, H=32) and multiple batch sizes for the
+# coordinator's batching policy.
+AGGREGATE_VARIANTS = [
+    # (p, h_bits, batch)
+    (16, 64, 8192),
+    (16, 64, 65536),
+    (16, 64, 1024),
+    (16, 32, 8192),
+    (14, 64, 8192),
+]
+ESTIMATE_VARIANTS = [(16, 64), (16, 32), (14, 64)]
+MERGE_VARIANTS = [16, 14]
+FUSED_VARIANTS = [(16, 64, 8192)]
+
+
+def to_hlo_text(lowered, return_tuple: bool = False) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path).
+
+    `return_tuple=False` for single-output modules lets the Rust runtime
+    keep results as plain device buffers (no tuple unwrap → the register
+    file can stay device-resident across chunked aggregate calls, the
+    donated-buffer analogue measured in EXPERIMENTS.md §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_entries():
+    """Yield (name, lowered, meta) for every artifact."""
+    for p, h, b in AGGREGATE_VARIANTS:
+        m = 1 << p
+        name = f"aggregate_p{p}_h{h}_b{b}"
+        lowered = jax.jit(
+            lambda keys, regs, p=p, h=h: model.hll_aggregate(
+                keys, regs, p=p, h_bits=h
+            )
+        ).lower(_i32(b), _i32(m))
+        yield name, lowered, dict(kind="aggregate", p=p, h_bits=h, batch=b,
+                                  m=m, outputs="regs:i32[m]")
+
+    for p, h in ESTIMATE_VARIANTS:
+        m = 1 << p
+        name = f"estimate_p{p}_h{h}"
+        lowered = jax.jit(
+            lambda regs, p=p, h=h: model.hll_estimate(regs, p=p, h_bits=h)
+        ).lower(_i32(m))
+        yield name, lowered, dict(kind="estimate", p=p, h_bits=h, batch=0,
+                                  m=m, outputs="stats:f64[3]")
+
+    for p in MERGE_VARIANTS:
+        m = 1 << p
+        name = f"merge_p{p}"
+        lowered = jax.jit(model.hll_merge).lower(_i32(m), _i32(m))
+        yield name, lowered, dict(kind="merge", p=p, h_bits=0, batch=0,
+                                  m=m, outputs="regs:i32[m]")
+
+    for p, h, b in FUSED_VARIANTS:
+        m = 1 << p
+        name = f"aggregate_estimate_p{p}_h{h}_b{b}"
+        lowered = jax.jit(
+            lambda keys, regs, p=p, h=h: model.hll_aggregate_and_estimate(
+                keys, regs, p=p, h_bits=h
+            )
+        ).lower(_i32(b), _i32(m))
+        yield name, lowered, dict(kind="aggregate_estimate", p=p, h_bits=h,
+                                  batch=b, m=m,
+                                  outputs="regs:i32[m],stats:f64[3]")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, lowered, meta in build_entries():
+        multi_output = meta["kind"] == "aggregate_estimate"
+        text = to_hlo_text(lowered, return_tuple=multi_output)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(name=name, file=fname, **meta)
+        manifest.append(entry)
+        print(f"  wrote {fname:<44} ({len(text) / 1024:8.1f} KiB)")
+
+    # TSV for the dependency-free Rust loader.
+    cols = ["name", "file", "kind", "p", "h_bits", "batch", "m", "outputs"]
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\t".join(cols) + "\n")
+        for e in manifest:
+            f.write("\t".join(str(e[c]) for c in cols) + "\n")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} entries to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

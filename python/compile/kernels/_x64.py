@@ -1,0 +1,9 @@
+"""Enable 64-bit mode before any jax import users touch arrays.
+
+The 64-bit Murmur3 path needs uint64 arithmetic; every module in the
+compile package imports this first.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

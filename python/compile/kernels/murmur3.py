@@ -1,0 +1,171 @@
+"""Layer-1 Pallas kernel: the paper's compute hot-spot.
+
+One fused kernel computes, for a tile of 32-bit stream words, the three
+front-of-pipeline stages of Fig. 2:
+
+    Murmur3 hash  →  index extractor  →  leading-zero detector
+
+returning `(bucket_index, rank)` per word. The bucket scatter-max (the
+BRAM "Buckets" stage) is expressed at Layer 2 where XLA's scatter op
+implements it; see `python/compile/model.py`.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA unrolls
+the hash's multiply/rotate chain *spatially* across DSP slices at II=1;
+on TPU the same insight maps to *batch vectorization* — each grid step
+streams one VMEM-resident tile of words through the VPU's integer lanes.
+BlockSpec expresses the HBM↔VMEM schedule that the FPGA's AXI4 stream +
+BRAM plumbing provides.
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to portable HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from . import _x64  # noqa: F401  (enables jax_enable_x64)
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# MurmurHash3_x64_128 constants (Appleby, SMHasher).
+_C1_64 = 0x87C37B91114253D5
+_C2_64 = 0x4CF5AA3D36495958
+# MurmurHash3_x86_32 constants.
+_C1_32 = 0xCC9E2D51
+_C2_32 = 0x1B873593
+
+# Tile size for the BlockSpec HBM↔VMEM schedule. 8192 words/tile keeps
+# the live set ≈ 0.4 MiB (u32 keys + u64 hash chain intermediates, ~48 B
+# per element) — comfortably inside a TPU core's ~16 MiB VMEM — while
+# minimizing grid-step dispatch overhead; measured 1.9× over 1024-word
+# tiles on the CPU interpret path (EXPERIMENTS.md §Perf).
+DEFAULT_BLOCK = 8192
+
+
+def _rotl(x, r, bits):
+    sh_l = jnp.array(r, dtype=x.dtype)
+    sh_r = jnp.array(bits - r, dtype=x.dtype)
+    return (x << sh_l) | (x >> sh_r)
+
+
+def _fmix64(k):
+    s = jnp.array(33, dtype=jnp.uint64)
+    k = k ^ (k >> s)
+    k = k * jnp.uint64(0xFF51AFD7ED558CCD)
+    k = k ^ (k >> s)
+    k = k * jnp.uint64(0xC4CEB9FE1A85EC53)
+    k = k ^ (k >> s)
+    return k
+
+
+def _fmix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def murmur3_x64_64_u32(keys_u32):
+    """Vectorized 64-bit Murmur3 (low half of x64_128) of u32 keys.
+
+    Matches the canonical byte-string implementation's tail path for
+    4-byte inputs with seed 0 (the seed all layers agree on).
+    """
+    k1 = keys_u32.astype(jnp.uint64)
+    k1 = k1 * jnp.uint64(_C1_64)
+    k1 = _rotl(k1, 31, 64)
+    k1 = k1 * jnp.uint64(_C2_64)
+    h1 = k1  # seed(0) ^ k1
+    h2 = jnp.zeros_like(h1)
+    four = jnp.uint64(4)
+    h1 = h1 ^ four
+    h2 = h2 ^ four
+    h1 = h1 + h2
+    h2 = h2 + h1
+    h1 = _fmix64(h1)
+    h2 = _fmix64(h2)
+    return h1 + h2
+
+
+def murmur3_x86_32_u32(keys_u32):
+    """Vectorized MurmurHash3_x86_32 of u32 keys (one body block, seed 0)."""
+    k1 = keys_u32 * jnp.uint32(_C1_32)
+    k1 = _rotl(k1, 15, 32)
+    k1 = k1 * jnp.uint32(_C2_32)
+    h1 = k1  # seed(0) ^ k1
+    h1 = _rotl(h1, 13, 32)
+    h1 = h1 * jnp.uint32(5) + jnp.uint32(0xE6546B64)
+    h1 = h1 ^ jnp.uint32(4)
+    return _fmix32(h1)
+
+
+def _leading_zeros(w, w_bits):
+    """Leading zeros of `w` within a `w_bits`-wide word; exact via
+    bit-smear + population count (the VPU analogue of the FPGA's LZD /
+    x86's LZCNT)."""
+    x = w
+    shift = 1
+    while shift < w_bits:
+        x = x | (x >> jnp.array(shift, dtype=x.dtype))
+        shift *= 2
+    return jnp.array(w_bits, jnp.int32) - lax.population_count(x).astype(jnp.int32)
+
+
+def _index_rank_block(keys_u32, p, h_bits):
+    """(index, rank) for one tile — shared by the kernel body and tests."""
+    if h_bits == 64:
+        h = murmur3_x64_64_u32(keys_u32)
+        w_bits = 64 - p
+        idx = (h >> jnp.uint64(w_bits)).astype(jnp.int32)
+        w = h & jnp.uint64((1 << w_bits) - 1)
+    elif h_bits == 32:
+        h = murmur3_x86_32_u32(keys_u32)
+        w_bits = 32 - p
+        idx = (h >> jnp.uint32(w_bits)).astype(jnp.int32)
+        w = h & jnp.uint32((1 << w_bits) - 1)
+    else:
+        raise ValueError(f"unsupported hash width {h_bits}")
+    rank = _leading_zeros(w, w_bits) + 1
+    return idx, rank
+
+
+def _kernel(keys_ref, idx_ref, rank_ref, *, p, h_bits):
+    keys = keys_ref[...]
+    idx, rank = _index_rank_block(keys, p, h_bits)
+    idx_ref[...] = idx
+    rank_ref[...] = rank
+
+
+@functools.partial(jax.jit, static_argnames=("p", "h_bits", "block"))
+def hash_index_rank(keys_u32, *, p, h_bits, block=DEFAULT_BLOCK):
+    """Pallas-tiled hash + index-extract + rank over a batch of u32 keys.
+
+    `keys_u32.shape[0]` must be a multiple of `block` (the coordinator
+    always feeds full batches; odd tails are handled on the Rust side).
+    Returns `(idx int32[B], rank int32[B])`.
+    """
+    (n,) = keys_u32.shape
+    block = min(block, n)
+    if n % block != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block}")
+    grid = n // block
+    return pl.pallas_call(
+        functools.partial(_kernel, p=p, h_bits=h_bits),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys_u32)

@@ -1,0 +1,196 @@
+"""Pure-NumPy correctness oracle for the Pallas kernels.
+
+Implemented independently of the kernel code (NumPy uint arithmetic,
+scalar-faithful port of the canonical MurmurHash3.cpp) so that agreement
+between this oracle, the Pallas kernels, and the Rust implementation is a
+three-way cross-check of the hash and rank logic.
+
+Everything here is vectorized NumPy but deliberately *not* shared with
+the jnp kernel implementations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- MurmurHash3_x64_128 constants (Appleby, SMHasher) ---
+_C1_64 = np.uint64(0x87C37B91114253D5)
+_C2_64 = np.uint64(0x4CF5AA3D36495958)
+
+# --- MurmurHash3_x86_32 constants ---
+_C1_32 = np.uint32(0xCC9E2D51)
+_C2_32 = np.uint32(0x1B873593)
+
+
+def _rotl64(x: np.ndarray, r: int) -> np.ndarray:
+    return (x << np.uint64(r)) | (x >> np.uint64(64 - r))
+
+
+def _rotl32(x: np.ndarray, r: int) -> np.ndarray:
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def _fmix64(k: np.ndarray) -> np.ndarray:
+    s33 = np.uint64(33)
+    k = k ^ (k >> s33)
+    k = k * np.uint64(0xFF51AFD7ED558CCD)
+    k = k ^ (k >> s33)
+    k = k * np.uint64(0xC4CEB9FE1A85EC53)
+    k = k ^ (k >> s33)
+    return k
+
+
+def _fmix32(h: np.ndarray) -> np.ndarray:
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def murmur3_x64_64_u32(keys: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Low 64 bits of MurmurHash3_x64_128 of each 4-byte LE u32 key.
+
+    Mirrors the reference implementation's tail path for len == 4.
+    """
+    old = np.seterr(over="ignore")
+    try:
+        keys = np.asarray(keys, dtype=np.uint32)
+        seed64 = np.uint64(seed)
+        k1 = keys.astype(np.uint64)
+        k1 = k1 * _C1_64
+        k1 = _rotl64(k1, 31)
+        k1 = k1 * _C2_64
+        h1 = seed64 ^ k1
+        h2 = np.full_like(h1, seed64)
+        four = np.uint64(4)
+        h1 = h1 ^ four
+        h2 = h2 ^ four
+        h1 = h1 + h2
+        h2 = h2 + h1
+        h1 = _fmix64(h1)
+        h2 = _fmix64(h2)
+        h1 = h1 + h2
+        return h1
+    finally:
+        np.seterr(**old)
+
+
+def murmur3_x86_32_u32(keys: np.ndarray, seed: int = 0) -> np.ndarray:
+    """MurmurHash3_x86_32 of each 4-byte LE u32 key (one body block)."""
+    old = np.seterr(over="ignore")
+    try:
+        keys = np.asarray(keys, dtype=np.uint32)
+        k1 = keys * _C1_32
+        k1 = _rotl32(k1, 15)
+        k1 = k1 * _C2_32
+        h1 = np.uint32(seed) ^ k1
+        h1 = _rotl32(h1, 13)
+        h1 = h1 * np.uint32(5) + np.uint32(0xE6546B64)
+        h1 = h1 ^ np.uint32(4)  # length
+        return _fmix32(h1)
+    finally:
+        np.seterr(**old)
+
+
+def murmur3_x86_32_bytes(data: bytes, seed: int = 0) -> int:
+    """Scalar byte-string variant — used to check published test vectors."""
+    old = np.seterr(over="ignore")
+    try:
+        h1 = np.uint32(seed)
+        nblocks = len(data) // 4
+        for i in range(nblocks):
+            k1 = np.uint32(int.from_bytes(data[i * 4 : i * 4 + 4], "little"))
+            k1 = k1 * _C1_32
+            k1 = _rotl32(k1, 15)
+            k1 = k1 * _C2_32
+            h1 = h1 ^ k1
+            h1 = _rotl32(h1, 13)
+            h1 = h1 * np.uint32(5) + np.uint32(0xE6546B64)
+        tail = data[nblocks * 4 :]
+        if tail:
+            k1 = np.uint32(0)
+            for i, b in enumerate(tail):
+                k1 = k1 ^ np.uint32(b << (8 * i))
+            k1 = k1 * _C1_32
+            k1 = _rotl32(k1, 15)
+            k1 = k1 * _C2_32
+            h1 = h1 ^ k1
+        h1 = h1 ^ np.uint32(len(data))
+        return int(_fmix32(h1))
+    finally:
+        np.seterr(**old)
+
+
+def index_and_rank(hashes: np.ndarray, p: int, h_bits: int):
+    """Algorithm 1 lines 7-8: split an H-bit hash into (index, rank)."""
+    hashes = np.asarray(hashes, dtype=np.uint64)
+    w_bits = h_bits - p
+    idx = (hashes >> np.uint64(w_bits)).astype(np.int64)
+    w = hashes & np.uint64((1 << w_bits) - 1)
+    # Rank = leading zeros within w_bits, +1; rank(0) = w_bits + 1.
+    # Highest-set-bit via integer binary search (exact for all u64).
+    rank = np.zeros(hashes.shape, dtype=np.int64)
+    nz = w != 0
+    wb = w[nz]
+    hsb = np.zeros(wb.shape, dtype=np.int64)
+    cur = wb.copy()
+    for shift in (32, 16, 8, 4, 2, 1):
+        step = cur >= (np.uint64(1) << np.uint64(shift))
+        hsb = hsb + np.where(step, shift, 0)
+        cur = np.where(step, cur >> np.uint64(shift), cur)
+    rank[nz] = (w_bits - 1 - hsb) + 1
+    rank[~nz] = w_bits + 1
+    return idx, rank.astype(np.int32)
+
+
+def hash_index_rank(keys: np.ndarray, p: int, h_bits: int, seed: int = 0):
+    """The L1 kernel's contract: keys -> (index, rank)."""
+    if h_bits == 64:
+        hashes = murmur3_x64_64_u32(keys, seed)
+    elif h_bits == 32:
+        hashes = murmur3_x86_32_u32(keys, seed).astype(np.uint64)
+    else:
+        raise ValueError(f"unsupported hash width {h_bits}")
+    return index_and_rank(hashes, p, h_bits)
+
+
+def hll_aggregate(keys: np.ndarray, regs: np.ndarray, p: int, h_bits: int,
+                  seed: int = 0) -> np.ndarray:
+    """Full aggregation-phase oracle: scatter-max of ranks into registers."""
+    idx, rank = hash_index_rank(keys, p, h_bits, seed)
+    out = np.array(regs, dtype=np.int32, copy=True)
+    np.maximum.at(out, idx, rank)
+    return out
+
+
+def hll_power_sum(regs: np.ndarray):
+    """Computation-phase oracle: (sum 2^-M[j], V)."""
+    regs = np.asarray(regs, dtype=np.int64)
+    return float(np.exp2(-regs.astype(np.float64)).sum()), int((regs == 0).sum())
+
+
+def hll_estimate(regs: np.ndarray, p: int, h_bits: int):
+    """Algorithm 1 phase 4 oracle. Returns (raw, V, estimate)."""
+    m = 1 << p
+    regs = np.asarray(regs)
+    assert regs.shape == (m,)
+    s, v = hll_power_sum(regs)
+    if m == 16:
+        alpha = 0.673
+    elif m == 32:
+        alpha = 0.697
+    elif m == 64:
+        alpha = 0.709
+    else:
+        alpha = 0.7213 / (1.0 + 1.079 / m)
+    raw = alpha * m * m / s
+    if raw <= 2.5 * m:
+        est = m * np.log(m / v) if v != 0 else raw
+    elif h_bits == 32 and raw > (1 << 32) / 30.0:
+        ratio = max(1.0 - raw / float(1 << 32), np.finfo(np.float64).tiny)
+        est = -float(1 << 32) * np.log(ratio)
+    else:
+        est = raw
+    return raw, v, float(est)

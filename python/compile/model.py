@@ -1,0 +1,108 @@
+"""Layer-2 JAX model: the HLL compute graph, calling the Layer-1 kernels.
+
+Three entry points, mirroring the hardware architecture:
+
+* :func:`hll_aggregate` — the aggregation phase (Fig. 2's pipeline up to
+  and including the BRAM bucket update): a batch of 32-bit words updates
+  the register file. The hash/index/rank front-end is the Pallas kernel;
+  the bucket update is an XLA scatter-max.
+* :func:`hll_estimate` — the computation phase: power-sum reduction
+  (Pallas kernel) plus Algorithm 1's correction branches, fully
+  branch-free so it lowers to a single straight-line HLO module.
+* :func:`hll_merge` — bucket-wise max, the parallel architecture's
+  "Merge buckets" fold (Fig. 3).
+
+All functions are pure and jit-lowerable; `aot.py` exports them as HLO
+text for the Rust runtime. The Rust side passes i32 buffers (the `xla`
+crate's ergonomic type) and bit-level reinterpretation happens here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from .kernels import _x64  # noqa: F401
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import estimate as estimate_kernel
+from .kernels import murmur3 as murmur3_kernel
+
+
+def _alpha(m: int) -> float:
+    if m == 16:
+        return 0.673
+    if m == 32:
+        return 0.697
+    if m == 64:
+        return 0.709
+    return 0.7213 / (1.0 + 1.079 / m)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "h_bits", "block"))
+def hll_aggregate(keys_i32, regs_i32, *, p, h_bits,
+                  block=murmur3_kernel.DEFAULT_BLOCK):
+    """Aggregation phase: fold a batch of 32-bit words into the registers.
+
+    `keys_i32` carries the raw stream words as i32 bit patterns (the
+    Rust↔PJRT interchange type); they are bitcast to u32 here.
+    """
+    keys_u32 = jax.lax.bitcast_convert_type(keys_i32, jnp.uint32)
+    idx, rank = murmur3_kernel.hash_index_rank(keys_u32, p=p, h_bits=h_bits,
+                                               block=block)
+    # The "Buckets" stage: M[idx] = max(M[idx], rank). XLA scatter-max
+    # merges in-batch duplicates exactly like the hardware merges updates
+    # that collide during the BRAM read-modify-write window.
+    return regs_i32.at[idx].max(rank, indices_are_sorted=False,
+                                unique_indices=False)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "h_bits", "block"))
+def hll_estimate(regs_i32, *, p, h_bits,
+                 block=estimate_kernel.DEFAULT_BLOCK):
+    """Computation phase: registers → f64[3] = (raw E, V, estimate E*).
+
+    Branch-free port of Algorithm 1 lines 11-23.
+    """
+    m = 1 << p
+    if regs_i32.shape != (m,):
+        raise ValueError(f"expected {m} registers, got {regs_i32.shape}")
+    psum, zeros = estimate_kernel.power_sum(regs_i32, block=block)
+    s = psum[0]
+    v = zeros[0]
+    raw = _alpha(m) * m * m / s
+
+    v_f = v.astype(jnp.float64)
+    # LinearCounting(m, V) = m·ln(m/V); V clamped to keep the log finite
+    # on the not-taken branch.
+    lc = m * jnp.log(m / jnp.maximum(v_f, 1.0))
+    use_lc = (raw <= 2.5 * m) & (v > 0)
+
+    if h_bits == 32:
+        two32 = float(1 << 32)
+        ratio = jnp.maximum(1.0 - raw / two32, jnp.finfo(jnp.float64).tiny)
+        lr = -two32 * jnp.log(ratio)
+        use_lr = raw > two32 / 30.0
+        est = jnp.where(use_lc, lc, jnp.where(use_lr, lr, raw))
+    else:
+        # 64-bit hash: large-range correction is obsolete (Section III).
+        est = jnp.where(use_lc, lc, raw)
+
+    return jnp.stack([raw, v_f, est])
+
+
+@jax.jit
+def hll_merge(regs_a_i32, regs_b_i32):
+    """Bucket-wise max fold (Fig. 3 "Merge buckets")."""
+    return jnp.maximum(regs_a_i32, regs_b_i32)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "h_bits", "block"))
+def hll_aggregate_and_estimate(keys_i32, regs_i32, *, p, h_bits,
+                               block=murmur3_kernel.DEFAULT_BLOCK):
+    """Fused variant: one round trip for aggregate + estimate — used by
+    the coordinator when a batch closes a stream (saves one PJRT call)."""
+    regs = hll_aggregate(keys_i32, regs_i32, p=p, h_bits=h_bits, block=block)
+    stats = hll_estimate(regs, p=p, h_bits=h_bits)
+    return regs, stats

@@ -1,0 +1,46 @@
+"""AOT export sanity: every manifest entry lowers, is written, and the
+HLO text has the entry computation the Rust loader expects."""
+
+import os
+
+from compile import aot
+
+
+def test_variant_lists_cover_paper_config():
+    assert (16, 64, 8192) in aot.AGGREGATE_VARIANTS
+    assert (16, 64) in aot.ESTIMATE_VARIANTS
+    assert 16 in aot.MERGE_VARIANTS
+
+
+def test_build_entries_lower_and_convert(tmp_path):
+    """Lower one of each kind and round it through to_hlo_text."""
+    seen_kinds = set()
+    for name, lowered, meta in aot.build_entries():
+        if meta["kind"] in seen_kinds:
+            continue
+        seen_kinds.add(meta["kind"])
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+    assert seen_kinds == {"aggregate", "estimate", "merge",
+                          "aggregate_estimate"}
+
+
+def test_artifacts_dir_if_present_is_consistent():
+    """If `make artifacts` has run, the manifest and files must agree."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.tsv")
+    if not os.path.exists(manifest):
+        return  # artifacts not built in this checkout; nothing to check
+    with open(manifest) as f:
+        header = f.readline().strip().split("\t")
+        assert header[0] == "name"
+        rows = [dict(zip(header, line.strip().split("\t"))) for line in f]
+    assert rows, "empty manifest"
+    for row in rows:
+        path = os.path.join(art, row["file"])
+        assert os.path.exists(path), row["file"]
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), row["file"]
+        assert int(row["m"]) == 1 << int(row["p"])

@@ -1,0 +1,81 @@
+"""Edge cases of the compile-path numerics: extreme keys, saturated
+registers, the exact LC/HLL threshold, and dtype discipline."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_extreme_keys():
+    """Keys at the domain edges hash and rank like the oracle."""
+    keys = np.array(
+        [0, 1, 2, 0x7FFFFFFF, 0x80000000, 0xFFFFFFFE, 0xFFFFFFFF] + [0] * 57,
+        dtype=np.uint32,
+    )
+    for p, h in [(16, 64), (14, 32), (4, 64)]:
+        idx_r, rank_r = ref.hash_index_rank(keys, p, h)
+        regs = np.zeros(1 << p, dtype=np.int32)
+        out = np.asarray(model.hll_aggregate(
+            jnp.asarray(keys.view(np.int32)), jnp.asarray(regs),
+            p=p, h_bits=h, block=64))
+        expect = ref.hll_aggregate(keys, regs, p, h)
+        np.testing.assert_array_equal(out, expect)
+        assert rank_r.max() <= h - p + 1
+        assert idx_r.max() < (1 << p)
+
+
+def test_saturated_registers_estimate_finite():
+    """All registers at max rank: the estimate must stay finite (the
+    large-range-correction clamp for H=32)."""
+    for p, h in [(16, 64), (16, 32), (14, 32)]:
+        m = 1 << p
+        regs = np.full(m, h - p + 1, dtype=np.int32)
+        stats = np.asarray(model.hll_estimate(jnp.asarray(regs), p=p, h_bits=h))
+        assert np.isfinite(stats).all(), (p, h, stats)
+        assert stats[2] > 0
+
+
+def test_lc_threshold_branch_is_exact():
+    """Register files straddling E = 5/2·m must pick the same branch as
+    the oracle (the correction mux of Fig 2)."""
+    p, h = 12, 64
+    m = 1 << p
+    rng = np.random.default_rng(0)
+    for fill in (0.05, 0.3, 0.6, 0.95):
+        regs = np.zeros(m, dtype=np.int32)
+        k = int(m * fill)
+        regs[rng.choice(m, size=k, replace=False)] = rng.integers(1, 20, size=k)
+        raw_r, v_r, est_r = ref.hll_estimate(regs, p, h)
+        stats = np.asarray(model.hll_estimate(jnp.asarray(regs), p=p, h_bits=h))
+        np.testing.assert_allclose(stats[2], est_r, rtol=1e-12, err_msg=str(fill))
+
+
+def test_aggregate_preserves_dtype_and_shape():
+    keys = np.zeros(1024, dtype=np.int32)
+    regs = np.zeros(1 << 14, dtype=np.int32)
+    out = model.hll_aggregate(jnp.asarray(keys), jnp.asarray(regs), p=14,
+                              h_bits=64)
+    assert out.shape == (1 << 14,)
+    assert out.dtype == jnp.int32
+
+
+def test_merge_idempotent_and_commutative():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 49, size=1 << 16).astype(np.int32)
+    b = rng.integers(0, 49, size=1 << 16).astype(np.int32)
+    ab = np.asarray(model.hll_merge(jnp.asarray(a), jnp.asarray(b)))
+    ba = np.asarray(model.hll_merge(jnp.asarray(b), jnp.asarray(a)))
+    aa = np.asarray(model.hll_merge(jnp.asarray(a), jnp.asarray(a)))
+    np.testing.assert_array_equal(ab, ba)
+    np.testing.assert_array_equal(aa, a)
+
+
+def test_all_same_key_fills_exactly_one_register():
+    keys = np.full(1024, 0xDEADBEEF, dtype=np.uint32)
+    regs = np.zeros(1 << 16, dtype=np.int32)
+    out = np.asarray(model.hll_aggregate(
+        jnp.asarray(keys.view(np.int32)), jnp.asarray(regs), p=16, h_bits=64))
+    assert (out > 0).sum() == 1

@@ -1,0 +1,150 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-NumPy oracle.
+
+This is the CORE correctness signal for the compile path — hypothesis
+sweeps shapes, precisions and hash widths, asserting exact agreement
+(integer outputs, so allclose == array_equal).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import estimate as estimate_kernel
+from compile.kernels import murmur3 as murmur3_kernel
+from compile.kernels import ref
+
+# Keep hypothesis deadlines off: pallas interpret mode has per-shape
+# compile overhead on first run.
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+KEYS = st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=512)
+
+
+def _pad_to_block(keys, block):
+    n = len(keys)
+    padded = n if n % block == 0 else (n // block + 1) * block
+    return np.asarray(keys + [0] * (padded - n), dtype=np.uint32)
+
+
+@given(keys=KEYS, p=st.sampled_from([4, 8, 12, 14, 16]),
+       h_bits=st.sampled_from([32, 64]),
+       block=st.sampled_from([64, 256, 1024]))
+def test_hash_index_rank_matches_ref(keys, p, h_bits, block):
+    arr = _pad_to_block(keys, block)
+    idx_r, rank_r = ref.hash_index_rank(arr, p, h_bits)
+    idx_k, rank_k = murmur3_kernel.hash_index_rank(
+        jnp.asarray(arr), p=p, h_bits=h_bits, block=block)
+    np.testing.assert_array_equal(idx_r, np.asarray(idx_k))
+    np.testing.assert_array_equal(rank_r, np.asarray(rank_k))
+
+
+@given(keys=KEYS)
+def test_murmur3_x64_64_matches_ref(keys, ):
+    arr = _pad_to_block(keys, 64)
+    h_ref = ref.murmur3_x64_64_u32(arr)
+    h_jnp = np.asarray(murmur3_kernel.murmur3_x64_64_u32(jnp.asarray(arr)))
+    np.testing.assert_array_equal(h_ref, h_jnp)
+
+
+@given(keys=KEYS)
+def test_murmur3_x86_32_matches_ref(keys):
+    arr = _pad_to_block(keys, 64)
+    h_ref = ref.murmur3_x86_32_u32(arr)
+    h_jnp = np.asarray(murmur3_kernel.murmur3_x86_32_u32(jnp.asarray(arr)))
+    np.testing.assert_array_equal(h_ref, h_jnp)
+
+
+def test_block_size_invariance():
+    """Tiling must not change results (BlockSpec schedule is pure)."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 2**32, size=4096, dtype=np.uint32)
+    base = None
+    for block in (64, 128, 512, 1024, 4096):
+        idx, rank = murmur3_kernel.hash_index_rank(
+            jnp.asarray(keys), p=16, h_bits=64, block=block)
+        cur = (np.asarray(idx), np.asarray(rank))
+        if base is None:
+            base = cur
+        else:
+            np.testing.assert_array_equal(base[0], cur[0])
+            np.testing.assert_array_equal(base[1], cur[1])
+
+
+def test_non_divisible_block_rejected():
+    keys = jnp.zeros(100, dtype=jnp.uint32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        murmur3_kernel.hash_index_rank(keys, p=16, h_bits=64, block=64)
+
+
+def test_published_x86_32_vectors():
+    """Canonical SMHasher/Wikipedia test vectors for the scalar path."""
+    cases = [
+        (b"", 0, 0x00000000),
+        (b"", 1, 0x514E28B7),
+        (b"", 0xFFFFFFFF, 0x81F16F39),
+        (bytes([0xFF, 0xFF, 0xFF, 0xFF]), 0, 0x76293B50),
+        (bytes([0x21, 0x43, 0x65, 0x87]), 0, 0xF55B516B),
+        (bytes([0x21, 0x43, 0x65, 0x87]), 0x5082EDEE, 0x2362F9DE),
+        (bytes([0x21, 0x43, 0x65]), 0, 0x7E4A8634),
+        (bytes([0x21, 0x43]), 0, 0xA0F7B07A),
+        (bytes([0x21]), 0, 0x72661CF4),
+        (bytes([0, 0, 0, 0]), 0, 0x2362F9DE),
+    ]
+    for data, seed, expect in cases:
+        assert ref.murmur3_x86_32_bytes(data, seed) == expect, data
+
+
+def test_vectorized_x86_32_matches_scalar_bytes():
+    """The u32 fast path must agree with the byte-string reference."""
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 2**32, size=64, dtype=np.uint32)
+    vec = ref.murmur3_x86_32_u32(keys)
+    for k, h in zip(keys, vec):
+        assert ref.murmur3_x86_32_bytes(int(k).to_bytes(4, "little")) == int(h)
+
+
+def test_rank_bounds():
+    """Ranks are in [1, H-p+1] (paper eq. (2)) for adversarial keys."""
+    keys = np.array([0, 1, 2**31, 2**32 - 1, 0x8000, 0xFFFF], dtype=np.uint32)
+    for p in (4, 16):
+        for h_bits in (32, 64):
+            _, rank = ref.hash_index_rank(keys, p, h_bits)
+            assert rank.min() >= 1
+            assert rank.max() <= h_bits - p + 1
+
+
+def test_rank_distribution_geometric():
+    """P(rank ≥ k) ≈ 2^-(k-1): the geometric tail HLL relies on."""
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 2**32, size=1 << 16, dtype=np.uint32)
+    _, rank = ref.hash_index_rank(keys, 4, 64)
+    n = len(rank)
+    for k in (1, 2, 3, 4, 5):
+        frac = (rank >= k).mean()
+        expect = 2.0 ** -(k - 1)
+        assert abs(frac - expect) < 0.02, (k, frac, expect)
+
+
+@given(regs=st.lists(st.integers(0, 49), min_size=64, max_size=64))
+def test_power_sum_matches_ref(regs):
+    arr = np.asarray(regs, dtype=np.int32)
+    s_ref, v_ref = ref.hll_power_sum(arr)
+    psum, zeros = estimate_kernel.power_sum(jnp.asarray(arr), block=16)
+    assert zeros[0] == v_ref
+    np.testing.assert_allclose(float(psum[0]), s_ref, rtol=1e-12)
+
+
+def test_power_sum_block_invariance():
+    rng = np.random.default_rng(13)
+    regs = rng.integers(0, 49, size=1 << 14).astype(np.int32)
+    vals = []
+    for block in (256, 1024, 4096, 1 << 14):
+        psum, zeros = estimate_kernel.power_sum(jnp.asarray(regs), block=block)
+        vals.append((float(psum[0]), int(zeros[0])))
+    assert all(v[1] == vals[0][1] for v in vals)
+    for v in vals[1:]:
+        np.testing.assert_allclose(v[0], vals[0][0], rtol=1e-12)

@@ -1,0 +1,126 @@
+"""Layer-2 correctness: the JAX model graph vs the NumPy oracle, plus the
+algebraic properties (merge semilattice, fusion consistency) the
+coordinator relies on."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", deadline=None, max_examples=15)
+settings.load_profile("model")
+
+
+def _keys(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 2**32, size=n,
+                                                dtype=np.uint32)
+
+
+@given(seed=st.integers(0, 2**31), p=st.sampled_from([8, 14, 16]),
+       h_bits=st.sampled_from([32, 64]))
+def test_aggregate_matches_ref(seed, p, h_bits):
+    keys = _keys(1024, seed)
+    m = 1 << p
+    regs = np.zeros(m, dtype=np.int32)
+    out_ref = ref.hll_aggregate(keys, regs, p, h_bits)
+    out_mod = np.asarray(model.hll_aggregate(
+        jnp.asarray(keys.view(np.int32)), jnp.asarray(regs),
+        p=p, h_bits=h_bits))
+    np.testing.assert_array_equal(out_ref, out_mod)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_aggregate_accumulates_onto_existing_registers(seed):
+    """Aggregation must max into the provided registers, not overwrite."""
+    keys = _keys(1024, seed)
+    m = 1 << 14
+    rng = np.random.default_rng(seed ^ 0xABCDEF)
+    regs0 = rng.integers(0, 51, size=m).astype(np.int32)
+    out_ref = ref.hll_aggregate(keys, regs0, 14, 64)
+    out_mod = np.asarray(model.hll_aggregate(
+        jnp.asarray(keys.view(np.int32)), jnp.asarray(regs0),
+        p=14, h_bits=64))
+    np.testing.assert_array_equal(out_ref, out_mod)
+    assert (out_mod >= regs0).all()
+
+
+@given(seed=st.integers(0, 2**31), p=st.sampled_from([8, 16]),
+       h_bits=st.sampled_from([32, 64]))
+def test_estimate_matches_ref(seed, p, h_bits):
+    m = 1 << p
+    max_rank = h_bits - p + 1
+    rng = np.random.default_rng(seed)
+    # Mix zero-heavy and saturated register files to hit all branches.
+    mode = seed % 3
+    if mode == 0:
+        regs = np.zeros(m, dtype=np.int32)
+        k = rng.integers(0, m)
+        regs[rng.choice(m, size=k, replace=False)] = rng.integers(
+            1, max_rank + 1, size=k)
+    elif mode == 1:
+        regs = rng.integers(0, max_rank + 1, size=m).astype(np.int32)
+    else:
+        regs = np.full(m, max_rank, dtype=np.int32)
+    raw_r, v_r, est_r = ref.hll_estimate(regs, p, h_bits)
+    stats = np.asarray(model.hll_estimate(jnp.asarray(regs), p=p,
+                                          h_bits=h_bits))
+    np.testing.assert_allclose(stats[0], raw_r, rtol=1e-12)
+    assert int(stats[1]) == v_r
+    np.testing.assert_allclose(stats[2], est_r, rtol=1e-12)
+
+
+def test_merge_is_elementwise_max():
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 49, size=1 << 16).astype(np.int32)
+    b = rng.integers(0, 49, size=1 << 16).astype(np.int32)
+    out = np.asarray(model.hll_merge(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(out, np.maximum(a, b))
+
+
+def test_merge_equals_concatenated_stream():
+    """Fig 3's correctness property: slicing + merge == single pipeline."""
+    keys = _keys(8192, 42)
+    m = 1 << 16
+    zeros = np.zeros(m, dtype=np.int32)
+    halves = [keys[:4096], keys[4096:]]
+    parts = [
+        np.asarray(model.hll_aggregate(jnp.asarray(h.view(np.int32)),
+                                       jnp.asarray(zeros), p=16, h_bits=64))
+        for h in halves
+    ]
+    merged = np.asarray(model.hll_merge(jnp.asarray(parts[0]),
+                                        jnp.asarray(parts[1])))
+    whole = np.asarray(model.hll_aggregate(jnp.asarray(keys.view(np.int32)),
+                                           jnp.asarray(zeros),
+                                           p=16, h_bits=64))
+    np.testing.assert_array_equal(merged, whole)
+
+
+def test_fused_aggregate_estimate_consistent():
+    keys = _keys(8192, 9)
+    m = 1 << 16
+    regs = np.zeros(m, dtype=np.int32)
+    regs_f, stats_f = model.hll_aggregate_and_estimate(
+        jnp.asarray(keys.view(np.int32)), jnp.asarray(regs), p=16, h_bits=64)
+    regs_sep = model.hll_aggregate(jnp.asarray(keys.view(np.int32)),
+                                   jnp.asarray(regs), p=16, h_bits=64)
+    stats_sep = model.hll_estimate(regs_sep, p=16, h_bits=64)
+    np.testing.assert_array_equal(np.asarray(regs_f), np.asarray(regs_sep))
+    np.testing.assert_allclose(np.asarray(stats_f), np.asarray(stats_sep),
+                               rtol=1e-15)
+
+
+def test_estimate_accuracy_end_to_end():
+    """Sanity: ~50k distinct keys at p=16/H=64 estimate within 2%."""
+    n = 51_200  # 50 blocks of 1024
+    keys = np.arange(n, dtype=np.uint32) * np.uint32(2654435761)
+    m = 1 << 16
+    regs = model.hll_aggregate(jnp.asarray(keys.view(np.int32)),
+                               jnp.asarray(np.zeros(m, dtype=np.int32)),
+                               p=16, h_bits=64, block=1024)
+    stats = np.asarray(model.hll_estimate(regs, p=16, h_bits=64))
+    est = stats[2]
+    assert abs(est - n) / n < 0.02, est

@@ -1,0 +1,38 @@
+//! Bench/regeneration target for Fig 1: the standard-error profile.
+//!
+//! Regenerates both subfigures (p=14 and p=16, each with H ∈ {32,64})
+//! and times the sweep. `HLL_BENCH_QUICK=1` or `--quick` reduces reach.
+
+use hll_fpga::bench_harness::bench_main;
+use hll_fpga::repro::fig1::{check_claims, curves, render, Fig1Options};
+
+fn main() {
+    let quick = hll_fpga::bench_harness::quick_mode()
+        || std::env::args().any(|a| a == "--quick");
+    let b = bench_main("Fig 1 — HLL standard error vs cardinality");
+
+    let opts = Fig1Options {
+        full: std::env::args().any(|a| a == "--full"),
+        trials: if quick { 3 } else { 5 },
+        max_exp: if quick { Some(5) } else { None },
+    };
+
+    let t0 = std::time::Instant::now();
+    let cs = curves(&opts);
+    let sweep_time = t0.elapsed();
+    println!("{}", render(&cs));
+    for (claim, holds, detail) in check_claims(&cs) {
+        println!("  [{}] {claim} ({detail})", if holds { "ok" } else { "MISS" });
+    }
+    println!(
+        "\nsweep wall time: {}",
+        hll_fpga::util::fmt::duration_s(sweep_time.as_secs_f64())
+    );
+
+    // Time a single representative profiling point for the record.
+    let cfg = hll_fpga::hll::HllConfig::PAPER;
+    let m = b.run_items("measure_point(p16/H64, n=100k, 3 trials)", 300_000, || {
+        hll_fpga::stats::measure_point(cfg, 100_000, 3)
+    });
+    println!("{}", m.report_line());
+}

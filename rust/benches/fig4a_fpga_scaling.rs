@@ -1,0 +1,40 @@
+//! Bench/regeneration target for Fig 4(a): FPGA throughput vs
+//! #pipelines against the PCIe bound — simulated end-to-end (cycle-law
+//! engine + XDMA model), plus a functional cycle-level run per k to show
+//! the simulator agrees with the timing law.
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::fpga::{theoretical_throughput_bytes_per_s, ParallelHll};
+use hll_fpga::hll::HllConfig;
+use hll_fpga::repro::fig4;
+use hll_fpga::stats::DistinctStream;
+
+fn main() {
+    let b = bench_main("Fig 4(a) — FPGA throughput scaling vs PCIe bound");
+    let mb: u64 = if quick_mode() { 16 } else { 256 };
+    let rows = fig4::fig4a_rows(mb << 20);
+    println!("{}", fig4::render_fig4a(&rows));
+
+    // Cross-check: the functional cycle-level engine reproduces the
+    // analytic law within 1% for a few representative k.
+    let n_words = if quick_mode() { 200_000 } else { 1_000_000 };
+    let words: Vec<u32> = DistinctStream::new(n_words, 4).collect();
+    for k in [1usize, 4, 10] {
+        let mut engine = ParallelHll::new(HllConfig::PAPER, k);
+        engine.feed(&words);
+        let r = engine.finish();
+        let sim = r.throughput_bytes_per_s() / 1e9;
+        let law = theoretical_throughput_bytes_per_s(k) / 1e9;
+        println!(
+            "  functional k={k:>2}: {sim:.2} GB/s vs law {law:.2} GB/s ({:+.2}%)",
+            (sim - law) / law * 100.0
+        );
+    }
+
+    // Host-side wall time of driving the simulator (not the simulated
+    // time) — the cost of regenerating this figure.
+    let m = b.run_items("simulate fig4a sweep (k=1..16)", 16, || {
+        fig4::fig4a_rows(4 << 20)
+    });
+    println!("\n{}", m.report_line());
+}

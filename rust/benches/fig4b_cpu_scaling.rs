@@ -1,0 +1,55 @@
+//! Bench/regeneration target for Fig 4(b): CPU throughput vs #threads
+//! for both hash widths, plus the FPGA reference lines.
+//!
+//! Two curves are produced:
+//! 1. the paper-Xeon analytic model (16C/32T dual socket) — regenerates
+//!    the published figure's shape and headline ratios;
+//! 2. a *measured* curve anchored to this machine's real single-thread
+//!    rates (substitution note: this container exposes a single core, so
+//!    thread counts > 1 exercise scheduling, not parallel speedup).
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::cpu_baseline::{aggregate_parallel, measure_single_thread_rate, ScalingModel};
+use hll_fpga::hll::{HashKind, HllConfig};
+use hll_fpga::repro::fig4;
+use hll_fpga::stats::DistinctStream;
+
+fn main() {
+    let b = bench_main("Fig 4(b) — CPU throughput vs #threads");
+
+    // --- Curve 1: the paper's machine (modelled) ---
+    let model = ScalingModel::paper_xeon();
+    println!("{}", fig4::render_fig4b(&fig4::fig4b_rows(&model), "paper Xeon model"));
+
+    // --- Curve 2: measured on this machine ---
+    let sample = if quick_mode() { 500_000 } else { 4_000_000 };
+    let r32 = measure_single_thread_rate(HashKind::H32, sample);
+    let r64 = measure_single_thread_rate(HashKind::H64, sample);
+    println!(
+        "measured single-thread rates on this machine: 32-bit {:.2} GB/s, 64-bit {:.2} GB/s \
+         (ratio {:.0}%, paper: ~60%)",
+        r32 / 1e9,
+        r64 / 1e9,
+        100.0 * r64 / r32
+    );
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let local = ScalingModel::calibrated(r32, r64, cores);
+    println!(
+        "{}",
+        fig4::render_fig4b(&fig4::fig4b_rows(&local), "calibrated to this machine")
+    );
+
+    // --- Real thread-parallel aggregation measurements ---
+    let words: Vec<u32> = DistinctStream::new(sample as u64, 8).collect();
+    for hash in [HashKind::H32, HashKind::H64] {
+        let cfg = HllConfig::new(16, hash).unwrap();
+        for threads in [1usize, 2, 4] {
+            let m = b.run_bytes(
+                &format!("aggregate H={} threads={threads}", hash.bits()),
+                (words.len() * 4) as u64,
+                || aggregate_parallel(cfg, &words, threads).0,
+            );
+            println!("{}", m.report_line());
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Hot-path microbenchmarks — the inputs to the §Perf optimization pass
+//! (EXPERIMENTS.md): hash rates, aggregation, estimate, merge, and the
+//! PJRT engine's batch call.
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::cpu_baseline::{aggregate32_batched, aggregate64_batched};
+use hll_fpga::hll::murmur3::{murmur3_x64_64_u32, murmur3_x86_32_u32};
+use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+use hll_fpga::runtime::{Engine, Manifest, XlaEngine, XlaService};
+use hll_fpga::util::Xoshiro256StarStar;
+
+fn main() {
+    let b = bench_main("hot path microbenchmarks");
+    let n: usize = if quick_mode() { 200_000 } else { 2_000_000 };
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xBEEF);
+    let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+    let bytes = (n * 4) as u64;
+
+    // --- Pure hash throughput (the paper's CPU bottleneck) ---
+    let m = b.run_bytes("murmur3_x86_32 (scalar loop)", bytes, || {
+        let mut acc = 0u32;
+        for &w in &words {
+            acc ^= murmur3_x86_32_u32(w, 0);
+        }
+        acc
+    });
+    println!("{}", m.report_line());
+    let m = b.run_bytes("murmur3_x64_64 (scalar loop)", bytes, || {
+        let mut acc = 0u64;
+        for &w in &words {
+            acc ^= murmur3_x64_64_u32(w, 0);
+        }
+        acc
+    });
+    println!("{}", m.report_line());
+
+    // --- Full aggregation (hash + rank + register update) ---
+    let cfg64 = HllConfig::PAPER;
+    let cfg32 = HllConfig::new(16, HashKind::H32).unwrap();
+    let m = b.run_bytes("insert_batch H64 (sketch hot path)", bytes, || {
+        let mut s = HllSketch::new(cfg64);
+        s.insert_batch(&words);
+        s
+    });
+    println!("{}", m.report_line());
+    let m = b.run_bytes("insert_batch H32", bytes, || {
+        let mut s = HllSketch::new(cfg32);
+        s.insert_batch(&words);
+        s
+    });
+    println!("{}", m.report_line());
+    let m = b.run_bytes("aggregate64_batched (4-lane)", bytes, || {
+        let mut s = HllSketch::new(cfg64);
+        aggregate64_batched(&words, &mut s);
+        s
+    });
+    println!("{}", m.report_line());
+    let m = b.run_bytes("aggregate32_batched (8-lane AVX2-style)", bytes, || {
+        let mut s = HllSketch::new(cfg32);
+        aggregate32_batched(&words, &mut s);
+        s
+    });
+    println!("{}", m.report_line());
+
+    // --- Computation phase + merge ---
+    let mut filled = HllSketch::new(cfg64);
+    filled.insert_batch(&words);
+    let m = b.run_items("estimate (power sum over 65536 regs)", 1, || filled.estimate());
+    println!("{}", m.report_line());
+    let other = filled.clone();
+    let m = b.run_items("merge (bucket-wise max, 65536 regs)", 1, || {
+        let mut a = filled.clone();
+        a.merge(&other).unwrap();
+        a
+    });
+    println!("{}", m.report_line());
+
+    // --- PJRT engine batch call (8192-word artifact) ---
+    if Manifest::default_dir().join("manifest.tsv").exists() {
+        let svc = XlaService::start().expect("xla service");
+        let eng = XlaEngine::new(svc.handle(), cfg64, 8192).unwrap();
+        let batch = &words[..8192];
+        let m = b.run_bytes("xla aggregate (8192-word artifact call)", 8192 * 4, || {
+            let mut s = HllSketch::new(cfg64);
+            eng.aggregate(batch, &mut s).unwrap();
+            s
+        });
+        println!("{}", m.report_line());
+        let m = b.run_items("xla estimate artifact call", 1, || eng.estimate(&filled).unwrap());
+        println!("{}", m.report_line());
+    } else {
+        println!("(artifacts not built; skipping PJRT hot-path benches)");
+    }
+}

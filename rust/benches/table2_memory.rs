@@ -1,0 +1,32 @@
+//! Bench/regeneration target for Table II: memory footprint, plus the
+//! serialization cost of shipping sketches at each configuration.
+
+use hll_fpga::bench_harness::bench_main;
+use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+
+fn main() {
+    let b = bench_main("Table II — HyperLogLog memory footprint");
+    println!("{}", hll_fpga::repro::tables::table2());
+
+    // The footprint table is analytic; what costs time at runtime is
+    // moving sketches around (the coordinator ships partials on merge).
+    for p in [14u8, 16] {
+        for h in [HashKind::H32, HashKind::H64] {
+            let cfg = HllConfig::new(p, h).unwrap();
+            let mut s = HllSketch::new(cfg);
+            for v in 0..200_000u32 {
+                s.insert_u32(v.wrapping_mul(2_654_435_761));
+            }
+            let bytes = s.to_bytes();
+            let m = b.run_bytes(
+                &format!("serialize+parse sketch p={p} H={}", h.bits()),
+                bytes.len() as u64,
+                || {
+                    let b2 = s.to_bytes();
+                    HllSketch::from_bytes(&b2).unwrap()
+                },
+            );
+            println!("{}", m.report_line());
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Bench/regeneration target for Table III: FPGA resource usage vs
+//! #pipelines (analytic design property; regenerated and checked against
+//! the paper's own numbers), plus the scaling-limit analysis.
+
+use hll_fpga::fpga::{Device, ResourceModel};
+
+fn main() {
+    println!("\n=== Table III — resource usage vs #pipelines ===");
+    println!("{}", hll_fpga::repro::tables::table3());
+
+    // Exact checks against the paper's BRAM/DSP columns.
+    let model = ResourceModel::paper_h64_p16();
+    let expect = [
+        (1usize, 12u32, 84u32),
+        (2, 24, 152),
+        (4, 48, 288),
+        (8, 96, 560),
+        (10, 120, 696),
+        (16, 192, 1104),
+    ];
+    let mut ok = true;
+    for (k, bram, dsp) in expect {
+        let u = model.usage(k);
+        let hit = u.bram == bram && u.dsp == dsp;
+        ok &= hit;
+        println!(
+            "  [{}] k={k:>2}: BRAM {}={} DSP {}={}",
+            if hit { "ok" } else { "MISS" },
+            u.bram,
+            bram,
+            u.dsp,
+            dsp
+        );
+    }
+    println!(
+        "\npaper BRAM/DSP columns reproduced: {}",
+        if ok { "EXACT" } else { "MISMATCH" }
+    );
+
+    // Extension beyond the paper: the 32-bit-hash variant and the
+    // scaling frontier on the same device.
+    let h32 = ResourceModel::paper_h32_p16();
+    let dev = Device::XCVU9P;
+    println!(
+        "H32 variant: max {} pipelines ({}-bound); H64: max {} ({}-bound)",
+        h32.max_pipelines(&dev),
+        h32.binding_resource(&dev),
+        model.max_pipelines(&dev),
+        model.binding_resource(&dev)
+    );
+}

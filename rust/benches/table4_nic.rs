@@ -1,0 +1,24 @@
+//! Bench/regeneration target for Table IV: sustained NIC throughput vs
+//! #pipelines over the simulated 100 Gbit/s TCP link.
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::repro::table4;
+
+fn main() {
+    let b = bench_main("Table IV — NIC throughput vs #pipelines");
+    let mb: u64 = if quick_mode() { 4 } else { 32 };
+    let rows = table4::rows(mb << 20);
+    println!("{}", table4::render(&rows));
+
+    // Side-by-side factor check against the paper's own rows.
+    println!("paper-vs-simulated factors (sim/paper):");
+    for ((k, run), (pk, paper)) in rows.iter().zip(table4::PAPER_ROWS) {
+        assert_eq!(*k, pk);
+        let sim = run.throughput_bytes_per_s() / 1e9;
+        println!("  k={k:>2}: {:.2}x", sim / paper);
+    }
+
+    // Wall time of one sweep (the host cost of the simulation).
+    let m = b.run_items("simulate table4 sweep (6 rows)", 6, || table4::rows(2 << 20));
+    println!("\n{}", m.report_line());
+}

@@ -1,0 +1,225 @@
+//! Benchmark harness substrate (the offline crate set has no `criterion`).
+//!
+//! Provides warmup + timed iterations with basic robust statistics
+//! (median, MAD, min), throughput reporting, and a consistent text output
+//! format shared by every `rust/benches/*.rs` target. Respects
+//! `HLL_BENCH_QUICK=1` for fast smoke runs (used by `cargo test`-adjacent
+//! CI loops).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub samples: Vec<f64>,
+    /// Work per iteration (for throughput), if declared.
+    pub bytes_per_iter: Option<u64>,
+    pub items_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 {
+            (s[mid - 1] + s[mid]) / 2.0
+        } else {
+            s[mid]
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut devs: Vec<f64> = self.samples.iter().map(|s| (s - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if devs.is_empty() {
+            return f64::NAN;
+        }
+        devs[devs.len() / 2]
+    }
+
+    pub fn throughput_bytes_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.median())
+    }
+
+    pub fn throughput_items_per_s(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n as f64 / self.median())
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut line = format!(
+            "{:<44} median {:>12} (min {:>12}, mad {:>10}, n={})",
+            self.name,
+            crate::util::fmt::duration_s(self.median()),
+            crate::util::fmt::duration_s(self.min()),
+            crate::util::fmt::duration_s(self.mad()),
+            self.samples.len()
+        );
+        if let Some(t) = self.throughput_bytes_per_s() {
+            line.push_str(&format!("  {}", crate::util::fmt::gbytes_per_s(t)));
+        }
+        if let Some(t) = self.throughput_items_per_s() {
+            line.push_str(&format!("  {:.1} Mitems/s", t / 1e6));
+        }
+        line
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    warmup: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    target_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        if quick_mode() {
+            Self {
+                warmup: Duration::from_millis(20),
+                min_iters: 3,
+                max_iters: 10,
+                target_time: Duration::from_millis(120),
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(300),
+                min_iters: 10,
+                max_iters: 200,
+                target_time: Duration::from_secs(2),
+            }
+        }
+    }
+}
+
+/// `HLL_BENCH_QUICK=1` shrinks every run for smoke testing.
+pub fn quick_mode() -> bool {
+    std::env::var("HLL_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Run `f` repeatedly; `f` returns an opaque value to defeat dead-code
+    /// elimination (it is passed through `std::hint::black_box`).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while samples.len() < self.min_iters
+            || (t0.elapsed() < self.target_time && samples.len() < self.max_iters)
+        {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        Measurement { name: name.to_string(), samples, bytes_per_iter: None, items_per_iter: None }
+    }
+
+    /// As [`Bench::run`], declaring bytes of work per iteration.
+    pub fn run_bytes<T, F: FnMut() -> T>(&self, name: &str, bytes: u64, f: F) -> Measurement {
+        let mut m = self.run(name, f);
+        m.bytes_per_iter = Some(bytes);
+        m
+    }
+
+    pub fn run_items<T, F: FnMut() -> T>(&self, name: &str, items: u64, f: F) -> Measurement {
+        let mut m = self.run(name, f);
+        m.items_per_iter = Some(items);
+        m
+    }
+}
+
+/// Standard bench-binary preamble: prints a header and returns the
+/// harness. All `rust/benches/*.rs` call this.
+pub fn bench_main(title: &str) -> Bench {
+    println!("\n=== {title} ===");
+    if quick_mode() {
+        println!("(quick mode: HLL_BENCH_QUICK=1 — reduced iterations)");
+    }
+    Bench::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+            bytes_per_iter: Some(3_000_000_000),
+            items_per_iter: None,
+        };
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.mad(), 1.0);
+        assert_eq!(m.throughput_bytes_per_s().unwrap(), 1e9);
+    }
+
+    #[test]
+    fn even_sample_median() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+            bytes_per_iter: None,
+            items_per_iter: None,
+        };
+        assert_eq!(m.median(), 2.5);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench::new()
+            .warmup(Duration::from_millis(1))
+            .target_time(Duration::from_millis(10));
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.samples.len() >= 3);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn report_line_contains_name_and_throughput() {
+        let m = Measurement {
+            name: "hash/64".into(),
+            samples: vec![0.5],
+            bytes_per_iter: Some(5_000_000_000),
+            items_per_iter: Some(1_000_000),
+        };
+        let line = m.report_line();
+        assert!(line.contains("hash/64"));
+        assert!(line.contains("GB/s"));
+        assert!(line.contains("Mitems/s"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Input batching: accumulate the 32-bit word stream into fixed-size
+//! batches (the burst granularity handed to pipeline workers).
+
+/// Accumulates words and emits full batches.
+#[derive(Debug)]
+pub struct Batcher {
+    batch_size: usize,
+    buf: Vec<u32>,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Self { batch_size, buf: Vec::with_capacity(batch_size) }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Push a slice; invoke `emit` for every completed batch.
+    pub fn push<E: FnMut(Vec<u32>)>(&mut self, mut words: &[u32], mut emit: E) {
+        while !words.is_empty() {
+            let room = self.batch_size - self.buf.len();
+            let take = room.min(words.len());
+            self.buf.extend_from_slice(&words[..take]);
+            words = &words[take..];
+            if self.buf.len() == self.batch_size {
+                let full = std::mem::replace(&mut self.buf, Vec::with_capacity(self.batch_size));
+                emit(full);
+            }
+        }
+    }
+
+    /// Emit whatever remains (the final partial batch).
+    pub fn flush<E: FnMut(Vec<u32>)>(&mut self, mut emit: E) {
+        if !self.buf.is_empty() {
+            let partial = std::mem::take(&mut self.buf);
+            emit(partial);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(batch_size: usize, pushes: &[&[u32]]) -> Vec<Vec<u32>> {
+        let mut b = Batcher::new(batch_size);
+        let mut out = Vec::new();
+        for p in pushes {
+            b.push(p, |v| out.push(v));
+        }
+        b.flush(|v| out.push(v));
+        out
+    }
+
+    #[test]
+    fn exact_multiples() {
+        let out = collect(4, &[&[1, 2, 3, 4, 5, 6, 7, 8]]);
+        assert_eq!(out, vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]]);
+    }
+
+    #[test]
+    fn partial_tail_flushes() {
+        let out = collect(4, &[&[1, 2, 3, 4, 5]]);
+        assert_eq!(out, vec![vec![1, 2, 3, 4], vec![5]]);
+    }
+
+    #[test]
+    fn fragmented_pushes_reassemble() {
+        let out = collect(4, &[&[1], &[2, 3], &[4, 5, 6, 7, 8, 9]]);
+        assert_eq!(out, vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8], vec![9]]);
+    }
+
+    #[test]
+    fn empty_flush_is_silent() {
+        let out = collect(4, &[&[]]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn preserves_order_and_multiset() {
+        let words: Vec<u32> = (0..1000).collect();
+        let mut b = Batcher::new(7);
+        let mut all = Vec::new();
+        b.push(&words, |v| all.extend(v));
+        b.flush(|v| all.extend(v));
+        assert_eq!(all, words);
+    }
+}

@@ -1,0 +1,72 @@
+//! Coordinator configuration.
+
+use crate::hll::HllConfig;
+use crate::runtime::EngineKind;
+
+/// Configuration of the streaming coordinator — the software analogue of
+/// the paper's multi-pipelined architecture (Fig 3): k workers, each the
+/// counterpart of one aggregation pipeline, fed by slicing the input.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    pub hll: HllConfig,
+    /// Number of pipeline workers (the paper's k).
+    pub pipelines: usize,
+    /// Words per batch handed to a worker (the DMA/burst granularity).
+    pub batch_size: usize,
+    /// Bounded queue depth per worker, in batches — the backpressure
+    /// knob (queue-full blocks the feeder, like AXI-stream back-pressure
+    /// toward the NIC/DMA).
+    pub queue_depth: usize,
+    /// Which compute backend each worker uses.
+    pub engine: EngineKind,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            hll: HllConfig::PAPER,
+            pipelines: 4,
+            batch_size: 8192,
+            queue_depth: 4,
+            engine: EngineKind::Native,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pipelines == 0 {
+            return Err("pipelines must be >= 1".into());
+        }
+        if self.batch_size == 0 {
+            return Err("batch_size must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("queue_depth must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(CoordinatorConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn zero_fields_rejected() {
+        let mut c = CoordinatorConfig::default();
+        c.pipelines = 0;
+        assert!(c.validate().is_err());
+        let mut c = CoordinatorConfig::default();
+        c.batch_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = CoordinatorConfig::default();
+        c.queue_depth = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Coordinator metrics: lock-free counters shared between the feeder and
+//! workers, snapshotted into reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters (one instance per coordinator run).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub words_in: AtomicU64,
+    pub batches_routed: AtomicU64,
+    /// Times the feeder blocked on a full worker queue (backpressure).
+    pub backpressure_stalls: AtomicU64,
+    /// Batches processed, summed over workers.
+    pub batches_done: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            words_in: self.words_in.load(Ordering::Relaxed),
+            batches_routed: self.batches_routed.load(Ordering::Relaxed),
+            backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+            batches_done: self.batches_done.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub words_in: u64,
+    pub batches_routed: u64,
+    pub backpressure_stalls: u64,
+    pub batches_done: u64,
+}
+
+/// Per-worker report returned at join time.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub batches: u64,
+    pub words: u64,
+    /// Time spent inside `Engine::aggregate`.
+    pub busy: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::default();
+        m.words_in.fetch_add(100, Ordering::Relaxed);
+        m.batches_routed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.words_in, 100);
+        assert_eq!(s.batches_routed, 2);
+        assert_eq!(s.backpressure_stalls, 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! The streaming coordinator — the paper's system contribution mapped to
+//! software: a leader thread slices the incoming 32-bit word stream
+//! across k pipeline workers (Fig 3), each aggregating into a private
+//! sketch through a pluggable [`crate::runtime::Engine`] (pure Rust, or
+//! the PJRT-executed JAX/Pallas artifacts); partial sketches are folded
+//! by bucket-wise max and the computation phase produces the estimate.
+//!
+//! Backpressure is structural: bounded queues between leader and workers
+//! block the feeder exactly like AXI-stream backpressure toward the
+//! DMA/NIC in the hardware design.
+
+pub mod batch;
+pub mod config;
+pub mod metrics;
+pub mod worker;
+
+pub use config::CoordinatorConfig;
+pub use metrics::{Metrics, MetricsSnapshot, WorkerReport};
+
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::hll::HllSketch;
+use crate::runtime::{EstimateOut, NativeEngine, Result, RuntimeError, XlaHandle};
+
+use batch::Batcher;
+
+/// Summary of a completed run.
+#[derive(Debug)]
+pub struct RunSummary {
+    /// The merged sketch (bucket-wise max over worker partials).
+    pub sketch: HllSketch,
+    /// Computation-phase output over the merged sketch.
+    pub estimate: EstimateOut,
+    pub metrics: MetricsSnapshot,
+    pub workers: Vec<WorkerReport>,
+    /// Wall time from `start` to merge completion.
+    pub elapsed: std::time::Duration,
+}
+
+impl RunSummary {
+    /// Feeder-side throughput in bytes/s.
+    pub fn throughput_bytes_per_s(&self) -> f64 {
+        (self.metrics.words_in * 4) as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+type WorkerResult = Result<(HllSketch, WorkerReport)>;
+
+/// A running coordinator.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    txs: Vec<SyncSender<Vec<u32>>>,
+    handles: Vec<JoinHandle<WorkerResult>>,
+    metrics: Arc<Metrics>,
+    batcher: Batcher,
+    next_worker: usize,
+    started: Instant,
+    /// Kept for the final merge/estimate when running on the XLA engine.
+    xla: Option<XlaHandle>,
+}
+
+impl Coordinator {
+    /// Spawn workers. `xla` is required when `cfg.engine == Xla`.
+    pub fn start(cfg: CoordinatorConfig, xla: Option<XlaHandle>) -> Result<Self> {
+        cfg.validate().map_err(RuntimeError::Shape)?;
+        let metrics = Arc::new(Metrics::default());
+        let mut txs = Vec::with_capacity(cfg.pipelines);
+        let mut handles = Vec::with_capacity(cfg.pipelines);
+        for w in 0..cfg.pipelines {
+            let (tx, rx) = sync_channel::<Vec<u32>>(cfg.queue_depth);
+            let engine = cfg.engine.build(cfg.hll, xla.clone(), cfg.batch_size)?;
+            let m = metrics.clone();
+            let hll = cfg.hll;
+            let handle = std::thread::Builder::new()
+                .name(format!("pipeline-{w}"))
+                .spawn(move || worker::run_worker(w, hll, engine, rx, m))
+                .expect("spawn worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        crate::log_info!(
+            "coordinator",
+            "started {} pipeline workers (engine={:?}, batch={}, depth={})",
+            cfg.pipelines,
+            cfg.engine,
+            cfg.batch_size,
+            cfg.queue_depth
+        );
+        Ok(Self {
+            cfg,
+            txs,
+            handles,
+            metrics,
+            batcher: Batcher::new(cfg.batch_size),
+            next_worker: 0,
+            started: Instant::now(),
+            xla,
+        })
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn route(
+        txs: &[SyncSender<Vec<u32>>],
+        metrics: &Metrics,
+        next_worker: &mut usize,
+        batch: Vec<u32>,
+    ) {
+        // Round-robin slicing ("inputs are processed where they arrive",
+        // Section V-B) with blocking backpressure on a full queue.
+        let w = *next_worker;
+        *next_worker = (w + 1) % txs.len();
+        metrics
+            .batches_routed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match txs[w].try_send(batch) {
+            Ok(()) => {}
+            Err(TrySendError::Full(batch)) => {
+                metrics
+                    .backpressure_stalls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                // Block until the worker catches up — lossless, exactly
+                // like stream backpressure in fabric.
+                txs[w].send(batch).expect("worker hung up early");
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("worker hung up early"),
+        }
+    }
+
+    /// Feed a slice of the stream.
+    pub fn feed(&mut self, words: &[u32]) {
+        self.metrics
+            .words_in
+            .fetch_add(words.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let txs = &self.txs;
+        let metrics = &self.metrics;
+        let next = &mut self.next_worker;
+        self.batcher
+            .push(words, |batch| Self::route(txs, metrics, next, batch));
+    }
+
+    /// Close the stream: flush the partial batch, join workers, fold the
+    /// partial sketches (merge phase), and run the computation phase.
+    pub fn finish(mut self) -> Result<RunSummary> {
+        let txs = std::mem::take(&mut self.txs);
+        {
+            let metrics = &self.metrics;
+            let next = &mut self.next_worker;
+            self.batcher
+                .flush(|batch| Self::route(&txs, metrics, next, batch));
+        }
+        drop(txs); // close queues; workers drain and exit
+
+        let mut partials = Vec::with_capacity(self.handles.len());
+        let mut reports = Vec::with_capacity(self.handles.len());
+        for handle in self.handles.drain(..) {
+            let (sketch, report) = handle.join().expect("worker panicked")?;
+            partials.push(sketch);
+            reports.push(report);
+        }
+
+        // Merge fold (Fig 3 "Merge buckets") + computation phase, on the
+        // same engine kind the workers used.
+        let engine = self
+            .cfg
+            .engine
+            .build(self.cfg.hll, self.xla.clone(), self.cfg.batch_size)?;
+        let mut merged = partials.pop().unwrap_or_else(|| HllSketch::new(self.cfg.hll));
+        for p in &partials {
+            engine.merge(&mut merged, p)?;
+        }
+        let estimate = engine.estimate(&merged)?;
+        let elapsed = self.started.elapsed();
+        Ok(RunSummary {
+            sketch: merged,
+            estimate,
+            metrics: self.metrics.snapshot(),
+            workers: reports,
+            elapsed,
+        })
+    }
+}
+
+/// Convenience: one-shot run over a whole in-memory stream.
+pub fn run_stream(
+    cfg: CoordinatorConfig,
+    xla: Option<XlaHandle>,
+    words: &[u32],
+) -> Result<RunSummary> {
+    let mut c = Coordinator::start(cfg, xla)?;
+    c.feed(words);
+    c.finish()
+}
+
+/// Single-threaded reference run (no workers) — the ground truth the
+/// coordinator must match bit-exactly.
+pub fn run_serial(cfg: &CoordinatorConfig, words: &[u32]) -> (HllSketch, EstimateOut) {
+    use crate::runtime::Engine as _;
+    let mut s = HllSketch::new(cfg.hll);
+    s.insert_batch(words);
+    let e = NativeEngine.estimate(&s).expect("native estimate");
+    (s, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Engine as _, EngineKind};
+    use crate::util::Xoshiro256StarStar;
+
+    fn words(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_u32()).collect()
+    }
+
+    #[test]
+    fn coordinator_matches_serial_across_shapes() {
+        for (pipelines, batch, n) in
+            [(1usize, 100usize, 5000usize), (4, 256, 10_000), (10, 8192, 100_000), (3, 7, 1000)]
+        {
+            let cfg = CoordinatorConfig {
+                pipelines,
+                batch_size: batch,
+                ..CoordinatorConfig::default()
+            };
+            let data = words(n, 42);
+            let summary = run_stream(cfg, None, &data).unwrap();
+            let (serial, serial_est) = run_serial(&cfg, &data);
+            assert_eq!(summary.sketch, serial, "k={pipelines} batch={batch} n={n}");
+            assert_eq!(summary.estimate.estimate, serial_est.estimate);
+            assert_eq!(summary.metrics.words_in, n as u64);
+        }
+    }
+
+    #[test]
+    fn empty_stream() {
+        let cfg = CoordinatorConfig::default();
+        let summary = run_stream(cfg, None, &[]).unwrap();
+        assert_eq!(summary.estimate.estimate, 0.0);
+        assert_eq!(summary.metrics.batches_routed, 0);
+    }
+
+    #[test]
+    fn incremental_feeding_equals_bulk() {
+        let cfg = CoordinatorConfig {
+            pipelines: 4,
+            batch_size: 64,
+            ..CoordinatorConfig::default()
+        };
+        let data = words(10_000, 7);
+        let mut c = Coordinator::start(cfg, None).unwrap();
+        for chunk in data.chunks(33) {
+            c.feed(chunk);
+        }
+        let a = c.finish().unwrap();
+        let b = run_stream(cfg, None, &data).unwrap();
+        assert_eq!(a.sketch, b.sketch);
+    }
+
+    #[test]
+    fn backpressure_is_lossless() {
+        // Tiny queues + many batches: stalls must not lose data.
+        let cfg = CoordinatorConfig {
+            pipelines: 2,
+            batch_size: 16,
+            queue_depth: 1,
+            ..CoordinatorConfig::default()
+        };
+        let data = words(50_000, 9);
+        let summary = run_stream(cfg, None, &data).unwrap();
+        let (serial, _) = run_serial(&cfg, &data);
+        assert_eq!(summary.sketch, serial);
+        assert_eq!(
+            summary.metrics.batches_done,
+            summary.metrics.batches_routed,
+            "all routed batches processed"
+        );
+    }
+
+    #[test]
+    fn worker_reports_cover_all_words() {
+        let cfg = CoordinatorConfig {
+            pipelines: 5,
+            batch_size: 100,
+            ..CoordinatorConfig::default()
+        };
+        let data = words(12_345, 11);
+        let summary = run_stream(cfg, None, &data).unwrap();
+        let total: u64 = summary.workers.iter().map(|w| w.words).sum();
+        assert_eq!(total, 12_345);
+        assert_eq!(summary.workers.len(), 5);
+    }
+
+    #[test]
+    fn estimate_accuracy_through_coordinator() {
+        let cfg = CoordinatorConfig { pipelines: 8, ..CoordinatorConfig::default() };
+        let n = 200_000;
+        let data: Vec<u32> = crate::stats::DistinctStream::new(n, 5).collect();
+        let summary = run_stream(cfg, None, &data).unwrap();
+        let rel = (summary.estimate.estimate - n as f64).abs() / n as f64;
+        assert!(rel < 0.02, "estimate {} vs {n}", summary.estimate.estimate);
+    }
+
+    #[test]
+    fn engine_kind_native_builds_without_runtime() {
+        let engine = EngineKind::Native.build(crate::hll::HllConfig::PAPER, None, 128).unwrap();
+        assert_eq!(engine.name(), "native");
+    }
+}

@@ -1,0 +1,69 @@
+//! Pipeline worker: one thread per pipeline (Fig 3's aggregation
+//! pipelines), each owning a private sketch and an `Engine` backend.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use super::metrics::{Metrics, WorkerReport};
+use crate::hll::{HllConfig, HllSketch};
+use crate::runtime::{Engine, Result};
+
+/// Run one worker to queue exhaustion; returns its partial sketch and
+/// report. Executed on a dedicated thread by the coordinator.
+pub fn run_worker(
+    worker: usize,
+    cfg: HllConfig,
+    engine: Box<dyn Engine>,
+    rx: Receiver<Vec<u32>>,
+    metrics: Arc<Metrics>,
+) -> Result<(HllSketch, WorkerReport)> {
+    let mut sketch = HllSketch::new(cfg);
+    let mut batches = 0u64;
+    let mut words = 0u64;
+    let mut busy = std::time::Duration::ZERO;
+    while let Ok(batch) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        engine.aggregate(&batch, &mut sketch)?;
+        busy += t0.elapsed();
+        batches += 1;
+        words += batch.len() as u64;
+        metrics
+            .batches_done
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    crate::log_debug!(
+        "worker",
+        "worker {worker} done: {batches} batches, {words} words, busy {:?}",
+        busy
+    );
+    Ok((sketch, WorkerReport { worker, batches, words, busy }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn worker_aggregates_all_batches() {
+        let cfg = HllConfig::PAPER;
+        let (tx, rx) = sync_channel::<Vec<u32>>(4);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let handle =
+            std::thread::spawn(move || run_worker(0, cfg, Box::new(NativeEngine), rx, m2));
+        let mut expect = HllSketch::new(cfg);
+        for i in 0..10u32 {
+            let batch: Vec<u32> = (i * 100..(i + 1) * 100).collect();
+            expect.insert_batch(&batch);
+            tx.send(batch).unwrap();
+        }
+        drop(tx);
+        let (sketch, report) = handle.join().unwrap().unwrap();
+        assert_eq!(sketch, expect);
+        assert_eq!(report.batches, 10);
+        assert_eq!(report.words, 1000);
+        assert_eq!(metrics.snapshot().batches_done, 10);
+    }
+}

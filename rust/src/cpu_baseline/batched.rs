@@ -1,0 +1,145 @@
+//! Lane-batched hashing — the software analogue of the paper's AVX2
+//! implementation (Section VI-C).
+//!
+//! The paper vectorizes the 32-bit Murmur3 8-wide with AVX2; the 64-bit
+//! hash gains nothing from 4-wide vectorization because AVX2 has no
+//! native 64×64-bit vector multiply. Stable Rust without `std::simd`
+//! expresses the same structure as fixed-width unrolled lanes, which the
+//! compiler auto-vectorizes where profitable — and, as in the paper, the
+//! 64-bit path stays effectively scalar, reproducing the ≈ 60% rate
+//! ratio.
+
+use crate::hll::murmur3::{murmur3_x64_64_u32, murmur3_x86_32_u32};
+use crate::hll::{HashKind, HllSketch};
+use crate::util::bits::rho;
+
+/// 8-lane unrolled 32-bit Murmur3 (AVX2-style).
+#[inline]
+pub fn hash32_x8(keys: &[u32; 8], seed: u32) -> [u32; 8] {
+    // Straight-line code over 8 independent lanes; LLVM vectorizes this
+    // to AVX2 `vpmulld`/`vprold`-style sequences on x86.
+    let mut out = [0u32; 8];
+    for i in 0..8 {
+        out[i] = murmur3_x86_32_u32(keys[i], seed);
+    }
+    out
+}
+
+/// 4-lane unrolled 64-bit Murmur3 (the paper found this not beneficial;
+/// kept for the ablation bench that demonstrates exactly that).
+#[inline]
+pub fn hash64_x4(keys: &[u32; 4], seed: u64) -> [u64; 4] {
+    let mut out = [0u64; 4];
+    for i in 0..4 {
+        out[i] = murmur3_x64_64_u32(keys[i], seed);
+    }
+    out
+}
+
+/// Aggregate a word stream with the 8-lane 32-bit path.
+pub fn aggregate32_batched(words: &[u32], sketch: &mut HllSketch) {
+    assert_eq!(sketch.config().hash(), HashKind::H32);
+    let seed = sketch.config().seed() as u32;
+    let p = sketch.config().p() as u32;
+    let w_bits = 32 - p;
+    let mask = (1u32 << w_bits) - 1;
+
+    let mut chunks = words.chunks_exact(8);
+    // Collect indices/ranks per lane group, then update registers — the
+    // separation keeps the hash loop vectorizable.
+    let mut pending = [(0usize, 0u8); 8];
+    for chunk in &mut chunks {
+        let keys: &[u32; 8] = chunk.try_into().unwrap();
+        let hashes = hash32_x8(keys, seed);
+        for (slot, &h) in pending.iter_mut().zip(&hashes) {
+            let idx = (h >> w_bits) as usize;
+            let w = h & mask;
+            *slot = (idx, rho(w as u64, w_bits));
+        }
+        for &(idx, rank) in &pending {
+            apply(sketch, idx, rank);
+        }
+    }
+    for &w in chunks.remainder() {
+        let h = murmur3_x86_32_u32(w, seed);
+        let idx = (h >> w_bits) as usize;
+        apply(sketch, idx, rho((h & mask) as u64, w_bits));
+    }
+}
+
+/// Aggregate with the 4-lane 64-bit path.
+pub fn aggregate64_batched(words: &[u32], sketch: &mut HllSketch) {
+    assert_eq!(sketch.config().hash(), HashKind::H64);
+    let seed = sketch.config().seed();
+    let p = sketch.config().p() as u32;
+    let w_bits = 64 - p;
+    let mask = (1u64 << w_bits) - 1;
+
+    let mut chunks = words.chunks_exact(4);
+    for chunk in &mut chunks {
+        let keys: &[u32; 4] = chunk.try_into().unwrap();
+        let hashes = hash64_x4(keys, seed);
+        for &h in &hashes {
+            let idx = (h >> w_bits) as usize;
+            apply(sketch, idx, rho(h & mask, w_bits));
+        }
+    }
+    for &w in chunks.remainder() {
+        let h = murmur3_x64_64_u32(w, seed);
+        let idx = (h >> w_bits) as usize;
+        apply(sketch, idx, rho(h & mask, w_bits));
+    }
+}
+
+#[inline(always)]
+fn apply(sketch: &mut HllSketch, idx: usize, rank: u8) {
+    // Registers are private to the sketch; go through the public
+    // insert-by-hash API equivalently. To avoid re-hashing we poke the
+    // register file directly via the merge-free update helper.
+    sketch.update_register(idx, rank);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::HllConfig;
+    use crate::util::Xoshiro256StarStar;
+
+    #[test]
+    fn batched32_equals_scalar() {
+        let cfg = HllConfig::new(16, HashKind::H32).unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(2);
+        let words: Vec<u32> = (0..10_003).map(|_| rng.next_u32()).collect(); // odd len
+        let mut a = HllSketch::new(cfg);
+        let mut b = HllSketch::new(cfg);
+        aggregate32_batched(&words, &mut a);
+        b.insert_batch(&words);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batched64_equals_scalar() {
+        let cfg = HllConfig::new(16, HashKind::H64).unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let words: Vec<u32> = (0..9_999).map(|_| rng.next_u32()).collect();
+        let mut a = HllSketch::new(cfg);
+        let mut b = HllSketch::new(cfg);
+        aggregate64_batched(&words, &mut a);
+        b.insert_batch(&words);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lane_functions_match_scalar_hash() {
+        let keys = [1u32, 2, 0xdeadbeef, u32::MAX, 5, 6, 7, 8];
+        let h8 = hash32_x8(&keys, 0);
+        for (k, h) in keys.iter().zip(&h8) {
+            assert_eq!(*h, murmur3_x86_32_u32(*k, 0));
+        }
+        let k4 = [9u32, 10, 11, 12];
+        let h4 = hash64_x4(&k4, 0);
+        for (k, h) in k4.iter().zip(&h4) {
+            assert_eq!(*h, murmur3_x64_64_u32(*k, 0));
+        }
+    }
+}

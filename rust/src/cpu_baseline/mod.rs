@@ -1,0 +1,11 @@
+//! Optimized software HLL baseline — the paper's CPU comparison point
+//! (Section VI-C): lane-batched (AVX2-analogue) Murmur3, thread-parallel
+//! aggregation, and the Fig 4(b) thread-scaling model.
+
+pub mod batched;
+pub mod scaling_model;
+pub mod threading;
+
+pub use batched::{aggregate32_batched, aggregate64_batched, hash32_x8, hash64_x4};
+pub use scaling_model::ScalingModel;
+pub use threading::{aggregate_best, aggregate_parallel, measure_single_thread_rate};

@@ -1,0 +1,144 @@
+//! Thread-scaling model for Fig 4(b).
+//!
+//! Substitution note (DESIGN.md §7): the paper measures on a dual-socket
+//! Xeon E5-2630 v3 (16 cores / 32 hyper-threads); this container has a
+//! single core, so the *shape* of the thread-scaling curve is modelled
+//! analytically — linear speedup to the core count, a hyper-threading
+//! bonus up to 2× threads, and a slight oversubscription penalty beyond
+//! — and anchored either to the paper's own end points or to a measured
+//! single-thread rate from this machine.
+//!
+//! The paper's numbers are mutually consistent and pin the model:
+//! * 1 FPGA pipeline (1.288 GB/s) ≈ 2× one CPU thread  → r₁(32-bit) ≈ 0.64 GB/s;
+//! * 64-bit hash runs at ≈ 60% of the 32-bit rate      → r₁(64-bit) ≈ 0.39 GB/s;
+//! * 10 pipelines (12.48 GB/s PCIe-bound) ≈ 1.8× the 32-thread 64-bit
+//!   CPU rate → R₆₄(32) ≈ 6.9 GB/s — which the model reproduces.
+
+use crate::hll::HashKind;
+
+/// Parameters of the analytic scaling curve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingModel {
+    /// Single-thread aggregation rate, bytes/s, for the 32-bit hash.
+    pub r1_32: f64,
+    /// Single-thread rate for the 64-bit hash.
+    pub r1_64: f64,
+    /// Physical cores.
+    pub cores: usize,
+    /// Hardware threads (2× cores with hyper-threading).
+    pub hw_threads: usize,
+    /// Aggregate speedup gained from hyper-threading (16→32 threads adds
+    /// ~15% on this memory-light integer workload).
+    pub ht_bonus: f64,
+    /// Multiplicative throughput decay per doubling beyond hw_threads
+    /// (the paper observes the curve "halts and even slightly reverses").
+    pub oversub_decay: f64,
+}
+
+impl ScalingModel {
+    /// The paper's machine: dual-socket Intel Xeon E5-2630 v3.
+    pub fn paper_xeon() -> Self {
+        Self {
+            r1_32: 0.64e9,
+            r1_64: 0.39e9,
+            cores: 16,
+            hw_threads: 32,
+            ht_bonus: 0.15,
+            oversub_decay: 0.97,
+        }
+    }
+
+    /// Anchor the curve to a measured single-thread rate on the current
+    /// machine (32-bit rate measured; 64-bit derived with the paper's
+    /// 60% ratio unless measured too).
+    pub fn calibrated(r1_32: f64, r1_64: f64, cores: usize) -> Self {
+        Self {
+            r1_32,
+            r1_64,
+            cores,
+            hw_threads: cores * 2,
+            ht_bonus: 0.15,
+            oversub_decay: 0.97,
+        }
+    }
+
+    /// Effective parallel speedup at `threads`.
+    pub fn speedup(&self, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        let c = self.cores as f64;
+        if threads <= self.cores {
+            t
+        } else if threads <= self.hw_threads {
+            // Linear interpolation of the HT bonus across the second
+            // hardware-thread set.
+            let frac = (t - c) / (self.hw_threads as f64 - c);
+            c * (1.0 + self.ht_bonus * frac)
+        } else {
+            // Oversubscription: context-switch overhead slowly erodes the
+            // plateau.
+            let doublings = (t / self.hw_threads as f64).log2();
+            c * (1.0 + self.ht_bonus) * self.oversub_decay.powf(doublings)
+        }
+    }
+
+    /// Modelled aggregation rate (bytes/s).
+    pub fn rate(&self, hash: HashKind, threads: usize) -> f64 {
+        let r1 = match hash {
+            HashKind::H32 => self.r1_32,
+            HashKind::H64 => self.r1_64,
+        };
+        r1 * self.speedup(threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_endpoints_reproduced() {
+        let m = ScalingModel::paper_xeon();
+        // 32 threads, 64-bit hash: the 1.8× claim against 12.48 GB/s.
+        let r64 = m.rate(HashKind::H64, 32);
+        let ratio = 12.48e9 / r64;
+        assert!((ratio - 1.8).abs() < 0.1, "FPGA/CPU64 ratio {ratio}");
+        // NIC claim: 9.35 GB/s ≈ 35% above the 16-core CPU rate.
+        let nic_ratio = 9.35e9 / r64;
+        assert!((nic_ratio - 1.35).abs() < 0.1, "NIC/CPU ratio {nic_ratio}");
+        // Single pipeline ≈ 2× single thread (32-bit).
+        let per_pipe = crate::fpga::theoretical_throughput_bytes_per_s(1);
+        let r1_ratio = per_pipe / m.rate(HashKind::H32, 1);
+        assert!((r1_ratio - 2.0).abs() < 0.1, "pipeline/thread ratio {r1_ratio}");
+    }
+
+    #[test]
+    fn hash64_is_60pct_of_hash32() {
+        let m = ScalingModel::paper_xeon();
+        for t in [1usize, 8, 16, 32] {
+            let ratio = m.rate(HashKind::H64, t) / m.rate(HashKind::H32, t);
+            assert!((ratio - 0.6).abs() < 0.02, "t={t}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn curve_shape_linear_plateau_dip() {
+        let m = ScalingModel::paper_xeon();
+        // Linear region.
+        assert!((m.speedup(8) - 8.0).abs() < 1e-9);
+        assert!((m.speedup(16) - 16.0).abs() < 1e-9);
+        // HT plateau: 16→32 gains only the bonus.
+        let s32 = m.speedup(32);
+        assert!((s32 - 18.4).abs() < 0.01, "{s32}");
+        // Oversubscription dips.
+        assert!(m.speedup(64) < s32);
+        assert!(m.speedup(64) > 0.9 * s32, "dip is slight");
+    }
+
+    #[test]
+    fn monotone_up_to_hw_threads() {
+        let m = ScalingModel::paper_xeon();
+        for t in 1..32 {
+            assert!(m.speedup(t + 1) > m.speedup(t), "t={t}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Thread-parallel aggregation — the paper's CPU baseline uses one
+//! aggregation thread per core on a dual-socket Xeon (Section VI-C).
+//!
+//! Each thread owns a private sketch over its slice of the stream (HLL's
+//! trivially parallel decomposition); partial sketches are merged at the
+//! end — identical in structure to the FPGA's multi-pipeline + fold.
+
+use crate::hll::{HashKind, HllConfig, HllSketch};
+
+use super::batched::{aggregate32_batched, aggregate64_batched};
+
+/// Aggregate `words` across `threads` OS threads; returns the merged
+/// sketch and the wall time of the parallel section.
+pub fn aggregate_parallel(
+    cfg: HllConfig,
+    words: &[u32],
+    threads: usize,
+) -> (HllSketch, std::time::Duration) {
+    assert!(threads >= 1);
+    let t0 = std::time::Instant::now();
+    if threads == 1 {
+        let mut s = HllSketch::new(cfg);
+        aggregate_best(&mut s, words);
+        return (s, t0.elapsed());
+    }
+    let chunk = words.len().div_ceil(threads);
+    let mut parts: Vec<HllSketch> = std::thread::scope(|scope| {
+        let handles: Vec<_> = words
+            .chunks(chunk.max(1))
+            .map(|slice| {
+                scope.spawn(move || {
+                    let mut s = HllSketch::new(cfg);
+                    aggregate_best(&mut s, slice);
+                    s
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let mut merged = parts.pop().unwrap_or_else(|| HllSketch::new(cfg));
+    for p in &parts {
+        merged.merge(p).expect("same config");
+    }
+    (merged, t0.elapsed())
+}
+
+/// Pick the fastest single-thread path for the config (lane-batched).
+pub fn aggregate_best(sketch: &mut HllSketch, words: &[u32]) {
+    match sketch.config().hash() {
+        HashKind::H32 => aggregate32_batched(words, sketch),
+        HashKind::H64 => aggregate64_batched(words, sketch),
+    }
+}
+
+/// Measure this machine's single-thread aggregation rate (bytes/s) for a
+/// hash width — the calibration input for the Fig 4(b) scaling model.
+pub fn measure_single_thread_rate(hash: HashKind, sample_words: usize) -> f64 {
+    let cfg = HllConfig::new(16, hash).unwrap();
+    let mut rng = crate::util::Xoshiro256StarStar::seed_from_u64(0x5EED);
+    let words: Vec<u32> = (0..sample_words).map(|_| rng.next_u32()).collect();
+    // Warm-up pass, then timed pass.
+    let mut s = HllSketch::new(cfg);
+    aggregate_best(&mut s, &words);
+    let mut s = HllSketch::new(cfg);
+    let t0 = std::time::Instant::now();
+    aggregate_best(&mut s, &words);
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(s.estimate());
+    (sample_words * 4) as f64 / dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256StarStar;
+
+    #[test]
+    fn parallel_equals_serial_any_thread_count() {
+        let cfg = HllConfig::PAPER;
+        let mut rng = Xoshiro256StarStar::seed_from_u64(4);
+        let words: Vec<u32> = (0..40_000).map(|_| rng.next_u32()).collect();
+        let mut serial = HllSketch::new(cfg);
+        serial.insert_batch(&words);
+        for threads in [1usize, 2, 3, 8] {
+            let (merged, _) = aggregate_parallel(cfg, &words, threads);
+            assert_eq!(merged, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_handles_tiny_inputs() {
+        let cfg = HllConfig::PAPER;
+        let (s, _) = aggregate_parallel(cfg, &[], 4);
+        assert_eq!(s.zero_registers(), cfg.m());
+        let (s, _) = aggregate_parallel(cfg, &[42], 8);
+        assert_eq!(s.zero_registers(), cfg.m() - 1);
+    }
+
+    #[test]
+    fn measured_rate_is_positive() {
+        let r = measure_single_thread_rate(HashKind::H64, 100_000);
+        assert!(r > 1e6, "suspiciously slow: {r} B/s");
+    }
+}

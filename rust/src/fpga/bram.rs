@@ -1,0 +1,197 @@
+//! Dual-port BRAM bucket memory with the pipelined read-modify-write
+//! update of Section V-A-4.
+//!
+//! The hardware update is itself a 3-stage pipeline: (a) read the counter
+//! at the extracted index, (b) compare with the incoming rank, (c) write
+//! back the max. An update to the *same* counter arriving while an
+//! earlier one is still in flight would read a stale value; the paper's
+//! design "merges" such colliding updates. This module models the
+//! three-stage pipeline cycle by cycle, including the hazard-forwarding
+//! network, and a test proves the result equals the serial max fold.
+
+/// In-flight update (one per pipeline stage).
+#[derive(Debug, Clone, Copy)]
+struct Update {
+    idx: usize,
+    /// Rank being inserted.
+    rank: u8,
+    /// Value read from the BRAM in stage (a), possibly stale.
+    read: u8,
+}
+
+/// Cycle-accurate bucket memory: a BRAM array plus the RMW pipeline.
+#[derive(Debug, Clone)]
+pub struct BucketMemory {
+    mem: Vec<u8>,
+    /// Stage (b) slot: read done, compare pending.
+    stage_b: Option<Update>,
+    /// Stage (c) slot: compare done, write pending.
+    stage_c: Option<Update>,
+    /// Whether hazard forwarding (update merging) is enabled — the
+    /// paper's design has it; disabling it demonstrates the data-loss
+    /// bug it prevents (see the ablation bench).
+    forwarding: bool,
+    cycles: u64,
+}
+
+impl BucketMemory {
+    pub fn new(m: usize) -> Self {
+        Self { mem: vec![0; m], stage_b: None, stage_c: None, forwarding: true, cycles: 0 }
+    }
+
+    /// Build with hazard forwarding disabled (ablation only — produces
+    /// stale-read artifacts under index collisions).
+    pub fn without_forwarding(m: usize) -> Self {
+        Self { forwarding: false, ..Self::new(m) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Advance one clock with an optional new (idx, rank) entering the
+    /// pipeline. II = 1: an update can enter every cycle.
+    pub fn clock(&mut self, input: Option<(usize, u8)>) {
+        self.cycles += 1;
+
+        // Stage (c): write back max(read, rank).
+        if let Some(u) = self.stage_c.take() {
+            let val = u.read.max(u.rank);
+            if val > self.mem[u.idx] {
+                self.mem[u.idx] = val;
+            } else if !self.forwarding {
+                // Without forwarding the write is unconditional — a stale
+                // read can *lower* the stored value (the bug merging
+                // prevents). Model that faithfully for the ablation.
+                self.mem[u.idx] = val;
+            }
+        }
+
+        // Stage (b) -> (c): compare. With forwarding, a same-index update
+        // ahead in stage (c) has already written by now (write happens
+        // above in the same cycle), but an update that was in stage (b)
+        // last cycle wrote nothing yet — the forwarding network merges by
+        // taking the max of the in-flight ranks.
+        if let Some(mut u) = self.stage_b.take() {
+            if self.forwarding {
+                // Re-read (forward) the current memory value — models the
+                // bypass mux from the write port.
+                u.read = u.read.max(self.mem[u.idx]);
+            }
+            self.stage_c = Some(u);
+        }
+
+        // Stage (a): accept input, read memory.
+        if let Some((idx, rank)) = input {
+            assert!(idx < self.mem.len(), "bucket index out of range");
+            let mut read = self.mem[idx];
+            if self.forwarding {
+                // Forward from both in-flight stages on an index match.
+                if let Some(c) = &self.stage_c {
+                    if c.idx == idx {
+                        read = read.max(c.read.max(c.rank));
+                    }
+                }
+            }
+            self.stage_b = Some(Update { idx, rank, read });
+        }
+    }
+
+    /// Drain the pipeline (2 idle cycles).
+    pub fn flush(&mut self) {
+        while self.stage_b.is_some() || self.stage_c.is_some() {
+            self.clock(None);
+        }
+    }
+
+    /// Stream a whole sequence of updates at II=1 and flush.
+    pub fn run(&mut self, updates: impl IntoIterator<Item = (usize, u8)>) {
+        for u in updates {
+            self.clock(Some(u));
+        }
+        self.flush();
+    }
+
+    /// The register file (valid after `flush`).
+    pub fn registers(&self) -> &[u8] {
+        &self.mem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    fn serial_max(m: usize, updates: &[(usize, u8)]) -> Vec<u8> {
+        let mut regs = vec![0u8; m];
+        for &(i, r) in updates {
+            if r > regs[i] {
+                regs[i] = r;
+            }
+        }
+        regs
+    }
+
+    #[test]
+    fn no_collisions_simple() {
+        let mut b = BucketMemory::new(8);
+        b.run([(0, 3), (1, 5), (2, 1)]);
+        assert_eq!(&b.registers()[..3], &[3, 5, 1]);
+    }
+
+    #[test]
+    fn back_to_back_same_index_merges() {
+        // The canonical hazard: consecutive updates to one bucket. The
+        // second read is stale without forwarding.
+        let mut b = BucketMemory::new(4);
+        b.run([(2, 5), (2, 3), (2, 4)]);
+        assert_eq!(b.registers()[2], 5);
+
+        let mut b = BucketMemory::new(4);
+        b.run([(2, 3), (2, 5), (2, 4)]);
+        assert_eq!(b.registers()[2], 5);
+    }
+
+    #[test]
+    fn without_forwarding_loses_updates() {
+        // Demonstrate the bug the merge network prevents: rank 5 enters,
+        // then rank 3 to the same bucket reads stale 0 and overwrites.
+        let mut b = BucketMemory::without_forwarding(4);
+        b.run([(2, 5), (2, 3)]);
+        assert!(b.registers()[2] < 5, "stale write should have clobbered");
+    }
+
+    #[test]
+    fn ii_is_one() {
+        // n updates + pipeline drain ≤ n + 2 cycles.
+        let mut b = BucketMemory::new(16);
+        let updates: Vec<(usize, u8)> = (0..1000).map(|i| (i % 16, (i % 7) as u8 + 1)).collect();
+        b.run(updates);
+        assert!(b.cycles() <= 1000 + 2, "II must be 1: {} cycles", b.cycles());
+    }
+
+    #[test]
+    fn hazard_merge_equals_serial_max_property() {
+        // The core equivalence the paper's design relies on, over random
+        // collision-heavy streams.
+        Runner::new("bram_hazard_merge").cases(100).run(|g| {
+            let m = 1usize << g.usize_in(2..=6);
+            let n = g.usize_in(0..=512);
+            let updates: Vec<(usize, u8)> = (0..n)
+                .map(|_| (g.usize_in(0..=m - 1), g.u32_in(1..=49) as u8))
+                .collect();
+            let mut b = BucketMemory::new(m);
+            b.run(updates.iter().copied());
+            assert_eq!(b.registers(), &serial_max(m, &updates)[..]);
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Clock-domain model. The paper's design has two domains (Section VII):
+//! the network/CMAC domain at 322 MHz (which also drives the HLL
+//! pipelines, period 3.1 ns) and the PCIe/XDMA domain at 250 MHz.
+
+/// A fixed-frequency clock domain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockDomain {
+    freq_hz: f64,
+}
+
+impl ClockDomain {
+    /// The 100G Ethernet / CMAC clock driving the HLL pipelines.
+    pub const NETWORK: ClockDomain = ClockDomain { freq_hz: 322e6 };
+    /// The XDMA / PCIe subsystem clock.
+    pub const PCIE: ClockDomain = ClockDomain { freq_hz: 250e6 };
+
+    pub fn new(freq_hz: f64) -> Self {
+        assert!(freq_hz > 0.0);
+        Self { freq_hz }
+    }
+
+    #[inline]
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_hz
+    }
+
+    /// Clock period in seconds (3.1 ns for the network domain).
+    #[inline]
+    pub fn period_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    #[inline]
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.period_s()
+    }
+
+    #[inline]
+    pub fn seconds_to_cycles(&self, seconds: f64) -> u64 {
+        (seconds * self.freq_hz).round() as u64
+    }
+
+    /// Bytes/second moved by a datapath `width_bytes` wide at this clock
+    /// (one beat per cycle, II=1).
+    #[inline]
+    pub fn throughput_bytes_per_s(&self, width_bytes: usize) -> f64 {
+        self.freq_hz * width_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn network_domain_matches_paper() {
+        let c = ClockDomain::NETWORK;
+        // Period 3.1 ns (Section VI).
+        assert!((c.period_s() - 3.1e-9).abs() < 0.05e-9);
+        // One 32-bit word per cycle = 10.3 Gbit/s (Section VI).
+        let gbit = c.throughput_bytes_per_s(4) * 8.0 / 1e9;
+        assert!((gbit - 10.304).abs() < 0.01, "{gbit}");
+    }
+
+    #[test]
+    fn drain_time_matches_paper() {
+        // Section VII: reading all 2^16 buckets takes 203 µs.
+        let c = ClockDomain::NETWORK;
+        let t = c.cycles_to_seconds(1 << 16);
+        assert!((t - 203e-6).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn cycle_second_roundtrip() {
+        let c = ClockDomain::PCIE;
+        assert_eq!(c.seconds_to_cycles(c.cycles_to_seconds(12345)), 12345);
+    }
+}

@@ -1,0 +1,23 @@
+//! Cycle-approximate simulator of the paper's FPGA dataflow architecture
+//! (Section V): single pipeline (Fig 2), parallel multi-pipeline engine
+//! (Fig 3), the hazard-merging BRAM bucket memory, clock domains, and the
+//! Table-III resource model.
+//!
+//! Substitution note (DESIGN.md §7): the paper measures on a VCU118; this
+//! simulator reproduces the design's timing law (II=1 @ 322 MHz, drain =
+//! 2^p cycles) and functional semantics exactly, which is what every
+//! throughput figure in the evaluation derives from.
+
+pub mod bram;
+pub mod clock;
+pub mod parallel;
+pub mod pipeline;
+pub mod resources;
+
+pub use bram::BucketMemory;
+pub use clock::ClockDomain;
+pub use parallel::{
+    theoretical_throughput_bytes_per_s, timing_only_cycles, ParallelHll, ParallelResult,
+};
+pub use pipeline::{HllPipeline, PipelineResult, StageLatencies};
+pub use resources::{Device, ResourceModel, Resources, UtilizationPct};

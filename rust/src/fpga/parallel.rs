@@ -1,0 +1,246 @@
+//! The multi-pipelined parallel architecture of Fig. 3: k identical
+//! aggregation pipelines fed by slicing the input word stream, partial
+//! sketches folded by the "Merge buckets" module, then the single shared
+//! computation phase.
+//!
+//! Input slicing "only implies wiring": words are processed where they
+//! arrive with no active reassignment (Section V-B) — modelled as
+//! dealing k-word groups across the pipelines each cycle.
+
+use super::clock::ClockDomain;
+use super::pipeline::{HllPipeline, StageLatencies};
+use crate::hll::{estimate, EstimateBreakdown, HllConfig, HllSketch};
+
+/// The k-pipeline parallel engine.
+#[derive(Debug)]
+pub struct ParallelHll {
+    cfg: HllConfig,
+    pipelines: Vec<HllPipeline>,
+    clock: ClockDomain,
+    words_in: u64,
+}
+
+impl ParallelHll {
+    pub fn new(cfg: HllConfig, k: usize) -> Self {
+        assert!(k >= 1, "need at least one pipeline");
+        Self {
+            cfg,
+            pipelines: (0..k).map(|_| HllPipeline::new(cfg)).collect(),
+            clock: ClockDomain::NETWORK,
+            words_in: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        &self.cfg
+    }
+
+    /// Aggregate input bandwidth in bytes/s: k × 32-bit words per cycle.
+    pub fn input_bandwidth_bytes_per_s(&self) -> f64 {
+        self.clock.throughput_bytes_per_s(4 * self.k())
+    }
+
+    /// Feed a word slice; the slicer deals words round-robin in k-word
+    /// groups (one group per cycle).
+    pub fn feed(&mut self, words: &[u32]) {
+        let k = self.k();
+        self.words_in += words.len() as u64;
+        if k == 1 {
+            self.pipelines[0].feed(words);
+            return;
+        }
+        // Deal column i of each k-word group to pipeline i. Collecting
+        // per-pipeline slices keeps the per-word cost low while exactly
+        // matching the positional slicing of the hardware.
+        let mut lanes: Vec<Vec<u32>> = vec![Vec::with_capacity(words.len() / k + 1); k];
+        for (i, &w) in words.iter().enumerate() {
+            lanes[i % k].push(w);
+        }
+        for (pipe, lane) in self.pipelines.iter_mut().zip(&lanes) {
+            pipe.feed(lane);
+        }
+    }
+
+    /// Close the stream: merge the partial sketches and run the shared
+    /// computation phase. Returns the result plus full cycle accounting.
+    pub fn finish(mut self) -> ParallelResult {
+        let k = self.k();
+        // Aggregation time = the slowest pipeline (they run in lock-step;
+        // the slicer gives them equal shares ±1 word).
+        let agg_cycles = self
+            .pipelines
+            .iter()
+            .map(|p| p.agg_cycles())
+            .max()
+            .unwrap_or(0);
+
+        // Merge fold: partial sketches are streamed in parallel and
+        // folded bucket by bucket — m cycles pipelined, plus ⌈log2 k⌉
+        // fill for the comparator tree.
+        let mut merged = vec![0u8; self.cfg.m()];
+        for pipe in &mut self.pipelines {
+            for (dst, src) in merged.iter_mut().zip(pipe.registers_snapshot()) {
+                if src > *dst {
+                    *dst = src;
+                }
+            }
+        }
+        let merge_cycles = if k > 1 {
+            self.cfg.m() as u64 + (usize::BITS - (k - 1).leading_zeros()) as u64
+        } else {
+            0
+        };
+
+        let breakdown = estimate(&self.cfg, &merged);
+        // Shared computation phase, identical to the single-pipeline one.
+        let drain_cycles = self.cfg.m() as u64 + 32;
+        let sketch = HllSketch::from_registers(self.cfg, merged).expect("merged regs valid");
+
+        ParallelResult {
+            sketch,
+            breakdown,
+            k,
+            words: self.words_in,
+            agg_cycles,
+            merge_cycles,
+            drain_cycles,
+            clock: self.clock,
+        }
+    }
+}
+
+/// Outcome of a completed parallel run.
+#[derive(Debug, Clone)]
+pub struct ParallelResult {
+    pub sketch: HllSketch,
+    pub breakdown: EstimateBreakdown,
+    pub k: usize,
+    pub words: u64,
+    pub agg_cycles: u64,
+    pub merge_cycles: u64,
+    pub drain_cycles: u64,
+    pub clock: ClockDomain,
+}
+
+impl ParallelResult {
+    pub fn total_cycles(&self) -> u64 {
+        self.agg_cycles + self.merge_cycles + self.drain_cycles
+    }
+
+    pub fn aggregation_seconds(&self) -> f64 {
+        self.clock.cycles_to_seconds(self.agg_cycles)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.clock.cycles_to_seconds(self.total_cycles())
+    }
+
+    /// Sustained aggregation throughput (bytes/s) across all pipelines.
+    pub fn throughput_bytes_per_s(&self) -> f64 {
+        (self.words * 4) as f64 / self.aggregation_seconds()
+    }
+}
+
+/// Pure timing model (no functional processing) for large sweeps:
+/// aggregation throughput of k pipelines at II=1.
+pub fn theoretical_throughput_bytes_per_s(k: usize) -> f64 {
+    ClockDomain::NETWORK.throughput_bytes_per_s(4 * k)
+}
+
+/// Cycle count to aggregate `words` through k pipelines and finish
+/// (merge fold + computation phase), without materializing data.
+pub fn timing_only_cycles(cfg: &HllConfig, k: usize, words: u64) -> u64 {
+    let fill = StageLatencies::for_config(cfg).fill_latency();
+    let agg = words.div_ceil(k as u64) + fill;
+    let merge = if k > 1 {
+        cfg.m() as u64 + (usize::BITS - (k - 1).leading_zeros()) as u64
+    } else {
+        0
+    };
+    agg + merge + cfg.m() as u64 + 32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256StarStar;
+
+    fn cfg() -> HllConfig {
+        HllConfig::PAPER
+    }
+
+    #[test]
+    fn parallel_equals_single_pipeline_functionally() {
+        // Fig 3's correctness claim: slicing + merge == one pipeline.
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let words: Vec<u32> = (0..30_000).map(|_| rng.next_u32()).collect();
+        let mut sw = HllSketch::new(cfg());
+        sw.insert_batch(&words);
+        for k in [1, 2, 4, 7, 10, 16] {
+            let mut par = ParallelHll::new(cfg(), k);
+            par.feed(&words);
+            let r = par.finish();
+            assert_eq!(r.sketch, sw, "k={k}");
+        }
+    }
+
+    #[test]
+    fn speedup_scales_linearly() {
+        let words: Vec<u32> = (0..64_000u32).collect();
+        let mut t1 = None;
+        for k in [1usize, 2, 4, 8, 16] {
+            let mut par = ParallelHll::new(cfg(), k);
+            par.feed(&words);
+            let r = par.finish();
+            let agg = r.agg_cycles;
+            match t1 {
+                None => t1 = Some(agg),
+                Some(base) => {
+                    let speedup = base as f64 / agg as f64;
+                    let rel = (speedup - k as f64).abs() / (k as f64);
+                    assert!(rel < 0.01, "k={k}: speedup {speedup}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn input_bandwidth_formula() {
+        // k × 32 bit × 322 MHz; 10 pipelines = 103 Gbit/s (Section VI-A).
+        let par = ParallelHll::new(cfg(), 10);
+        let gbit = par.input_bandwidth_bytes_per_s() * 8.0 / 1e9;
+        assert!((gbit - 103.0).abs() < 0.1, "{gbit}");
+    }
+
+    #[test]
+    fn timing_only_matches_functional() {
+        let words: Vec<u32> = (0..10_000u32).collect();
+        for k in [1usize, 4, 10] {
+            let mut par = ParallelHll::new(cfg(), k);
+            par.feed(&words);
+            let r = par.finish();
+            let predicted = timing_only_cycles(&cfg(), k, words.len() as u64);
+            // Functional slicer gives ±1 word per lane; allow ±k cycles.
+            let actual = r.total_cycles();
+            assert!(
+                (predicted as i64 - actual as i64).unsigned_abs() <= k as u64 + 1,
+                "k={k}: predicted {predicted} actual {actual}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_fold_cost_accounted() {
+        let mut par = ParallelHll::new(cfg(), 8);
+        par.feed(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let r = par.finish();
+        assert!(r.merge_cycles >= cfg().m() as u64);
+        let single = ParallelHll::new(cfg(), 1);
+        let r1 = single.finish();
+        assert_eq!(r1.merge_cycles, 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! HLL configuration: precision `p`, hash width `H`, and the derived
+//! constants of Algorithm 1 (α_m, thresholds, memory footprint).
+
+use crate::util::bits::ceil_log2;
+
+/// Hash width H — the paper studies H ∈ {32, 64} (Section IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HashKind {
+    /// MurmurHash3_x86_32.
+    H32,
+    /// Low 64 bits of MurmurHash3_x64_128 (the paper's "64-bit Murmur3").
+    H64,
+}
+
+impl HashKind {
+    #[inline]
+    pub fn bits(self) -> u32 {
+        match self {
+            HashKind::H32 => 32,
+            HashKind::H64 => 64,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            HashKind::H32 => "HLL32",
+            HashKind::H64 => "HLL64",
+        }
+    }
+}
+
+/// Errors constructing an [`HllConfig`].
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ConfigError {
+    #[error("precision p={0} out of range [4, 16] (Algorithm 1, line 1)")]
+    PrecisionOutOfRange(u8),
+}
+
+/// Static HLL parameters. The paper's hardware configuration is
+/// `p = 16`, `H = 64` (chosen in Section IV); the profiling study also
+/// covers `p = 14` and `H = 32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HllConfig {
+    p: u8,
+    hash: HashKind,
+    seed: u64,
+}
+
+impl HllConfig {
+    /// The configuration the paper implements in hardware (Section V).
+    pub const PAPER: HllConfig = HllConfig { p: 16, hash: HashKind::H64, seed: 0 };
+
+    pub fn new(p: u8, hash: HashKind) -> Result<Self, ConfigError> {
+        if !(4..=16).contains(&p) {
+            return Err(ConfigError::PrecisionOutOfRange(p));
+        }
+        Ok(Self { p, hash, seed: 0 })
+    }
+
+    /// Override the hash seed (all layers must agree; the AOT artifacts
+    /// are lowered with seed 0).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    #[inline]
+    pub fn p(&self) -> u8 {
+        self.p
+    }
+
+    #[inline]
+    pub fn hash(&self) -> HashKind {
+        self.hash
+    }
+
+    #[inline]
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Number of buckets m = 2^p.
+    #[inline]
+    pub fn m(&self) -> usize {
+        1usize << self.p
+    }
+
+    /// Width of the sub-hash w in bits: H − p.
+    #[inline]
+    pub fn w_bits(&self) -> u32 {
+        self.hash.bits() - self.p as u32
+    }
+
+    /// Maximum observable rank ρ ≤ H − p + 1 (paper eq. (2)).
+    #[inline]
+    pub fn max_rank(&self) -> u8 {
+        (self.hash.bits() - self.p as u32 + 1) as u8
+    }
+
+    /// Bias-correction constant α_m (Algorithm 1, lines 2–3).
+    pub fn alpha(&self) -> f64 {
+        match self.m() {
+            16 => 0.673,
+            32 => 0.697,
+            64 => 0.709,
+            m => 0.7213 / (1.0 + 1.079 / m as f64),
+        }
+    }
+
+    /// Small-range correction threshold 5/2·m (Algorithm 1, line 12).
+    #[inline]
+    pub fn small_range_threshold(&self) -> f64 {
+        2.5 * self.m() as f64
+    }
+
+    /// Large-range threshold 2^32 / 30 — only meaningful for H = 32
+    /// (with a 64-bit hash the correction is obsolete; Section III).
+    #[inline]
+    pub fn large_range_threshold(&self) -> Option<f64> {
+        match self.hash {
+            HashKind::H32 => Some((1u64 << 32) as f64 / 30.0),
+            HashKind::H64 => None,
+        }
+    }
+
+    /// Per-bucket register width ⌈log2(H − p + 1)⌉ bits (paper eq. (3)).
+    #[inline]
+    pub fn register_bits(&self) -> u32 {
+        ceil_log2(self.max_rank() as u64)
+    }
+
+    /// Total sketch memory footprint in bits: B = 2^p · ⌈log2(H−p+1)⌉
+    /// (paper eq. (3), Table II).
+    #[inline]
+    pub fn footprint_bits(&self) -> u64 {
+        (self.m() as u64) * self.register_bits() as u64
+    }
+
+    /// Footprint in KiB, as reported in Table II.
+    #[inline]
+    pub fn footprint_kib(&self) -> f64 {
+        self.footprint_bits() as f64 / 8.0 / 1024.0
+    }
+
+    /// Theoretical relative standard error 1.04/√m (Section III).
+    #[inline]
+    pub fn standard_error(&self) -> f64 {
+        1.04 / (self.m() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_range_enforced() {
+        assert!(HllConfig::new(3, HashKind::H32).is_err());
+        assert!(HllConfig::new(17, HashKind::H64).is_err());
+        for p in 4..=16 {
+            assert!(HllConfig::new(p, HashKind::H64).is_ok());
+        }
+    }
+
+    #[test]
+    fn alpha_matches_algorithm1() {
+        assert_eq!(HllConfig::new(4, HashKind::H32).unwrap().alpha(), 0.673);
+        assert_eq!(HllConfig::new(5, HashKind::H32).unwrap().alpha(), 0.697);
+        assert_eq!(HllConfig::new(6, HashKind::H32).unwrap().alpha(), 0.709);
+        let a = HllConfig::new(16, HashKind::H64).unwrap().alpha();
+        assert!((a - 0.7213 / (1.0 + 1.079 / 65536.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_memory_footprint() {
+        // Paper Table II: (p, H) → (register bits, total KiB).
+        let cases = [
+            (14u8, HashKind::H32, 5u32, 10.0f64),
+            (14, HashKind::H64, 6, 12.0),
+            (16, HashKind::H32, 5, 40.0),
+            (16, HashKind::H64, 6, 48.0),
+        ];
+        for (p, h, reg_bits, kib) in cases {
+            let c = HllConfig::new(p, h).unwrap();
+            assert_eq!(c.register_bits(), reg_bits, "p={p} H={:?}", h);
+            assert!((c.footprint_kib() - kib).abs() < 1e-9, "p={p} H={:?}", h);
+        }
+    }
+
+    #[test]
+    fn max_rank_eq2() {
+        let c = HllConfig::new(16, HashKind::H64).unwrap();
+        assert_eq!(c.max_rank(), 49); // 64 - 16 + 1
+        let c = HllConfig::new(14, HashKind::H32).unwrap();
+        assert_eq!(c.max_rank(), 19); // 32 - 14 + 1
+    }
+
+    #[test]
+    fn paper_config() {
+        assert_eq!(HllConfig::PAPER.p(), 16);
+        assert_eq!(HllConfig::PAPER.hash(), HashKind::H64);
+        assert_eq!(HllConfig::PAPER.m(), 65536);
+        // Expected standard error 0.41% (Section IV).
+        assert!((HllConfig::PAPER.standard_error() - 0.0040625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn large_range_only_for_h32() {
+        assert!(HllConfig::new(14, HashKind::H32).unwrap().large_range_threshold().is_some());
+        assert!(HllConfig::new(14, HashKind::H64).unwrap().large_range_threshold().is_none());
+    }
+}

@@ -1,0 +1,209 @@
+//! Algorithm 1 Phase 4 — the computation phase: raw harmonic-mean
+//! estimate plus the small/intermediate/large-range corrections.
+//!
+//! This mirrors the hardware's "Harmonic Mean" + "Correction" modules
+//! (Section V-A-6/7). Like the hardware, the power sum Σ 2^−M[j] is exact:
+//! each addend is a single bit in a wide fixed-point accumulator; we use
+//! an integer accumulator scaled by 2^max_rank, which is exact for every
+//! p/H combination the library admits (m · 2^max_rank < 2^128 does not
+//! hold for all, so a u128 fast path with f64 fallback is used — for the
+//! paper's p=16/H=64 the fast path applies).
+
+use super::config::HllConfig;
+
+/// Which branch of Algorithm 1 produced the final estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Correction {
+    /// Line 15: E ≤ 5/2·m and V ≠ 0 → LinearCounting.
+    SmallRangeLinearCounting,
+    /// Line 17 / 20: no correction applied.
+    None,
+    /// Line 22: E > 2^32/30 with a 32-bit hash.
+    LargeRange,
+}
+
+/// Full decomposition of one estimate computation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimateBreakdown {
+    /// Raw estimate E = α_m · m² / Σ 2^−M[j] (line 11).
+    pub raw: f64,
+    /// Number of zero registers V (line 13).
+    pub zero_registers: usize,
+    /// Which correction branch fired.
+    pub correction: Correction,
+    /// Final estimate E* (line 15/17/20/22).
+    pub estimate: f64,
+}
+
+/// LinearCounting estimate m·ln(m/V) (Algorithm 1 lines 24–25).
+#[inline]
+pub fn linear_counting(m: usize, v: usize) -> f64 {
+    debug_assert!(v > 0 && v <= m);
+    let m = m as f64;
+    m * (m / v as f64).ln()
+}
+
+/// Exact power sum Σ_j 2^−M[j] and zero count V over a register file.
+///
+/// Returns the sum as f64 (exact: it is a dyadic rational with ≤ max_rank
+/// fractional bits accumulated in an integer when possible).
+pub fn power_sum(cfg: &HllConfig, regs: &[u8]) -> (f64, usize) {
+    let max_rank = cfg.max_rank() as u32;
+    let mut zeros = 0usize;
+    if max_rank <= 63 && (regs.len() as u128) << max_rank <= u128::MAX >> 1 {
+        // Exact integer accumulation scaled by 2^max_rank — the software
+        // analogue of the hardware's wide fixed-point accumulator.
+        let mut acc: u128 = 0;
+        for &r in regs {
+            if r == 0 {
+                zeros += 1;
+            }
+            debug_assert!(r as u32 <= max_rank);
+            acc += 1u128 << (max_rank - r as u32);
+        }
+        (acc as f64 / (1u128 << max_rank) as f64, zeros)
+    } else {
+        let mut acc = 0.0f64;
+        for &r in regs {
+            if r == 0 {
+                zeros += 1;
+            }
+            acc += (-(r as f64)).exp2();
+        }
+        (acc, zeros)
+    }
+}
+
+/// Algorithm 1, computation phase, over a raw register file.
+pub fn estimate(cfg: &HllConfig, regs: &[u8]) -> EstimateBreakdown {
+    debug_assert_eq!(regs.len(), cfg.m());
+    let m = cfg.m();
+    let (sum, zeros) = power_sum(cfg, regs);
+    let raw = cfg.alpha() * (m as f64) * (m as f64) / sum;
+
+    let (correction, est) = if raw <= cfg.small_range_threshold() {
+        if zeros != 0 {
+            (Correction::SmallRangeLinearCounting, linear_counting(m, zeros))
+        } else {
+            (Correction::None, raw)
+        }
+    } else if let Some(thr) = cfg.large_range_threshold() {
+        if raw <= thr {
+            (Correction::None, raw)
+        } else {
+            // Line 22. For pathological register files the raw estimate
+            // can reach/exceed 2^32, where the correction's log argument
+            // would be ≤ 0; saturate instead of returning NaN (the sketch
+            // is beyond what a 32-bit hash can distinguish at that point).
+            let two32 = (1u64 << 32) as f64;
+            let ratio = (1.0 - raw / two32).max(f64::MIN_POSITIVE);
+            (Correction::LargeRange, -two32 * ratio.ln())
+        }
+    } else {
+        (Correction::None, raw)
+    };
+
+    EstimateBreakdown { raw, zero_registers: zeros, correction, estimate: est }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::config::HashKind;
+    use crate::hll::sketch::HllSketch;
+    use crate::util::Xoshiro256StarStar;
+
+    fn cfg(p: u8, h: HashKind) -> HllConfig {
+        HllConfig::new(p, h).unwrap()
+    }
+
+    #[test]
+    fn empty_sketch_estimates_zero() {
+        let c = cfg(16, HashKind::H64);
+        let b = estimate(&c, &vec![0; c.m()]);
+        // All registers zero → LinearCounting(m, m) = m·ln(1) = 0.
+        assert_eq!(b.correction, Correction::SmallRangeLinearCounting);
+        assert_eq!(b.estimate, 0.0);
+        assert_eq!(b.zero_registers, c.m());
+    }
+
+    #[test]
+    fn power_sum_exact_small_case() {
+        let c = cfg(4, HashKind::H32); // m=16, max_rank=29
+        let mut regs = vec![0u8; 16];
+        regs[0] = 1;
+        regs[1] = 2;
+        let (s, z) = power_sum(&c, &regs);
+        assert_eq!(z, 14);
+        assert_eq!(s, 14.0 + 0.5 + 0.25);
+    }
+
+    #[test]
+    fn small_range_uses_linear_counting() {
+        let mut s = HllSketch::new(cfg(12, HashKind::H64));
+        for v in 0..100u32 {
+            s.insert_u32(v);
+        }
+        let b = s.estimate_breakdown();
+        assert_eq!(b.correction, Correction::SmallRangeLinearCounting);
+        // LinearCounting is very accurate here.
+        assert!((b.estimate - 100.0).abs() / 100.0 < 0.05, "est {}", b.estimate);
+    }
+
+    #[test]
+    fn intermediate_range_no_correction() {
+        let mut s = HllSketch::new(cfg(12, HashKind::H64));
+        let mut rng = Xoshiro256StarStar::seed_from_u64(5);
+        for _ in 0..200_000 {
+            s.insert_u32(rng.next_u32());
+        }
+        let b = s.estimate_breakdown();
+        assert_eq!(b.correction, Correction::None);
+    }
+
+    #[test]
+    fn linear_counting_formula() {
+        assert_eq!(linear_counting(16, 16), 0.0);
+        let lc = linear_counting(1 << 16, 1 << 15);
+        assert!((lc - 65536.0 * 2.0f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn large_range_correction_fires_only_for_h32() {
+        // Force a huge raw estimate by maxing registers.
+        let c32 = cfg(14, HashKind::H32);
+        let regs = vec![c32.max_rank(); c32.m()];
+        let b = estimate(&c32, &regs);
+        assert_eq!(b.correction, Correction::LargeRange);
+        assert!(b.estimate.is_finite() && b.estimate > 0.0, "saturated, not NaN");
+
+        let c64 = cfg(14, HashKind::H64);
+        let regs = vec![20u8; c64.m()];
+        let b = estimate(&c64, &regs);
+        assert_eq!(b.correction, Correction::None, "64-bit hash never large-range corrects");
+    }
+
+    #[test]
+    fn estimate_monotone_under_register_increase() {
+        // Raising any register can only increase the raw estimate.
+        let c = cfg(8, HashKind::H64);
+        let mut regs = vec![1u8; c.m()];
+        let e1 = estimate(&c, &regs).raw;
+        regs[17] = 9;
+        let e2 = estimate(&c, &regs).raw;
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn breakdown_consistency() {
+        let mut s = HllSketch::paper();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(8);
+        for _ in 0..500_000 {
+            s.insert_u32(rng.next_u32());
+        }
+        let b = s.estimate_breakdown();
+        assert_eq!(b.zero_registers, s.zero_registers());
+        assert_eq!(b.estimate, s.estimate());
+        assert!(b.raw > 0.0);
+    }
+}

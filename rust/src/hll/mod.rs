@@ -1,0 +1,16 @@
+//! The HyperLogLog core library — Algorithm 1 of the paper, complete with
+//! both hash widths, all correction branches, merge (Fig 3's fold),
+//! memory-footprint analysis (Table II), and a sparse/adaptive extension.
+
+pub mod config;
+pub mod estimate;
+pub mod murmur3;
+pub mod setops;
+pub mod sketch;
+pub mod sparse;
+
+pub use config::{ConfigError, HashKind, HllConfig};
+pub use estimate::{estimate, linear_counting, Correction, EstimateBreakdown};
+pub use setops::{intersection_cardinality, jaccard, union_cardinality};
+pub use sketch::{HllSketch, SketchError};
+pub use sparse::{AdaptiveSketch, SparseHll};

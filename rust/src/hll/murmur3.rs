@@ -1,0 +1,281 @@
+//! Canonical MurmurHash3 (Appleby, SMHasher) — the paper's hash function.
+//!
+//! Two variants are provided, matching the paper's H ∈ {32, 64} study:
+//!
+//! * [`murmur3_x86_32`] — the 32-bit variant, used by the paper's
+//!   AVX2-vectorized CPU baseline and the H=32 FPGA configuration;
+//! * [`murmur3_x64_128`] — the 128-bit x64 variant; the paper's "64-bit
+//!   Murmur3 hash" is its low 64 bits ([`murmur3_x64_64`]).
+//!
+//! The implementations follow the reference C++ (`MurmurHash3.cpp`)
+//! exactly and are validated against published test vectors plus the
+//! independent JAX implementation in `python/compile/kernels/ref.py`
+//! (bit-exact agreement is asserted by an integration test through the
+//! PJRT runtime).
+
+use crate::util::bits::{rotl32, rotl64};
+
+const C1_32: u32 = 0xcc9e2d51;
+const C2_32: u32 = 0x1b873593;
+
+#[inline(always)]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85ebca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// MurmurHash3_x86_32 over an arbitrary byte slice.
+pub fn murmur3_x86_32(data: &[u8], seed: u32) -> u32 {
+    let nblocks = data.len() / 4;
+    let mut h1 = seed;
+
+    // Body.
+    for i in 0..nblocks {
+        let mut k1 = u32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+        k1 = k1.wrapping_mul(C1_32);
+        k1 = rotl32(k1, 15);
+        k1 = k1.wrapping_mul(C2_32);
+        h1 ^= k1;
+        h1 = rotl32(h1, 13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xe6546b64);
+    }
+
+    // Tail.
+    let tail = &data[nblocks * 4..];
+    let mut k1: u32 = 0;
+    if !tail.is_empty() {
+        for (i, &b) in tail.iter().enumerate() {
+            k1 ^= (b as u32) << (8 * i);
+        }
+        k1 = k1.wrapping_mul(C1_32);
+        k1 = rotl32(k1, 15);
+        k1 = k1.wrapping_mul(C2_32);
+        h1 ^= k1;
+    }
+
+    // Finalization.
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// MurmurHash3_x86_32 of a single little-endian `u32` key — the hot path
+/// for the paper's 32-bit-word data stream. Equivalent to
+/// `murmur3_x86_32(&key.to_le_bytes(), seed)` but with the 4-byte body
+/// block inlined (no tail).
+#[inline(always)]
+pub fn murmur3_x86_32_u32(key: u32, seed: u32) -> u32 {
+    let mut k1 = key.wrapping_mul(C1_32);
+    k1 = rotl32(k1, 15);
+    k1 = k1.wrapping_mul(C2_32);
+    let mut h1 = seed ^ k1;
+    h1 = rotl32(h1, 13);
+    h1 = h1.wrapping_mul(5).wrapping_add(0xe6546b64);
+    h1 ^= 4; // len
+    fmix32(h1)
+}
+
+const C1_64: u64 = 0x87c37b91114253d5;
+const C2_64: u64 = 0x4cf5aa3d36495958;
+
+#[inline(always)]
+fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xff51afd7ed558ccd);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xc4ceb9fe1a85ec53);
+    k ^= k >> 33;
+    k
+}
+
+/// MurmurHash3_x64_128 over an arbitrary byte slice. Returns `(h1, h2)`.
+pub fn murmur3_x64_128(data: &[u8], seed: u64) -> (u64, u64) {
+    let nblocks = data.len() / 16;
+    let mut h1 = seed;
+    let mut h2 = seed;
+
+    // Body.
+    for i in 0..nblocks {
+        let base = i * 16;
+        let mut k1 = u64::from_le_bytes(data[base..base + 8].try_into().unwrap());
+        let mut k2 = u64::from_le_bytes(data[base + 8..base + 16].try_into().unwrap());
+
+        k1 = k1.wrapping_mul(C1_64);
+        k1 = rotl64(k1, 31);
+        k1 = k1.wrapping_mul(C2_64);
+        h1 ^= k1;
+        h1 = rotl64(h1, 27);
+        h1 = h1.wrapping_add(h2);
+        h1 = h1.wrapping_mul(5).wrapping_add(0x52dce729);
+
+        k2 = k2.wrapping_mul(C2_64);
+        k2 = rotl64(k2, 33);
+        k2 = k2.wrapping_mul(C1_64);
+        h2 ^= k2;
+        h2 = rotl64(h2, 31);
+        h2 = h2.wrapping_add(h1);
+        h2 = h2.wrapping_mul(5).wrapping_add(0x38495ab5);
+    }
+
+    // Tail.
+    let tail = &data[nblocks * 16..];
+    let mut k1: u64 = 0;
+    let mut k2: u64 = 0;
+    if tail.len() > 8 {
+        for (i, &b) in tail[8..].iter().enumerate() {
+            k2 ^= (b as u64) << (8 * i);
+        }
+        k2 = k2.wrapping_mul(C2_64);
+        k2 = rotl64(k2, 33);
+        k2 = k2.wrapping_mul(C1_64);
+        h2 ^= k2;
+    }
+    if !tail.is_empty() {
+        for (i, &b) in tail.iter().take(8).enumerate() {
+            k1 ^= (b as u64) << (8 * i);
+        }
+        k1 = k1.wrapping_mul(C1_64);
+        k1 = rotl64(k1, 31);
+        k1 = k1.wrapping_mul(C2_64);
+        h1 ^= k1;
+    }
+
+    // Finalization.
+    h1 ^= data.len() as u64;
+    h2 ^= data.len() as u64;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = fmix64(h1);
+    h2 = fmix64(h2);
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    (h1, h2)
+}
+
+/// The paper's "64-bit Murmur3": low 64 bits (h1) of MurmurHash3_x64_128.
+#[inline]
+pub fn murmur3_x64_64(data: &[u8], seed: u64) -> u64 {
+    murmur3_x64_128(data, seed).0
+}
+
+/// 64-bit Murmur3 of a single little-endian `u32` key — the hot path for
+/// the 64-bit-hash HLL configuration. Tail-only (len 4 < 16), inlined.
+#[inline(always)]
+pub fn murmur3_x64_64_u32(key: u32, seed: u64) -> u64 {
+    let mut k1 = key as u64;
+    k1 = k1.wrapping_mul(C1_64);
+    k1 = rotl64(k1, 31);
+    k1 = k1.wrapping_mul(C2_64);
+    let mut h1 = seed ^ k1;
+    let mut h2 = seed;
+    h1 ^= 4;
+    h2 ^= 4;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = fmix64(h1);
+    h2 = fmix64(h2);
+    h1 = h1.wrapping_add(h2);
+    let _ = h2;
+    h1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Published MurmurHash3_x86_32 test vectors (Wikipedia / SMHasher).
+    #[test]
+    fn x86_32_published_vectors() {
+        assert_eq!(murmur3_x86_32(b"", 0), 0);
+        assert_eq!(murmur3_x86_32(b"", 1), 0x514E28B7);
+        assert_eq!(murmur3_x86_32(b"", 0xffffffff), 0x81F16F39);
+        assert_eq!(murmur3_x86_32(&[0xff, 0xff, 0xff, 0xff], 0), 0x76293B50);
+        assert_eq!(murmur3_x86_32(&[0x21, 0x43, 0x65, 0x87], 0), 0xF55B516B);
+        assert_eq!(murmur3_x86_32(&[0x21, 0x43, 0x65, 0x87], 0x5082EDEE), 0x2362F9DE);
+        assert_eq!(murmur3_x86_32(&[0x21, 0x43, 0x65], 0), 0x7E4A8634);
+        assert_eq!(murmur3_x86_32(&[0x21, 0x43], 0), 0xA0F7B07A);
+        assert_eq!(murmur3_x86_32(&[0x21], 0), 0x72661CF4);
+        assert_eq!(murmur3_x86_32(&[0, 0, 0, 0], 0), 0x2362F9DE);
+        assert_eq!(murmur3_x86_32(&[0, 0, 0], 0), 0x85F0B427);
+        assert_eq!(murmur3_x86_32(&[0, 0], 0), 0x30F4C306);
+        assert_eq!(murmur3_x86_32(&[0], 0), 0x514E28B7);
+    }
+
+    #[test]
+    fn x86_32_u32_fast_path_matches_general() {
+        for (key, seed) in [
+            (0u32, 0u32),
+            (1, 0),
+            (0xdeadbeef, 0),
+            (0x87654321, 0x5082EDEE),
+            (u32::MAX, 12345),
+        ] {
+            assert_eq!(
+                murmur3_x86_32_u32(key, seed),
+                murmur3_x86_32(&key.to_le_bytes(), seed),
+                "key={key:#x} seed={seed:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn x64_128_empty_is_zero() {
+        assert_eq!(murmur3_x64_128(b"", 0), (0, 0));
+    }
+
+    #[test]
+    fn x64_64_u32_fast_path_matches_general() {
+        for (key, seed) in [
+            (0u32, 0u64),
+            (1, 0),
+            (0xdeadbeef, 0),
+            (0x87654321, 0xabcdef0123456789),
+            (u32::MAX, 42),
+        ] {
+            assert_eq!(
+                murmur3_x64_64_u32(key, seed),
+                murmur3_x64_64(&key.to_le_bytes(), seed),
+                "key={key:#x} seed={seed:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn x64_128_block_and_tail_paths() {
+        // Exercise every tail length 0..=15 plus multi-block bodies; the
+        // check here is self-consistency of incremental lengths (distinct
+        // outputs) — bit-exactness vs the independent JAX implementation
+        // is asserted in python/tests and the runtime integration test.
+        let data: Vec<u8> = (0u8..64).collect();
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..=data.len() {
+            let h = murmur3_x64_128(&data[..len], 0);
+            assert!(seen.insert(h), "collision at len={len}");
+        }
+    }
+
+    #[test]
+    fn seeds_change_output() {
+        assert_ne!(murmur3_x64_64_u32(7, 0), murmur3_x64_64_u32(7, 1));
+        assert_ne!(murmur3_x86_32_u32(7, 0), murmur3_x86_32_u32(7, 1));
+    }
+
+    #[test]
+    fn avalanche_quality_rough() {
+        // Flipping one input bit should flip ~half the output bits on
+        // average (loose 3σ-ish bounds; catches gross implementation bugs).
+        let mut total = 0u32;
+        let n = 256;
+        for i in 0..n {
+            let k = 0x9E3779B9u32.wrapping_mul(i);
+            let h0 = murmur3_x64_64_u32(k, 0);
+            let h1 = murmur3_x64_64_u32(k ^ (1 << (i % 32)), 0);
+            total += (h0 ^ h1).count_ones();
+        }
+        let avg = total as f64 / n as f64;
+        assert!((24.0..40.0).contains(&avg), "poor avalanche: avg flipped bits = {avg}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Multiset operations over sketches — the standard production uses of
+//! HLL that motivate the paper's intro (distinct users across services,
+//! COUNT(DISTINCT ...) over unions): union cardinality (exact via merge)
+//! and intersection/Jaccard estimation via inclusion–exclusion.
+
+use super::sketch::{HllSketch, SketchError};
+
+/// |A ∪ B| — exact at sketch level: merge is lossless.
+pub fn union_cardinality(a: &HllSketch, b: &HllSketch) -> Result<f64, SketchError> {
+    let mut u = a.clone();
+    u.merge(b)?;
+    Ok(u.estimate())
+}
+
+/// |A ∩ B| via inclusion–exclusion: |A| + |B| − |A ∪ B|.
+///
+/// The estimator's error grows with |A ∪ B| / |A ∩ B| (both operands'
+/// σ·|·| errors add); clamped at 0 — small true intersections can come
+/// back negative from estimation noise.
+pub fn intersection_cardinality(a: &HllSketch, b: &HllSketch) -> Result<f64, SketchError> {
+    let union = union_cardinality(a, b)?;
+    Ok((a.estimate() + b.estimate() - union).max(0.0))
+}
+
+/// Jaccard similarity estimate |A ∩ B| / |A ∪ B| ∈ [0, 1].
+pub fn jaccard(a: &HllSketch, b: &HllSketch) -> Result<f64, SketchError> {
+    let union = union_cardinality(a, b)?;
+    if union <= 0.0 {
+        return Ok(0.0);
+    }
+    Ok((intersection_cardinality(a, b)? / union).clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::HllConfig;
+    use crate::stats::DistinctStream;
+
+    /// Build sketches over [0, n_a) and [offset, offset + n_b) with a
+    /// known overlap.
+    fn pair(n_a: u64, n_b: u64, overlap: u64) -> (HllSketch, HllSketch) {
+        let mut a = HllSketch::new(HllConfig::PAPER);
+        let mut b = HllSketch::new(HllConfig::PAPER);
+        let values: Vec<u32> = DistinctStream::new(n_a + n_b - overlap, 1).collect();
+        for &v in &values[..n_a as usize] {
+            a.insert_u32(v);
+        }
+        for &v in &values[(n_a - overlap) as usize..] {
+            b.insert_u32(v);
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn union_matches_truth() {
+        let (a, b) = pair(100_000, 80_000, 30_000);
+        let u = union_cardinality(&a, &b).unwrap();
+        let truth = 150_000.0;
+        assert!((u - truth).abs() / truth < 0.02, "union {u}");
+    }
+
+    #[test]
+    fn intersection_recovers_overlap() {
+        let (a, b) = pair(200_000, 150_000, 100_000);
+        let i = intersection_cardinality(&a, &b).unwrap();
+        // Inclusion–exclusion compounds errors; allow 10%.
+        assert!((i - 100_000.0).abs() / 100_000.0 < 0.10, "intersection {i}");
+    }
+
+    #[test]
+    fn disjoint_sets_intersect_near_zero() {
+        let (a, b) = pair(100_000, 100_000, 0);
+        let i = intersection_cardinality(&a, &b).unwrap();
+        assert!(i < 5_000.0, "phantom intersection {i}");
+        assert!(jaccard(&a, &b).unwrap() < 0.05);
+    }
+
+    #[test]
+    fn identical_sets_jaccard_one() {
+        let mut a = HllSketch::new(HllConfig::PAPER);
+        for v in DistinctStream::new(50_000, 9) {
+            a.insert_u32(v);
+        }
+        let b = a.clone();
+        let j = jaccard(&a, &b).unwrap();
+        assert!((j - 1.0).abs() < 0.02, "jaccard {j}");
+    }
+
+    #[test]
+    fn empty_sketches() {
+        let a = HllSketch::new(HllConfig::PAPER);
+        let b = HllSketch::new(HllConfig::PAPER);
+        assert_eq!(union_cardinality(&a, &b).unwrap(), 0.0);
+        assert_eq!(intersection_cardinality(&a, &b).unwrap(), 0.0);
+        assert_eq!(jaccard(&a, &b).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let a = HllSketch::new(HllConfig::PAPER);
+        let b = HllSketch::new(HllConfig::new(14, crate::hll::HashKind::H64).unwrap());
+        assert!(union_cardinality(&a, &b).is_err());
+    }
+}

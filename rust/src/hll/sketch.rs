@@ -1,0 +1,435 @@
+//! The dense HLL sketch: Algorithm 1's register file M[0..m-1] plus the
+//! aggregation phase (insert) and the merge fold used by the parallel
+//! architecture (Fig 3).
+
+use super::config::{HashKind, HllConfig};
+use super::estimate::{estimate, EstimateBreakdown};
+use super::murmur3::{murmur3_x64_64, murmur3_x64_64_u32, murmur3_x86_32, murmur3_x86_32_u32};
+use crate::util::bits::rho;
+
+/// Errors from sketch operations.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum SketchError {
+    #[error("cannot merge sketches with different configs ({0:?} vs {1:?})")]
+    ConfigMismatch(HllConfig, HllConfig),
+    #[error("serialized sketch is malformed: {0}")]
+    Malformed(String),
+}
+
+/// A dense HyperLogLog sketch.
+///
+/// Registers are stored one-per-byte (the natural software layout); the
+/// bit-packed BRAM layout of the hardware is modelled by
+/// [`crate::fpga::bram`], and the analytic footprint of the *packed*
+/// representation is given by [`HllConfig::footprint_bits`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HllSketch {
+    cfg: HllConfig,
+    regs: Vec<u8>,
+}
+
+impl HllSketch {
+    pub fn new(cfg: HllConfig) -> Self {
+        Self { cfg, regs: vec![0; cfg.m()] }
+    }
+
+    /// The paper's hardware configuration (p=16, 64-bit hash).
+    pub fn paper() -> Self {
+        Self::new(HllConfig::PAPER)
+    }
+
+    #[inline]
+    pub fn config(&self) -> &HllConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    pub fn registers(&self) -> &[u8] {
+        &self.regs
+    }
+
+    /// Split an H-bit hash into (bucket index, rank) — Algorithm 1 lines
+    /// 7–8: idx = first p bits, w = remaining H−p bits, rank = ρ(w).
+    #[inline]
+    pub fn index_and_rank(&self, hash: u64) -> (usize, u8) {
+        let h_bits = self.cfg.hash().bits();
+        let p = self.cfg.p() as u32;
+        let w_bits = h_bits - p;
+        let idx = (hash >> w_bits) as usize; // top p bits
+        let w = hash & ((1u64 << w_bits) - 1); // low H-p bits
+        (idx, rho(w, w_bits))
+    }
+
+    /// Apply a pre-split (index, rank) update: M[idx] = max(M[idx], rank).
+    /// Used by callers that compute the hash themselves (lane-batched CPU
+    /// baseline, FPGA BRAM model).
+    #[inline]
+    pub fn update_register(&mut self, idx: usize, rank: u8) {
+        debug_assert!(rank <= self.cfg.max_rank());
+        let slot = &mut self.regs[idx];
+        if rank > *slot {
+            *slot = rank;
+        }
+    }
+
+    /// Insert a pre-computed H-bit hash (Algorithm 1 line 9).
+    #[inline]
+    pub fn insert_hash(&mut self, hash: u64) {
+        debug_assert!(
+            self.cfg.hash() != HashKind::H32 || hash <= u32::MAX as u64,
+            "32-bit config fed a hash wider than 32 bits"
+        );
+        let (idx, r) = self.index_and_rank(hash);
+        if r > self.regs[idx] {
+            self.regs[idx] = r;
+        }
+    }
+
+    /// Hash a 32-bit data word with the configured Murmur3 variant.
+    #[inline]
+    pub fn hash_u32(&self, v: u32) -> u64 {
+        match self.cfg.hash() {
+            HashKind::H32 => murmur3_x86_32_u32(v, self.cfg.seed() as u32) as u64,
+            HashKind::H64 => murmur3_x64_64_u32(v, self.cfg.seed()),
+        }
+    }
+
+    /// Insert a 32-bit data word (the paper's stream element type).
+    #[inline]
+    pub fn insert_u32(&mut self, v: u32) {
+        let h = self.hash_u32(v);
+        self.insert_hash(h);
+    }
+
+    /// Insert an arbitrary byte string (URLs, user IDs, …).
+    pub fn insert_bytes(&mut self, data: &[u8]) {
+        let h = match self.cfg.hash() {
+            HashKind::H32 => murmur3_x86_32(data, self.cfg.seed() as u32) as u64,
+            HashKind::H64 => murmur3_x64_64(data, self.cfg.seed()),
+        };
+        self.insert_hash(h);
+    }
+
+    /// Insert a whole batch of 32-bit words (the coordinator's unit of
+    /// work). This is the L3 hot path; see `rust/benches/hot_path.rs`.
+    pub fn insert_batch(&mut self, batch: &[u32]) {
+        match self.cfg.hash() {
+            HashKind::H64 => self.insert_batch_h64(batch),
+            HashKind::H32 => {
+                for &v in batch {
+                    self.insert_u32(v);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn insert_batch_h64(&mut self, batch: &[u32]) {
+        // Two-phase, 4-wide interleaved: phase 1 hashes four independent
+        // keys (breaking the serial dependence of one multiply/shift
+        // chain — the software analogue of the FPGA's DSP pipelining),
+        // phase 2 applies the register updates. Measured ~1.9× over the
+        // naive fused loop (see EXPERIMENTS.md §Perf).
+        let seed = self.cfg.seed();
+        let p = self.cfg.p() as u32;
+        let w_bits = 64 - p;
+        let mask = (1u64 << w_bits) - 1;
+        let mut chunks = batch.chunks_exact(4);
+        for chunk in &mut chunks {
+            // Four independent hash chains; LLVM schedules these with
+            // full ILP since there is no cross-lane dependence.
+            let h0 = murmur3_x64_64_u32(chunk[0], seed);
+            let h1 = murmur3_x64_64_u32(chunk[1], seed);
+            let h2 = murmur3_x64_64_u32(chunk[2], seed);
+            let h3 = murmur3_x64_64_u32(chunk[3], seed);
+            for h in [h0, h1, h2, h3] {
+                let idx = (h >> w_bits) as usize;
+                let r = rho(h & mask, w_bits);
+                // idx < 2^p == regs.len() by construction of the shift.
+                let slot = unsafe { self.regs.get_unchecked_mut(idx) };
+                if r > *slot {
+                    *slot = r;
+                }
+            }
+        }
+        for &v in chunks.remainder() {
+            let h = murmur3_x64_64_u32(v, seed);
+            let idx = (h >> w_bits) as usize;
+            let r = rho(h & mask, w_bits);
+            let slot = &mut self.regs[idx];
+            if r > *slot {
+                *slot = r;
+            }
+        }
+    }
+
+    /// Bucket-wise max merge — the "Merge buckets" fold of the parallel
+    /// architecture (Fig 3). Commutative, associative, idempotent.
+    pub fn merge(&mut self, other: &HllSketch) -> Result<(), SketchError> {
+        if self.cfg != other.cfg {
+            return Err(SketchError::ConfigMismatch(self.cfg, other.cfg));
+        }
+        for (a, &b) in self.regs.iter_mut().zip(&other.regs) {
+            if b > *a {
+                *a = b;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of registers still at zero (the V of Algorithm 1 line 13,
+    /// produced in hardware by the "Zero Counter and Bypass" module).
+    pub fn zero_registers(&self) -> usize {
+        self.regs.iter().filter(|&&r| r == 0).count()
+    }
+
+    /// Cardinality estimate with all Algorithm-1 corrections.
+    pub fn estimate(&self) -> f64 {
+        estimate(&self.cfg, &self.regs).estimate
+    }
+
+    /// Full estimate breakdown (raw E, V, which correction fired).
+    pub fn estimate_breakdown(&self) -> EstimateBreakdown {
+        estimate(&self.cfg, &self.regs)
+    }
+
+    /// Reset all registers to zero (Algorithm 1, initialization phase).
+    pub fn clear(&mut self) {
+        self.regs.iter_mut().for_each(|r| *r = 0);
+    }
+
+    /// Load a register file produced elsewhere (e.g. by the PJRT-executed
+    /// JAX artifact or the FPGA simulator); lengths and value range are
+    /// validated.
+    pub fn from_registers(cfg: HllConfig, regs: Vec<u8>) -> Result<Self, SketchError> {
+        if regs.len() != cfg.m() {
+            return Err(SketchError::Malformed(format!(
+                "expected {} registers, got {}",
+                cfg.m(),
+                regs.len()
+            )));
+        }
+        if let Some(&bad) = regs.iter().find(|&&r| r > cfg.max_rank()) {
+            return Err(SketchError::Malformed(format!(
+                "register value {bad} exceeds max rank {}",
+                cfg.max_rank()
+            )));
+        }
+        Ok(Self { cfg, regs })
+    }
+
+    /// Serialize to the simple on-wire format used by the coordinator
+    /// when shipping partial sketches: `[p, hash_bits, regs...]`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + self.regs.len());
+        out.push(self.cfg.p());
+        out.push(self.cfg.hash().bits() as u8);
+        out.extend_from_slice(&self.regs);
+        out
+    }
+
+    /// Inverse of [`HllSketch::to_bytes`]. The seed is taken as 0 (the
+    /// only seed used on the wire).
+    pub fn from_bytes(data: &[u8]) -> Result<Self, SketchError> {
+        if data.len() < 2 {
+            return Err(SketchError::Malformed("truncated header".into()));
+        }
+        let p = data[0];
+        let hash = match data[1] {
+            32 => HashKind::H32,
+            64 => HashKind::H64,
+            other => return Err(SketchError::Malformed(format!("bad hash width {other}"))),
+        };
+        let cfg = HllConfig::new(p, hash)
+            .map_err(|e| SketchError::Malformed(e.to_string()))?;
+        Self::from_registers(cfg, data[2..].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256StarStar;
+
+    fn cfg(p: u8, h: HashKind) -> HllConfig {
+        HllConfig::new(p, h).unwrap()
+    }
+
+    #[test]
+    fn index_and_rank_split() {
+        let s = HllSketch::new(cfg(16, HashKind::H64));
+        // Top 16 bits are the index.
+        let (idx, r) = s.index_and_rank(0xABCD_0000_0000_0001);
+        assert_eq!(idx, 0xABCD);
+        assert_eq!(r, 48); // 47 leading zeros in the low 48 bits + 1
+        let (_, r) = s.index_and_rank(0xABCD_0000_0000_0000);
+        assert_eq!(r, 49); // w == 0 -> max rank
+        let (_, r) = s.index_and_rank(0xABCD_8000_0000_0000);
+        assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn index_and_rank_split_h32() {
+        let s = HllSketch::new(cfg(14, HashKind::H32));
+        let (idx, r) = s.index_and_rank(0xFFFF_FFFF >> 0);
+        assert_eq!(idx, (0xFFFFFFFFu64 >> 18) as usize);
+        assert_eq!(r, 1);
+        let (idx, r) = s.index_and_rank(0);
+        assert_eq!(idx, 0);
+        assert_eq!(r, 19); // 18-bit w == 0 -> max rank 19
+    }
+
+    #[test]
+    fn insert_is_monotone_and_idempotent() {
+        let mut s = HllSketch::paper();
+        s.insert_u32(42);
+        let regs1 = s.registers().to_vec();
+        s.insert_u32(42);
+        assert_eq!(s.registers(), &regs1[..], "re-inserting must not change state");
+    }
+
+    #[test]
+    fn duplicates_do_not_grow_estimate() {
+        let mut s = HllSketch::paper();
+        for v in 0..1000u32 {
+            s.insert_u32(v);
+        }
+        let e1 = s.estimate();
+        for v in 0..1000u32 {
+            s.insert_u32(v); // same values again
+        }
+        assert_eq!(s.estimate(), e1);
+    }
+
+    #[test]
+    fn batch_insert_equals_loop_insert() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let batch: Vec<u32> = (0..4096).map(|_| rng.next_u32()).collect();
+        for h in [HashKind::H32, HashKind::H64] {
+            let mut a = HllSketch::new(cfg(16, h));
+            let mut b = HllSketch::new(cfg(16, h));
+            a.insert_batch(&batch);
+            for &v in &batch {
+                b.insert_u32(v);
+            }
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn merge_properties() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(17);
+        let mk = |rng: &mut Xoshiro256StarStar| {
+            let mut s = HllSketch::new(cfg(12, HashKind::H64));
+            for _ in 0..500 {
+                s.insert_u32(rng.next_u32());
+            }
+            s
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let c = mk(&mut rng);
+
+        // Commutative.
+        let mut ab = a.clone();
+        ab.merge(&b).unwrap();
+        let mut ba = b.clone();
+        ba.merge(&a).unwrap();
+        assert_eq!(ab, ba);
+
+        // Associative.
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c).unwrap();
+        let mut bc = b.clone();
+        bc.merge(&c).unwrap();
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc).unwrap();
+        assert_eq!(ab_c, a_bc);
+
+        // Idempotent.
+        let mut aa = a.clone();
+        aa.merge(&a).unwrap();
+        assert_eq!(aa, a);
+    }
+
+    #[test]
+    fn merge_equals_union_stream() {
+        // Sketch(A) ∪ Sketch(B) == Sketch(A ++ B): the property Fig 3's
+        // parallel architecture relies on.
+        let mut rng = Xoshiro256StarStar::seed_from_u64(23);
+        let xs: Vec<u32> = (0..2000).map(|_| rng.next_u32()).collect();
+        let (left, right) = xs.split_at(800);
+        let mut sa = HllSketch::paper();
+        let mut sb = HllSketch::paper();
+        let mut sall = HllSketch::paper();
+        sa.insert_batch(left);
+        sb.insert_batch(right);
+        sall.insert_batch(&xs);
+        sa.merge(&sb).unwrap();
+        assert_eq!(sa, sall);
+    }
+
+    #[test]
+    fn merge_rejects_config_mismatch() {
+        let mut a = HllSketch::new(cfg(14, HashKind::H64));
+        let b = HllSketch::new(cfg(16, HashKind::H64));
+        assert!(matches!(a.merge(&b), Err(SketchError::ConfigMismatch(..))));
+        let c = HllSketch::new(cfg(14, HashKind::H32));
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn zero_registers_counts() {
+        let mut s = HllSketch::new(cfg(8, HashKind::H64));
+        assert_eq!(s.zero_registers(), 256);
+        s.insert_u32(1);
+        assert_eq!(s.zero_registers(), 255);
+        s.clear();
+        assert_eq!(s.zero_registers(), 256);
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let mut s = HllSketch::new(cfg(10, HashKind::H32));
+        for v in 0..5000u32 {
+            s.insert_u32(v.wrapping_mul(2654435761));
+        }
+        let bytes = s.to_bytes();
+        let s2 = HllSketch::from_bytes(&bytes).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(HllSketch::from_bytes(&[]).is_err());
+        assert!(HllSketch::from_bytes(&[16]).is_err());
+        assert!(HllSketch::from_bytes(&[16, 48, 0, 0]).is_err()); // bad width
+        assert!(HllSketch::from_bytes(&[2, 64]).is_err()); // bad p
+        // Wrong register count.
+        assert!(HllSketch::from_bytes(&[16, 64, 0, 0, 0]).is_err());
+        // Register exceeding max rank.
+        let mut bytes = vec![4u8, 64];
+        bytes.extend(vec![0u8; 16]);
+        bytes[2] = 62; // max rank for p=4,H=64 is 61
+        assert!(HllSketch::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn estimate_rough_accuracy_mid_range() {
+        // 100k distinct values at p=16 should estimate within ~3σ of
+        // truth (σ = 0.41%); use a loose 2% bound to stay deterministic.
+        let mut s = HllSketch::paper();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(77);
+        let n = 100_000u32;
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < n as usize {
+            seen.insert(rng.next_u32());
+        }
+        for &v in &seen {
+            s.insert_u32(v);
+        }
+        let e = s.estimate();
+        let err = (e - n as f64).abs() / n as f64;
+        assert!(err < 0.02, "estimate {e} vs truth {n}: rel err {err}");
+    }
+}

@@ -1,0 +1,327 @@
+//! Sparse HLL representation (HyperLogLog++-style, Heule et al. [3] in
+//! the paper's bibliography) — an extension beyond the paper's dense
+//! hardware sketch.
+//!
+//! For small cardinalities the dense register file (64 KiB of registers at
+//! p=16) is mostly zeros; the sparse mode stores (index, rank) pairs in a
+//! compact sorted buffer and upgrades to the dense representation when the
+//! buffer would exceed the dense footprint. This is the standard software
+//! optimization used by production HLL implementations (BigQuery's
+//! HLL++, Redis), and it matters for the coordinator when many per-
+//! connection sketches are alive at once.
+
+use super::config::HllConfig;
+use super::sketch::{HllSketch, SketchError};
+
+/// Encoded sparse entry: `idx << 8 | rank` (rank always fits in 8 bits —
+/// max rank is ≤ 61 for every admissible config).
+#[inline]
+fn encode(idx: usize, rank: u8) -> u64 {
+    ((idx as u64) << 8) | rank as u64
+}
+
+#[inline]
+fn decode(e: u64) -> (usize, u8) {
+    ((e >> 8) as usize, (e & 0xFF) as u8)
+}
+
+/// A cardinality sketch that starts sparse and upgrades to dense.
+#[derive(Debug, Clone)]
+pub enum AdaptiveSketch {
+    Sparse(SparseHll),
+    Dense(HllSketch),
+}
+
+/// Sparse HLL state: a hash-map-free sorted vec of encoded entries with a
+/// small unsorted staging buffer (amortized O(1) inserts).
+#[derive(Debug, Clone)]
+pub struct SparseHll {
+    cfg: HllConfig,
+    /// Sorted by index, one entry per index, rank = max seen.
+    sorted: Vec<u64>,
+    /// Unsorted recent inserts, merged into `sorted` when full.
+    staging: Vec<u64>,
+    staging_cap: usize,
+}
+
+impl SparseHll {
+    pub fn new(cfg: HllConfig) -> Self {
+        Self { cfg, sorted: Vec::new(), staging: Vec::new(), staging_cap: 256 }
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        &self.cfg
+    }
+
+    /// Number of distinct indices currently tracked (after compaction).
+    pub fn len(&mut self) -> usize {
+        self.compact();
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty() && self.staging.is_empty()
+    }
+
+    /// Approximate heap bytes used — the upgrade policy input.
+    pub fn memory_bytes(&self) -> usize {
+        (self.sorted.capacity() + self.staging.capacity()) * std::mem::size_of::<u64>()
+    }
+
+    pub fn insert_hash(&mut self, hash: u64) {
+        // Reuse the dense split logic via a transient sketch-less path.
+        let h_bits = self.cfg.hash().bits();
+        let p = self.cfg.p() as u32;
+        let w_bits = h_bits - p;
+        let idx = (hash >> w_bits) as usize;
+        let w = hash & ((1u64 << w_bits) - 1);
+        let rank = crate::util::bits::rho(w, w_bits);
+        self.staging.push(encode(idx, rank));
+        if self.staging.len() >= self.staging_cap {
+            self.compact();
+        }
+    }
+
+    /// Merge staging into the sorted run, keeping max rank per index.
+    fn compact(&mut self) {
+        if self.staging.is_empty() {
+            return;
+        }
+        self.staging.sort_unstable_by_key(|&e| (e >> 8, std::cmp::Reverse(e & 0xFF)));
+        let mut merged = Vec::with_capacity(self.sorted.len() + self.staging.len());
+        let mut i = 0;
+        let mut j = 0;
+        let take_max = |merged: &mut Vec<u64>, e: u64| {
+            match merged.last_mut() {
+                Some(last) if *last >> 8 == e >> 8 => {
+                    if (e & 0xFF) > (*last & 0xFF) {
+                        *last = e;
+                    }
+                }
+                _ => merged.push(e),
+            }
+        };
+        while i < self.sorted.len() && j < self.staging.len() {
+            if self.sorted[i] >> 8 <= self.staging[j] >> 8 {
+                take_max(&mut merged, self.sorted[i]);
+                i += 1;
+            } else {
+                take_max(&mut merged, self.staging[j]);
+                j += 1;
+            }
+        }
+        merged.extend(self.sorted[i..].iter().copied().map(|e| e));
+        for &e in &self.staging[j..] {
+            take_max(&mut merged, e);
+        }
+        // The tail extend above may have appended duplicates of the last
+        // staging index; normalize with a final dedup pass by index.
+        let mut out: Vec<u64> = Vec::with_capacity(merged.len());
+        for e in merged {
+            take_max(&mut out, e);
+        }
+        self.sorted = out;
+        self.staging.clear();
+    }
+
+    /// Materialize the equivalent dense sketch.
+    pub fn to_dense(&mut self) -> HllSketch {
+        self.compact();
+        let mut regs = vec![0u8; self.cfg.m()];
+        for &e in &self.sorted {
+            let (idx, rank) = decode(e);
+            if rank > regs[idx] {
+                regs[idx] = rank;
+            }
+        }
+        HllSketch::from_registers(self.cfg, regs).expect("sparse entries are in range")
+    }
+
+    /// Exact LinearCounting-style estimate from the sparse state: with V =
+    /// m − |distinct indices| empty buckets.
+    pub fn estimate(&mut self) -> f64 {
+        self.compact();
+        let m = self.cfg.m();
+        let v = m - self.sorted.len();
+        if v == 0 {
+            return self.to_dense().estimate();
+        }
+        super::estimate::linear_counting(m, v)
+    }
+}
+
+impl AdaptiveSketch {
+    pub fn new(cfg: HllConfig) -> Self {
+        AdaptiveSketch::Sparse(SparseHll::new(cfg))
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        match self {
+            AdaptiveSketch::Sparse(s) => s.config(),
+            AdaptiveSketch::Dense(d) => d.config(),
+        }
+    }
+
+    /// Dense footprint the sparse mode must stay under to pay off.
+    fn upgrade_threshold(&self) -> usize {
+        self.config().m() // bytes: one u8 register per bucket
+    }
+
+    pub fn insert_hash(&mut self, hash: u64) {
+        match self {
+            AdaptiveSketch::Dense(d) => d.insert_hash(hash),
+            AdaptiveSketch::Sparse(s) => {
+                s.insert_hash(hash);
+                if s.memory_bytes() > self.upgrade_threshold() {
+                    self.upgrade();
+                }
+            }
+        }
+    }
+
+    pub fn insert_u32(&mut self, v: u32) {
+        let h = match self {
+            AdaptiveSketch::Sparse(s) => {
+                // Hash with the same function the dense path uses.
+                HllSketch::new(*s.config()).hash_u32(v)
+            }
+            AdaptiveSketch::Dense(d) => d.hash_u32(v),
+        };
+        self.insert_hash(h);
+    }
+
+    fn upgrade(&mut self) {
+        if let AdaptiveSketch::Sparse(s) = self {
+            let dense = s.to_dense();
+            *self = AdaptiveSketch::Dense(dense);
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, AdaptiveSketch::Sparse(_))
+    }
+
+    pub fn estimate(&mut self) -> f64 {
+        match self {
+            AdaptiveSketch::Sparse(s) => s.estimate(),
+            AdaptiveSketch::Dense(d) => d.estimate(),
+        }
+    }
+
+    /// Convert to dense unconditionally (needed before merging with a
+    /// dense partner).
+    pub fn into_dense(mut self) -> HllSketch {
+        match &mut self {
+            AdaptiveSketch::Sparse(s) => s.to_dense(),
+            AdaptiveSketch::Dense(d) => d.clone(),
+        }
+    }
+
+    pub fn merge_into(&mut self, other: AdaptiveSketch) -> Result<(), SketchError> {
+        let other = other.into_dense();
+        self.upgrade_to_dense_in_place();
+        match self {
+            AdaptiveSketch::Dense(d) => d.merge(&other),
+            AdaptiveSketch::Sparse(_) => unreachable!(),
+        }
+    }
+
+    fn upgrade_to_dense_in_place(&mut self) {
+        if self.is_sparse() {
+            self.upgrade();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::config::HashKind;
+    use crate::util::Xoshiro256StarStar;
+
+    fn cfg() -> HllConfig {
+        HllConfig::new(16, HashKind::H64).unwrap()
+    }
+
+    #[test]
+    fn sparse_matches_dense_exactly() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let mut sparse = SparseHll::new(cfg());
+        let mut dense = HllSketch::new(cfg());
+        for _ in 0..3000 {
+            let v = rng.next_u32();
+            dense.insert_u32(v);
+            sparse.insert_hash(dense.hash_u32(v));
+        }
+        assert_eq!(sparse.to_dense(), dense);
+    }
+
+    #[test]
+    fn sparse_estimate_small_range_accurate() {
+        let mut sparse = SparseHll::new(cfg());
+        let dense_probe = HllSketch::new(cfg());
+        for v in 0..1000u32 {
+            sparse.insert_hash(dense_probe.hash_u32(v));
+        }
+        let e = sparse.estimate();
+        assert!((e - 1000.0).abs() / 1000.0 < 0.05, "est {e}");
+    }
+
+    #[test]
+    fn adaptive_upgrades_under_load() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(2);
+        let mut a = AdaptiveSketch::new(cfg());
+        assert!(a.is_sparse());
+        for _ in 0..50_000 {
+            a.insert_u32(rng.next_u32());
+        }
+        assert!(!a.is_sparse(), "should have upgraded to dense");
+    }
+
+    #[test]
+    fn adaptive_equals_plain_dense() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let mut a = AdaptiveSketch::new(cfg());
+        let mut d = HllSketch::new(cfg());
+        for _ in 0..30_000 {
+            let v = rng.next_u32();
+            a.insert_u32(v);
+            d.insert_u32(v);
+        }
+        assert_eq!(a.into_dense(), d);
+    }
+
+    #[test]
+    fn adaptive_merge() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(4);
+        let mut a = AdaptiveSketch::new(cfg());
+        let mut b = AdaptiveSketch::new(cfg());
+        let mut all = HllSketch::new(cfg());
+        for i in 0..10_000 {
+            let v = rng.next_u32();
+            if i % 2 == 0 {
+                a.insert_u32(v);
+            } else {
+                b.insert_u32(v);
+            }
+            all.insert_u32(v);
+        }
+        a.merge_into(b).unwrap();
+        assert_eq!(a.into_dense(), all);
+    }
+
+    #[test]
+    fn compaction_dedups_staging_duplicates() {
+        let mut sparse = SparseHll::new(cfg());
+        let probe = HllSketch::new(cfg());
+        // Insert the same few values repeatedly across compaction
+        // boundaries.
+        for _ in 0..10 {
+            for v in 0..100u32 {
+                sparse.insert_hash(probe.hash_u32(v));
+            }
+        }
+        let n = sparse.len();
+        assert!(n <= 100, "dedup failed: {n} entries for 100 values");
+    }
+}

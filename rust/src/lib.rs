@@ -1,0 +1,33 @@
+//! # hll-fpga — HyperLogLog Sketch Acceleration, reproduced in software
+//!
+//! A reproduction of *"HyperLogLog Sketch Acceleration on FPGA"*
+//! (Kulkarni et al., 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — the Murmur3 hash + rank
+//!   hot-spot as Pallas kernels (interpret mode, validated vs `ref.py`).
+//! * **Layer 2** (`python/compile/model.py`) — the HLL aggregation and
+//!   estimation compute graph in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate) — the coordinator: a streaming orchestrator
+//!   mirroring the paper's multi-pipelined FPGA architecture, plus every
+//!   substrate the evaluation needs (FPGA dataflow simulator, PCIe/XDMA
+//!   model, 100 Gbit/s TCP network simulator, optimized CPU baseline,
+//!   statistical profiling harness) and a PJRT runtime that executes the
+//!   Layer-2 artifacts with Python never on the data path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module and bench target.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod cpu_baseline;
+pub mod fpga;
+pub mod hll;
+pub mod net;
+pub mod pcie;
+pub mod proptest_lite;
+pub mod repro;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub use hll::{HashKind, HllConfig, HllSketch};

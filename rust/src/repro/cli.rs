@@ -1,0 +1,255 @@
+//! Hand-rolled CLI (the offline crate set has no `clap`).
+//!
+//! ```text
+//! hll-fpga repro <fig1|table1|table2|table3|fig4a|fig4b|table4|all> [--full] [--trials N] [--mb N]
+//! hll-fpga estimate [--n N | --file PATH] [--pipelines K] [--engine native|xla] [--batch B]
+//! hll-fpga info
+//! ```
+
+use crate::coordinator::{run_stream, CoordinatorConfig};
+use crate::cpu_baseline::ScalingModel;
+use crate::runtime::{EngineKind, Manifest, XlaService};
+use crate::stats::DistinctStream;
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--key`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(raw: &[String]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // Boolean flag if next token is absent or another flag.
+                if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn num_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{name}: {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+hll-fpga — HyperLogLog Sketch Acceleration (Kulkarni et al. 2020) reproduction
+
+USAGE:
+  hll-fpga repro <target> [--full] [--trials N] [--mb N]
+      target: fig1 | table1 | table2 | table3 | fig4a | fig4b | table4 | all
+      --full     extend fig1 to ~10^9-scale cardinalities (slow)
+      --trials N trials per fig1 point (default 5)
+      --mb N     data volume per simulated run (default 64 for fig4a, 8 for table4)
+  hll-fpga estimate [--n N | --file PATH] [--pipelines K] [--engine native|xla] [--batch B]
+      count distinct 32-bit words from a synthetic stream (--n) or a
+      little-endian binary file (--file)
+  hll-fpga info
+  hll-fpga help
+";
+
+pub fn run(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(raw).map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        None | Some("help") => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some("repro") => cmd_repro(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("info") => cmd_info(),
+        Some(other) => {
+            anyhow::bail!("unknown command '{other}'\n{USAGE}");
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("repro needs a target\n{USAGE}"))?;
+    let all = target == "all";
+    let mut matched = all;
+
+    if all || target == "table1" {
+        matched = true;
+        println!("{}", super::tables::table1());
+    }
+    if all || target == "table2" {
+        matched = true;
+        println!("{}", super::tables::table2());
+    }
+    if all || target == "table3" {
+        matched = true;
+        println!("{}", super::tables::table3());
+    }
+    if all || target == "fig1" {
+        matched = true;
+        let opts = super::fig1::Fig1Options {
+            full: args.bool_flag("full"),
+            trials: args.num_flag("trials", 5usize).map_err(anyhow::Error::msg)?,
+            max_exp: None,
+        };
+        let curves = super::fig1::curves(&opts);
+        println!("{}", super::fig1::render(&curves));
+        for (claim, holds, detail) in super::fig1::check_claims(&curves) {
+            println!("  [{}] {claim} ({detail})", if holds { "ok" } else { "MISS" });
+        }
+    }
+    if all || target == "fig4a" {
+        matched = true;
+        let mb: u64 = args.num_flag("mb", 512u64).map_err(anyhow::Error::msg)?;
+        let rows = super::fig4::fig4a_rows(mb << 20);
+        println!("{}", super::fig4::render_fig4a(&rows));
+    }
+    if all || target == "fig4b" {
+        matched = true;
+        let model = ScalingModel::paper_xeon();
+        let rows = super::fig4::fig4b_rows(&model);
+        println!("{}", super::fig4::render_fig4b(&rows, "paper Xeon E5-2630 v3 model"));
+    }
+    if all || target == "table4" {
+        matched = true;
+        let mb: u64 = args.num_flag("mb", 8u64).map_err(anyhow::Error::msg)?;
+        let rows = super::table4::rows(mb << 20);
+        println!("{}", super::table4::render(&rows));
+    }
+    if !matched {
+        anyhow::bail!("unknown repro target '{target}'\n{USAGE}");
+    }
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+    let pipelines: usize = args.num_flag("pipelines", 4usize).map_err(anyhow::Error::msg)?;
+    let batch: usize = args.num_flag("batch", 8192usize).map_err(anyhow::Error::msg)?;
+    let engine = match args.flag("engine").unwrap_or("native") {
+        "native" => EngineKind::Native,
+        "xla" => EngineKind::Xla,
+        other => anyhow::bail!("unknown engine '{other}' (native|xla)"),
+    };
+
+    let words: Vec<u32> = if let Some(path) = args.flag("file") {
+        let bytes = std::fs::read(path)?;
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    } else {
+        let n: u64 = args.num_flag("n", 1_000_000u64).map_err(anyhow::Error::msg)?;
+        DistinctStream::new(n, 0xD15C0).collect()
+    };
+
+    let cfg = CoordinatorConfig {
+        pipelines,
+        batch_size: batch,
+        engine,
+        ..CoordinatorConfig::default()
+    };
+    let service = if engine == EngineKind::Xla { Some(XlaService::start()?) } else { None };
+    let handle = service.as_ref().map(|s| s.handle());
+    let summary = run_stream(cfg, handle, &words)?;
+    println!("engine:          {:?}", engine);
+    println!("pipelines:       {pipelines}");
+    println!("words in:        {}", crate::util::fmt::count(summary.metrics.words_in));
+    println!("estimate:        {:.1}", summary.estimate.estimate);
+    println!("raw estimate:    {:.1}", summary.estimate.raw);
+    println!("zero registers:  {}", summary.estimate.zero_registers);
+    println!("elapsed:         {}", crate::util::fmt::duration_s(summary.elapsed.as_secs_f64()));
+    println!(
+        "throughput:      {}",
+        crate::util::fmt::gbytes_per_s(summary.throughput_bytes_per_s())
+    );
+    println!("backpressure:    {} stalls", summary.metrics.backpressure_stalls);
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("hll-fpga — three-layer reproduction of 'HyperLogLog Sketch Acceleration on FPGA'");
+    println!("paper config: p=16, 64-bit Murmur3, m=65536, sigma=0.41%");
+    match Manifest::load_default() {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir().display());
+            for e in m.entries() {
+                println!(
+                    "  {:<44} kind={:?} p={} H={} batch={}",
+                    e.name, e.kind, e.p, e.h_bits, e.batch
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let dev = crate::fpga::Device::XCVU9P;
+    let model = crate::fpga::ResourceModel::paper_h64_p16();
+    println!(
+        "device model: {} (max {} pipelines, {}-bound)",
+        dev.name,
+        model.max_pipelines(&dev),
+        model.binding_resource(&dev)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv(&["repro", "fig1", "--trials", "3", "--full"])).unwrap();
+        assert_eq!(a.positional, vec!["repro", "fig1"]);
+        assert_eq!(a.flag("trials"), Some("3"));
+        assert!(a.bool_flag("full"));
+        assert_eq!(a.num_flag("trials", 5usize).unwrap(), 3);
+        assert_eq!(a.num_flag("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert!(run(&argv(&["help"])).is_ok());
+        assert!(run(&[]).is_ok());
+    }
+
+    #[test]
+    fn table_targets_run() {
+        assert!(run(&argv(&["repro", "table1"])).is_ok());
+        assert!(run(&argv(&["repro", "table2"])).is_ok());
+        assert!(run(&argv(&["repro", "table3"])).is_ok());
+    }
+}

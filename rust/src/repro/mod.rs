@@ -1,0 +1,8 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §3 maps each to its module), plus the CLI that drives them.
+
+pub mod cli;
+pub mod fig1;
+pub mod fig4;
+pub mod table4;
+pub mod tables;

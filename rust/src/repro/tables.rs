@@ -1,0 +1,107 @@
+//! Tables I–III: didactic hash table, memory footprint, FPGA resources.
+
+use crate::fpga::{Device, ResourceModel};
+use crate::hll::{HashKind, HllConfig};
+use crate::util::fmt::TextTable;
+
+/// Table I — the didactic 4-bit hash-value table (Section III).
+pub fn table1() -> String {
+    let mut out = String::new();
+    out.push_str("Table I — 4-bit hash values with leading-zero counts\n\n");
+    let mut t = TextTable::new(vec!["hash", "leading zeros", "rank ρ (within 4 bits)"]);
+    for v in 0u8..16 {
+        let lz = crate::util::bits::leading_zeros_width(v as u64, 4);
+        t.row(vec![format!("{v:04b}"), lz.to_string(), (lz + 1).to_string()]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\nP(≥1 leading zero) = 8/16, P(≥2) = 4/16, P(≥3) = 2/16, P(4) = 1/16 —\n\
+         observing k leading zeros suggests ≈ 2^k distinct elements.\n",
+    );
+    out
+}
+
+/// Table II — HyperLogLog memory footprint (eq. (3)).
+pub fn table2() -> String {
+    let mut out = String::new();
+    out.push_str("Table II — HyperLogLog memory footprint\n\n");
+    let mut t = TextTable::new(vec![
+        "p [bits]",
+        "H [bits]",
+        "register size [bits]",
+        "total memory [KiB]",
+    ]);
+    for p in [14u8, 16] {
+        for h in [HashKind::H32, HashKind::H64] {
+            let cfg = HllConfig::new(p, h).unwrap();
+            t.row(vec![
+                p.to_string(),
+                h.bits().to_string(),
+                cfg.register_bits().to_string(),
+                format!("{:.0}", cfg.footprint_kib()),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str("\nPaper values: (14,32)→5b/10KiB, (14,64)→6b/12KiB, (16,32)→5b/40KiB, (16,64)→6b/48KiB.\n");
+    out
+}
+
+/// Table III — resource usage vs #pipelines on the XCVU9P.
+pub fn table3() -> String {
+    let model = ResourceModel::paper_h64_p16();
+    let dev = Device::XCVU9P;
+    let mut out = String::new();
+    out.push_str("Table III — resource usage of HLL vs #pipelines (HLL64, p=16, XCVU9P)\n\n");
+    let mut t = TextTable::new(vec!["Pipelines", "BRAM", "DSP", "LUT", "FF"]);
+    for k in [1usize, 2, 4, 8, 10, 16] {
+        let u = model.usage(k);
+        let pct = u.utilization(&dev);
+        t.row(vec![
+            k.to_string(),
+            format!("{} / {:.2}%", u.bram, pct.bram),
+            format!("{} / {:.2}%", u.dsp, pct.dsp),
+            format!("{:.1}K / {:.2}%", u.lut as f64 / 1000.0, pct.lut),
+            format!("{:.1}K / {:.2}%", u.ff as f64 / 1000.0, pct.ff),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nScaling limit on {}: {} pipelines ({}-bound).\n",
+        dev.name,
+        model.max_pipelines(&dev),
+        model.binding_resource(&dev)
+    ));
+    out.push_str("Paper values (k=1): BRAM 12/0.55%, DSP 84/1.22%, LUT 4.5K/0.38%, FF 5.5K/0.23%.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_all_16_rows() {
+        let t = table1();
+        assert!(t.contains("0000"));
+        assert!(t.contains("1111"));
+        assert!(t.lines().count() > 18);
+    }
+
+    #[test]
+    fn table2_matches_paper_numbers() {
+        let t = table2();
+        for v in ["10", "12", "40", "48"] {
+            assert!(t.contains(v), "missing {v} KiB");
+        }
+    }
+
+    #[test]
+    fn table3_matches_paper_dsp_column() {
+        let t = table3();
+        for v in ["84", "152", "288", "560", "696", "1104"] {
+            assert!(t.contains(v), "missing DSP count {v}");
+        }
+        assert!(t.contains("DSP-bound"));
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact manifest: the index of AOT-lowered HLO modules produced by
+//! `python/compile/aot.py` (`make artifacts`).
+//!
+//! The manifest is a TSV (dependency-free to parse) with one row per
+//! artifact: name, file, kind, p, h_bits, batch, m, outputs.
+
+use std::path::{Path, PathBuf};
+
+use crate::hll::HashKind;
+
+/// What a lowered module computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(keys i32[batch], regs i32[m]) -> regs i32[m]`
+    Aggregate,
+    /// `(regs i32[m]) -> f64[3] = (raw, V, estimate)`
+    Estimate,
+    /// `(a i32[m], b i32[m]) -> i32[m]`
+    Merge,
+    /// `(keys i32[batch], regs i32[m]) -> (regs i32[m], f64[3])`
+    AggregateEstimate,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "aggregate" => Some(Self::Aggregate),
+            "estimate" => Some(Self::Estimate),
+            "merge" => Some(Self::Merge),
+            "aggregate_estimate" => Some(Self::AggregateEstimate),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub p: u8,
+    /// 0 for kind == Merge (hash-agnostic).
+    pub h_bits: u32,
+    /// 0 for kinds without a key input.
+    pub batch: usize,
+    pub m: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("artifacts manifest not found at {0} — run `make artifacts`")]
+    NotFound(PathBuf),
+    #[error("manifest parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("io error reading manifest: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Default artifacts directory: `$HLL_ARTIFACTS` if set, else
+    /// `<repo>/artifacts` (located via the compile-time manifest dir so
+    /// tests and examples work from any cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("HLL_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load_default() -> Result<Self, ManifestError> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let path = dir.join("manifest.tsv");
+        if !path.exists() {
+            return Err(ManifestError::NotFound(path));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| ManifestError::Parse(0, "empty manifest".into()))?;
+        let cols: Vec<&str> = header.split('\t').collect();
+        let idx = |name: &str| -> Result<usize, ManifestError> {
+            cols.iter()
+                .position(|c| *c == name)
+                .ok_or_else(|| ManifestError::Parse(0, format!("missing column {name}")))
+        };
+        let (ci_name, ci_file, ci_kind, ci_p, ci_h, ci_b, ci_m) = (
+            idx("name")?,
+            idx("file")?,
+            idx("kind")?,
+            idx("p")?,
+            idx("h_bits")?,
+            idx("batch")?,
+            idx("m")?,
+        );
+        let mut entries = Vec::new();
+        for (lineno, line) in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            let get = |i: usize| -> Result<&str, ManifestError> {
+                f.get(i)
+                    .copied()
+                    .ok_or_else(|| ManifestError::Parse(lineno + 1, "short row".into()))
+            };
+            let parse_num = |s: &str| -> Result<u64, ManifestError> {
+                s.parse()
+                    .map_err(|_| ManifestError::Parse(lineno + 1, format!("bad number '{s}'")))
+            };
+            let kind = ArtifactKind::parse(get(ci_kind)?).ok_or_else(|| {
+                ManifestError::Parse(lineno + 1, format!("unknown kind '{}'", f[ci_kind]))
+            })?;
+            let meta = ArtifactMeta {
+                name: get(ci_name)?.to_string(),
+                file: get(ci_file)?.to_string(),
+                kind,
+                p: parse_num(get(ci_p)?)? as u8,
+                h_bits: parse_num(get(ci_h)?)? as u32,
+                batch: parse_num(get(ci_b)?)? as usize,
+                m: parse_num(get(ci_m)?)? as usize,
+            };
+            if meta.m != 1usize << meta.p {
+                return Err(ManifestError::Parse(
+                    lineno + 1,
+                    format!("m={} inconsistent with p={}", meta.m, meta.p),
+                ));
+            }
+            entries.push(meta);
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    fn hash_bits(h: HashKind) -> u32 {
+        h.bits()
+    }
+
+    /// The aggregate artifact for (p, H) with the largest batch ≤ `want`,
+    /// falling back to the smallest available batch.
+    pub fn find_aggregate(&self, p: u8, h: HashKind, want_batch: usize) -> Option<&ArtifactMeta> {
+        let h_bits = Self::hash_bits(h);
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Aggregate && e.p == p && e.h_bits == h_bits)
+            .collect();
+        candidates.sort_by_key(|e| e.batch);
+        candidates
+            .iter()
+            .rev()
+            .find(|e| e.batch <= want_batch)
+            .copied()
+            .or_else(|| candidates.first().copied())
+    }
+
+    pub fn find_estimate(&self, p: u8, h: HashKind) -> Option<&ArtifactMeta> {
+        let h_bits = Self::hash_bits(h);
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Estimate && e.p == p && e.h_bits == h_bits)
+    }
+
+    pub fn find_merge(&self, p: u8) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.kind == ArtifactKind::Merge && e.p == p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hll_manifest_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const HEADER: &str = "name\tfile\tkind\tp\th_bits\tbatch\tm\toutputs\n";
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("valid");
+        write_manifest(
+            &d,
+            &format!(
+                "{HEADER}agg\ta.hlo.txt\taggregate\t16\t64\t8192\t65536\tregs\n\
+                 est\te.hlo.txt\testimate\t16\t64\t0\t65536\tstats\n\
+                 mrg\tm.hlo.txt\tmerge\t16\t0\t0\t65536\tregs\n"
+            ),
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        assert!(m.find_aggregate(16, HashKind::H64, 8192).is_some());
+        assert!(m.find_estimate(16, HashKind::H64).is_some());
+        assert!(m.find_merge(16).is_some());
+        assert!(m.find_aggregate(14, HashKind::H64, 8192).is_none());
+    }
+
+    #[test]
+    fn batch_selection_prefers_largest_fitting() {
+        let d = tmpdir("batch");
+        write_manifest(
+            &d,
+            &format!(
+                "{HEADER}a1\ta1.hlo.txt\taggregate\t16\t64\t1024\t65536\tregs\n\
+                 a2\ta2.hlo.txt\taggregate\t16\t64\t8192\t65536\tregs\n\
+                 a3\ta3.hlo.txt\taggregate\t16\t64\t65536\t65536\tregs\n"
+            ),
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.find_aggregate(16, HashKind::H64, 8192).unwrap().batch, 8192);
+        assert_eq!(m.find_aggregate(16, HashKind::H64, 100_000).unwrap().batch, 65536);
+        assert_eq!(m.find_aggregate(16, HashKind::H64, 9000).unwrap().batch, 8192);
+        // Smaller than every artifact: fall back to the smallest.
+        assert_eq!(m.find_aggregate(16, HashKind::H64, 10).unwrap().batch, 1024);
+    }
+
+    #[test]
+    fn rejects_inconsistent_m() {
+        let d = tmpdir("bad_m");
+        write_manifest(
+            &d,
+            &format!("{HEADER}agg\ta.hlo.txt\taggregate\t16\t64\t8192\t999\tregs\n"),
+        );
+        assert!(matches!(Manifest::load(&d), Err(ManifestError::Parse(..))));
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let d = tmpdir("bad_kind");
+        write_manifest(
+            &d,
+            &format!("{HEADER}x\tx.hlo.txt\tfrobnicate\t16\t64\t0\t65536\tregs\n"),
+        );
+        assert!(matches!(Manifest::load(&d), Err(ManifestError::Parse(..))));
+    }
+
+    #[test]
+    fn missing_dir_is_not_found() {
+        let d = tmpdir("missing").join("nope");
+        assert!(matches!(Manifest::load(&d), Err(ManifestError::NotFound(_))));
+    }
+
+    #[test]
+    fn real_artifacts_if_built() {
+        // When `make artifacts` has run, the real manifest must load and
+        // contain the paper configuration.
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let agg = m.find_aggregate(16, HashKind::H64, 8192).expect("paper aggregate");
+        assert!(m.path_of(agg).exists());
+        assert!(m.find_estimate(16, HashKind::H64).is_some());
+        assert!(m.find_merge(16).is_some());
+    }
+}

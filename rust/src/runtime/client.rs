@@ -1,0 +1,231 @@
+//! PJRT runtime: loads the HLO-text artifacts and executes them on the
+//! CPU PJRT client via the `xla` crate.
+//!
+//! One [`XlaRuntime`] owns the client plus a compile-once cache of loaded
+//! executables keyed by artifact name. All Layer-2 compute the Rust
+//! coordinator triggers at runtime goes through here — Python is never
+//! involved.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::artifacts::{ArtifactMeta, Manifest, ManifestError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("artifact not found: {0}")]
+    ArtifactNotFound(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// The PJRT client + executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.dir())
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_manifest(Manifest::load_default()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "runtime",
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.dir().display()
+        );
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        crate::log_info!(
+            "runtime",
+            "compiled {} in {:.1} ms",
+            meta.name,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache.lock().unwrap().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact, returning the output literals (tuple outputs
+    /// are decomposed; single-array outputs come back as one literal).
+    pub fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(meta)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let literal = result[0][0].to_literal_sync()?;
+        if literal.shape()?.is_tuple() {
+            Ok(literal.to_tuple()?)
+        } else {
+            Ok(vec![literal])
+        }
+    }
+
+    /// Chunked aggregation with a device-resident register file: the
+    /// registers are uploaded once, threaded through every chunk's
+    /// execution as a `PjRtBuffer`, and downloaded once at the end —
+    /// the donated-buffer analogue that removes the 512 KiB/chunk
+    /// host↔device round trip (EXPERIMENTS.md §Perf).
+    pub fn run_aggregate_chunks(
+        &self,
+        meta: &ArtifactMeta,
+        chunks: &[Vec<i32>],
+        regs_i32: &[i32],
+    ) -> Result<Vec<i32>> {
+        if regs_i32.len() != meta.m {
+            return Err(RuntimeError::Shape(format!(
+                "{} expects {} registers, got {}",
+                meta.name,
+                meta.m,
+                regs_i32.len()
+            )));
+        }
+        let exe = self.executable(meta)?;
+        let mut regs_buf = self.client.buffer_from_host_buffer(regs_i32, &[meta.m], None)?;
+        for keys in chunks {
+            if keys.len() != meta.batch {
+                return Err(RuntimeError::Shape(format!(
+                    "{} expects batch {}, got {}",
+                    meta.name,
+                    meta.batch,
+                    keys.len()
+                )));
+            }
+            let keys_buf = self.client.buffer_from_host_buffer(keys, &[meta.batch], None)?;
+            let mut out = exe.execute_b(&[&keys_buf, &regs_buf])?;
+            regs_buf = out
+                .get_mut(0)
+                .and_then(|v| {
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v.remove(0))
+                    }
+                })
+                .ok_or_else(|| RuntimeError::Shape("empty execute_b output".into()))?;
+        }
+        let literal = regs_buf.to_literal_sync()?;
+        Ok(literal.to_vec::<i32>()?)
+    }
+
+    /// Helper: run an `aggregate` artifact over i32 keys + i32 registers.
+    pub fn run_aggregate(
+        &self,
+        meta: &ArtifactMeta,
+        keys_i32: &[i32],
+        regs_i32: &[i32],
+    ) -> Result<Vec<i32>> {
+        if keys_i32.len() != meta.batch {
+            return Err(RuntimeError::Shape(format!(
+                "{} expects batch {}, got {}",
+                meta.name,
+                meta.batch,
+                keys_i32.len()
+            )));
+        }
+        if regs_i32.len() != meta.m {
+            return Err(RuntimeError::Shape(format!(
+                "{} expects {} registers, got {}",
+                meta.name,
+                meta.m,
+                regs_i32.len()
+            )));
+        }
+        let keys = xla::Literal::vec1(keys_i32);
+        let regs = xla::Literal::vec1(regs_i32);
+        let out = self.execute(meta, &[keys, regs])?;
+        let regs_out = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| RuntimeError::Shape("empty output tuple".into()))?;
+        Ok(regs_out.to_vec::<i32>()?)
+    }
+
+    /// Helper: run an `estimate` artifact. Returns (raw, V, estimate).
+    pub fn run_estimate(&self, meta: &ArtifactMeta, regs_i32: &[i32]) -> Result<(f64, f64, f64)> {
+        if regs_i32.len() != meta.m {
+            return Err(RuntimeError::Shape(format!(
+                "{} expects {} registers, got {}",
+                meta.name,
+                meta.m,
+                regs_i32.len()
+            )));
+        }
+        let regs = xla::Literal::vec1(regs_i32);
+        let out = self.execute(meta, &[regs])?;
+        let stats = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| RuntimeError::Shape("empty output tuple".into()))?
+            .to_vec::<f64>()?;
+        if stats.len() != 3 {
+            return Err(RuntimeError::Shape(format!(
+                "estimate returned {} values, expected 3",
+                stats.len()
+            )));
+        }
+        Ok((stats[0], stats[1], stats[2]))
+    }
+
+    /// Helper: run a `merge` artifact.
+    pub fn run_merge(
+        &self,
+        meta: &ArtifactMeta,
+        a_i32: &[i32],
+        b_i32: &[i32],
+    ) -> Result<Vec<i32>> {
+        if a_i32.len() != meta.m || b_i32.len() != meta.m {
+            return Err(RuntimeError::Shape(format!(
+                "{} expects {} registers",
+                meta.name, meta.m
+            )));
+        }
+        let a = xla::Literal::vec1(a_i32);
+        let b = xla::Literal::vec1(b_i32);
+        let out = self.execute(meta, &[a, b])?;
+        let merged = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| RuntimeError::Shape("empty output tuple".into()))?;
+        Ok(merged.to_vec::<i32>()?)
+    }
+}

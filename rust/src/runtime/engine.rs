@@ -1,0 +1,226 @@
+//! The `Engine` abstraction: how a pipeline worker executes the HLL
+//! aggregation/computation phases.
+//!
+//! Two implementations:
+//!
+//! * [`NativeEngine`] — the pure-Rust hot path (the CPU-baseline code of
+//!   the paper's Fig 4(b), also used for odd-sized batch tails);
+//! * [`XlaEngine`] — executes the AOT-lowered JAX/Pallas artifacts via
+//!   PJRT through the [`super::service::XlaService`] device thread,
+//!   proving the three layers compose. Batches are chunked to the
+//!   artifact's static shape; tails are padded with an already-inserted
+//!   element (idempotence makes this a no-op on the sketch state).
+//!
+//! An integration test asserts the two produce bit-identical register
+//! files on random streams.
+
+use super::client::{Result, RuntimeError};
+use super::service::XlaHandle;
+use crate::hll::{EstimateBreakdown, HllConfig, HllSketch};
+
+/// Estimate triple as produced by the computation phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimateOut {
+    pub raw: f64,
+    pub zero_registers: usize,
+    pub estimate: f64,
+}
+
+impl From<EstimateBreakdown> for EstimateOut {
+    fn from(b: EstimateBreakdown) -> Self {
+        Self { raw: b.raw, zero_registers: b.zero_registers, estimate: b.estimate }
+    }
+}
+
+/// A pipeline's compute backend.
+pub trait Engine: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fold a batch of 32-bit stream words into the sketch.
+    fn aggregate(&self, batch: &[u32], sketch: &mut HllSketch) -> Result<()>;
+
+    /// Computation phase over the sketch's registers.
+    fn estimate(&self, sketch: &HllSketch) -> Result<EstimateOut>;
+
+    /// Bucket-wise max of `other` into `sketch`.
+    fn merge(&self, sketch: &mut HllSketch, other: &HllSketch) -> Result<()>;
+}
+
+/// Pure-Rust engine.
+#[derive(Debug, Clone, Default)]
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn aggregate(&self, batch: &[u32], sketch: &mut HllSketch) -> Result<()> {
+        sketch.insert_batch(batch);
+        Ok(())
+    }
+
+    fn estimate(&self, sketch: &HllSketch) -> Result<EstimateOut> {
+        Ok(sketch.estimate_breakdown().into())
+    }
+
+    fn merge(&self, sketch: &mut HllSketch, other: &HllSketch) -> Result<()> {
+        sketch
+            .merge(other)
+            .map_err(|e| RuntimeError::Shape(e.to_string()))
+    }
+}
+
+/// PJRT-backed engine executing the JAX/Pallas artifacts through the
+/// device-service thread.
+pub struct XlaEngine {
+    handle: XlaHandle,
+    cfg: HllConfig,
+    /// Preferred batch shape (the artifact actually used per chunk is the
+    /// largest one fitting the remaining data).
+    preferred_batch: usize,
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("cfg", &self.cfg)
+            .field("preferred_batch", &self.preferred_batch)
+            .finish()
+    }
+}
+
+impl XlaEngine {
+    pub fn new(handle: XlaHandle, cfg: HllConfig, preferred_batch: usize) -> Result<Self> {
+        // Validate that the artifacts this engine needs exist up front.
+        handle.aggregate_batch_shape(cfg.p(), cfg.hash(), preferred_batch)?;
+        Ok(Self { handle, cfg, preferred_batch })
+    }
+
+    fn regs_to_i32(sketch: &HllSketch) -> Vec<i32> {
+        sketch.registers().iter().map(|&r| r as i32).collect()
+    }
+
+    fn regs_from_i32(&self, regs: Vec<i32>) -> Result<HllSketch> {
+        let bytes: Vec<u8> = regs.iter().map(|&r| r as u8).collect();
+        HllSketch::from_registers(self.cfg, bytes)
+            .map_err(|e| RuntimeError::Shape(e.to_string()))
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn aggregate(&self, batch: &[u32], sketch: &mut HllSketch) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        debug_assert_eq!(*sketch.config(), self.cfg);
+        let (p, h) = (self.cfg.p(), self.cfg.hash());
+        // One artifact shape for the whole call; tails are padded with an
+        // already-present element (idempotent re-insertion, exact no-op).
+        let shape = self
+            .handle
+            .aggregate_batch_shape(p, h, batch.len().min(self.preferred_batch))?;
+        let mut chunks: Vec<Vec<i32>> = Vec::with_capacity(batch.len().div_ceil(shape));
+        for chunk in batch.chunks(shape) {
+            let mut keys: Vec<i32> = Vec::with_capacity(shape);
+            keys.extend(chunk.iter().map(|&k| k as i32));
+            keys.resize(shape, chunk[0] as i32);
+            chunks.push(keys);
+        }
+        // Single device-service call: registers stay device-resident
+        // across all chunks (uploaded once, downloaded once).
+        let regs = self
+            .handle
+            .aggregate(p, h, chunks, Self::regs_to_i32(sketch))?;
+        *sketch = self.regs_from_i32(regs)?;
+        Ok(())
+    }
+
+    fn estimate(&self, sketch: &HllSketch) -> Result<EstimateOut> {
+        let regs = Self::regs_to_i32(sketch);
+        let (raw, v, est) = self.handle.estimate(self.cfg.p(), self.cfg.hash(), regs)?;
+        Ok(EstimateOut { raw, zero_registers: v as usize, estimate: est })
+    }
+
+    fn merge(&self, sketch: &mut HllSketch, other: &HllSketch) -> Result<()> {
+        let a = Self::regs_to_i32(sketch);
+        let b = Self::regs_to_i32(other);
+        let merged = self.handle.merge(self.cfg.p(), a, b)?;
+        *sketch = self.regs_from_i32(merged)?;
+        Ok(())
+    }
+}
+
+/// Which engine a worker should use — CLI-selectable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "native" => Some(Self::Native),
+            "xla" => Some(Self::Xla),
+            _ => None,
+        }
+    }
+
+    /// Build an engine instance. `handle` is required for
+    /// [`EngineKind::Xla`].
+    pub fn build(
+        self,
+        cfg: HllConfig,
+        handle: Option<XlaHandle>,
+        preferred_batch: usize,
+    ) -> Result<Box<dyn Engine>> {
+        match self {
+            EngineKind::Native => Ok(Box::new(NativeEngine)),
+            EngineKind::Xla => {
+                let handle = handle.ok_or_else(|| {
+                    RuntimeError::ArtifactNotFound("XlaEngine needs a device handle".into())
+                })?;
+                Ok(Box::new(XlaEngine::new(handle, cfg, preferred_batch)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::HashKind;
+    use crate::util::Xoshiro256StarStar;
+
+    #[test]
+    fn native_engine_basics() {
+        let cfg = HllConfig::new(12, HashKind::H64).unwrap();
+        let eng = NativeEngine;
+        let mut s = HllSketch::new(cfg);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let batch: Vec<u32> = (0..1000).map(|_| rng.next_u32()).collect();
+        eng.aggregate(&batch, &mut s).unwrap();
+        let est = eng.estimate(&s).unwrap();
+        assert!(est.estimate > 0.0);
+        assert_eq!(est.zero_registers, s.zero_registers());
+
+        let mut s2 = HllSketch::new(cfg);
+        eng.aggregate(&batch[..500], &mut s2).unwrap();
+        let mut s3 = HllSketch::new(cfg);
+        eng.aggregate(&batch[500..], &mut s3).unwrap();
+        eng.merge(&mut s2, &s3).unwrap();
+        assert_eq!(s2, s);
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::parse("cuda"), None);
+    }
+}

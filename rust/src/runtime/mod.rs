@@ -1,0 +1,13 @@
+//! PJRT runtime layer: loads the AOT-lowered HLO artifacts (`make
+//! artifacts`) and executes them from the Rust hot path. See
+//! `/opt/xla-example/load_hlo/` for the reference wiring this follows.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+pub mod service;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest, ManifestError};
+pub use client::{Result, RuntimeError, XlaRuntime};
+pub use engine::{Engine, EngineKind, EstimateOut, NativeEngine, XlaEngine};
+pub use service::{XlaHandle, XlaService};

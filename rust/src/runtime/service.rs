@@ -1,0 +1,203 @@
+//! The XLA device service: a dedicated thread owning the PJRT client.
+//!
+//! The `xla` crate's client/executable types are thread-confined (`Rc` +
+//! raw pointers), while the coordinator runs one worker thread per
+//! pipeline. The service thread is the software analogue of the paper's
+//! single shared FPGA device: workers submit aggregation/estimation jobs
+//! through a channel-backed [`XlaHandle`] (Clone + Send) and block on the
+//! reply, exactly like DMA requests queueing toward one PCIe endpoint.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::artifacts::Manifest;
+use super::client::{Result, RuntimeError, XlaRuntime};
+use crate::hll::HashKind;
+
+enum Request {
+    /// Chunked aggregate execution: every chunk already padded to the
+    /// artifact's batch shape; registers stay device-resident across
+    /// chunks.
+    Aggregate {
+        p: u8,
+        h: HashKind,
+        chunks: Vec<Vec<i32>>,
+        regs_i32: Vec<i32>,
+        reply: mpsc::Sender<Result<Vec<i32>>>,
+    },
+    Estimate {
+        p: u8,
+        h: HashKind,
+        regs_i32: Vec<i32>,
+        reply: mpsc::Sender<Result<(f64, f64, f64)>>,
+    },
+    Merge {
+        p: u8,
+        a_i32: Vec<i32>,
+        b_i32: Vec<i32>,
+        reply: mpsc::Sender<Result<Vec<i32>>>,
+    },
+    /// Batch shape lookup so callers can chunk correctly.
+    AggregateBatchShape {
+        p: u8,
+        h: HashKind,
+        want: usize,
+        reply: mpsc::Sender<Result<usize>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the device service.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The service itself; dropping it shuts the device thread down.
+pub struct XlaService {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Spawn the device thread over the default artifacts directory.
+    pub fn start() -> Result<Self> {
+        Self::start_with(Manifest::load_default()?)
+    }
+
+    pub fn start_with(manifest: Manifest) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        // Bring the runtime up on the service thread; report readiness
+        // through a one-shot so `start` fails fast on broken artifacts.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-device".into())
+            .spawn(move || {
+                let rt = match XlaRuntime::with_manifest(manifest) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Self::serve(rt, rx);
+            })
+            .expect("spawn xla-device thread");
+        ready_rx
+            .recv()
+            .unwrap_or_else(|_| Err(RuntimeError::Shape("device thread died".into())))?;
+        Ok(Self { tx, join: Some(join) })
+    }
+
+    fn serve(rt: XlaRuntime, rx: mpsc::Receiver<Request>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Aggregate { p, h, chunks, regs_i32, reply } => {
+                    let want = chunks.first().map(|c| c.len()).unwrap_or(0);
+                    let res = rt
+                        .manifest()
+                        .find_aggregate(p, h, want)
+                        .cloned()
+                        .ok_or_else(|| RuntimeError::ArtifactNotFound(format!(
+                            "aggregate p={p} H={}",
+                            h.bits()
+                        )))
+                        .and_then(|meta| rt.run_aggregate_chunks(&meta, &chunks, &regs_i32));
+                    let _ = reply.send(res);
+                }
+                Request::Estimate { p, h, regs_i32, reply } => {
+                    let res = rt
+                        .manifest()
+                        .find_estimate(p, h)
+                        .cloned()
+                        .ok_or_else(|| RuntimeError::ArtifactNotFound(format!(
+                            "estimate p={p} H={}",
+                            h.bits()
+                        )))
+                        .and_then(|meta| rt.run_estimate(&meta, &regs_i32));
+                    let _ = reply.send(res);
+                }
+                Request::Merge { p, a_i32, b_i32, reply } => {
+                    let res = rt
+                        .manifest()
+                        .find_merge(p)
+                        .cloned()
+                        .ok_or_else(|| {
+                            RuntimeError::ArtifactNotFound(format!("merge p={p}"))
+                        })
+                        .and_then(|meta| rt.run_merge(&meta, &a_i32, &b_i32));
+                    let _ = reply.send(res);
+                }
+                Request::AggregateBatchShape { p, h, want, reply } => {
+                    let res = rt
+                        .manifest()
+                        .find_aggregate(p, h, want)
+                        .map(|m| m.batch)
+                        .ok_or_else(|| RuntimeError::ArtifactNotFound(format!(
+                            "aggregate p={p} H={}",
+                            h.bits()
+                        )));
+                    let _ = reply.send(res);
+                }
+                Request::Shutdown => break,
+            }
+        }
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        XlaHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl XlaHandle {
+    fn call<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
+    ) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| RuntimeError::Shape("xla device thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| RuntimeError::Shape("xla device thread dropped reply".into()))?
+    }
+
+    /// The static batch shape the device will use for a `want`-sized
+    /// aggregate call.
+    pub fn aggregate_batch_shape(&self, p: u8, h: HashKind, want: usize) -> Result<usize> {
+        self.call(|reply| Request::AggregateBatchShape { p, h, want, reply })
+    }
+
+    /// Chunked aggregate: all chunks must share one artifact batch shape
+    /// (pad tails — idempotent re-insertion is free).
+    pub fn aggregate(
+        &self,
+        p: u8,
+        h: HashKind,
+        chunks: Vec<Vec<i32>>,
+        regs_i32: Vec<i32>,
+    ) -> Result<Vec<i32>> {
+        self.call(|reply| Request::Aggregate { p, h, chunks, regs_i32, reply })
+    }
+
+    pub fn estimate(&self, p: u8, h: HashKind, regs_i32: Vec<i32>) -> Result<(f64, f64, f64)> {
+        self.call(|reply| Request::Estimate { p, h, regs_i32, reply })
+    }
+
+    pub fn merge(&self, p: u8, a_i32: Vec<i32>, b_i32: Vec<i32>) -> Result<Vec<i32>> {
+        self.call(|reply| Request::Merge { p, a_i32, b_i32, reply })
+    }
+}

@@ -1,0 +1,141 @@
+//! Synthetic data sets for the profiling study (Section IV): streams of
+//! exactly-n distinct 32-bit values "randomly sampling the range
+//! [0 : 2^32 − 1]".
+//!
+//! Distinctness without a hash-set: a seeded *bijective* mixer over u32
+//! (the Murmur3 finalizer, which is invertible) maps the counter
+//! 0..n to n distinct pseudo-random values — O(1) memory at any n.
+
+/// Murmur3's 32-bit finalizer — a bijection on u32.
+#[inline]
+fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// An iterator over exactly `n` distinct pseudo-random u32 values,
+/// parameterized by trial seed (different seeds give different — though
+/// possibly overlapping — value sets, as independent draws would).
+#[derive(Debug, Clone)]
+pub struct DistinctStream {
+    i: u64,
+    n: u64,
+    seed: u32,
+}
+
+impl DistinctStream {
+    pub fn new(n: u64, seed: u64) -> Self {
+        assert!(n <= 1 << 32, "domain is 32-bit");
+        // Fold the 64-bit trial seed into an xor mask; xor-pre/post of a
+        // bijection stays bijective per seed.
+        let seed = (seed ^ (seed >> 32)) as u32;
+        Self { i: 0, n, seed }
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.n - self.i
+    }
+
+    /// Fill `buf` with the next values; returns how many were produced.
+    pub fn fill(&mut self, buf: &mut [u32]) -> usize {
+        let take = (buf.len() as u64).min(self.remaining()) as usize;
+        for slot in &mut buf[..take] {
+            *slot = mix32(self.i as u32 ^ self.seed).wrapping_add(self.seed.rotate_left(7));
+            self.i += 1;
+        }
+        take
+    }
+}
+
+impl Iterator for DistinctStream {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        if self.i >= self.n {
+            return None;
+        }
+        let v = mix32(self.i as u32 ^ self.seed).wrapping_add(self.seed.rotate_left(7));
+        self.i += 1;
+        Some(v)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = self.remaining() as usize;
+        (r, Some(r))
+    }
+}
+
+/// A stream with duplicates: `n_distinct` values, each repeated per a
+/// deterministic schedule, shuffled block-wise — exercises HLL's
+/// duplicate insensitivity on realistic multisets.
+pub fn multiset_stream(n_distinct: u64, repeat: u32, seed: u64) -> impl Iterator<Item = u32> {
+    (0..repeat).flat_map(move |r| DistinctStream::new(n_distinct, seed).map(move |v| {
+        let _ = r;
+        v
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_are_distinct() {
+        let n = 100_000u64;
+        let mut seen = std::collections::HashSet::with_capacity(n as usize);
+        for v in DistinctStream::new(n, 42) {
+            assert!(seen.insert(v), "duplicate produced");
+        }
+        assert_eq!(seen.len() as u64, n);
+    }
+
+    #[test]
+    fn seeds_give_different_sets() {
+        let a: Vec<u32> = DistinctStream::new(1000, 1).collect();
+        let b: Vec<u32> = DistinctStream::new(1000, 2).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fill_matches_iterator() {
+        let mut s1 = DistinctStream::new(10_000, 7);
+        let it: Vec<u32> = DistinctStream::new(10_000, 7).collect();
+        let mut buf = vec![0u32; 1024];
+        let mut collected = Vec::new();
+        loop {
+            let k = s1.fill(&mut buf);
+            if k == 0 {
+                break;
+            }
+            collected.extend_from_slice(&buf[..k]);
+        }
+        assert_eq!(collected, it);
+    }
+
+    #[test]
+    fn values_look_uniform() {
+        // Bucket into 16 ranges; each should hold ~1/16 of the values.
+        let n = 1 << 18;
+        let mut counts = [0u32; 16];
+        for v in DistinctStream::new(n, 3) {
+            counts[(v >> 28) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bucket {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn multiset_cardinality_is_n_distinct() {
+        let vals: Vec<u32> = multiset_stream(500, 4, 9).collect();
+        assert_eq!(vals.len(), 2000);
+        let set: std::collections::HashSet<u32> = vals.into_iter().collect();
+        assert_eq!(set.len(), 500);
+    }
+}

@@ -1,0 +1,11 @@
+//! Statistical profiling harness (Section IV / Fig 1): synthetic
+//! distinct-value data sets and error-vs-cardinality sweeps.
+
+pub mod datasets;
+pub mod error_profile;
+
+pub use datasets::{multiset_stream, DistinctStream};
+pub use error_profile::{
+    log_spaced_cardinalities, measure_point, sweep, transition_cardinality, ErrorCurve,
+    ErrorPoint,
+};

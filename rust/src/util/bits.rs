@@ -1,0 +1,100 @@
+//! Bit-manipulation helpers shared across the HLL core, the FPGA
+//! simulator's leading-zero-detector stage, and the runtime.
+
+/// Number of leading zeros of `w` when interpreted as a `width`-bit word
+/// (`width` ≤ 64). This is the FPGA "Leading Zero Detector" stage; the
+/// paper implements it with the HLS `CountLeadingZero` primitive, CPUs
+/// with `LZCNT`.
+#[inline]
+pub fn leading_zeros_width(w: u64, width: u32) -> u32 {
+    debug_assert!(width >= 1 && width <= 64);
+    debug_assert!(width == 64 || w < (1u64 << width));
+    if w == 0 {
+        width
+    } else {
+        w.leading_zeros() - (64 - width)
+    }
+}
+
+/// The HLL rank ρ(w): leading zeros within a `width`-bit word plus one.
+/// For `w == 0` the rank is `width + 1` (the maximum observable rank,
+/// eq. (2) of the paper: ρ ≤ H − p + 1).
+#[inline]
+pub fn rho(w: u64, width: u32) -> u8 {
+    (leading_zeros_width(w, width) + 1) as u8
+}
+
+/// Ceil of log2 for positive integers — register width in bits needed to
+/// hold values in `[0, n]`... specifically the paper's eq. (3) uses
+/// ⌈log2(H − p + 1)⌉ as the per-bucket register size.
+#[inline]
+pub fn ceil_log2(n: u64) -> u32 {
+    debug_assert!(n >= 1);
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+/// Rotate-left on 64-bit words (Murmur3 building block; maps to the
+/// FPGA's DSP-slice rotate in the paper's pipeline).
+#[inline(always)]
+pub fn rotl64(x: u64, r: u32) -> u64 {
+    x.rotate_left(r)
+}
+
+/// Rotate-left on 32-bit words.
+#[inline(always)]
+pub fn rotl32(x: u32, r: u32) -> u32 {
+    x.rotate_left(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leading_zeros_full_width() {
+        assert_eq!(leading_zeros_width(0, 64), 64);
+        assert_eq!(leading_zeros_width(1, 64), 63);
+        assert_eq!(leading_zeros_width(u64::MAX, 64), 0);
+    }
+
+    #[test]
+    fn leading_zeros_narrow_width() {
+        // 48-bit words (the paper's w for p=16, H=64).
+        assert_eq!(leading_zeros_width(0, 48), 48);
+        assert_eq!(leading_zeros_width(1, 48), 47);
+        assert_eq!(leading_zeros_width(1 << 47, 48), 0);
+        // 4-bit words (the paper's Table I example).
+        assert_eq!(leading_zeros_width(0b0101, 4), 1);
+        assert_eq!(leading_zeros_width(0b0001, 4), 3);
+        assert_eq!(leading_zeros_width(0b1000, 4), 0);
+    }
+
+    #[test]
+    fn rho_matches_paper_definition() {
+        // ρ(w) = #leading zeros + 1; ρ(0) = width + 1 = max rank.
+        assert_eq!(rho(0, 48), 49);
+        assert_eq!(rho(1 << 47, 48), 1);
+        assert_eq!(rho(1, 48), 48);
+        assert_eq!(rho(0, 16), 17);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        // Paper Table II: ⌈log2(H−p+1)⌉ — (p=14,H=32) → ⌈log2 19⌉ = 5,
+        // (p=14,H=64) → ⌈log2 51⌉ = 6, (p=16,H=32) → ⌈log2 17⌉ = 5,
+        // (p=16,H=64) → ⌈log2 49⌉ = 6.
+        assert_eq!(ceil_log2(19), 5);
+        assert_eq!(ceil_log2(51), 6);
+        assert_eq!(ceil_log2(17), 5);
+        assert_eq!(ceil_log2(49), 6);
+    }
+}

@@ -1,0 +1,138 @@
+//! Human-readable formatting helpers for benchmark tables and reports.
+
+/// Format a byte-per-second rate the way the paper does (GByte/s with two
+/// decimals, Gbit/s when asked).
+pub fn gbytes_per_s(bytes_per_s: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_s / 1e9)
+}
+
+pub fn gbits_per_s(bytes_per_s: f64) -> String {
+    format!("{:.2} Gbit/s", bytes_per_s * 8.0 / 1e9)
+}
+
+/// Format an item count with thousands separators (`12_345_678` →
+/// `12,345,678`).
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format a duration in engineering units.
+pub fn duration_s(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Render a percentage with a sign-aware fixed width.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+/// A minimal fixed-width text table builder used by every `repro`
+/// subcommand and bench report so tables render consistently.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<width$} |", c, width = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(gbytes_per_s(12.48e9), "12.48 GB/s");
+        assert_eq!(gbits_per_s(1.2875e9), "10.30 Gbit/s");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration_s(2.5), "2.500 s");
+        assert_eq!(duration_s(203e-6), "203.000 µs");
+        assert_eq!(duration_s(3.1e-9), "3.1 ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(vec!["Pipelines", "Throughput"]);
+        t.row(vec!["1", "0.05"]).row(vec!["16", "9.35"]);
+        let s = t.render();
+        assert!(s.contains("| Pipelines | Throughput |"));
+        assert!(s.lines().count() == 4);
+        // All lines same width.
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+}

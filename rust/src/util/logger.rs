@@ -1,0 +1,111 @@
+//! A minimal leveled logger (the offline crate set has no `log`/`env_logger`).
+//!
+//! Controlled by `HLL_LOG` (error|warn|info|debug|trace, default `info`).
+//! The coordinator, network simulator and runtime use this for progress
+//! and diagnostics; it writes to stderr so report tables on stdout stay
+//! machine-parsable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = "uninitialized"
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let lvl = std::env::var("HLL_LOG")
+        .ok()
+        .and_then(|s| Level::from_env(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (tests, `--verbose`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{:>10.4}s {} {}] {}", t, level.as_str(), target, msg);
+}
+
+#[macro_export]
+macro_rules! log_error { ($target:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($target:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($target:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($target:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, $target, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($target:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, $target, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_env("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_env("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_env("nope"), None);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

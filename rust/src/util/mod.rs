@@ -1,0 +1,9 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! deterministic PRNGs, bit manipulation, formatting, and a tiny logger.
+
+pub mod bits;
+pub mod fmt;
+pub mod logger;
+pub mod prng;
+
+pub use prng::{SplitMix64, Xoshiro256StarStar, Zipf};

@@ -1,0 +1,118 @@
+//! Integration: the streaming coordinator over both engines, checked
+//! against serial ground truth and across engines.
+
+use hll_fpga::coordinator::{run_serial, run_stream, CoordinatorConfig};
+use hll_fpga::hll::{HashKind, HllConfig};
+use hll_fpga::runtime::{EngineKind, Manifest, XlaService};
+use hll_fpga::stats::DistinctStream;
+use hll_fpga::util::Xoshiro256StarStar;
+
+fn artifacts_ready() -> bool {
+    Manifest::default_dir().join("manifest.tsv").exists()
+}
+
+#[test]
+fn native_coordinator_full_stack() {
+    let cfg = CoordinatorConfig {
+        pipelines: 6,
+        batch_size: 4096,
+        queue_depth: 2,
+        ..CoordinatorConfig::default()
+    };
+    let n = 300_000u64;
+    let words: Vec<u32> = DistinctStream::new(n, 17).collect();
+    let summary = run_stream(cfg, None, &words).unwrap();
+    let (serial, _) = run_serial(&cfg, &words);
+    assert_eq!(summary.sketch, serial);
+    let err = (summary.estimate.estimate - n as f64).abs() / n as f64;
+    assert!(err < 0.02, "err {err}");
+}
+
+#[test]
+fn xla_coordinator_matches_native() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let service = XlaService::start().unwrap();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xE2E);
+    let words: Vec<u32> = (0..50_000).map(|_| rng.next_u32()).collect();
+
+    let base = CoordinatorConfig {
+        pipelines: 3,
+        batch_size: 1024,
+        ..CoordinatorConfig::default()
+    };
+    let native = run_stream(
+        CoordinatorConfig { engine: EngineKind::Native, ..base },
+        None,
+        &words,
+    )
+    .unwrap();
+    let xla = run_stream(
+        CoordinatorConfig { engine: EngineKind::Xla, ..base },
+        Some(service.handle()),
+        &words,
+    )
+    .unwrap();
+    assert_eq!(native.sketch.registers(), xla.sketch.registers());
+    assert_eq!(native.estimate.zero_registers, xla.estimate.zero_registers);
+    let drift = (native.estimate.estimate - xla.estimate.estimate).abs()
+        / native.estimate.estimate.max(1.0);
+    assert!(drift < 1e-9, "estimate drift {drift}");
+}
+
+#[test]
+fn xla_coordinator_variant_config() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let service = XlaService::start().unwrap();
+    let hll = HllConfig::new(14, HashKind::H64).unwrap();
+    let base = CoordinatorConfig {
+        hll,
+        pipelines: 2,
+        batch_size: 8192,
+        ..CoordinatorConfig::default()
+    };
+    let words: Vec<u32> = DistinctStream::new(30_000, 3).collect();
+    let native = run_stream(
+        CoordinatorConfig { engine: EngineKind::Native, ..base },
+        None,
+        &words,
+    )
+    .unwrap();
+    let xla = run_stream(
+        CoordinatorConfig { engine: EngineKind::Xla, ..base },
+        Some(service.handle()),
+        &words,
+    )
+    .unwrap();
+    assert_eq!(native.sketch, xla.sketch);
+}
+
+#[test]
+fn many_small_feeds_with_duplicates() {
+    let cfg = CoordinatorConfig {
+        pipelines: 4,
+        batch_size: 100,
+        ..CoordinatorConfig::default()
+    };
+    // 10k distinct values, each fed 5 times in shuffled chunks.
+    let mut words: Vec<u32> = Vec::new();
+    for rep in 0..5u64 {
+        let mut vs: Vec<u32> = DistinctStream::new(10_000, 77).collect();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(rep);
+        rng.shuffle(&mut vs);
+        words.extend(vs);
+    }
+    let mut c = hll_fpga::coordinator::Coordinator::start(cfg, None).unwrap();
+    for chunk in words.chunks(777) {
+        c.feed(chunk);
+    }
+    let summary = c.finish().unwrap();
+    let err = (summary.estimate.estimate - 10_000.0).abs() / 10_000.0;
+    assert!(err < 0.05, "estimate {} vs 10k", summary.estimate.estimate);
+    assert_eq!(summary.metrics.words_in, 50_000);
+}

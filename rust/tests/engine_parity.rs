@@ -1,0 +1,161 @@
+//! Cross-layer integration: the PJRT-executed JAX/Pallas artifacts must
+//! agree with the native Rust implementation — bit-exact registers,
+//! estimate to f64 round-off.
+//!
+//! Requires `make artifacts`; tests are skipped (with a note) otherwise.
+
+use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+use hll_fpga::runtime::{Engine, Manifest, NativeEngine, XlaEngine, XlaService};
+use hll_fpga::util::Xoshiro256StarStar;
+
+fn artifacts_ready() -> bool {
+    let ok = Manifest::default_dir().join("manifest.tsv").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn service() -> XlaService {
+    XlaService::start().expect("start xla device service")
+}
+
+#[test]
+fn registers_bit_exact_paper_config() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let cfg = HllConfig::PAPER;
+    let xla = XlaEngine::new(svc.handle(), cfg, 8192).unwrap();
+    let native = NativeEngine;
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xF00D);
+    // Multiple batch sizes incl. non-multiples of the artifact shapes.
+    for (round, n) in [8192usize, 1024, 3000, 12345, 1].into_iter().enumerate() {
+        let batch: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut s_native = HllSketch::new(cfg);
+        let mut s_xla = HllSketch::new(cfg);
+        native.aggregate(&batch, &mut s_native).unwrap();
+        xla.aggregate(&batch, &mut s_xla).unwrap();
+        assert_eq!(
+            s_native.registers(),
+            s_xla.registers(),
+            "register mismatch at round {round} (n={n})"
+        );
+
+        let e_native = native.estimate(&s_native).unwrap();
+        let e_xla = xla.estimate(&s_xla).unwrap();
+        assert_eq!(e_native.zero_registers, e_xla.zero_registers);
+        let rel = (e_native.estimate - e_xla.estimate).abs() / e_native.estimate.max(1.0);
+        assert!(rel < 1e-9, "estimate drift {rel} at round {round}");
+    }
+}
+
+#[test]
+fn registers_accumulate_across_calls() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let cfg = HllConfig::PAPER;
+    let xla = XlaEngine::new(svc.handle(), cfg, 1024).unwrap();
+    let native = NativeEngine;
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xBEEF);
+    let mut s_native = HllSketch::new(cfg);
+    let mut s_xla = HllSketch::new(cfg);
+    for _ in 0..5 {
+        let batch: Vec<u32> = (0..1024).map(|_| rng.next_u32()).collect();
+        native.aggregate(&batch, &mut s_native).unwrap();
+        xla.aggregate(&batch, &mut s_xla).unwrap();
+    }
+    assert_eq!(s_native.registers(), s_xla.registers());
+}
+
+#[test]
+fn variant_configs_agree() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let native = NativeEngine;
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xCAFE);
+    for (p, h) in [(16u8, HashKind::H32), (14, HashKind::H64)] {
+        let cfg = HllConfig::new(p, h).unwrap();
+        let xla = XlaEngine::new(svc.handle(), cfg, 8192).unwrap();
+        let batch: Vec<u32> = (0..8192).map(|_| rng.next_u32()).collect();
+        let mut s_native = HllSketch::new(cfg);
+        let mut s_xla = HllSketch::new(cfg);
+        native.aggregate(&batch, &mut s_native).unwrap();
+        xla.aggregate(&batch, &mut s_xla).unwrap();
+        assert_eq!(
+            s_native.registers(),
+            s_xla.registers(),
+            "mismatch for p={p} H={}",
+            h.bits()
+        );
+    }
+}
+
+#[test]
+fn merge_artifact_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let cfg = HllConfig::PAPER;
+    let xla = XlaEngine::new(svc.handle(), cfg, 1024).unwrap();
+    let native = NativeEngine;
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xD00D);
+    let mk = |rng: &mut Xoshiro256StarStar| {
+        let mut s = HllSketch::new(cfg);
+        let batch: Vec<u32> = (0..2048).map(|_| rng.next_u32()).collect();
+        native.aggregate(&batch, &mut s).unwrap();
+        s
+    };
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+
+    let mut m_native = a.clone();
+    native.merge(&mut m_native, &b).unwrap();
+    let mut m_xla = a.clone();
+    xla.merge(&mut m_xla, &b).unwrap();
+    assert_eq!(m_native.registers(), m_xla.registers());
+}
+
+#[test]
+fn empty_batch_is_noop() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let cfg = HllConfig::PAPER;
+    let xla = XlaEngine::new(svc.handle(), cfg, 8192).unwrap();
+    let mut s = HllSketch::new(cfg);
+    xla.aggregate(&[], &mut s).unwrap();
+    assert_eq!(s.zero_registers(), cfg.m());
+}
+
+#[test]
+fn estimate_accuracy_through_xla_path() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let cfg = HllConfig::PAPER;
+    let xla = XlaEngine::new(svc.handle(), cfg, 65536).unwrap();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xACE);
+    let n = 200_000usize;
+    let mut seen = std::collections::HashSet::with_capacity(n);
+    while seen.len() < n {
+        seen.insert(rng.next_u32());
+    }
+    let batch: Vec<u32> = seen.into_iter().collect();
+    let mut s = HllSketch::new(cfg);
+    xla.aggregate(&batch, &mut s).unwrap();
+    let est = xla.estimate(&s).unwrap().estimate;
+    let rel = (est - n as f64).abs() / n as f64;
+    assert!(rel < 0.02, "xla-path estimate {est} vs {n}: rel {rel}");
+}

@@ -1,0 +1,105 @@
+//! Failure injection: the runtime and coordinator must surface errors,
+//! not panic or silently corrupt state.
+
+use std::path::PathBuf;
+
+use hll_fpga::hll::{HashKind, HllConfig};
+use hll_fpga::runtime::{Manifest, ManifestError, XlaService};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hll_fail_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const HEADER: &str = "name\tfile\tkind\tp\th_bits\tbatch\tm\toutputs\n";
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let d = tmpdir("missing").join("definitely_absent");
+    match Manifest::load(&d) {
+        Err(ManifestError::NotFound(p)) => assert!(p.ends_with("manifest.tsv")),
+        other => panic!("expected NotFound, got {other:?}"),
+    }
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_panic() {
+    // A manifest that points at garbage HLO: service start succeeds
+    // (lazy compile), the first use must return Err.
+    let d = tmpdir("corrupt");
+    std::fs::write(
+        d.join("manifest.tsv"),
+        format!("{HEADER}agg\tbad.hlo.txt\taggregate\t16\t64\t1024\t65536\tregs\n"),
+    )
+    .unwrap();
+    std::fs::write(d.join("bad.hlo.txt"), "HloModule utterly { broken }").unwrap();
+    let manifest = Manifest::load(&d).unwrap();
+    let svc = XlaService::start_with(manifest).expect("service starts lazily");
+    let res = svc.handle().aggregate(
+        16,
+        HashKind::H64,
+        vec![vec![0i32; 1024]],
+        vec![0i32; 65536],
+    );
+    assert!(res.is_err(), "garbage HLO must error, got {res:?}");
+}
+
+#[test]
+fn artifact_for_unknown_config_is_reported() {
+    let d = tmpdir("nocfg");
+    std::fs::write(
+        d.join("manifest.tsv"),
+        format!("{HEADER}agg\ta.hlo.txt\taggregate\t16\t64\t1024\t65536\tregs\n"),
+    )
+    .unwrap();
+    std::fs::write(d.join("a.hlo.txt"), "HloModule x\n").unwrap();
+    let manifest = Manifest::load(&d).unwrap();
+    let svc = XlaService::start_with(manifest).unwrap();
+    // p=10 has no artifact: shape lookup must fail cleanly.
+    let err = svc.handle().aggregate_batch_shape(10, HashKind::H64, 1024);
+    assert!(err.is_err());
+}
+
+#[test]
+fn wrong_register_count_rejected_by_service() {
+    if !Manifest::default_dir().join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = XlaService::start().unwrap();
+    // 10 registers for a p=16 artifact: shape error, no crash.
+    let res = svc
+        .handle()
+        .aggregate(16, HashKind::H64, vec![vec![0i32; 1024]], vec![0i32; 10]);
+    assert!(res.is_err());
+}
+
+#[test]
+fn sketch_invariants_hold_after_failed_merge() {
+    // A rejected merge must leave the destination untouched.
+    let mut a = hll_fpga::hll::HllSketch::new(HllConfig::PAPER);
+    for v in 0..1000u32 {
+        a.insert_u32(v);
+    }
+    let before = a.clone();
+    let b = hll_fpga::hll::HllSketch::new(HllConfig::new(14, HashKind::H64).unwrap());
+    assert!(a.merge(&b).is_err());
+    assert_eq!(a, before, "failed merge must not mutate");
+}
+
+#[test]
+fn manifest_with_duplicate_columns_still_parses_first() {
+    // Robustness to future manifest evolution: extra columns ignored.
+    let d = tmpdir("extra_cols");
+    std::fs::write(
+        d.join("manifest.tsv"),
+        "name\tfile\tkind\tp\th_bits\tbatch\tm\toutputs\tnew_column\n\
+         agg\ta.hlo.txt\taggregate\t16\t64\t1024\t65536\tregs\textra\n",
+    )
+    .unwrap();
+    std::fs::write(d.join("a.hlo.txt"), "HloModule x\n").unwrap();
+    let m = Manifest::load(&d).unwrap();
+    assert_eq!(m.entries().len(), 1);
+}

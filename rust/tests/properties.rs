@@ -1,0 +1,119 @@
+//! Cross-module property tests (proptest_lite): system-level invariants
+//! that no single module's unit tests pin down.
+
+use hll_fpga::coordinator::{run_stream, CoordinatorConfig};
+use hll_fpga::fpga::ParallelHll;
+use hll_fpga::hll::{estimate, HashKind, HllConfig, HllSketch};
+use hll_fpga::proptest_lite::Runner;
+
+#[test]
+fn any_slicing_any_batching_same_sketch() {
+    // The fundamental Fig-3 invariant, fuzzed: for random streams, any
+    // (pipelines, batch_size) coordinator configuration produces the
+    // same register file as the serial sketch.
+    Runner::new("slicing_invariance").cases(20).run(|g| {
+        let n = g.usize_in(0..=5000);
+        let words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let pipelines = g.usize_in(1..=8);
+        let batch_size = g.usize_in(1..=2048);
+        let cfg = CoordinatorConfig {
+            pipelines,
+            batch_size,
+            queue_depth: g.usize_in(1..=4),
+            ..CoordinatorConfig::default()
+        };
+        let summary = run_stream(cfg, None, &words).unwrap();
+        let mut serial = HllSketch::new(cfg.hll);
+        serial.insert_batch(&words);
+        assert_eq!(summary.sketch, serial, "pipelines={pipelines} batch={batch_size} n={n}");
+    });
+}
+
+#[test]
+fn fpga_engine_equals_software_for_any_k() {
+    Runner::new("fpga_vs_software").cases(15).run(|g| {
+        let n = g.usize_in(0..=3000);
+        let words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let k = g.usize_in(1..=16);
+        let cfg = HllConfig::PAPER;
+        let mut engine = ParallelHll::new(cfg, k);
+        engine.feed(&words);
+        let result = engine.finish();
+        let mut sw = HllSketch::new(cfg);
+        sw.insert_batch(&words);
+        assert_eq!(result.sketch, sw, "k={k} n={n}");
+    });
+}
+
+#[test]
+fn estimate_never_nan_or_negative() {
+    // Any syntactically valid register file must produce a finite,
+    // non-negative estimate — all four correction branches included.
+    Runner::new("estimate_total_function").cases(60).run(|g| {
+        let p = *g.choose(&[4u8, 8, 12, 14, 16]);
+        let h = if g.bool() { HashKind::H32 } else { HashKind::H64 };
+        let cfg = HllConfig::new(p, h).unwrap();
+        let max_rank = cfg.max_rank();
+        let regs: Vec<u8> = (0..cfg.m())
+            .map(|_| g.u32_in(0..=max_rank as u32) as u8)
+            .collect();
+        let b = estimate(&cfg, &regs);
+        assert!(b.estimate.is_finite(), "{cfg:?}");
+        assert!(b.estimate >= 0.0, "{cfg:?}");
+        assert!(b.raw.is_finite() && b.raw > 0.0);
+        assert!(b.zero_registers <= cfg.m());
+    });
+}
+
+#[test]
+fn serialization_roundtrip_any_state() {
+    Runner::new("serde_roundtrip").cases(30).run(|g| {
+        let p = *g.choose(&[4u8, 10, 16]);
+        let h = if g.bool() { HashKind::H32 } else { HashKind::H64 };
+        let cfg = HllConfig::new(p, h).unwrap();
+        let mut s = HllSketch::new(cfg);
+        let n = g.usize_in(0..=2000);
+        for _ in 0..n {
+            s.insert_u32(g.u32());
+        }
+        let restored = HllSketch::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(s, restored);
+    });
+}
+
+#[test]
+fn merge_of_subsets_never_exceeds_whole() {
+    // Monotonicity across the merge lattice: register-wise, merged
+    // partials equal the whole-stream sketch (tested elsewhere) and any
+    // partial is register-wise <= the whole.
+    Runner::new("merge_monotone").cases(20).run(|g| {
+        let n = g.usize_in(1..=4000);
+        let words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let split = g.usize_in(0..=n);
+        let cfg = HllConfig::PAPER;
+        let mut whole = HllSketch::new(cfg);
+        whole.insert_batch(&words);
+        let mut part = HllSketch::new(cfg);
+        part.insert_batch(&words[..split]);
+        for (pr, wr) in part.registers().iter().zip(whole.registers()) {
+            assert!(pr <= wr);
+        }
+    });
+}
+
+#[test]
+fn duplicate_saturation() {
+    // Feeding the same multiset twice (any order) never changes state.
+    Runner::new("duplicate_saturation").cases(20).run(|g| {
+        let n = g.usize_in(1..=2000);
+        let mut words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let cfg = HllConfig::new(12, HashKind::H64).unwrap();
+        let mut s = HllSketch::new(cfg);
+        s.insert_batch(&words);
+        let snapshot = s.clone();
+        // Re-insert in a different order.
+        words.reverse();
+        s.insert_batch(&words);
+        assert_eq!(s, snapshot);
+    });
+}

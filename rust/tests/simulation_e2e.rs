@@ -1,0 +1,95 @@
+//! Integration across the simulation substrates: FPGA engine × PCIe
+//! model × network simulator × CPU baseline, checked against each other
+//! and against the paper's cross-cutting claims.
+
+use hll_fpga::cpu_baseline::{aggregate_parallel, ScalingModel};
+use hll_fpga::fpga::{theoretical_throughput_bytes_per_s, ParallelHll};
+use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+use hll_fpga::net::{run_with_data, NicConfig};
+use hll_fpga::pcie::CoProcessorModel;
+use hll_fpga::stats::DistinctStream;
+
+#[test]
+fn fpga_sim_cpu_baseline_and_software_sketch_agree() {
+    // Three independent implementations of the aggregation phase must
+    // produce identical sketches: the software core, the cycle-level
+    // FPGA engine, and the thread-parallel CPU baseline.
+    let cfg = HllConfig::PAPER;
+    let words: Vec<u32> = DistinctStream::new(80_000, 5).collect();
+
+    let mut sw = HllSketch::new(cfg);
+    sw.insert_batch(&words);
+
+    let mut fpga = ParallelHll::new(cfg, 8);
+    fpga.feed(&words);
+    let fpga_result = fpga.finish();
+
+    let (cpu, _) = aggregate_parallel(cfg, &words, 4);
+
+    assert_eq!(fpga_result.sketch, sw);
+    assert_eq!(cpu, sw);
+}
+
+#[test]
+fn nic_and_coprocessor_runs_share_functional_result() {
+    let words: Vec<u32> = DistinctStream::new(40_000, 9).collect();
+    let nic = run_with_data(&NicConfig::paper(8), &words);
+    let nic_sketch = &nic.hll.as_ref().unwrap().sketch;
+
+    let mut sw = HllSketch::new(HllConfig::PAPER);
+    sw.insert_batch(&words);
+    assert_eq!(nic_sketch, &sw);
+}
+
+#[test]
+fn paper_headline_claims_cross_model() {
+    // Claim 2: multi-pipelined FPGA ≈ 1.8× the 16-core/32-thread CPU
+    // (64-bit hash), with the FPGA PCIe-bound at 12.48 GB/s.
+    let model = ScalingModel::paper_xeon();
+    let cpu64 = model.rate(HashKind::H64, 32);
+    let fpga = CoProcessorModel::default()
+        .run(&HllConfig::PAPER, 10, 1 << 30)
+        .throughput_bytes_per_s();
+    let ratio = fpga / cpu64;
+    assert!((1.6..2.1).contains(&ratio), "FPGA/CPU64 = {ratio}");
+
+    // Claim 1: single pipeline ≈ 2× a single CPU thread (32-bit hash).
+    let r1 = theoretical_throughput_bytes_per_s(1) / model.rate(HashKind::H32, 1);
+    assert!((1.8..2.2).contains(&r1), "pipeline/thread = {r1}");
+
+    // Section VII: NIC ≈ 35% above the 16-core CPU.
+    let nic = hll_fpga::net::run_timing(&NicConfig::paper(16), 32 << 20);
+    let nic_ratio = nic.throughput_bytes_per_s() / cpu64;
+    assert!((1.15..1.6).contains(&nic_ratio), "NIC/CPU = {nic_ratio}");
+}
+
+#[test]
+fn fig4a_and_table4_saturation_points_differ_as_in_paper() {
+    // PCIe deployment saturates at 10 pipelines; the NIC needs 16 to
+    // absorb bursts — the paper calls out this asymmetry explicitly.
+    let pcie = CoProcessorModel::default();
+    assert_eq!(pcie.saturation_pipelines(), 10);
+
+    let t8 = hll_fpga::net::run_timing(&NicConfig::paper(8), 8 << 20);
+    let t16 = hll_fpga::net::run_timing(&NicConfig::paper(16), 8 << 20);
+    assert!(
+        t16.throughput_bytes_per_s() >= t8.throughput_bytes_per_s(),
+        "NIC gains from 8→16 pipelines"
+    );
+}
+
+#[test]
+fn drain_time_invariant_across_deployments() {
+    // 203 µs computation phase, regardless of data size or deployment.
+    let words_small: Vec<u32> = DistinctStream::new(1_000, 1).collect();
+    let words_large: Vec<u32> = DistinctStream::new(100_000, 2).collect();
+    let mut a = ParallelHll::new(HllConfig::PAPER, 4);
+    a.feed(&words_small);
+    let ra = a.finish();
+    let mut b = ParallelHll::new(HllConfig::PAPER, 16);
+    b.feed(&words_large);
+    let rb = b.finish();
+    assert_eq!(ra.drain_cycles, rb.drain_cycles);
+    let secs = ra.clock.cycles_to_seconds(ra.drain_cycles);
+    assert!((secs - 203e-6).abs() < 2e-6, "{secs}");
+}
