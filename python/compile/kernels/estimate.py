@@ -35,7 +35,9 @@ def _kernel(regs_ref, sum_ref, zeros_ref):
     # accumulator of the hardware is modelled bit-exactly on the Rust
     # side, and estimates agree to < 1e-12 relative (asserted in tests).
     sum_ref[...] += jnp.sum(jnp.exp2(-r.astype(jnp.float64)), keepdims=True)
-    zeros_ref[...] += jnp.sum((r == 0).astype(jnp.int32), keepdims=True)
+    # Pin the accumulator dtype: with jax_enable_x64 the default sum
+    # dtype widens to int64, which the i32 output ref rejects.
+    zeros_ref[...] += jnp.sum(r == 0, dtype=jnp.int32, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

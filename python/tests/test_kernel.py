@@ -7,6 +7,9 @@ sweeps shapes, precisions and hash widths, asserting exact agreement
 
 import numpy as np
 import pytest
+# The offline image may lack hypothesis; skip the fuzzed suites
+# cleanly instead of failing collection.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,0 +1,107 @@
+//! Registry scaling bench: keyed-ingest throughput vs thread count and
+//! key cardinality, plus the bit-exactness check that anchors the whole
+//! concurrent design (N-thread shared-sketch ingest == sequential).
+//!
+//! Run: `cargo bench --bench registry_scale` (HLL_BENCH_QUICK=1 shrinks
+//! the word volume but keeps the 1M-key / 4-thread coverage).
+
+use std::sync::Arc;
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::coordinator::{run_keyed_stream, CoordinatorConfig};
+use hll_fpga::hll::{ConcurrentHllSketch, HllConfig, HllSketch};
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+
+fn main() {
+    let b = bench_main("registry scale — keyed ingest");
+    let words_per_run: usize = if quick_mode() { 200_000 } else { 2_000_000 };
+
+    // --- Concurrent sketch: thread scaling + bit-exactness ---
+    println!("concurrent sketch ingest (one shared register file, CAS-max):");
+    let mut gen = KeyedFlowGen::new(1, 1.07, 0xC0FFEE);
+    let words: Vec<u32> = gen.batch(words_per_run).into_iter().map(|(_, w)| w).collect();
+    let mut serial = HllSketch::new(HllConfig::PAPER);
+    serial.insert_batch(&words);
+    for threads in [1usize, 2, 4, 8] {
+        let m = b.run_bytes(
+            &format!("concurrent insert_batch threads={threads}"),
+            (words.len() * 4) as u64,
+            || {
+                let shared = ConcurrentHllSketch::paper();
+                let chunk = words.len().div_ceil(threads);
+                std::thread::scope(|scope| {
+                    for slice in words.chunks(chunk) {
+                        let shared = &shared;
+                        scope.spawn(move || shared.insert_batch(slice));
+                    }
+                });
+                shared
+            },
+        );
+        println!("{}", m.report_line());
+        // Acceptance: the N-thread result is bit-identical to the
+        // sequential reference on the same input, every time.
+        let shared = ConcurrentHllSketch::paper();
+        let chunk = words.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for slice in words.chunks(chunk) {
+                let shared = &shared;
+                scope.spawn(move || shared.insert_batch(slice));
+            }
+        });
+        assert_eq!(
+            shared.snapshot(),
+            serial,
+            "threads={threads}: concurrent sketch diverged from sequential"
+        );
+        println!("  bit-identical to sequential insert_batch: ok (threads={threads})");
+    }
+
+    // --- Keyed registry ingest: threads × key cardinality ---
+    for key_card in [1_000u64, 100_000, 1_000_000] {
+        println!("\nkeyed registry ingest, {key_card} keys (zipf 1.07):");
+        let mut gen = KeyedFlowGen::new(key_card, 1.07, key_card);
+        let pairs = gen.batch(words_per_run);
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = CoordinatorConfig {
+                pipelines: threads,
+                batch_size: 8192,
+                ..CoordinatorConfig::default()
+            };
+            let m = b.run_items(
+                &format!("keyed ingest keys={key_card} threads={threads}"),
+                pairs.len() as u64,
+                || {
+                    let registry = SketchRegistry::shared(RegistryConfig {
+                        shards: 64,
+                        ..RegistryConfig::default()
+                    })
+                    .unwrap();
+                    run_keyed_stream(&cfg, registry.clone(), &pairs).unwrap();
+                    registry
+                },
+            );
+            println!("{}", m.report_line());
+        }
+        // Report the population the last run produced.
+        let registry: Arc<SketchRegistry<u64>> = SketchRegistry::shared(RegistryConfig {
+            shards: 64,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let cfg = CoordinatorConfig { pipelines: 4, batch_size: 8192, ..Default::default() };
+        let summary = run_keyed_stream(&cfg, registry.clone(), &pairs).unwrap();
+        let stats = registry.stats();
+        println!(
+            "  population: {} keys ({} sparse / {} dense), {} of sketch heap, \
+             global estimate {:.0}, {:.2} Mpairs/s feeder-side",
+            stats.keys(),
+            stats.sparse_keys(),
+            stats.dense_keys(),
+            hll_fpga::util::fmt::count(stats.memory_bytes() as u64),
+            summary.global_estimate.unwrap_or(0.0),
+            summary.pairs_per_s() / 1e6,
+        );
+    }
+}

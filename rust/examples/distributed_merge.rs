@@ -18,8 +18,9 @@ fn main() {
     println!("=== distributed COUNT(DISTINCT): {shards} shards ===");
 
     // Each "node" sketches its local stream and ships the serialized
-    // sketch (to_bytes) to the leader — 48 KiB + 2 B header per shard,
-    // independent of stream length.
+    // sketch (to_bytes) to the leader — 64 KiB of registers + an 11 B
+    // header (version, p, hash width, seed) per shard, independent of
+    // stream length.
     let mut wires: Vec<Vec<u8>> = Vec::new();
     let mut exact = std::collections::HashSet::new();
     for shard in 0..shards {

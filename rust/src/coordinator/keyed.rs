@@ -1,0 +1,324 @@
+//! Keyed-ingest mode: the coordinator front-end for the multi-tenant
+//! [`crate::registry::SketchRegistry`].
+//!
+//! The single-stream coordinator slices one word stream round-robin over
+//! k pipeline workers. Keyed mode dispatches `(key, word)` batches *by
+//! shard* instead: every registry shard is owned by exactly one worker
+//! (`worker = shard % pipelines`), so shard mutexes are never contended
+//! — the same "inputs are processed where they arrive" discipline the
+//! paper uses for its input slicer (Section V-B), applied to lock
+//! stripes instead of wires. Backpressure is identical to the unkeyed
+//! path: bounded queues block the feeder when a worker falls behind.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::config::CoordinatorConfig;
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::registry::SketchRegistry;
+
+/// Per-worker report for a keyed run.
+#[derive(Debug, Clone, Copy)]
+pub struct KeyedWorkerReport {
+    pub worker: usize,
+    pub batches: u64,
+    pub words: u64,
+    /// Time spent inside registry ingest.
+    pub busy: std::time::Duration,
+}
+
+/// Summary of a completed keyed run.
+#[derive(Debug)]
+pub struct KeyedRunSummary {
+    /// Live keys in the registry after the run.
+    pub keys: usize,
+    /// Distinct count across all keys, if the registry tracks it.
+    pub global_estimate: Option<f64>,
+    pub metrics: MetricsSnapshot,
+    pub workers: Vec<KeyedWorkerReport>,
+    pub elapsed: std::time::Duration,
+}
+
+impl KeyedRunSummary {
+    /// Feeder-side throughput in (key, word) pairs per second.
+    pub fn pairs_per_s(&self) -> f64 {
+        self.metrics.words_in as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// One routed pair: (shard, key, word). The feeder computes the shard
+/// once; workers never re-hash the key.
+type RoutedPair = (usize, u64, u32);
+
+/// A running keyed coordinator over a shared registry.
+pub struct KeyedCoordinator {
+    registry: Arc<SketchRegistry<u64>>,
+    txs: Vec<SyncSender<Vec<RoutedPair>>>,
+    handles: Vec<JoinHandle<KeyedWorkerReport>>,
+    metrics: Arc<Metrics>,
+    /// Per-worker accumulation buffers (flushed at `batch_size`).
+    buffers: Vec<Vec<RoutedPair>>,
+    batch_size: usize,
+    started: Instant,
+}
+
+fn run_keyed_worker(
+    worker: usize,
+    registry: Arc<SketchRegistry<u64>>,
+    rx: Receiver<Vec<RoutedPair>>,
+    metrics: Arc<Metrics>,
+) -> KeyedWorkerReport {
+    let mut batches = 0u64;
+    let mut words = 0u64;
+    let mut busy = std::time::Duration::ZERO;
+    while let Ok(mut batch) = rx.recv() {
+        let t0 = Instant::now();
+        // Group by the precomputed shard (register updates commute, so
+        // the unstable sort's reordering cannot change any sketch) and
+        // ingest each run under one shard-lock acquisition.
+        batch.sort_unstable_by_key(|&(shard, _, _)| shard);
+        let mut rest: &[RoutedPair] = &batch;
+        while let Some(&(shard, _, _)) = rest.first() {
+            let run = rest.iter().take_while(|&&(s, _, _)| s == shard).count();
+            registry.ingest_routed_run(&rest[..run]);
+            rest = &rest[run..];
+        }
+        busy += t0.elapsed();
+        batches += 1;
+        words += batch.len() as u64;
+        metrics
+            .batches_done
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    crate::log_debug!(
+        "keyed-worker",
+        "worker {worker} done: {batches} batches, {words} pairs, busy {:?}",
+        busy
+    );
+    KeyedWorkerReport { worker, batches, words, busy }
+}
+
+impl KeyedCoordinator {
+    /// Spawn keyed pipeline workers over `registry`. Uses `pipelines`,
+    /// `batch_size` and `queue_depth` from `cfg`; `cfg.hll` must match
+    /// the registry's sketch config.
+    pub fn start(
+        cfg: &CoordinatorConfig,
+        registry: Arc<SketchRegistry<u64>>,
+    ) -> Result<Self, String> {
+        cfg.validate()?;
+        if cfg.hll != registry.config().hll {
+            return Err(format!(
+                "coordinator hll config {:?} does not match registry {:?}",
+                cfg.hll,
+                registry.config().hll
+            ));
+        }
+        let metrics = Arc::new(Metrics::default());
+        let mut txs = Vec::with_capacity(cfg.pipelines);
+        let mut handles = Vec::with_capacity(cfg.pipelines);
+        for w in 0..cfg.pipelines {
+            let (tx, rx) = sync_channel::<Vec<RoutedPair>>(cfg.queue_depth);
+            let reg = registry.clone();
+            let m = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("keyed-pipeline-{w}"))
+                .spawn(move || run_keyed_worker(w, reg, rx, m))
+                .expect("spawn keyed worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        crate::log_info!(
+            "coordinator",
+            "keyed mode: {} workers over {} shards (batch={}, depth={})",
+            cfg.pipelines,
+            registry.config().shards,
+            cfg.batch_size,
+            cfg.queue_depth
+        );
+        Ok(Self {
+            buffers: vec![Vec::with_capacity(cfg.batch_size); cfg.pipelines],
+            batch_size: cfg.batch_size,
+            registry,
+            txs,
+            handles,
+            metrics,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn route(
+        txs: &[SyncSender<Vec<RoutedPair>>],
+        metrics: &Metrics,
+        worker: usize,
+        batch: Vec<RoutedPair>,
+    ) {
+        metrics
+            .batches_routed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match txs[worker].try_send(batch) {
+            Ok(()) => {}
+            Err(TrySendError::Full(batch)) => {
+                metrics
+                    .backpressure_stalls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                txs[worker].send(batch).expect("keyed worker hung up early");
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("keyed worker hung up early"),
+        }
+    }
+
+    /// Feed a slice of keyed pairs; full per-worker batches are shipped
+    /// as they fill.
+    pub fn feed(&mut self, pairs: &[(u64, u32)]) {
+        self.metrics
+            .words_in
+            .fetch_add(pairs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let workers = self.txs.len();
+        for &(key, word) in pairs {
+            let shard = self.registry.shard_of(&key);
+            let w = shard % workers;
+            self.buffers[w].push((shard, key, word));
+            if self.buffers[w].len() >= self.batch_size {
+                let full =
+                    std::mem::replace(&mut self.buffers[w], Vec::with_capacity(self.batch_size));
+                Self::route(&self.txs, &self.metrics, w, full);
+            }
+        }
+    }
+
+    /// Close the stream: flush partial batches, join workers, snapshot.
+    pub fn finish(mut self) -> KeyedRunSummary {
+        for (w, buf) in self.buffers.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                let batch = std::mem::take(buf);
+                Self::route(&self.txs, &self.metrics, w, batch);
+            }
+        }
+        let txs = std::mem::take(&mut self.txs);
+        drop(txs); // close queues; workers drain and exit
+
+        let mut workers = Vec::with_capacity(self.handles.len());
+        for handle in self.handles.drain(..) {
+            workers.push(handle.join().expect("keyed worker panicked"));
+        }
+        KeyedRunSummary {
+            keys: self.registry.len(),
+            global_estimate: self.registry.global_estimate(),
+            metrics: self.metrics.snapshot(),
+            workers,
+            elapsed: self.started.elapsed(),
+        }
+    }
+}
+
+/// Convenience: one-shot keyed run over an in-memory pair stream.
+pub fn run_keyed_stream(
+    cfg: &CoordinatorConfig,
+    registry: Arc<SketchRegistry<u64>>,
+    pairs: &[(u64, u32)],
+) -> Result<KeyedRunSummary, String> {
+    let mut c = KeyedCoordinator::start(cfg, registry)?;
+    c.feed(pairs);
+    Ok(c.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
+    use crate::registry::RegistryConfig;
+    use crate::util::Xoshiro256StarStar;
+
+    fn pairs(n: usize, keys: u64, seed: u64) -> Vec<(u64, u32)> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..n).map(|_| (rng.next_u64_below(keys), rng.next_u32())).collect()
+    }
+
+    #[test]
+    fn keyed_run_matches_per_key_serial_reference() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 16,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let cfg = CoordinatorConfig { pipelines: 4, batch_size: 256, ..Default::default() };
+        let data = pairs(30_000, 200, 1);
+        let summary = run_keyed_stream(&cfg, registry.clone(), &data).unwrap();
+        assert_eq!(summary.metrics.words_in, 30_000);
+        assert_eq!(summary.keys, 200);
+
+        // Each key's estimate equals a serially built reference sketch.
+        let mut refs: std::collections::HashMap<u64, AdaptiveSketch> =
+            std::collections::HashMap::new();
+        let mut all = HllSketch::new(HllConfig::PAPER);
+        for &(k, w) in &data {
+            refs.entry(k)
+                .or_insert_with(|| AdaptiveSketch::new(HllConfig::PAPER))
+                .insert_u32(w);
+            all.insert_u32(w);
+        }
+        for (key, reference) in refs.iter_mut() {
+            assert_eq!(registry.estimate(key), Some(reference.estimate()), "key {key}");
+        }
+        // Global union is bit-identical to the serial whole-stream sketch.
+        assert_eq!(registry.merge_all(), all);
+        assert_eq!(summary.global_estimate, Some(all.estimate()));
+    }
+
+    #[test]
+    fn worker_reports_cover_all_pairs() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let cfg = CoordinatorConfig { pipelines: 3, batch_size: 100, ..Default::default() };
+        let data = pairs(12_345, 50, 2);
+        let summary = run_keyed_stream(&cfg, registry, &data).unwrap();
+        let total: u64 = summary.workers.iter().map(|w| w.words).sum();
+        assert_eq!(total, 12_345);
+        assert_eq!(summary.workers.len(), 3);
+        assert_eq!(summary.metrics.batches_done, summary.metrics.batches_routed);
+    }
+
+    #[test]
+    fn incremental_feeding_equals_bulk() {
+        let mk = || {
+            SketchRegistry::shared(RegistryConfig { shards: 8, ..RegistryConfig::default() })
+                .unwrap()
+        };
+        let cfg = CoordinatorConfig { pipelines: 2, batch_size: 64, ..Default::default() };
+        let data = pairs(10_000, 100, 3);
+
+        let bulk_reg = mk();
+        run_keyed_stream(&cfg, bulk_reg.clone(), &data).unwrap();
+
+        let inc_reg = mk();
+        let mut c = KeyedCoordinator::start(&cfg, inc_reg.clone()).unwrap();
+        for chunk in data.chunks(33) {
+            c.feed(chunk);
+        }
+        c.finish();
+
+        assert_eq!(bulk_reg.merge_all(), inc_reg.merge_all());
+        assert_eq!(bulk_reg.len(), inc_reg.len());
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            hll: crate::hll::HllConfig::new(12, crate::hll::HashKind::H64).unwrap(),
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let cfg = CoordinatorConfig::default(); // PAPER hll
+        assert!(KeyedCoordinator::start(&cfg, registry).is_err());
+    }
+}

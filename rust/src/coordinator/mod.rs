@@ -11,10 +11,12 @@
 
 pub mod batch;
 pub mod config;
+pub mod keyed;
 pub mod metrics;
 pub mod worker;
 
 pub use config::CoordinatorConfig;
+pub use keyed::{run_keyed_stream, KeyedCoordinator, KeyedRunSummary, KeyedWorkerReport};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerReport};
 
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};

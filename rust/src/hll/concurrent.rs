@@ -1,0 +1,251 @@
+//! Lock-free shared HLL sketch — the software analogue of the paper's
+//! multi-pipeline register merge (Fig 3).
+//!
+//! The hardware runs k aggregation pipelines into private register files
+//! and folds them by bucket-wise max. That fold is only correct because
+//! register updates are commutative, associative, idempotent maxes — and
+//! the same property lets *software* threads share one register file
+//! without locks: each register is an [`AtomicU8`] raised by a CAS-max
+//! loop. Any interleaving of concurrent inserts yields exactly the
+//! register file a serial replay of the same multiset would, so an
+//! N-thread ingest is bit-identical to [`HllSketch::insert_batch`] over
+//! the concatenated input (asserted by the differential tests and the
+//! `registry_scale` bench).
+//!
+//! Orderings are `Relaxed` throughout: register values are monotone and
+//! independent, and readers that need a cross-register-consistent view
+//! (estimates after ingest) obtain it from the happens-before edge of
+//! joining the writer threads. Mid-ingest [`ConcurrentHllSketch::snapshot`]
+//! calls see some valid intermediate multiset's sketch — never a torn
+//! register.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::config::HllConfig;
+use super::estimate::{estimate, EstimateBreakdown};
+use super::sketch::{HllSketch, SketchError};
+
+/// A dense HLL sketch whose register file may be written by many threads
+/// concurrently, lock-free.
+#[derive(Debug)]
+pub struct ConcurrentHllSketch {
+    cfg: HllConfig,
+    regs: Vec<AtomicU8>,
+}
+
+impl ConcurrentHllSketch {
+    pub fn new(cfg: HllConfig) -> Self {
+        let mut regs = Vec::with_capacity(cfg.m());
+        regs.resize_with(cfg.m(), || AtomicU8::new(0));
+        Self { cfg, regs }
+    }
+
+    /// The paper's hardware configuration (p=16, 64-bit hash).
+    pub fn paper() -> Self {
+        Self::new(HllConfig::PAPER)
+    }
+
+    /// Seed from an existing dense sketch's registers.
+    pub fn from_sketch(sketch: &HllSketch) -> Self {
+        let out = Self::new(*sketch.config());
+        for (slot, &r) in out.regs.iter().zip(sketch.registers()) {
+            slot.store(r, Ordering::Relaxed);
+        }
+        out
+    }
+
+    #[inline]
+    pub fn config(&self) -> &HllConfig {
+        &self.cfg
+    }
+
+    /// Raise one register to at least `rank` via a CAS-max loop. The
+    /// common case (rank does not beat the current value) is a single
+    /// relaxed load with no RMW traffic — important under key skew,
+    /// where hot buckets saturate early.
+    #[inline]
+    fn cas_max(slot: &AtomicU8, rank: u8) {
+        let mut cur = slot.load(Ordering::Relaxed);
+        while rank > cur {
+            match slot.compare_exchange_weak(cur, rank, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Insert a pre-computed H-bit hash (Algorithm 1 line 9), shared.
+    #[inline]
+    pub fn insert_hash(&self, hash: u64) {
+        let (idx, rank) = self.cfg.split_hash(hash);
+        Self::cas_max(&self.regs[idx], rank);
+    }
+
+    /// Insert a 32-bit stream word (the paper's stream element type).
+    #[inline]
+    pub fn insert_u32(&self, v: u32) {
+        self.insert_hash(self.cfg.hash_word(v));
+    }
+
+    /// Insert a whole batch. Hashing is phase-split four-wide like the
+    /// dense hot path so the hash chains pipeline; the register updates
+    /// are CAS-maxes instead of private stores.
+    pub fn insert_batch(&self, batch: &[u32]) {
+        let mut chunks = batch.chunks_exact(4);
+        for chunk in &mut chunks {
+            let h0 = self.cfg.hash_word(chunk[0]);
+            let h1 = self.cfg.hash_word(chunk[1]);
+            let h2 = self.cfg.hash_word(chunk[2]);
+            let h3 = self.cfg.hash_word(chunk[3]);
+            for h in [h0, h1, h2, h3] {
+                self.insert_hash(h);
+            }
+        }
+        for &v in chunks.remainder() {
+            self.insert_u32(v);
+        }
+    }
+
+    /// Bucket-wise max of a plain sketch into this one (Fig 3's fold,
+    /// against a live shared register file).
+    pub fn merge_sketch(&self, other: &HllSketch) -> Result<(), SketchError> {
+        if self.cfg != *other.config() {
+            return Err(SketchError::ConfigMismatch(self.cfg, *other.config()));
+        }
+        for (slot, &r) in self.regs.iter().zip(other.registers()) {
+            if r > 0 {
+                Self::cas_max(slot, r);
+            }
+        }
+        Ok(())
+    }
+
+    /// Bucket-wise max of another concurrent sketch into this one.
+    pub fn merge_concurrent(&self, other: &ConcurrentHllSketch) -> Result<(), SketchError> {
+        if self.cfg != other.cfg {
+            return Err(SketchError::ConfigMismatch(self.cfg, other.cfg));
+        }
+        for (slot, src) in self.regs.iter().zip(&other.regs) {
+            let r = src.load(Ordering::Relaxed);
+            if r > 0 {
+                Self::cas_max(slot, r);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy the register file into an owned plain sketch.
+    pub fn snapshot(&self) -> HllSketch {
+        let regs: Vec<u8> = self.regs.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+        HllSketch::from_registers(self.cfg, regs).expect("live registers are in range")
+    }
+
+    /// Number of registers still at zero.
+    pub fn zero_registers(&self) -> usize {
+        self.regs
+            .iter()
+            .filter(|r| r.load(Ordering::Relaxed) == 0)
+            .count()
+    }
+
+    /// Cardinality estimate with all Algorithm-1 corrections, over a
+    /// point-in-time register snapshot.
+    pub fn estimate(&self) -> f64 {
+        self.estimate_breakdown().estimate
+    }
+
+    /// Full estimate breakdown over a point-in-time register snapshot.
+    pub fn estimate_breakdown(&self) -> EstimateBreakdown {
+        let regs: Vec<u8> = self.regs.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+        estimate(&self.cfg, &regs)
+    }
+
+    /// Reset all registers to zero.
+    pub fn clear(&self) {
+        for r in &self.regs {
+            r.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::config::HashKind;
+    use crate::util::Xoshiro256StarStar;
+
+    fn words(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_u32()).collect()
+    }
+
+    #[test]
+    fn single_thread_matches_dense() {
+        for h in [HashKind::H32, HashKind::H64] {
+            let cfg = HllConfig::new(14, h).unwrap();
+            let data = words(20_000, 11);
+            let shared = ConcurrentHllSketch::new(cfg);
+            shared.insert_batch(&data);
+            let mut dense = HllSketch::new(cfg);
+            dense.insert_batch(&data);
+            assert_eq!(shared.snapshot(), dense, "hash={h:?}");
+            assert_eq!(shared.estimate(), dense.estimate());
+            assert_eq!(shared.zero_registers(), dense.zero_registers());
+        }
+    }
+
+    #[test]
+    fn n_thread_ingest_is_register_identical_to_sequential() {
+        let cfg = HllConfig::PAPER;
+        let data = words(64_000, 23);
+        let mut serial = HllSketch::new(cfg);
+        serial.insert_batch(&data);
+        for threads in [2usize, 4, 8] {
+            let shared = ConcurrentHllSketch::new(cfg);
+            let chunk = data.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for slice in data.chunks(chunk) {
+                    let shared = &shared;
+                    scope.spawn(move || shared.insert_batch(slice));
+                }
+            });
+            assert_eq!(shared.snapshot(), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn merge_against_live_sketch() {
+        let cfg = HllConfig::PAPER;
+        let data = words(10_000, 5);
+        let (left, right) = data.split_at(4_000);
+        let shared = ConcurrentHllSketch::new(cfg);
+        shared.insert_batch(left);
+        let mut other = HllSketch::new(cfg);
+        other.insert_batch(right);
+        shared.merge_sketch(&other).unwrap();
+        let mut all = HllSketch::new(cfg);
+        all.insert_batch(&data);
+        assert_eq!(shared.snapshot(), all);
+    }
+
+    #[test]
+    fn merge_rejects_config_and_seed_mismatch() {
+        let a = ConcurrentHllSketch::new(HllConfig::new(14, HashKind::H64).unwrap());
+        let b = HllSketch::new(HllConfig::new(16, HashKind::H64).unwrap());
+        assert!(matches!(a.merge_sketch(&b), Err(SketchError::ConfigMismatch(..))));
+        let seeded = HllSketch::new(HllConfig::new(14, HashKind::H64).unwrap().with_seed(9));
+        assert!(a.merge_sketch(&seeded).is_err());
+        let c = ConcurrentHllSketch::new(HllConfig::new(12, HashKind::H64).unwrap());
+        assert!(a.merge_concurrent(&c).is_err());
+    }
+
+    #[test]
+    fn from_sketch_and_clear_roundtrip() {
+        let mut dense = HllSketch::paper();
+        dense.insert_batch(&words(5_000, 3));
+        let shared = ConcurrentHllSketch::from_sketch(&dense);
+        assert_eq!(shared.snapshot(), dense);
+        shared.clear();
+        assert_eq!(shared.zero_registers(), dense.config().m());
+    }
+}

@@ -1,7 +1,8 @@
 //! HLL configuration: precision `p`, hash width `H`, and the derived
 //! constants of Algorithm 1 (α_m, thresholds, memory footprint).
 
-use crate::util::bits::ceil_log2;
+use super::murmur3::{murmur3_x64_64_u32, murmur3_x86_32_u32};
+use crate::util::bits::{ceil_log2, rho};
 
 /// Hash width H — the paper studies H ∈ {32, 64} (Section IV).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -30,11 +31,22 @@ impl HashKind {
 }
 
 /// Errors constructing an [`HllConfig`].
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ConfigError {
-    #[error("precision p={0} out of range [4, 16] (Algorithm 1, line 1)")]
     PrecisionOutOfRange(u8),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::PrecisionOutOfRange(p) => {
+                write!(f, "precision p={p} out of range [4, 16] (Algorithm 1, line 1)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Static HLL parameters. The paper's hardware configuration is
 /// `p = 16`, `H = 64` (chosen in Section IV); the profiling study also
@@ -146,6 +158,27 @@ impl HllConfig {
     #[inline]
     pub fn standard_error(&self) -> f64 {
         1.04 / (self.m() as f64).sqrt()
+    }
+
+    /// Hash a 32-bit stream word with the configured Murmur3 variant and
+    /// seed. Shared by the dense, sparse and concurrent sketch front
+    /// ends so all of them are hash-compatible by construction.
+    #[inline]
+    pub fn hash_word(&self, v: u32) -> u64 {
+        match self.hash {
+            HashKind::H32 => murmur3_x86_32_u32(v, self.seed as u32) as u64,
+            HashKind::H64 => murmur3_x64_64_u32(v, self.seed),
+        }
+    }
+
+    /// Split an H-bit hash into (bucket index, rank) — Algorithm 1 lines
+    /// 7–8: idx = first p bits, w = remaining H−p bits, rank = ρ(w).
+    #[inline]
+    pub fn split_hash(&self, hash: u64) -> (usize, u8) {
+        let w_bits = self.w_bits();
+        let idx = (hash >> w_bits) as usize; // top p bits
+        let w = hash & ((1u64 << w_bits) - 1); // low H-p bits
+        (idx, rho(w, w_bits))
     }
 }
 

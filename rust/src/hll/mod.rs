@@ -2,6 +2,7 @@
 //! both hash widths, all correction branches, merge (Fig 3's fold),
 //! memory-footprint analysis (Table II), and a sparse/adaptive extension.
 
+pub mod concurrent;
 pub mod config;
 pub mod estimate;
 pub mod murmur3;
@@ -9,8 +10,9 @@ pub mod setops;
 pub mod sketch;
 pub mod sparse;
 
+pub use concurrent::ConcurrentHllSketch;
 pub use config::{ConfigError, HashKind, HllConfig};
 pub use estimate::{estimate, linear_counting, Correction, EstimateBreakdown};
 pub use setops::{intersection_cardinality, jaccard, union_cardinality};
-pub use sketch::{HllSketch, SketchError};
+pub use sketch::{HllSketch, SketchError, WIRE_HEADER_LEN, WIRE_VERSION};
 pub use sparse::{AdaptiveSketch, SparseHll};

@@ -1,20 +1,58 @@
 //! The dense HLL sketch: Algorithm 1's register file M[0..m-1] plus the
 //! aggregation phase (insert) and the merge fold used by the parallel
 //! architecture (Fig 3).
+//!
+//! # Wire format
+//!
+//! [`HllSketch::to_bytes`] / [`HllSketch::from_bytes`] ship partial
+//! sketches between nodes (the coordinator's merge phase and the
+//! distributed-merge example). The header is:
+//!
+//! | offset | size | field                                            |
+//! |--------|------|--------------------------------------------------|
+//! | 0      | 1    | wire version ([`WIRE_VERSION`], currently 2)     |
+//! | 1      | 1    | precision `p`                                    |
+//! | 2      | 1    | hash width in bits (32 or 64)                    |
+//! | 3      | 8    | hash seed, little-endian u64                     |
+//! | 11     | m    | registers, one byte each                         |
+//!
+//! Version 1 (the original format) had no seed byte and silently decoded
+//! every sketch as seed 0, so merging a wire-decoded sketch built with a
+//! nonzero seed produced garbage without any error. Version 2 carries
+//! the seed; a decoded sketch keeps its seed in its [`HllConfig`], and
+//! since the seed participates in config equality, merging sketches with
+//! mismatched seeds is rejected with [`SketchError::ConfigMismatch`].
 
 use super::config::{HashKind, HllConfig};
 use super::estimate::{estimate, EstimateBreakdown};
-use super::murmur3::{murmur3_x64_64, murmur3_x64_64_u32, murmur3_x86_32, murmur3_x86_32_u32};
+use super::murmur3::{murmur3_x64_64, murmur3_x64_64_u32, murmur3_x86_32};
 use crate::util::bits::rho;
 
+/// Version byte leading the serialized form (see the module docs).
+pub const WIRE_VERSION: u8 = 2;
+
+/// Serialized header length in bytes: version, p, hash bits, seed.
+pub const WIRE_HEADER_LEN: usize = 11;
+
 /// Errors from sketch operations.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SketchError {
-    #[error("cannot merge sketches with different configs ({0:?} vs {1:?})")]
     ConfigMismatch(HllConfig, HllConfig),
-    #[error("serialized sketch is malformed: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for SketchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SketchError::ConfigMismatch(a, b) => {
+                write!(f, "cannot merge sketches with different configs ({a:?} vs {b:?})")
+            }
+            SketchError::Malformed(what) => write!(f, "serialized sketch is malformed: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SketchError {}
 
 /// A dense HyperLogLog sketch.
 ///
@@ -52,12 +90,7 @@ impl HllSketch {
     /// 7–8: idx = first p bits, w = remaining H−p bits, rank = ρ(w).
     #[inline]
     pub fn index_and_rank(&self, hash: u64) -> (usize, u8) {
-        let h_bits = self.cfg.hash().bits();
-        let p = self.cfg.p() as u32;
-        let w_bits = h_bits - p;
-        let idx = (hash >> w_bits) as usize; // top p bits
-        let w = hash & ((1u64 << w_bits) - 1); // low H-p bits
-        (idx, rho(w, w_bits))
+        self.cfg.split_hash(hash)
     }
 
     /// Apply a pre-split (index, rank) update: M[idx] = max(M[idx], rank).
@@ -88,10 +121,7 @@ impl HllSketch {
     /// Hash a 32-bit data word with the configured Murmur3 variant.
     #[inline]
     pub fn hash_u32(&self, v: u32) -> u64 {
-        match self.cfg.hash() {
-            HashKind::H32 => murmur3_x86_32_u32(v, self.cfg.seed() as u32) as u64,
-            HashKind::H64 => murmur3_x64_64_u32(v, self.cfg.seed()),
-        }
+        self.cfg.hash_word(v)
     }
 
     /// Insert a 32-bit data word (the paper's stream element type).
@@ -218,31 +248,45 @@ impl HllSketch {
         Ok(Self { cfg, regs })
     }
 
-    /// Serialize to the simple on-wire format used by the coordinator
-    /// when shipping partial sketches: `[p, hash_bits, regs...]`.
+    /// Serialize to the on-wire format used by the coordinator when
+    /// shipping partial sketches: `[version, p, hash_bits, seed (8 B LE),
+    /// regs...]` — see the module docs for the full header layout.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(2 + self.regs.len());
+        let mut out = Vec::with_capacity(WIRE_HEADER_LEN + self.regs.len());
+        out.push(WIRE_VERSION);
         out.push(self.cfg.p());
         out.push(self.cfg.hash().bits() as u8);
+        out.extend_from_slice(&self.cfg.seed().to_le_bytes());
         out.extend_from_slice(&self.regs);
         out
     }
 
-    /// Inverse of [`HllSketch::to_bytes`]. The seed is taken as 0 (the
-    /// only seed used on the wire).
+    /// Inverse of [`HllSketch::to_bytes`]. The decoded sketch carries the
+    /// hash seed from the header, so a later [`HllSketch::merge`] with a
+    /// differently-seeded sketch fails with
+    /// [`SketchError::ConfigMismatch`] instead of silently folding
+    /// incompatible register files.
     pub fn from_bytes(data: &[u8]) -> Result<Self, SketchError> {
-        if data.len() < 2 {
+        if data.len() < WIRE_HEADER_LEN {
             return Err(SketchError::Malformed("truncated header".into()));
         }
-        let p = data[0];
-        let hash = match data[1] {
+        if data[0] != WIRE_VERSION {
+            return Err(SketchError::Malformed(format!(
+                "unsupported wire version {} (expected {WIRE_VERSION})",
+                data[0]
+            )));
+        }
+        let p = data[1];
+        let hash = match data[2] {
             32 => HashKind::H32,
             64 => HashKind::H64,
             other => return Err(SketchError::Malformed(format!("bad hash width {other}"))),
         };
+        let seed = u64::from_le_bytes(data[3..WIRE_HEADER_LEN].try_into().unwrap());
         let cfg = HllConfig::new(p, hash)
-            .map_err(|e| SketchError::Malformed(e.to_string()))?;
-        Self::from_registers(cfg, data[2..].to_vec())
+            .map_err(|e| SketchError::Malformed(e.to_string()))?
+            .with_seed(seed);
+        Self::from_registers(cfg, data[WIRE_HEADER_LEN..].to_vec())
     }
 }
 
@@ -400,17 +444,59 @@ mod tests {
     }
 
     #[test]
+    fn serde_roundtrip_preserves_seed() {
+        let cfg = HllConfig::new(12, HashKind::H64).unwrap().with_seed(0xDEAD_BEEF_CAFE_F00D);
+        let mut s = HllSketch::new(cfg);
+        for v in 0..3000u32 {
+            s.insert_u32(v.wrapping_mul(2654435761));
+        }
+        let s2 = HllSketch::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(s2.config().seed(), 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn wire_decoded_seed_mismatch_rejected_on_merge() {
+        // The bug this format fixes: a sketch built with a nonzero seed
+        // used to decode as seed 0 and merge silently into seed-0
+        // sketches. Now the seed rides the wire and the merge is rejected.
+        let seeded = HllSketch::new(cfg(12, HashKind::H64).with_seed(7));
+        let decoded = HllSketch::from_bytes(&seeded.to_bytes()).unwrap();
+        assert_eq!(decoded.config().seed(), 7);
+        let mut plain = HllSketch::new(cfg(12, HashKind::H64));
+        assert!(matches!(
+            plain.merge(&decoded),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+    }
+
+    #[test]
     fn from_bytes_rejects_garbage() {
         assert!(HllSketch::from_bytes(&[]).is_err());
-        assert!(HllSketch::from_bytes(&[16]).is_err());
-        assert!(HllSketch::from_bytes(&[16, 48, 0, 0]).is_err()); // bad width
-        assert!(HllSketch::from_bytes(&[2, 64]).is_err()); // bad p
-        // Wrong register count.
-        assert!(HllSketch::from_bytes(&[16, 64, 0, 0, 0]).is_err());
+        // Truncated header (needs WIRE_HEADER_LEN bytes).
+        assert!(HllSketch::from_bytes(&[WIRE_VERSION, 16]).is_err());
+        assert!(HllSketch::from_bytes(&vec![0u8; WIRE_HEADER_LEN - 1]).is_err());
+        // Unknown wire version (v1 had no seed field).
+        let mut v1 = vec![1u8, 16, 64];
+        v1.extend(vec![0u8; 8 + 16]);
+        assert!(HllSketch::from_bytes(&v1).is_err());
+        // Bad hash width.
+        let mut bad_width = vec![WIRE_VERSION, 16, 48];
+        bad_width.extend(vec![0u8; 8 + 4]);
+        assert!(HllSketch::from_bytes(&bad_width).is_err());
+        // Bad precision.
+        let mut bad_p = vec![WIRE_VERSION, 2, 64];
+        bad_p.extend(vec![0u8; 8 + 4]);
+        assert!(HllSketch::from_bytes(&bad_p).is_err());
+        // Wrong register count (p=16 needs 65536 registers).
+        let mut short_regs = vec![WIRE_VERSION, 16, 64];
+        short_regs.extend(vec![0u8; 8 + 3]);
+        assert!(HllSketch::from_bytes(&short_regs).is_err());
         // Register exceeding max rank.
-        let mut bytes = vec![4u8, 64];
-        bytes.extend(vec![0u8; 16]);
-        bytes[2] = 62; // max rank for p=4,H=64 is 61
+        let mut bytes = vec![WIRE_VERSION, 4, 64];
+        bytes.extend(vec![0u8; 8]); // seed
+        bytes.extend(vec![0u8; 16]); // registers for p=4
+        bytes[WIRE_HEADER_LEN] = 62; // max rank for p=4,H=64 is 61
         assert!(HllSketch::from_bytes(&bytes).is_err());
     }
 

@@ -53,10 +53,24 @@ impl SparseHll {
         &self.cfg
     }
 
-    /// Number of distinct indices currently tracked (after compaction).
-    pub fn len(&mut self) -> usize {
-        self.compact();
-        self.sorted.len()
+    /// Number of distinct indices currently tracked, counting across
+    /// both the sorted run and the unsorted staging buffer without
+    /// mutating either — so `len`, [`SparseHll::is_empty`] and
+    /// [`SparseHll::memory_bytes`] are all consistent read-only views of
+    /// the same state (previously `len` forced a compaction and needed
+    /// `&mut self`, while the other accessors saw pre-compaction state).
+    pub fn len(&self) -> usize {
+        if self.staging.is_empty() {
+            return self.sorted.len();
+        }
+        let mut staged: Vec<u64> = self.staging.iter().map(|e| e >> 8).collect();
+        staged.sort_unstable();
+        staged.dedup();
+        let fresh = staged
+            .iter()
+            .filter(|&&idx| self.sorted.binary_search_by_key(&idx, |e| e >> 8).is_err())
+            .count();
+        self.sorted.len() + fresh
     }
 
     pub fn is_empty(&self) -> bool {
@@ -69,16 +83,22 @@ impl SparseHll {
     }
 
     pub fn insert_hash(&mut self, hash: u64) {
-        // Reuse the dense split logic via a transient sketch-less path.
-        let h_bits = self.cfg.hash().bits();
-        let p = self.cfg.p() as u32;
-        let w_bits = h_bits - p;
-        let idx = (hash >> w_bits) as usize;
-        let w = hash & ((1u64 << w_bits) - 1);
-        let rank = crate::util::bits::rho(w, w_bits);
+        // Same split as the dense and concurrent paths, by construction.
+        let (idx, rank) = self.cfg.split_hash(hash);
         self.staging.push(encode(idx, rank));
         if self.staging.len() >= self.staging_cap {
             self.compact();
+        }
+    }
+
+    /// Visit every live (bucket index, max rank) entry after compacting —
+    /// proportional to live entries, not to m. Used by the registry's
+    /// bulk merge so sparse keys don't get densified just to be folded.
+    pub fn for_each_entry<F: FnMut(usize, u8)>(&mut self, mut f: F) {
+        self.compact();
+        for &e in &self.sorted {
+            let (idx, rank) = decode(e);
+            f(idx, rank);
         }
     }
 
@@ -180,14 +200,21 @@ impl AdaptiveSketch {
     }
 
     pub fn insert_u32(&mut self, v: u32) {
-        let h = match self {
-            AdaptiveSketch::Sparse(s) => {
-                // Hash with the same function the dense path uses.
-                HllSketch::new(*s.config()).hash_u32(v)
-            }
-            AdaptiveSketch::Dense(d) => d.hash_u32(v),
-        };
+        // Hash straight from the config — the sparse arm used to build a
+        // throwaway dense HllSketch (a 2^p-byte allocation) per insert
+        // just to call its hash method.
+        let h = self.config().hash_word(v);
         self.insert_hash(h);
+    }
+
+    /// Approximate heap bytes held by this sketch — the registry's
+    /// memory-accounting input. Dense sketches report their register
+    /// file; sparse ones their buffers.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            AdaptiveSketch::Sparse(s) => s.memory_bytes(),
+            AdaptiveSketch::Dense(d) => d.config().m(),
+        }
     }
 
     fn upgrade(&mut self) {
@@ -308,6 +335,30 @@ mod tests {
         }
         a.merge_into(b).unwrap();
         assert_eq!(a.into_dense(), all);
+    }
+
+    #[test]
+    fn len_is_read_only_and_compaction_invariant() {
+        let mut sparse = SparseHll::new(cfg());
+        let probe = HllSketch::new(cfg());
+        for v in 0..300u32 {
+            sparse.insert_hash(probe.hash_u32(v));
+            sparse.insert_hash(probe.hash_u32(v)); // duplicate
+        }
+        // Read through a shared borrow: must not mutate.
+        let shared: &SparseHll = &sparse;
+        let before = shared.len();
+        assert!(!shared.is_empty());
+        let mem = shared.memory_bytes();
+        assert!(mem > 0);
+        // Forcing a compaction must not change the distinct-index count.
+        let dense = sparse.to_dense();
+        assert_eq!(sparse.len(), before);
+        assert_eq!(
+            dense.registers().iter().filter(|&&r| r != 0).count(),
+            before,
+            "len must equal the number of occupied dense buckets"
+        );
     }
 
     #[test]

@@ -25,9 +25,11 @@ pub mod hll;
 pub mod net;
 pub mod pcie;
 pub mod proptest_lite;
+pub mod registry;
 pub mod repro;
 pub mod runtime;
 pub mod stats;
 pub mod util;
 
-pub use hll::{HashKind, HllConfig, HllSketch};
+pub use hll::{ConcurrentHllSketch, HashKind, HllConfig, HllSketch};
+pub use registry::{RegistryConfig, SketchRegistry};

@@ -8,5 +8,5 @@ pub mod nic;
 pub mod tcp;
 
 pub use link::LinkParams;
-pub use nic::{run_timing, run_with_data, table4_sweep, NicConfig, NicRun};
+pub use nic::{run_timing, run_with_data, table4_sweep, KeyedFlowGen, NicConfig, NicRun};
 pub use tcp::{TcpSim, TcpStats};

@@ -10,6 +10,49 @@ use super::link::LinkParams;
 use super::tcp::{TcpSim, TcpStats};
 use crate::fpga::{theoretical_throughput_bytes_per_s, ParallelHll, ParallelResult};
 use crate::hll::HllConfig;
+use crate::util::{Xoshiro256StarStar, Zipf};
+
+/// Deterministic keyed-flow traffic source: `(flow key, word)` pairs with
+/// Zipf-distributed flow popularity — the NIC-side workload for the
+/// multi-tenant registry path ("how many distinct items per flow?").
+/// Real NIC traffic is heavily skewed across flows, which is exactly
+/// what stresses the registry's shard striping and the hot buckets of
+/// the global concurrent sketch; `skew` is the Zipf exponent (≈1.07 for
+/// web-like popularity).
+#[derive(Debug, Clone)]
+pub struct KeyedFlowGen {
+    rng: Xoshiro256StarStar,
+    flows: Zipf,
+    key_domain: u64,
+}
+
+impl KeyedFlowGen {
+    pub fn new(keys: u64, skew: f64, seed: u64) -> Self {
+        assert!(keys >= 1);
+        Self {
+            rng: Xoshiro256StarStar::seed_from_u64(seed),
+            flows: Zipf::new(keys, skew),
+            key_domain: keys,
+        }
+    }
+
+    pub fn key_domain(&self) -> u64 {
+        self.key_domain
+    }
+
+    /// Next `(flow key, payload word)` pair. Keys are `0..key_domain`,
+    /// key 0 the hottest flow.
+    pub fn next_pair(&mut self) -> (u64, u32) {
+        let key = self.flows.sample(&mut self.rng) - 1; // rank 1 → key 0
+        (key, self.rng.next_u32())
+    }
+
+    /// Produce a batch of `n` pairs (the unit the keyed coordinator
+    /// feeds).
+    pub fn batch(&mut self, n: usize) -> Vec<(u64, u32)> {
+        (0..n).map(|_| self.next_pair()).collect()
+    }
+}
 
 /// Configuration of the NIC deployment.
 #[derive(Debug, Clone, Copy)]
@@ -106,6 +149,33 @@ mod tests {
     fn drain_constant_203us() {
         let run = run_timing(&NicConfig::paper(8), 1 << 20);
         assert!((run.drain_seconds - 203e-6).abs() < 2e-6);
+    }
+
+    #[test]
+    fn keyed_flow_gen_is_deterministic_and_skewed() {
+        let mut a = KeyedFlowGen::new(1_000, 1.2, 9);
+        let mut b = KeyedFlowGen::new(1_000, 1.2, 9);
+        assert_eq!(a.batch(500), b.batch(500));
+
+        let mut c = KeyedFlowGen::new(1_000, 1.2, 10);
+        let batch = c.batch(4_000);
+        assert!(batch.iter().all(|&(k, _)| k < 1_000));
+        // Zipf head: the hottest 10 flows carry a large share.
+        let head = batch.iter().filter(|&&(k, _)| k < 10).count();
+        assert!(head > 800, "zipf head mass too small: {head}");
+        assert_eq!(c.key_domain(), 1_000);
+    }
+
+    #[test]
+    fn keyed_flows_feed_the_registry() {
+        use crate::registry::{RegistryConfig, SketchRegistry};
+        let reg: SketchRegistry<u64> =
+            SketchRegistry::new(RegistryConfig::default()).unwrap();
+        let mut gen = KeyedFlowGen::new(64, 1.07, 3);
+        let pairs = gen.batch(10_000);
+        reg.ingest_pairs(&pairs);
+        assert!(reg.len() <= 64 && reg.len() > 10);
+        assert_eq!(reg.stats().words(), 10_000);
     }
 
     #[test]

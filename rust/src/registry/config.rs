@@ -1,0 +1,115 @@
+//! Registry configuration and accounting types.
+
+use crate::hll::HllConfig;
+
+/// Static parameters of a [`super::SketchRegistry`].
+#[derive(Debug, Clone, Copy)]
+pub struct RegistryConfig {
+    /// Per-key sketch parameters (all keys share one config; mixed-config
+    /// registries would make cross-key merges unsound).
+    pub hll: HllConfig,
+    /// Number of mutex stripes; must be a power of two so the shard
+    /// selector is a mask. More shards = less ingest contention, more
+    /// fixed overhead; 64 is a good default for up to ~16 threads.
+    pub shards: usize,
+    /// Maintain a lock-free all-keys union sketch updated on every
+    /// ingested word (answers global distinct counts in O(m)).
+    pub track_global: bool,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self { hll: HllConfig::PAPER, shards: 64, track_global: true }
+    }
+}
+
+impl RegistryConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if !self.shards.is_power_of_two() {
+            return Err(format!("shards must be a power of two, got {}", self.shards));
+        }
+        Ok(())
+    }
+}
+
+/// Point-in-time accounting for one shard.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Live keys in this shard.
+    pub keys: usize,
+    /// Keys still in the sparse representation.
+    pub sparse_keys: usize,
+    /// Keys upgraded to the dense register file.
+    pub dense_keys: usize,
+    /// Approximate heap bytes held by this shard's sketches.
+    pub memory_bytes: usize,
+    /// Words ingested through this shard since creation.
+    pub words: u64,
+}
+
+/// Registry-wide accounting: per-shard stats plus totals.
+#[derive(Debug, Clone, Default)]
+pub struct RegistryStats {
+    pub shards: Vec<ShardStats>,
+}
+
+impl RegistryStats {
+    pub fn keys(&self) -> usize {
+        self.shards.iter().map(|s| s.keys).sum()
+    }
+
+    pub fn sparse_keys(&self) -> usize {
+        self.shards.iter().map(|s| s.sparse_keys).sum()
+    }
+
+    pub fn dense_keys(&self) -> usize {
+        self.shards.iter().map(|s| s.dense_keys).sum()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.memory_bytes).sum()
+    }
+
+    pub fn words(&self) -> u64 {
+        self.shards.iter().map(|s| s.words).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(RegistryConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn non_power_of_two_shards_rejected() {
+        let mut c = RegistryConfig::default();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        c.shards = 48;
+        assert!(c.validate().is_err());
+        c.shards = 1;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn stats_totals_sum_shards() {
+        let stats = RegistryStats {
+            shards: vec![
+                ShardStats { keys: 2, sparse_keys: 1, dense_keys: 1, memory_bytes: 100, words: 7 },
+                ShardStats { keys: 3, sparse_keys: 3, dense_keys: 0, memory_bytes: 50, words: 5 },
+            ],
+        };
+        assert_eq!(stats.keys(), 5);
+        assert_eq!(stats.sparse_keys(), 4);
+        assert_eq!(stats.dense_keys(), 1);
+        assert_eq!(stats.memory_bytes(), 150);
+        assert_eq!(stats.words(), 12);
+    }
+}

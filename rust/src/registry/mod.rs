@@ -1,0 +1,33 @@
+//! Multi-tenant sketch store: millions of concurrent, keyed HLL sketches
+//! behind a shard-striped registry.
+//!
+//! The paper accelerates *one* stream's sketch; a production deployment
+//! ("how many distinct items per user / per flow / per tenant?") needs
+//! one sketch per key, alive simultaneously for millions of keys. This
+//! module provides that layer, following the architecture production HLL
+//! stores use (HLL++-style adaptive sketches behind a striped map):
+//!
+//! * each key owns an [`crate::hll::AdaptiveSketch`] — sparse
+//!   (index,rank) pairs while small, upgraded to a dense register file
+//!   at the HLL++ threshold, so a million mostly-small keys cost MBs,
+//!   not `1M × 64 KiB`;
+//! * keys are striped over `shards` (power of two) mutexes, so ingest
+//!   threads working different shards never contend — the locking
+//!   analogue of the paper's "inputs are processed where they arrive"
+//!   slicing (Section V-B);
+//! * an optional registry-global [`crate::hll::ConcurrentHllSketch`] is
+//!   raised lock-free on every ingested word, answering "distinct items
+//!   across *all* keys" in O(m) without walking a single shard — this is
+//!   Fig 3's merge fold running continuously instead of at stream end.
+//!
+//! Keyed batch ingest, bulk estimate/merge/evict, and per-shard memory
+//! accounting are on [`SketchRegistry`]; [`crate::coordinator::keyed`]
+//! drives it with pipeline workers and
+//! [`crate::runtime::RegistryService`] exposes it to query clients.
+
+pub mod config;
+pub mod registry;
+pub mod shard;
+
+pub use config::{RegistryConfig, RegistryStats, ShardStats};
+pub use registry::SketchRegistry;

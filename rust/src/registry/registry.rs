@@ -1,0 +1,364 @@
+//! The shard-striped, concurrent, keyed sketch store.
+
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::config::{RegistryConfig, RegistryStats};
+use super::shard::Shard;
+use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllSketch, SketchError};
+
+/// A concurrent registry of per-key adaptive HLL sketches.
+///
+/// All methods take `&self`; the registry is `Send + Sync` and is
+/// normally shared as an `Arc` between ingest workers (see
+/// [`crate::coordinator::keyed`]) and query servers (see
+/// [`crate::runtime::RegistryService`]).
+#[derive(Debug)]
+pub struct SketchRegistry<K> {
+    cfg: RegistryConfig,
+    shards: Vec<Shard<K>>,
+    shard_mask: usize,
+    /// Lock-free union of every ingested word, if configured.
+    global: Option<ConcurrentHllSketch>,
+}
+
+impl<K: Eq + Hash + Clone> SketchRegistry<K> {
+    pub fn new(cfg: RegistryConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let shards = (0..cfg.shards).map(|_| Shard::new()).collect();
+        let global = cfg.track_global.then(|| ConcurrentHllSketch::new(cfg.hll));
+        Ok(Self { cfg, shards, shard_mask: cfg.shards - 1, global })
+    }
+
+    /// Convenience: default registry config, shared-ready.
+    pub fn shared(cfg: RegistryConfig) -> Result<Arc<Self>, String> {
+        Ok(Arc::new(Self::new(cfg)?))
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// Which stripe a key lives on. Stable across the registry's
+    /// lifetime; the keyed coordinator also uses it to route whole
+    /// shards to dedicated workers so shard locks never see contention.
+    pub fn shard_of(&self, key: &K) -> usize {
+        let mut hasher = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut hasher);
+        // Finalize with a splitmix-style mix so low-entropy key hashes
+        // (sequential integers) still spread across stripes.
+        let mut x = hasher.finish();
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x as usize) & self.shard_mask
+    }
+
+    /// Ingest a batch of words for one key.
+    pub fn ingest(&self, key: K, words: &[u32]) {
+        if words.is_empty() {
+            return;
+        }
+        let hashes: Vec<u64> = words.iter().map(|&w| self.cfg.hll.hash_word(w)).collect();
+        if let Some(global) = &self.global {
+            for &h in &hashes {
+                global.insert_hash(h);
+            }
+        }
+        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes);
+    }
+
+    /// Keyed batch ingest: group a `(key, word)` batch by shard, then
+    /// fold each group under a single lock acquisition per shard.
+    pub fn ingest_pairs(&self, pairs: &[(K, u32)]) {
+        if pairs.is_empty() {
+            return;
+        }
+        let mut groups: Vec<Vec<(K, u64)>> = vec![Vec::new(); self.shards.len()];
+        for (key, word) in pairs {
+            let h = self.cfg.hll.hash_word(*word);
+            if let Some(global) = &self.global {
+                global.insert_hash(h);
+            }
+            groups[self.shard_of(key)].push((key.clone(), h));
+        }
+        for (shard, group) in self.shards.iter().zip(&groups) {
+            if !group.is_empty() {
+                shard.ingest_pairs(self.cfg.hll, group);
+            }
+        }
+    }
+
+    /// Keyed ingest for pairs already routed to one shard: callers that
+    /// computed [`SketchRegistry::shard_of`] once on the feeder side
+    /// (the keyed coordinator) pass it in instead of paying the key
+    /// hash a second time per pair. Words are hashed in-loop under the
+    /// shard lock — no intermediate buffer.
+    pub fn ingest_sharded(&self, shard: usize, pairs: &[(K, u32)]) {
+        if pairs.is_empty() {
+            return;
+        }
+        debug_assert!(
+            pairs.iter().all(|(k, _)| self.shard_of(k) == shard),
+            "pair routed to the wrong shard"
+        );
+        self.shards[shard].ingest_words_iter(
+            self.cfg.hll,
+            pairs.iter().map(|(k, w)| (k, *w)),
+            self.global.as_ref(),
+        );
+    }
+
+    /// As [`SketchRegistry::ingest_sharded`], but over a run of routed
+    /// `(shard, key, word)` triples sharing one shard — read in place,
+    /// so the keyed worker needs no reshaping buffer.
+    pub fn ingest_routed_run(&self, run: &[(usize, K, u32)]) {
+        let Some(&(shard, _, _)) = run.first() else {
+            return;
+        };
+        debug_assert!(
+            run.iter().all(|(s, k, _)| *s == shard && self.shard_of(k) == shard),
+            "triple routed to the wrong shard"
+        );
+        self.shards[shard].ingest_words_iter(
+            self.cfg.hll,
+            run.iter().map(|(_, k, w)| (k, *w)),
+            self.global.as_ref(),
+        );
+    }
+
+    /// Cardinality estimate for one key (`None` if the key is unknown).
+    pub fn estimate(&self, key: &K) -> Option<f64> {
+        self.shards[self.shard_of(key)].estimate(key)
+    }
+
+    /// Bulk estimate: every live (key, estimate) pair, shard by shard.
+    pub fn estimates(&self) -> Vec<(K, f64)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            shard.for_each_estimate(|k, e| out.push((k.clone(), e)));
+        }
+        out
+    }
+
+    /// Distinct count across *all* keys from the lock-free global
+    /// sketch; `None` when `track_global` is off.
+    pub fn global_estimate(&self) -> Option<f64> {
+        self.global.as_ref().map(|g| g.estimate())
+    }
+
+    /// Union of every key's sketch, folded bucket-wise (Fig 3's merge at
+    /// registry scale). Equals the global sketch when tracking is on.
+    pub fn merge_all(&self) -> HllSketch {
+        let mut acc = HllSketch::new(self.cfg.hll);
+        for shard in &self.shards {
+            shard.fold_into(&mut acc);
+        }
+        acc
+    }
+
+    /// Merge key `src`'s sketch into `dst` (removing `src`). Locks are
+    /// taken one shard at a time, never nested.
+    pub fn merge_keys(&self, dst: K, src: &K) -> Result<bool, SketchError> {
+        let Some(sketch) = self.shards[self.shard_of(src)].take(src) else {
+            return Ok(false);
+        };
+        self.shards[self.shard_of(&dst)].merge_in(self.cfg.hll, dst, sketch)?;
+        Ok(true)
+    }
+
+    /// Remove one key; returns its final dense sketch if it existed.
+    pub fn evict(&self, key: &K) -> Option<HllSketch> {
+        self.shards[self.shard_of(key)].evict(key)
+    }
+
+    /// Bulk evict: drop every key the predicate rejects; returns the
+    /// number evicted. The predicate sees the key and its live sketch
+    /// (mutable, so it can estimate).
+    pub fn evict_where<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut evict: F) -> usize {
+        self.shards.iter().map(|s| s.retain(|k, sk| !evict(k, sk))).sum()
+    }
+
+    /// Live key count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-shard memory and population accounting.
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats { shards: self.shards.iter().map(|s| s.stats()).collect() }
+    }
+
+    /// Drop every key (the global sketch, if any, is reset too).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.clear();
+        }
+        if let Some(global) = &self.global {
+            global.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::{HashKind, HllConfig};
+    use crate::util::Xoshiro256StarStar;
+
+    fn registry(shards: usize) -> SketchRegistry<u64> {
+        SketchRegistry::new(RegistryConfig {
+            hll: HllConfig::PAPER,
+            shards,
+            track_global: true,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn per_key_estimates_match_reference_sketches() {
+        let reg = registry(16);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        for key in 0u64..50 {
+            let n = 10 + (key as usize * 37) % 400;
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+            let mut reference = AdaptiveSketch::new(HllConfig::PAPER);
+            for &w in &words {
+                reference.insert_u32(w);
+            }
+            let got = reg.estimate(&key).unwrap();
+            assert_eq!(got, reference.estimate(), "key {key}");
+        }
+        assert_eq!(reg.len(), 50);
+        assert!(reg.estimate(&999).is_none());
+    }
+
+    #[test]
+    fn ingest_pairs_equals_per_key_ingest() {
+        let a = registry(8);
+        let b = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(2);
+        let pairs: Vec<(u64, u32)> =
+            (0..20_000).map(|_| (rng.next_u64_below(500), rng.next_u32())).collect();
+        a.ingest_pairs(&pairs);
+        for (k, w) in &pairs {
+            b.ingest(*k, &[*w]);
+        }
+        assert_eq!(a.len(), b.len());
+        for (key, est) in a.estimates() {
+            assert_eq!(Some(est), b.estimate(&key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn global_estimate_equals_merge_all() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let pairs: Vec<(u64, u32)> =
+            (0..30_000).map(|_| (rng.next_u64_below(100), rng.next_u32())).collect();
+        reg.ingest_pairs(&pairs);
+        let merged = reg.merge_all();
+        let global = reg.global_estimate().unwrap();
+        assert_eq!(global, merged.estimate());
+        // And both equal a serial sketch over every word.
+        let mut serial = HllSketch::new(HllConfig::PAPER);
+        for (_, w) in &pairs {
+            serial.insert_u32(*w);
+        }
+        assert_eq!(merged, serial);
+    }
+
+    #[test]
+    fn sparse_keys_upgrade_to_dense_under_volume() {
+        let reg = registry(4);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(4);
+        // Key 0 gets a heavy stream, keys 1..20 stay tiny.
+        let heavy: Vec<u32> = (0..60_000).map(|_| rng.next_u32()).collect();
+        reg.ingest(0, &heavy);
+        for key in 1u64..20 {
+            reg.ingest(key, &[rng.next_u32()]);
+        }
+        let stats = reg.stats();
+        assert_eq!(stats.keys(), 20);
+        assert_eq!(stats.dense_keys(), 1, "heavy key must have upgraded");
+        assert_eq!(stats.sparse_keys(), 19);
+        assert!(stats.memory_bytes() >= HllConfig::PAPER.m());
+        assert_eq!(stats.words(), 60_000 + 19);
+    }
+
+    #[test]
+    fn evict_and_merge_keys() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(5);
+        let wa: Vec<u32> = (0..5_000).map(|_| rng.next_u32()).collect();
+        let wb: Vec<u32> = (0..5_000).map(|_| rng.next_u32()).collect();
+        reg.ingest(1, &wa);
+        reg.ingest(2, &wb);
+
+        // Merge 2 into 1: the union estimate must match a joint sketch.
+        assert!(reg.merge_keys(1, &2).unwrap());
+        assert_eq!(reg.len(), 1);
+        let mut joint = HllSketch::new(HllConfig::PAPER);
+        joint.insert_batch(&wa);
+        joint.insert_batch(&wb);
+        let evicted = reg.evict(&1).expect("key 1 present");
+        assert_eq!(evicted, joint);
+        assert!(reg.is_empty());
+        // Merging a missing key is a no-op.
+        assert!(!reg.merge_keys(1, &2).unwrap());
+    }
+
+    #[test]
+    fn evict_where_drops_small_keys() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(6);
+        for key in 0u64..30 {
+            let n = if key < 10 { 5 } else { 2_000 };
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        let evicted = reg.evict_where(|_, sketch| sketch.estimate() < 100.0);
+        assert_eq!(evicted, 10);
+        assert_eq!(reg.len(), 20);
+    }
+
+    #[test]
+    fn concurrent_ingest_from_many_threads() {
+        let reg = std::sync::Arc::new(registry(16));
+        let mut rng = Xoshiro256StarStar::seed_from_u64(7);
+        let pairs: Vec<(u64, u32)> =
+            (0..40_000).map(|_| (rng.next_u64_below(1_000), rng.next_u32())).collect();
+        std::thread::scope(|scope| {
+            for slice in pairs.chunks(pairs.len() / 4) {
+                let reg = reg.clone();
+                scope.spawn(move || reg.ingest_pairs(slice));
+            }
+        });
+        let mut serial = HllSketch::new(HllConfig::PAPER);
+        for (_, w) in &pairs {
+            serial.insert_u32(*w);
+        }
+        // The global union is order-independent: bit-identical to serial.
+        assert_eq!(reg.merge_all(), serial);
+        assert_eq!(reg.stats().words(), 40_000);
+    }
+
+    #[test]
+    fn h32_config_registry_works() {
+        let reg: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            hll: HllConfig::new(12, HashKind::H32).unwrap(),
+            shards: 4,
+            track_global: false,
+        })
+        .unwrap();
+        reg.ingest(9, &[1, 2, 3, 2, 1]);
+        assert!(reg.global_estimate().is_none());
+        let est = reg.estimate(&9).unwrap();
+        assert!((est - 3.0).abs() < 0.5, "{est}");
+    }
+}

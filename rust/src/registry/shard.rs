@@ -1,0 +1,184 @@
+//! One stripe of the registry: a mutex-guarded key → sketch map.
+//!
+//! Everything here runs under the shard lock; the registry guarantees a
+//! caller never holds two shard locks at once (cross-shard operations
+//! release the first lock before taking the second), so there is no lock
+//! ordering to get wrong.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use super::config::ShardStats;
+use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
+
+#[derive(Debug)]
+pub(crate) struct Shard<K> {
+    state: Mutex<ShardState<K>>,
+}
+
+#[derive(Debug)]
+struct ShardState<K> {
+    map: HashMap<K, AdaptiveSketch>,
+    words: u64,
+}
+
+impl<K: Eq + Hash> Shard<K> {
+    pub(crate) fn new() -> Self {
+        Self { state: Mutex::new(ShardState { map: HashMap::new(), words: 0 }) }
+    }
+
+    /// Fold pre-hashed words into one key's sketch (created on first
+    /// touch).
+    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64]) {
+        let mut st = self.state.lock().unwrap();
+        let sketch = st.map.entry(key).or_insert_with(|| AdaptiveSketch::new(cfg));
+        for &h in hashes {
+            sketch.insert_hash(h);
+        }
+        st.words += hashes.len() as u64;
+    }
+
+    /// Fold a run of (key, hash) pairs under one lock acquisition.
+    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)])
+    where
+        K: Clone,
+    {
+        let mut st = self.state.lock().unwrap();
+        for (key, h) in pairs {
+            st.map
+                .entry(key.clone())
+                .or_insert_with(|| AdaptiveSketch::new(cfg))
+                .insert_hash(*h);
+        }
+        st.words += pairs.len() as u64;
+    }
+
+    /// Fold raw (key, word) pairs under one lock acquisition, hashing
+    /// in-loop — the keyed coordinator's hot path (no intermediate
+    /// buffer; callers feed whatever shape they hold through an
+    /// iterator). The optional global union sketch is lock-free, so
+    /// raising it from inside the shard lock is safe and keeps the
+    /// word hashed exactly once.
+    pub(crate) fn ingest_words_iter<'a>(
+        &self,
+        cfg: HllConfig,
+        pairs: impl Iterator<Item = (&'a K, u32)>,
+        global: Option<&crate::hll::ConcurrentHllSketch>,
+    ) where
+        K: Clone + 'a,
+    {
+        let mut st = self.state.lock().unwrap();
+        let mut n = 0u64;
+        for (key, word) in pairs {
+            let h = cfg.hash_word(word);
+            if let Some(g) = global {
+                g.insert_hash(h);
+            }
+            st.map
+                .entry(key.clone())
+                .or_insert_with(|| AdaptiveSketch::new(cfg))
+                .insert_hash(h);
+            n += 1;
+        }
+        st.words += n;
+    }
+
+    pub(crate) fn estimate(&self, key: &K) -> Option<f64> {
+        let mut st = self.state.lock().unwrap();
+        st.map.get_mut(key).map(|s| s.estimate())
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    /// Remove one key; returns its final dense register file, if present.
+    pub(crate) fn evict(&self, key: &K) -> Option<HllSketch> {
+        let mut st = self.state.lock().unwrap();
+        st.map.remove(key).map(|s| s.into_dense())
+    }
+
+    /// Keep only keys the predicate approves; returns how many were
+    /// evicted. The predicate may mutate the sketch (e.g. to estimate).
+    pub(crate) fn retain<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut keep: F) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let before = st.map.len();
+        st.map.retain(|k, s| keep(k, s));
+        before - st.map.len()
+    }
+
+    /// Remove one key's sketch without densifying (for cross-shard moves).
+    pub(crate) fn take(&self, key: &K) -> Option<AdaptiveSketch> {
+        self.state.lock().unwrap().map.remove(key)
+    }
+
+    /// Merge a sketch into `key`'s sketch (created if absent).
+    pub(crate) fn merge_in(
+        &self,
+        cfg: HllConfig,
+        key: K,
+        other: AdaptiveSketch,
+    ) -> Result<(), crate::hll::SketchError> {
+        let mut st = self.state.lock().unwrap();
+        match st.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge_into(other),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                if *other.config() != cfg {
+                    return Err(crate::hll::SketchError::ConfigMismatch(*other.config(), cfg));
+                }
+                e.insert(other);
+                Ok(())
+            }
+        }
+    }
+
+    /// Fold every sketch in this shard into `acc` (bucket-wise max).
+    /// Dense keys merge register files directly (no clone); sparse keys
+    /// apply only their live entries — O(live entries), not O(m), so a
+    /// million mostly-small keys fold in millions of updates rather
+    /// than billions of register merges.
+    pub(crate) fn fold_into(&self, acc: &mut HllSketch) {
+        let mut st = self.state.lock().unwrap();
+        for sketch in st.map.values_mut() {
+            debug_assert_eq!(sketch.config(), acc.config());
+            match sketch {
+                AdaptiveSketch::Dense(d) => {
+                    acc.merge(d).expect("registry sketches share one config");
+                }
+                AdaptiveSketch::Sparse(s) => {
+                    s.for_each_entry(|idx, rank| acc.update_register(idx, rank));
+                }
+            }
+        }
+    }
+
+    /// Run `f` over every (key, estimate) pair (bulk estimate API).
+    pub(crate) fn for_each_estimate<F: FnMut(&K, f64)>(&self, mut f: F) {
+        let mut st = self.state.lock().unwrap();
+        for (k, s) in st.map.iter_mut() {
+            let e = s.estimate();
+            f(k, e);
+        }
+    }
+
+    pub(crate) fn stats(&self) -> ShardStats {
+        let st = self.state.lock().unwrap();
+        let mut out = ShardStats { words: st.words, keys: st.map.len(), ..ShardStats::default() };
+        for sketch in st.map.values() {
+            if sketch.is_sparse() {
+                out.sparse_keys += 1;
+            } else {
+                out.dense_keys += 1;
+            }
+            out.memory_bytes += sketch.memory_bytes();
+        }
+        out
+    }
+
+    pub(crate) fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.map.clear();
+        st.words = 0;
+    }
+}

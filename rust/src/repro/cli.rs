@@ -11,6 +11,39 @@ use crate::cpu_baseline::ScalingModel;
 use crate::runtime::{EngineKind, Manifest, XlaService};
 use crate::stats::DistinctStream;
 
+/// CLI error: a message, optionally wrapping a source error (the offline
+/// crate set has no `anyhow`).
+#[derive(Debug)]
+pub struct CliError(String);
+
+impl CliError {
+    pub fn msg<S: Into<String>>(s: S) -> Self {
+        CliError(s.into())
+    }
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl From<std::io::Error> for CliError {
+    fn from(e: std::io::Error) -> Self {
+        CliError(e.to_string())
+    }
+}
+
+impl From<crate::runtime::RuntimeError> for CliError {
+    fn from(e: crate::runtime::RuntimeError) -> Self {
+        CliError(e.to_string())
+    }
+}
+
+pub type CliResult<T> = std::result::Result<T, CliError>;
+
 /// Minimal flag parser: positionals + `--key value` + boolean `--key`.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -73,8 +106,8 @@ USAGE:
   hll-fpga help
 ";
 
-pub fn run(raw: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(raw).map_err(anyhow::Error::msg)?;
+pub fn run(raw: &[String]) -> CliResult<()> {
+    let args = Args::parse(raw).map_err(CliError::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         None | Some("help") => {
             print!("{USAGE}");
@@ -83,18 +116,16 @@ pub fn run(raw: &[String]) -> anyhow::Result<()> {
         Some("repro") => cmd_repro(&args),
         Some("estimate") => cmd_estimate(&args),
         Some("info") => cmd_info(),
-        Some(other) => {
-            anyhow::bail!("unknown command '{other}'\n{USAGE}");
-        }
+        Some(other) => Err(CliError::msg(format!("unknown command '{other}'\n{USAGE}"))),
     }
 }
 
-fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+fn cmd_repro(args: &Args) -> CliResult<()> {
     let target = args
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("repro needs a target\n{USAGE}"))?;
+        .ok_or_else(|| CliError::msg(format!("repro needs a target\n{USAGE}")))?;
     let all = target == "all";
     let mut matched = all;
 
@@ -114,7 +145,7 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
         matched = true;
         let opts = super::fig1::Fig1Options {
             full: args.bool_flag("full"),
-            trials: args.num_flag("trials", 5usize).map_err(anyhow::Error::msg)?,
+            trials: args.num_flag("trials", 5usize).map_err(CliError::msg)?,
             max_exp: None,
         };
         let curves = super::fig1::curves(&opts);
@@ -125,7 +156,7 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     }
     if all || target == "fig4a" {
         matched = true;
-        let mb: u64 = args.num_flag("mb", 512u64).map_err(anyhow::Error::msg)?;
+        let mb: u64 = args.num_flag("mb", 512u64).map_err(CliError::msg)?;
         let rows = super::fig4::fig4a_rows(mb << 20);
         println!("{}", super::fig4::render_fig4a(&rows));
     }
@@ -137,23 +168,23 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     }
     if all || target == "table4" {
         matched = true;
-        let mb: u64 = args.num_flag("mb", 8u64).map_err(anyhow::Error::msg)?;
+        let mb: u64 = args.num_flag("mb", 8u64).map_err(CliError::msg)?;
         let rows = super::table4::rows(mb << 20);
         println!("{}", super::table4::render(&rows));
     }
     if !matched {
-        anyhow::bail!("unknown repro target '{target}'\n{USAGE}");
+        return Err(CliError::msg(format!("unknown repro target '{target}'\n{USAGE}")));
     }
     Ok(())
 }
 
-fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
-    let pipelines: usize = args.num_flag("pipelines", 4usize).map_err(anyhow::Error::msg)?;
-    let batch: usize = args.num_flag("batch", 8192usize).map_err(anyhow::Error::msg)?;
+fn cmd_estimate(args: &Args) -> CliResult<()> {
+    let pipelines: usize = args.num_flag("pipelines", 4usize).map_err(CliError::msg)?;
+    let batch: usize = args.num_flag("batch", 8192usize).map_err(CliError::msg)?;
     let engine = match args.flag("engine").unwrap_or("native") {
         "native" => EngineKind::Native,
         "xla" => EngineKind::Xla,
-        other => anyhow::bail!("unknown engine '{other}' (native|xla)"),
+        other => return Err(CliError::msg(format!("unknown engine '{other}' (native|xla)"))),
     };
 
     let words: Vec<u32> = if let Some(path) = args.flag("file") {
@@ -163,7 +194,7 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect()
     } else {
-        let n: u64 = args.num_flag("n", 1_000_000u64).map_err(anyhow::Error::msg)?;
+        let n: u64 = args.num_flag("n", 1_000_000u64).map_err(CliError::msg)?;
         DistinctStream::new(n, 0xD15C0).collect()
     };
 
@@ -191,7 +222,7 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> CliResult<()> {
     println!("hll-fpga — three-layer reproduction of 'HyperLogLog Sketch Acceleration on FPGA'");
     println!("paper config: p=16, 64-bit Murmur3, m=65536, sigma=0.41%");
     match Manifest::load_default() {

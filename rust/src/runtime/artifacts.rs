@@ -47,14 +47,40 @@ pub struct ArtifactMeta {
     pub m: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("artifacts manifest not found at {0} — run `make artifacts`")]
     NotFound(PathBuf),
-    #[error("manifest parse error at line {0}: {1}")]
     Parse(usize, String),
-    #[error("io error reading manifest: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::NotFound(p) => {
+                write!(f, "artifacts manifest not found at {} — run `make artifacts`", p.display())
+            }
+            ManifestError::Parse(line, what) => {
+                write!(f, "manifest parse error at line {line}: {what}")
+            }
+            ManifestError::Io(e) => write!(f, "io error reading manifest: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
 }
 
 /// Parsed manifest plus the directory it lives in.

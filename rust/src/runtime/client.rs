@@ -10,17 +10,54 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::artifacts::{ArtifactMeta, Manifest, ManifestError};
+// The real `xla` crate is unavailable offline; the stub exposes the same
+// API and fails cleanly at first device use. Swap this import to link
+// the real bindings.
+use super::xla_stub as xla;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error(transparent)]
-    Manifest(#[from] ManifestError),
-    #[error("artifact not found: {0}")]
+    Xla(xla::Error),
+    Manifest(ManifestError),
     ArtifactNotFound(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
+    /// A service thread (XLA device or registry query) is no longer
+    /// answering — a lifecycle failure, not a data-shape problem.
+    ServiceGone(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::Manifest(e) => write!(f, "{e}"),
+            RuntimeError::ArtifactNotFound(what) => write!(f, "artifact not found: {what}"),
+            RuntimeError::Shape(what) => write!(f, "shape mismatch: {what}"),
+            RuntimeError::ServiceGone(what) => write!(f, "service unavailable: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Xla(e) => Some(e),
+            RuntimeError::Manifest(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -6,8 +6,9 @@ pub mod artifacts;
 pub mod client;
 pub mod engine;
 pub mod service;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest, ManifestError};
 pub use client::{Result, RuntimeError, XlaRuntime};
 pub use engine::{Engine, EngineKind, EstimateOut, NativeEngine, XlaEngine};
-pub use service::{XlaHandle, XlaService};
+pub use service::{RegistryHandle, RegistryService, XlaHandle, XlaService};

@@ -1,18 +1,30 @@
-//! The XLA device service: a dedicated thread owning the PJRT client.
+//! Device-style services: dedicated threads answering requests over
+//! channel-backed handles.
 //!
-//! The `xla` crate's client/executable types are thread-confined (`Rc` +
-//! raw pointers), while the coordinator runs one worker thread per
-//! pipeline. The service thread is the software analogue of the paper's
-//! single shared FPGA device: workers submit aggregation/estimation jobs
-//! through a channel-backed [`XlaHandle`] (Clone + Send) and block on the
-//! reply, exactly like DMA requests queueing toward one PCIe endpoint.
+//! Two services live here:
+//!
+//! * [`XlaService`] — owns the PJRT client. The `xla` crate's
+//!   client/executable types are thread-confined (`Rc` + raw pointers),
+//!   while the coordinator runs one worker thread per pipeline. The
+//!   service thread is the software analogue of the paper's single
+//!   shared FPGA device: workers submit aggregation/estimation jobs
+//!   through a channel-backed [`XlaHandle`] (Clone + Send) and block on
+//!   the reply, exactly like DMA requests queueing toward one PCIe
+//!   endpoint.
+//! * [`RegistryService`] — the query front-end of the multi-tenant
+//!   [`crate::registry::SketchRegistry`]: per-key / global estimates,
+//!   accounting and eviction served off the ingest hot path, through the
+//!   same cloneable-handle pattern (the seam a future network serving
+//!   layer plugs into).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::artifacts::Manifest;
 use super::client::{Result, RuntimeError, XlaRuntime};
 use crate::hll::HashKind;
+use crate::registry::{RegistryStats, SketchRegistry};
 
 enum Request {
     /// Chunked aggregate execution: every chunk already padded to the
@@ -88,7 +100,7 @@ impl XlaService {
             .expect("spawn xla-device thread");
         ready_rx
             .recv()
-            .unwrap_or_else(|_| Err(RuntimeError::Shape("device thread died".into())))?;
+            .unwrap_or_else(|_| Err(RuntimeError::ServiceGone("device thread died".into())))?;
         Ok(Self { tx, join: Some(join) })
     }
 
@@ -169,10 +181,10 @@ impl XlaHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(make(reply_tx))
-            .map_err(|_| RuntimeError::Shape("xla device thread gone".into()))?;
+            .map_err(|_| RuntimeError::ServiceGone("xla device thread gone".into()))?;
         reply_rx
             .recv()
-            .map_err(|_| RuntimeError::Shape("xla device thread dropped reply".into()))?
+            .map_err(|_| RuntimeError::ServiceGone("xla device thread dropped reply".into()))?
     }
 
     /// The static batch shape the device will use for a `want`-sized
@@ -201,3 +213,151 @@ impl XlaHandle {
         self.call(|reply| Request::Merge { p, a_i32, b_i32, reply })
     }
 }
+
+// ---------------------------------------------------------------------------
+// Registry query service
+// ---------------------------------------------------------------------------
+
+enum RegistryRequest {
+    Estimate { key: u64, reply: mpsc::Sender<Option<f64>> },
+    GlobalEstimate { reply: mpsc::Sender<Option<f64>> },
+    Keys { reply: mpsc::Sender<usize> },
+    Stats { reply: mpsc::Sender<RegistryStats> },
+    Evict { key: u64, reply: mpsc::Sender<bool> },
+    Shutdown,
+}
+
+/// Cloneable, Send handle for registry queries.
+#[derive(Clone)]
+pub struct RegistryHandle {
+    tx: mpsc::Sender<RegistryRequest>,
+}
+
+/// Query front-end over a shared [`SketchRegistry`]; dropping it shuts
+/// the query thread down (the registry itself stays alive for ingest).
+pub struct RegistryService {
+    tx: mpsc::Sender<RegistryRequest>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RegistryService {
+    pub fn start(registry: Arc<SketchRegistry<u64>>) -> Self {
+        let (tx, rx) = mpsc::channel::<RegistryRequest>();
+        let join = std::thread::Builder::new()
+            .name("registry-query".into())
+            .spawn(move || Self::serve(registry, rx))
+            .expect("spawn registry-query thread");
+        Self { tx, join: Some(join) }
+    }
+
+    fn serve(registry: Arc<SketchRegistry<u64>>, rx: mpsc::Receiver<RegistryRequest>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                RegistryRequest::Estimate { key, reply } => {
+                    let _ = reply.send(registry.estimate(&key));
+                }
+                RegistryRequest::GlobalEstimate { reply } => {
+                    let _ = reply.send(registry.global_estimate());
+                }
+                RegistryRequest::Keys { reply } => {
+                    let _ = reply.send(registry.len());
+                }
+                RegistryRequest::Stats { reply } => {
+                    let _ = reply.send(registry.stats());
+                }
+                RegistryRequest::Evict { key, reply } => {
+                    let _ = reply.send(registry.evict(&key).is_some());
+                }
+                RegistryRequest::Shutdown => break,
+            }
+        }
+    }
+
+    pub fn handle(&self) -> RegistryHandle {
+        RegistryHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for RegistryService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RegistryRequest::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl RegistryHandle {
+    fn call<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> RegistryRequest) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| RuntimeError::ServiceGone("registry query thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| RuntimeError::ServiceGone("registry query thread dropped reply".into()))
+    }
+
+    /// Per-key distinct estimate; `Ok(None)` for unknown keys.
+    pub fn estimate(&self, key: u64) -> Result<Option<f64>> {
+        self.call(|reply| RegistryRequest::Estimate { key, reply })
+    }
+
+    /// Distinct count across all keys (if the registry tracks it).
+    pub fn global_estimate(&self) -> Result<Option<f64>> {
+        self.call(|reply| RegistryRequest::GlobalEstimate { reply })
+    }
+
+    /// Live key count.
+    pub fn keys(&self) -> Result<usize> {
+        self.call(|reply| RegistryRequest::Keys { reply })
+    }
+
+    /// Per-shard accounting snapshot.
+    pub fn stats(&self) -> Result<RegistryStats> {
+        self.call(|reply| RegistryRequest::Stats { reply })
+    }
+
+    /// Drop one key; `Ok(true)` if it existed.
+    pub fn evict(&self, key: u64) -> Result<bool> {
+        self.call(|reply| RegistryRequest::Evict { key, reply })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::RegistryConfig;
+
+    #[test]
+    fn registry_service_answers_queries() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        registry.ingest(7, &[1, 2, 3, 2]);
+        registry.ingest(8, &[10, 11]);
+
+        let svc = RegistryService::start(registry.clone());
+        let handle = svc.handle();
+        assert_eq!(handle.keys().unwrap(), 2);
+        let est = handle.estimate(7).unwrap().expect("key 7 live");
+        assert!((est - 3.0).abs() < 0.5, "{est}");
+        assert!(handle.estimate(99).unwrap().is_none());
+        assert!(handle.global_estimate().unwrap().is_some());
+        let stats = handle.stats().unwrap();
+        assert_eq!(stats.keys(), 2);
+        assert_eq!(stats.words(), 6);
+
+        // Handles stay usable from other threads.
+        let h2 = handle.clone();
+        std::thread::spawn(move || h2.keys().unwrap()).join().unwrap();
+
+        // Eviction goes through the service, visible to direct users.
+        assert!(handle.evict(7).unwrap());
+        assert!(!handle.evict(7).unwrap());
+        assert_eq!(registry.len(), 1);
+    }
+}
+

@@ -1,0 +1,164 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The build environment has no crates.io access, so the real `xla`
+//! crate (PJRT client + HLO loader) cannot be linked. This module
+//! provides the exact API surface [`super::client`] consumes: client
+//! construction succeeds (so [`super::service::XlaService`] starts and
+//! manifest/shape validation keeps working, as the failure-injection
+//! tests require), while anything that would actually touch a PJRT
+//! device — loading HLO text, compiling, allocating device buffers —
+//! returns [`Error::Unavailable`]. Swapping the real crate back in is a
+//! one-line change in `client.rs`.
+
+use std::path::Path;
+
+/// Errors surfaced by the stub (mirrors `xla::Error`'s role).
+#[derive(Debug)]
+pub enum Error {
+    /// The PJRT runtime is not linked into this build.
+    Unavailable(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "PJRT runtime unavailable in this build (xla stub): {what}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error::Unavailable(what.to_string())
+}
+
+/// Stub PJRT client. Construction succeeds; device work fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "stub-cpu"
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn shape(&self) -> Result<Shape, Error> {
+        Err(unavailable("shape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("to_vec"))
+    }
+}
+
+/// Stub shape handle.
+pub struct Shape;
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        false
+    }
+}
+
+/// Stub HLO module proto. Loading HLO text is the first device-path step
+/// in [`super::client::XlaRuntime::executable`]; it fails here, which is
+/// exactly the "lazy compile error" behaviour the failure-injection
+/// suite pins down.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self, Error> {
+        Err(unavailable(&format!(
+            "cannot load HLO text {} without the PJRT runtime",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_starts_but_device_work_fails() {
+        let client = PjRtClient::cpu().expect("stub client constructs");
+        assert_eq!(client.device_count(), 0);
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(client
+            .buffer_from_host_buffer(&[0i32; 4], &[4], None)
+            .is_err());
+    }
+
+    #[test]
+    fn error_message_names_the_stub() {
+        let e = HloModuleProto::from_text_file("a.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Differential tests for the concurrent sketch subsystem: N-thread
+//! ingest vs the sequential reference, and registry sparse→dense upgrade
+//! behaviour — fuzzed with `proptest_lite`.
+
+use std::sync::Arc;
+
+use hll_fpga::coordinator::{run_keyed_stream, CoordinatorConfig};
+use hll_fpga::hll::{AdaptiveSketch, ConcurrentHllSketch, HashKind, HllConfig, HllSketch};
+use hll_fpga::proptest_lite::Runner;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+
+#[test]
+fn concurrent_ingest_is_register_identical_to_sequential() {
+    // The core tentpole property: for any stream, any thread count and
+    // any slicing, the shared CAS-max register file equals the one
+    // sequential insert_batch produces. Register updates are commutative
+    // monotone maxes, so this is exact, not statistical.
+    Runner::new("concurrent_vs_sequential").cases(12).run(|g| {
+        let n = g.usize_in(0..=20_000);
+        let words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let threads = g.usize_in(1..=8);
+        let p = *g.choose(&[12u8, 14, 16]);
+        let h = if g.bool() { HashKind::H32 } else { HashKind::H64 };
+        let cfg = HllConfig::new(p, h).unwrap();
+
+        let mut sequential = HllSketch::new(cfg);
+        sequential.insert_batch(&words);
+
+        let shared = ConcurrentHllSketch::new(cfg);
+        let chunk = words.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            for slice in words.chunks(chunk) {
+                let shared = &shared;
+                scope.spawn(move || shared.insert_batch(slice));
+            }
+        });
+        assert_eq!(
+            shared.snapshot(),
+            sequential,
+            "p={p} h={h:?} threads={threads} n={n}"
+        );
+    });
+}
+
+#[test]
+fn registry_upgrade_preserves_estimates() {
+    // Sparse→dense upgrade must not move a key's estimate: right at the
+    // HLL++ threshold both representations are in the LinearCounting
+    // regime, so the handoff is exact.
+    Runner::new("upgrade_preserves_estimate").cases(6).run(|g| {
+        let cfg = HllConfig::PAPER;
+        let registry: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            hll: cfg,
+            shards: 8,
+            track_global: false,
+        })
+        .unwrap();
+        // Enough distinct words to push the key through the upgrade.
+        let n = g.usize_in(40_000..=80_000);
+        let words: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+        let key = g.u64();
+        // Track the estimate trajectory around the upgrade boundary.
+        let mut reference = AdaptiveSketch::new(cfg);
+        let mut was_sparse = true;
+        for chunk in words.chunks(1024) {
+            registry.ingest(key, chunk);
+            for &w in chunk {
+                reference.insert_u32(w);
+            }
+            let got = registry.estimate(&key).unwrap();
+            let want = reference.estimate();
+            assert_eq!(got, want, "estimate diverged at {} words", reference.memory_bytes());
+            if was_sparse && !reference.is_sparse() {
+                was_sparse = false;
+            }
+        }
+        assert!(!reference.is_sparse(), "stream too small to force the upgrade");
+        let stats = registry.stats();
+        assert_eq!(stats.dense_keys(), 1);
+        // The upgraded sketch equals a dense sketch built directly.
+        let mut dense = HllSketch::new(cfg);
+        dense.insert_batch(&words);
+        assert_eq!(registry.evict(&key).unwrap(), dense);
+    });
+}
+
+#[test]
+fn keyed_coordinator_any_shape_matches_references() {
+    Runner::new("keyed_coordinator_shapes").cases(8).run(|g| {
+        let n = g.usize_in(0..=8_000);
+        let key_domain = g.u64_in(1..=300);
+        let pairs: Vec<(u64, u32)> =
+            (0..n).map(|_| (g.u64_in(0..=key_domain - 1), g.u32())).collect();
+        let cfg = CoordinatorConfig {
+            pipelines: g.usize_in(1..=6),
+            batch_size: g.usize_in(1..=2048),
+            queue_depth: g.usize_in(1..=4),
+            ..CoordinatorConfig::default()
+        };
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 16,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let summary = run_keyed_stream(&cfg, registry.clone(), &pairs).unwrap();
+        assert_eq!(summary.metrics.words_in, n as u64);
+
+        let mut whole = HllSketch::new(HllConfig::PAPER);
+        for &(_, w) in &pairs {
+            whole.insert_u32(w);
+        }
+        assert_eq!(registry.merge_all(), whole);
+        let distinct_keys: std::collections::HashSet<u64> =
+            pairs.iter().map(|&(k, _)| k).collect();
+        assert_eq!(registry.len(), distinct_keys.len());
+    });
+}
+
+#[test]
+fn concurrent_registry_ingest_matches_single_threaded() {
+    // Same pair multiset, different thread interleavings → identical
+    // registry contents (per-key and union).
+    let registry_a = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+    let registry_b = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+    let mut gen = hll_fpga::net::KeyedFlowGen::new(500, 1.07, 77);
+    let pairs = gen.batch(60_000);
+
+    registry_a.ingest_pairs(&pairs);
+
+    let b: Arc<SketchRegistry<u64>> = registry_b.clone();
+    std::thread::scope(|scope| {
+        for slice in pairs.chunks(pairs.len() / 6) {
+            let b = b.clone();
+            scope.spawn(move || b.ingest_pairs(slice));
+        }
+    });
+
+    assert_eq!(registry_a.len(), registry_b.len());
+    assert_eq!(registry_a.merge_all(), registry_b.merge_all());
+    assert_eq!(registry_a.global_estimate(), registry_b.global_estimate());
+    for (key, est) in registry_a.estimates() {
+        assert_eq!(registry_b.estimate(&key), Some(est), "key {key}");
+    }
+}
