@@ -1,0 +1,76 @@
+//! Serving-path bench: client→server keyed ingest throughput over real
+//! loopback TCP (per-batch round trips vs pipelined flights) against
+//! in-process registry ingest — the cost of the network front door.
+//!
+//! Run: `cargo bench --bench server_roundtrip` (HLL_BENCH_QUICK=1
+//! shrinks the volume).
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+
+fn main() {
+    let b = bench_main("server roundtrip — remote vs in-process keyed ingest");
+    let words: usize = if quick_mode() { 50_000 } else { 500_000 };
+
+    // One zipf keyed stream, grouped into (key, words) batches capped at
+    // 4096 words, shared by every mode.
+    let mut gen = KeyedFlowGen::new(1_000, 1.07, 0xBEEF);
+    let batches = gen.batched(words, 4096);
+    println!("{words} words in {} batches, 1000 keys (zipf 1.07)\n", batches.len());
+
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 64,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+
+    // --- In-process baseline: same batches straight into the registry.
+    let m = b.run_items("in-process ingest", words as u64, || {
+        registry.clear();
+        for (key, ws) in &batches {
+            registry.ingest(*key, ws);
+        }
+        registry.len()
+    });
+    println!("{}", m.report_line());
+    let reference = registry.merge_all();
+
+    // --- Remote: one server, one client, a real loopback socket.
+    let server =
+        SketchServer::start("127.0.0.1:0", registry.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut client = SketchClient::connect(addr).unwrap();
+    let m = b.run_items("remote ingest, one RTT per batch", words as u64, || {
+        registry.clear();
+        for (key, ws) in &batches {
+            client.insert_batch(*key, ws).unwrap();
+        }
+    });
+    println!("{}", m.report_line());
+
+    let m = b.run_items("remote ingest, pipelined flight", words as u64, || {
+        registry.clear();
+        client.pipeline_insert(&batches).unwrap();
+    });
+    println!("{}", m.report_line());
+
+    // Acceptance: the remote path produced register-identical state.
+    registry.clear();
+    client.pipeline_insert(&batches).unwrap();
+    assert_eq!(
+        registry.merge_all(),
+        reference,
+        "remote ingest diverged from in-process ingest"
+    );
+    println!("\nremote union bit-identical to in-process ingest: ok");
+
+    let stats = server.stats();
+    println!(
+        "server counters: {} connections, {} frames, {} words, {} error frames",
+        stats.connections, stats.frames, stats.words_ingested, stats.error_frames
+    );
+    server.shutdown();
+}

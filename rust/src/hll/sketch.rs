@@ -248,6 +248,14 @@ impl HllSketch {
         Ok(Self { cfg, regs })
     }
 
+    /// Exact serialized length of a sketch with config `cfg`: the v2
+    /// header plus one byte per register. Lets callers size buffers or
+    /// budget snapshot/transfer sizes up front; [`HllSketch::from_bytes`]
+    /// remains the validator for untrusted bytes.
+    pub fn wire_len(cfg: &HllConfig) -> usize {
+        WIRE_HEADER_LEN + cfg.m()
+    }
+
     /// Serialize to the on-wire format used by the coordinator when
     /// shipping partial sketches: `[version, p, hash_bits, seed (8 B LE),
     /// regs...]` — see the module docs for the full header layout.
@@ -439,6 +447,7 @@ mod tests {
             s.insert_u32(v.wrapping_mul(2654435761));
         }
         let bytes = s.to_bytes();
+        assert_eq!(bytes.len(), HllSketch::wire_len(s.config()));
         let s2 = HllSketch::from_bytes(&bytes).unwrap();
         assert_eq!(s, s2);
     }

@@ -236,11 +236,12 @@ impl AdaptiveSketch {
     }
 
     /// Convert to dense unconditionally (needed before merging with a
-    /// dense partner).
-    pub fn into_dense(mut self) -> HllSketch {
-        match &mut self {
-            AdaptiveSketch::Sparse(s) => s.to_dense(),
-            AdaptiveSketch::Dense(d) => d.clone(),
+    /// dense partner). Consumes in place: an already-dense sketch moves
+    /// its register file out instead of cloning it.
+    pub fn into_dense(self) -> HllSketch {
+        match self {
+            AdaptiveSketch::Sparse(mut s) => s.to_dense(),
+            AdaptiveSketch::Dense(d) => d,
         }
     }
 

@@ -12,7 +12,9 @@
 //!   substrate the evaluation needs (FPGA dataflow simulator, PCIe/XDMA
 //!   model, 100 Gbit/s TCP network simulator, optimized CPU baseline,
 //!   statistical profiling harness) and a PJRT runtime that executes the
-//!   Layer-2 artifacts with Python never on the data path.
+//!   Layer-2 artifacts with Python never on the data path. The
+//!   multi-tenant [`registry`] and its network [`server`] (binary TCP
+//!   protocol, snapshot/restore) turn the library into a serving system.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a module and bench target.
@@ -28,8 +30,10 @@ pub mod proptest_lite;
 pub mod registry;
 pub mod repro;
 pub mod runtime;
+pub mod server;
 pub mod stats;
 pub mod util;
 
 pub use hll::{ConcurrentHllSketch, HashKind, HllConfig, HllSketch};
 pub use registry::{RegistryConfig, SketchRegistry};
+pub use server::{ServerConfig, SketchClient, SketchServer};

@@ -2,6 +2,12 @@
 //! parameters, a discrete-event TCP flow simulator with receiver flow
 //! control / drops / go-back-N retransmission, and the coupled
 //! NIC + HLL-engine model that regenerates Table IV.
+//!
+//! Everything in this module is *simulation* (what the paper's hardware
+//! would do at 100 Gbit/s). The real-socket serving path — an actual
+//! TCP server/client in front of the sketch registry, with the same
+//! keyed streams [`KeyedFlowGen`] generates — lives in
+//! [`crate::server`].
 
 pub mod link;
 pub mod nic;

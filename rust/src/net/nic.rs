@@ -52,6 +52,32 @@ impl KeyedFlowGen {
     pub fn batch(&mut self, n: usize) -> Vec<(u64, u32)> {
         (0..n).map(|_| self.next_pair()).collect()
     }
+
+    /// As [`KeyedFlowGen::batch`], but grouped per key into
+    /// `(key, words)` ingest batches of at most `max_batch` words each,
+    /// sorted by key — the unit of work the serving layer's
+    /// `InsertBatch` RPC takes (used by the server tests, bench and
+    /// example).
+    pub fn batched(&mut self, n: usize, max_batch: usize) -> Vec<(u64, Vec<u32>)> {
+        assert!(max_batch >= 1);
+        let mut by_key: std::collections::HashMap<u64, Vec<u32>> =
+            std::collections::HashMap::new();
+        for (key, word) in self.batch(n) {
+            by_key.entry(key).or_default().push(word);
+        }
+        let mut out: Vec<(u64, Vec<u32>)> = Vec::new();
+        for (key, words) in by_key {
+            if words.len() <= max_batch {
+                out.push((key, words));
+            } else {
+                for chunk in words.chunks(max_batch) {
+                    out.push((key, chunk.to_vec()));
+                }
+            }
+        }
+        out.sort_by_key(|&(key, _)| key);
+        out
+    }
 }
 
 /// Configuration of the NIC deployment.

@@ -15,11 +15,18 @@ pub struct RegistryConfig {
     /// Maintain a lock-free all-keys union sketch updated on every
     /// ingested word (answers global distinct counts in O(m)).
     pub track_global: bool,
+    /// Soft cap on total sketch heap bytes (the sum
+    /// [`RegistryStats::memory_bytes`] reports). When set,
+    /// [`super::SketchRegistry::enforce_budget`] evicts
+    /// least-recently-touched keys until back under; `None` disables the
+    /// budget. The cap is a target, not a hard limit — ingest never
+    /// blocks on it.
+    pub max_memory_bytes: Option<usize>,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { hll: HllConfig::PAPER, shards: 64, track_global: true }
+        Self { hll: HllConfig::PAPER, shards: 64, track_global: true, max_memory_bytes: None }
     }
 }
 

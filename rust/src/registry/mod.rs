@@ -22,8 +22,20 @@
 //!
 //! Keyed batch ingest, bulk estimate/merge/evict, and per-shard memory
 //! accounting are on [`SketchRegistry`]; [`crate::coordinator::keyed`]
-//! drives it with pipeline workers and
-//! [`crate::runtime::RegistryService`] exposes it to query clients.
+//! drives it with pipeline workers,
+//! [`crate::runtime::RegistryService`] exposes it to in-process query
+//! clients, and [`crate::server`] puts a real TCP protocol (plus
+//! snapshot/restore) in front of it for remote producers and queries.
+//!
+//! Lifecycle management beyond explicit eviction: every key records the
+//! logical tick of its last touch, feeding a TTL sweep
+//! ([`SketchRegistry::evict_idle`]) and LRU size-budget enforcement
+//! ([`SketchRegistry::enforce_budget`] against
+//! [`RegistryConfig::max_memory_bytes`]). Registry contents round-trip
+//! through [`SketchRegistry::export_sketches`] /
+//! [`SketchRegistry::restore`] in the seed-carrying sketch wire format
+//! v2, which is what the snapshot file format and the `MergeSketch` RPC
+//! are built on.
 
 pub mod config;
 pub mod registry;

@@ -1,6 +1,7 @@
 //! The shard-striped, concurrent, keyed sketch store.
 
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::config::{RegistryConfig, RegistryStats};
@@ -11,8 +12,9 @@ use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllSketch, SketchError};
 ///
 /// All methods take `&self`; the registry is `Send + Sync` and is
 /// normally shared as an `Arc` between ingest workers (see
-/// [`crate::coordinator::keyed`]) and query servers (see
-/// [`crate::runtime::RegistryService`]).
+/// [`crate::coordinator::keyed`]), query servers (see
+/// [`crate::runtime::RegistryService`]) and the network serving layer
+/// (see [`crate::server`]).
 #[derive(Debug)]
 pub struct SketchRegistry<K> {
     cfg: RegistryConfig,
@@ -20,6 +22,10 @@ pub struct SketchRegistry<K> {
     shard_mask: usize,
     /// Lock-free union of every ingested word, if configured.
     global: Option<ConcurrentHllSketch>,
+    /// Monotone logical clock: one tick per mutating call. Keys record
+    /// the tick of their last touch, which drives [`Self::evict_idle`]
+    /// (TTL) and the LRU order of [`Self::evict_to_budget`].
+    clock: AtomicU64,
 }
 
 impl<K: Eq + Hash + Clone> SketchRegistry<K> {
@@ -27,7 +33,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         cfg.validate()?;
         let shards = (0..cfg.shards).map(|_| Shard::new()).collect();
         let global = cfg.track_global.then(|| ConcurrentHllSketch::new(cfg.hll));
-        Ok(Self { cfg, shards, shard_mask: cfg.shards - 1, global })
+        Ok(Self { cfg, shards, shard_mask: cfg.shards - 1, global, clock: AtomicU64::new(0) })
     }
 
     /// Convenience: default registry config, shared-ready.
@@ -37,6 +43,16 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
 
     pub fn config(&self) -> &RegistryConfig {
         &self.cfg
+    }
+
+    /// Current value of the logical ingest clock (ticks, not wall time).
+    pub fn now(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// Advance the clock by one mutating call and return the new tick.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Which stripe a key lives on. Stable across the registry's
@@ -59,13 +75,14 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         if words.is_empty() {
             return;
         }
+        let now = self.tick();
         let hashes: Vec<u64> = words.iter().map(|&w| self.cfg.hll.hash_word(w)).collect();
         if let Some(global) = &self.global {
             for &h in &hashes {
                 global.insert_hash(h);
             }
         }
-        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes);
+        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes, now);
     }
 
     /// Keyed batch ingest: group a `(key, word)` batch by shard, then
@@ -74,6 +91,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         if pairs.is_empty() {
             return;
         }
+        let now = self.tick();
         let mut groups: Vec<Vec<(K, u64)>> = vec![Vec::new(); self.shards.len()];
         for (key, word) in pairs {
             let h = self.cfg.hll.hash_word(*word);
@@ -84,7 +102,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         }
         for (shard, group) in self.shards.iter().zip(&groups) {
             if !group.is_empty() {
-                shard.ingest_pairs(self.cfg.hll, group);
+                shard.ingest_pairs(self.cfg.hll, group, now);
             }
         }
     }
@@ -106,6 +124,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             self.cfg.hll,
             pairs.iter().map(|(k, w)| (k, *w)),
             self.global.as_ref(),
+            self.tick(),
         );
     }
 
@@ -124,6 +143,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             self.cfg.hll,
             run.iter().map(|(_, k, w)| (k, *w)),
             self.global.as_ref(),
+            self.tick(),
         );
     }
 
@@ -163,8 +183,77 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         let Some(sketch) = self.shards[self.shard_of(src)].take(src) else {
             return Ok(false);
         };
-        self.shards[self.shard_of(&dst)].merge_in(self.cfg.hll, dst, sketch)?;
+        self.shards[self.shard_of(&dst)].merge_in(self.cfg.hll, dst, sketch, self.tick())?;
         Ok(true)
+    }
+
+    /// Merge a dense sketch (typically wire-decoded) into `key`, creating
+    /// the key if absent — the serving layer's `MergeSketch` RPC and the
+    /// snapshot restore path. The global union, if tracked, is raised
+    /// too, so remotely merged registers are counted by
+    /// [`Self::global_estimate`] exactly like locally ingested words.
+    /// Config (including hash seed) must match the registry's; mismatches
+    /// fail with [`SketchError::ConfigMismatch`] before any state changes.
+    pub fn merge_sketch(&self, key: K, sketch: HllSketch) -> Result<(), SketchError> {
+        if *sketch.config() != self.cfg.hll {
+            return Err(SketchError::ConfigMismatch(*sketch.config(), self.cfg.hll));
+        }
+        if let Some(global) = &self.global {
+            global.merge_sketch(&sketch)?;
+        }
+        let now = self.tick();
+        self.shards[self.shard_of(&key)].merge_in(
+            self.cfg.hll,
+            key,
+            AdaptiveSketch::Dense(sketch),
+            now,
+        )
+    }
+
+    /// Visit every live key's sketch serialized in wire format v2
+    /// (seed-carrying header; see [`crate::hll::sketch`]), shard by
+    /// shard. Only one shard's records are materialized at a time, so a
+    /// million-key snapshot walk peaks at one shard's serialization —
+    /// not the whole registry's dense image. Sparse keys are densified
+    /// into a temporary for encoding; live state is unchanged.
+    pub fn for_each_sketch_bytes<F: FnMut(&K, Vec<u8>)>(&self, mut f: F) {
+        for shard in &self.shards {
+            let mut batch = Vec::new();
+            shard.export_bytes(&mut batch);
+            for (key, bytes) in batch {
+                f(&key, bytes);
+            }
+        }
+    }
+
+    /// Every live key's sketch in wire format v2, collected into one
+    /// vector. Convenient for tests and small registries; at scale this
+    /// holds the full dense serialization in memory at once — the
+    /// snapshot writer streams via [`Self::for_each_sketch_bytes`]
+    /// instead.
+    pub fn export_sketches(&self) -> Vec<(K, Vec<u8>)> {
+        let mut out = Vec::new();
+        self.for_each_sketch_bytes(|key, bytes| out.push((key.clone(), bytes)));
+        out
+    }
+
+    /// Rebuild registry contents from `(key, sketch)` pairs (the inverse
+    /// of [`Self::export_sketches`] after decoding) by merging each
+    /// sketch into its key. Because sketch merge is a bucket-wise max,
+    /// restoring over existing keys is lossless and idempotent: a
+    /// restarted server that restores the latest snapshot serves
+    /// identical estimates. Returns the number of entries applied; the
+    /// first config/seed mismatch aborts with its error.
+    pub fn restore<I: IntoIterator<Item = (K, HllSketch)>>(
+        &self,
+        entries: I,
+    ) -> Result<usize, SketchError> {
+        let mut applied = 0;
+        for (key, sketch) in entries {
+            self.merge_sketch(key, sketch)?;
+            applied += 1;
+        }
+        Ok(applied)
     }
 
     /// Remove one key; returns its final dense sketch if it existed.
@@ -177,6 +266,60 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
     /// (mutable, so it can estimate).
     pub fn evict_where<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut evict: F) -> usize {
         self.shards.iter().map(|s| s.retain(|k, sk| !evict(k, sk))).sum()
+    }
+
+    /// TTL sweep: drop every key whose last touch is more than `max_age`
+    /// ticks behind the current logical clock (see [`Self::now`]); idle
+    /// tenants age out without explicit eviction calls. Returns the
+    /// number evicted.
+    pub fn evict_idle(&self, max_age: u64) -> usize {
+        let cutoff = self.now().saturating_sub(max_age);
+        self.shards.iter().map(|s| s.evict_idle(cutoff)).sum()
+    }
+
+    /// Size-budget eviction: while total sketch heap exceeds `max_bytes`,
+    /// drop least-recently-touched keys (global LRU order over the
+    /// per-shard last-touch ticks). Returns the number evicted. Accounting
+    /// is the same per-sketch heap estimate [`Self::stats`] reports;
+    /// concurrent ingest during the sweep makes the budget best-effort,
+    /// not a hard cap.
+    pub fn evict_to_budget(&self, max_bytes: usize) -> usize {
+        // Cheap early-out for the common under-budget case: stats sums
+        // bytes under the shard locks without cloning a single key,
+        // where the meta walk below clones every live key.
+        if self.stats().memory_bytes() <= max_bytes {
+            return 0;
+        }
+        let mut meta: Vec<(K, u64, usize)> = Vec::new();
+        for shard in &self.shards {
+            shard.collect_meta(&mut meta);
+        }
+        let mut total: usize = meta.iter().map(|&(_, _, bytes)| bytes).sum();
+        if total <= max_bytes {
+            return 0;
+        }
+        meta.sort_by_key(|&(_, touch, _)| touch);
+        let mut victims: std::collections::HashSet<K> = std::collections::HashSet::new();
+        for (key, _, bytes) in meta {
+            if total <= max_bytes {
+                break;
+            }
+            total -= bytes;
+            victims.insert(key);
+        }
+        self.evict_where(|k, _| victims.contains(k))
+    }
+
+    /// Enforce the configured [`RegistryConfig::max_memory_bytes`] budget
+    /// (no-op returning 0 when unset). The serving layer runs this
+    /// periodically during ingest on budgeted registries; embedders can
+    /// call it on a timer. (The budget `Evict` RPC is separate — it
+    /// enforces a caller-supplied cap via [`Self::evict_to_budget`].)
+    pub fn enforce_budget(&self) -> usize {
+        match self.cfg.max_memory_bytes {
+            Some(max) => self.evict_to_budget(max),
+            None => 0,
+        }
     }
 
     /// Live key count.
@@ -215,6 +358,7 @@ mod tests {
             hll: HllConfig::PAPER,
             shards,
             track_global: true,
+            ..RegistryConfig::default()
         })
         .unwrap()
     }
@@ -354,11 +498,130 @@ mod tests {
             hll: HllConfig::new(12, HashKind::H32).unwrap(),
             shards: 4,
             track_global: false,
+            ..RegistryConfig::default()
         })
         .unwrap();
         reg.ingest(9, &[1, 2, 3, 2, 1]);
         assert!(reg.global_estimate().is_none());
         let est = reg.estimate(&9).unwrap();
         assert!((est - 3.0).abs() < 0.5, "{est}");
+    }
+
+    #[test]
+    fn evict_idle_ages_out_untouched_keys() {
+        let reg = registry(8);
+        // Keys 0..10 touched at ticks 1..=10.
+        for key in 0u64..10 {
+            reg.ingest(key, &[key as u32]);
+        }
+        // Advance the clock to tick 100 hammering one hot key.
+        for i in 0u32..90 {
+            reg.ingest(999, &[i]);
+        }
+        assert_eq!(reg.now(), 100);
+        // max_age 50: cutoff is tick 50, so only the hot key survives.
+        assert_eq!(reg.evict_idle(50), 10);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.estimate(&999).is_some());
+        // A huge max_age evicts nothing.
+        assert_eq!(reg.evict_idle(u64::MAX), 0);
+    }
+
+    #[test]
+    fn budget_eviction_is_lru_ordered() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(11);
+        // Four keys touched in order 1, 2, 3, 4 — then key 1 again, making
+        // key 2 the least recently used.
+        for key in 1u64..=4 {
+            let words: Vec<u32> = (0..2_000).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        reg.ingest(1, &[rng.next_u32()]);
+        let total = reg.stats().memory_bytes();
+        // A budget one byte under the total must evict exactly the LRU key.
+        let evicted = reg.evict_to_budget(total - 1);
+        assert_eq!(evicted, 1);
+        assert!(reg.estimate(&2).is_none(), "key 2 was least recently touched");
+        for key in [1u64, 3, 4] {
+            assert!(reg.estimate(&key).is_some(), "key {key} must survive");
+        }
+        // Already under budget: nothing to do.
+        assert_eq!(reg.evict_to_budget(usize::MAX), 0);
+    }
+
+    #[test]
+    fn enforce_budget_uses_configured_cap() {
+        let reg: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            max_memory_bytes: Some(20 * 1024),
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(12);
+        for key in 0u64..40 {
+            let words: Vec<u32> = (0..1_500).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        assert!(reg.stats().memory_bytes() > 20 * 1024);
+        let evicted = reg.enforce_budget();
+        assert!(evicted > 0);
+        assert!(reg.stats().memory_bytes() <= 20 * 1024);
+        // Unbudgeted registries never evict.
+        let unbounded = registry(8);
+        unbounded.ingest(1, &[1, 2, 3]);
+        assert_eq!(unbounded.enforce_budget(), 0);
+    }
+
+    #[test]
+    fn merge_sketch_and_restore_roundtrip() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(13);
+        for key in 0u64..25 {
+            let n = 10 + (key as usize * 61) % 3_000;
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        let exported = reg.export_sketches();
+        assert_eq!(exported.len(), 25);
+
+        // Decode and restore into a fresh registry: every estimate (and
+        // the global union) must match exactly.
+        let fresh = registry(8);
+        let decoded: Vec<(u64, HllSketch)> = exported
+            .iter()
+            .map(|(k, bytes)| (*k, HllSketch::from_bytes(bytes).unwrap()))
+            .collect();
+        assert_eq!(fresh.restore(decoded).unwrap(), 25);
+        assert_eq!(fresh.len(), reg.len());
+        for (key, est) in reg.estimates() {
+            assert_eq!(fresh.estimate(&key), Some(est), "key {key}");
+        }
+        assert_eq!(fresh.merge_all(), reg.merge_all());
+        assert_eq!(fresh.global_estimate(), reg.global_estimate());
+
+        // Restoring on top of live state is idempotent (max-merge).
+        let decoded_again: Vec<(u64, HllSketch)> = exported
+            .iter()
+            .map(|(k, bytes)| (*k, HllSketch::from_bytes(bytes).unwrap()))
+            .collect();
+        fresh.restore(decoded_again).unwrap();
+        assert_eq!(fresh.merge_all(), reg.merge_all());
+    }
+
+    #[test]
+    fn merge_sketch_rejects_config_and_seed_mismatch() {
+        let reg = registry(4);
+        let other_p = HllSketch::new(HllConfig::new(12, HashKind::H64).unwrap());
+        assert!(matches!(
+            reg.merge_sketch(1, other_p),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+        let seeded = HllSketch::new(HllConfig::PAPER.with_seed(7));
+        assert!(matches!(
+            reg.merge_sketch(1, seeded),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+        assert!(reg.is_empty(), "failed merges must not create keys");
     }
 }

@@ -4,10 +4,15 @@
 //! caller never holds two shard locks at once (cross-shard operations
 //! release the first lock before taking the second), so there is no lock
 //! ordering to get wrong.
+//!
+//! Each key carries a logical last-touch tick alongside its sketch (the
+//! registry's monotone ingest clock), which is what the TTL sweep
+//! ([`Shard::evict_idle`]) and the LRU size-budget eviction
+//! ([`Shard::collect_meta`] + retain) key off.
 
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use super::config::ShardStats;
 use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
@@ -19,8 +24,30 @@ pub(crate) struct Shard<K> {
 
 #[derive(Debug)]
 struct ShardState<K> {
-    map: HashMap<K, AdaptiveSketch>,
+    map: HashMap<K, KeyEntry>,
     words: u64,
+}
+
+/// One key's live state: the sketch plus the registry clock tick of the
+/// last write that touched it.
+#[derive(Debug)]
+struct KeyEntry {
+    sketch: AdaptiveSketch,
+    last_touch: u64,
+}
+
+impl KeyEntry {
+    fn new(cfg: HllConfig, now: u64) -> Self {
+        Self { sketch: AdaptiveSketch::new(cfg), last_touch: now }
+    }
+
+    /// Monotone touch: ticks are taken from the registry clock *before*
+    /// the shard lock, so two concurrent ingests of one key can apply
+    /// their ticks in either order — a plain assignment could move the
+    /// key's last touch backwards and get a just-touched key TTL-evicted.
+    fn touch(&mut self, now: u64) {
+        self.last_touch = self.last_touch.max(now);
+    }
 }
 
 impl<K: Eq + Hash> Shard<K> {
@@ -28,28 +55,39 @@ impl<K: Eq + Hash> Shard<K> {
         Self { state: Mutex::new(ShardState { map: HashMap::new(), words: 0 }) }
     }
 
+    /// Take the shard lock, recovering from poison: a panic in a
+    /// caller-supplied predicate (e.g. inside `retain`) must not turn
+    /// every later query into a second panic — the map holds monotone
+    /// max-register sketches that cannot be left logically torn, so the
+    /// state is safe to keep serving. This is the panic-free shutdown
+    /// path the service layer relies on.
+    fn lock(&self) -> MutexGuard<'_, ShardState<K>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Fold pre-hashed words into one key's sketch (created on first
     /// touch).
-    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64]) {
-        let mut st = self.state.lock().unwrap();
-        let sketch = st.map.entry(key).or_insert_with(|| AdaptiveSketch::new(cfg));
+    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64], now: u64) {
+        let mut st = self.lock();
+        let entry = st.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now));
+        entry.touch(now);
         for &h in hashes {
-            sketch.insert_hash(h);
+            entry.sketch.insert_hash(h);
         }
         st.words += hashes.len() as u64;
     }
 
     /// Fold a run of (key, hash) pairs under one lock acquisition.
-    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)])
+    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)], now: u64)
     where
         K: Clone,
     {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         for (key, h) in pairs {
-            st.map
-                .entry(key.clone())
-                .or_insert_with(|| AdaptiveSketch::new(cfg))
-                .insert_hash(*h);
+            let entry =
+                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now));
+            entry.touch(now);
+            entry.sketch.insert_hash(*h);
         }
         st.words += pairs.len() as u64;
     }
@@ -65,52 +103,92 @@ impl<K: Eq + Hash> Shard<K> {
         cfg: HllConfig,
         pairs: impl Iterator<Item = (&'a K, u32)>,
         global: Option<&crate::hll::ConcurrentHllSketch>,
+        now: u64,
     ) where
         K: Clone + 'a,
     {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         let mut n = 0u64;
         for (key, word) in pairs {
             let h = cfg.hash_word(word);
             if let Some(g) = global {
                 g.insert_hash(h);
             }
-            st.map
-                .entry(key.clone())
-                .or_insert_with(|| AdaptiveSketch::new(cfg))
-                .insert_hash(h);
+            let entry =
+                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now));
+            entry.touch(now);
+            entry.sketch.insert_hash(h);
             n += 1;
         }
         st.words += n;
     }
 
     pub(crate) fn estimate(&self, key: &K) -> Option<f64> {
-        let mut st = self.state.lock().unwrap();
-        st.map.get_mut(key).map(|s| s.estimate())
+        let mut st = self.lock();
+        st.map.get_mut(key).map(|e| e.sketch.estimate())
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.state.lock().unwrap().map.len()
+        self.lock().map.len()
     }
 
     /// Remove one key; returns its final dense register file, if present.
     pub(crate) fn evict(&self, key: &K) -> Option<HllSketch> {
-        let mut st = self.state.lock().unwrap();
-        st.map.remove(key).map(|s| s.into_dense())
+        let mut st = self.lock();
+        st.map.remove(key).map(|e| e.sketch.into_dense())
     }
 
     /// Keep only keys the predicate approves; returns how many were
     /// evicted. The predicate may mutate the sketch (e.g. to estimate).
     pub(crate) fn retain<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut keep: F) -> usize {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         let before = st.map.len();
-        st.map.retain(|k, s| keep(k, s));
+        st.map.retain(|k, e| keep(k, &mut e.sketch));
         before - st.map.len()
+    }
+
+    /// Drop every key whose last touch predates `cutoff`; returns how
+    /// many aged out.
+    pub(crate) fn evict_idle(&self, cutoff: u64) -> usize {
+        let mut st = self.lock();
+        let before = st.map.len();
+        st.map.retain(|_, e| e.last_touch >= cutoff);
+        before - st.map.len()
+    }
+
+    /// Append `(key, last_touch, memory_bytes)` for every live key — the
+    /// input the registry's LRU budget eviction sorts globally.
+    pub(crate) fn collect_meta(&self, out: &mut Vec<(K, u64, usize)>)
+    where
+        K: Clone,
+    {
+        let st = self.lock();
+        for (k, e) in st.map.iter() {
+            out.push((k.clone(), e.last_touch, e.sketch.memory_bytes()));
+        }
+    }
+
+    /// Append every key's sketch in wire-format-v2 bytes. The lock is
+    /// held only while *cloning* the live sketches (proportional to
+    /// their in-memory size — cheap for sparse keys); densification and
+    /// serialization happen after release, so a snapshot walk does not
+    /// stall ingest on this shard for the whole encode.
+    pub(crate) fn export_bytes(&self, out: &mut Vec<(K, Vec<u8>)>)
+    where
+        K: Clone,
+    {
+        let cloned: Vec<(K, AdaptiveSketch)> = {
+            let st = self.lock();
+            st.map.iter().map(|(k, e)| (k.clone(), e.sketch.clone())).collect()
+        };
+        for (k, sketch) in cloned {
+            out.push((k, sketch.into_dense().to_bytes()));
+        }
     }
 
     /// Remove one key's sketch without densifying (for cross-shard moves).
     pub(crate) fn take(&self, key: &K) -> Option<AdaptiveSketch> {
-        self.state.lock().unwrap().map.remove(key)
+        self.lock().map.remove(key).map(|e| e.sketch)
     }
 
     /// Merge a sketch into `key`'s sketch (created if absent).
@@ -119,15 +197,21 @@ impl<K: Eq + Hash> Shard<K> {
         cfg: HllConfig,
         key: K,
         other: AdaptiveSketch,
+        now: u64,
     ) -> Result<(), crate::hll::SketchError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         match st.map.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge_into(other),
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let entry = e.get_mut();
+                entry.sketch.merge_into(other)?;
+                entry.touch(now);
+                Ok(())
+            }
             std::collections::hash_map::Entry::Vacant(e) => {
                 if *other.config() != cfg {
                     return Err(crate::hll::SketchError::ConfigMismatch(*other.config(), cfg));
                 }
-                e.insert(other);
+                e.insert(KeyEntry { sketch: other, last_touch: now });
                 Ok(())
             }
         }
@@ -139,10 +223,10 @@ impl<K: Eq + Hash> Shard<K> {
     /// million mostly-small keys fold in millions of updates rather
     /// than billions of register merges.
     pub(crate) fn fold_into(&self, acc: &mut HllSketch) {
-        let mut st = self.state.lock().unwrap();
-        for sketch in st.map.values_mut() {
-            debug_assert_eq!(sketch.config(), acc.config());
-            match sketch {
+        let mut st = self.lock();
+        for entry in st.map.values_mut() {
+            debug_assert_eq!(entry.sketch.config(), acc.config());
+            match &mut entry.sketch {
                 AdaptiveSketch::Dense(d) => {
                     acc.merge(d).expect("registry sketches share one config");
                 }
@@ -155,29 +239,29 @@ impl<K: Eq + Hash> Shard<K> {
 
     /// Run `f` over every (key, estimate) pair (bulk estimate API).
     pub(crate) fn for_each_estimate<F: FnMut(&K, f64)>(&self, mut f: F) {
-        let mut st = self.state.lock().unwrap();
-        for (k, s) in st.map.iter_mut() {
-            let e = s.estimate();
-            f(k, e);
+        let mut st = self.lock();
+        for (k, e) in st.map.iter_mut() {
+            let est = e.sketch.estimate();
+            f(k, est);
         }
     }
 
     pub(crate) fn stats(&self) -> ShardStats {
-        let st = self.state.lock().unwrap();
+        let st = self.lock();
         let mut out = ShardStats { words: st.words, keys: st.map.len(), ..ShardStats::default() };
-        for sketch in st.map.values() {
-            if sketch.is_sparse() {
+        for entry in st.map.values() {
+            if entry.sketch.is_sparse() {
                 out.sparse_keys += 1;
             } else {
                 out.dense_keys += 1;
             }
-            out.memory_bytes += sketch.memory_bytes();
+            out.memory_bytes += entry.sketch.memory_bytes();
         }
         out
     }
 
     pub(crate) fn clear(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         st.map.clear();
         st.words = 0;
     }

@@ -288,6 +288,15 @@ impl Drop for RegistryService {
 }
 
 impl RegistryHandle {
+    /// Submit one request and block on the reply.
+    ///
+    /// Both failure edges of the channel pair are typed, never panics:
+    /// a dropped service (receiver gone) fails the `send`, and a service
+    /// that dies mid-request (sender gone before replying) fails the
+    /// `recv` — either way the caller gets
+    /// [`RuntimeError::ServiceGone`], so handles outliving their
+    /// [`RegistryService`] degrade into errors rather than hangs or
+    /// panics (asserted by `handle_is_a_typed_error_after_service_drop`).
     fn call<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> RegistryRequest) -> Result<T> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
@@ -357,6 +366,34 @@ mod tests {
         // Eviction goes through the service, visible to direct users.
         assert!(handle.evict(7).unwrap());
         assert!(!handle.evict(7).unwrap());
+        assert_eq!(registry.len(), 1);
+    }
+
+    #[test]
+    fn handle_is_a_typed_error_after_service_drop() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 4,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        registry.ingest(1, &[1, 2, 3]);
+        let svc = RegistryService::start(registry.clone());
+        let handle = svc.handle();
+        assert!(handle.estimate(1).unwrap().is_some());
+
+        // Dropping the service joins the query thread; every later call
+        // on a surviving handle must be Err(ServiceGone) — not a panic,
+        // not a hang.
+        drop(svc);
+        assert!(matches!(handle.estimate(1), Err(RuntimeError::ServiceGone(_))));
+        assert!(matches!(handle.global_estimate(), Err(RuntimeError::ServiceGone(_))));
+        assert!(matches!(handle.keys(), Err(RuntimeError::ServiceGone(_))));
+        assert!(matches!(handle.stats(), Err(RuntimeError::ServiceGone(_))));
+        assert!(matches!(handle.evict(1), Err(RuntimeError::ServiceGone(_))));
+        // Clones of a dead handle behave the same.
+        let clone = handle.clone();
+        assert!(clone.keys().is_err());
+        // The registry itself is untouched by service shutdown.
         assert_eq!(registry.len(), 1);
     }
 }

@@ -1,0 +1,59 @@
+//! Network serving subsystem: the production front door of the
+//! multi-tenant sketch registry.
+//!
+//! The paper's headline scenario is HLL consuming streams "coming from
+//! high-speed networks"; [`crate::net`] models that NIC deployment as a
+//! discrete-event *simulation* (Table IV), while this module is the
+//! *real* serving path — actual loopback/LAN sockets in front of a
+//! shared [`crate::registry::SketchRegistry`]:
+//!
+//! * [`protocol`] — the length-prefixed, versioned binary frame protocol
+//!   (`InsertBatch`, `Estimate`, `GlobalEstimate`, `MergeSketch` using
+//!   the seed-carrying sketch wire format v2, `Stats`, `Evict` with
+//!   key/TTL/budget policies, `Snapshot`, `Ping`), with typed error
+//!   frames and strict, panic-free decoding;
+//! * [`server`] — a multi-threaded [`std::net::TcpListener`] server:
+//!   one thread per connection, per-connection and aggregate stats,
+//!   graceful shutdown that joins every thread;
+//! * [`client`] — a blocking [`SketchClient`] with batch pipelining
+//!   (write a flight of ingest frames, then read the replies — one
+//!   round trip per flight);
+//! * [`snapshot`] — checksummed full-registry snapshot files and the
+//!   restore path, so a restarted server resumes with identical
+//!   estimates and sketches ship across nodes.
+//!
+//! Remote ingest is bit-exact with in-process ingest: the server feeds
+//! the same [`crate::registry::SketchRegistry::ingest`] path, so a
+//! `SketchClient` and a local thread produce identical register files
+//! for the same words (asserted over real sockets by
+//! `rust/tests/server_e2e.rs`).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+//! use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+//!
+//! let registry = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+//! let server =
+//!     SketchServer::start("127.0.0.1:0", registry, ServerConfig::default()).unwrap();
+//! let mut client = SketchClient::connect(server.local_addr()).unwrap();
+//! client.insert_batch(42, &[1, 2, 3, 2]).unwrap();
+//! assert!(client.estimate(42).unwrap().is_some());
+//! server.shutdown();
+//! ```
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod snapshot;
+
+pub use client::{ClientError, SketchClient};
+pub use protocol::{
+    ErrorCode, EvictPolicy, ProtocolError, Request, Response, StatsSummary, MAX_PAYLOAD,
+    PROTO_VERSION,
+};
+pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer};
+pub use snapshot::{
+    read_snapshot, restore_registry, write_snapshot, SnapshotError, SnapshotSummary,
+    SNAPSHOT_MAGIC, SNAPSHOT_VERSION,
+};

@@ -1,0 +1,720 @@
+//! The length-prefixed binary wire protocol spoken between
+//! [`super::SketchClient`] and [`super::SketchServer`].
+//!
+//! # Frame layout
+//!
+//! Every message — request or response — is one frame (all integers
+//! little-endian):
+//!
+//! | offset | size | field                                          |
+//! |--------|------|------------------------------------------------|
+//! | 0      | 2    | magic `b"HL"` ([`MAGIC`])                      |
+//! | 2      | 1    | protocol version ([`PROTO_VERSION`], currently 1) |
+//! | 3      | 1    | opcode (see [`opcodes`])                       |
+//! | 4      | 4    | payload length, u32 LE (≤ [`MAX_PAYLOAD`])     |
+//! | 8      | n    | payload                                        |
+//!
+//! # Request payloads
+//!
+//! | opcode            | payload                                               |
+//! |-------------------|-------------------------------------------------------|
+//! | `PING`            | empty                                                 |
+//! | `INSERT_BATCH`    | key u64 · count u32 · count × word u32                |
+//! | `ESTIMATE`        | key u64                                               |
+//! | `GLOBAL_ESTIMATE` | empty                                                 |
+//! | `MERGE_SKETCH`    | key u64 · len u32 · len × sketch wire-format-v2 bytes |
+//! | `STATS`           | empty                                                 |
+//! | `EVICT`           | policy u8 (0=key, 1=idle, 2=budget) · argument u64    |
+//! | `SNAPSHOT`        | empty                                                 |
+//!
+//! # Response payloads
+//!
+//! | opcode                  | payload                                        |
+//! |-------------------------|------------------------------------------------|
+//! | `PONG`                  | empty                                          |
+//! | `INGESTED`              | words u64                                      |
+//! | `ESTIMATE_REPLY`        | present u8 (0/1) · estimate f64 bits u64       |
+//! | `GLOBAL_ESTIMATE_REPLY` | present u8 (0/1) · estimate f64 bits u64       |
+//! | `MERGED`                | empty                                          |
+//! | `STATS_REPLY`           | keys · sparse · dense · memory_bytes · words (5 × u64) |
+//! | `EVICTED`               | keys u64                                       |
+//! | `SNAPSHOT_DONE`         | keys u64 · file bytes u64                      |
+//! | `ERROR`                 | code u8 · msg_len u32 · msg_len × utf-8 bytes  |
+//!
+//! The `MERGE_SKETCH` body reuses the seed-carrying sketch wire format v2
+//! (see [`crate::hll::sketch`]), so a sketch built with a nonzero hash
+//! seed cannot silently merge into a differently-seeded registry over the
+//! network: the server answers an `ERROR` frame with
+//! [`ErrorCode::ConfigMismatch`].
+//!
+//! Decoding is strict: short payloads, trailing bytes, unknown opcodes,
+//! bad magic/version and oversized length fields all fail with a typed
+//! [`ProtocolError`] — never a panic — so a hostile or corrupted peer
+//! cannot take the server down.
+
+use std::io::{self, Read};
+
+use crate::registry::RegistryStats;
+
+/// Frame magic: ASCII "HL".
+pub const MAGIC: [u8; 2] = *b"HL";
+/// Protocol version carried in every frame header.
+pub const PROTO_VERSION: u8 = 1;
+/// Fixed frame header length: magic(2) + version(1) + opcode(1) + len(4).
+pub const FRAME_HEADER_LEN: usize = 8;
+/// Upper bound on the payload length accepted from the wire, guarding a
+/// corrupted or hostile length field from driving a giant allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Frame opcodes. Requests use the low range, responses the high range.
+pub mod opcodes {
+    pub const PING: u8 = 0x01;
+    pub const INSERT_BATCH: u8 = 0x02;
+    pub const ESTIMATE: u8 = 0x03;
+    pub const GLOBAL_ESTIMATE: u8 = 0x04;
+    pub const MERGE_SKETCH: u8 = 0x05;
+    pub const STATS: u8 = 0x06;
+    pub const EVICT: u8 = 0x07;
+    pub const SNAPSHOT: u8 = 0x08;
+
+    pub const PONG: u8 = 0x81;
+    pub const INGESTED: u8 = 0x82;
+    pub const ESTIMATE_REPLY: u8 = 0x83;
+    pub const GLOBAL_ESTIMATE_REPLY: u8 = 0x84;
+    pub const MERGED: u8 = 0x85;
+    pub const STATS_REPLY: u8 = 0x86;
+    pub const EVICTED: u8 = 0x87;
+    pub const SNAPSHOT_DONE: u8 = 0x88;
+    pub const ERROR: u8 = 0xEE;
+}
+
+/// Errors reading or decoding a frame.
+#[derive(Debug)]
+pub enum ProtocolError {
+    Io(io::Error),
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadOpcode(u8),
+    Oversize(u32),
+    Malformed(String),
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Io(e) => write!(f, "io error: {e}"),
+            ProtocolError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            ProtocolError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (expected {PROTO_VERSION})")
+            }
+            ProtocolError::BadOpcode(op) => write!(f, "unknown opcode 0x{op:02x}"),
+            ProtocolError::Oversize(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            ProtocolError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+impl From<io::Error> for ProtocolError {
+    fn from(e: io::Error) -> Self {
+        ProtocolError::Io(e)
+    }
+}
+
+/// Error codes carried by `ERROR` response frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request could not be decoded or referenced invalid bytes.
+    Malformed = 1,
+    /// A merged sketch's config (p / hash width / seed) does not match
+    /// the registry's.
+    ConfigMismatch = 2,
+    /// The server does not support the operation (e.g. `SNAPSHOT` on a
+    /// server started without a snapshot path).
+    Unsupported = 3,
+    /// The operation failed server-side (e.g. snapshot disk I/O).
+    Internal = 4,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::Malformed),
+            2 => Some(ErrorCode::ConfigMismatch),
+            3 => Some(ErrorCode::Unsupported),
+            4 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// Eviction policy selector of the `EVICT` request — the RPC knob over
+/// the registry's eviction primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Drop one key.
+    Key(u64),
+    /// TTL sweep: drop keys idle for more than `max_age` clock ticks
+    /// ([`crate::registry::SketchRegistry::evict_idle`]).
+    Idle { max_age: u64 },
+    /// LRU size budget: evict least-recently-touched keys until total
+    /// sketch heap is at most `max_memory_bytes`
+    /// ([`crate::registry::SketchRegistry::evict_to_budget`]).
+    Budget { max_memory_bytes: u64 },
+}
+
+/// A client→server request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    InsertBatch { key: u64, words: Vec<u32> },
+    Estimate { key: u64 },
+    GlobalEstimate,
+    MergeSketch { key: u64, bytes: Vec<u8> },
+    Stats,
+    Evict(EvictPolicy),
+    Snapshot,
+}
+
+/// Registry accounting totals, flattened for the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StatsSummary {
+    pub keys: u64,
+    pub sparse_keys: u64,
+    pub dense_keys: u64,
+    pub memory_bytes: u64,
+    pub words: u64,
+}
+
+impl From<&RegistryStats> for StatsSummary {
+    fn from(s: &RegistryStats) -> Self {
+        Self {
+            keys: s.keys() as u64,
+            sparse_keys: s.sparse_keys() as u64,
+            dense_keys: s.dense_keys() as u64,
+            memory_bytes: s.memory_bytes() as u64,
+            words: s.words(),
+        }
+    }
+}
+
+/// A server→client response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Ingested { words: u64 },
+    Estimate(Option<f64>),
+    GlobalEstimate(Option<f64>),
+    Merged,
+    Stats(StatsSummary),
+    Evicted { keys: u64 },
+    SnapshotDone { keys: u64, bytes: u64 },
+    Error { code: ErrorCode, message: String },
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn frame(opcode: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(PROTO_VERSION);
+    out.push(opcode);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode an `INSERT_BATCH` frame straight from borrowed words — the
+/// client's pipelining hot path (no intermediate [`Request`] allocation).
+pub fn encode_insert_batch(key: u64, words: &[u32]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(12 + words.len() * 4);
+    payload.extend_from_slice(&key.to_le_bytes());
+    payload.extend_from_slice(&(words.len() as u32).to_le_bytes());
+    for &w in words {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    frame(opcodes::INSERT_BATCH, &payload)
+}
+
+impl Request {
+    /// Serialize to one complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Ping => frame(opcodes::PING, &[]),
+            Request::InsertBatch { key, words } => encode_insert_batch(*key, words),
+            Request::Estimate { key } => frame(opcodes::ESTIMATE, &key.to_le_bytes()),
+            Request::GlobalEstimate => frame(opcodes::GLOBAL_ESTIMATE, &[]),
+            Request::MergeSketch { key, bytes } => {
+                let mut payload = Vec::with_capacity(12 + bytes.len());
+                payload.extend_from_slice(&key.to_le_bytes());
+                payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                payload.extend_from_slice(bytes);
+                frame(opcodes::MERGE_SKETCH, &payload)
+            }
+            Request::Stats => frame(opcodes::STATS, &[]),
+            Request::Evict(policy) => {
+                let (tag, arg) = match policy {
+                    EvictPolicy::Key(key) => (0u8, *key),
+                    EvictPolicy::Idle { max_age } => (1, *max_age),
+                    EvictPolicy::Budget { max_memory_bytes } => (2, *max_memory_bytes),
+                };
+                let mut payload = Vec::with_capacity(9);
+                payload.push(tag);
+                payload.extend_from_slice(&arg.to_le_bytes());
+                frame(opcodes::EVICT, &payload)
+            }
+            Request::Snapshot => frame(opcodes::SNAPSHOT, &[]),
+        }
+    }
+
+    /// Decode a request payload for `opcode`. Strict: trailing or missing
+    /// bytes are a typed error.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Request, ProtocolError> {
+        let mut r = Reader::new(payload);
+        let req = match opcode {
+            opcodes::PING => Request::Ping,
+            opcodes::INSERT_BATCH => {
+                let key = r.u64()?;
+                let count = r.u32()?;
+                // Compare in u64: `count as usize * 4` could wrap on a
+                // 32-bit target, letting a hostile count pass the check
+                // and drive a huge allocation below.
+                if r.remaining() as u64 != count as u64 * 4 {
+                    return Err(ProtocolError::Malformed(format!(
+                        "insert batch declares {count} words but carries {} payload bytes",
+                        r.remaining()
+                    )));
+                }
+                let mut words = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    words.push(r.u32()?);
+                }
+                Request::InsertBatch { key, words }
+            }
+            opcodes::ESTIMATE => Request::Estimate { key: r.u64()? },
+            opcodes::GLOBAL_ESTIMATE => Request::GlobalEstimate,
+            opcodes::MERGE_SKETCH => {
+                let key = r.u64()?;
+                let len = r.u32()? as usize;
+                let bytes = r.bytes(len)?.to_vec();
+                Request::MergeSketch { key, bytes }
+            }
+            opcodes::STATS => Request::Stats,
+            opcodes::EVICT => {
+                let tag = r.u8()?;
+                let arg = r.u64()?;
+                let policy = match tag {
+                    0 => EvictPolicy::Key(arg),
+                    1 => EvictPolicy::Idle { max_age: arg },
+                    2 => EvictPolicy::Budget { max_memory_bytes: arg },
+                    other => {
+                        return Err(ProtocolError::Malformed(format!(
+                            "unknown evict policy {other}"
+                        )))
+                    }
+                };
+                Request::Evict(policy)
+            }
+            opcodes::SNAPSHOT => Request::Snapshot,
+            other => return Err(ProtocolError::BadOpcode(other)),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+fn encode_opt_f64(payload: &mut Vec<u8>, v: Option<f64>) {
+    payload.push(v.is_some() as u8);
+    payload.extend_from_slice(&v.unwrap_or(0.0).to_bits().to_le_bytes());
+}
+
+fn decode_opt_f64(r: &mut Reader<'_>) -> Result<Option<f64>, ProtocolError> {
+    let present = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(ProtocolError::Malformed(format!("estimate presence flag {other}")))
+        }
+    };
+    let bits = r.u64()?;
+    Ok(present.then(|| f64::from_bits(bits)))
+}
+
+impl Response {
+    /// Short variant name, for "expected X, got Y" client errors.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Response::Pong => "Pong",
+            Response::Ingested { .. } => "Ingested",
+            Response::Estimate(_) => "Estimate",
+            Response::GlobalEstimate(_) => "GlobalEstimate",
+            Response::Merged => "Merged",
+            Response::Stats(_) => "Stats",
+            Response::Evicted { .. } => "Evicted",
+            Response::SnapshotDone { .. } => "SnapshotDone",
+            Response::Error { .. } => "Error",
+        }
+    }
+
+    /// Serialize to one complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Pong => frame(opcodes::PONG, &[]),
+            Response::Ingested { words } => frame(opcodes::INGESTED, &words.to_le_bytes()),
+            Response::Estimate(v) => {
+                let mut payload = Vec::with_capacity(9);
+                encode_opt_f64(&mut payload, *v);
+                frame(opcodes::ESTIMATE_REPLY, &payload)
+            }
+            Response::GlobalEstimate(v) => {
+                let mut payload = Vec::with_capacity(9);
+                encode_opt_f64(&mut payload, *v);
+                frame(opcodes::GLOBAL_ESTIMATE_REPLY, &payload)
+            }
+            Response::Merged => frame(opcodes::MERGED, &[]),
+            Response::Stats(s) => {
+                let mut payload = Vec::with_capacity(40);
+                for v in [s.keys, s.sparse_keys, s.dense_keys, s.memory_bytes, s.words] {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                frame(opcodes::STATS_REPLY, &payload)
+            }
+            Response::Evicted { keys } => frame(opcodes::EVICTED, &keys.to_le_bytes()),
+            Response::SnapshotDone { keys, bytes } => {
+                let mut payload = Vec::with_capacity(16);
+                payload.extend_from_slice(&keys.to_le_bytes());
+                payload.extend_from_slice(&bytes.to_le_bytes());
+                frame(opcodes::SNAPSHOT_DONE, &payload)
+            }
+            Response::Error { code, message } => {
+                let msg = message.as_bytes();
+                let mut payload = Vec::with_capacity(5 + msg.len());
+                payload.push(*code as u8);
+                payload.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                payload.extend_from_slice(msg);
+                frame(opcodes::ERROR, &payload)
+            }
+        }
+    }
+
+    /// Decode a response payload for `opcode`.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Response, ProtocolError> {
+        let mut r = Reader::new(payload);
+        let resp = match opcode {
+            opcodes::PONG => Response::Pong,
+            opcodes::INGESTED => Response::Ingested { words: r.u64()? },
+            opcodes::ESTIMATE_REPLY => Response::Estimate(decode_opt_f64(&mut r)?),
+            opcodes::GLOBAL_ESTIMATE_REPLY => Response::GlobalEstimate(decode_opt_f64(&mut r)?),
+            opcodes::MERGED => Response::Merged,
+            opcodes::STATS_REPLY => Response::Stats(StatsSummary {
+                keys: r.u64()?,
+                sparse_keys: r.u64()?,
+                dense_keys: r.u64()?,
+                memory_bytes: r.u64()?,
+                words: r.u64()?,
+            }),
+            opcodes::EVICTED => Response::Evicted { keys: r.u64()? },
+            opcodes::SNAPSHOT_DONE => {
+                Response::SnapshotDone { keys: r.u64()?, bytes: r.u64()? }
+            }
+            opcodes::ERROR => {
+                let code = r.u8()?;
+                let code = ErrorCode::from_u8(code)
+                    .ok_or_else(|| ProtocolError::Malformed(format!("error code {code}")))?;
+                let len = r.u32()? as usize;
+                let message = String::from_utf8(r.bytes(len)?.to_vec())
+                    .map_err(|_| ProtocolError::Malformed("error message not utf-8".into()))?;
+                Response::Error { code, message }
+            }
+            other => return Err(ProtocolError::BadOpcode(other)),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// Validate a frame header, returning `(opcode, payload_len)`.
+pub fn parse_header(header: &[u8; FRAME_HEADER_LEN]) -> Result<(u8, u32), ProtocolError> {
+    if header[0..2] != MAGIC {
+        return Err(ProtocolError::BadMagic([header[0], header[1]]));
+    }
+    if header[2] != PROTO_VERSION {
+        return Err(ProtocolError::BadVersion(header[2]));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(ProtocolError::Oversize(len));
+    }
+    Ok((header[3], len))
+}
+
+/// Blocking read of one raw frame: `(opcode, payload)`.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), ProtocolError> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (opcode, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((opcode, payload))
+}
+
+/// Blocking read + decode of one request frame.
+pub fn read_request(r: &mut impl Read) -> Result<Request, ProtocolError> {
+    let (opcode, payload) = read_frame(r)?;
+    Request::decode(opcode, &payload)
+}
+
+/// Blocking read + decode of one response frame.
+pub fn read_response(r: &mut impl Read) -> Result<Response, ProtocolError> {
+    let (opcode, payload) = read_frame(r)?;
+    Response::decode(opcode, &payload)
+}
+
+/// Strict little-endian payload cursor.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.remaining() < n {
+            return Err(ProtocolError::Malformed(format!(
+                "need {n} more bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Reject trailing bytes — a frame that decodes but has leftovers is
+    /// a framing bug on the peer, not something to paper over.
+    fn finish(self) -> Result<(), ProtocolError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtocolError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_request(req: Request) {
+        let bytes = req.encode();
+        let mut cur = Cursor::new(bytes);
+        let got = read_request(&mut cur).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(cur.position() as usize, cur.get_ref().len(), "frame fully consumed");
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let bytes = resp.encode();
+        let mut cur = Cursor::new(bytes);
+        let got = read_response(&mut cur).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        roundtrip_request(Request::Ping);
+        roundtrip_request(Request::InsertBatch { key: 7, words: vec![] });
+        roundtrip_request(Request::InsertBatch {
+            key: u64::MAX,
+            words: vec![0, 1, u32::MAX, 0xDEAD_BEEF],
+        });
+        roundtrip_request(Request::Estimate { key: 42 });
+        roundtrip_request(Request::GlobalEstimate);
+        roundtrip_request(Request::MergeSketch { key: 3, bytes: vec![1, 2, 3, 4, 5] });
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Evict(EvictPolicy::Key(9)));
+        roundtrip_request(Request::Evict(EvictPolicy::Idle { max_age: 100 }));
+        roundtrip_request(Request::Evict(EvictPolicy::Budget { max_memory_bytes: 1 << 30 }));
+        roundtrip_request(Request::Snapshot);
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        roundtrip_response(Response::Pong);
+        roundtrip_response(Response::Ingested { words: 12345 });
+        roundtrip_response(Response::Estimate(None));
+        roundtrip_response(Response::Estimate(Some(1234.5678)));
+        roundtrip_response(Response::GlobalEstimate(Some(0.0)));
+        roundtrip_response(Response::GlobalEstimate(None));
+        roundtrip_response(Response::Merged);
+        roundtrip_response(Response::Stats(StatsSummary {
+            keys: 1,
+            sparse_keys: 2,
+            dense_keys: 3,
+            memory_bytes: 4,
+            words: 5,
+        }));
+        roundtrip_response(Response::Evicted { keys: 17 });
+        roundtrip_response(Response::SnapshotDone { keys: 8, bytes: 4096 });
+        roundtrip_response(Response::Error {
+            code: ErrorCode::ConfigMismatch,
+            message: "seed mismatch".into(),
+        });
+    }
+
+    #[test]
+    fn bad_magic_version_opcode_oversize() {
+        let good = Request::Ping.encode();
+        assert!(matches!(
+            parse_header(good[..8].try_into().unwrap()),
+            Ok((opcodes::PING, 0))
+        ));
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_request(&mut Cursor::new(bad_magic)),
+            Err(ProtocolError::BadMagic(_))
+        ));
+
+        let mut bad_version = good.clone();
+        bad_version[2] = 99;
+        assert!(matches!(
+            read_request(&mut Cursor::new(bad_version)),
+            Err(ProtocolError::BadVersion(99))
+        ));
+
+        let mut bad_opcode = good.clone();
+        bad_opcode[3] = 0x7F;
+        assert!(matches!(
+            read_request(&mut Cursor::new(bad_opcode)),
+            Err(ProtocolError::BadOpcode(0x7F))
+        ));
+
+        let mut oversize = good;
+        oversize[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_request(&mut Cursor::new(oversize)),
+            Err(ProtocolError::Oversize(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_frames_are_io_errors() {
+        // Header cut short.
+        let full = Request::Estimate { key: 5 }.encode();
+        for cut in [0usize, 3, 7, 9, full.len() - 1] {
+            let err = read_request(&mut Cursor::new(full[..cut].to_vec())).unwrap_err();
+            assert!(matches!(err, ProtocolError::Io(_)), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn strict_payload_decoding() {
+        // Trailing bytes rejected.
+        let mut payload = 5u64.to_le_bytes().to_vec();
+        payload.push(0);
+        assert!(matches!(
+            Request::decode(opcodes::ESTIMATE, &payload),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Word count disagreeing with payload size rejected.
+        let mut bad = 1u64.to_le_bytes().to_vec();
+        bad.extend_from_slice(&10u32.to_le_bytes()); // claims 10 words
+        bad.extend_from_slice(&0u32.to_le_bytes()); // carries 1
+        assert!(matches!(
+            Request::decode(opcodes::INSERT_BATCH, &bad),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Unknown evict policy rejected.
+        let mut evict = vec![9u8];
+        evict.extend_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            Request::decode(opcodes::EVICT, &evict),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Unknown error code rejected.
+        let mut err_payload = vec![200u8];
+        err_payload.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::ERROR, &err_payload),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Bad presence flag rejected.
+        let mut est = vec![7u8];
+        est.extend_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::ESTIMATE_REPLY, &est),
+            Err(ProtocolError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_sequence() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_insert_batch(1, &[10, 20]));
+        wire.extend_from_slice(&encode_insert_batch(2, &[30]));
+        wire.extend_from_slice(&Request::Stats.encode());
+        let mut cur = Cursor::new(wire);
+        assert_eq!(
+            read_request(&mut cur).unwrap(),
+            Request::InsertBatch { key: 1, words: vec![10, 20] }
+        );
+        assert_eq!(
+            read_request(&mut cur).unwrap(),
+            Request::InsertBatch { key: 2, words: vec![30] }
+        );
+        assert_eq!(read_request(&mut cur).unwrap(), Request::Stats);
+    }
+
+    #[test]
+    fn stats_summary_from_registry_stats() {
+        use crate::registry::ShardStats;
+        let stats = RegistryStats {
+            shards: vec![ShardStats {
+                keys: 2,
+                sparse_keys: 1,
+                dense_keys: 1,
+                memory_bytes: 640,
+                words: 99,
+            }],
+        };
+        let s = StatsSummary::from(&stats);
+        assert_eq!(s.keys, 2);
+        assert_eq!(s.sparse_keys, 1);
+        assert_eq!(s.dense_keys, 1);
+        assert_eq!(s.memory_bytes, 640);
+        assert_eq!(s.words, 99);
+    }
+}

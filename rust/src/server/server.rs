@@ -1,0 +1,383 @@
+//! The TCP serving front-end: a multi-threaded
+//! [`std::net::TcpListener`] server that owns a shared
+//! [`SketchRegistry`] and speaks the [`super::protocol`] frame protocol.
+//!
+//! One thread accepts; each connection gets a dedicated thread (the
+//! blocking analogue of the paper's per-port NIC pipelines). The accept
+//! loop and every connection read poll a shared stop flag on a short
+//! interval, so [`SketchServer::shutdown`] (or drop) stops accepting
+//! and joins every connection thread within one poll tick — a graceful
+//! shutdown with no detached threads left touching the registry.
+//!
+//! Malformed frames are answered with typed `ERROR` frames where the
+//! stream is still in sync (decode errors), and the connection is
+//! dropped where it cannot be (framing errors) — the server never
+//! panics on hostile input.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::protocol::{
+    parse_header, ErrorCode, EvictPolicy, Request, Response, StatsSummary, FRAME_HEADER_LEN,
+};
+use super::snapshot;
+use crate::hll::{HllSketch, SketchError};
+use crate::registry::SketchRegistry;
+
+/// Ingest frames between server-driven
+/// [`SketchRegistry::enforce_budget`] sweeps on a registry configured
+/// with [`crate::registry::RegistryConfig::max_memory_bytes`]. The
+/// sweep's accounting walk is O(keys), so it is amortized rather than
+/// run per batch; the budget is a soft target either way.
+const BUDGET_ENFORCE_EVERY: u64 = 256;
+
+/// Static serving parameters.
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfig {
+    /// Where the `SNAPSHOT` RPC persists the registry. `None` makes the
+    /// RPC answer [`ErrorCode::Unsupported`].
+    pub snapshot_path: Option<PathBuf>,
+}
+
+/// Point-in-time server counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerStatsSnapshot {
+    /// Connections accepted since start.
+    pub connections: u64,
+    /// Frames served (requests fully read, valid or not).
+    pub frames: u64,
+    /// Words ingested through `INSERT_BATCH`.
+    pub words_ingested: u64,
+    /// Requests answered with an `ERROR` frame.
+    pub error_frames: u64,
+}
+
+#[derive(Debug, Default)]
+struct ServerStats {
+    connections: AtomicU64,
+    frames: AtomicU64,
+    words_ingested: AtomicU64,
+    error_frames: AtomicU64,
+}
+
+#[derive(Debug)]
+struct Shared {
+    registry: Arc<SketchRegistry<u64>>,
+    cfg: ServerConfig,
+    stop: AtomicBool,
+    stats: ServerStats,
+}
+
+/// A running sketch server. Dropping it performs a full graceful
+/// shutdown (stop accepting, drain and join every connection thread).
+pub struct SketchServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl SketchServer {
+    /// Bind `addr` (use port 0 for an OS-assigned port) and start
+    /// serving `registry`.
+    pub fn start(
+        addr: impl ToSocketAddrs,
+        registry: Arc<SketchRegistry<u64>>,
+        cfg: ServerConfig,
+    ) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            registry,
+            cfg,
+            stop: AtomicBool::new(false),
+            stats: ServerStats::default(),
+        });
+        let accept_shared = shared.clone();
+        let accept_join = std::thread::Builder::new()
+            .name("sketch-server-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))?;
+        crate::log_debug!("server", "listening on {addr}");
+        Ok(Self { addr, shared, accept_join: Some(accept_join) })
+    }
+
+    /// The bound address (with the real port when started on port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry this server fronts.
+    pub fn registry(&self) -> &Arc<SketchRegistry<u64>> {
+        &self.shared.registry
+    }
+
+    /// Aggregate serving counters.
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        let s = &self.shared.stats;
+        ServerStatsSnapshot {
+            connections: s.connections.load(Ordering::Relaxed),
+            frames: s.frames.load(Ordering::Relaxed),
+            words_ingested: s.words_ingested.load(Ordering::Relaxed),
+            error_frames: s.error_frames.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, join every connection thread.
+    /// In-flight requests finish; idle connections close within the poll
+    /// interval. Also runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // The accept loop polls nonblocking, so it observes the flag
+        // within one poll interval on every platform and bind address
+        // (no wake-up connection needed — one would not be routable for
+        // wildcard binds everywhere).
+        if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for SketchServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    // Nonblocking accept + short sleep: the loop observes the stop flag
+    // within one poll interval, with no reliance on a wake-up connection
+    // being able to reach the listener's bind address.
+    let _ = listener.set_nonblocking(true);
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Accepted sockets can inherit the listener's
+                // nonblocking mode on some platforms; connections use
+                // blocking reads with a timeout.
+                let _ = stream.set_nonblocking(false);
+                let id = shared.stats.connections.fetch_add(1, Ordering::Relaxed) + 1;
+                let conn_shared = shared.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("sketch-server-conn-{id}"))
+                    .spawn(move || serve_connection(stream, conn_shared));
+                if let Ok(join) = spawned {
+                    conns.push(join);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+        // Reap finished connections on every pass — including idle
+        // polls, so a server that went quiet after a burst of
+        // connections does not retain their join handles indefinitely.
+        conns.retain(|j| !j.is_finished());
+    }
+    for join in conns {
+        let _ = join.join();
+    }
+}
+
+/// Fill `buf` from the stream, polling the stop flag across read
+/// timeouts. `Ok(true)` = filled; `Ok(false)` = clean end (EOF before
+/// the first byte, or server stopping); `Err` = broken stream or EOF
+/// mid-frame.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-frame"));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Mirror of [`read_full`] for the reply side: drain `buf` into the
+/// stream, polling the stop flag across write timeouts. Without this, a
+/// peer that pipelines requests but never reads replies would fill the
+/// socket buffers and park the connection thread in an unbounded
+/// `write_all` — wedging [`SketchServer::shutdown`] forever.
+fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Result<bool> {
+    let mut written = 0;
+    while written < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match stream.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "peer stopped accepting bytes",
+                ))
+            }
+            Ok(n) => written += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
+    // Short poll intervals on both directions: the price of noticing
+    // shutdown promptly on an idle connection (reads) and on a peer
+    // that stops draining replies (writes).
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_nodelay(true);
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let mut conn_frames = 0u64;
+    let mut conn_words = 0u64;
+
+    loop {
+        let mut header = [0u8; FRAME_HEADER_LEN];
+        match read_full(&mut stream, &mut header, &shared.stop) {
+            Ok(true) => {}
+            _ => break,
+        }
+        let (opcode, len) = match parse_header(&header) {
+            Ok(v) => v,
+            Err(e) => {
+                // Framing is broken; resync is impossible. Answer once,
+                // then drop the connection.
+                shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+                let err = Response::Error {
+                    code: ErrorCode::Malformed,
+                    message: e.to_string(),
+                };
+                let _ = write_full(&mut stream, &err.encode(), &shared.stop);
+                break;
+            }
+        };
+        let mut payload = vec![0u8; len as usize];
+        match read_full(&mut stream, &mut payload, &shared.stop) {
+            Ok(true) => {}
+            _ => break,
+        }
+        conn_frames += 1;
+        shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+
+        let resp = match Request::decode(opcode, &payload) {
+            Ok(req) => {
+                if let Request::InsertBatch { words, .. } = &req {
+                    conn_words += words.len() as u64;
+                }
+                dispatch(req, &shared)
+            }
+            Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
+        };
+        if matches!(resp, Response::Error { .. }) {
+            shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+        }
+        match write_full(&mut stream, &resp.encode(), &shared.stop) {
+            Ok(true) => {}
+            _ => break,
+        }
+    }
+    crate::log_debug!("server", "connection {peer} closed: {conn_frames} frames, {conn_words} words");
+}
+
+fn dispatch(req: Request, shared: &Shared) -> Response {
+    let registry = &shared.registry;
+    match req {
+        Request::Ping => Response::Pong,
+        Request::InsertBatch { key, words } => {
+            let n = words.len() as u64;
+            registry.ingest(key, &words);
+            shared.stats.words_ingested.fetch_add(n, Ordering::Relaxed);
+            // A registry configured with a memory budget holds it without
+            // every client having to know the cap: enforcement is
+            // periodic because the accounting walk is O(keys).
+            if registry.config().max_memory_bytes.is_some()
+                && shared.stats.frames.load(Ordering::Relaxed) % BUDGET_ENFORCE_EVERY == 0
+            {
+                registry.enforce_budget();
+            }
+            Response::Ingested { words: n }
+        }
+        Request::Estimate { key } => Response::Estimate(registry.estimate(&key)),
+        Request::GlobalEstimate => Response::GlobalEstimate(registry.global_estimate()),
+        Request::MergeSketch { key, bytes } => match HllSketch::from_bytes(&bytes) {
+            Ok(sketch) => match registry.merge_sketch(key, sketch) {
+                Ok(()) => Response::Merged,
+                Err(e @ SketchError::ConfigMismatch(..)) => Response::Error {
+                    code: ErrorCode::ConfigMismatch,
+                    message: e.to_string(),
+                },
+                Err(e) => {
+                    Response::Error { code: ErrorCode::Malformed, message: e.to_string() }
+                }
+            },
+            Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
+        },
+        Request::Stats => Response::Stats(StatsSummary::from(&registry.stats())),
+        Request::Evict(policy) => {
+            let keys = match policy {
+                EvictPolicy::Key(key) => registry.evict(&key).is_some() as u64,
+                EvictPolicy::Idle { max_age } => registry.evict_idle(max_age) as u64,
+                EvictPolicy::Budget { max_memory_bytes } => {
+                    // Saturate rather than truncate: `as usize` would wrap
+                    // a >= 4 GiB budget to ~0 on a 32-bit server and
+                    // mass-evict the registry.
+                    let budget = usize::try_from(max_memory_bytes).unwrap_or(usize::MAX);
+                    registry.evict_to_budget(budget) as u64
+                }
+            };
+            Response::Evicted { keys }
+        }
+        Request::Snapshot => match &shared.cfg.snapshot_path {
+            Some(path) => match snapshot::write_snapshot(registry, path) {
+                Ok(s) => Response::SnapshotDone { keys: s.keys, bytes: s.bytes },
+                Err(e) => {
+                    Response::Error { code: ErrorCode::Internal, message: e.to_string() }
+                }
+            },
+            None => Response::Error {
+                code: ErrorCode::Unsupported,
+                message: "server started without a snapshot path".into(),
+            },
+        },
+    }
+}

@@ -1,0 +1,521 @@
+//! Full-registry snapshot/restore: every `(key, sketch)` pair streamed to
+//! or from an on-disk file, so a restarted server resumes with identical
+//! estimates and sketches can be shipped across nodes.
+//!
+//! # File format
+//!
+//! All integers little-endian:
+//!
+//! | offset | size | field                                        |
+//! |--------|------|----------------------------------------------|
+//! | 0      | 8    | magic `b"HLLSNAP1"` ([`SNAPSHOT_MAGIC`])     |
+//! | 8      | 1    | snapshot version ([`SNAPSHOT_VERSION`], 1)   |
+//! | 9      | 8    | key count, u64                               |
+//! | 17     | 8    | FNV-1a 64 checksum of the body               |
+//! | 25     | ...  | body: key count × record                     |
+//!
+//! Each record is `key u64 · len u32 · len bytes` where the bytes are one
+//! sketch in the seed-carrying wire format v2 (see
+//! [`crate::hll::sketch`]). The checksum covers the whole body, so any
+//! flipped byte — in a key, a length, or a register — fails restore with
+//! [`SnapshotError::ChecksumMismatch`] before a single sketch is decoded.
+//!
+//! Writes go to a uniquely named `<path>.<pid>.<seq>.tmp` sibling and
+//! are atomically renamed into place, so a crash mid-snapshot leaves
+//! the previous snapshot intact, and concurrent snapshots to one path
+//! never interleave — each writes its own temp file and the last
+//! complete rename wins.
+//!
+//! # What a restore guarantees
+//!
+//! Every *live* key restores with a bit-identical register file, so all
+//! per-key estimates survive a restart exactly. The optional global
+//! union sketch is not persisted as its own record: after restore it is
+//! rebuilt as the union of the live keys, so if keys were evicted
+//! before the snapshot, a restored `GlobalEstimate` no longer counts
+//! the evicted keys' words (the live server's union would have).
+//! Persisting the union itself needs a format rev — tracked in
+//! ROADMAP.md.
+
+use std::fs;
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::hll::{HllSketch, SketchError};
+use crate::registry::SketchRegistry;
+
+/// Leading magic of every snapshot file.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"HLLSNAP1";
+/// Version byte following the magic.
+pub const SNAPSHOT_VERSION: u8 = 1;
+/// Fixed header length: magic(8) + version(1) + count(8) + checksum(8).
+pub const SNAPSHOT_HEADER_LEN: usize = 25;
+
+/// Errors writing or reading a snapshot file.
+#[derive(Debug)]
+pub enum SnapshotError {
+    Io(io::Error),
+    BadMagic([u8; 8]),
+    BadVersion(u8),
+    /// Structural damage: truncation, trailing bytes, impossible lengths.
+    Corrupt(String),
+    ChecksumMismatch { expected: u64, actual: u64 },
+    Sketch(SketchError),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot io error: {e}"),
+            SnapshotError::BadMagic(m) => write!(f, "not a snapshot file (magic {m:02x?})"),
+            SnapshotError::BadVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (expected {SNAPSHOT_VERSION})")
+            }
+            SnapshotError::Corrupt(what) => write!(f, "snapshot corrupt: {what}"),
+            SnapshotError::ChecksumMismatch { expected, actual } => write!(
+                f,
+                "snapshot body checksum mismatch (header {expected:#018x}, computed {actual:#018x})"
+            ),
+            SnapshotError::Sketch(e) => write!(f, "snapshot sketch record invalid: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<io::Error> for SnapshotError {
+    fn from(e: io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
+}
+
+impl From<SketchError> for SnapshotError {
+    fn from(e: SketchError) -> Self {
+        SnapshotError::Sketch(e)
+    }
+}
+
+/// What a completed snapshot wrote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotSummary {
+    /// Keys persisted.
+    pub keys: u64,
+    /// Total file size in bytes.
+    pub bytes: u64,
+}
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold more bytes into a running FNV-1a 64 state — the checksum is a
+/// byte-wise fold, so the writer can stream records to disk while
+/// checksumming without ever holding the whole body in memory.
+fn fnv1a64_update(mut h: u64, data: &[u8]) -> u64 {
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit — the snapshot body checksum (dependency-free, and
+/// plenty for detecting corruption; this is an integrity check, not an
+/// authenticity one).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET, data)
+}
+
+/// Monotone suffix so concurrent snapshots (two `SNAPSHOT` RPCs, or two
+/// servers sharing a directory) never share a temp file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    PathBuf::from(os)
+}
+
+/// Serialize every live key of `registry` to `path` (atomic
+/// replace-on-rename). Concurrent ingest during the walk is safe; keys
+/// touched mid-snapshot land in this snapshot or the next. Concurrent
+/// snapshots to the same path are safe too: each writes a unique temp
+/// file and the last complete rename wins.
+pub fn write_snapshot(
+    registry: &SketchRegistry<u64>,
+    path: &Path,
+) -> Result<SnapshotSummary, SnapshotError> {
+    // Stream records straight to the temp file with a running checksum,
+    // one shard's serialization in memory at a time
+    // ([`SketchRegistry::for_each_sketch_bytes`]); key count and
+    // checksum are patched into the header once the walk is done. The
+    // whole dense image never exists in memory.
+    let tmp = tmp_sibling(path);
+    let write = (|| {
+        let mut w = io::BufWriter::new(fs::File::create(&tmp)?);
+        let mut header = [0u8; SNAPSHOT_HEADER_LEN];
+        header[0..8].copy_from_slice(&SNAPSHOT_MAGIC);
+        header[8] = SNAPSHOT_VERSION;
+        // Bytes 9..17 (count) and 17..25 (checksum) stay zero until
+        // patched below.
+        w.write_all(&header)?;
+        let mut keys = 0u64;
+        let mut hash = FNV_OFFSET;
+        let mut total = SNAPSHOT_HEADER_LEN as u64;
+        let mut io_err: Option<io::Error> = None;
+        registry.for_each_sketch_bytes(|key, bytes| {
+            if io_err.is_some() {
+                return;
+            }
+            let rec_key = key.to_le_bytes();
+            let rec_len = (bytes.len() as u32).to_le_bytes();
+            hash = fnv1a64_update(hash, &rec_key);
+            hash = fnv1a64_update(hash, &rec_len);
+            hash = fnv1a64_update(hash, &bytes);
+            let res = w
+                .write_all(&rec_key)
+                .and_then(|()| w.write_all(&rec_len))
+                .and_then(|()| w.write_all(&bytes));
+            match res {
+                Ok(()) => {
+                    keys += 1;
+                    total += 12 + bytes.len() as u64;
+                }
+                Err(e) => io_err = Some(e),
+            }
+        });
+        if let Some(e) = io_err {
+            return Err(e);
+        }
+        w.seek(SeekFrom::Start(9))?;
+        w.write_all(&keys.to_le_bytes())?;
+        w.write_all(&hash.to_le_bytes())?;
+        let f = w.into_inner().map_err(|e| e.into_error())?;
+        f.sync_all()?;
+        fs::rename(&tmp, path)?;
+        Ok::<(u64, u64), io::Error>((keys, total))
+    })();
+    match write {
+        Ok((keys, bytes)) => Ok(SnapshotSummary { keys, bytes }),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e.into())
+        }
+    }
+}
+
+/// Validate a snapshot header's magic and version, returning
+/// `(key count, body checksum)`.
+fn parse_snapshot_header(header: &[u8; SNAPSHOT_HEADER_LEN]) -> Result<(u64, u64), SnapshotError> {
+    if header[0..8] != SNAPSHOT_MAGIC {
+        let mut magic = [0u8; 8];
+        magic.copy_from_slice(&header[0..8]);
+        return Err(SnapshotError::BadMagic(magic));
+    }
+    if header[8] != SNAPSHOT_VERSION {
+        return Err(SnapshotError::BadVersion(header[8]));
+    }
+    let count = u64::from_le_bytes(header[9..17].try_into().unwrap());
+    let checksum = u64::from_le_bytes(header[17..25].try_into().unwrap());
+    Ok((count, checksum))
+}
+
+/// Read and fully validate a snapshot file, returning decoded
+/// `(key, sketch)` pairs. Magic, version, count, checksum and every
+/// sketch record are checked; any damage is a typed error, never a panic.
+///
+/// Holds the whole file plus every decoded sketch in memory —
+/// convenient for tests and small registries; [`restore_registry`]
+/// streams record-by-record instead and is what the server's restart
+/// path should use at scale.
+pub fn read_snapshot(path: &Path) -> Result<Vec<(u64, HllSketch)>, SnapshotError> {
+    let data = fs::read(path)?;
+    if data.len() < SNAPSHOT_HEADER_LEN {
+        return Err(SnapshotError::Corrupt(format!(
+            "file is {} bytes, header needs {SNAPSHOT_HEADER_LEN}",
+            data.len()
+        )));
+    }
+    let (count, expected) =
+        parse_snapshot_header(data[..SNAPSHOT_HEADER_LEN].try_into().unwrap())?;
+    let body = &data[SNAPSHOT_HEADER_LEN..];
+    let actual = fnv1a64(body);
+    if actual != expected {
+        return Err(SnapshotError::ChecksumMismatch { expected, actual });
+    }
+
+    let mut out = Vec::with_capacity(count.min(1 << 20) as usize);
+    let mut pos = 0usize;
+    for i in 0..count {
+        if body.len() - pos < 12 {
+            return Err(SnapshotError::Corrupt(format!(
+                "record {i} header truncated at body offset {pos}"
+            )));
+        }
+        let key = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+        let len = u32::from_le_bytes(body[pos + 8..pos + 12].try_into().unwrap()) as usize;
+        pos += 12;
+        if body.len() - pos < len {
+            return Err(SnapshotError::Corrupt(format!(
+                "record {i} declares {len} sketch bytes, {} remain",
+                body.len() - pos
+            )));
+        }
+        let sketch = HllSketch::from_bytes(&body[pos..pos + len])?;
+        pos += len;
+        out.push((key, sketch));
+    }
+    if pos != body.len() {
+        return Err(SnapshotError::Corrupt(format!(
+            "{} trailing body bytes after {count} records",
+            body.len() - pos
+        )));
+    }
+    Ok(out)
+}
+
+/// Restore a snapshot file into `registry` (max-merge over whatever is
+/// live — see [`SketchRegistry::merge_sketch`]). Returns the number of
+/// keys applied.
+///
+/// Streaming and two-pass: the first pass verifies the body checksum in
+/// fixed-size chunks (no corrupt file applies a single record), the
+/// second decodes and merges one record at a time — peak memory is one
+/// sketch, mirroring the streaming writer, instead of the whole file
+/// plus every decoded sketch. A config/seed mismatch aborts at the
+/// offending record with earlier records already applied (merges are
+/// idempotent max-folds, so re-running restore after fixing the target
+/// registry is safe).
+pub fn restore_registry(
+    registry: &SketchRegistry<u64>,
+    path: &Path,
+) -> Result<usize, SnapshotError> {
+    use std::io::Read;
+
+    let short_file = |what: &str| SnapshotError::Corrupt(what.to_string());
+
+    // Pass 1: header + streamed checksum over the body.
+    let mut f = fs::File::open(path)?;
+    let mut header = [0u8; SNAPSHOT_HEADER_LEN];
+    f.read_exact(&mut header).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            short_file("file shorter than the snapshot header")
+        } else {
+            SnapshotError::Io(e)
+        }
+    })?;
+    let (count, expected) = parse_snapshot_header(&header)?;
+    let mut hash = FNV_OFFSET;
+    let mut body_len = 0u64;
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        hash = fnv1a64_update(hash, &chunk[..n]);
+        body_len += n as u64;
+    }
+    if hash != expected {
+        return Err(SnapshotError::ChecksumMismatch { expected, actual: hash });
+    }
+
+    // Pass 2: decode + merge record by record.
+    let mut r = io::BufReader::new(fs::File::open(path)?);
+    r.read_exact(&mut header)
+        .map_err(|_| short_file("file shrank between checksum and restore passes"))?;
+    let mut consumed = 0u64;
+    let mut applied = 0usize;
+    for i in 0..count {
+        let mut rec = [0u8; 12];
+        r.read_exact(&mut rec)
+            .map_err(|_| SnapshotError::Corrupt(format!("record {i} header truncated")))?;
+        let key = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+        let len = u32::from_le_bytes(rec[8..12].try_into().unwrap()) as usize;
+        consumed += 12 + len as u64;
+        if consumed > body_len {
+            return Err(SnapshotError::Corrupt(format!(
+                "record {i} declares {len} sketch bytes, overrunning the body"
+            )));
+        }
+        let mut sketch_bytes = vec![0u8; len];
+        r.read_exact(&mut sketch_bytes)
+            .map_err(|_| SnapshotError::Corrupt(format!("record {i} truncated")))?;
+        let sketch = HllSketch::from_bytes(&sketch_bytes)?;
+        registry.merge_sketch(key, sketch)?;
+        applied += 1;
+    }
+    if consumed != body_len {
+        return Err(SnapshotError::Corrupt(format!(
+            "{} trailing body bytes after {count} records",
+            body_len - consumed
+        )));
+    }
+    Ok(applied)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::RegistryConfig;
+    use crate::util::Xoshiro256StarStar;
+    use std::path::PathBuf;
+
+    fn temp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hll_snapshot_{}_{name}.snap", std::process::id()));
+        p
+    }
+
+    fn populated_registry() -> SketchRegistry<u64> {
+        let reg = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(21);
+        for key in 0u64..30 {
+            let n = 5 + (key as usize * 97) % 2_500;
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        reg
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_identical_estimates() {
+        let reg = populated_registry();
+        let path = temp_path("roundtrip");
+        let summary = write_snapshot(&reg, &path).unwrap();
+        assert_eq!(summary.keys, 30);
+        assert_eq!(summary.bytes, fs::metadata(&path).unwrap().len());
+
+        let restored = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert_eq!(restore_registry(&restored, &path).unwrap(), 30);
+        assert_eq!(restored.len(), reg.len());
+        for (key, est) in reg.estimates() {
+            assert_eq!(restored.estimate(&key), Some(est), "key {key}");
+        }
+        assert_eq!(restored.merge_all(), reg.merge_all());
+        assert_eq!(restored.global_estimate(), reg.global_estimate());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_registry_snapshots_and_restores() {
+        let reg: SketchRegistry<u64> =
+            SketchRegistry::new(RegistryConfig::default()).unwrap();
+        let path = temp_path("empty");
+        let summary = write_snapshot(&reg, &path).unwrap();
+        assert_eq!(summary.keys, 0);
+        assert_eq!(summary.bytes as usize, SNAPSHOT_HEADER_LEN);
+        let entries = read_snapshot(&path).unwrap();
+        assert!(entries.is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flipped_body_byte_fails_checksum() {
+        let reg = populated_registry();
+        let path = temp_path("flip");
+        write_snapshot(&reg, &path).unwrap();
+        let mut data = fs::read(&path).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0x01;
+        fs::write(&path, &data).unwrap();
+        assert!(matches!(
+            read_snapshot(&path),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncation_magic_and_version_are_typed_errors() {
+        let reg = populated_registry();
+        let path = temp_path("damage");
+        write_snapshot(&reg, &path).unwrap();
+        let original = fs::read(&path).unwrap();
+
+        // Truncated header.
+        fs::write(&path, &original[..10]).unwrap();
+        assert!(matches!(read_snapshot(&path), Err(SnapshotError::Corrupt(_))));
+
+        // Truncated body (checksum fails first — that's the point: any
+        // truncation is caught before record parsing).
+        fs::write(&path, &original[..original.len() - 40]).unwrap();
+        assert!(matches!(
+            read_snapshot(&path),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+
+        // Bad magic.
+        let mut bad = original.clone();
+        bad[0] = b'X';
+        fs::write(&path, &bad).unwrap();
+        assert!(matches!(read_snapshot(&path), Err(SnapshotError::BadMagic(_))));
+
+        // Bad version.
+        let mut bad = original.clone();
+        bad[8] = 9;
+        fs::write(&path, &bad).unwrap();
+        assert!(matches!(read_snapshot(&path), Err(SnapshotError::BadVersion(9))));
+
+        // Missing file.
+        let _ = fs::remove_file(&path);
+        assert!(matches!(read_snapshot(&path), Err(SnapshotError::Io(_))));
+    }
+
+    #[test]
+    fn seed_mismatch_restore_is_rejected() {
+        use crate::hll::HllConfig;
+        // Snapshot from a seed-7 registry cannot restore into a seed-0 one.
+        let seeded: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            hll: HllConfig::PAPER.with_seed(7),
+            shards: 4,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        seeded.ingest(1, &[1, 2, 3]);
+        let path = temp_path("seed");
+        write_snapshot(&seeded, &path).unwrap();
+
+        let plain: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            shards: 4,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert!(matches!(
+            restore_registry(&plain, &path),
+            Err(SnapshotError::Sketch(SketchError::ConfigMismatch(..)))
+        ));
+        assert!(plain.is_empty());
+
+        // But it restores fine into a matching seeded registry.
+        let seeded2: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            hll: HllConfig::PAPER.with_seed(7),
+            shards: 4,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert_eq!(restore_registry(&seeded2, &path).unwrap(), 1);
+        assert_eq!(seeded2.estimate(&1), seeded.estimate(&1));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

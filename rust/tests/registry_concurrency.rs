@@ -53,6 +53,7 @@ fn registry_upgrade_preserves_estimates() {
             hll: cfg,
             shards: 8,
             track_global: false,
+            ..RegistryConfig::default()
         })
         .unwrap();
         // Enough distinct words to push the key through the upgrade.

@@ -1,0 +1,377 @@
+//! End-to-end tests for the network serving subsystem, over real
+//! loopback TCP sockets: remote ingest bit-exactness against in-process
+//! ingest, concurrent clients, snapshot → restart → restore, and the
+//! corruption paths (bad frames, seed mismatches, damaged snapshot
+//! files) — all of which must fail with typed errors, never a panic.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hll_fpga::hll::{HllConfig, HllSketch};
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::server::{
+    protocol, read_snapshot, restore_registry, ClientError, ErrorCode, EvictPolicy,
+    Response, ServerConfig, SketchClient, SketchServer, SnapshotError,
+};
+
+fn start_server(cfg: ServerConfig) -> (SketchServer, Arc<SketchRegistry<u64>>) {
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 16,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    let server = SketchServer::start("127.0.0.1:0", registry.clone(), cfg).unwrap();
+    (server, registry)
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("hll_server_e2e_{}_{name}.snap", std::process::id()));
+    p
+}
+
+/// Keyed batches: every key's words from a zipf-keyed stream, grouped.
+fn keyed_batches(keys: u64, words: usize, seed: u64) -> Vec<(u64, Vec<u32>)> {
+    KeyedFlowGen::new(keys, 1.07, seed).batched(words, usize::MAX)
+}
+
+#[test]
+fn remote_ingest_is_bit_exact_with_in_process() {
+    let (server, _registry) = start_server(ServerConfig::default());
+    let batches = keyed_batches(200, 30_000, 0xFEED);
+
+    // In-process reference: same batches, same order.
+    let reference = SketchRegistry::shared(RegistryConfig {
+        shards: 16,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    for (key, words) in &batches {
+        reference.ingest(*key, words);
+    }
+
+    // Remote ingest over loopback TCP.
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+    client.ping().unwrap();
+    let mut sent = 0u64;
+    for (key, words) in &batches {
+        sent += client.insert_batch(*key, words).unwrap();
+    }
+    assert_eq!(sent, 30_000);
+
+    // Every per-key estimate matches the in-process registry exactly
+    // (both run the same register files — not approximately, bit-exact).
+    for (key, want) in reference.estimates() {
+        assert_eq!(client.estimate(key).unwrap(), Some(want), "key {key}");
+    }
+    assert_eq!(client.estimate(u64::MAX).unwrap(), None);
+    assert_eq!(
+        client.global_estimate().unwrap(),
+        reference.global_estimate(),
+        "global unions must match"
+    );
+
+    // And the server's registry register files equal the reference's.
+    assert_eq!(server.registry().merge_all(), reference.merge_all());
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.keys as usize, reference.len());
+    assert_eq!(stats.words, 30_000);
+
+    let srv = server.stats();
+    assert_eq!(srv.words_ingested, 30_000);
+    assert!(srv.frames >= batches.len() as u64);
+    assert_eq!(srv.error_frames, 0);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_and_concurrent_clients_match_serial() {
+    let (server, registry) = start_server(ServerConfig::default());
+    let batches = keyed_batches(500, 40_000, 0xC0DE);
+
+    // Four clients, each pipelining a quarter of the batches.
+    let addr = server.local_addr();
+    let chunk = batches.len().div_ceil(4);
+    std::thread::scope(|scope| {
+        for slice in batches.chunks(chunk) {
+            scope.spawn(move || {
+                let mut client = SketchClient::connect(addr).unwrap();
+                let n: usize = slice.iter().map(|(_, w)| w.len()).sum();
+                assert_eq!(client.pipeline_insert(slice).unwrap(), n as u64);
+            });
+        }
+    });
+
+    // The union over all keys is order-independent: bit-identical to a
+    // serial sketch over every word.
+    let mut serial = HllSketch::new(HllConfig::PAPER);
+    for (_, words) in &batches {
+        serial.insert_batch(words);
+    }
+    assert_eq!(registry.merge_all(), serial);
+    assert_eq!(registry.stats().words(), 40_000);
+    assert!(server.stats().connections >= 4);
+    server.shutdown();
+}
+
+#[test]
+fn snapshot_restart_restore_serves_identical_estimates() {
+    let path = temp_path("restart");
+    let cfg = ServerConfig { snapshot_path: Some(path.clone()) };
+    let (server, registry) = start_server(cfg);
+    let batches = keyed_batches(150, 25_000, 0xA11CE);
+
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+    client.pipeline_insert(&batches).unwrap();
+
+    // Capture what the live server answers, then snapshot via RPC.
+    let mut before: Vec<(u64, Option<f64>)> = Vec::new();
+    for (key, _) in &batches {
+        before.push((*key, client.estimate(*key).unwrap()));
+    }
+    let global_before = client.global_estimate().unwrap();
+    let (snap_keys, snap_bytes) = client.snapshot().unwrap();
+    assert_eq!(snap_keys as usize, registry.len());
+    assert_eq!(snap_bytes, std::fs::metadata(&path).unwrap().len());
+
+    // "Restart": tear the server down, restore the snapshot into a
+    // fresh registry, serve it from a new server.
+    drop(client);
+    server.shutdown();
+    let restored = SketchRegistry::shared(RegistryConfig {
+        shards: 16,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    assert_eq!(restore_registry(&restored, &path).unwrap() as u64, snap_keys);
+    let server2 = SketchServer::start("127.0.0.1:0", restored, ServerConfig::default()).unwrap();
+    let mut client2 = SketchClient::connect(server2.local_addr()).unwrap();
+
+    for (key, want) in before {
+        assert_eq!(client2.estimate(key).unwrap(), want, "key {key} after restore");
+    }
+    assert_eq!(client2.global_estimate().unwrap(), global_before);
+    server2.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn merge_sketch_rpc_and_seed_mismatch_over_network() {
+    let (server, _registry) = start_server(ServerConfig::default());
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    // A locally built sketch merges into a fresh key and answers the
+    // same estimate remotely.
+    let mut local = HllSketch::paper();
+    for v in 0..5_000u32 {
+        local.insert_u32(v.wrapping_mul(2_654_435_761));
+    }
+    client.merge_sketch(77, &local).unwrap();
+    assert_eq!(client.estimate(77).unwrap(), Some(local.estimate()));
+
+    // Merging on top is idempotent (bucket-wise max).
+    client.merge_sketch(77, &local).unwrap();
+    assert_eq!(client.estimate(77).unwrap(), Some(local.estimate()));
+
+    // A seed-7 sketch rides the v2 wire format with its seed and is
+    // rejected with a typed ConfigMismatch — the cross-network version
+    // of the silent seed-0 merge bug the v2 format fixed.
+    let seeded = HllSketch::new(HllConfig::PAPER.with_seed(7));
+    match client.merge_sketch(78, &seeded) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::ConfigMismatch),
+        other => panic!("expected remote ConfigMismatch, got {other:?}"),
+    }
+    assert_eq!(client.estimate(78).unwrap(), None, "failed merge must not create the key");
+
+    // Truncated sketch bytes are a typed Malformed error.
+    match client.merge_sketch_bytes(79, &[1, 2, 3]) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("expected remote Malformed, got {other:?}"),
+    }
+
+    // The connection survives all three error frames.
+    client.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn evict_policies_over_rpc() {
+    let (server, registry) = start_server(ServerConfig::default());
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    for key in 0u64..20 {
+        let words: Vec<u32> = (0..500u32).map(|w| w.wrapping_mul(key as u32 + 7)).collect();
+        client.insert_batch(key, &words).unwrap();
+    }
+    assert_eq!(registry.len(), 20);
+
+    // Key eviction.
+    assert_eq!(client.evict(EvictPolicy::Key(3)).unwrap(), 1);
+    assert_eq!(client.evict(EvictPolicy::Key(3)).unwrap(), 0);
+    assert_eq!(client.estimate(3).unwrap(), None);
+
+    // Touch one key, then sweep everything older than the current tick:
+    // keys 0..20 were touched at ticks 1..=20, key 7 again at tick 21,
+    // so a max_age of 0 (cutoff = now) keeps only key 7.
+    client.insert_batch(7, &[1]).unwrap();
+    assert_eq!(client.evict(EvictPolicy::Idle { max_age: 0 }).unwrap(), 18);
+    assert_eq!(registry.len(), 1);
+    assert!(client.estimate(7).unwrap().is_some());
+
+    // Budget eviction down to zero bytes clears the rest.
+    assert_eq!(client.evict(EvictPolicy::Budget { max_memory_bytes: 0 }).unwrap(), 1);
+    assert_eq!(client.stats().unwrap().keys, 0);
+    server.shutdown();
+}
+
+#[test]
+fn configured_budget_is_enforced_during_ingest() {
+    // A registry built with max_memory_bytes holds its cap through the
+    // server's periodic enforcement — no client ever sends the budget.
+    let budget = 16 * 1024;
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 8,
+        max_memory_bytes: Some(budget),
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    let server =
+        SketchServer::start("127.0.0.1:0", registry.clone(), ServerConfig::default()).unwrap();
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    // 600 distinct keys x ~1000 distinct words each is far past 16 KiB
+    // of sparse sketch heap, and far past the 256-frame enforcement
+    // period — at least one server-side sweep must have fired.
+    for key in 0u64..600 {
+        let words: Vec<u32> =
+            (0..1_000u32).map(|w| w.wrapping_add(key as u32 * 100_000)).collect();
+        client.insert_batch(key, &words).unwrap();
+    }
+    assert!(
+        registry.len() < 600,
+        "server never enforced the configured budget ({} keys live)",
+        registry.len()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn snapshot_rpc_unsupported_without_path() {
+    let (server, _registry) = start_server(ServerConfig::default());
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+    client.insert_batch(1, &[1, 2, 3]).unwrap();
+    match client.snapshot() {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::Unsupported),
+        other => panic!("expected Unsupported, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn hostile_bytes_get_typed_errors_and_server_survives() {
+    use std::io::Write;
+
+    let (server, _registry) = start_server(ServerConfig::default());
+    let addr = server.local_addr();
+
+    // Bad magic: the server answers one typed error frame, then closes.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"XX\x01\x01\x00\x00\x00\x00").unwrap();
+        let resp = protocol::read_response(&mut raw).unwrap();
+        match resp {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Malformed),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    // Bad protocol version.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"HL\x63\x01\x00\x00\x00\x00").unwrap();
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Malformed),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    // A truncated frame followed by a hangup must not wedge or kill the
+    // server: write half a header and disconnect.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"HL\x01").unwrap();
+    }
+
+    // Unknown opcode inside a well-formed frame: typed error, and the
+    // connection stays usable (framing is still in sync).
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"HL\x01\x7F\x00\x00\x00\x00").unwrap();
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Malformed),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+        // Same socket, valid request afterwards.
+        raw.write_all(&hll_fpga::server::Request::Ping.encode()).unwrap();
+        assert_eq!(protocol::read_response(&mut raw).unwrap(), Response::Pong);
+    }
+
+    // After all that abuse a fresh client still works.
+    let mut client = SketchClient::connect(addr).unwrap();
+    client.insert_batch(5, &[10, 20, 30]).unwrap();
+    assert!(client.estimate(5).unwrap().is_some());
+    assert!(server.stats().error_frames >= 3);
+    server.shutdown();
+}
+
+#[test]
+fn damaged_snapshot_files_are_typed_errors() {
+    let path = temp_path("damaged");
+    let cfg = ServerConfig { snapshot_path: Some(path.clone()) };
+    let (server, _registry) = start_server(cfg);
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+    client.insert_batch(1, &(0..1000u32).collect::<Vec<_>>()).unwrap();
+    client.snapshot().unwrap();
+    server.shutdown();
+
+    let original = std::fs::read(&path).unwrap();
+
+    // Flipped checksum byte in the header.
+    let mut bad = original.clone();
+    bad[20] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        read_snapshot(&path),
+        Err(SnapshotError::ChecksumMismatch { .. })
+    ));
+
+    // Flipped body byte.
+    let mut bad = original.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x10;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        read_snapshot(&path),
+        Err(SnapshotError::ChecksumMismatch { .. })
+    ));
+
+    // Truncated header.
+    std::fs::write(&path, &original[..12]).unwrap();
+    assert!(matches!(read_snapshot(&path), Err(SnapshotError::Corrupt(_))));
+
+    // Bad magic.
+    let mut bad = original.clone();
+    bad[0] = b'Z';
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(read_snapshot(&path), Err(SnapshotError::BadMagic(_))));
+
+    // Restore of a damaged file leaves the registry untouched.
+    let fresh: Arc<SketchRegistry<u64>> =
+        SketchRegistry::shared(RegistryConfig::default()).unwrap();
+    assert!(restore_registry(&fresh, &path).is_err());
+    assert!(fresh.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
