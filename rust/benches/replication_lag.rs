@@ -1,0 +1,138 @@
+//! Replication bench: primary ingest throughput with a live follower
+//! streaming deltas, plus convergence lag (last primary write → the
+//! follower has applied everything) — ending in a bit-exactness assert.
+//!
+//! Run: `cargo bench --bench replication_lag` (HLL_BENCH_QUICK=1
+//! shrinks the volume).
+
+use std::time::{Duration, Instant};
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::hll::{HashKind, HllConfig};
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::replica::{FollowerConfig, FollowerServer, ReplicationConfig};
+use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+
+fn main() {
+    let b = bench_main("replication — delta shipping throughput & convergence lag");
+    let words: usize = if quick_mode() { 40_000 } else { 400_000 };
+
+    // p=12 keeps each per-key delta frame at ~4 KiB instead of the
+    // paper config's 64 KiB — the bench measures shipping mechanics,
+    // not serialization volume.
+    let cfg = RegistryConfig {
+        hll: HllConfig::new(12, HashKind::H64).unwrap(),
+        shards: 64,
+        ..RegistryConfig::default()
+    };
+    let primary_reg = SketchRegistry::shared(cfg).unwrap();
+    let primary = SketchServer::start(
+        "127.0.0.1:0",
+        primary_reg.clone(),
+        ServerConfig {
+            replication: Some(ReplicationConfig {
+                capture_interval: Duration::from_millis(5),
+                ..ReplicationConfig::default()
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let log = primary.replication_log().unwrap();
+
+    let follower_reg = SketchRegistry::shared(cfg).unwrap();
+    let follower = FollowerServer::start(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+    )
+    .unwrap();
+
+    let mut gen = KeyedFlowGen::new(1_000, 1.07, 0xFACE);
+    let batches = gen.batched(words, 4096);
+    println!("{words} words in {} batches, 1000 keys (zipf 1.07), p=12\n", batches.len());
+    let mut client = SketchClient::connect(primary.local_addr()).unwrap();
+
+    // --- Throughput: pipelined ingest while the follower streams.
+    // Repeated iterations re-dirty the same keys (registers saturate),
+    // so this measures steady-state capture + shipping cost, not
+    // first-touch growth.
+    let m = b.run_items("primary pipelined ingest, live follower", words as u64, || {
+        client.pipeline_insert(&batches).unwrap()
+    });
+    println!("{}", m.report_line());
+
+    // --- Convergence lag: one fresh burst of never-before-seen words,
+    // then the time until the follower holds everything. The natural
+    // pipeline is capture interval + batch shipping + apply + ack.
+    let burst = KeyedFlowGen::new(1_000, 1.07, 0xD1CE).batched(words / 4, 4096);
+    let t0 = Instant::now();
+    client.pipeline_insert(&burst).unwrap();
+    let ingested = t0.elapsed();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while primary_reg.dirty_keys() > 0 || follower.cursor() < log.latest_seq() {
+        assert!(Instant::now() < deadline, "replication never drained");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let converged = t0.elapsed();
+    println!(
+        "\nconvergence: burst of {} words ingested in {:?}; follower drained {:?} after \
+         the first write ({:?} after the last)",
+        words / 4,
+        ingested,
+        converged,
+        converged.saturating_sub(ingested)
+    );
+
+    // --- Acceptance: force-seal any residue (looping past in-flight
+    // background captures) and assert bit-exactness.
+    loop {
+        log.capture(&primary_reg, usize::MAX);
+        let latest = log.latest_seq();
+        while follower.cursor() < latest {
+            assert!(Instant::now() < deadline, "follower never reached the log head");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if primary_reg.dirty_keys() == 0
+            && log.captures_in_flight() == 0
+            && log.latest_seq() == latest
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replication never fully drained");
+    }
+    assert_eq!(
+        follower_reg.merge_all(),
+        primary_reg.merge_all(),
+        "follower union diverged from primary"
+    );
+    assert_eq!(follower_reg.global_estimate(), primary_reg.global_estimate());
+    println!("follower bit-identical to primary: ok");
+
+    let fstats = follower.stats();
+    println!(
+        "follower: cursor {}, {} batches / {} entries applied, {} full syncs, {} reconnects",
+        fstats.cursor,
+        fstats.batches_applied,
+        fstats.entries_applied,
+        fstats.full_syncs,
+        fstats.reconnects
+    );
+    let lstats = log.stats();
+    println!(
+        "log: {} batches / {} entries sealed, {} retained ({} bytes)",
+        lstats.sealed_batches,
+        lstats.sealed_entries,
+        lstats.retained_batches,
+        lstats.retained_bytes
+    );
+    let pstats = primary.stats();
+    println!(
+        "primary: {} delta batches and {} full syncs streamed",
+        pstats.delta_batches_sent, pstats.full_syncs_sent
+    );
+    follower.shutdown();
+    primary.shutdown();
+}

@@ -26,7 +26,7 @@ fn main() {
     let server = SketchServer::start(
         "127.0.0.1:0",
         registry.clone(),
-        ServerConfig { snapshot_path: Some(snapshot_path.clone()) },
+        ServerConfig { snapshot_path: Some(snapshot_path.clone()), ..ServerConfig::default() },
     )
     .expect("bind loopback");
     let addr = server.local_addr();

@@ -13,8 +13,11 @@
 //!   model, 100 Gbit/s TCP network simulator, optimized CPU baseline,
 //!   statistical profiling harness) and a PJRT runtime that executes the
 //!   Layer-2 artifacts with Python never on the data path. The
-//!   multi-tenant [`registry`] and its network [`server`] (binary TCP
-//!   protocol, snapshot/restore) turn the library into a serving system.
+//!   multi-tenant [`registry`], its network [`server`] (binary TCP
+//!   protocol, snapshot/restore, background sweeper) and the
+//!   conflict-free [`replica`] subsystem (primary→follower delta
+//!   streaming with cursor resume) turn the library into a serving
+//!   system.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a module and bench target.
@@ -28,6 +31,7 @@ pub mod net;
 pub mod pcie;
 pub mod proptest_lite;
 pub mod registry;
+pub mod replica;
 pub mod repro;
 pub mod runtime;
 pub mod server;
@@ -36,4 +40,5 @@ pub mod util;
 
 pub use hll::{ConcurrentHllSketch, HashKind, HllConfig, HllSketch};
 pub use registry::{RegistryConfig, SketchRegistry};
+pub use replica::{FollowerConfig, FollowerServer, ReplicationConfig};
 pub use server::{ServerConfig, SketchClient, SketchServer};

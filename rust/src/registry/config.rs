@@ -1,6 +1,51 @@
 //! Registry configuration and accounting types.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
 use crate::hll::HllConfig;
+
+/// Coarse wall-time source for [`super::SketchRegistry`]'s
+/// wall-clock TTL ([`super::SketchRegistry::evict_idle_wall`]).
+///
+/// The registry reads it once per mutating call (not per word), so the
+/// default [`WallClock::System`] costs one `SystemTime::now()` per batch.
+/// Tests inject [`WallClock::manual`] and advance the shared cell to age
+/// keys deterministically without sleeping.
+#[derive(Debug, Clone)]
+pub enum WallClock {
+    /// Seconds since `UNIX_EPOCH` via `SystemTime::now()`.
+    System,
+    /// A shared counter of seconds, advanced by the test (or embedder).
+    Manual(Arc<AtomicU64>),
+}
+
+impl WallClock {
+    /// A manual clock starting at `start_secs`, plus the cell that
+    /// advances it (store a larger value to move time forward).
+    pub fn manual(start_secs: u64) -> (WallClock, Arc<AtomicU64>) {
+        let cell = Arc::new(AtomicU64::new(start_secs));
+        (WallClock::Manual(cell.clone()), cell)
+    }
+
+    /// Current time in whole seconds.
+    pub fn now_secs(&self) -> u64 {
+        match self {
+            WallClock::System => SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            WallClock::Manual(cell) => cell.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::System
+    }
+}
 
 /// Static parameters of a [`super::SketchRegistry`].
 #[derive(Debug, Clone, Copy)]
@@ -103,6 +148,16 @@ mod tests {
         assert!(c.validate().is_err());
         c.shards = 1;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn manual_wall_clock_advances() {
+        let (wall, cell) = WallClock::manual(100);
+        assert_eq!(wall.now_secs(), 100);
+        cell.store(250, Ordering::Relaxed);
+        assert_eq!(wall.now_secs(), 250);
+        // The system clock reads as a plausible epoch time.
+        assert!(WallClock::System.now_secs() > 1_500_000_000);
     }
 
     #[test]

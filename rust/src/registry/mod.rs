@@ -28,18 +28,26 @@
 //! snapshot/restore) in front of it for remote producers and queries.
 //!
 //! Lifecycle management beyond explicit eviction: every key records the
-//! logical tick of its last touch, feeding a TTL sweep
-//! ([`SketchRegistry::evict_idle`]) and LRU size-budget enforcement
+//! logical tick of its last touch *and* a coarse wall-clock second,
+//! feeding two TTL sweeps ([`SketchRegistry::evict_idle`] in ingest
+//! ticks, [`SketchRegistry::evict_idle_wall`] in real time via an
+//! injectable [`WallClock`]) and LRU size-budget enforcement
 //! ([`SketchRegistry::enforce_budget`] against
 //! [`RegistryConfig::max_memory_bytes`]). Registry contents round-trip
 //! through [`SketchRegistry::export_sketches`] /
 //! [`SketchRegistry::restore`] in the seed-carrying sketch wire format
 //! v2, which is what the snapshot file format and the `MergeSketch` RPC
 //! are built on.
+//!
+//! Replication support: with [`SketchRegistry::enable_dirty_tracking`]
+//! on, every mutating touch records its key in a per-shard dirty set;
+//! [`SketchRegistry::drain_dirty_sketches`] swaps those sets out and
+//! exports each dirty key's current sketch — the feed of
+//! [`crate::replica::ReplicationLog`]'s delta batches.
 
 pub mod config;
 pub mod registry;
 pub mod shard;
 
-pub use config::{RegistryConfig, RegistryStats, ShardStats};
+pub use config::{RegistryConfig, RegistryStats, ShardStats, WallClock};
 pub use registry::SketchRegistry;

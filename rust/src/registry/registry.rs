@@ -1,10 +1,11 @@
 //! The shard-striped, concurrent, keyed sketch store.
 
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use super::config::{RegistryConfig, RegistryStats};
+use super::config::{RegistryConfig, RegistryStats, WallClock};
 use super::shard::Shard;
 use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllSketch, SketchError};
 
@@ -26,14 +27,39 @@ pub struct SketchRegistry<K> {
     /// the tick of their last touch, which drives [`Self::evict_idle`]
     /// (TTL) and the LRU order of [`Self::evict_to_budget`].
     clock: AtomicU64,
+    /// Coarse wall-time source, read once per mutating call; feeds the
+    /// Duration-based TTL sweep [`Self::evict_idle_wall`]. Injectable
+    /// via [`Self::with_wall_clock`], `SystemTime`-backed by default.
+    wall: WallClock,
+    /// When set (see [`Self::enable_dirty_tracking`]), every mutating
+    /// touch records its key in a per-shard dirty set, drained by
+    /// [`Self::drain_dirty_sketches`] — the feed of the replication
+    /// log ([`crate::replica`]). Off by default: a registry nobody
+    /// drains must not accumulate dirty keys forever.
+    dirty_enabled: Arc<AtomicBool>,
 }
 
 impl<K: Eq + Hash + Clone> SketchRegistry<K> {
     pub fn new(cfg: RegistryConfig) -> Result<Self, String> {
+        Self::with_wall_clock(cfg, WallClock::System)
+    }
+
+    /// As [`Self::new`], with an explicit wall-time source (tests inject
+    /// [`WallClock::manual`] to age keys without sleeping).
+    pub fn with_wall_clock(cfg: RegistryConfig, wall: WallClock) -> Result<Self, String> {
         cfg.validate()?;
-        let shards = (0..cfg.shards).map(|_| Shard::new()).collect();
+        let dirty_enabled = Arc::new(AtomicBool::new(false));
+        let shards = (0..cfg.shards).map(|_| Shard::new(dirty_enabled.clone())).collect();
         let global = cfg.track_global.then(|| ConcurrentHllSketch::new(cfg.hll));
-        Ok(Self { cfg, shards, shard_mask: cfg.shards - 1, global, clock: AtomicU64::new(0) })
+        Ok(Self {
+            cfg,
+            shards,
+            shard_mask: cfg.shards - 1,
+            global,
+            clock: AtomicU64::new(0),
+            wall,
+            dirty_enabled,
+        })
     }
 
     /// Convenience: default registry config, shared-ready.
@@ -50,9 +76,27 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         self.clock.load(Ordering::Relaxed)
     }
 
+    /// Current wall-clock reading in whole seconds (from the configured
+    /// [`WallClock`] source).
+    pub fn wall_now_secs(&self) -> u64 {
+        self.wall.now_secs()
+    }
+
     /// Advance the clock by one mutating call and return the new tick.
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Turn on per-shard dirty-key tracking (idempotent). A replication
+    /// primary enables this before accepting subscribers; keys touched
+    /// while tracking was off reach followers through their bootstrap
+    /// full sync, not the delta log.
+    pub fn enable_dirty_tracking(&self) {
+        self.dirty_enabled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn dirty_tracking_enabled(&self) -> bool {
+        self.dirty_enabled.load(Ordering::SeqCst)
     }
 
     /// Which stripe a key lives on. Stable across the registry's
@@ -76,13 +120,14 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             return;
         }
         let now = self.tick();
+        let wall = self.wall.now_secs();
         let hashes: Vec<u64> = words.iter().map(|&w| self.cfg.hll.hash_word(w)).collect();
         if let Some(global) = &self.global {
             for &h in &hashes {
                 global.insert_hash(h);
             }
         }
-        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes, now);
+        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes, now, wall);
     }
 
     /// Keyed batch ingest: group a `(key, word)` batch by shard, then
@@ -92,6 +137,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             return;
         }
         let now = self.tick();
+        let wall = self.wall.now_secs();
         let mut groups: Vec<Vec<(K, u64)>> = vec![Vec::new(); self.shards.len()];
         for (key, word) in pairs {
             let h = self.cfg.hll.hash_word(*word);
@@ -102,7 +148,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         }
         for (shard, group) in self.shards.iter().zip(&groups) {
             if !group.is_empty() {
-                shard.ingest_pairs(self.cfg.hll, group, now);
+                shard.ingest_pairs(self.cfg.hll, group, now, wall);
             }
         }
     }
@@ -125,6 +171,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             pairs.iter().map(|(k, w)| (k, *w)),
             self.global.as_ref(),
             self.tick(),
+            self.wall.now_secs(),
         );
     }
 
@@ -144,6 +191,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             run.iter().map(|(_, k, w)| (k, *w)),
             self.global.as_ref(),
             self.tick(),
+            self.wall.now_secs(),
         );
     }
 
@@ -183,7 +231,13 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         let Some(sketch) = self.shards[self.shard_of(src)].take(src) else {
             return Ok(false);
         };
-        self.shards[self.shard_of(&dst)].merge_in(self.cfg.hll, dst, sketch, self.tick())?;
+        self.shards[self.shard_of(&dst)].merge_in(
+            self.cfg.hll,
+            dst,
+            sketch,
+            self.tick(),
+            self.wall.now_secs(),
+        )?;
         Ok(true)
     }
 
@@ -202,11 +256,13 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             global.merge_sketch(&sketch)?;
         }
         let now = self.tick();
+        let wall = self.wall.now_secs();
         self.shards[self.shard_of(&key)].merge_in(
             self.cfg.hll,
             key,
             AdaptiveSketch::Dense(sketch),
             now,
+            wall,
         )
     }
 
@@ -275,6 +331,59 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
     pub fn evict_idle(&self, max_age: u64) -> usize {
         let cutoff = self.now().saturating_sub(max_age);
         self.shards.iter().map(|s| s.evict_idle(cutoff)).sum()
+    }
+
+    /// Wall-clock TTL sweep: drop every key whose last touch is more
+    /// than `max_age` of real time behind the registry's wall clock
+    /// (coarse, whole seconds — see [`WallClock`]). The logical-tick
+    /// sweep [`Self::evict_idle`] ages keys by ingest activity; this one
+    /// ages them by elapsed time, which is what "expire tenants idle for
+    /// an hour" actually means on a quiet server. Returns the number
+    /// evicted.
+    pub fn evict_idle_wall(&self, max_age: Duration) -> usize {
+        let cutoff = self.wall.now_secs().saturating_sub(max_age.as_secs());
+        self.shards.iter().map(|s| s.evict_idle_wall(cutoff)).sum()
+    }
+
+    /// Drain every shard's dirty-key set, returning each still-live
+    /// dirty key's sketch serialized in wire format v2 — the feed the
+    /// replication log seals into delta batches ([`crate::replica`]).
+    /// Empty unless [`Self::enable_dirty_tracking`] was called. The swap
+    /// happens under each shard lock, so a concurrent mutation lands
+    /// either in this drain or the next — never in neither; because
+    /// frames carry the key's *current full* sketch and merges are
+    /// bucket-wise max, draining a key twice is harmless.
+    pub fn drain_dirty_sketches(&self) -> Vec<(K, Vec<u8>)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            shard.drain_dirty(&mut out);
+        }
+        out
+    }
+
+    /// Number of keys currently awaiting a dirty drain (0 when tracking
+    /// is disabled or everything has been captured).
+    pub fn dirty_keys(&self) -> usize {
+        self.shards.iter().map(|s| s.dirty_len()).sum()
+    }
+
+    /// Point-in-time copy of the lock-free global union sketch (`None`
+    /// when `track_global` is off). Unlike [`Self::merge_all`], this
+    /// includes words whose keys were since evicted — which is exactly
+    /// why snapshot format v2 persists it as its own record.
+    pub fn global_sketch(&self) -> Option<HllSketch> {
+        self.global.as_ref().map(|g| g.snapshot())
+    }
+
+    /// Raise the global union by `sketch` without touching any key — the
+    /// restore path for snapshot v2's global record. No-op `Ok` when
+    /// `track_global` is off; a config/seed mismatch fails before any
+    /// register changes.
+    pub fn merge_global(&self, sketch: &HllSketch) -> Result<(), SketchError> {
+        match &self.global {
+            Some(global) => global.merge_sketch(sketch),
+            None => Ok(()),
+        }
     }
 
     /// Size-budget eviction: while total sketch heap exceeds `max_bytes`,
@@ -623,5 +732,101 @@ mod tests {
             Err(SketchError::ConfigMismatch(..))
         ));
         assert!(reg.is_empty(), "failed merges must not create keys");
+    }
+
+    #[test]
+    fn wall_clock_ttl_evicts_by_duration() {
+        use super::super::config::WallClock;
+        use std::time::Duration;
+
+        let (wall, clock) = WallClock::manual(1_000);
+        let reg: SketchRegistry<u64> = SketchRegistry::with_wall_clock(
+            RegistryConfig { shards: 8, ..RegistryConfig::default() },
+            wall,
+        )
+        .unwrap();
+        // Keys 0..5 touched at wall second 1000.
+        for key in 0u64..5 {
+            reg.ingest(key, &[key as u32]);
+        }
+        assert_eq!(reg.wall_now_secs(), 1_000);
+        // An hour passes; one key stays hot.
+        clock.store(1_000 + 3_600, std::sync::atomic::Ordering::Relaxed);
+        reg.ingest(99, &[7]);
+        // TTL of 2h evicts nothing; TTL of 30min evicts the 5 idle keys.
+        assert_eq!(reg.evict_idle_wall(Duration::from_secs(2 * 3_600)), 0);
+        assert_eq!(reg.evict_idle_wall(Duration::from_secs(30 * 60)), 5);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.estimate(&99).is_some());
+    }
+
+    #[test]
+    fn dirty_tracking_drains_exactly_once() {
+        let reg = registry(8);
+        // Off by default: mutations leave no dirty debt behind.
+        reg.ingest(1, &[1, 2, 3]);
+        assert!(!reg.dirty_tracking_enabled());
+        assert_eq!(reg.dirty_keys(), 0);
+        assert!(reg.drain_dirty_sketches().is_empty());
+
+        reg.enable_dirty_tracking();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(31);
+        for key in 0u64..20 {
+            let words: Vec<u32> = (0..50).map(|_| rng.next_u32()).collect();
+            reg.ingest(key, &words);
+        }
+        assert_eq!(reg.dirty_keys(), 20);
+        let drained = reg.drain_dirty_sketches();
+        assert_eq!(drained.len(), 20);
+        assert_eq!(reg.dirty_keys(), 0);
+        // Each drained frame is the key's current full sketch.
+        for (key, bytes) in &drained {
+            let sketch = HllSketch::from_bytes(bytes).unwrap();
+            assert_eq!(Some(sketch.estimate()), reg.estimate(key), "key {key}");
+        }
+        // Nothing new: the next drain is empty.
+        assert!(reg.drain_dirty_sketches().is_empty());
+        // One more touch re-dirties exactly that key.
+        reg.ingest(7, &[rng.next_u32()]);
+        let again = reg.drain_dirty_sketches();
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].0, 7);
+        // A dirtied-then-evicted key is skipped, not exported.
+        reg.ingest(8, &[rng.next_u32()]);
+        reg.evict(&8);
+        assert!(reg.drain_dirty_sketches().is_empty());
+    }
+
+    #[test]
+    fn global_sketch_and_merge_global_preserve_evicted_words() {
+        let reg = registry(8);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(37);
+        let wa: Vec<u32> = (0..3_000).map(|_| rng.next_u32()).collect();
+        let wb: Vec<u32> = (0..3_000).map(|_| rng.next_u32()).collect();
+        reg.ingest(1, &wa);
+        reg.ingest(2, &wb);
+        let full_global = reg.global_sketch().unwrap();
+        assert_eq!(full_global.estimate(), reg.global_estimate().unwrap());
+
+        // Evict key 1: the live union shrinks, the global sketch does not.
+        reg.evict(&1);
+        assert!(reg.merge_all().estimate() < full_global.estimate());
+        assert_eq!(reg.global_estimate(), Some(full_global.estimate()));
+
+        // merge_global carries those words into a fresh registry's union.
+        let fresh = registry(8);
+        fresh.merge_global(&full_global).unwrap();
+        assert_eq!(fresh.global_estimate(), Some(full_global.estimate()));
+        // Mismatched config is rejected; global-less registries no-op.
+        let seeded = HllSketch::new(HllConfig::PAPER.with_seed(7));
+        assert!(matches!(fresh.merge_global(&seeded), Err(SketchError::ConfigMismatch(..))));
+        let untracked: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            shards: 4,
+            track_global: false,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert!(untracked.merge_global(&full_global).is_ok());
+        assert!(untracked.global_estimate().is_none());
     }
 }

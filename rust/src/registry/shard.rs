@@ -8,11 +8,20 @@
 //! Each key carries a logical last-touch tick alongside its sketch (the
 //! registry's monotone ingest clock), which is what the TTL sweep
 //! ([`Shard::evict_idle`]) and the LRU size-budget eviction
-//! ([`Shard::collect_meta`] + retain) key off.
+//! ([`Shard::collect_meta`] + retain) key off. A coarse wall-clock
+//! stamp (seconds) rides along for the Duration-based TTL sweep
+//! ([`Shard::evict_idle_wall`]).
+//!
+//! When dirty tracking is enabled (replication primaries — see
+//! [`crate::replica`]), every mutating touch also records the key in a
+//! per-shard dirty set; [`Shard::drain_dirty`] swaps the set out under
+//! the same lock the mutation held, so a write either lands in the
+//! current drain or the next one — never in neither.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::config::ShardStats;
 use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
@@ -20,39 +29,62 @@ use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
 #[derive(Debug)]
 pub(crate) struct Shard<K> {
     state: Mutex<ShardState<K>>,
+    /// Registry-wide dirty-tracking switch, shared by every shard. Read
+    /// under the shard lock on each mutation; off (the default) it costs
+    /// one relaxed load and no dirty-set traffic.
+    track_dirty: Arc<AtomicBool>,
 }
 
 #[derive(Debug)]
 struct ShardState<K> {
     map: HashMap<K, KeyEntry>,
     words: u64,
+    /// Keys mutated since the last [`Shard::drain_dirty`]. Only
+    /// populated while the shared `track_dirty` flag is set.
+    dirty: HashSet<K>,
 }
 
-/// One key's live state: the sketch plus the registry clock tick of the
-/// last write that touched it.
+/// One key's live state: the sketch plus the registry clock tick and
+/// coarse wall-clock second of the last write that touched it.
 #[derive(Debug)]
 struct KeyEntry {
     sketch: AdaptiveSketch,
     last_touch: u64,
+    last_touch_wall: u64,
 }
 
 impl KeyEntry {
-    fn new(cfg: HllConfig, now: u64) -> Self {
-        Self { sketch: AdaptiveSketch::new(cfg), last_touch: now }
+    fn new(cfg: HllConfig, now: u64, wall: u64) -> Self {
+        Self { sketch: AdaptiveSketch::new(cfg), last_touch: now, last_touch_wall: wall }
     }
 
     /// Monotone touch: ticks are taken from the registry clock *before*
     /// the shard lock, so two concurrent ingests of one key can apply
     /// their ticks in either order — a plain assignment could move the
     /// key's last touch backwards and get a just-touched key TTL-evicted.
-    fn touch(&mut self, now: u64) {
+    /// The wall stamp gets the same treatment.
+    fn touch(&mut self, now: u64, wall: u64) {
         self.last_touch = self.last_touch.max(now);
+        self.last_touch_wall = self.last_touch_wall.max(wall);
     }
 }
 
 impl<K: Eq + Hash> Shard<K> {
-    pub(crate) fn new() -> Self {
-        Self { state: Mutex::new(ShardState { map: HashMap::new(), words: 0 }) }
+    pub(crate) fn new(track_dirty: Arc<AtomicBool>) -> Self {
+        Self {
+            state: Mutex::new(ShardState {
+                map: HashMap::new(),
+                words: 0,
+                dirty: HashSet::new(),
+            }),
+            track_dirty,
+        }
+    }
+
+    /// Whether mutations must record their key in the dirty set. Read
+    /// while the caller holds (or is about to take) the shard lock.
+    fn dirty_on(&self) -> bool {
+        self.track_dirty.load(Ordering::Relaxed)
     }
 
     /// Take the shard lock, recovering from poison: a panic in a
@@ -67,10 +99,17 @@ impl<K: Eq + Hash> Shard<K> {
 
     /// Fold pre-hashed words into one key's sketch (created on first
     /// touch).
-    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64], now: u64) {
+    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64], now: u64, wall: u64)
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
-        let entry = st.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now));
-        entry.touch(now);
+        if dirty {
+            st.dirty.insert(key.clone());
+        }
+        let entry = st.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+        entry.touch(now, wall);
         for &h in hashes {
             entry.sketch.insert_hash(h);
         }
@@ -78,15 +117,19 @@ impl<K: Eq + Hash> Shard<K> {
     }
 
     /// Fold a run of (key, hash) pairs under one lock acquisition.
-    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)], now: u64)
+    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)], now: u64, wall: u64)
     where
         K: Clone,
     {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
         for (key, h) in pairs {
+            if dirty {
+                st.dirty.insert(key.clone());
+            }
             let entry =
-                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now));
-            entry.touch(now);
+                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+            entry.touch(now, wall);
             entry.sketch.insert_hash(*h);
         }
         st.words += pairs.len() as u64;
@@ -104,9 +147,11 @@ impl<K: Eq + Hash> Shard<K> {
         pairs: impl Iterator<Item = (&'a K, u32)>,
         global: Option<&crate::hll::ConcurrentHllSketch>,
         now: u64,
+        wall: u64,
     ) where
         K: Clone + 'a,
     {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
         let mut n = 0u64;
         for (key, word) in pairs {
@@ -114,9 +159,12 @@ impl<K: Eq + Hash> Shard<K> {
             if let Some(g) = global {
                 g.insert_hash(h);
             }
+            if dirty {
+                st.dirty.insert(key.clone());
+            }
             let entry =
-                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now));
-            entry.touch(now);
+                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+            entry.touch(now, wall);
             entry.sketch.insert_hash(h);
             n += 1;
         }
@@ -154,6 +202,49 @@ impl<K: Eq + Hash> Shard<K> {
         let before = st.map.len();
         st.map.retain(|_, e| e.last_touch >= cutoff);
         before - st.map.len()
+    }
+
+    /// Wall-clock twin of [`Shard::evict_idle`]: drop every key whose
+    /// last wall-clock touch (seconds) predates `cutoff_secs`.
+    pub(crate) fn evict_idle_wall(&self, cutoff_secs: u64) -> usize {
+        let mut st = self.lock();
+        let before = st.map.len();
+        st.map.retain(|_, e| e.last_touch_wall >= cutoff_secs);
+        before - st.map.len()
+    }
+
+    /// Swap out the dirty set and append each still-live dirty key's
+    /// sketch in wire-format-v2 bytes. Like [`Shard::export_bytes`], the
+    /// lock is held only to take the set and clone the live sketches;
+    /// densification and serialization happen after release. Keys that
+    /// were dirtied and then evicted before the drain are skipped —
+    /// eviction does not replicate (see [`crate::replica`]).
+    pub(crate) fn drain_dirty(&self, out: &mut Vec<(K, Vec<u8>)>)
+    where
+        K: Clone,
+    {
+        let cloned: Vec<(K, AdaptiveSketch)> = {
+            let mut st = self.lock();
+            if st.dirty.is_empty() {
+                return;
+            }
+            let dirty = std::mem::take(&mut st.dirty);
+            let mut v = Vec::with_capacity(dirty.len());
+            for key in dirty {
+                if let Some(entry) = st.map.get(&key) {
+                    v.push((key, entry.sketch.clone()));
+                }
+            }
+            v
+        };
+        for (key, sketch) in cloned {
+            out.push((key, sketch.into_dense().to_bytes()));
+        }
+    }
+
+    /// Number of keys currently awaiting a dirty drain.
+    pub(crate) fn dirty_len(&self) -> usize {
+        self.lock().dirty.len()
     }
 
     /// Append `(key, last_touch, memory_bytes)` for every live key — the
@@ -198,23 +289,32 @@ impl<K: Eq + Hash> Shard<K> {
         key: K,
         other: AdaptiveSketch,
         now: u64,
-    ) -> Result<(), crate::hll::SketchError> {
+        wall: u64,
+    ) -> Result<(), crate::hll::SketchError>
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
-        match st.map.entry(key) {
+        // Only mark dirty once the merge is known to apply; a failed
+        // config check must not enqueue a key that was never created.
+        match st.map.entry(key.clone()) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 let entry = e.get_mut();
                 entry.sketch.merge_into(other)?;
-                entry.touch(now);
-                Ok(())
+                entry.touch(now, wall);
             }
             std::collections::hash_map::Entry::Vacant(e) => {
                 if *other.config() != cfg {
                     return Err(crate::hll::SketchError::ConfigMismatch(*other.config(), cfg));
                 }
-                e.insert(KeyEntry { sketch: other, last_touch: now });
-                Ok(())
+                e.insert(KeyEntry { sketch: other, last_touch: now, last_touch_wall: wall });
             }
         }
+        if dirty {
+            st.dirty.insert(key);
+        }
+        Ok(())
     }
 
     /// Fold every sketch in this shard into `acc` (bucket-wise max).
@@ -264,5 +364,6 @@ impl<K: Eq + Hash> Shard<K> {
         let mut st = self.lock();
         st.map.clear();
         st.words = 0;
+        st.dirty.clear();
     }
 }

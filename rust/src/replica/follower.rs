@@ -1,0 +1,389 @@
+//! The follower: a read-only serving node kept convergent with a
+//! primary over the replication stream.
+//!
+//! [`FollowerServer::start`] wraps two pieces sharing one registry:
+//!
+//! * a [`SketchServer`] in read-only mode — `Estimate`,
+//!   `GlobalEstimate`, `Stats` and `Ping` serve normally, every
+//!   mutating RPC answers a typed
+//!   [`crate::server::ErrorCode::ReadOnly`] frame;
+//! * a replication thread that subscribes to the primary, applies
+//!   `FULL_SYNC` / `DELTA_BATCH` frames through
+//!   [`SketchRegistry::merge_sketch`] (max-merge — the paper's Fig-3
+//!   fold — so any interleaving, replay, or duplicate converges to the
+//!   primary's registers bit-exactly), acks each applied position, and
+//!   reconnects with its cursor after a disconnect.
+//!
+//! A follower that is killed and restarted resumes from its last
+//! applied cursor ([`FollowerServer::shutdown`] returns it;
+//! [`FollowerServer::start_at_cursor`] takes it): if the primary still
+//! retains the intervening batches, only those ship; otherwise the
+//! primary falls back to a full sync. Sketch config mismatches
+//! (precision or hash seed) surface as typed errors and **halt**
+//! replication — the follower keeps serving its last-good state rather
+//! than retry-looping into the same rejection
+//! ([`FollowerStats::halted`] + [`FollowerStats::last_error`] expose
+//! the condition).
+
+use std::io;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::ReplicaCursor;
+use crate::hll::HllSketch;
+use crate::registry::SketchRegistry;
+use crate::server::protocol::{ErrorCode, Request, Response};
+use crate::server::server::{try_read_frame, write_full};
+use crate::server::snapshot;
+use crate::server::{ServerConfig, SketchServer};
+
+/// Follower-side replication parameters.
+#[derive(Debug, Clone)]
+pub struct FollowerConfig {
+    /// Pause between reconnect attempts after a connect failure or a
+    /// dropped subscription.
+    pub reconnect_backoff: Duration,
+    /// Socket read timeout — the granularity at which the apply loop
+    /// notices shutdown and reconnects.
+    pub read_timeout: Duration,
+}
+
+impl Default for FollowerConfig {
+    fn default() -> Self {
+        Self {
+            reconnect_backoff: Duration::from_millis(50),
+            read_timeout: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Point-in-time follower counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FollowerStats {
+    /// Highest replication seq applied (the resume cursor).
+    pub cursor: u64,
+    /// Delta batches applied since start.
+    pub batches_applied: u64,
+    /// Per-key frames applied since start (deltas only).
+    pub entries_applied: u64,
+    /// Full syncs applied since start (bootstrap + stale-cursor falls).
+    pub full_syncs: u64,
+    /// Reconnect attempts after the initial connect.
+    pub reconnects: u64,
+    /// Replication has halted on a non-recoverable typed error (config
+    /// mismatch, unsupported primary); reads still serve.
+    pub halted: bool,
+    /// The most recent replication error, if any.
+    pub last_error: Option<String>,
+}
+
+#[derive(Debug, Default)]
+struct FollowerShared {
+    /// Primary log incarnation the cursor belongs to (0 = none yet).
+    epoch: AtomicU64,
+    cursor: AtomicU64,
+    batches_applied: AtomicU64,
+    entries_applied: AtomicU64,
+    full_syncs: AtomicU64,
+    reconnects: AtomicU64,
+    halted: AtomicBool,
+    last_error: Mutex<Option<String>>,
+}
+
+impl FollowerShared {
+    fn record_error(&self, e: impl std::fmt::Display) {
+        *self.last_error.lock().unwrap_or_else(PoisonError::into_inner) = Some(e.to_string());
+    }
+}
+
+/// A running follower: read-only TCP front-end plus the replication
+/// apply thread. Dropping it performs a full graceful shutdown.
+pub struct FollowerServer {
+    server: SketchServer,
+    stop: Arc<AtomicBool>,
+    shared: Arc<FollowerShared>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl FollowerServer {
+    /// Bootstrap a fresh follower: bind `listen` for read-only serving
+    /// and subscribe to `primary` from cursor 0 (the primary answers
+    /// with a full sync, then streams deltas).
+    pub fn start(
+        listen: impl ToSocketAddrs,
+        primary: SocketAddr,
+        registry: Arc<SketchRegistry<u64>>,
+        cfg: FollowerConfig,
+    ) -> io::Result<Self> {
+        Self::start_at_cursor(listen, primary, registry, cfg, ReplicaCursor::default())
+    }
+
+    /// Resume a follower that already holds state up to `cursor` (the
+    /// position a previous instance's [`FollowerServer::shutdown`]
+    /// returned, against the same registry). The primary ships only the
+    /// batches past the cursor if its log incarnation still matches and
+    /// it retains them, falling back to a full sync otherwise.
+    pub fn start_at_cursor(
+        listen: impl ToSocketAddrs,
+        primary: SocketAddr,
+        registry: Arc<SketchRegistry<u64>>,
+        cfg: FollowerConfig,
+        cursor: ReplicaCursor,
+    ) -> io::Result<Self> {
+        let server = SketchServer::start(
+            listen,
+            registry.clone(),
+            ServerConfig { read_only: true, ..ServerConfig::default() },
+        )?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(FollowerShared {
+            epoch: AtomicU64::new(cursor.epoch),
+            cursor: AtomicU64::new(cursor.seq),
+            ..FollowerShared::default()
+        });
+        let thread_stop = stop.clone();
+        let thread_shared = shared.clone();
+        let join = std::thread::Builder::new()
+            .name("sketch-follower-replication".into())
+            .spawn(move || {
+                replication_loop(primary, registry, cfg, thread_stop, thread_shared)
+            })?;
+        Ok(Self { server, stop, shared, join: Some(join) })
+    }
+
+    /// The read-only serving address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// The registry replication applies into (shared with the serving
+    /// front-end).
+    pub fn registry(&self) -> &Arc<SketchRegistry<u64>> {
+        self.server.registry()
+    }
+
+    /// The wrapped read-only server (for its serving stats).
+    pub fn server(&self) -> &SketchServer {
+        &self.server
+    }
+
+    /// Highest replication seq applied so far (within the current
+    /// primary epoch — compare against the primary log's
+    /// `latest_seq` for caught-up checks).
+    pub fn cursor(&self) -> u64 {
+        self.shared.cursor.load(Ordering::SeqCst)
+    }
+
+    /// The full resumable position (epoch + seq) a successor would pass
+    /// to [`FollowerServer::start_at_cursor`].
+    pub fn position(&self) -> ReplicaCursor {
+        ReplicaCursor {
+            epoch: self.shared.epoch.load(Ordering::SeqCst),
+            seq: self.shared.cursor.load(Ordering::SeqCst),
+        }
+    }
+
+    pub fn stats(&self) -> FollowerStats {
+        FollowerStats {
+            cursor: self.shared.cursor.load(Ordering::SeqCst),
+            batches_applied: self.shared.batches_applied.load(Ordering::Relaxed),
+            entries_applied: self.shared.entries_applied.load(Ordering::Relaxed),
+            full_syncs: self.shared.full_syncs.load(Ordering::Relaxed),
+            reconnects: self.shared.reconnects.load(Ordering::Relaxed),
+            halted: self.shared.halted.load(Ordering::SeqCst),
+            last_error: self
+                .shared
+                .last_error
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .clone(),
+        }
+    }
+
+    /// Graceful shutdown (replication thread joined, listener closed);
+    /// returns the final position for
+    /// [`FollowerServer::start_at_cursor`] resume. Also runs on drop.
+    pub fn shutdown(mut self) -> ReplicaCursor {
+        self.stop_and_join();
+        self.position()
+        // `self` drops here: the wrapped server's own Drop performs its
+        // graceful shutdown, and our Drop's stop_and_join is a no-op.
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for FollowerServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Sleep `d` in small slices, returning early when `stop` is raised.
+fn sleep_poll(d: Duration, stop: &AtomicBool) {
+    let deadline = Instant::now() + d;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(5)));
+    }
+}
+
+/// Outer connection loop: (re)connect, subscribe from the current
+/// cursor, run the apply loop until it returns, back off, repeat —
+/// until stopped or halted on a non-recoverable typed error.
+fn replication_loop(
+    primary: SocketAddr,
+    registry: Arc<SketchRegistry<u64>>,
+    cfg: FollowerConfig,
+    stop: Arc<AtomicBool>,
+    shared: Arc<FollowerShared>,
+) {
+    let mut first_attempt = true;
+    loop {
+        if stop.load(Ordering::SeqCst) || shared.halted.load(Ordering::SeqCst) {
+            return;
+        }
+        if !first_attempt {
+            shared.reconnects.fetch_add(1, Ordering::Relaxed);
+            sleep_poll(cfg.reconnect_backoff, &stop);
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+        }
+        first_attempt = false;
+        let mut stream = match TcpStream::connect(primary) {
+            Ok(s) => s,
+            Err(e) => {
+                shared.record_error(format!("connect to primary {primary}: {e}"));
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+        let _ = stream.set_nodelay(true);
+        let epoch = shared.epoch.load(Ordering::SeqCst);
+        let cursor = shared.cursor.load(Ordering::SeqCst);
+        let subscribe = Request::Subscribe { epoch, cursor }.encode();
+        if !matches!(write_full(&mut stream, &subscribe, &stop), Ok(true)) {
+            shared.record_error("subscribe write failed");
+            continue;
+        }
+        crate::log_debug!("replica", "subscribed to {primary} at cursor {cursor} (epoch {epoch})");
+        run_subscription(&mut stream, &registry, &stop, &shared);
+    }
+}
+
+/// Apply frames from an established subscription until the stream
+/// breaks, the primary misbehaves, or we are stopped/halted.
+fn run_subscription(
+    stream: &mut TcpStream,
+    registry: &Arc<SketchRegistry<u64>>,
+    stop: &AtomicBool,
+    shared: &FollowerShared,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) || shared.halted.load(Ordering::SeqCst) {
+            return;
+        }
+        let (opcode, payload) = match try_read_frame(stream, stop) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => continue, // idle tick
+            Err(_) => return,     // disconnect → outer loop reconnects
+        };
+        let resp = match Response::decode(opcode, &payload) {
+            Ok(resp) => resp,
+            Err(e) => {
+                shared.record_error(format!("undecodable frame from primary: {e}"));
+                return;
+            }
+        };
+        match resp {
+            Response::FullSync { epoch, cursor, body } => {
+                match snapshot::restore_from_bytes(registry, &body) {
+                    Ok(keys) => {
+                        // The image resets our position into the
+                        // primary's (possibly new) log incarnation.
+                        shared.epoch.store(epoch, Ordering::SeqCst);
+                        shared.cursor.store(cursor, Ordering::SeqCst);
+                        shared.full_syncs.fetch_add(1, Ordering::Relaxed);
+                        crate::log_debug!(
+                            "replica",
+                            "full sync applied: {keys} keys, cursor {cursor} (epoch {epoch})"
+                        );
+                    }
+                    Err(e) => {
+                        // A sync that does not apply cleanly (config or
+                        // seed mismatch, corrupt image) cannot be fixed
+                        // by retrying against the same primary: halt,
+                        // keep serving last-good state.
+                        shared.record_error(format!("full sync rejected: {e}"));
+                        shared.halted.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+            }
+            Response::DeltaBatch { seq, entries } => {
+                let applied = shared.cursor.load(Ordering::SeqCst);
+                if seq > applied {
+                    let count = entries.len() as u64;
+                    for (key, bytes) in entries {
+                        let merged = HllSketch::from_bytes(&bytes)
+                            .and_then(|sketch| registry.merge_sketch(key, sketch));
+                        if let Err(e) = merged {
+                            shared.record_error(format!(
+                                "delta frame for key {key} rejected: {e}"
+                            ));
+                            shared.halted.store(true, Ordering::SeqCst);
+                            return;
+                        }
+                    }
+                    shared.cursor.store(seq, Ordering::SeqCst);
+                    shared.batches_applied.fetch_add(1, Ordering::Relaxed);
+                    shared.entries_applied.fetch_add(count, Ordering::Relaxed);
+                }
+                // A batch at or below our cursor is a harmless replay
+                // (max-merge); fall through to ack our real position.
+            }
+            Response::Error { code, message } => {
+                shared.record_error(format!("primary answered {code:?}: {message}"));
+                if matches!(
+                    code,
+                    ErrorCode::Unsupported | ErrorCode::ReadOnly | ErrorCode::Internal
+                ) {
+                    // Subscribed to something that will never replicate
+                    // to us (not a primary, or its image exceeds the
+                    // in-band full-sync cap) — retrying cannot help,
+                    // and each retry would cost the primary a full
+                    // registry serialization.
+                    shared.halted.store(true, Ordering::SeqCst);
+                }
+                return;
+            }
+            other => {
+                shared.record_error(format!(
+                    "unexpected {} frame on the subscription stream",
+                    other.label()
+                ));
+                return;
+            }
+        }
+        let ack = Request::ReplicaAck { cursor: shared.cursor.load(Ordering::SeqCst) }.encode();
+        if !matches!(write_full(stream, &ack, stop), Ok(true)) {
+            return;
+        }
+    }
+}

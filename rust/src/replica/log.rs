@@ -1,0 +1,438 @@
+//! The primary's replication log: dirty registry state sealed into
+//! ordered, immutable delta batches that subscriber connections stream
+//! to followers.
+//!
+//! A batch is one [`crate::registry::SketchRegistry::drain_dirty_sketches`]
+//! drain — every key mutated since the previous capture, each carried
+//! as its *current full* sketch in wire format v2. Because sketch
+//! merges are bucket-wise maxes (commutative, associative, idempotent —
+//! the same property the paper's FPGA exploits to fold parallel
+//! pipelines, Fig 3), shipping full per-key state makes the log trivial
+//! to resume: replaying a batch, skipping ahead, or applying batches
+//! around a full sync all converge to the same registers.
+//!
+//! Batches are retained in a byte-bounded ring for cursor-based resume
+//! after a follower disconnect; a cursor that has rotated out of
+//! retention (or that predates this primary incarnation) falls back to
+//! a full sync. Sealed batches are `Arc`-shared — N subscribers stream
+//! one encode-source with zero per-subscriber copies of the entries.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use crate::registry::SketchRegistry;
+use crate::server::protocol::MAX_PAYLOAD;
+
+/// Upper bound on one sealed batch's entry payload. A capture that
+/// drains more than this splits into several consecutive batches, so an
+/// encoded `DELTA_BATCH` frame can never approach the protocol's
+/// [`MAX_PAYLOAD`] cap — an oversized frame would be rejected by the
+/// follower's header parser and wedge the stream in a reconnect loop.
+const MAX_BATCH_BYTES: usize = (MAX_PAYLOAD as usize) / 4;
+
+/// A follower's resumable replication position: the primary-log
+/// incarnation (`epoch`) plus the last applied seq within it. Seqs are
+/// only meaningful relative to the log that issued them — a restarted
+/// primary starts a fresh log at seq 0 under a new epoch, and without
+/// the epoch a saved cursor could silently alias into the new log's
+/// numbering and skip its early batches. A cursor whose epoch does not
+/// match the primary's always falls back to a full sync.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplicaCursor {
+    /// The issuing log's incarnation id (0 = no position yet).
+    pub epoch: u64,
+    /// Last applied seq within that epoch.
+    pub seq: u64,
+}
+
+/// Primary-side replication parameters (lives on
+/// [`crate::server::ServerConfig::replication`]).
+#[derive(Debug, Clone)]
+pub struct ReplicationConfig {
+    /// Cadence of the capture thread: how often dirty keys are drained
+    /// into a sealed batch. Shorter = lower follower lag, more (and
+    /// smaller) batches.
+    pub capture_interval: Duration,
+    /// Byte budget for retained sealed batches (entry payloads). Older
+    /// batches rotate out once exceeded; a follower resuming from a
+    /// rotated-out cursor gets a full sync instead of deltas.
+    pub retain_bytes: usize,
+    /// Max sealed batches a subscriber may have in flight unacked
+    /// before the stream waits for `REPLICA_ACK` frames — backpressure
+    /// against slow followers.
+    pub ack_window: u64,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        Self {
+            capture_interval: Duration::from_millis(10),
+            retain_bytes: 64 << 20,
+            ack_window: 64,
+        }
+    }
+}
+
+/// One immutable sealed batch: the dirty keys of one capture, each with
+/// its full sketch serialized in wire format v2.
+#[derive(Debug)]
+pub struct SealedBatch {
+    /// Position in the log (1-based, consecutive across sealed batches;
+    /// a follower that has applied seq N resumes with cursor N).
+    pub seq: u64,
+    /// Registry logical clock when the batch was captured (diagnostic —
+    /// ties a batch back to [`SketchRegistry::now`] ticks).
+    pub clock: u64,
+    /// `(key, sketch wire-v2 bytes)` per dirty key.
+    pub entries: Vec<(u64, Vec<u8>)>,
+    /// Payload size used for retention accounting.
+    pub bytes: usize,
+}
+
+/// Point-in-time log accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplicationLogStats {
+    /// Batches sealed since start (including rotated-out ones).
+    pub sealed_batches: u64,
+    /// Entries (key frames) sealed since start.
+    pub sealed_entries: u64,
+    /// Batches currently retained for cursor resume.
+    pub retained_batches: usize,
+    /// Entry-payload bytes currently retained.
+    pub retained_bytes: usize,
+    /// Seq of the newest sealed batch (0 = nothing sealed yet).
+    pub latest_seq: u64,
+    /// Seq of the oldest retained batch, if any.
+    pub oldest_retained_seq: Option<u64>,
+}
+
+/// What [`ReplicationLog::read_after`] found for a subscriber cursor.
+#[derive(Debug, Clone)]
+pub enum LogRead {
+    /// The next batch past the cursor, ready to ship.
+    Batch(Arc<SealedBatch>),
+    /// The cursor is at the log head; nothing to ship right now.
+    CaughtUp,
+    /// The cursor is unservable: it predates retention or claims a seq
+    /// this log never sealed (a previous primary incarnation). The
+    /// subscriber needs a full sync.
+    Stale,
+}
+
+#[derive(Debug)]
+struct LogInner {
+    /// Retained batches, consecutive seqs `front.seq ..= back.seq`.
+    batches: VecDeque<Arc<SealedBatch>>,
+    /// Seq the next sealed batch will get (sealed so far: `1..next_seq`).
+    next_seq: u64,
+    retained_bytes: usize,
+    sealed_batches: u64,
+    sealed_entries: u64,
+}
+
+/// The shared, internally locked replication log. The lock guards only
+/// pointer-sized pushes/clones — entry payloads live in `Arc`ed sealed
+/// batches, so subscriber fan-out never copies them.
+#[derive(Debug)]
+pub struct ReplicationLog {
+    inner: Mutex<LogInner>,
+    /// This log incarnation's id, carried in `SUBSCRIBE`/`FULL_SYNC`
+    /// frames so followers can tell a restarted primary (fresh seq
+    /// numbering) from the one that issued their cursor.
+    epoch: u64,
+    /// `capture` calls currently between drain and seal. Lets a drain
+    /// barrier (tests, benches, controlled shutdown) distinguish "log
+    /// head is final" from "a concurrent capture is about to seal one
+    /// more batch" — see [`ReplicationLog::captures_in_flight`].
+    capturing: AtomicU64,
+}
+
+impl Default for ReplicationLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A practically unique nonzero epoch: wall-clock nanos mixed with the
+/// process id and an in-process counter. Not cryptographic — it only
+/// has to make accidental collision between two primary incarnations
+/// vanishingly unlikely (a collision would merely skip a deserved full
+/// sync, and only if the seq ranges also overlap).
+fn unique_epoch() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = std::process::id() as u64;
+    let raw = nanos ^ pid.rotate_left(32) ^ COUNTER.fetch_add(1, Ordering::Relaxed);
+    if raw == 0 {
+        1
+    } else {
+        raw
+    }
+}
+
+impl ReplicationLog {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(LogInner {
+                batches: VecDeque::new(),
+                next_seq: 1,
+                retained_bytes: 0,
+                sealed_batches: 0,
+                sealed_entries: 0,
+            }),
+            epoch: unique_epoch(),
+            capturing: AtomicU64::new(0),
+        }
+    }
+
+    /// This log incarnation's id (nonzero; 0 on the wire means "no
+    /// position yet").
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of [`ReplicationLog::capture`] calls currently running.
+    /// When this is 0, the registry reports no dirty keys, and
+    /// [`ReplicationLog::latest_seq`] is unchanged across the check,
+    /// the log head is final — the deterministic drain barrier the
+    /// replication tests and bench sit behind.
+    pub fn captures_in_flight(&self) -> u64 {
+        self.capturing.load(Ordering::SeqCst)
+    }
+
+    /// Poison-tolerant lock, mirroring the registry shards: the log
+    /// holds immutable sealed batches that cannot be left torn.
+    fn lock(&self) -> MutexGuard<'_, LogInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Seq of the newest sealed batch (0 when nothing has been sealed).
+    pub fn latest_seq(&self) -> u64 {
+        self.lock().next_seq - 1
+    }
+
+    /// Drain `registry`'s dirty keys and seal them as the next batch —
+    /// or several consecutive batches when the drain exceeds
+    /// [`MAX_BATCH_BYTES`], so no single `DELTA_BATCH` frame can
+    /// approach the protocol payload cap — rotating old batches past
+    /// `retain_bytes`. Returns the last sealed seq, or `None` when
+    /// nothing was dirty. Concurrent captures are safe (disjoint
+    /// drains; duplicates are idempotent max-merges on the follower),
+    /// but one capturer — the server's capture thread — is the intended
+    /// shape; tests call this directly to force a deterministic flush.
+    pub fn capture(&self, registry: &SketchRegistry<u64>, retain_bytes: usize) -> Option<u64> {
+        self.capturing.fetch_add(1, Ordering::SeqCst);
+        let sealed = self.capture_inner(registry, retain_bytes);
+        self.capturing.fetch_sub(1, Ordering::SeqCst);
+        sealed
+    }
+
+    fn capture_inner(&self, registry: &SketchRegistry<u64>, retain_bytes: usize) -> Option<u64> {
+        let entries = registry.drain_dirty_sketches();
+        if entries.is_empty() {
+            return None;
+        }
+        let clock = registry.now();
+        // Greedy chunking; the lock is held across the whole drain so
+        // its chunks get consecutive seqs with nothing interleaved.
+        let mut inner = self.lock();
+        let mut last_seq = 0;
+        let mut chunk: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut chunk_bytes = 0usize;
+        for (key, bytes) in entries {
+            let entry_bytes = 12 + bytes.len();
+            if !chunk.is_empty() && chunk_bytes + entry_bytes > MAX_BATCH_BYTES {
+                last_seq = Self::seal_locked(
+                    &mut inner,
+                    std::mem::take(&mut chunk),
+                    chunk_bytes,
+                    clock,
+                    retain_bytes,
+                );
+                chunk_bytes = 0;
+            }
+            chunk.push((key, bytes));
+            chunk_bytes += entry_bytes;
+        }
+        if !chunk.is_empty() {
+            last_seq = Self::seal_locked(&mut inner, chunk, chunk_bytes, clock, retain_bytes);
+        }
+        Some(last_seq)
+    }
+
+    /// Append one sealed batch and rotate past the retention budget —
+    /// but never below one batch: the newest batch is what a
+    /// just-caught-up follower's cursor points at.
+    fn seal_locked(
+        inner: &mut LogInner,
+        entries: Vec<(u64, Vec<u8>)>,
+        bytes: usize,
+        clock: u64,
+        retain_bytes: usize,
+    ) -> u64 {
+        let n = entries.len() as u64;
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.batches.push_back(Arc::new(SealedBatch { seq, clock, entries, bytes }));
+        inner.retained_bytes += bytes;
+        inner.sealed_batches += 1;
+        inner.sealed_entries += n;
+        while inner.retained_bytes > retain_bytes && inner.batches.len() > 1 {
+            if let Some(dropped) = inner.batches.pop_front() {
+                inner.retained_bytes -= dropped.bytes;
+            }
+        }
+        seq
+    }
+
+    /// What a subscriber positioned at `cursor` (last applied seq)
+    /// should receive next.
+    pub fn read_after(&self, cursor: u64) -> LogRead {
+        let inner = self.lock();
+        let latest = inner.next_seq - 1;
+        if cursor > latest {
+            // A seq this log never sealed — the follower synced against
+            // a previous primary incarnation.
+            return LogRead::Stale;
+        }
+        if cursor == latest {
+            return LogRead::CaughtUp;
+        }
+        match inner.batches.front() {
+            Some(front) if front.seq <= cursor + 1 => {
+                let idx = (cursor + 1 - front.seq) as usize;
+                LogRead::Batch(inner.batches[idx].clone())
+            }
+            // cursor < latest but the batch after it rotated out.
+            _ => LogRead::Stale,
+        }
+    }
+
+    pub fn stats(&self) -> ReplicationLogStats {
+        let inner = self.lock();
+        ReplicationLogStats {
+            sealed_batches: inner.sealed_batches,
+            sealed_entries: inner.sealed_entries,
+            retained_batches: inner.batches.len(),
+            retained_bytes: inner.retained_bytes,
+            latest_seq: inner.next_seq - 1,
+            oldest_retained_seq: inner.batches.front().map(|b| b.seq),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::HllSketch;
+    use crate::registry::RegistryConfig;
+
+    fn registry() -> SketchRegistry<u64> {
+        let reg = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        reg.enable_dirty_tracking();
+        reg
+    }
+
+    #[test]
+    fn capture_seals_consecutive_batches() {
+        let reg = registry();
+        let log = ReplicationLog::new();
+        assert_eq!(log.latest_seq(), 0);
+        assert!(log.capture(&reg, usize::MAX).is_none(), "nothing dirty yet");
+
+        reg.ingest(1, &[1, 2, 3]);
+        reg.ingest(2, &[4, 5]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(1));
+        reg.ingest(1, &[6]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(2));
+        assert!(log.capture(&reg, usize::MAX).is_none());
+
+        let stats = log.stats();
+        assert_eq!(stats.sealed_batches, 2);
+        assert_eq!(stats.sealed_entries, 3); // keys 1+2, then key 1 again
+        assert_eq!(stats.latest_seq, 2);
+        assert_eq!(stats.oldest_retained_seq, Some(1));
+
+        // Batch entries decode as the keys' sketches at capture time.
+        match log.read_after(0) {
+            LogRead::Batch(b) => {
+                assert_eq!(b.seq, 1);
+                assert_eq!(b.entries.len(), 2);
+                for (_, bytes) in &b.entries {
+                    HllSketch::from_bytes(bytes).unwrap();
+                }
+            }
+            other => panic!("expected batch 1, got {other:?}"),
+        }
+        match log.read_after(1) {
+            LogRead::Batch(b) => assert_eq!(b.seq, 2),
+            other => panic!("expected batch 2, got {other:?}"),
+        }
+        assert!(matches!(log.read_after(2), LogRead::CaughtUp));
+    }
+
+    #[test]
+    fn oversized_drains_split_into_capped_batches() {
+        // 300 paper-config keys serialize to ~300 × 64 KiB ≈ 19.7 MB of
+        // entry payload — past MAX_BATCH_BYTES (16 MiB), so one capture
+        // must seal exactly two consecutive batches, each under the cap.
+        let reg = registry();
+        for key in 0u64..300 {
+            reg.ingest(key, &[key as u32]);
+        }
+        let log = ReplicationLog::new();
+        let last = log.capture(&reg, usize::MAX).unwrap();
+        assert_eq!(last, 2, "drain must split into two sealed batches");
+        let stats = log.stats();
+        assert_eq!(stats.sealed_batches, 2);
+        assert_eq!(stats.sealed_entries, 300);
+        let mut cursor = 0;
+        while let LogRead::Batch(batch) = log.read_after(cursor) {
+            assert!(batch.bytes <= MAX_BATCH_BYTES, "batch {} too large", batch.seq);
+            cursor = batch.seq;
+        }
+        assert_eq!(cursor, last);
+    }
+
+    #[test]
+    fn epochs_are_nonzero_and_distinct_per_log() {
+        let a = ReplicationLog::new();
+        let b = ReplicationLog::new();
+        assert_ne!(a.epoch(), 0);
+        assert_ne!(b.epoch(), 0);
+        assert_ne!(a.epoch(), b.epoch(), "two incarnations must not share an epoch");
+    }
+
+    #[test]
+    fn rotation_makes_old_cursors_stale_but_keeps_one_batch() {
+        let reg = registry();
+        let log = ReplicationLog::new();
+        // retain_bytes = 1 rotates everything but the newest batch.
+        for i in 0u32..5 {
+            reg.ingest(i as u64, &[i]);
+            assert_eq!(log.capture(&reg, 1), Some(i as u64 + 1));
+        }
+        let stats = log.stats();
+        assert_eq!(stats.latest_seq, 5);
+        assert_eq!(stats.retained_batches, 1);
+        assert_eq!(stats.oldest_retained_seq, Some(5));
+
+        // Cursor 4 still resumes (batch 5 is retained); older cursors
+        // are stale; a future cursor (other primary incarnation) too.
+        assert!(matches!(log.read_after(4), LogRead::Batch(_)));
+        assert!(matches!(log.read_after(5), LogRead::CaughtUp));
+        for stale in [0u64, 1, 2, 3] {
+            assert!(matches!(log.read_after(stale), LogRead::Stale), "cursor {stale}");
+        }
+        assert!(matches!(log.read_after(99), LogRead::Stale));
+    }
+}

@@ -1,0 +1,87 @@
+//! Conflict-free primary→follower replication.
+//!
+//! HLL's core algebraic asset — registers only ever move up, and merge
+//! is a bucket-wise max (commutative, associative, idempotent) — is the
+//! same property the source paper leans on to fold parallel FPGA
+//! pipelines into one sketch (Fig 3), and it makes distributed
+//! cardinality state **conflict-free by construction**: any
+//! interleaving of deltas, replays after a reconnect, or a full image
+//! applied over partial state all converge to the same registers.
+//! This module turns that property into a serving feature: a follower
+//! node answers `Estimate`/`GlobalEstimate` bit-exactly equal to its
+//! primary once it has drained the stream.
+//!
+//! # Pieces
+//!
+//! * [`ReplicationLog`] (+ [`ReplicationConfig`]) — primary-side:
+//!   dirty-key drains ([`crate::registry::SketchRegistry::drain_dirty_sketches`])
+//!   sealed into ordered `Arc`-shared batches, retained in a
+//!   byte-bounded ring for cursor resume;
+//! * the capture thread and subscriber streaming live in
+//!   [`crate::server`] (`ServerConfig::replication` turns a
+//!   [`crate::server::SketchServer`] into a primary; `SUBSCRIBE` flips
+//!   a connection into a replication stream with ack-window
+//!   backpressure);
+//! * [`FollowerServer`] (+ [`FollowerConfig`]) — follower-side:
+//!   subscribe / apply / ack, cursor resume across kills and
+//!   reconnects ([`ReplicaCursor`]: the primary log's incarnation
+//!   epoch + last applied seq, so a cursor from a restarted primary's
+//!   previous log can never alias into the new numbering), full-sync
+//!   fallback for stale or cross-epoch cursors, read-only serving of
+//!   the replicated registry.
+//!
+//! # Semantics and limits
+//!
+//! Replication ships *additions*: per-key max-merge frames and full
+//! images. Evictions do **not** propagate — a follower keeps serving
+//! keys the primary has dropped. For append-mostly flow counting this
+//! is exactly right; an evicting primary (TTL sweeper, budget) paired
+//! with a follower will diverge on evicted keys until the follower's
+//! next full sync — and a primary that evicts a key and then re-ingests
+//! it under the same name diverges on that key (the follower max-merges
+//! old and new state). Tombstone frames are the queued follow-on
+//! (ROADMAP). A `FULL_SYNC` body is one in-band frame, so registries
+//! whose snapshot image exceeds the frame cap
+//! ([`crate::server::MAX_PAYLOAD`]) must bootstrap followers from a
+//! snapshot file instead.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+//! use hll_fpga::replica::{FollowerConfig, FollowerServer, ReplicationConfig};
+//! use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+//!
+//! // Primary: a normal server with replication turned on.
+//! let primary_reg = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+//! let primary = SketchServer::start(
+//!     "127.0.0.1:0",
+//!     primary_reg.clone(),
+//!     ServerConfig { replication: Some(ReplicationConfig::default()), ..Default::default() },
+//! )
+//! .unwrap();
+//!
+//! // Follower: replicates the primary, serves reads, rejects writes.
+//! let follower_reg = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+//! let follower = FollowerServer::start(
+//!     "127.0.0.1:0",
+//!     primary.local_addr(),
+//!     follower_reg,
+//!     FollowerConfig::default(),
+//! )
+//! .unwrap();
+//!
+//! let mut producer = SketchClient::connect(primary.local_addr()).unwrap();
+//! producer.insert_batch(42, &[1, 2, 3]).unwrap();
+//! // ... after the stream drains, a client of `follower.local_addr()`
+//! // answers the same estimates as the primary, bit-exactly.
+//! ```
+
+pub mod follower;
+pub mod log;
+
+pub use follower::{FollowerConfig, FollowerServer, FollowerStats};
+pub use log::{
+    LogRead, ReplicaCursor, ReplicationConfig, ReplicationLog, ReplicationLogStats,
+    SealedBatch,
+};

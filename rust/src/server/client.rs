@@ -6,6 +6,11 @@
 //! round-trip latency that dominates small-batch throughput over real
 //! sockets (the `server_roundtrip` bench measures the difference
 //! against in-process ingest).
+//!
+//! Against a read-only replica ([`crate::replica::FollowerServer`]),
+//! query methods work unchanged while every mutating call fails with
+//! [`ClientError::Remote`] carrying [`ErrorCode::ReadOnly`] — route
+//! writes to the primary.
 
 use std::io::{self, Write};
 use std::net::{TcpStream, ToSocketAddrs};

@@ -10,17 +10,26 @@
 //! * [`protocol`] — the length-prefixed, versioned binary frame protocol
 //!   (`InsertBatch`, `Estimate`, `GlobalEstimate`, `MergeSketch` using
 //!   the seed-carrying sketch wire format v2, `Stats`, `Evict` with
-//!   key/TTL/budget policies, `Snapshot`, `Ping`), with typed error
-//!   frames and strict, panic-free decoding;
+//!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`, plus the
+//!   replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
+//!   `DeltaBatch`), with typed error frames and strict, panic-free
+//!   decoding;
 //! * [`server`] — a multi-threaded [`std::net::TcpListener`] server:
 //!   one thread per connection, per-connection and aggregate stats,
-//!   graceful shutdown that joins every thread;
+//!   graceful shutdown that joins every thread, an optional background
+//!   maintenance sweeper ([`SweeperConfig`]: timer-driven TTL /
+//!   wall-clock-TTL / budget eviction), optional read-only replica
+//!   mode, and — with [`ServerConfig::replication`] — a replication
+//!   primary role (capture thread + `SUBSCRIBE` streams, see
+//!   [`crate::replica`]);
 //! * [`client`] — a blocking [`SketchClient`] with batch pipelining
 //!   (write a flight of ingest frames, then read the replies — one
 //!   round trip per flight);
-//! * [`snapshot`] — checksummed full-registry snapshot files and the
-//!   restore path, so a restarted server resumes with identical
-//!   estimates and sketches ship across nodes.
+//! * [`snapshot`] — checksummed full-registry snapshot files (format
+//!   v2: per-key records plus the global-union record, v1 read-compat)
+//!   and the restore paths, so a restarted server resumes with
+//!   identical estimates — `GlobalEstimate` included — and sketches
+//!   ship across nodes.
 //!
 //! Remote ingest is bit-exact with in-process ingest: the server feeds
 //! the same [`crate::registry::SketchRegistry::ingest`] path, so a
@@ -52,8 +61,9 @@ pub use protocol::{
     ErrorCode, EvictPolicy, ProtocolError, Request, Response, StatsSummary, MAX_PAYLOAD,
     PROTO_VERSION,
 };
-pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer};
+pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer, SweeperConfig};
 pub use snapshot::{
-    read_snapshot, restore_registry, write_snapshot, SnapshotError, SnapshotSummary,
-    SNAPSHOT_MAGIC, SNAPSHOT_VERSION,
+    decode_snapshot_bytes, read_snapshot, read_snapshot_contents, restore_from_bytes,
+    restore_registry, snapshot_to_vec, write_snapshot, SnapshotContents, SnapshotError,
+    SnapshotSummary, SNAPSHOT_MAGIC, SNAPSHOT_MAGIC_V1, SNAPSHOT_VERSION, SNAPSHOT_VERSION_V1,
 };

@@ -24,8 +24,10 @@
 //! | `GLOBAL_ESTIMATE` | empty                                                 |
 //! | `MERGE_SKETCH`    | key u64 · len u32 · len × sketch wire-format-v2 bytes |
 //! | `STATS`           | empty                                                 |
-//! | `EVICT`           | policy u8 (0=key, 1=idle, 2=budget) · argument u64    |
+//! | `EVICT`           | policy u8 (0=key, 1=idle, 2=budget, 3=idle_wall) · argument u64 |
 //! | `SNAPSHOT`        | empty                                                 |
+//! | `SUBSCRIBE`       | epoch u64 · cursor u64 (epoch 0 or cursor 0 = bootstrap; else resume after this seq of that log incarnation) |
+//! | `REPLICA_ACK`     | cursor u64 (highest replication seq applied)          |
 //!
 //! # Response payloads
 //!
@@ -39,7 +41,25 @@
 //! | `STATS_REPLY`           | keys · sparse · dense · memory_bytes · words (5 × u64) |
 //! | `EVICTED`               | keys u64                                       |
 //! | `SNAPSHOT_DONE`         | keys u64 · file bytes u64                      |
+//! | `FULL_SYNC`             | epoch u64 · cursor u64 · len u32 · len × snapshot-format bytes |
+//! | `DELTA_BATCH`           | seq u64 · count u32 · count × (key u64 · len u32 · sketch wire-v2 bytes) |
 //! | `ERROR`                 | code u8 · msg_len u32 · msg_len × utf-8 bytes  |
+//!
+//! # Replication frames
+//!
+//! `SUBSCRIBE` flips a connection into a replication stream (see
+//! [`crate::replica`]): the primary answers with a `FULL_SYNC` when the
+//! cursor is 0 (bootstrap), carries an epoch from a different log
+//! incarnation (a restarted primary resets seq numbering — the epoch
+//! is what makes the reset detectable), or is no longer covered by the
+//! retained delta log; then it streams `DELTA_BATCH` frames as the
+//! capture thread seals them. The follower sends `REPLICA_ACK` frames
+//! back on the same socket (the primary bounds unacked batches in
+//! flight). A `FULL_SYNC`
+//! body is one complete in-memory snapshot image (the `HLLSNAP2` format
+//! of [`super::snapshot`], global-union record included), so it is
+//! subject to the [`MAX_PAYLOAD`] frame cap — registries whose image
+//! exceeds it must bootstrap followers from a snapshot file instead.
 //!
 //! The `MERGE_SKETCH` body reuses the seed-carrying sketch wire format v2
 //! (see [`crate::hll::sketch`]), so a sketch built with a nonzero hash
@@ -76,6 +96,8 @@ pub mod opcodes {
     pub const STATS: u8 = 0x06;
     pub const EVICT: u8 = 0x07;
     pub const SNAPSHOT: u8 = 0x08;
+    pub const SUBSCRIBE: u8 = 0x09;
+    pub const REPLICA_ACK: u8 = 0x0A;
 
     pub const PONG: u8 = 0x81;
     pub const INGESTED: u8 = 0x82;
@@ -85,6 +107,8 @@ pub mod opcodes {
     pub const STATS_REPLY: u8 = 0x86;
     pub const EVICTED: u8 = 0x87;
     pub const SNAPSHOT_DONE: u8 = 0x88;
+    pub const FULL_SYNC: u8 = 0x89;
+    pub const DELTA_BATCH: u8 = 0x8A;
     pub const ERROR: u8 = 0xEE;
 }
 
@@ -133,10 +157,14 @@ pub enum ErrorCode {
     /// the registry's.
     ConfigMismatch = 2,
     /// The server does not support the operation (e.g. `SNAPSHOT` on a
-    /// server started without a snapshot path).
+    /// server started without a snapshot path, or `SUBSCRIBE` on a
+    /// server that is not a replication primary).
     Unsupported = 3,
     /// The operation failed server-side (e.g. snapshot disk I/O).
     Internal = 4,
+    /// The server is a read-only replica; mutating RPCs must go to the
+    /// primary (see [`crate::replica::FollowerServer`]).
+    ReadOnly = 5,
 }
 
 impl ErrorCode {
@@ -146,6 +174,7 @@ impl ErrorCode {
             2 => Some(ErrorCode::ConfigMismatch),
             3 => Some(ErrorCode::Unsupported),
             4 => Some(ErrorCode::Internal),
+            5 => Some(ErrorCode::ReadOnly),
             _ => None,
         }
     }
@@ -164,6 +193,10 @@ pub enum EvictPolicy {
     /// sketch heap is at most `max_memory_bytes`
     /// ([`crate::registry::SketchRegistry::evict_to_budget`]).
     Budget { max_memory_bytes: u64 },
+    /// Wall-clock TTL sweep: drop keys idle for more than `max_age_secs`
+    /// seconds of real time
+    /// ([`crate::registry::SketchRegistry::evict_idle_wall`]).
+    IdleWall { max_age_secs: u64 },
 }
 
 /// A client→server request.
@@ -177,6 +210,14 @@ pub enum Request {
     Stats,
     Evict(EvictPolicy),
     Snapshot,
+    /// Flip this connection into a replication stream, resuming after
+    /// replication seq `cursor` of log incarnation `epoch` (epoch 0 or
+    /// cursor 0 = fresh follower, bootstrap me; an epoch that is not
+    /// the primary's current one also forces a bootstrap).
+    Subscribe { epoch: u64, cursor: u64 },
+    /// Follower → primary on a subscription stream: everything up to
+    /// `cursor` has been applied (feeds the primary's ack window).
+    ReplicaAck { cursor: u64 },
 }
 
 /// Registry accounting totals, flattened for the wire.
@@ -212,6 +253,16 @@ pub enum Response {
     Stats(StatsSummary),
     Evicted { keys: u64 },
     SnapshotDone { keys: u64, bytes: u64 },
+    /// Primary → follower: a complete registry image in the snapshot
+    /// byte format ([`super::snapshot`], `HLLSNAP2`); after applying it
+    /// the follower's replication position is `cursor` within log
+    /// incarnation `epoch` (the pair it must resume with later).
+    FullSync { epoch: u64, cursor: u64, body: Vec<u8> },
+    /// Primary → follower: one sealed batch of per-key sketch frames
+    /// (each entry is the key's full sketch in wire format v2 at capture
+    /// time; applying is a bucket-wise max merge, so replay and
+    /// duplication are harmless).
+    DeltaBatch { seq: u64, entries: Vec<(u64, Vec<u8>)> },
     Error { code: ErrorCode, message: String },
 }
 
@@ -227,6 +278,22 @@ fn frame(opcode: u8, payload: &[u8]) -> Vec<u8> {
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(payload);
     out
+}
+
+/// Encode a `DELTA_BATCH` frame straight from a sealed batch's borrowed
+/// entries — the primary's subscriber-streaming hot path (batches are
+/// shared `Arc`s across subscribers; no entry clone per send).
+pub fn encode_delta_batch(seq: u64, entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    let payload_len = 12 + entries.iter().map(|(_, b)| 12 + b.len()).sum::<usize>();
+    let mut payload = Vec::with_capacity(payload_len);
+    payload.extend_from_slice(&seq.to_le_bytes());
+    payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (key, bytes) in entries {
+        payload.extend_from_slice(&key.to_le_bytes());
+        payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        payload.extend_from_slice(bytes);
+    }
+    frame(opcodes::DELTA_BATCH, &payload)
 }
 
 /// Encode an `INSERT_BATCH` frame straight from borrowed words — the
@@ -262,6 +329,7 @@ impl Request {
                     EvictPolicy::Key(key) => (0u8, *key),
                     EvictPolicy::Idle { max_age } => (1, *max_age),
                     EvictPolicy::Budget { max_memory_bytes } => (2, *max_memory_bytes),
+                    EvictPolicy::IdleWall { max_age_secs } => (3, *max_age_secs),
                 };
                 let mut payload = Vec::with_capacity(9);
                 payload.push(tag);
@@ -269,6 +337,15 @@ impl Request {
                 frame(opcodes::EVICT, &payload)
             }
             Request::Snapshot => frame(opcodes::SNAPSHOT, &[]),
+            Request::Subscribe { epoch, cursor } => {
+                let mut payload = Vec::with_capacity(16);
+                payload.extend_from_slice(&epoch.to_le_bytes());
+                payload.extend_from_slice(&cursor.to_le_bytes());
+                frame(opcodes::SUBSCRIBE, &payload)
+            }
+            Request::ReplicaAck { cursor } => {
+                frame(opcodes::REPLICA_ACK, &cursor.to_le_bytes())
+            }
         }
     }
 
@@ -312,6 +389,7 @@ impl Request {
                     0 => EvictPolicy::Key(arg),
                     1 => EvictPolicy::Idle { max_age: arg },
                     2 => EvictPolicy::Budget { max_memory_bytes: arg },
+                    3 => EvictPolicy::IdleWall { max_age_secs: arg },
                     other => {
                         return Err(ProtocolError::Malformed(format!(
                             "unknown evict policy {other}"
@@ -321,6 +399,8 @@ impl Request {
                 Request::Evict(policy)
             }
             opcodes::SNAPSHOT => Request::Snapshot,
+            opcodes::SUBSCRIBE => Request::Subscribe { epoch: r.u64()?, cursor: r.u64()? },
+            opcodes::REPLICA_ACK => Request::ReplicaAck { cursor: r.u64()? },
             other => return Err(ProtocolError::BadOpcode(other)),
         };
         r.finish()?;
@@ -357,6 +437,8 @@ impl Response {
             Response::Stats(_) => "Stats",
             Response::Evicted { .. } => "Evicted",
             Response::SnapshotDone { .. } => "SnapshotDone",
+            Response::FullSync { .. } => "FullSync",
+            Response::DeltaBatch { .. } => "DeltaBatch",
             Response::Error { .. } => "Error",
         }
     }
@@ -391,6 +473,15 @@ impl Response {
                 payload.extend_from_slice(&bytes.to_le_bytes());
                 frame(opcodes::SNAPSHOT_DONE, &payload)
             }
+            Response::FullSync { epoch, cursor, body } => {
+                let mut payload = Vec::with_capacity(20 + body.len());
+                payload.extend_from_slice(&epoch.to_le_bytes());
+                payload.extend_from_slice(&cursor.to_le_bytes());
+                payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                payload.extend_from_slice(body);
+                frame(opcodes::FULL_SYNC, &payload)
+            }
+            Response::DeltaBatch { seq, entries } => encode_delta_batch(*seq, entries),
             Response::Error { code, message } => {
                 let msg = message.as_bytes();
                 let mut payload = Vec::with_capacity(5 + msg.len());
@@ -421,6 +512,34 @@ impl Response {
             opcodes::EVICTED => Response::Evicted { keys: r.u64()? },
             opcodes::SNAPSHOT_DONE => {
                 Response::SnapshotDone { keys: r.u64()?, bytes: r.u64()? }
+            }
+            opcodes::FULL_SYNC => {
+                let epoch = r.u64()?;
+                let cursor = r.u64()?;
+                let len = r.u32()? as usize;
+                let body = r.bytes(len)?.to_vec();
+                Response::FullSync { epoch, cursor, body }
+            }
+            opcodes::DELTA_BATCH => {
+                let seq = r.u64()?;
+                let count = r.u32()?;
+                // Every entry needs at least its 12-byte header; checking
+                // up front (in u64, so a hostile count cannot wrap) keeps
+                // `with_capacity` from pre-allocating for a count the
+                // payload cannot possibly carry.
+                if (r.remaining() as u64) < count as u64 * 12 {
+                    return Err(ProtocolError::Malformed(format!(
+                        "delta batch declares {count} entries but carries {} payload bytes",
+                        r.remaining()
+                    )));
+                }
+                let mut entries = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    let key = r.u64()?;
+                    let len = r.u32()? as usize;
+                    entries.push((key, r.bytes(len)?.to_vec()));
+                }
+                Response::DeltaBatch { seq, entries }
             }
             opcodes::ERROR => {
                 let code = r.u8()?;
@@ -566,7 +685,11 @@ mod tests {
         roundtrip_request(Request::Evict(EvictPolicy::Key(9)));
         roundtrip_request(Request::Evict(EvictPolicy::Idle { max_age: 100 }));
         roundtrip_request(Request::Evict(EvictPolicy::Budget { max_memory_bytes: 1 << 30 }));
+        roundtrip_request(Request::Evict(EvictPolicy::IdleWall { max_age_secs: 3_600 }));
         roundtrip_request(Request::Snapshot);
+        roundtrip_request(Request::Subscribe { epoch: 0, cursor: 0 });
+        roundtrip_request(Request::Subscribe { epoch: u64::MAX, cursor: u64::MAX });
+        roundtrip_request(Request::ReplicaAck { cursor: 12345 });
     }
 
     #[test]
@@ -587,10 +710,80 @@ mod tests {
         }));
         roundtrip_response(Response::Evicted { keys: 17 });
         roundtrip_response(Response::SnapshotDone { keys: 8, bytes: 4096 });
+        roundtrip_response(Response::FullSync {
+            epoch: 0xE9,
+            cursor: 42,
+            body: vec![9, 8, 7, 6],
+        });
+        roundtrip_response(Response::FullSync { epoch: 0, cursor: 0, body: vec![] });
+        roundtrip_response(Response::DeltaBatch { seq: 0, entries: vec![] });
+        roundtrip_response(Response::DeltaBatch {
+            seq: 77,
+            entries: vec![(1, vec![1, 2, 3]), (u64::MAX, vec![]), (9, vec![0; 64])],
+        });
         roundtrip_response(Response::Error {
             code: ErrorCode::ConfigMismatch,
             message: "seed mismatch".into(),
         });
+        roundtrip_response(Response::Error {
+            code: ErrorCode::ReadOnly,
+            message: "replica is read-only".into(),
+        });
+    }
+
+    #[test]
+    fn hostile_delta_batch_payloads_are_typed_errors() {
+        let good = Response::DeltaBatch {
+            seq: 9,
+            entries: vec![(1, vec![1, 2, 3]), (2, vec![4])],
+        }
+        .encode();
+        let payload = &good[FRAME_HEADER_LEN..];
+        // The intact payload decodes.
+        assert!(Response::decode(opcodes::DELTA_BATCH, payload).is_ok());
+        // Truncation anywhere inside the entries is a typed error.
+        for cut in [0usize, 8, 12, 13, 20, payload.len() - 1] {
+            assert!(
+                matches!(
+                    Response::decode(opcodes::DELTA_BATCH, &payload[..cut]),
+                    Err(ProtocolError::Malformed(_))
+                ),
+                "cut at {cut} must be Malformed"
+            );
+        }
+        // Trailing bytes rejected.
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH, &padded),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A count the payload cannot carry is rejected before allocation.
+        let mut huge = 1u64.to_le_bytes().to_vec();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH, &huge),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // An entry whose declared length overruns the payload is rejected.
+        let mut overrun = 3u64.to_le_bytes().to_vec();
+        overrun.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        overrun.extend_from_slice(&5u64.to_le_bytes()); // key
+        overrun.extend_from_slice(&100u32.to_le_bytes()); // claims 100 bytes
+        overrun.extend_from_slice(&[1, 2, 3]); // carries 3
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH, &overrun),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // FULL_SYNC with a short body is rejected too.
+        let mut fs = 7u64.to_le_bytes().to_vec(); // epoch
+        fs.extend_from_slice(&1u64.to_le_bytes()); // cursor
+        fs.extend_from_slice(&50u32.to_le_bytes()); // claims 50 body bytes
+        fs.extend_from_slice(&[0; 10]); // carries 10
+        assert!(matches!(
+            Response::decode(opcodes::FULL_SYNC, &fs),
+            Err(ProtocolError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -7,7 +7,21 @@
 //! loop and every connection read poll a shared stop flag on a short
 //! interval, so [`SketchServer::shutdown`] (or drop) stops accepting
 //! and joins every connection thread within one poll tick — a graceful
-//! shutdown with no detached threads left touching the registry.
+//! shutdown with no detached threads left touching the registry. Two
+//! optional maintenance threads ride the same stop flag:
+//!
+//! * the **sweeper** ([`SweeperConfig`]) runs TTL / wall-clock-TTL /
+//!   budget eviction on a timer, so lifecycle policy no longer depends
+//!   on ingest traffic or explicit `Evict` RPCs;
+//! * the **replication capture thread** ([`ReplicationConfig`]) drains
+//!   the registry's dirty keys into the [`ReplicationLog`]'s sealed
+//!   delta batches, which subscriber connections (`SUBSCRIBE` frames —
+//!   see [`crate::replica`]) stream to followers with cursor resume and
+//!   ack-window backpressure.
+//!
+//! With [`ServerConfig::read_only`] set the server fronts a replica:
+//! mutating RPCs answer a typed [`ErrorCode::ReadOnly`] frame while
+//! `Estimate` / `GlobalEstimate` / `Stats` / `Ping` serve normally.
 //!
 //! Malformed frames are answered with typed `ERROR` frames where the
 //! stream is still in sync (decode errors), and the connection is
@@ -20,21 +34,54 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::protocol::{
-    parse_header, ErrorCode, EvictPolicy, Request, Response, StatsSummary, FRAME_HEADER_LEN,
+    encode_delta_batch, parse_header, ErrorCode, EvictPolicy, Request, Response, StatsSummary,
+    FRAME_HEADER_LEN, MAX_PAYLOAD,
 };
 use super::snapshot;
 use crate::hll::{HllSketch, SketchError};
 use crate::registry::SketchRegistry;
+use crate::replica::{LogRead, ReplicationConfig, ReplicationLog};
 
 /// Ingest frames between server-driven
 /// [`SketchRegistry::enforce_budget`] sweeps on a registry configured
 /// with [`crate::registry::RegistryConfig::max_memory_bytes`]. The
 /// sweep's accounting walk is O(keys), so it is amortized rather than
-/// run per batch; the budget is a soft target either way.
+/// run per batch; the budget is a soft target either way. (The
+/// background sweeper, when configured, enforces on its timer as well —
+/// this piggyback remains for servers run without one.)
 const BUDGET_ENFORCE_EVERY: u64 = 256;
+
+/// Background maintenance sweeper parameters: which eviction policies
+/// run on the timer (ROADMAP item — previously budget enforcement only
+/// piggybacked on ingest frames and the `Evict` RPC).
+#[derive(Debug, Clone)]
+pub struct SweeperConfig {
+    /// Pause between maintenance passes.
+    pub interval: Duration,
+    /// Run [`SketchRegistry::evict_idle`] with this logical-tick TTL on
+    /// every pass.
+    pub idle_max_ticks: Option<u64>,
+    /// Run [`SketchRegistry::evict_idle_wall`] with this wall-clock TTL
+    /// on every pass.
+    pub idle_max_age: Option<Duration>,
+    /// Run [`SketchRegistry::enforce_budget`] on every pass (no-op on
+    /// registries without a configured budget).
+    pub enforce_budget: bool,
+}
+
+impl Default for SweeperConfig {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_millis(200),
+            idle_max_ticks: None,
+            idle_max_age: None,
+            enforce_budget: true,
+        }
+    }
+}
 
 /// Static serving parameters.
 #[derive(Debug, Clone, Default)]
@@ -42,6 +89,18 @@ pub struct ServerConfig {
     /// Where the `SNAPSHOT` RPC persists the registry. `None` makes the
     /// RPC answer [`ErrorCode::Unsupported`].
     pub snapshot_path: Option<PathBuf>,
+    /// Serve as a read-only replica front-end: `InsertBatch`,
+    /// `MergeSketch`, `Evict` and `Snapshot` answer
+    /// [`ErrorCode::ReadOnly`]. [`crate::replica::FollowerServer`] sets
+    /// this on the server it wraps.
+    pub read_only: bool,
+    /// Act as a replication primary: enable dirty tracking on the
+    /// registry, run the capture thread, and accept `SUBSCRIBE`
+    /// streams. `None` makes `SUBSCRIBE` answer
+    /// [`ErrorCode::Unsupported`].
+    pub replication: Option<ReplicationConfig>,
+    /// Run the background maintenance sweeper.
+    pub sweeper: Option<SweeperConfig>,
 }
 
 /// Point-in-time server counters.
@@ -55,6 +114,15 @@ pub struct ServerStatsSnapshot {
     pub words_ingested: u64,
     /// Requests answered with an `ERROR` frame.
     pub error_frames: u64,
+    /// Background sweeper passes completed.
+    pub sweeps: u64,
+    /// Keys evicted by background sweeper passes.
+    pub keys_swept: u64,
+    /// `DELTA_BATCH` frames streamed to subscribers.
+    pub delta_batches_sent: u64,
+    /// `FULL_SYNC` frames streamed to subscribers (bootstraps plus
+    /// stale-cursor fallbacks).
+    pub full_syncs_sent: u64,
 }
 
 #[derive(Debug, Default)]
@@ -63,6 +131,10 @@ struct ServerStats {
     frames: AtomicU64,
     words_ingested: AtomicU64,
     error_frames: AtomicU64,
+    sweeps: AtomicU64,
+    keys_swept: AtomicU64,
+    delta_batches_sent: AtomicU64,
+    full_syncs_sent: AtomicU64,
 }
 
 #[derive(Debug)]
@@ -71,6 +143,8 @@ struct Shared {
     cfg: ServerConfig,
     stop: AtomicBool,
     stats: ServerStats,
+    /// Present iff this server is a replication primary.
+    log: Option<Arc<ReplicationLog>>,
 }
 
 /// A running sketch server. Dropping it performs a full graceful
@@ -79,6 +153,9 @@ pub struct SketchServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
     accept_join: Option<JoinHandle<()>>,
+    /// Sweeper and replication-capture threads, joined on shutdown like
+    /// the accept thread.
+    maint_joins: Vec<JoinHandle<()>>,
 }
 
 impl SketchServer {
@@ -91,18 +168,50 @@ impl SketchServer {
     ) -> io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
+        // A replication primary needs dirty tracking on before any
+        // subscriber can connect: every mutation then either lands in a
+        // subscriber's bootstrap full sync (it ran before the accept
+        // thread existed) or in a sealed delta batch — never in
+        // neither. Enabled only after the fallible bind, so a failed
+        // start does not leave the shared registry accumulating dirty
+        // keys that nothing will ever drain.
+        let log = cfg.replication.as_ref().map(|_| {
+            registry.enable_dirty_tracking();
+            Arc::new(ReplicationLog::new())
+        });
         let shared = Arc::new(Shared {
             registry,
             cfg,
             stop: AtomicBool::new(false),
             stats: ServerStats::default(),
+            log,
         });
+        let mut maint_joins = Vec::new();
+        if let (Some(log), Some(rcfg)) = (&shared.log, &shared.cfg.replication) {
+            let capture_shared = shared.clone();
+            let capture_log = log.clone();
+            let capture_cfg = rcfg.clone();
+            maint_joins.push(
+                std::thread::Builder::new()
+                    .name("sketch-server-capture".into())
+                    .spawn(move || capture_loop(capture_shared, capture_log, capture_cfg))?,
+            );
+        }
+        if let Some(scfg) = &shared.cfg.sweeper {
+            let sweep_shared = shared.clone();
+            let sweep_cfg = scfg.clone();
+            maint_joins.push(
+                std::thread::Builder::new()
+                    .name("sketch-server-sweeper".into())
+                    .spawn(move || sweeper_loop(sweep_shared, sweep_cfg))?,
+            );
+        }
         let accept_shared = shared.clone();
         let accept_join = std::thread::Builder::new()
             .name("sketch-server-accept".into())
             .spawn(move || accept_loop(listener, accept_shared))?;
         crate::log_debug!("server", "listening on {addr}");
-        Ok(Self { addr, shared, accept_join: Some(accept_join) })
+        Ok(Self { addr, shared, accept_join: Some(accept_join), maint_joins })
     }
 
     /// The bound address (with the real port when started on port 0).
@@ -123,7 +232,19 @@ impl SketchServer {
             frames: s.frames.load(Ordering::Relaxed),
             words_ingested: s.words_ingested.load(Ordering::Relaxed),
             error_frames: s.error_frames.load(Ordering::Relaxed),
+            sweeps: s.sweeps.load(Ordering::Relaxed),
+            keys_swept: s.keys_swept.load(Ordering::Relaxed),
+            delta_batches_sent: s.delta_batches_sent.load(Ordering::Relaxed),
+            full_syncs_sent: s.full_syncs_sent.load(Ordering::Relaxed),
         }
+    }
+
+    /// The replication log this primary seals delta batches into
+    /// (`None` unless started with [`ServerConfig::replication`]).
+    /// Tests and benches use it to force a synchronous capture
+    /// ([`ReplicationLog::capture`]) and to read the latest sealed seq.
+    pub fn replication_log(&self) -> Option<&Arc<ReplicationLog>> {
+        self.shared.log.as_ref()
     }
 
     /// Graceful shutdown: stop accepting, join every connection thread.
@@ -140,6 +261,9 @@ impl SketchServer {
         // (no wake-up connection needed — one would not be routable for
         // wildcard binds everywhere).
         if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+        for join in self.maint_joins.drain(..) {
             let _ = join.join();
         }
     }
@@ -194,8 +318,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 /// Fill `buf` from the stream, polling the stop flag across read
 /// timeouts. `Ok(true)` = filled; `Ok(false)` = clean end (EOF before
 /// the first byte, or server stopping); `Err` = broken stream or EOF
-/// mid-frame.
-fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> io::Result<bool> {
+/// mid-frame. Shared with [`crate::replica`]'s follower loop.
+pub(crate) fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> io::Result<bool> {
     let mut filled = 0;
     while filled < buf.len() {
         if stop.load(Ordering::SeqCst) {
@@ -230,7 +358,7 @@ fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> io::R
 /// peer that pipelines requests but never reads replies would fill the
 /// socket buffers and park the connection thread in an unbounded
 /// `write_all` — wedging [`SketchServer::shutdown`] forever.
-fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Result<bool> {
+pub(crate) fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Result<bool> {
     let mut written = 0;
     while written < buf.len() {
         if stop.load(Ordering::SeqCst) {
@@ -258,6 +386,217 @@ fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Resu
         }
     }
     Ok(true)
+}
+
+/// Try to read one complete raw frame, returning `Ok(None)` when the
+/// stream's read timeout expires before the first byte arrives (the
+/// caller's idle tick). Once a first byte is in, the rest of the frame
+/// is read to completion ([`read_full`] semantics, stop-flag aware). A
+/// clean EOF, a stop mid-frame, or a bad header all surface as `Err` —
+/// replication streams treat every error as "drop the connection".
+/// Shared by the primary's subscriber loop (reading acks between batch
+/// sends) and the follower's apply loop (reading batches between
+/// reconnect checks).
+pub(crate) fn try_read_frame(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let first = match stream.read(&mut header) {
+        Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed")),
+        Ok(n) => n,
+        Err(e)
+            if matches!(
+                e.kind(),
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+            ) =>
+        {
+            return Ok(None)
+        }
+        Err(e) => return Err(e),
+    };
+    if first < FRAME_HEADER_LEN && !read_full(stream, &mut header[first..], stop)? {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-header"));
+    }
+    let (opcode, len) = parse_header(&header)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let mut payload = vec![0u8; len as usize];
+    if len > 0 && !read_full(stream, &mut payload, stop)? {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-payload"));
+    }
+    Ok(Some((opcode, payload)))
+}
+
+/// Replication capture thread: drain the registry's dirty keys into a
+/// sealed [`ReplicationLog`] batch on the configured cadence. One
+/// capturer per primary; subscriber connections only *read* the log.
+fn capture_loop(shared: Arc<Shared>, log: Arc<ReplicationLog>, cfg: ReplicationConfig) {
+    let mut last = Instant::now();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        if last.elapsed() < cfg.capture_interval {
+            continue;
+        }
+        last = Instant::now();
+        log.capture(&shared.registry, cfg.retain_bytes);
+    }
+}
+
+/// Background maintenance sweeper: timer-driven TTL / wall-TTL / budget
+/// eviction (previously only reachable through ingest piggybacking and
+/// the `Evict` RPC). Polls the stop flag between short sleeps so
+/// shutdown joins it within a few milliseconds regardless of the
+/// configured interval.
+fn sweeper_loop(shared: Arc<Shared>, cfg: SweeperConfig) {
+    let mut last = Instant::now();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        if last.elapsed() < cfg.interval {
+            continue;
+        }
+        last = Instant::now();
+        let mut swept = 0usize;
+        if let Some(max_ticks) = cfg.idle_max_ticks {
+            swept += shared.registry.evict_idle(max_ticks);
+        }
+        if let Some(max_age) = cfg.idle_max_age {
+            swept += shared.registry.evict_idle_wall(max_age);
+        }
+        if cfg.enforce_budget {
+            swept += shared.registry.enforce_budget();
+        }
+        shared.stats.sweeps.fetch_add(1, Ordering::Relaxed);
+        shared.stats.keys_swept.fetch_add(swept as u64, Ordering::Relaxed);
+        if swept > 0 {
+            crate::log_debug!("server", "sweeper evicted {swept} keys");
+        }
+    }
+}
+
+/// Ship a complete registry image to a subscriber whose cursor the log
+/// cannot serve (bootstrap, or fell behind retention). The cursor is
+/// read *before* the export: anything ingested in between lands either
+/// in the image (a harmless duplicate under max-merge) or in a batch
+/// with seq > cursor that streams right after. Returns `false` when the
+/// connection is no longer usable.
+fn send_full_sync(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    log: &ReplicationLog,
+    sent: &mut u64,
+    acked: &mut u64,
+) -> bool {
+    let cursor = log.latest_seq();
+    let body = snapshot::snapshot_to_vec(&shared.registry);
+    if body.len() as u64 + 12 > MAX_PAYLOAD as u64 {
+        let err = Response::Error {
+            code: ErrorCode::Internal,
+            message: format!(
+                "registry image of {} bytes exceeds the in-band full-sync frame cap; \
+                 bootstrap this follower from a snapshot file",
+                body.len()
+            ),
+        };
+        let _ = write_full(stream, &err.encode(), &shared.stop);
+        return false;
+    }
+    let frame = Response::FullSync { epoch: log.epoch(), cursor, body }.encode();
+    if !matches!(write_full(stream, &frame, &shared.stop), Ok(true)) {
+        return false;
+    }
+    shared.stats.full_syncs_sent.fetch_add(1, Ordering::Relaxed);
+    *sent = cursor;
+    *acked = cursor;
+    true
+}
+
+/// A connection that sent `SUBSCRIBE`: stream sealed delta batches (and
+/// full syncs where the cursor is unservable), reading `REPLICA_ACK`
+/// frames back on the same socket. At most
+/// [`ReplicationConfig::ack_window`] batches ride unacked — a slow
+/// follower exerts backpressure here instead of ballooning socket
+/// buffers. Returns when the peer disconnects, misbehaves, or the
+/// server stops.
+fn serve_subscriber(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    log: Arc<ReplicationLog>,
+    sub_epoch: u64,
+    start_cursor: u64,
+) {
+    let rcfg = shared.cfg.replication.clone().unwrap_or_default();
+    // Tighter read timeout than RPC connections: the ack read doubles
+    // as the pacing sleep between log polls, and 50 ms of added
+    // shipping latency per window would dominate convergence lag.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let mut sent = start_cursor;
+    let mut acked = start_cursor;
+    // Bootstrap (cursor 0 = "I have nothing") always full-syncs: the
+    // registry may predate the log (pre-serving ingest, a restored
+    // snapshot). So does a cursor issued by a *different* log
+    // incarnation — a restarted primary resets seq numbering, and
+    // without the epoch check an old cursor could alias into the new
+    // log's range and silently skip its early batches.
+    if (start_cursor == 0 || sub_epoch != log.epoch())
+        && !send_full_sync(stream, shared, &log, &mut sent, &mut acked)
+    {
+        return;
+    }
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Ship whatever the log holds past our position, within the
+        // unacked window.
+        while sent.saturating_sub(acked) < rcfg.ack_window {
+            match log.read_after(sent) {
+                LogRead::Batch(batch) => {
+                    let frame = encode_delta_batch(batch.seq, &batch.entries);
+                    if !matches!(write_full(stream, &frame, &shared.stop), Ok(true)) {
+                        return;
+                    }
+                    sent = batch.seq;
+                    shared.stats.delta_batches_sent.fetch_add(1, Ordering::Relaxed);
+                }
+                LogRead::CaughtUp => break,
+                LogRead::Stale => {
+                    // Fell behind retention (or resumed with a cursor
+                    // from a previous primary incarnation): resync.
+                    if !send_full_sync(stream, shared, &log, &mut sent, &mut acked) {
+                        return;
+                    }
+                }
+            }
+        }
+        // One read-timeout's worth of waiting for an ack — also the
+        // idle tick when there is nothing to ship.
+        match try_read_frame(stream, &shared.stop) {
+            Ok(None) => {}
+            Ok(Some((opcode, payload))) => match Request::decode(opcode, &payload) {
+                Ok(Request::ReplicaAck { cursor }) => {
+                    // Clamp to what was actually sent: a buggy follower
+                    // cannot push the window past reality.
+                    acked = acked.max(cursor.min(sent));
+                }
+                _ => {
+                    let err = Response::Error {
+                        code: ErrorCode::Malformed,
+                        message: "only ReplicaAck frames are valid on a subscription stream"
+                            .into(),
+                    };
+                    let _ = write_full(stream, &err.encode(), &shared.stop);
+                    return;
+                }
+            },
+            Err(_) => return,
+        }
+    }
 }
 
 fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
@@ -300,6 +639,22 @@ fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
         shared.stats.frames.fetch_add(1, Ordering::Relaxed);
 
         let resp = match Request::decode(opcode, &payload) {
+            Ok(Request::Subscribe { epoch, cursor }) => {
+                // The connection becomes a replication stream and never
+                // returns to request/response serving.
+                if let Some(log) = shared.log.clone() {
+                    serve_subscriber(&mut stream, &shared, log, epoch, cursor);
+                    break;
+                }
+                Response::Error {
+                    code: ErrorCode::Unsupported,
+                    message: "server is not a replication primary".into(),
+                }
+            }
+            Ok(Request::ReplicaAck { .. }) => Response::Error {
+                code: ErrorCode::Malformed,
+                message: "ReplicaAck outside an active subscription".into(),
+            },
             Ok(req) => {
                 if let Request::InsertBatch { words, .. } = &req {
                     conn_words += words.len() as u64;
@@ -321,6 +676,22 @@ fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
 
 fn dispatch(req: Request, shared: &Shared) -> Response {
     let registry = &shared.registry;
+    // A read-only replica rejects every mutating RPC with a typed frame
+    // before touching the registry; queries pass through untouched.
+    if shared.cfg.read_only
+        && matches!(
+            req,
+            Request::InsertBatch { .. }
+                | Request::MergeSketch { .. }
+                | Request::Evict(_)
+                | Request::Snapshot
+        )
+    {
+        return Response::Error {
+            code: ErrorCode::ReadOnly,
+            message: "replica is read-only; send writes to the primary".into(),
+        };
+    }
     match req {
         Request::Ping => Response::Pong,
         Request::InsertBatch { key, words } => {
@@ -364,6 +735,9 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
                     let budget = usize::try_from(max_memory_bytes).unwrap_or(usize::MAX);
                     registry.evict_to_budget(budget) as u64
                 }
+                EvictPolicy::IdleWall { max_age_secs } => {
+                    registry.evict_idle_wall(Duration::from_secs(max_age_secs)) as u64
+                }
             };
             Response::Evicted { keys }
         }
@@ -378,6 +752,12 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
                 code: ErrorCode::Unsupported,
                 message: "server started without a snapshot path".into(),
             },
+        },
+        // Handled at the connection layer (serve_connection) before
+        // dispatch; unreachable in practice, answered typed regardless.
+        Request::Subscribe { .. } | Request::ReplicaAck { .. } => Response::Error {
+            code: ErrorCode::Malformed,
+            message: "replication frames are handled at the connection layer".into(),
         },
     }
 }

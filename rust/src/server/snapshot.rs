@@ -2,23 +2,32 @@
 //! or from an on-disk file, so a restarted server resumes with identical
 //! estimates and sketches can be shipped across nodes.
 //!
-//! # File format
+//! # File format (v2, `HLLSNAP2`)
 //!
 //! All integers little-endian:
 //!
 //! | offset | size | field                                        |
 //! |--------|------|----------------------------------------------|
-//! | 0      | 8    | magic `b"HLLSNAP1"` ([`SNAPSHOT_MAGIC`])     |
-//! | 8      | 1    | snapshot version ([`SNAPSHOT_VERSION`], 1)   |
+//! | 0      | 8    | magic `b"HLLSNAP2"` ([`SNAPSHOT_MAGIC`])     |
+//! | 8      | 1    | snapshot version ([`SNAPSHOT_VERSION`], 2)   |
 //! | 9      | 8    | key count, u64                               |
 //! | 17     | 8    | FNV-1a 64 checksum of the body               |
-//! | 25     | ...  | body: key count × record                     |
+//! | 25     | 1    | global-record flag (0 = absent, 1 = present) |
+//! | 26     | ...  | if flag: global record `len u32 · len bytes` |
+//! | …      | ...  | body continues: key count × record           |
 //!
-//! Each record is `key u64 · len u32 · len bytes` where the bytes are one
-//! sketch in the seed-carrying wire format v2 (see
-//! [`crate::hll::sketch`]). The checksum covers the whole body, so any
-//! flipped byte — in a key, a length, or a register — fails restore with
-//! [`SnapshotError::ChecksumMismatch`] before a single sketch is decoded.
+//! Each per-key record is `key u64 · len u32 · len bytes` where the bytes
+//! are one sketch in the seed-carrying wire format v2 (see
+//! [`crate::hll::sketch`]); the global record is the registry's
+//! all-keys union sketch in the same encoding (written whenever the
+//! registry tracks a non-empty global union). The checksum covers the
+//! whole body — flag, global record and key records — so any flipped
+//! byte fails restore with [`SnapshotError::ChecksumMismatch`] before a
+//! single sketch is decoded.
+//!
+//! Version 1 files (`HLLSNAP1`, no flag byte, records begin at offset
+//! 25) remain fully readable: every read path dispatches on the magic.
+//! The writer always emits v2.
 //!
 //! Writes go to a uniquely named `<path>.<pid>.<seq>.tmp` sibling and
 //! are atomically renamed into place, so a crash mid-snapshot leaves
@@ -29,13 +38,11 @@
 //! # What a restore guarantees
 //!
 //! Every *live* key restores with a bit-identical register file, so all
-//! per-key estimates survive a restart exactly. The optional global
-//! union sketch is not persisted as its own record: after restore it is
-//! rebuilt as the union of the live keys, so if keys were evicted
-//! before the snapshot, a restored `GlobalEstimate` no longer counts
-//! the evicted keys' words (the live server's union would have).
-//! Persisting the union itself needs a format rev — tracked in
-//! ROADMAP.md.
+//! per-key estimates survive a restart exactly. Because v2 persists the
+//! global union sketch as its own record, `GlobalEstimate` survives
+//! exactly too — including the words of keys evicted *before* the
+//! snapshot, which a rebuilt-from-live-keys union (the v1 behavior,
+//! still what restoring a v1 file yields) would drop.
 
 use std::fs;
 use std::io::{self, Seek, SeekFrom, Write};
@@ -45,10 +52,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::hll::{HllSketch, SketchError};
 use crate::registry::SketchRegistry;
 
-/// Leading magic of every snapshot file.
-pub const SNAPSHOT_MAGIC: [u8; 8] = *b"HLLSNAP1";
+/// Leading magic of every snapshot file the writer emits (format v2).
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"HLLSNAP2";
+/// Magic of legacy v1 files, still accepted by every read path.
+pub const SNAPSHOT_MAGIC_V1: [u8; 8] = *b"HLLSNAP1";
 /// Version byte following the magic.
-pub const SNAPSHOT_VERSION: u8 = 1;
+pub const SNAPSHOT_VERSION: u8 = 2;
+/// Version byte of legacy v1 files.
+pub const SNAPSHOT_VERSION_V1: u8 = 1;
 /// Fixed header length: magic(8) + version(1) + count(8) + checksum(8).
 pub const SNAPSHOT_HEADER_LEN: usize = 25;
 
@@ -166,6 +177,10 @@ pub fn write_snapshot(
         let mut keys = 0u64;
         let mut hash = FNV_OFFSET;
         let mut total = SNAPSHOT_HEADER_LEN as u64;
+        let global = encode_global_section(registry);
+        hash = fnv1a64_update(hash, &global);
+        w.write_all(&global)?;
+        total += global.len() as u64;
         let mut io_err: Option<io::Error> = None;
         registry.for_each_sketch_bytes(|key, bytes| {
             if io_err.is_some() {
@@ -209,38 +224,55 @@ pub fn write_snapshot(
 }
 
 /// Validate a snapshot header's magic and version, returning
-/// `(key count, body checksum)`.
-fn parse_snapshot_header(header: &[u8; SNAPSHOT_HEADER_LEN]) -> Result<(u64, u64), SnapshotError> {
-    if header[0..8] != SNAPSHOT_MAGIC {
+/// `(format version, key count, body checksum)`. Both the current v2
+/// magic and the legacy v1 magic are accepted.
+fn parse_snapshot_header(
+    header: &[u8; SNAPSHOT_HEADER_LEN],
+) -> Result<(u8, u64, u64), SnapshotError> {
+    let version = if header[0..8] == SNAPSHOT_MAGIC {
+        if header[8] != SNAPSHOT_VERSION {
+            return Err(SnapshotError::BadVersion(header[8]));
+        }
+        SNAPSHOT_VERSION
+    } else if header[0..8] == SNAPSHOT_MAGIC_V1 {
+        if header[8] != SNAPSHOT_VERSION_V1 {
+            return Err(SnapshotError::BadVersion(header[8]));
+        }
+        SNAPSHOT_VERSION_V1
+    } else {
         let mut magic = [0u8; 8];
         magic.copy_from_slice(&header[0..8]);
         return Err(SnapshotError::BadMagic(magic));
-    }
-    if header[8] != SNAPSHOT_VERSION {
-        return Err(SnapshotError::BadVersion(header[8]));
-    }
+    };
     let count = u64::from_le_bytes(header[9..17].try_into().unwrap());
     let checksum = u64::from_le_bytes(header[17..25].try_into().unwrap());
-    Ok((count, checksum))
+    Ok((version, count, checksum))
 }
 
-/// Read and fully validate a snapshot file, returning decoded
-/// `(key, sketch)` pairs. Magic, version, count, checksum and every
-/// sketch record are checked; any damage is a typed error, never a panic.
-///
-/// Holds the whole file plus every decoded sketch in memory —
-/// convenient for tests and small registries; [`restore_registry`]
-/// streams record-by-record instead and is what the server's restart
-/// path should use at scale.
-pub fn read_snapshot(path: &Path) -> Result<Vec<(u64, HllSketch)>, SnapshotError> {
-    let data = fs::read(path)?;
+/// Everything a snapshot image holds, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotContents {
+    /// Format version the image was encoded with (1 or 2).
+    pub version: u8,
+    /// The global union record (v2 only, and only when the source
+    /// registry tracked a non-empty union).
+    pub global: Option<HllSketch>,
+    /// Every `(key, sketch)` record.
+    pub entries: Vec<(u64, HllSketch)>,
+}
+
+/// Decode and fully validate a snapshot image held in memory (a read
+/// file, or a replication `FULL_SYNC` body). Magic, version, count,
+/// checksum and every sketch record are checked; any damage is a typed
+/// error, never a panic.
+pub fn decode_snapshot_bytes(data: &[u8]) -> Result<SnapshotContents, SnapshotError> {
     if data.len() < SNAPSHOT_HEADER_LEN {
         return Err(SnapshotError::Corrupt(format!(
-            "file is {} bytes, header needs {SNAPSHOT_HEADER_LEN}",
+            "image is {} bytes, header needs {SNAPSHOT_HEADER_LEN}",
             data.len()
         )));
     }
-    let (count, expected) =
+    let (version, count, expected) =
         parse_snapshot_header(data[..SNAPSHOT_HEADER_LEN].try_into().unwrap())?;
     let body = &data[SNAPSHOT_HEADER_LEN..];
     let actual = fnv1a64(body);
@@ -248,8 +280,42 @@ pub fn read_snapshot(path: &Path) -> Result<Vec<(u64, HllSketch)>, SnapshotError
         return Err(SnapshotError::ChecksumMismatch { expected, actual });
     }
 
-    let mut out = Vec::with_capacity(count.min(1 << 20) as usize);
     let mut pos = 0usize;
+    let mut global = None;
+    if version >= SNAPSHOT_VERSION {
+        if body.is_empty() {
+            return Err(SnapshotError::Corrupt("global-record flag missing".into()));
+        }
+        let flag = body[0];
+        pos = 1;
+        match flag {
+            0 => {}
+            1 => {
+                if body.len() - pos < 4 {
+                    return Err(SnapshotError::Corrupt(
+                        "global record length truncated".into(),
+                    ));
+                }
+                let len =
+                    u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap()) as usize;
+                pos += 4;
+                if body.len() - pos < len {
+                    return Err(SnapshotError::Corrupt(format!(
+                        "global record declares {len} sketch bytes, {} remain",
+                        body.len() - pos
+                    )));
+                }
+                global = Some(HllSketch::from_bytes(&body[pos..pos + len])?);
+                pos += len;
+            }
+            other => {
+                return Err(SnapshotError::Corrupt(format!(
+                    "bad global-record flag {other}"
+                )))
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(count.min(1 << 20) as usize);
     for i in 0..count {
         if body.len() - pos < 12 {
             return Err(SnapshotError::Corrupt(format!(
@@ -275,7 +341,93 @@ pub fn read_snapshot(path: &Path) -> Result<Vec<(u64, HllSketch)>, SnapshotError
             body.len() - pos
         )));
     }
-    Ok(out)
+    Ok(SnapshotContents { version, global, entries: out })
+}
+
+/// Read and fully validate a snapshot file, returning decoded
+/// `(key, sketch)` pairs (the global record, if any, is dropped — use
+/// [`read_snapshot_contents`] to keep it).
+///
+/// Holds the whole file plus every decoded sketch in memory —
+/// convenient for tests and small registries; [`restore_registry`]
+/// streams record-by-record instead and is what the server's restart
+/// path should use at scale.
+pub fn read_snapshot(path: &Path) -> Result<Vec<(u64, HllSketch)>, SnapshotError> {
+    Ok(decode_snapshot_bytes(&fs::read(path)?)?.entries)
+}
+
+/// As [`read_snapshot`], returning the full [`SnapshotContents`]
+/// including the v2 global-union record.
+pub fn read_snapshot_contents(path: &Path) -> Result<SnapshotContents, SnapshotError> {
+    decode_snapshot_bytes(&fs::read(path)?)
+}
+
+/// Encode the v2 global-record section (flag byte, plus `len · bytes`
+/// when present) — the one shared definition both the streaming file
+/// writer and the in-memory image builder emit. The union including
+/// evicted keys' words is persisted whenever it is non-empty; an
+/// all-zero union carries nothing and is elided, keeping
+/// empty-registry snapshots at a few dozen bytes instead of a full
+/// register file.
+fn encode_global_section(registry: &SketchRegistry<u64>) -> Vec<u8> {
+    match registry
+        .global_sketch()
+        .filter(|g| g.zero_registers() < g.config().m())
+    {
+        Some(g) => {
+            let bytes = g.to_bytes();
+            let mut out = Vec::with_capacity(5 + bytes.len());
+            out.push(1u8);
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&bytes);
+            out
+        }
+        None => vec![0u8],
+    }
+}
+
+/// Build a complete v2 snapshot image in memory — the body of a
+/// replication `FULL_SYNC` frame. Deliberately non-streaming (the frame
+/// has to be one in-memory payload anyway); the file writer
+/// [`write_snapshot`] remains the streaming path for at-scale persistence.
+pub fn snapshot_to_vec(registry: &SketchRegistry<u64>) -> Vec<u8> {
+    let mut body = encode_global_section(registry);
+    let mut keys = 0u64;
+    registry.for_each_sketch_bytes(|key, bytes| {
+        body.extend_from_slice(&key.to_le_bytes());
+        body.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        body.extend_from_slice(&bytes);
+        keys += 1;
+    });
+    let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + body.len());
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.push(SNAPSHOT_VERSION);
+    out.extend_from_slice(&keys.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Restore an in-memory snapshot image into `registry`: the global
+/// record (if present) raises the global union, then every key record
+/// max-merges in. Returns the number of key records applied. The image
+/// is fully validated first; the first config/seed mismatch aborts with
+/// its typed error (earlier records stay applied — max-merge makes a
+/// re-run after fixing the registry safe).
+pub fn restore_from_bytes(
+    registry: &SketchRegistry<u64>,
+    data: &[u8],
+) -> Result<usize, SnapshotError> {
+    let contents = decode_snapshot_bytes(data)?;
+    if let Some(global) = &contents.global {
+        registry.merge_global(global)?;
+    }
+    let mut applied = 0;
+    for (key, sketch) in contents.entries {
+        registry.merge_sketch(key, sketch)?;
+        applied += 1;
+    }
+    Ok(applied)
 }
 
 /// Restore a snapshot file into `registry` (max-merge over whatever is
@@ -308,7 +460,7 @@ pub fn restore_registry(
             SnapshotError::Io(e)
         }
     })?;
-    let (count, expected) = parse_snapshot_header(&header)?;
+    let (version, count, expected) = parse_snapshot_header(&header)?;
     let mut hash = FNV_OFFSET;
     let mut body_len = 0u64;
     let mut chunk = [0u8; 64 * 1024];
@@ -330,6 +482,37 @@ pub fn restore_registry(
         .map_err(|_| short_file("file shrank between checksum and restore passes"))?;
     let mut consumed = 0u64;
     let mut applied = 0usize;
+    if version >= SNAPSHOT_VERSION {
+        let mut flag = [0u8; 1];
+        r.read_exact(&mut flag)
+            .map_err(|_| short_file("global-record flag missing"))?;
+        consumed += 1;
+        match flag[0] {
+            0 => {}
+            1 => {
+                let mut len_bytes = [0u8; 4];
+                r.read_exact(&mut len_bytes)
+                    .map_err(|_| short_file("global record length truncated"))?;
+                let len = u32::from_le_bytes(len_bytes) as usize;
+                consumed += 4 + len as u64;
+                if consumed > body_len {
+                    return Err(SnapshotError::Corrupt(format!(
+                        "global record declares {len} sketch bytes, overrunning the body"
+                    )));
+                }
+                let mut global_bytes = vec![0u8; len];
+                r.read_exact(&mut global_bytes)
+                    .map_err(|_| short_file("global record truncated"))?;
+                let global = HllSketch::from_bytes(&global_bytes)?;
+                registry.merge_global(&global)?;
+            }
+            other => {
+                return Err(SnapshotError::Corrupt(format!(
+                    "bad global-record flag {other}"
+                )))
+            }
+        }
+    }
     for i in 0..count {
         let mut rec = [0u8; 12];
         r.read_exact(&mut rec)
@@ -416,9 +599,134 @@ mod tests {
         let path = temp_path("empty");
         let summary = write_snapshot(&reg, &path).unwrap();
         assert_eq!(summary.keys, 0);
-        assert_eq!(summary.bytes as usize, SNAPSHOT_HEADER_LEN);
-        let entries = read_snapshot(&path).unwrap();
-        assert!(entries.is_empty());
+        // v2 header plus the lone global-record flag byte (the empty
+        // union is elided rather than serialized as 64 KiB of zeros).
+        assert_eq!(summary.bytes as usize, SNAPSHOT_HEADER_LEN + 1);
+        let contents = read_snapshot_contents(&path).unwrap();
+        assert_eq!(contents.version, SNAPSHOT_VERSION);
+        assert!(contents.global.is_none());
+        assert!(contents.entries.is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    /// Build a legacy v1 snapshot image (no global record) from a live
+    /// registry — what a pre-v2 server would have written.
+    fn v1_snapshot_bytes(reg: &SketchRegistry<u64>) -> Vec<u8> {
+        let mut body = Vec::new();
+        let mut keys = 0u64;
+        reg.for_each_sketch_bytes(|key, bytes| {
+            body.extend_from_slice(&key.to_le_bytes());
+            body.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            body.extend_from_slice(&bytes);
+            keys += 1;
+        });
+        let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + body.len());
+        out.extend_from_slice(&SNAPSHOT_MAGIC_V1);
+        out.push(SNAPSHOT_VERSION_V1);
+        out.extend_from_slice(&keys.to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    #[test]
+    fn v1_snapshot_still_restores_under_the_v2_reader() {
+        let reg = populated_registry();
+        let path = temp_path("v1compat");
+        fs::write(&path, v1_snapshot_bytes(&reg)).unwrap();
+
+        // Both the in-memory decoder and the streaming restorer accept it.
+        let contents = read_snapshot_contents(&path).unwrap();
+        assert_eq!(contents.version, SNAPSHOT_VERSION_V1);
+        assert!(contents.global.is_none());
+        assert_eq!(contents.entries.len(), 30);
+
+        let restored = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert_eq!(restore_registry(&restored, &path).unwrap(), 30);
+        for (key, est) in reg.estimates() {
+            assert_eq!(restored.estimate(&key), Some(est), "key {key}");
+        }
+        // v1 carries no union record: the restored global is rebuilt
+        // from live keys (the documented v1 behavior).
+        assert_eq!(restored.merge_all(), reg.merge_all());
+        // A v1 magic with a v2 version byte (and vice versa) is rejected.
+        let mut crossed = v1_snapshot_bytes(&reg);
+        crossed[8] = SNAPSHOT_VERSION;
+        fs::write(&path, &crossed).unwrap();
+        assert!(matches!(
+            read_snapshot(&path),
+            Err(SnapshotError::BadVersion(_))
+        ));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v2_global_record_preserves_pre_snapshot_evictions() {
+        let reg = populated_registry();
+        let live_global = reg.global_estimate().unwrap();
+        // Evict a third of the keys *before* snapshotting: their words
+        // stay in the union sketch but leave the live key set.
+        for key in 0u64..10 {
+            reg.evict(&key);
+        }
+        assert_eq!(reg.global_estimate(), Some(live_global));
+        assert!(reg.merge_all().estimate() < live_global);
+
+        let path = temp_path("v2global");
+        write_snapshot(&reg, &path).unwrap();
+        let contents = read_snapshot_contents(&path).unwrap();
+        assert_eq!(contents.version, SNAPSHOT_VERSION);
+        assert_eq!(contents.entries.len(), 20);
+        assert_eq!(contents.global.as_ref().unwrap().estimate(), live_global);
+
+        // Restore: GlobalEstimate survives the restart exactly — the
+        // caveat the v1 format documented is gone.
+        let restored = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert_eq!(restore_registry(&restored, &path).unwrap(), 20);
+        assert_eq!(restored.global_estimate(), Some(live_global));
+        assert_eq!(restored.merge_all(), reg.merge_all());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_image_roundtrips_like_the_file_path() {
+        let reg = populated_registry();
+        let image = snapshot_to_vec(&reg);
+        // The in-memory image and the file writer produce byte-identical
+        // snapshots of the same registry state.
+        let path = temp_path("image");
+        write_snapshot(&reg, &path).unwrap();
+        assert_eq!(image, fs::read(&path).unwrap());
+
+        let restored = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        assert_eq!(restore_from_bytes(&restored, &image).unwrap(), 30);
+        assert_eq!(restored.merge_all(), reg.merge_all());
+        assert_eq!(restored.global_estimate(), reg.global_estimate());
+
+        // Damage is typed, never a panic.
+        let mut bad = image.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(matches!(
+            restore_from_bytes(&restored, &bad),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        assert!(matches!(
+            decode_snapshot_bytes(&image[..10]),
+            Err(SnapshotError::Corrupt(_))
+        ));
         let _ = fs::remove_file(&path);
     }
 

@@ -7,13 +7,14 @@
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use hll_fpga::hll::{HllConfig, HllSketch};
 use hll_fpga::net::KeyedFlowGen;
-use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::registry::{RegistryConfig, SketchRegistry, WallClock};
 use hll_fpga::server::{
     protocol, read_snapshot, restore_registry, ClientError, ErrorCode, EvictPolicy,
-    Response, ServerConfig, SketchClient, SketchServer, SnapshotError,
+    Response, ServerConfig, SketchClient, SketchServer, SnapshotError, SweeperConfig,
 };
 
 fn start_server(cfg: ServerConfig) -> (SketchServer, Arc<SketchRegistry<u64>>) {
@@ -120,7 +121,7 @@ fn pipelined_and_concurrent_clients_match_serial() {
 #[test]
 fn snapshot_restart_restore_serves_identical_estimates() {
     let path = temp_path("restart");
-    let cfg = ServerConfig { snapshot_path: Some(path.clone()) };
+    let cfg = ServerConfig { snapshot_path: Some(path.clone()), ..ServerConfig::default() };
     let (server, registry) = start_server(cfg);
     let batches = keyed_batches(150, 25_000, 0xA11CE);
 
@@ -213,6 +214,10 @@ fn evict_policies_over_rpc() {
     assert_eq!(client.evict(EvictPolicy::Key(3)).unwrap(), 0);
     assert_eq!(client.estimate(3).unwrap(), None);
 
+    // Wall-clock TTL over RPC: with a System-backed clock every key was
+    // touched within the last hour, so nothing ages out.
+    assert_eq!(client.evict(EvictPolicy::IdleWall { max_age_secs: 3_600 }).unwrap(), 0);
+
     // Touch one key, then sweep everything older than the current tick:
     // keys 0..20 were touched at ticks 1..=20, key 7 again at tick 21,
     // so a max_age of 0 (cutoff = now) keeps only key 7.
@@ -255,6 +260,62 @@ fn configured_budget_is_enforced_during_ingest() {
         "server never enforced the configured budget ({} keys live)",
         registry.len()
     );
+    server.shutdown();
+}
+
+#[test]
+fn background_sweeper_evicts_idle_keys_on_a_timer() {
+    // A manual wall clock ages keys without sleeping; the sweeper thread
+    // notices on its next pass — no ingest traffic, no Evict RPC.
+    let (wall, clock) = WallClock::manual(1_000);
+    let registry = Arc::new(
+        SketchRegistry::with_wall_clock(
+            RegistryConfig { shards: 8, ..RegistryConfig::default() },
+            wall,
+        )
+        .unwrap(),
+    );
+    let server = SketchServer::start(
+        "127.0.0.1:0",
+        registry.clone(),
+        ServerConfig {
+            sweeper: Some(SweeperConfig {
+                interval: Duration::from_millis(20),
+                idle_max_age: Some(Duration::from_secs(60)),
+                ..SweeperConfig::default()
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+    for key in 0u64..10 {
+        client.insert_batch(key, &[key as u32, key as u32 + 1]).unwrap();
+    }
+    assert_eq!(registry.len(), 10);
+
+    // Half an hour passes; one key stays hot.
+    clock.store(1_000 + 1_800, std::sync::atomic::Ordering::Relaxed);
+    client.insert_batch(99, &[7, 8, 9]).unwrap();
+
+    // The sweeper (20 ms interval, 60 s TTL) must age out the idle 10
+    // well within the deadline.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while registry.len() > 1 {
+        assert!(
+            Instant::now() < deadline,
+            "sweeper never evicted idle keys ({} live)",
+            registry.len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(client.estimate(99).unwrap().is_some(), "hot key must survive");
+    for key in 0u64..10 {
+        assert_eq!(client.estimate(key).unwrap(), None, "idle key {key} must be gone");
+    }
+    let stats = server.stats();
+    assert!(stats.sweeps > 0);
+    assert!(stats.keys_swept >= 10);
     server.shutdown();
 }
 
@@ -330,7 +391,7 @@ fn hostile_bytes_get_typed_errors_and_server_survives() {
 #[test]
 fn damaged_snapshot_files_are_typed_errors() {
     let path = temp_path("damaged");
-    let cfg = ServerConfig { snapshot_path: Some(path.clone()) };
+    let cfg = ServerConfig { snapshot_path: Some(path.clone()), ..ServerConfig::default() };
     let (server, _registry) = start_server(cfg);
     let mut client = SketchClient::connect(server.local_addr()).unwrap();
     client.insert_batch(1, &(0..1000u32).collect::<Vec<_>>()).unwrap();
