@@ -47,24 +47,15 @@ fn main() {
     producer.pipeline_insert(&batches[..batches.len() / 2]).unwrap();
 
     // --- Kill the follower mid-stream; remember its cursor.
-    // Drain barrier: force-seal dirty state (looping past in-flight
-    // background captures) and wait for the follower to apply it all.
+    // Drain barrier: force-seal dirty state (`seal_all` loops past
+    // in-flight background captures) and wait for the follower to
+    // apply it all.
     let drain = |f: &FollowerServer| {
+        let head = log.seal_all(&primary_reg, Duration::from_secs(30));
         let deadline = Instant::now() + Duration::from_secs(30);
-        loop {
-            log.capture(&primary_reg, usize::MAX);
-            let latest = log.latest_seq();
-            while f.cursor() < latest {
-                assert!(Instant::now() < deadline, "follower never caught up");
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            if primary_reg.dirty_keys() == 0
-                && log.captures_in_flight() == 0
-                && log.latest_seq() == latest
-            {
-                return;
-            }
-            assert!(Instant::now() < deadline, "replication never fully drained");
+        while f.cursor() < head {
+            assert!(Instant::now() < deadline, "follower never caught up");
+            std::thread::sleep(Duration::from_millis(2));
         }
     };
     drain(&follower);

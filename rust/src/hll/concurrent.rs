@@ -81,6 +81,15 @@ impl ConcurrentHllSketch {
         Self::cas_max(&self.regs[idx], rank);
     }
 
+    /// Raise one register to at least `rank` (CAS-max) — the follower's
+    /// global-union apply path for replicated register diffs. Same
+    /// monotone semantics as a word insert that hashed to this bucket.
+    #[inline]
+    pub fn update_register(&self, idx: usize, rank: u8) {
+        debug_assert!(rank <= self.cfg.max_rank());
+        Self::cas_max(&self.regs[idx], rank);
+    }
+
     /// Insert a 32-bit stream word (the paper's stream element type).
     #[inline]
     pub fn insert_u32(&self, v: u32) {

@@ -14,5 +14,8 @@ pub use concurrent::ConcurrentHllSketch;
 pub use config::{ConfigError, HashKind, HllConfig};
 pub use estimate::{estimate, linear_counting, Correction, EstimateBreakdown};
 pub use setops::{intersection_cardinality, jaccard, union_cardinality};
-pub use sketch::{HllSketch, SketchError, WIRE_HEADER_LEN, WIRE_VERSION};
-pub use sparse::{AdaptiveSketch, SparseHll};
+pub use sketch::{
+    decode_register_diff, diff_wire_len, encode_register_diff, HllSketch, SketchError,
+    DIFF_WIRE_VERSION, WIRE_HEADER_LEN, WIRE_VERSION,
+};
+pub use sparse::{AdaptiveSketch, InsertOutcome, SparseHll};

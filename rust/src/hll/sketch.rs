@@ -108,6 +108,17 @@ impl HllSketch {
     /// Insert a pre-computed H-bit hash (Algorithm 1 line 9).
     #[inline]
     pub fn insert_hash(&mut self, hash: u64) {
+        self.insert_hash_changed(hash);
+    }
+
+    /// As [`HllSketch::insert_hash`], reporting the register it raised:
+    /// `Some(idx)` when the insert set a new max for bucket `idx`,
+    /// `None` when the sketch is unchanged. The replication primary's
+    /// dirty tracking records these indices so a delta capture can ship
+    /// only the registers that moved since the last drain
+    /// ([`encode_register_diff`]) instead of the full register file.
+    #[inline]
+    pub fn insert_hash_changed(&mut self, hash: u64) -> Option<u32> {
         debug_assert!(
             self.cfg.hash() != HashKind::H32 || hash <= u32::MAX as u64,
             "32-bit config fed a hash wider than 32 bits"
@@ -115,6 +126,9 @@ impl HllSketch {
         let (idx, r) = self.index_and_rank(hash);
         if r > self.regs[idx] {
             self.regs[idx] = r;
+            Some(idx as u32)
+        } else {
+            None
         }
     }
 
@@ -296,6 +310,135 @@ impl HllSketch {
             .with_seed(seed);
         Self::from_registers(cfg, data[WIRE_HEADER_LEN..].to_vec())
     }
+
+    /// Apply a decoded register diff: `M[idx] = max(M[idx], val)` for
+    /// every entry — the follower-side inverse of
+    /// [`encode_register_diff`]. Bucket-wise max, so replaying or
+    /// reordering diffs is harmless, exactly like full-sketch merges.
+    /// The caller must have checked config compatibility (the decode
+    /// path returns the diff's [`HllConfig`] for that purpose).
+    pub fn apply_register_diff(&mut self, entries: &[(u32, u8)]) {
+        for &(idx, val) in entries {
+            self.update_register(idx as usize, val);
+        }
+    }
+}
+
+/// Wire version byte leading a serialized register diff (a format of its
+/// own, versioned independently of the full-sketch format).
+pub const DIFF_WIRE_VERSION: u8 = 1;
+
+/// Exact serialized length of a register diff with `n` entries: the
+/// config header (same 11-byte layout as the full-sketch format), a
+/// 4-byte entry count, then 5 bytes per entry.
+pub fn diff_wire_len(n: usize) -> usize {
+    WIRE_HEADER_LEN + 4 + 5 * n
+}
+
+/// Serialize a sparse register diff — the `(bucket index, new value)`
+/// pairs of registers that moved since the last replication capture:
+///
+/// | offset | size | field                                      |
+/// |--------|------|--------------------------------------------|
+/// | 0      | 1    | diff version ([`DIFF_WIRE_VERSION`])       |
+/// | 1      | 1    | precision `p`                              |
+/// | 2      | 1    | hash width in bits (32 or 64)              |
+/// | 3      | 8    | hash seed, little-endian u64               |
+/// | 11     | 4    | entry count, little-endian u32             |
+/// | 15     | 5n   | entries: `idx` u32 LE · `val` u8           |
+///
+/// Entries must be sorted by strictly increasing index with values in
+/// `1..=max_rank` — the canonical form [`decode_register_diff`]
+/// enforces, so one encoding exists per diff and a hostile peer cannot
+/// smuggle duplicates past the decoder. The config header makes a diff
+/// self-describing the same way wire-v2 sketches are: a diff built
+/// against a differently-seeded registry fails config comparison
+/// instead of silently max-merging incompatible registers.
+pub fn encode_register_diff(cfg: &HllConfig, entries: &[(u32, u8)]) -> Vec<u8> {
+    debug_assert!(
+        entries.windows(2).all(|w| w[0].0 < w[1].0),
+        "diff entries must be sorted by strictly increasing index"
+    );
+    debug_assert!(
+        entries.iter().all(|&(idx, val)| {
+            (idx as usize) < cfg.m() && val >= 1 && val <= cfg.max_rank()
+        }),
+        "diff entries must be in-range for the config"
+    );
+    let mut out = Vec::with_capacity(diff_wire_len(entries.len()));
+    out.push(DIFF_WIRE_VERSION);
+    out.push(cfg.p());
+    out.push(cfg.hash().bits() as u8);
+    out.extend_from_slice(&cfg.seed().to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for &(idx, val) in entries {
+        out.extend_from_slice(&idx.to_le_bytes());
+        out.push(val);
+    }
+    out
+}
+
+/// Inverse of [`encode_register_diff`]. Strict: the declared entry
+/// count must match the payload exactly (checked before any allocation,
+/// so a hostile count cannot drive one), indices must be strictly
+/// increasing and in `0..m`, values in `1..=max_rank`.
+pub fn decode_register_diff(data: &[u8]) -> Result<(HllConfig, Vec<(u32, u8)>), SketchError> {
+    if data.len() < WIRE_HEADER_LEN + 4 {
+        return Err(SketchError::Malformed("truncated register-diff header".into()));
+    }
+    if data[0] != DIFF_WIRE_VERSION {
+        return Err(SketchError::Malformed(format!(
+            "unsupported register-diff version {} (expected {DIFF_WIRE_VERSION})",
+            data[0]
+        )));
+    }
+    let p = data[1];
+    let hash = match data[2] {
+        32 => HashKind::H32,
+        64 => HashKind::H64,
+        other => return Err(SketchError::Malformed(format!("bad hash width {other}"))),
+    };
+    let seed = u64::from_le_bytes(data[3..WIRE_HEADER_LEN].try_into().unwrap());
+    let cfg = HllConfig::new(p, hash)
+        .map_err(|e| SketchError::Malformed(e.to_string()))?
+        .with_seed(seed);
+    let count =
+        u32::from_le_bytes(data[WIRE_HEADER_LEN..WIRE_HEADER_LEN + 4].try_into().unwrap());
+    let body = &data[WIRE_HEADER_LEN + 4..];
+    // Compare in u64: `count * 5` could wrap a hostile count on a 32-bit
+    // target into a small number that passes the check.
+    if body.len() as u64 != count as u64 * 5 {
+        return Err(SketchError::Malformed(format!(
+            "register diff declares {count} entries but carries {} body bytes",
+            body.len()
+        )));
+    }
+    let mut entries = Vec::with_capacity(count as usize);
+    let mut prev: Option<u32> = None;
+    for chunk in body.chunks_exact(5) {
+        let idx = u32::from_le_bytes(chunk[..4].try_into().unwrap());
+        let val = chunk[4];
+        if (idx as usize) >= cfg.m() {
+            return Err(SketchError::Malformed(format!(
+                "diff index {idx} out of range for m={}",
+                cfg.m()
+            )));
+        }
+        if val == 0 || val > cfg.max_rank() {
+            return Err(SketchError::Malformed(format!(
+                "diff value {val} outside 1..={}",
+                cfg.max_rank()
+            )));
+        }
+        if prev.is_some_and(|p| idx <= p) {
+            return Err(SketchError::Malformed(format!(
+                "diff indices not strictly increasing at {idx}"
+            )));
+        }
+        prev = Some(idx);
+        entries.push((idx, val));
+    }
+    Ok((cfg, entries))
 }
 
 #[cfg(test)]
@@ -507,6 +650,94 @@ mod tests {
         bytes.extend(vec![0u8; 16]); // registers for p=4
         bytes[WIRE_HEADER_LEN] = 62; // max rank for p=4,H=64 is 61
         assert!(HllSketch::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn insert_hash_changed_reports_raised_register() {
+        let mut s = HllSketch::new(cfg(16, HashKind::H64));
+        // 0xABCD_0000_0000_0001 → idx 0xABCD, rank 48 (see the split test).
+        let h = 0xABCD_0000_0000_0001u64;
+        assert_eq!(s.insert_hash_changed(h), Some(0xABCD));
+        // Re-inserting the same hash changes nothing.
+        assert_eq!(s.insert_hash_changed(h), None);
+        // A lower rank into the same bucket changes nothing either.
+        assert_eq!(s.insert_hash_changed(0xABCD_8000_0000_0000), None);
+        // A higher rank raises the same bucket again.
+        assert_eq!(s.insert_hash_changed(0xABCD_0000_0000_0000), Some(0xABCD));
+    }
+
+    #[test]
+    fn register_diff_roundtrip_and_apply() {
+        let c = cfg(12, HashKind::H64).with_seed(0xFEED);
+        let entries: Vec<(u32, u8)> = vec![(0, 3), (17, 1), (100, 49), (4095, 7)];
+        let bytes = encode_register_diff(&c, &entries);
+        assert_eq!(bytes.len(), diff_wire_len(entries.len()));
+        let (got_cfg, got) = decode_register_diff(&bytes).unwrap();
+        assert_eq!(got_cfg, c);
+        assert_eq!(got, entries);
+
+        // Applying the diff to an empty sketch sets exactly those
+        // registers; applying twice is idempotent (max-merge).
+        let mut s = HllSketch::new(c);
+        s.apply_register_diff(&got);
+        for &(idx, val) in &entries {
+            assert_eq!(s.registers()[idx as usize], val);
+        }
+        assert_eq!(s.registers().iter().filter(|&&r| r != 0).count(), entries.len());
+        let snap = s.clone();
+        s.apply_register_diff(&got);
+        assert_eq!(s, snap);
+
+        // An empty diff is valid and does nothing.
+        let empty = encode_register_diff(&c, &[]);
+        let (_, none) = decode_register_diff(&empty).unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn register_diff_rejects_hostile_bytes() {
+        let c = cfg(8, HashKind::H64);
+        let good = encode_register_diff(&c, &[(1, 2), (9, 5)]);
+        assert!(decode_register_diff(&good).is_ok());
+        // Truncations anywhere are typed errors.
+        for cut in [0usize, 5, WIRE_HEADER_LEN, WIRE_HEADER_LEN + 3, good.len() - 1] {
+            assert!(decode_register_diff(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing bytes rejected.
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(decode_register_diff(&padded).is_err());
+        // A count the payload cannot carry is rejected before allocation.
+        let mut huge = good.clone();
+        huge[WIRE_HEADER_LEN..WIRE_HEADER_LEN + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_register_diff(&huge).is_err());
+        // Bad version / hash width / precision.
+        let mut bad = good.clone();
+        bad[0] = 99;
+        assert!(decode_register_diff(&bad).is_err());
+        let mut bad = good.clone();
+        bad[2] = 48;
+        assert!(decode_register_diff(&bad).is_err());
+        let mut bad = good.clone();
+        bad[1] = 2;
+        assert!(decode_register_diff(&bad).is_err());
+        // Out-of-range index (m=256 at p=8).
+        let mut bad = good.clone();
+        let entry0 = WIRE_HEADER_LEN + 4;
+        bad[entry0..entry0 + 4].copy_from_slice(&256u32.to_le_bytes());
+        assert!(decode_register_diff(&bad).is_err());
+        // Zero and over-max values rejected.
+        let mut bad = good.clone();
+        bad[entry0 + 4] = 0;
+        assert!(decode_register_diff(&bad).is_err());
+        let mut bad = good.clone();
+        bad[entry0 + 4] = c.max_rank() + 1;
+        assert!(decode_register_diff(&bad).is_err());
+        // Duplicate / unsorted indices rejected (canonical form).
+        let mut dup = good.clone();
+        let entry1 = entry0 + 5;
+        dup[entry1..entry1 + 4].copy_from_slice(&1u32.to_le_bytes());
+        assert!(decode_register_diff(&dup).is_err());
     }
 
     #[test]

@@ -32,6 +32,21 @@ pub enum AdaptiveSketch {
     Dense(HllSketch),
 }
 
+/// What one [`AdaptiveSketch::insert_hash_traced`] call did to the
+/// sketch — the per-write feed of the replication primary's
+/// changed-register dirty tracking (see [`crate::registry`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// The sketch is dense and the insert raised register `idx`.
+    DenseChanged(u32),
+    /// The sketch is dense and the insert changed nothing.
+    Unchanged,
+    /// The sketch took the sparse path (including an insert that
+    /// triggered the sparse→dense upgrade): which registers moved is
+    /// not tracked, so a delta capture must resend the whole sketch.
+    Untracked,
+}
+
 /// Sparse HLL state: a hash-map-free sorted vec of encoded entries with a
 /// small unsorted staging buffer (amortized O(1) inserts).
 #[derive(Debug, Clone)]
@@ -199,6 +214,37 @@ impl AdaptiveSketch {
         }
     }
 
+    /// As [`AdaptiveSketch::insert_hash`], reporting what the insert
+    /// did (see [`InsertOutcome`]). Dense sketches report the raised
+    /// register exactly; sparse ones report [`InsertOutcome::Untracked`]
+    /// — their staging buffer cannot tell a fresh max from a duplicate
+    /// without a compaction per insert, and a sparse key's full resend
+    /// is cheap in the only place the distinction matters (replication
+    /// delta capture).
+    pub fn insert_hash_traced(&mut self, hash: u64) -> InsertOutcome {
+        if let AdaptiveSketch::Dense(d) = self {
+            return match d.insert_hash_changed(hash) {
+                Some(idx) => InsertOutcome::DenseChanged(idx),
+                None => InsertOutcome::Unchanged,
+            };
+        }
+        // Sparse path (runs the upgrade check like a plain insert).
+        self.insert_hash(hash);
+        InsertOutcome::Untracked
+    }
+
+    /// Apply a decoded register diff (bucket-wise max) — the follower's
+    /// per-key apply path for `RegisterDiff` delta entries. Diffs are
+    /// only ever produced for dense sketches, so a sparse receiver
+    /// upgrades first (mirroring the primary's in-memory state).
+    pub fn apply_register_diff(&mut self, entries: &[(u32, u8)]) {
+        self.upgrade_to_dense_in_place();
+        match self {
+            AdaptiveSketch::Dense(d) => d.apply_register_diff(entries),
+            AdaptiveSketch::Sparse(_) => unreachable!(),
+        }
+    }
+
     pub fn insert_u32(&mut self, v: u32) {
         // Hash straight from the config — the sparse arm used to build a
         // throwaway dense HllSketch (a 2^p-byte allocation) per insert
@@ -336,6 +382,46 @@ mod tests {
         }
         a.merge_into(b).unwrap();
         assert_eq!(a.into_dense(), all);
+    }
+
+    #[test]
+    fn traced_inserts_match_plain_inserts_and_report_outcomes() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(9);
+        let mut traced = AdaptiveSketch::new(cfg());
+        let mut plain = AdaptiveSketch::new(cfg());
+        let c = *traced.config();
+        let mut saw_untracked = false;
+        let mut saw_dense = false;
+        for _ in 0..60_000 {
+            let h = c.hash_word(rng.next_u32());
+            plain.insert_hash(h);
+            match traced.insert_hash_traced(h) {
+                InsertOutcome::Untracked => saw_untracked = true,
+                InsertOutcome::DenseChanged(idx) => {
+                    saw_dense = true;
+                    // The reported register really holds this hash's rank
+                    // (or better, later).
+                    assert!((idx as usize) < c.m());
+                }
+                InsertOutcome::Unchanged => {}
+            }
+        }
+        assert!(saw_untracked, "sparse phase must report Untracked");
+        assert!(saw_dense, "dense phase must report changed registers");
+        assert!(!traced.is_sparse());
+        assert_eq!(traced.into_dense(), plain.into_dense());
+    }
+
+    #[test]
+    fn adaptive_apply_register_diff_densifies_and_max_merges() {
+        let mut a = AdaptiveSketch::new(cfg());
+        assert!(a.is_sparse());
+        a.apply_register_diff(&[(3, 7), (100, 2)]);
+        assert!(!a.is_sparse(), "diff apply mirrors the primary's dense state");
+        let d = a.into_dense();
+        assert_eq!(d.registers()[3], 7);
+        assert_eq!(d.registers()[100], 2);
+        assert_eq!(d.registers().iter().filter(|&&r| r != 0).count(), 2);
     }
 
     #[test]

@@ -40,9 +40,13 @@
 //! are built on.
 //!
 //! Replication support: with [`SketchRegistry::enable_dirty_tracking`]
-//! on, every mutating touch records its key in a per-shard dirty set;
-//! [`SketchRegistry::drain_dirty_sketches`] swaps those sets out and
-//! exports each dirty key's current sketch — the feed of
+//! on, every mutating touch records *what changed* in a per-shard dirty
+//! map — the exact dense registers an ingest raised, a full-resend
+//! marker for sparse keys and merges, and an eviction tombstone when
+//! any eviction path (explicit, TTL, budget, clear) removes a key.
+//! [`SketchRegistry::drain_dirty_deltas`] swaps those maps out and
+//! resolves each key into a typed [`SketchDelta`] (tombstone / register
+//! diff / full sketch) — the feed of
 //! [`crate::replica::ReplicationLog`]'s delta batches.
 
 pub mod config;
@@ -50,4 +54,4 @@ pub mod registry;
 pub mod shard;
 
 pub use config::{RegistryConfig, RegistryStats, ShardStats, WallClock};
-pub use registry::SketchRegistry;
+pub use registry::{SketchDelta, SketchRegistry};

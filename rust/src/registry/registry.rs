@@ -7,7 +7,37 @@ use std::time::Duration;
 
 use super::config::{RegistryConfig, RegistryStats, WallClock};
 use super::shard::Shard;
-use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllSketch, SketchError};
+use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllConfig, HllSketch, SketchError};
+
+/// One replication delta for one key — what a dirty-tracking drain
+/// ([`SketchRegistry::drain_dirty_deltas`]) resolved that key's changes
+/// into, and the typed entry a `DELTA_BATCH` v3 frame carries on the
+/// wire (see [`crate::server::protocol`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SketchDelta {
+    /// The key was evicted; followers must remove it.
+    Tombstone,
+    /// Only these registers moved since the last drain: a sparse
+    /// register diff in the [`crate::hll::encode_register_diff`] wire
+    /// format. Applying is a per-register max-merge.
+    RegisterDiff(Vec<u8>),
+    /// The key's full sketch in wire format v2 — the fallback for
+    /// sparse-mode keys, merges, re-created keys and diffs past the
+    /// density threshold.
+    Full(Vec<u8>),
+}
+
+impl SketchDelta {
+    /// Serialized payload length of this delta's body (0 for a
+    /// tombstone) — the per-entry size input of the replication log's
+    /// batch-size caps.
+    pub fn body_len(&self) -> usize {
+        match self {
+            SketchDelta::Tombstone => 0,
+            SketchDelta::RegisterDiff(b) | SketchDelta::Full(b) => b.len(),
+        }
+    }
+}
 
 /// A concurrent registry of per-key adaptive HLL sketches.
 ///
@@ -32,10 +62,11 @@ pub struct SketchRegistry<K> {
     /// via [`Self::with_wall_clock`], `SystemTime`-backed by default.
     wall: WallClock,
     /// When set (see [`Self::enable_dirty_tracking`]), every mutating
-    /// touch records its key in a per-shard dirty set, drained by
-    /// [`Self::drain_dirty_sketches`] — the feed of the replication
+    /// touch records *what changed* (raised registers, full-resend
+    /// markers, eviction tombstones) in a per-shard dirty map, drained
+    /// by [`Self::drain_dirty_deltas`] — the feed of the replication
     /// log ([`crate::replica`]). Off by default: a registry nobody
-    /// drains must not accumulate dirty keys forever.
+    /// drains must not accumulate dirty state forever.
     dirty_enabled: Arc<AtomicBool>,
 }
 
@@ -87,10 +118,11 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Turn on per-shard dirty-key tracking (idempotent). A replication
+    /// Turn on per-shard dirty tracking (idempotent). A replication
     /// primary enables this before accepting subscribers; keys touched
     /// while tracking was off reach followers through their bootstrap
-    /// full sync, not the delta log.
+    /// full sync, not the delta log. With tracking on, evictions are
+    /// recorded as tombstones so TTL/budget sweeps propagate too.
     pub fn enable_dirty_tracking(&self) {
         self.dirty_enabled.store(true, Ordering::SeqCst);
     }
@@ -345,20 +377,72 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         self.shards.iter().map(|s| s.evict_idle_wall(cutoff)).sum()
     }
 
-    /// Drain every shard's dirty-key set, returning each still-live
-    /// dirty key's sketch serialized in wire format v2 — the feed the
-    /// replication log seals into delta batches ([`crate::replica`]).
-    /// Empty unless [`Self::enable_dirty_tracking`] was called. The swap
+    /// Drain every shard's dirty map, resolving each key's recorded
+    /// changes into a typed [`SketchDelta`] — the feed the replication
+    /// log seals into delta batches ([`crate::replica`]): register
+    /// diffs for dense keys whose changed registers were tracked, full
+    /// wire-v2 sketches for sparse keys / merges / spilled diffs, and
+    /// tombstones for evicted keys (an evict-then-recreate emits the
+    /// tombstone *before* the new full sketch, in entry order). Empty
+    /// unless [`Self::enable_dirty_tracking`] was called. The swap
     /// happens under each shard lock, so a concurrent mutation lands
-    /// either in this drain or the next — never in neither; because
-    /// frames carry the key's *current full* sketch and merges are
-    /// bucket-wise max, draining a key twice is harmless.
-    pub fn drain_dirty_sketches(&self) -> Vec<(K, Vec<u8>)> {
+    /// either in this drain or the next — never in neither; diff values
+    /// are the registers' current maxima and merges are bucket-wise
+    /// max, so draining a key twice is harmless.
+    pub fn drain_dirty_deltas(&self) -> Vec<(K, SketchDelta)> {
         let mut out = Vec::new();
         for shard in &self.shards {
             shard.drain_dirty(&mut out);
         }
         out
+    }
+
+    /// Max-merge a decoded register diff into `key` (created if absent)
+    /// — the follower's apply path for [`SketchDelta::RegisterDiff`]
+    /// entries. The diff's config (including hash seed) must match the
+    /// registry's; mismatches fail before any state changes. The global
+    /// union, if tracked, is raised with the same registers: a register
+    /// that sets a new per-key max is exactly a register that may set a
+    /// new global max (per-key registers never exceed the global's), so
+    /// replicated diffs keep [`Self::global_estimate`] convergent the
+    /// same way full-sketch merges do.
+    pub fn apply_register_diff(
+        &self,
+        key: K,
+        cfg: HllConfig,
+        entries: &[(u32, u8)],
+    ) -> Result<(), SketchError> {
+        if cfg != self.cfg.hll {
+            return Err(SketchError::ConfigMismatch(cfg, self.cfg.hll));
+        }
+        // Full range validation before any register moves: this is a
+        // pub API, and only the follower's apply path arrives here
+        // pre-validated by `decode_register_diff` — a stray index must
+        // be a typed error, not an out-of-bounds panic halfway through
+        // raising the global union.
+        for &(idx, val) in entries {
+            if (idx as usize) >= cfg.m() {
+                return Err(SketchError::Malformed(format!(
+                    "diff index {idx} out of range for m={}",
+                    cfg.m()
+                )));
+            }
+            if val == 0 || val > cfg.max_rank() {
+                return Err(SketchError::Malformed(format!(
+                    "diff value {val} outside 1..={}",
+                    cfg.max_rank()
+                )));
+            }
+        }
+        if let Some(global) = &self.global {
+            for &(idx, val) in entries {
+                global.update_register(idx as usize, val);
+            }
+        }
+        let now = self.tick();
+        let wall = self.wall.now_secs();
+        self.shards[self.shard_of(&key)].apply_register_diff(cfg, key, entries, now, wall);
+        Ok(())
     }
 
     /// Number of keys currently awaiting a dirty drain (0 when tracking
@@ -470,6 +554,13 @@ mod tests {
             ..RegistryConfig::default()
         })
         .unwrap()
+    }
+
+    /// One key's current dense register file, read non-destructively.
+    fn dense_of(reg: &SketchRegistry<u64>, key: u64) -> HllSketch {
+        let (_, bytes) =
+            reg.export_sketches().into_iter().find(|(k, _)| *k == key).expect("key live");
+        HllSketch::from_bytes(&bytes).unwrap()
     }
 
     #[test]
@@ -767,7 +858,7 @@ mod tests {
         reg.ingest(1, &[1, 2, 3]);
         assert!(!reg.dirty_tracking_enabled());
         assert_eq!(reg.dirty_keys(), 0);
-        assert!(reg.drain_dirty_sketches().is_empty());
+        assert!(reg.drain_dirty_deltas().is_empty());
 
         reg.enable_dirty_tracking();
         let mut rng = Xoshiro256StarStar::seed_from_u64(31);
@@ -776,25 +867,161 @@ mod tests {
             reg.ingest(key, &words);
         }
         assert_eq!(reg.dirty_keys(), 20);
-        let drained = reg.drain_dirty_sketches();
+        let drained = reg.drain_dirty_deltas();
         assert_eq!(drained.len(), 20);
         assert_eq!(reg.dirty_keys(), 0);
-        // Each drained frame is the key's current full sketch.
-        for (key, bytes) in &drained {
-            let sketch = HllSketch::from_bytes(bytes).unwrap();
-            assert_eq!(Some(sketch.estimate()), reg.estimate(key), "key {key}");
+        // Small fresh keys are sparse → full-resend frames carrying the
+        // key's current sketch.
+        for (key, delta) in &drained {
+            match delta {
+                SketchDelta::Full(bytes) => {
+                    let sketch = HllSketch::from_bytes(bytes).unwrap();
+                    assert_eq!(Some(sketch.estimate()), reg.estimate(key), "key {key}");
+                }
+                other => panic!("fresh sparse key {key} must drain Full, got {other:?}"),
+            }
         }
         // Nothing new: the next drain is empty.
-        assert!(reg.drain_dirty_sketches().is_empty());
+        assert!(reg.drain_dirty_deltas().is_empty());
         // One more touch re-dirties exactly that key.
         reg.ingest(7, &[rng.next_u32()]);
-        let again = reg.drain_dirty_sketches();
+        let again = reg.drain_dirty_deltas();
         assert_eq!(again.len(), 1);
         assert_eq!(again[0].0, 7);
-        // A dirtied-then-evicted key is skipped, not exported.
+        // A dirtied-then-evicted key drains as a tombstone.
         reg.ingest(8, &[rng.next_u32()]);
         reg.evict(&8);
-        assert!(reg.drain_dirty_sketches().is_empty());
+        assert_eq!(reg.drain_dirty_deltas(), vec![(8, SketchDelta::Tombstone)]);
+        assert!(reg.drain_dirty_deltas().is_empty());
+    }
+
+    #[test]
+    fn dense_keys_drain_register_diffs_that_reconstruct_state() {
+        use crate::hll::decode_register_diff;
+
+        let reg = registry(8);
+        reg.enable_dirty_tracking();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(41);
+        // Densify one key (paper config upgrades past ~64 KiB of sparse
+        // entries — 60k distinct words is comfortably beyond).
+        let heavy: Vec<u32> = (0..60_000).map(|_| rng.next_u32()).collect();
+        reg.ingest(9, &heavy);
+        assert_eq!(reg.stats().dense_keys(), 1);
+        // First drain after densification: the upgrade ran through the
+        // sparse path, so this drain is a Full resend.
+        let first = reg.drain_dirty_deltas();
+        assert_eq!(first.len(), 1);
+        assert!(matches!(first[0].1, SketchDelta::Full(_)));
+
+        // Mirror the shipped state, then keep ingesting: every later
+        // drain must be a register diff that, max-merged into the
+        // mirror, reproduces the primary's registers bit-exactly.
+        let mut mirror = match &first[0].1 {
+            SketchDelta::Full(bytes) => HllSketch::from_bytes(bytes).unwrap(),
+            other => panic!("expected Full, got {other:?}"),
+        };
+        for round in 0..3 {
+            let words: Vec<u32> = (0..5_000).map(|_| rng.next_u32()).collect();
+            reg.ingest(9, &words);
+            let drained = reg.drain_dirty_deltas();
+            assert_eq!(drained.len(), 1, "round {round}");
+            match &drained[0].1 {
+                SketchDelta::RegisterDiff(bytes) => {
+                    let (cfg, entries) = decode_register_diff(bytes).unwrap();
+                    assert_eq!(cfg, *mirror.config());
+                    assert!(!entries.is_empty());
+                    // Far fewer entries than registers: the point of
+                    // the diff encoding.
+                    assert!(entries.len() < cfg.m() / 4, "round {round}");
+                    mirror.apply_register_diff(&entries);
+                }
+                other => panic!("round {round}: expected RegisterDiff, got {other:?}"),
+            }
+            assert_eq!(mirror, dense_of(&reg, 9), "round {round}");
+        }
+
+        // A touch that changes nothing (same words again) drains empty.
+        let replay: Vec<u32> = heavy[..100].to_vec();
+        reg.ingest(9, &replay);
+        assert!(reg.drain_dirty_deltas().is_empty(), "no-op touches must not ship");
+    }
+
+    #[test]
+    fn evict_then_recreate_drains_tombstone_before_full() {
+        let reg = registry(8);
+        reg.enable_dirty_tracking();
+        reg.ingest(5, &[1, 2, 3]);
+        let _ = reg.drain_dirty_deltas();
+        // Evict and re-create under the same name between drains.
+        reg.evict(&5);
+        reg.ingest(5, &[9, 10]);
+        let drained = reg.drain_dirty_deltas();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, 5);
+        assert_eq!(drained[0].1, SketchDelta::Tombstone, "tombstone must come first");
+        match &drained[1].1 {
+            SketchDelta::Full(bytes) => {
+                let sketch = HllSketch::from_bytes(bytes).unwrap();
+                assert_eq!(Some(sketch.estimate()), reg.estimate(&5));
+            }
+            other => panic!("re-created key must resend Full after the tombstone: {other:?}"),
+        }
+
+        // TTL sweeps tombstone too. Key 7 is the newest touch, so an
+        // age-0 sweep (cutoff = current clock) reaps keys 5 and 6.
+        reg.ingest(6, &[1]);
+        reg.ingest(7, &[2]);
+        let _ = reg.drain_dirty_deltas();
+        assert_eq!(reg.evict_idle(0), 2);
+        let mut tombs: Vec<u64> = reg
+            .drain_dirty_deltas()
+            .into_iter()
+            .map(|(k, d)| {
+                assert_eq!(d, SketchDelta::Tombstone);
+                k
+            })
+            .collect();
+        tombs.sort_unstable();
+        assert_eq!(tombs, vec![5, 6]);
+    }
+
+    #[test]
+    fn apply_register_diff_creates_raises_and_rejects_mismatch() {
+        let reg = registry(8);
+        let cfg = HllConfig::PAPER;
+        // Creates the key if absent and raises the global union.
+        reg.apply_register_diff(3, cfg, &[(0, 5), (100, 2)]).unwrap();
+        assert!(reg.estimate(&3).is_some());
+        let global = reg.global_sketch().unwrap();
+        assert_eq!(global.registers()[0], 5);
+        assert_eq!(global.registers()[100], 2);
+        // Idempotent max-merge: replaying and lower values change nothing.
+        reg.apply_register_diff(3, cfg, &[(0, 4)]).unwrap();
+        assert_eq!(dense_of(&reg, 3).registers()[0], 5);
+        // Config/seed mismatches fail before any state changes.
+        let seeded = HllConfig::PAPER.with_seed(7);
+        assert!(matches!(
+            reg.apply_register_diff(4, seeded, &[(0, 1)]),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+        assert!(reg.estimate(&4).is_none());
+        // Out-of-range entries are typed errors, not panics — and they
+        // fail before any register (key or global) moves.
+        let before = reg.global_sketch().unwrap();
+        assert!(matches!(
+            reg.apply_register_diff(4, cfg, &[(0, 3), (cfg.m() as u32, 5)]),
+            Err(SketchError::Malformed(_))
+        ));
+        assert!(matches!(
+            reg.apply_register_diff(4, cfg, &[(1, 0)]),
+            Err(SketchError::Malformed(_))
+        ));
+        assert!(matches!(
+            reg.apply_register_diff(4, cfg, &[(1, cfg.max_rank() + 1)]),
+            Err(SketchError::Malformed(_))
+        ));
+        assert!(reg.estimate(&4).is_none());
+        assert_eq!(reg.global_sketch().unwrap(), before, "rejected diffs must not move global");
     }
 
     #[test]

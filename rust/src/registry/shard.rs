@@ -13,25 +13,106 @@
 //! ([`Shard::evict_idle_wall`]).
 //!
 //! When dirty tracking is enabled (replication primaries — see
-//! [`crate::replica`]), every mutating touch also records the key in a
-//! per-shard dirty set; [`Shard::drain_dirty`] swaps the set out under
-//! the same lock the mutation held, so a write either lands in the
-//! current drain or the next one — never in neither.
+//! [`crate::replica`]), every mutating touch also records *what
+//! changed* in a per-shard `key → DirtyState` map: the exact dense
+//! registers an ingest raised (spilling to a full-resend marker past a
+//! density threshold), a full-resend marker for sparse keys and merges,
+//! and an eviction tombstone when any eviction path removes a key.
+//! [`Shard::drain_dirty`] swaps the map out under the same lock the
+//! mutation held, so a write either lands in the current drain or the
+//! next one — never in neither — and resolves each state into a typed
+//! [`SketchDelta`] the replication log seals.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::config::ShardStats;
-use crate::hll::{AdaptiveSketch, HllConfig, HllSketch};
+use super::registry::SketchDelta;
+use crate::hll::{encode_register_diff, AdaptiveSketch, HllConfig, HllSketch, InsertOutcome};
+
+/// Per-key dirty state on a replication primary: what the next capture
+/// must ship for this key (resolved by [`Shard::drain_dirty`]).
+#[derive(Debug)]
+pub(crate) enum DirtyState {
+    /// Dense-register indices raised since the last drain (append-only,
+    /// may repeat across re-raises; sorted and deduplicated at drain
+    /// time). Spills to [`DirtyState::Full`] past [`spill_threshold`].
+    Registers(Vec<u32>),
+    /// Resend the key's full sketch: sparse-mode keys (changed
+    /// registers untracked), merges, or a register list that grew past
+    /// the density threshold.
+    Full,
+    /// The key was removed; the capture ships a tombstone so followers
+    /// drop it too.
+    Evicted,
+    /// Removed and then re-created before the drain: the capture ships
+    /// a tombstone followed by the new full sketch, *in that order*, so
+    /// a follower cannot max-merge the dead incarnation's registers
+    /// into the new one.
+    EvictedThenFull,
+}
+
+/// Changed-register indices tracked per key before the state spills to
+/// a full resend. A diff entry costs 5 wire bytes against 1 byte per
+/// register in a full resend, so diffs stay cheaper up to ~m/5 changed
+/// registers; m/8 leaves headroom for the tracking vec itself.
+fn spill_threshold(m: usize) -> usize {
+    m / 8
+}
+
+impl DirtyState {
+    /// A dense register was raised.
+    fn note_register(&mut self, idx: u32, spill: usize) {
+        match self {
+            DirtyState::Registers(v) => {
+                v.push(idx);
+                if v.len() > spill {
+                    // Re-raises of one hot register are one diff entry,
+                    // not many: dedup before concluding the diff is
+                    // dense enough to spill. Cheap in amortized terms —
+                    // each sort is triggered by real register raises,
+                    // and a register can only be raised max_rank times.
+                    v.sort_unstable();
+                    v.dedup();
+                    if v.len() > spill {
+                        *self = DirtyState::Full;
+                    }
+                }
+            }
+            DirtyState::Full | DirtyState::EvictedThenFull => {}
+            DirtyState::Evicted => *self = DirtyState::EvictedThenFull,
+        }
+    }
+
+    /// The key changed in a way register tracking cannot describe
+    /// (sparse insert, sparse→dense upgrade, merge): full resend.
+    fn note_full(&mut self) {
+        match self {
+            DirtyState::Registers(_) | DirtyState::Full => *self = DirtyState::Full,
+            DirtyState::Evicted | DirtyState::EvictedThenFull => {
+                *self = DirtyState::EvictedThenFull
+            }
+        }
+    }
+}
+
+/// Fold one traced insert outcome into the key's dirty state.
+fn note_outcome(state: &mut DirtyState, outcome: InsertOutcome, spill: usize) {
+    match outcome {
+        InsertOutcome::DenseChanged(idx) => state.note_register(idx, spill),
+        InsertOutcome::Unchanged => {}
+        InsertOutcome::Untracked => state.note_full(),
+    }
+}
 
 #[derive(Debug)]
 pub(crate) struct Shard<K> {
     state: Mutex<ShardState<K>>,
     /// Registry-wide dirty-tracking switch, shared by every shard. Read
     /// under the shard lock on each mutation; off (the default) it costs
-    /// one relaxed load and no dirty-set traffic.
+    /// one relaxed load and no dirty-map traffic.
     track_dirty: Arc<AtomicBool>,
 }
 
@@ -39,9 +120,54 @@ pub(crate) struct Shard<K> {
 struct ShardState<K> {
     map: HashMap<K, KeyEntry>,
     words: u64,
-    /// Keys mutated since the last [`Shard::drain_dirty`]. Only
+    /// What changed per key since the last [`Shard::drain_dirty`]. Only
     /// populated while the shared `track_dirty` flag is set.
-    dirty: HashSet<K>,
+    dirty: HashMap<K, DirtyState>,
+}
+
+impl<K: Eq + Hash> ShardState<K> {
+    /// Fold `hashes` into `key`'s sketch (created on first touch),
+    /// recording what changed in the dirty map when `dirty` is set —
+    /// the one implementation behind every ingest entry point.
+    fn ingest_key<I: IntoIterator<Item = u64>>(
+        &mut self,
+        cfg: HllConfig,
+        key: K,
+        hashes: I,
+        dirty: bool,
+        spill: usize,
+        now: u64,
+        wall: u64,
+    ) where
+        K: Clone,
+    {
+        if dirty {
+            let entry =
+                self.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+            entry.touch(now, wall);
+            let state =
+                self.dirty.entry(key).or_insert_with(|| DirtyState::Registers(Vec::new()));
+            let mut any = false;
+            for h in hashes {
+                any = true;
+                note_outcome(state, entry.sketch.insert_hash_traced(h), spill);
+            }
+            if !any {
+                // A zero-hash touch still created (or kept live) the
+                // key. No caller currently passes an empty batch this
+                // deep, but without this promotion the state could stay
+                // `Evicted` — a false tombstone for a live key — or a
+                // fresh key could sit at `Registers([])` and never ship.
+                state.note_full();
+            }
+        } else {
+            let entry = self.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+            entry.touch(now, wall);
+            for h in hashes {
+                entry.sketch.insert_hash(h);
+            }
+        }
+    }
 }
 
 /// One key's live state: the sketch plus the registry clock tick and
@@ -75,7 +201,7 @@ impl<K: Eq + Hash> Shard<K> {
             state: Mutex::new(ShardState {
                 map: HashMap::new(),
                 words: 0,
-                dirty: HashSet::new(),
+                dirty: HashMap::new(),
             }),
             track_dirty,
         }
@@ -104,15 +230,9 @@ impl<K: Eq + Hash> Shard<K> {
         K: Clone,
     {
         let dirty = self.dirty_on();
+        let spill = spill_threshold(cfg.m());
         let mut st = self.lock();
-        if dirty {
-            st.dirty.insert(key.clone());
-        }
-        let entry = st.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now, wall));
-        entry.touch(now, wall);
-        for &h in hashes {
-            entry.sketch.insert_hash(h);
-        }
+        st.ingest_key(cfg, key, hashes.iter().copied(), dirty, spill, now, wall);
         st.words += hashes.len() as u64;
     }
 
@@ -122,15 +242,10 @@ impl<K: Eq + Hash> Shard<K> {
         K: Clone,
     {
         let dirty = self.dirty_on();
+        let spill = spill_threshold(cfg.m());
         let mut st = self.lock();
         for (key, h) in pairs {
-            if dirty {
-                st.dirty.insert(key.clone());
-            }
-            let entry =
-                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
-            entry.touch(now, wall);
-            entry.sketch.insert_hash(*h);
+            st.ingest_key(cfg, key.clone(), std::iter::once(*h), dirty, spill, now, wall);
         }
         st.words += pairs.len() as u64;
     }
@@ -152,6 +267,7 @@ impl<K: Eq + Hash> Shard<K> {
         K: Clone + 'a,
     {
         let dirty = self.dirty_on();
+        let spill = spill_threshold(cfg.m());
         let mut st = self.lock();
         let mut n = 0u64;
         for (key, word) in pairs {
@@ -159,13 +275,7 @@ impl<K: Eq + Hash> Shard<K> {
             if let Some(g) = global {
                 g.insert_hash(h);
             }
-            if dirty {
-                st.dirty.insert(key.clone());
-            }
-            let entry =
-                st.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
-            entry.touch(now, wall);
-            entry.sketch.insert_hash(h);
+            st.ingest_key(cfg, key.clone(), std::iter::once(h), dirty, spill, now, wall);
             n += 1;
         }
         st.words += n;
@@ -181,65 +291,203 @@ impl<K: Eq + Hash> Shard<K> {
     }
 
     /// Remove one key; returns its final dense register file, if present.
-    pub(crate) fn evict(&self, key: &K) -> Option<HllSketch> {
+    /// On a dirty-tracking shard the removal is recorded as an eviction
+    /// tombstone so the next capture propagates it to followers.
+    pub(crate) fn evict(&self, key: &K) -> Option<HllSketch>
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
-        st.map.remove(key).map(|e| e.sketch.into_dense())
+        let removed = st.map.remove(key);
+        if removed.is_some() && dirty {
+            st.dirty.insert(key.clone(), DirtyState::Evicted);
+        }
+        removed.map(|e| e.sketch.into_dense())
     }
 
     /// Keep only keys the predicate approves; returns how many were
     /// evicted. The predicate may mutate the sketch (e.g. to estimate).
-    pub(crate) fn retain<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut keep: F) -> usize {
-        let mut st = self.lock();
-        let before = st.map.len();
-        st.map.retain(|k, e| keep(k, &mut e.sketch));
-        before - st.map.len()
+    /// Removals are tombstoned like [`Shard::evict`].
+    pub(crate) fn retain<F: FnMut(&K, &mut AdaptiveSketch) -> bool>(&self, mut keep: F) -> usize
+    where
+        K: Clone,
+    {
+        self.retain_entries(|k, e| keep(k, &mut e.sketch))
     }
 
     /// Drop every key whose last touch predates `cutoff`; returns how
-    /// many aged out.
-    pub(crate) fn evict_idle(&self, cutoff: u64) -> usize {
-        let mut st = self.lock();
-        let before = st.map.len();
-        st.map.retain(|_, e| e.last_touch >= cutoff);
-        before - st.map.len()
+    /// many aged out. Removals are tombstoned like [`Shard::evict`].
+    pub(crate) fn evict_idle(&self, cutoff: u64) -> usize
+    where
+        K: Clone,
+    {
+        self.retain_entries(|_, e| e.last_touch >= cutoff)
     }
 
     /// Wall-clock twin of [`Shard::evict_idle`]: drop every key whose
     /// last wall-clock touch (seconds) predates `cutoff_secs`.
-    pub(crate) fn evict_idle_wall(&self, cutoff_secs: u64) -> usize {
-        let mut st = self.lock();
-        let before = st.map.len();
-        st.map.retain(|_, e| e.last_touch_wall >= cutoff_secs);
-        before - st.map.len()
-    }
-
-    /// Swap out the dirty set and append each still-live dirty key's
-    /// sketch in wire-format-v2 bytes. Like [`Shard::export_bytes`], the
-    /// lock is held only to take the set and clone the live sketches;
-    /// densification and serialization happen after release. Keys that
-    /// were dirtied and then evicted before the drain are skipped —
-    /// eviction does not replicate (see [`crate::replica`]).
-    pub(crate) fn drain_dirty(&self, out: &mut Vec<(K, Vec<u8>)>)
+    pub(crate) fn evict_idle_wall(&self, cutoff_secs: u64) -> usize
     where
         K: Clone,
     {
-        let cloned: Vec<(K, AdaptiveSketch)> = {
+        self.retain_entries(|_, e| e.last_touch_wall >= cutoff_secs)
+    }
+
+    /// The one retain-with-tombstones implementation behind [`Shard::retain`]
+    /// and both TTL sweeps: every removal on a dirty-tracking shard is
+    /// recorded as an eviction tombstone.
+    fn retain_entries<F: FnMut(&K, &mut KeyEntry) -> bool>(&self, mut keep: F) -> usize
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
+        let mut st = self.lock();
+        let st = &mut *st;
+        let before = st.map.len();
+        let tombs = &mut st.dirty;
+        st.map.retain(|k, e| {
+            let kept = keep(k, e);
+            if !kept && dirty {
+                tombs.insert(k.clone(), DirtyState::Evicted);
+            }
+            kept
+        });
+        before - st.map.len()
+    }
+
+    /// Swap out the dirty map and resolve each key's [`DirtyState`]
+    /// into a typed [`SketchDelta`]:
+    ///
+    /// * `Registers` → a [`SketchDelta::RegisterDiff`] carrying the
+    ///   current values of exactly the registers that moved (read under
+    ///   the lock at drain time, so they are the key's latest maxima);
+    /// * `Full` → a [`SketchDelta::Full`] wire-v2 sketch;
+    /// * `Evicted` → a [`SketchDelta::Tombstone`];
+    /// * `EvictedThenFull` → a tombstone immediately followed by the
+    ///   re-created key's full sketch (ordering a follower must apply).
+    ///
+    /// Like [`Shard::export_bytes`], the lock is held only to take the
+    /// map, resolve diff values and clone the full-resend sketches;
+    /// densification and serialization happen after release.
+    pub(crate) fn drain_dirty(&self, out: &mut Vec<(K, SketchDelta)>)
+    where
+        K: Clone,
+    {
+        enum Pending<K> {
+            Tomb(K),
+            Diff(K, HllConfig, Vec<(u32, u8)>),
+            Full(K, AdaptiveSketch),
+            TombThenFull(K, AdaptiveSketch),
+        }
+        let pending: Vec<Pending<K>> = {
             let mut st = self.lock();
             if st.dirty.is_empty() {
                 return;
             }
+            let st = &mut *st;
             let dirty = std::mem::take(&mut st.dirty);
             let mut v = Vec::with_capacity(dirty.len());
-            for key in dirty {
-                if let Some(entry) = st.map.get(&key) {
-                    v.push((key, entry.sketch.clone()));
+            for (key, state) in dirty {
+                match state {
+                    DirtyState::Registers(mut idxs) => {
+                        if idxs.is_empty() {
+                            // Touched, but no register moved — sound to
+                            // skip: only an already-dense key can end
+                            // here (anything else notes Full), and a
+                            // dense key's earlier state reached
+                            // followers when it was built (its builders
+                            // dirtied it), so they are already current.
+                            continue;
+                        }
+                        match st.map.get(&key) {
+                            Some(entry) => match &entry.sketch {
+                                AdaptiveSketch::Dense(d) => {
+                                    idxs.sort_unstable();
+                                    idxs.dedup();
+                                    let regs = d.registers();
+                                    let entries: Vec<(u32, u8)> = idxs
+                                        .iter()
+                                        .map(|&i| (i, regs[i as usize]))
+                                        .filter(|&(_, val)| val > 0)
+                                        .collect();
+                                    v.push(Pending::Diff(key, *d.config(), entries));
+                                }
+                                // Register changes are only recorded for
+                                // dense keys and dense never reverts;
+                                // resend defensively if it somehow did.
+                                AdaptiveSketch::Sparse(_) => {
+                                    v.push(Pending::Full(key, entry.sketch.clone()))
+                                }
+                            },
+                            // Every eviction path rewrites the state to
+                            // Evicted, so a register-tracked key should
+                            // still be live; if it is not, the
+                            // convergent answer is a tombstone.
+                            None => v.push(Pending::Tomb(key)),
+                        }
+                    }
+                    DirtyState::Full => match st.map.get(&key) {
+                        Some(entry) => v.push(Pending::Full(key, entry.sketch.clone())),
+                        None => v.push(Pending::Tomb(key)),
+                    },
+                    DirtyState::Evicted => v.push(Pending::Tomb(key)),
+                    DirtyState::EvictedThenFull => match st.map.get(&key) {
+                        Some(entry) => {
+                            v.push(Pending::TombThenFull(key, entry.sketch.clone()))
+                        }
+                        None => v.push(Pending::Tomb(key)),
+                    },
                 }
             }
             v
         };
-        for (key, sketch) in cloned {
-            out.push((key, sketch.into_dense().to_bytes()));
+        for p in pending {
+            match p {
+                Pending::Tomb(key) => out.push((key, SketchDelta::Tombstone)),
+                Pending::Diff(key, cfg, entries) => {
+                    out.push((key, SketchDelta::RegisterDiff(encode_register_diff(&cfg, &entries))))
+                }
+                Pending::Full(key, sketch) => {
+                    out.push((key, SketchDelta::Full(sketch.into_dense().to_bytes())))
+                }
+                Pending::TombThenFull(key, sketch) => {
+                    out.push((key.clone(), SketchDelta::Tombstone));
+                    out.push((key, SketchDelta::Full(sketch.into_dense().to_bytes())));
+                }
+            }
         }
+    }
+
+    /// Max-merge a decoded register diff into `key`'s sketch (created
+    /// if absent) — the follower's apply path for
+    /// [`SketchDelta::RegisterDiff`] entries. The registry has already
+    /// checked the diff's config against its own, and the decode path
+    /// validated every index and value.
+    pub(crate) fn apply_register_diff(
+        &self,
+        cfg: HllConfig,
+        key: K,
+        entries: &[(u32, u8)],
+        now: u64,
+        wall: u64,
+    ) where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
+        let mut st = self.lock();
+        let st = &mut *st;
+        if dirty {
+            // Which of the diff's registers beat the local ones is not
+            // tracked; a re-replicating holder resends the key whole.
+            st.dirty
+                .entry(key.clone())
+                .or_insert_with(|| DirtyState::Registers(Vec::new()))
+                .note_full();
+        }
+        let entry = st.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now, wall));
+        entry.touch(now, wall);
+        entry.sketch.apply_register_diff(entries);
     }
 
     /// Number of keys currently awaiting a dirty drain.
@@ -277,9 +525,21 @@ impl<K: Eq + Hash> Shard<K> {
         }
     }
 
-    /// Remove one key's sketch without densifying (for cross-shard moves).
-    pub(crate) fn take(&self, key: &K) -> Option<AdaptiveSketch> {
-        self.lock().map.remove(key).map(|e| e.sketch)
+    /// Remove one key's sketch without densifying (for cross-shard
+    /// moves). From this shard's point of view the key is gone, so a
+    /// dirty-tracking shard records a tombstone — the destination
+    /// shard's merge records its own full-resend entry.
+    pub(crate) fn take(&self, key: &K) -> Option<AdaptiveSketch>
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
+        let mut st = self.lock();
+        let taken = st.map.remove(key).map(|e| e.sketch);
+        if taken.is_some() && dirty {
+            st.dirty.insert(key.clone(), DirtyState::Evicted);
+        }
+        taken
     }
 
     /// Merge a sketch into `key`'s sketch (created if absent).
@@ -312,7 +572,11 @@ impl<K: Eq + Hash> Shard<K> {
             }
         }
         if dirty {
-            st.dirty.insert(key);
+            // A merge can raise arbitrary registers; full resend.
+            st.dirty
+                .entry(key)
+                .or_insert_with(|| DirtyState::Registers(Vec::new()))
+                .note_full();
         }
         Ok(())
     }
@@ -360,10 +624,23 @@ impl<K: Eq + Hash> Shard<K> {
         out
     }
 
-    pub(crate) fn clear(&self) {
+    pub(crate) fn clear(&self)
+    where
+        K: Clone,
+    {
+        let dirty = self.dirty_on();
         let mut st = self.lock();
+        let st = &mut *st;
+        if dirty {
+            // A cleared primary must tombstone everything it held, or
+            // followers keep serving the dropped keys forever.
+            for key in st.map.keys() {
+                st.dirty.insert(key.clone(), DirtyState::Evicted);
+            }
+        } else {
+            st.dirty.clear();
+        }
         st.map.clear();
         st.words = 0;
-        st.dirty.clear();
     }
 }

@@ -8,11 +8,14 @@
 //!   mutating RPC answers a typed
 //!   [`crate::server::ErrorCode::ReadOnly`] frame;
 //! * a replication thread that subscribes to the primary, applies
-//!   `FULL_SYNC` / `DELTA_BATCH` frames through
-//!   [`SketchRegistry::merge_sketch`] (max-merge — the paper's Fig-3
-//!   fold — so any interleaving, replay, or duplicate converges to the
-//!   primary's registers bit-exactly), acks each applied position, and
-//!   reconnects with its cursor after a disconnect.
+//!   `FULL_SYNC` / `DELTA_BATCH` frames in entry order — full sketches
+//!   through [`SketchRegistry::merge_sketch`] and register diffs
+//!   through [`SketchRegistry::apply_register_diff`] (max-merges — the
+//!   paper's Fig-3 fold — so replays and duplicates converge to the
+//!   primary's registers bit-exactly) and tombstones as evictions, so
+//!   TTL/budget sweeps on the primary propagate instead of leaving the
+//!   follower grow-only — acks each applied position, and reconnects
+//!   with its cursor after a disconnect.
 //!
 //! A follower that is killed and restarted resumes from its last
 //! applied cursor ([`FollowerServer::shutdown`] returns it;
@@ -33,9 +36,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::ReplicaCursor;
-use crate::hll::HllSketch;
-use crate::registry::SketchRegistry;
-use crate::server::protocol::{ErrorCode, Request, Response};
+use crate::hll::{decode_register_diff, HllSketch, SketchError};
+use crate::registry::{SketchDelta, SketchRegistry};
+use crate::server::protocol::{ErrorCode, ProtocolError, Request, Response, DELTA_WIRE_V3};
 use crate::server::server::{try_read_frame, write_full};
 use crate::server::snapshot;
 use crate::server::{ServerConfig, SketchServer};
@@ -69,6 +72,11 @@ pub struct FollowerStats {
     pub batches_applied: u64,
     /// Per-key frames applied since start (deltas only).
     pub entries_applied: u64,
+    /// Of those, eviction tombstones (keys removed to track the
+    /// primary's TTL/budget sweeps).
+    pub tombstones_applied: u64,
+    /// Of those, changed-register diffs (wire-v3 compaction path).
+    pub diff_entries_applied: u64,
     /// Full syncs applied since start (bootstrap + stale-cursor falls).
     pub full_syncs: u64,
     /// Reconnect attempts after the initial connect.
@@ -87,6 +95,8 @@ struct FollowerShared {
     cursor: AtomicU64,
     batches_applied: AtomicU64,
     entries_applied: AtomicU64,
+    tombstones_applied: AtomicU64,
+    diff_entries_applied: AtomicU64,
     full_syncs: AtomicU64,
     reconnects: AtomicU64,
     halted: AtomicBool,
@@ -191,6 +201,8 @@ impl FollowerServer {
             cursor: self.shared.cursor.load(Ordering::SeqCst),
             batches_applied: self.shared.batches_applied.load(Ordering::Relaxed),
             entries_applied: self.shared.entries_applied.load(Ordering::Relaxed),
+            tombstones_applied: self.shared.tombstones_applied.load(Ordering::Relaxed),
+            diff_entries_applied: self.shared.diff_entries_applied.load(Ordering::Relaxed),
             full_syncs: self.shared.full_syncs.load(Ordering::Relaxed),
             reconnects: self.shared.reconnects.load(Ordering::Relaxed),
             halted: self.shared.halted.load(Ordering::SeqCst),
@@ -277,7 +289,7 @@ fn replication_loop(
         let _ = stream.set_nodelay(true);
         let epoch = shared.epoch.load(Ordering::SeqCst);
         let cursor = shared.cursor.load(Ordering::SeqCst);
-        let subscribe = Request::Subscribe { epoch, cursor }.encode();
+        let subscribe = Request::Subscribe { epoch, cursor, wire: DELTA_WIRE_V3 }.encode();
         if !matches!(write_full(&mut stream, &subscribe, &stop), Ok(true)) {
             shared.record_error("subscribe write failed");
             continue;
@@ -285,6 +297,72 @@ fn replication_loop(
         crate::log_debug!("replica", "subscribed to {primary} at cursor {cursor} (epoch {epoch})");
         run_subscription(&mut stream, &registry, &stop, &shared);
     }
+}
+
+/// Apply one wire-v3 delta entry to the follower registry. Tombstones
+/// evict (the primary dropped the key — TTL, budget, or explicit);
+/// register diffs max-merge the changed registers; full sketches
+/// max-merge whole. Malformed or config-mismatched bodies surface as
+/// [`SketchError`]s for the caller to halt on.
+fn apply_delta(
+    registry: &SketchRegistry<u64>,
+    key: u64,
+    delta: SketchDelta,
+    shared: &FollowerShared,
+) -> Result<(), SketchError> {
+    match delta {
+        SketchDelta::Tombstone => {
+            // Absent keys are fine: the tombstone may describe a key
+            // that never reached us (created and evicted between two
+            // captures) or one a replayed batch already removed.
+            registry.evict(&key);
+            shared.tombstones_applied.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        SketchDelta::RegisterDiff(bytes) => {
+            let (cfg, entries) = decode_register_diff(&bytes)?;
+            registry.apply_register_diff(key, cfg, &entries)?;
+            shared.diff_entries_applied.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        SketchDelta::Full(bytes) => {
+            let sketch = HllSketch::from_bytes(&bytes)?;
+            registry.merge_sketch(key, sketch)
+        }
+    }
+}
+
+/// Apply one delta batch (any wire generation, already normalized to
+/// typed entries) if it advances the cursor. Entry order matters: an
+/// evict-then-recreate ships tombstone first, then the new sketch.
+/// Batches at or below the cursor are skipped whole — a replayed batch
+/// could not interleave wrongly anyway (same entries), but skipping
+/// keeps the tombstone-ordering argument a per-batch-once argument.
+/// Returns `false` when replication has halted on a rejected entry.
+fn apply_batch(
+    registry: &SketchRegistry<u64>,
+    shared: &FollowerShared,
+    seq: u64,
+    entries: Vec<(u64, SketchDelta)>,
+) -> bool {
+    let applied = shared.cursor.load(Ordering::SeqCst);
+    if seq > applied {
+        let count = entries.len() as u64;
+        for (key, delta) in entries {
+            if let Err(e) = apply_delta(registry, key, delta, shared) {
+                // A delta that does not decode or match our config
+                // cannot be fixed by retrying against the same primary:
+                // halt, keep serving last-good state.
+                shared.record_error(format!("delta entry for key {key} rejected: {e}"));
+                shared.halted.store(true, Ordering::SeqCst);
+                return false;
+            }
+        }
+        shared.cursor.store(seq, Ordering::SeqCst);
+        shared.batches_applied.fetch_add(1, Ordering::Relaxed);
+        shared.entries_applied.fetch_add(count, Ordering::Relaxed);
+    }
+    true
 }
 
 /// Apply frames from an established subscription until the stream
@@ -308,12 +386,26 @@ fn run_subscription(
             Ok(resp) => resp,
             Err(e) => {
                 shared.record_error(format!("undecodable frame from primary: {e}"));
+                // An unknown opcode or frame version is a primary
+                // speaking a newer wire than this follower decodes —
+                // reconnecting would replay the same bytes forever.
+                // (Torn streams surface as Io errors above and do
+                // reconnect.)
+                if matches!(e, ProtocolError::BadOpcode(_) | ProtocolError::BadVersion(_)) {
+                    shared.halted.store(true, Ordering::SeqCst);
+                }
                 return;
             }
         };
         match resp {
             Response::FullSync { epoch, cursor, body } => {
-                match snapshot::restore_from_bytes(registry, &body) {
+                // A full sync *replaces* local state (keys absent from
+                // the image were evicted on the primary while our
+                // tombstone batches rotated out of retention — merging
+                // would resurrect them forever). The image is validated
+                // whole before anything is cleared, so the halt path
+                // below still leaves last-good state serving.
+                match snapshot::replace_from_bytes(registry, &body) {
                     Ok(keys) => {
                         // The image resets our position into the
                         // primary's (possibly new) log incarnation.
@@ -337,38 +429,38 @@ fn run_subscription(
                 }
             }
             Response::DeltaBatch { seq, entries } => {
-                let applied = shared.cursor.load(Ordering::SeqCst);
-                if seq > applied {
-                    let count = entries.len() as u64;
-                    for (key, bytes) in entries {
-                        let merged = HllSketch::from_bytes(&bytes)
-                            .and_then(|sketch| registry.merge_sketch(key, sketch));
-                        if let Err(e) = merged {
-                            shared.record_error(format!(
-                                "delta frame for key {key} rejected: {e}"
-                            ));
-                            shared.halted.store(true, Ordering::SeqCst);
-                            return;
-                        }
-                    }
-                    shared.cursor.store(seq, Ordering::SeqCst);
-                    shared.batches_applied.fetch_add(1, Ordering::Relaxed);
-                    shared.entries_applied.fetch_add(count, Ordering::Relaxed);
+                // Legacy wire-v2 stream (old primary): every entry is a
+                // full sketch and evictions never arrive — semantically
+                // a v3 batch of Full entries, so it shares the apply
+                // path.
+                let typed: Vec<(u64, SketchDelta)> = entries
+                    .into_iter()
+                    .map(|(key, bytes)| (key, SketchDelta::Full(bytes)))
+                    .collect();
+                if !apply_batch(registry, shared, seq, typed) {
+                    return;
                 }
-                // A batch at or below our cursor is a harmless replay
-                // (max-merge); fall through to ack our real position.
+            }
+            Response::DeltaBatchV3 { seq, entries } => {
+                if !apply_batch(registry, shared, seq, entries) {
+                    return;
+                }
             }
             Response::Error { code, message } => {
                 shared.record_error(format!("primary answered {code:?}: {message}"));
                 if matches!(
                     code,
-                    ErrorCode::Unsupported | ErrorCode::ReadOnly | ErrorCode::Internal
+                    ErrorCode::Unsupported
+                        | ErrorCode::ReadOnly
+                        | ErrorCode::Internal
+                        | ErrorCode::Malformed
                 ) {
                     // Subscribed to something that will never replicate
-                    // to us (not a primary, or its image exceeds the
-                    // in-band full-sync cap) — retrying cannot help,
-                    // and each retry would cost the primary a full
-                    // registry serialization.
+                    // to us: not a primary, an image past the in-band
+                    // full-sync cap, or a primary too old to decode our
+                    // subscribe frame (Malformed) — retrying replays
+                    // the identical bytes, and each retry costs the
+                    // primary work.
                     shared.halted.store(true, Ordering::SeqCst);
                 }
                 return;

@@ -2,14 +2,20 @@
 //! ordered, immutable delta batches that subscriber connections stream
 //! to followers.
 //!
-//! A batch is one [`crate::registry::SketchRegistry::drain_dirty_sketches`]
-//! drain — every key mutated since the previous capture, each carried
-//! as its *current full* sketch in wire format v2. Because sketch
-//! merges are bucket-wise maxes (commutative, associative, idempotent —
-//! the same property the paper's FPGA exploits to fold parallel
-//! pipelines, Fig 3), shipping full per-key state makes the log trivial
-//! to resume: replaying a batch, skipping ahead, or applying batches
-//! around a full sync all converge to the same registers.
+//! A batch is one [`crate::registry::SketchRegistry::drain_dirty_deltas`]
+//! drain — every key mutated since the previous capture, carried as a
+//! typed [`SketchDelta`]: a sparse *register diff* when the exact dense
+//! registers that moved were tracked (the common steady-state case — a
+//! handful of 5-byte entries instead of the full 2^p-byte register
+//! file, the same ship-registers-not-sketches instinct as the paper's
+//! FPGA pipelines), a *full sketch* for sparse-mode keys, merges and
+//! diff spills, and a *tombstone* when the key was evicted. Because
+//! register applies are bucket-wise maxes (commutative, associative,
+//! idempotent — the property the paper exploits to fold parallel
+//! pipelines, Fig 3), diff/full entries are replay- and
+//! reorder-tolerant; tombstones are ordered *within* the entry stream
+//! (an evict-then-recreate drains as tombstone **then** new sketch), so
+//! followers must apply a batch's entries in order.
 //!
 //! Batches are retained in a byte-bounded ring for cursor-based resume
 //! after a follower disconnect; a cursor that has rotated out of
@@ -22,8 +28,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
-use crate::registry::SketchRegistry;
-use crate::server::protocol::MAX_PAYLOAD;
+use crate::registry::{SketchDelta, SketchRegistry};
+use crate::server::protocol::{DELTA_ENTRY_OVERHEAD, MAX_PAYLOAD};
 
 /// Upper bound on one sealed batch's entry payload. A capture that
 /// drains more than this splits into several consecutive batches, so an
@@ -75,8 +81,9 @@ impl Default for ReplicationConfig {
     }
 }
 
-/// One immutable sealed batch: the dirty keys of one capture, each with
-/// its full sketch serialized in wire format v2.
+/// One immutable sealed batch: the dirty keys of one capture, each as a
+/// typed delta. Entry order within a batch is significant (tombstone
+/// before re-created sketch for the same key).
 #[derive(Debug)]
 pub struct SealedBatch {
     /// Position in the log (1-based, consecutive across sealed batches;
@@ -85,9 +92,10 @@ pub struct SealedBatch {
     /// Registry logical clock when the batch was captured (diagnostic —
     /// ties a batch back to [`SketchRegistry::now`] ticks).
     pub clock: u64,
-    /// `(key, sketch wire-v2 bytes)` per dirty key.
-    pub entries: Vec<(u64, Vec<u8>)>,
-    /// Payload size used for retention accounting.
+    /// `(key, delta)` per dirty key, in drain order.
+    pub entries: Vec<(u64, SketchDelta)>,
+    /// Encoded entry size (bodies + per-entry wire overhead), used for
+    /// retention accounting and the batch split cap.
     pub bytes: usize,
 }
 
@@ -98,6 +106,16 @@ pub struct ReplicationLogStats {
     pub sealed_batches: u64,
     /// Entries (key frames) sealed since start.
     pub sealed_entries: u64,
+    /// Of those, eviction tombstones.
+    pub sealed_tombstones: u64,
+    /// Of those, changed-register diffs.
+    pub sealed_diff_entries: u64,
+    /// Of those, full-sketch resends.
+    pub sealed_full_entries: u64,
+    /// Encoded entry bytes sealed since start (including rotated-out
+    /// batches) — with `sealed_entries`, the bytes-per-replicated-key
+    /// input of `benches/replication_lag.rs`.
+    pub sealed_bytes: u64,
     /// Batches currently retained for cursor resume.
     pub retained_batches: usize,
     /// Entry-payload bytes currently retained.
@@ -130,6 +148,10 @@ struct LogInner {
     retained_bytes: usize,
     sealed_batches: u64,
     sealed_entries: u64,
+    sealed_tombstones: u64,
+    sealed_diff_entries: u64,
+    sealed_full_entries: u64,
+    sealed_bytes: u64,
 }
 
 /// The shared, internally locked replication log. The lock guards only
@@ -138,6 +160,11 @@ struct LogInner {
 #[derive(Debug)]
 pub struct ReplicationLog {
     inner: Mutex<LogInner>,
+    /// Serializes whole [`ReplicationLog::capture`] calls (drain
+    /// through seal) against each other, so log order always equals
+    /// drain order, without making subscribers' `inner` reads wait out
+    /// a drain's shard walks and sketch serialization.
+    capture_gate: Mutex<()>,
     /// This log incarnation's id, carried in `SUBSCRIBE`/`FULL_SYNC`
     /// frames so followers can tell a restarted primary (fresh seq
     /// numbering) from the one that issued their cursor.
@@ -184,7 +211,12 @@ impl ReplicationLog {
                 retained_bytes: 0,
                 sealed_batches: 0,
                 sealed_entries: 0,
+                sealed_tombstones: 0,
+                sealed_diff_entries: 0,
+                sealed_full_entries: 0,
+                sealed_bytes: 0,
             }),
+            capture_gate: Mutex::new(()),
             epoch: unique_epoch(),
             capturing: AtomicU64::new(0),
         }
@@ -221,10 +253,16 @@ impl ReplicationLog {
     /// [`MAX_BATCH_BYTES`], so no single `DELTA_BATCH` frame can
     /// approach the protocol payload cap — rotating old batches past
     /// `retain_bytes`. Returns the last sealed seq, or `None` when
-    /// nothing was dirty. Concurrent captures are safe (disjoint
-    /// drains; duplicates are idempotent max-merges on the follower),
-    /// but one capturer — the server's capture thread — is the intended
-    /// shape; tests call this directly to force a deterministic flush.
+    /// nothing was dirty. Concurrent captures are safe: drain and seal
+    /// happen under one hold of a dedicated capture gate, so racing
+    /// capture calls serialize whole and log order always equals drain
+    /// order. (With tombstones in the stream that is load-bearing, not
+    /// a nicety — if a capturer could drain a key's tombstone, stall,
+    /// and seal it *after* a second capturer sealed the re-created
+    /// key's sketch, followers would apply resend-then-tombstone and
+    /// delete a live key.) One capturer — the server's capture thread —
+    /// is still the intended shape; tests call this directly to force a
+    /// deterministic flush.
     pub fn capture(&self, registry: &SketchRegistry<u64>, retain_bytes: usize) -> Option<u64> {
         self.capturing.fetch_add(1, Ordering::SeqCst);
         let sealed = self.capture_inner(registry, retain_bytes);
@@ -233,19 +271,29 @@ impl ReplicationLog {
     }
 
     fn capture_inner(&self, registry: &SketchRegistry<u64>, retain_bytes: usize) -> Option<u64> {
-        let entries = registry.drain_dirty_sketches();
+        // The capture gate is held from before the drain until the seal
+        // completes: racing capture calls serialize *whole*, so a drain
+        // that saw a key's tombstone can never have its seal overtaken
+        // by a later drain that saw the key re-created. Sealing itself
+        // takes the inner lock only briefly — subscribers reading the
+        // ring are never blocked behind a drain's shard walks and
+        // sketch serialization.
+        let _gate = self.capture_gate.lock().unwrap_or_else(PoisonError::into_inner);
+        let entries = registry.drain_dirty_deltas();
         if entries.is_empty() {
             return None;
         }
         let clock = registry.now();
-        // Greedy chunking; the lock is held across the whole drain so
-        // its chunks get consecutive seqs with nothing interleaved.
         let mut inner = self.lock();
+        // Greedy chunking; chunks get consecutive seqs with nothing
+        // interleaved, and drain order is preserved across chunk
+        // boundaries, so a tombstone and its re-created sketch stay
+        // ordered even when they land in consecutive batches.
         let mut last_seq = 0;
-        let mut chunk: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut chunk: Vec<(u64, SketchDelta)> = Vec::new();
         let mut chunk_bytes = 0usize;
-        for (key, bytes) in entries {
-            let entry_bytes = 12 + bytes.len();
+        for (key, delta) in entries {
+            let entry_bytes = DELTA_ENTRY_OVERHEAD + delta.body_len();
             if !chunk.is_empty() && chunk_bytes + entry_bytes > MAX_BATCH_BYTES {
                 last_seq = Self::seal_locked(
                     &mut inner,
@@ -256,7 +304,7 @@ impl ReplicationLog {
                 );
                 chunk_bytes = 0;
             }
-            chunk.push((key, bytes));
+            chunk.push((key, delta));
             chunk_bytes += entry_bytes;
         }
         if !chunk.is_empty() {
@@ -270,7 +318,7 @@ impl ReplicationLog {
     /// just-caught-up follower's cursor points at.
     fn seal_locked(
         inner: &mut LogInner,
-        entries: Vec<(u64, Vec<u8>)>,
+        entries: Vec<(u64, SketchDelta)>,
         bytes: usize,
         clock: u64,
         retain_bytes: usize,
@@ -278,10 +326,18 @@ impl ReplicationLog {
         let n = entries.len() as u64;
         let seq = inner.next_seq;
         inner.next_seq += 1;
+        for (_, delta) in &entries {
+            match delta {
+                SketchDelta::Tombstone => inner.sealed_tombstones += 1,
+                SketchDelta::RegisterDiff(_) => inner.sealed_diff_entries += 1,
+                SketchDelta::Full(_) => inner.sealed_full_entries += 1,
+            }
+        }
         inner.batches.push_back(Arc::new(SealedBatch { seq, clock, entries, bytes }));
         inner.retained_bytes += bytes;
         inner.sealed_batches += 1;
         inner.sealed_entries += n;
+        inner.sealed_bytes += bytes as u64;
         while inner.retained_bytes > retain_bytes && inner.batches.len() > 1 {
             if let Some(dropped) = inner.batches.pop_front() {
                 inner.retained_bytes -= dropped.bytes;
@@ -313,11 +369,43 @@ impl ReplicationLog {
         }
     }
 
+    /// Deterministic drain barrier for tests, benches, examples and
+    /// controlled shutdown: force-capture until the registry reports no
+    /// dirty keys, no capture (this call's or the server's background
+    /// thread's) is in flight, and the head stopped moving across the
+    /// check — the returned head is then final, and a follower that has
+    /// applied it holds everything. Batches are sealed with unbounded
+    /// retention so a catching-up follower can still fetch them. Panics
+    /// if `timeout` elapses first (this is a barrier for controlled
+    /// environments, not a serving path).
+    pub fn seal_all(&self, registry: &SketchRegistry<u64>, timeout: Duration) -> u64 {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            self.capture(registry, usize::MAX);
+            let latest = self.latest_seq();
+            if registry.dirty_keys() == 0
+                && self.captures_in_flight() == 0
+                && self.latest_seq() == latest
+            {
+                return latest;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "replication never fully drained within {timeout:?}"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
     pub fn stats(&self) -> ReplicationLogStats {
         let inner = self.lock();
         ReplicationLogStats {
             sealed_batches: inner.sealed_batches,
             sealed_entries: inner.sealed_entries,
+            sealed_tombstones: inner.sealed_tombstones,
+            sealed_diff_entries: inner.sealed_diff_entries,
+            sealed_full_entries: inner.sealed_full_entries,
+            sealed_bytes: inner.sealed_bytes,
             retained_batches: inner.batches.len(),
             retained_bytes: inner.retained_bytes,
             latest_seq: inner.next_seq - 1,
@@ -362,13 +450,19 @@ mod tests {
         assert_eq!(stats.latest_seq, 2);
         assert_eq!(stats.oldest_retained_seq, Some(1));
 
-        // Batch entries decode as the keys' sketches at capture time.
+        // Batch entries decode as the keys' sketches at capture time
+        // (fresh sparse keys resend Full).
         match log.read_after(0) {
             LogRead::Batch(b) => {
                 assert_eq!(b.seq, 1);
                 assert_eq!(b.entries.len(), 2);
-                for (_, bytes) in &b.entries {
-                    HllSketch::from_bytes(bytes).unwrap();
+                for (_, delta) in &b.entries {
+                    match delta {
+                        SketchDelta::Full(bytes) => {
+                            HllSketch::from_bytes(bytes).unwrap();
+                        }
+                        other => panic!("fresh key must seal Full, got {other:?}"),
+                    }
                 }
             }
             other => panic!("expected batch 1, got {other:?}"),
@@ -378,6 +472,39 @@ mod tests {
             other => panic!("expected batch 2, got {other:?}"),
         }
         assert!(matches!(log.read_after(2), LogRead::CaughtUp));
+    }
+
+    #[test]
+    fn evictions_seal_ordered_tombstones() {
+        let reg = registry();
+        let log = ReplicationLog::new();
+        reg.ingest(1, &[1, 2, 3]);
+        reg.ingest(2, &[4]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(1));
+
+        // Evict key 1; evict and re-create key 2. One capture must seal
+        // a tombstone for 1 and tombstone-then-full for 2, in order.
+        reg.evict(&1);
+        reg.evict(&2);
+        reg.ingest(2, &[5, 6]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(2));
+        match log.read_after(1) {
+            LogRead::Batch(b) => {
+                let for_key = |key: u64| -> Vec<&SketchDelta> {
+                    b.entries.iter().filter(|(k, _)| *k == key).map(|(_, d)| d).collect()
+                };
+                assert_eq!(for_key(1), vec![&SketchDelta::Tombstone]);
+                let two = for_key(2);
+                assert_eq!(two.len(), 2);
+                assert_eq!(two[0], &SketchDelta::Tombstone, "tombstone must precede resend");
+                assert!(matches!(two[1], SketchDelta::Full(_)));
+            }
+            other => panic!("expected batch 2, got {other:?}"),
+        }
+        let stats = log.stats();
+        assert_eq!(stats.sealed_tombstones, 2);
+        assert_eq!(stats.sealed_full_entries, 3); // keys 1+2 fresh, key 2 reborn
+        assert!(stats.sealed_bytes > 0);
     }
 
     #[test]

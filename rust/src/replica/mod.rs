@@ -14,9 +14,11 @@
 //! # Pieces
 //!
 //! * [`ReplicationLog`] (+ [`ReplicationConfig`]) — primary-side:
-//!   dirty-key drains ([`crate::registry::SketchRegistry::drain_dirty_sketches`])
-//!   sealed into ordered `Arc`-shared batches, retained in a
-//!   byte-bounded ring for cursor resume;
+//!   typed dirty drains
+//!   ([`crate::registry::SketchRegistry::drain_dirty_deltas`]: register
+//!   diffs / full sketches / eviction tombstones) sealed into ordered
+//!   `Arc`-shared batches, retained in a byte-bounded ring for cursor
+//!   resume;
 //! * the capture thread and subscriber streaming live in
 //!   [`crate::server`] (`ServerConfig::replication` turns a
 //!   [`crate::server::SketchServer`] into a primary; `SUBSCRIBE` flips
@@ -32,18 +34,44 @@
 //!
 //! # Semantics and limits
 //!
-//! Replication ships *additions*: per-key max-merge frames and full
-//! images. Evictions do **not** propagate — a follower keeps serving
-//! keys the primary has dropped. For append-mostly flow counting this
-//! is exactly right; an evicting primary (TTL sweeper, budget) paired
-//! with a follower will diverge on evicted keys until the follower's
-//! next full sync — and a primary that evicts a key and then re-ingests
-//! it under the same name diverges on that key (the follower max-merges
-//! old and new state). Tombstone frames are the queued follow-on
-//! (ROADMAP). A `FULL_SYNC` body is one in-band frame, so registries
-//! whose snapshot image exceeds the frame cap
-//! ([`crate::server::MAX_PAYLOAD`]) must bootstrap followers from a
-//! snapshot file instead.
+//! Replication ships typed per-key deltas (wire-v3 `DELTA_BATCH`
+//! entries):
+//!
+//! * **register diffs** — the exact dense registers that moved since
+//!   the last capture (a handful of 5-byte entries instead of the full
+//!   2^p-byte register file; the dirty tracker spills to a full resend
+//!   past a density threshold), applied as per-register max-merges;
+//! * **full sketches** — sparse-mode keys, merges, spilled diffs and
+//!   re-created keys, applied through
+//!   [`crate::registry::SketchRegistry::merge_sketch`];
+//! * **tombstones** — evictions (explicit, TTL sweep, budget), applied
+//!   as removals, so an evicting primary stays convergent with its
+//!   followers instead of leaving them grow-only. A key evicted and
+//!   re-created between two captures drains as tombstone *then* new
+//!   sketch; batch entries apply in order, which is what stops a
+//!   follower from max-merging the dead incarnation's registers into
+//!   the new one.
+//!
+//! A `FULL_SYNC` *replaces* follower state (validated whole before the
+//! swap, so a bad image halts with last-good state still serving):
+//! when tombstone batches rotate out of log retention before a
+//! disconnected follower resyncs, the stale-cursor full sync is what
+//! removes the keys the primary dropped — merge-only application would
+//! resurrect them forever. Legacy (pre-tombstone) subscribers
+//! negotiate their delta wire in `SUBSCRIBE`; a v2 subscriber receives
+//! full-sketch-only batches (diffs inflated, tombstones dropped —
+//! grow-only, the semantics it was built for), and a follower that
+//! cannot decode its primary's frames halts with a typed error instead
+//! of reconnect-looping.
+//!
+//! One inherent gap remains: words ingested into a key that is evicted
+//! before the next capture never reach the follower's *global* union
+//! (the primary's global sketch counted them; the per-key delta died
+//! with the key). Live-key state — key set, per-key registers and
+//! estimates — converges bit-exactly regardless. A `FULL_SYNC` body is
+//! one in-band frame, so registries whose snapshot image exceeds the
+//! frame cap ([`crate::server::MAX_PAYLOAD`]) must bootstrap followers
+//! from a snapshot file instead.
 //!
 //! ```no_run
 //! use std::sync::Arc;

@@ -12,8 +12,9 @@
 //!   the seed-carrying sketch wire format v2, `Stats`, `Evict` with
 //!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`, plus the
 //!   replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
-//!   `DeltaBatch`), with typed error frames and strict, panic-free
-//!   decoding;
+//!   `DeltaBatch` — wire-v3 typed delta entries: register diffs,
+//!   full sketches, eviction tombstones), with typed error frames and
+//!   strict, panic-free decoding;
 //! * [`server`] — a multi-threaded [`std::net::TcpListener`] server:
 //!   one thread per connection, per-connection and aggregate stats,
 //!   graceful shutdown that joins every thread, an optional background
@@ -63,7 +64,8 @@ pub use protocol::{
 };
 pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer, SweeperConfig};
 pub use snapshot::{
-    decode_snapshot_bytes, read_snapshot, read_snapshot_contents, restore_from_bytes,
-    restore_registry, snapshot_to_vec, write_snapshot, SnapshotContents, SnapshotError,
-    SnapshotSummary, SNAPSHOT_MAGIC, SNAPSHOT_MAGIC_V1, SNAPSHOT_VERSION, SNAPSHOT_VERSION_V1,
+    decode_snapshot_bytes, read_snapshot, read_snapshot_contents, replace_from_bytes,
+    restore_from_bytes, restore_registry, snapshot_to_vec, write_snapshot, SnapshotContents,
+    SnapshotError, SnapshotSummary, SNAPSHOT_MAGIC, SNAPSHOT_MAGIC_V1, SNAPSHOT_VERSION,
+    SNAPSHOT_VERSION_V1,
 };

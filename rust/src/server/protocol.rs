@@ -26,7 +26,7 @@
 //! | `STATS`           | empty                                                 |
 //! | `EVICT`           | policy u8 (0=key, 1=idle, 2=budget, 3=idle_wall) · argument u64 |
 //! | `SNAPSHOT`        | empty                                                 |
-//! | `SUBSCRIBE`       | epoch u64 · cursor u64 (epoch 0 or cursor 0 = bootstrap; else resume after this seq of that log incarnation) |
+//! | `SUBSCRIBE`       | epoch u64 · cursor u64 · wire u8 (epoch 0 or cursor 0 = bootstrap; else resume after this seq of that log incarnation; wire = newest delta format the subscriber reads, legacy 16-byte payloads imply 2) |
 //! | `REPLICA_ACK`     | cursor u64 (highest replication seq applied)          |
 //!
 //! # Response payloads
@@ -43,6 +43,7 @@
 //! | `SNAPSHOT_DONE`         | keys u64 · file bytes u64                      |
 //! | `FULL_SYNC`             | epoch u64 · cursor u64 · len u32 · len × snapshot-format bytes |
 //! | `DELTA_BATCH`           | seq u64 · count u32 · count × (key u64 · len u32 · sketch wire-v2 bytes) |
+//! | `DELTA_BATCH_V3`        | seq u64 · count u32 · count × (key u64 · kind u8 · len u32 · len × body) |
 //! | `ERROR`                 | code u8 · msg_len u32 · msg_len × utf-8 bytes  |
 //!
 //! # Replication frames
@@ -52,7 +53,7 @@
 //! cursor is 0 (bootstrap), carries an epoch from a different log
 //! incarnation (a restarted primary resets seq numbering — the epoch
 //! is what makes the reset detectable), or is no longer covered by the
-//! retained delta log; then it streams `DELTA_BATCH` frames as the
+//! retained delta log; then it streams `DELTA_BATCH_V3` frames as the
 //! capture thread seals them. The follower sends `REPLICA_ACK` frames
 //! back on the same socket (the primary bounds unacked batches in
 //! flight). A `FULL_SYNC`
@@ -60,6 +61,23 @@
 //! of [`super::snapshot`], global-union record included), so it is
 //! subject to the [`MAX_PAYLOAD`] frame cap — registries whose image
 //! exceeds it must bootstrap followers from a snapshot file instead.
+//!
+//! `DELTA_BATCH_V3` is the wire-v3 delta entry format: each entry is
+//! typed by a `kind` byte (see [`delta_kind`]) —
+//!
+//! | kind | name           | body                                           |
+//! |------|----------------|------------------------------------------------|
+//! | 0    | `FULL`         | the key's full sketch, wire format v2          |
+//! | 1    | `REGISTER_DIFF`| changed registers, [`crate::hll::encode_register_diff`] format |
+//! | 2    | `TOMBSTONE`    | empty (`len` must be 0) — the key was evicted  |
+//!
+//! Followers apply a batch's entries **in order**: a key evicted and
+//! re-created between captures arrives as a tombstone immediately
+//! followed by its new full sketch, which is what keeps follower state
+//! from max-merging the dead incarnation into the new one. The legacy
+//! `DELTA_BATCH` (wire v2: every entry a full sketch, evictions never
+//! shipped) is still decoded for compatibility with v2 primaries, but
+//! this server only ever *sends* v3.
 //!
 //! The `MERGE_SKETCH` body reuses the seed-carrying sketch wire format v2
 //! (see [`crate::hll::sketch`]), so a sketch built with a nonzero hash
@@ -74,7 +92,7 @@
 
 use std::io::{self, Read};
 
-use crate::registry::RegistryStats;
+use crate::registry::{RegistryStats, SketchDelta};
 
 /// Frame magic: ASCII "HL".
 pub const MAGIC: [u8; 2] = *b"HL";
@@ -109,8 +127,40 @@ pub mod opcodes {
     pub const SNAPSHOT_DONE: u8 = 0x88;
     pub const FULL_SYNC: u8 = 0x89;
     pub const DELTA_BATCH: u8 = 0x8A;
+    pub const DELTA_BATCH_V3: u8 = 0x8B;
     pub const ERROR: u8 = 0xEE;
 }
+
+/// Entry kind tags of the `DELTA_BATCH_V3` payload (wire-v3 delta
+/// entries; see the module docs).
+pub mod delta_kind {
+    /// Body is the key's full sketch in wire format v2.
+    pub const FULL: u8 = 0;
+    /// Body is a changed-register diff
+    /// ([`crate::hll::encode_register_diff`] format).
+    pub const REGISTER_DIFF: u8 = 1;
+    /// No body: the key was evicted on the primary.
+    pub const TOMBSTONE: u8 = 2;
+}
+
+/// Fixed wire overhead of one `DELTA_BATCH_V3` entry: key (8) + kind
+/// (1) + body length (4). The replication log uses it for batch-size
+/// accounting so an encoded frame can never outgrow what the log
+/// budgeted.
+pub const DELTA_ENTRY_OVERHEAD: usize = 13;
+
+/// Delta wire generation a subscriber may request in `SUBSCRIBE`:
+/// legacy full-sketch-only `DELTA_BATCH` entries. A 16-byte (pre-wire-
+/// field) `SUBSCRIBE` payload decodes as this, so old followers keep
+/// working against new primaries — they get v2 frames with register
+/// diffs inflated to full sketches and tombstones dropped (grow-only,
+/// exactly the semantics they were built for).
+pub const DELTA_WIRE_V2: u8 = 2;
+
+/// Delta wire generation with typed entries (`DELTA_BATCH_V3`):
+/// register diffs and eviction tombstones. What current followers
+/// request.
+pub const DELTA_WIRE_V3: u8 = 3;
 
 /// Errors reading or decoding a frame.
 #[derive(Debug)]
@@ -213,8 +263,13 @@ pub enum Request {
     /// Flip this connection into a replication stream, resuming after
     /// replication seq `cursor` of log incarnation `epoch` (epoch 0 or
     /// cursor 0 = fresh follower, bootstrap me; an epoch that is not
-    /// the primary's current one also forces a bootstrap).
-    Subscribe { epoch: u64, cursor: u64 },
+    /// the primary's current one also forces a bootstrap). `wire` is
+    /// the newest delta wire generation the subscriber understands
+    /// ([`DELTA_WIRE_V2`] / [`DELTA_WIRE_V3`]); the primary streams at
+    /// `min(wire, v3)`, downgrading typed entries for legacy
+    /// subscribers. A legacy 16-byte payload (no wire field) decodes
+    /// as [`DELTA_WIRE_V2`].
+    Subscribe { epoch: u64, cursor: u64, wire: u8 },
     /// Follower → primary on a subscription stream: everything up to
     /// `cursor` has been applied (feeds the primary's ack window).
     ReplicaAck { cursor: u64 },
@@ -258,11 +313,17 @@ pub enum Response {
     /// the follower's replication position is `cursor` within log
     /// incarnation `epoch` (the pair it must resume with later).
     FullSync { epoch: u64, cursor: u64, body: Vec<u8> },
-    /// Primary → follower: one sealed batch of per-key sketch frames
-    /// (each entry is the key's full sketch in wire format v2 at capture
-    /// time; applying is a bucket-wise max merge, so replay and
-    /// duplication are harmless).
+    /// Primary → follower, legacy wire v2: one sealed batch of per-key
+    /// sketch frames (every entry a full sketch; evictions never
+    /// shipped). Decoded for compatibility with old primaries; this
+    /// server only sends [`Response::DeltaBatchV3`].
     DeltaBatch { seq: u64, entries: Vec<(u64, Vec<u8>)> },
+    /// Primary → follower, wire v3: one sealed batch of typed delta
+    /// entries (tombstone / register diff / full sketch — see
+    /// [`delta_kind`] and the module docs). Diff and full entries are
+    /// idempotent max-merges; entries must be applied in order so
+    /// tombstones sequence correctly against re-created keys.
+    DeltaBatchV3 { seq: u64, entries: Vec<(u64, SketchDelta)> },
     Error { code: ErrorCode, message: String },
 }
 
@@ -280,9 +341,7 @@ fn frame(opcode: u8, payload: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Encode a `DELTA_BATCH` frame straight from a sealed batch's borrowed
-/// entries — the primary's subscriber-streaming hot path (batches are
-/// shared `Arc`s across subscribers; no entry clone per send).
+/// Encode a legacy `DELTA_BATCH` (wire v2) frame from borrowed entries.
 pub fn encode_delta_batch(seq: u64, entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
     let payload_len = 12 + entries.iter().map(|(_, b)| 12 + b.len()).sum::<usize>();
     let mut payload = Vec::with_capacity(payload_len);
@@ -294,6 +353,30 @@ pub fn encode_delta_batch(seq: u64, entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
         payload.extend_from_slice(bytes);
     }
     frame(opcodes::DELTA_BATCH, &payload)
+}
+
+/// Encode a `DELTA_BATCH_V3` frame straight from a sealed batch's
+/// borrowed typed entries — the primary's subscriber-streaming hot path
+/// (batches are shared `Arc`s across subscribers; no entry clone per
+/// send).
+pub fn encode_delta_batch_v3(seq: u64, entries: &[(u64, SketchDelta)]) -> Vec<u8> {
+    let payload_len =
+        12 + entries.iter().map(|(_, d)| DELTA_ENTRY_OVERHEAD + d.body_len()).sum::<usize>();
+    let mut payload = Vec::with_capacity(payload_len);
+    payload.extend_from_slice(&seq.to_le_bytes());
+    payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (key, delta) in entries {
+        payload.extend_from_slice(&key.to_le_bytes());
+        let (kind, body): (u8, &[u8]) = match delta {
+            SketchDelta::Full(b) => (delta_kind::FULL, b.as_slice()),
+            SketchDelta::RegisterDiff(b) => (delta_kind::REGISTER_DIFF, b.as_slice()),
+            SketchDelta::Tombstone => (delta_kind::TOMBSTONE, &[]),
+        };
+        payload.push(kind);
+        payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        payload.extend_from_slice(body);
+    }
+    frame(opcodes::DELTA_BATCH_V3, &payload)
 }
 
 /// Encode an `INSERT_BATCH` frame straight from borrowed words — the
@@ -337,10 +420,11 @@ impl Request {
                 frame(opcodes::EVICT, &payload)
             }
             Request::Snapshot => frame(opcodes::SNAPSHOT, &[]),
-            Request::Subscribe { epoch, cursor } => {
-                let mut payload = Vec::with_capacity(16);
+            Request::Subscribe { epoch, cursor, wire } => {
+                let mut payload = Vec::with_capacity(17);
                 payload.extend_from_slice(&epoch.to_le_bytes());
                 payload.extend_from_slice(&cursor.to_le_bytes());
+                payload.push(*wire);
                 frame(opcodes::SUBSCRIBE, &payload)
             }
             Request::ReplicaAck { cursor } => {
@@ -399,7 +483,19 @@ impl Request {
                 Request::Evict(policy)
             }
             opcodes::SNAPSHOT => Request::Snapshot,
-            opcodes::SUBSCRIBE => Request::Subscribe { epoch: r.u64()?, cursor: r.u64()? },
+            opcodes::SUBSCRIBE => {
+                let epoch = r.u64()?;
+                let cursor = r.u64()?;
+                // Pre-wire-field subscribers (16-byte payload) speak
+                // the legacy full-sketch delta format.
+                let wire = if r.remaining() == 0 { DELTA_WIRE_V2 } else { r.u8()? };
+                if wire < DELTA_WIRE_V2 {
+                    return Err(ProtocolError::Malformed(format!(
+                        "subscriber delta wire {wire} predates the oldest supported ({DELTA_WIRE_V2})"
+                    )));
+                }
+                Request::Subscribe { epoch, cursor, wire }
+            }
             opcodes::REPLICA_ACK => Request::ReplicaAck { cursor: r.u64()? },
             other => return Err(ProtocolError::BadOpcode(other)),
         };
@@ -439,6 +535,7 @@ impl Response {
             Response::SnapshotDone { .. } => "SnapshotDone",
             Response::FullSync { .. } => "FullSync",
             Response::DeltaBatch { .. } => "DeltaBatch",
+            Response::DeltaBatchV3 { .. } => "DeltaBatchV3",
             Response::Error { .. } => "Error",
         }
     }
@@ -482,6 +579,7 @@ impl Response {
                 frame(opcodes::FULL_SYNC, &payload)
             }
             Response::DeltaBatch { seq, entries } => encode_delta_batch(*seq, entries),
+            Response::DeltaBatchV3 { seq, entries } => encode_delta_batch_v3(*seq, entries),
             Response::Error { code, message } => {
                 let msg = message.as_bytes();
                 let mut payload = Vec::with_capacity(5 + msg.len());
@@ -540,6 +638,47 @@ impl Response {
                     entries.push((key, r.bytes(len)?.to_vec()));
                 }
                 Response::DeltaBatch { seq, entries }
+            }
+            opcodes::DELTA_BATCH_V3 => {
+                let seq = r.u64()?;
+                let count = r.u32()?;
+                // Same alloc guard as DELTA_BATCH: every entry needs at
+                // least its 13-byte header, checked in u64 up front so a
+                // hostile count cannot wrap the multiply or drive
+                // `with_capacity`.
+                if (r.remaining() as u64) < count as u64 * DELTA_ENTRY_OVERHEAD as u64 {
+                    return Err(ProtocolError::Malformed(format!(
+                        "delta batch v3 declares {count} entries but carries {} payload bytes",
+                        r.remaining()
+                    )));
+                }
+                let mut entries = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    let key = r.u64()?;
+                    let kind = r.u8()?;
+                    let len = r.u32()? as usize;
+                    let delta = match kind {
+                        delta_kind::FULL => SketchDelta::Full(r.bytes(len)?.to_vec()),
+                        delta_kind::REGISTER_DIFF => {
+                            SketchDelta::RegisterDiff(r.bytes(len)?.to_vec())
+                        }
+                        delta_kind::TOMBSTONE => {
+                            if len != 0 {
+                                return Err(ProtocolError::Malformed(format!(
+                                    "tombstone entry for key {key} declares a {len}-byte body"
+                                )));
+                            }
+                            SketchDelta::Tombstone
+                        }
+                        other => {
+                            return Err(ProtocolError::Malformed(format!(
+                                "unknown delta entry kind {other}"
+                            )))
+                        }
+                    };
+                    entries.push((key, delta));
+                }
+                Response::DeltaBatchV3 { seq, entries }
             }
             opcodes::ERROR => {
                 let code = r.u8()?;
@@ -687,9 +826,40 @@ mod tests {
         roundtrip_request(Request::Evict(EvictPolicy::Budget { max_memory_bytes: 1 << 30 }));
         roundtrip_request(Request::Evict(EvictPolicy::IdleWall { max_age_secs: 3_600 }));
         roundtrip_request(Request::Snapshot);
-        roundtrip_request(Request::Subscribe { epoch: 0, cursor: 0 });
-        roundtrip_request(Request::Subscribe { epoch: u64::MAX, cursor: u64::MAX });
+        roundtrip_request(Request::Subscribe { epoch: 0, cursor: 0, wire: DELTA_WIRE_V3 });
+        roundtrip_request(Request::Subscribe {
+            epoch: u64::MAX,
+            cursor: u64::MAX,
+            wire: DELTA_WIRE_V2,
+        });
         roundtrip_request(Request::ReplicaAck { cursor: 12345 });
+    }
+
+    #[test]
+    fn legacy_16_byte_subscribe_decodes_as_wire_v2() {
+        // A pre-wire-field subscriber ships only epoch + cursor; it
+        // must decode as a v2 (full-sketch) subscriber, not an error.
+        let mut payload = 7u64.to_le_bytes().to_vec();
+        payload.extend_from_slice(&42u64.to_le_bytes());
+        assert_eq!(
+            Request::decode(opcodes::SUBSCRIBE, &payload).unwrap(),
+            Request::Subscribe { epoch: 7, cursor: 42, wire: DELTA_WIRE_V2 }
+        );
+        // A wire generation below v2 does not exist.
+        payload.push(1);
+        assert!(matches!(
+            Request::decode(opcodes::SUBSCRIBE, &payload),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Trailing bytes past the wire field are still rejected.
+        let mut fat = 7u64.to_le_bytes().to_vec();
+        fat.extend_from_slice(&42u64.to_le_bytes());
+        fat.push(DELTA_WIRE_V3);
+        fat.push(0);
+        assert!(matches!(
+            Request::decode(opcodes::SUBSCRIBE, &fat),
+            Err(ProtocolError::Malformed(_))
+        ));
     }
 
     #[test]
@@ -720,6 +890,16 @@ mod tests {
         roundtrip_response(Response::DeltaBatch {
             seq: 77,
             entries: vec![(1, vec![1, 2, 3]), (u64::MAX, vec![]), (9, vec![0; 64])],
+        });
+        roundtrip_response(Response::DeltaBatchV3 { seq: 0, entries: vec![] });
+        roundtrip_response(Response::DeltaBatchV3 {
+            seq: 91,
+            entries: vec![
+                (1, SketchDelta::Tombstone),
+                (1, SketchDelta::Full(vec![7, 8, 9])),
+                (2, SketchDelta::RegisterDiff(vec![1, 2, 3, 4, 5])),
+                (u64::MAX, SketchDelta::Tombstone),
+            ],
         });
         roundtrip_response(Response::Error {
             code: ErrorCode::ConfigMismatch,
@@ -784,6 +964,100 @@ mod tests {
             Response::decode(opcodes::FULL_SYNC, &fs),
             Err(ProtocolError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn hostile_delta_batch_v3_payloads_are_typed_errors() {
+        let good = Response::DeltaBatchV3 {
+            seq: 4,
+            entries: vec![
+                (1, SketchDelta::Full(vec![1, 2, 3])),
+                (2, SketchDelta::Tombstone),
+                (3, SketchDelta::RegisterDiff(vec![9])),
+            ],
+        }
+        .encode();
+        let payload = &good[FRAME_HEADER_LEN..];
+        assert!(Response::decode(opcodes::DELTA_BATCH_V3, payload).is_ok());
+        // Truncation anywhere inside the entries is a typed error.
+        for cut in [0usize, 8, 12, 13, 21, 25, payload.len() - 1] {
+            assert!(
+                matches!(
+                    Response::decode(opcodes::DELTA_BATCH_V3, &payload[..cut]),
+                    Err(ProtocolError::Malformed(_))
+                ),
+                "cut at {cut} must be Malformed"
+            );
+        }
+        // Trailing bytes rejected.
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &padded),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A count the payload cannot carry is rejected before allocation.
+        let mut huge = 1u64.to_le_bytes().to_vec();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &huge),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // An unknown entry kind is rejected.
+        let mut bad_kind = 9u64.to_le_bytes().to_vec(); // seq
+        bad_kind.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        bad_kind.extend_from_slice(&5u64.to_le_bytes()); // key
+        bad_kind.push(7); // kind 7 does not exist
+        bad_kind.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &bad_kind),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A tombstone carrying a body is rejected.
+        let mut fat_tomb = 9u64.to_le_bytes().to_vec();
+        fat_tomb.extend_from_slice(&1u32.to_le_bytes());
+        fat_tomb.extend_from_slice(&5u64.to_le_bytes());
+        fat_tomb.push(delta_kind::TOMBSTONE);
+        fat_tomb.extend_from_slice(&3u32.to_le_bytes());
+        fat_tomb.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &fat_tomb),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A body length overrunning the payload is rejected.
+        let mut overrun = 9u64.to_le_bytes().to_vec();
+        overrun.extend_from_slice(&1u32.to_le_bytes());
+        overrun.extend_from_slice(&5u64.to_le_bytes());
+        overrun.push(delta_kind::FULL);
+        overrun.extend_from_slice(&100u32.to_le_bytes()); // claims 100 bytes
+        overrun.extend_from_slice(&[1, 2, 3]); // carries 3
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &overrun),
+            Err(ProtocolError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_and_tombstone_then_diff_entries_decode_in_order() {
+        // Entry-level duplicates and tombstone-then-diff sequences for
+        // one key are *valid wire* — apply-order semantics resolve them
+        // (the follower applies entries sequentially). The decoder must
+        // hand them through byte-exactly, in order, without panicking.
+        let entries = vec![
+            (5, SketchDelta::Full(vec![1, 1])),
+            (5, SketchDelta::Full(vec![1, 1])), // duplicate
+            (5, SketchDelta::Tombstone),
+            (5, SketchDelta::RegisterDiff(vec![2, 2])), // diff right after a tombstone
+            (5, SketchDelta::Tombstone),                // and dead again
+        ];
+        let frame = Response::DeltaBatchV3 { seq: 8, entries: entries.clone() }.encode();
+        match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
+            Response::DeltaBatchV3 { seq, entries: got } => {
+                assert_eq!(seq, 8);
+                assert_eq!(got, entries, "order and duplicates must survive the wire");
+            }
+            other => panic!("expected DeltaBatchV3, got {other:?}"),
+        }
     }
 
     #[test]

@@ -37,13 +37,13 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::protocol::{
-    encode_delta_batch, parse_header, ErrorCode, EvictPolicy, Request, Response, StatsSummary,
-    FRAME_HEADER_LEN, MAX_PAYLOAD,
+    encode_delta_batch, encode_delta_batch_v3, parse_header, ErrorCode, EvictPolicy, Request,
+    Response, StatsSummary, DELTA_WIRE_V3, FRAME_HEADER_LEN, MAX_PAYLOAD,
 };
 use super::snapshot;
-use crate::hll::{HllSketch, SketchError};
-use crate::registry::SketchRegistry;
-use crate::replica::{LogRead, ReplicationConfig, ReplicationLog};
+use crate::hll::{decode_register_diff, HllSketch, SketchError};
+use crate::registry::{SketchDelta, SketchRegistry};
+use crate::replica::{LogRead, ReplicationConfig, ReplicationLog, SealedBatch};
 
 /// Ingest frames between server-driven
 /// [`SketchRegistry::enforce_budget`] sweeps on a registry configured
@@ -494,7 +494,8 @@ fn send_full_sync(
 ) -> bool {
     let cursor = log.latest_seq();
     let body = snapshot::snapshot_to_vec(&shared.registry);
-    if body.len() as u64 + 12 > MAX_PAYLOAD as u64 {
+    // A FULL_SYNC payload is epoch (8) + cursor (8) + len (4) + body.
+    if body.len() as u64 + 20 > MAX_PAYLOAD as u64 {
         let err = Response::Error {
             code: ErrorCode::Internal,
             message: format!(
@@ -516,6 +517,60 @@ fn send_full_sync(
     true
 }
 
+/// Encode one sealed batch for a subscriber's negotiated delta wire.
+/// Current (v3) subscribers get the typed entries verbatim; legacy
+/// (v2) subscribers get the shape they understand — full sketches only:
+/// register diffs inflate into a sketch holding just those registers
+/// (zeros never lower anything under max-merge), and tombstones are
+/// dropped, leaving legacy followers grow-only exactly as they were
+/// before tombstones existed. An emptied batch still ships, so the
+/// subscriber's cursor advances past it.
+///
+/// Returns `None` when the legacy rendering cannot fit one frame: the
+/// batch was size-budgeted in *diff* bytes, and inflating every diff to
+/// a full 2^p-byte sketch can multiply it past [`MAX_PAYLOAD`] (~3600×
+/// at the paper config in the worst case). The running size is checked
+/// before each sketch is materialized — an overflowing batch allocates
+/// at most the frame cap before bailing — and the caller answers a
+/// terminal typed error instead of streaming a frame the follower's
+/// header parser would reject on every reconnect forever.
+fn encode_batch_for_wire(batch: &SealedBatch, wire: u8) -> Option<Vec<u8>> {
+    if wire >= DELTA_WIRE_V3 {
+        return Some(encode_delta_batch_v3(batch.seq, &batch.entries));
+    }
+    let mut legacy: Vec<(u64, Vec<u8>)> = Vec::with_capacity(batch.entries.len());
+    let mut total = 12u64;
+    for (key, delta) in &batch.entries {
+        match delta {
+            SketchDelta::Full(bytes) => {
+                total += 12 + bytes.len() as u64;
+                if total > MAX_PAYLOAD as u64 {
+                    return None;
+                }
+                legacy.push((*key, bytes.clone()));
+            }
+            SketchDelta::RegisterDiff(bytes) => {
+                // Sealed diffs came from our own drain; a decode failure
+                // here would be a local invariant break, so skipping the
+                // entry (follower falls back to grow-only staleness for
+                // that key until its next full resend) beats wedging the
+                // stream.
+                if let Ok((cfg, entries)) = decode_register_diff(bytes) {
+                    total += 12 + HllSketch::wire_len(&cfg) as u64;
+                    if total > MAX_PAYLOAD as u64 {
+                        return None;
+                    }
+                    let mut sketch = HllSketch::new(cfg);
+                    sketch.apply_register_diff(&entries);
+                    legacy.push((*key, sketch.to_bytes()));
+                }
+            }
+            SketchDelta::Tombstone => {}
+        }
+    }
+    Some(encode_delta_batch(batch.seq, &legacy))
+}
+
 /// A connection that sent `SUBSCRIBE`: stream sealed delta batches (and
 /// full syncs where the cursor is unservable), reading `REPLICA_ACK`
 /// frames back on the same socket. At most
@@ -529,6 +584,7 @@ fn serve_subscriber(
     log: Arc<ReplicationLog>,
     sub_epoch: u64,
     start_cursor: u64,
+    wire: u8,
 ) {
     let rcfg = shared.cfg.replication.clone().unwrap_or_default();
     // Tighter read timeout than RPC connections: the ack read doubles
@@ -557,7 +613,21 @@ fn serve_subscriber(
         while sent.saturating_sub(acked) < rcfg.ack_window {
             match log.read_after(sent) {
                 LogRead::Batch(batch) => {
-                    let frame = encode_delta_batch(batch.seq, &batch.entries);
+                    let Some(frame) = encode_batch_for_wire(&batch, wire) else {
+                        // Only legacy renderings can overflow; a v2
+                        // follower cannot take this batch in any form,
+                        // and Internal is in its terminal-halt set.
+                        let err = Response::Error {
+                            code: ErrorCode::Internal,
+                            message: format!(
+                                "batch {} inflates past the legacy frame cap; upgrade the \
+                                 follower to delta wire v3 or bootstrap it from a snapshot",
+                                batch.seq
+                            ),
+                        };
+                        let _ = write_full(stream, &err.encode(), &shared.stop);
+                        return;
+                    };
                     if !matches!(write_full(stream, &frame, &shared.stop), Ok(true)) {
                         return;
                     }
@@ -639,11 +709,11 @@ fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
         shared.stats.frames.fetch_add(1, Ordering::Relaxed);
 
         let resp = match Request::decode(opcode, &payload) {
-            Ok(Request::Subscribe { epoch, cursor }) => {
+            Ok(Request::Subscribe { epoch, cursor, wire }) => {
                 // The connection becomes a replication stream and never
                 // returns to request/response serving.
                 if let Some(log) = shared.log.clone() {
-                    serve_subscriber(&mut stream, &shared, log, epoch, cursor);
+                    serve_subscriber(&mut stream, &shared, log, epoch, cursor, wire);
                     break;
                 }
                 Response::Error {

@@ -430,6 +430,43 @@ pub fn restore_from_bytes(
     Ok(applied)
 }
 
+/// *Replace* `registry`'s contents with a snapshot image: the
+/// follower's `FULL_SYNC` apply path. A resync image is the complete,
+/// newer truth about the primary — merge-only application
+/// ([`restore_from_bytes`]) would keep keys the primary evicted, and
+/// could max-merge a dead incarnation of an evicted-then-re-created key
+/// into the new one, whenever the tombstone batches rotated out of log
+/// retention before the resync.
+///
+/// The image is decoded and config-checked in full *before* the
+/// registry is touched, so a corrupt or config/seed-mismatched image
+/// leaves existing state serving untouched (the halt-on-last-good
+/// guarantee of [`crate::replica::FollowerServer`]). Readers racing the
+/// apply may observe a partially restored registry for its duration.
+/// Returns the number of keys applied.
+pub fn replace_from_bytes(
+    registry: &SketchRegistry<u64>,
+    data: &[u8],
+) -> Result<usize, SnapshotError> {
+    let contents = decode_snapshot_bytes(data)?;
+    let want = registry.config().hll;
+    for sketch in contents.global.iter().chain(contents.entries.iter().map(|(_, s)| s)) {
+        if *sketch.config() != want {
+            return Err(SketchError::ConfigMismatch(*sketch.config(), want).into());
+        }
+    }
+    registry.clear();
+    if let Some(global) = &contents.global {
+        registry.merge_global(global)?;
+    }
+    let mut applied = 0;
+    for (key, sketch) in contents.entries {
+        registry.merge_sketch(key, sketch)?;
+        applied += 1;
+    }
+    Ok(applied)
+}
+
 /// Restore a snapshot file into `registry` (max-merge over whatever is
 /// live — see [`SketchRegistry::merge_sketch`]). Returns the number of
 /// keys applied.

@@ -1,9 +1,11 @@
 //! End-to-end tests for the primary→follower replication subsystem,
 //! over real loopback TCP sockets: bit-exact convergence with a
 //! follower killed and resumed mid-stream (cursor resume), stale-cursor
-//! full-sync fallback, read-only follower behavior, and hostile inputs
-//! (config-mismatched delta streams, replication frames aimed at the
-//! wrong server) — all typed errors, never a panic.
+//! full-sync fallback, eviction tombstones and register-diff deltas
+//! (wire v3) keeping an evicting/sweeping primary convergent, read-only
+//! follower behavior, and hostile inputs (config-mismatched delta
+//! streams, replication frames aimed at the wrong server) — all typed
+//! errors, never a panic.
 
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -11,11 +13,11 @@ use std::time::{Duration, Instant};
 
 use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
 use hll_fpga::net::KeyedFlowGen;
-use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::registry::{RegistryConfig, SketchDelta, SketchRegistry, WallClock};
 use hll_fpga::replica::{FollowerConfig, FollowerServer, ReplicaCursor, ReplicationConfig};
 use hll_fpga::server::{
     protocol, restore_from_bytes, ClientError, ErrorCode, EvictPolicy, Request, Response,
-    ServerConfig, SketchClient, SketchServer,
+    ServerConfig, SketchClient, SketchServer, SweeperConfig,
 };
 
 /// Registries in these tests use p=12 (4 KiB register files): delta
@@ -48,27 +50,39 @@ fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
     }
 }
 
-/// Force-seal everything dirty, then wait until the follower has
-/// applied up to the *final* log head — the deterministic drain barrier
-/// every convergence assertion sits behind. Loops because the primary's
-/// background capture thread may be mid-capture (drained but not yet
-/// sealed) while the manual capture runs; the head is final only once
-/// no captures are in flight and it stopped moving.
+/// Force-seal everything dirty ([`hll_fpga::replica::ReplicationLog::seal_all`],
+/// the deterministic drain barrier), then wait until the follower has
+/// applied up to the final log head — what every convergence assertion
+/// sits behind.
 fn drain(primary: &SketchServer, follower: &FollowerServer) {
     let log = primary.replication_log().expect("primary must replicate");
-    let deadline = Instant::now() + Duration::from_secs(20);
-    loop {
-        log.capture(primary.registry(), usize::MAX);
-        let latest = log.latest_seq();
-        wait_for(|| follower.cursor() >= latest, "follower to reach the log head");
-        if primary.registry().dirty_keys() == 0
-            && log.captures_in_flight() == 0
-            && log.latest_seq() == latest
-        {
-            return;
-        }
-        assert!(Instant::now() < deadline, "replication never fully drained");
-        std::thread::sleep(Duration::from_millis(2));
+    let head = log.seal_all(primary.registry(), Duration::from_secs(20));
+    wait_for(|| follower.cursor() >= head, "follower to reach the final log head");
+}
+
+/// The strongest convergence check for tests that evict: identical key
+/// sets and *register-identical* per-key sketches. (The global union is
+/// deliberately not compared here — words ingested into a key that is
+/// evicted before the next capture reach the primary's global sketch
+/// but can never reach the follower's; live-key state is what
+/// tombstoned replication guarantees, and it must be bit-exact.)
+fn assert_live_state_identical(
+    primary: &Arc<SketchRegistry<u64>>,
+    follower: &Arc<SketchRegistry<u64>>,
+) {
+    let mut p = primary.export_sketches();
+    let mut f = follower.export_sketches();
+    p.sort_by_key(|(k, _)| *k);
+    f.sort_by_key(|(k, _)| *k);
+    assert_eq!(
+        p.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+        f.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+        "key sets must match"
+    );
+    assert_eq!(p, f, "per-key register files must be identical");
+    assert_eq!(follower.merge_all(), primary.merge_all());
+    for (key, want) in primary.estimates() {
+        assert_eq!(follower.estimate(&key), Some(want), "key {key}");
     }
 }
 
@@ -192,9 +206,12 @@ fn stale_cursor_falls_back_to_full_sync() {
     assert!(!stats.halted);
     assert!(primary.stats().full_syncs_sent >= 1);
 
-    // Kill it, rotate the log well past its cursor, resume: the stale
-    // cursor must trigger another full sync — and still converge.
+    // Kill it, evict a key the follower already holds, rotate the log
+    // well past its cursor, resume: the stale cursor must trigger
+    // another full sync — one that *replaces* state, so the eviction
+    // whose tombstone rotated out of retention still takes effect.
     let cursor: ReplicaCursor = follower.shutdown();
+    assert_eq!(client.evict(EvictPolicy::Key(3)).unwrap(), 1);
     for key in 100u64..120 {
         let words: Vec<u32> = (0..200u32).map(|w| w.wrapping_add(key as u32 * 91_000)).collect();
         client.insert_batch(key, &words).unwrap();
@@ -210,6 +227,11 @@ fn stale_cursor_falls_back_to_full_sync() {
     .unwrap();
     drain(&primary, &resumed);
     assert_bit_exact(&primary_reg, &follower_reg);
+    assert_eq!(
+        follower_reg.estimate(&3),
+        None,
+        "a key evicted while the follower was rotated out must not survive the resync"
+    );
     assert!(resumed.stats().full_syncs >= 1, "stale cursor must full-sync");
     resumed.shutdown();
     primary.shutdown();
@@ -317,7 +339,7 @@ fn replication_frames_against_the_wrong_server_are_typed_errors() {
         SketchServer::start("127.0.0.1:0", plain_reg, ServerConfig::default()).unwrap();
     {
         let mut raw = TcpStream::connect(plain.local_addr()).unwrap();
-        raw.write_all(&Request::Subscribe { epoch: 0, cursor: 0 }.encode()).unwrap();
+        raw.write_all(&Request::Subscribe { epoch: 0, cursor: 0, wire: protocol::DELTA_WIRE_V3 }.encode()).unwrap();
         match protocol::read_response(&mut raw).unwrap() {
             Response::Error { code, .. } => assert_eq!(code, ErrorCode::Unsupported),
             other => panic!("expected Unsupported, got {other:?}"),
@@ -342,6 +364,267 @@ fn replication_frames_against_the_wrong_server_are_typed_errors() {
 }
 
 #[test]
+fn evictions_and_reingest_converge_bit_exactly() {
+    let (primary, primary_reg) = replicating_server(ReplicationConfig {
+        capture_interval: Duration::from_millis(5),
+        ..ReplicationConfig::default()
+    });
+    let mut client = SketchClient::connect(primary.local_addr()).unwrap();
+    let follower_reg = SketchRegistry::shared(small_cfg()).unwrap();
+    let follower = FollowerServer::start(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+    )
+    .unwrap();
+
+    // Regression for the drain-drops-evicted-keys bug: an insert acked
+    // to the client, evicted before the capture tick, must reach the
+    // stream as a tombstone (not silently vanish) — either way the
+    // follower must not end up holding key 100.
+    client.insert_batch(100, &[1, 2, 3]).unwrap();
+    assert_eq!(client.evict(EvictPolicy::Key(100)).unwrap(), 1);
+
+    // A spread of keys, including one dense enough to take the
+    // register-diff path (p=12 upgrades past ~512 sparse entries).
+    let dense_words: Vec<u32> = (0..3_000u32).map(|w| w.wrapping_mul(2_654_435_761)).collect();
+    client.insert_batch(50, &dense_words).unwrap();
+    for key in 0u64..20 {
+        let words: Vec<u32> = (0..200u32).map(|w| w.wrapping_mul(key as u32 * 97 + 11)).collect();
+        client.insert_batch(key, &words).unwrap();
+    }
+    drain(&primary, &follower);
+    assert_eq!(follower_reg.estimate(&100), None, "evicted-before-capture key must not exist");
+
+    // Touch the dense key again: only the changed registers may ship.
+    let fresh: Vec<u32> = (0..80u32).map(|w| w.wrapping_mul(77_777_777).wrapping_add(13)).collect();
+    client.insert_batch(50, &fresh).unwrap();
+    drain(&primary, &follower);
+    assert!(
+        follower.stats().diff_entries_applied > 0,
+        "steady-state dense updates must travel as register diffs"
+    );
+
+    // Evict half the keys over RPC, re-create some under the same name
+    // with different content — the tombstone-then-resend ordering must
+    // leave the follower with exactly the new incarnation's registers.
+    for key in 0u64..10 {
+        assert_eq!(client.evict(EvictPolicy::Key(key)).unwrap(), 1, "key {key}");
+    }
+    for key in 0u64..3 {
+        let reborn: Vec<u32> =
+            (0..50u32).map(|w| w.wrapping_mul(key as u32 + 5).wrapping_add(1_000_003)).collect();
+        client.insert_batch(key, &reborn).unwrap();
+    }
+    drain(&primary, &follower);
+    assert_live_state_identical(&primary_reg, &follower_reg);
+    assert!(primary_reg.estimate(&15).is_some(), "untouched keys must survive");
+    assert_eq!(follower_reg.estimate(&4), None, "evicted keys must be gone on the follower");
+    let fstats = follower.stats();
+    assert!(fstats.tombstones_applied >= 7, "evictions must arrive as tombstones");
+    assert!(!fstats.halted);
+
+    // And the whole sequence kept serving reads on the follower.
+    let mut fclient = SketchClient::connect(follower.local_addr()).unwrap();
+    assert_eq!(fclient.estimate(4).unwrap(), None);
+    assert_eq!(fclient.estimate(50).unwrap(), primary_reg.estimate(&50));
+    follower.shutdown();
+    primary.shutdown();
+}
+
+#[test]
+fn sweeper_on_primary_stays_convergent_across_kill_and_reconnect() {
+    // TTL eviction runs on the primary's background sweeper (manual
+    // wall clock) while a follower replicates; the follower is killed
+    // mid-test and resumed from its cursor with sweeps happening while
+    // it is down — tombstones must flow through the retained delta log
+    // and leave live state register-identical.
+    let (wall, clock) = WallClock::manual(1_000);
+    let primary_reg = Arc::new(
+        SketchRegistry::with_wall_clock(small_cfg(), wall).unwrap(),
+    );
+    let primary = SketchServer::start(
+        "127.0.0.1:0",
+        primary_reg.clone(),
+        ServerConfig {
+            replication: Some(ReplicationConfig {
+                capture_interval: Duration::from_millis(5),
+                ..ReplicationConfig::default()
+            }),
+            sweeper: Some(SweeperConfig {
+                interval: Duration::from_millis(20),
+                idle_max_age: Some(Duration::from_secs(30 * 60)),
+                idle_max_ticks: None,
+                enforce_budget: false,
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = SketchClient::connect(primary.local_addr()).unwrap();
+
+    // 30 keys live at wall second 1000; a follower converges on them.
+    for key in 0u64..30 {
+        let words: Vec<u32> = (0..150u32).map(|w| w.wrapping_mul(key as u32 * 31 + 7)).collect();
+        client.insert_batch(key, &words).unwrap();
+    }
+    let follower_reg = SketchRegistry::shared(small_cfg()).unwrap();
+    let f1 = FollowerServer::start(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+    )
+    .unwrap();
+    drain(&primary, &f1);
+    assert_eq!(follower_reg.len(), 30);
+
+    // Kill the follower mid-stream, then let an hour pass. Keys 25..30
+    // are touched after the jump (they survive the 30-minute TTL), a
+    // fresh key arrives, and the sweeper reaps the 25 idle keys — all
+    // while the follower is down.
+    let cursor = f1.shutdown();
+    assert!(cursor.seq > 0);
+    clock.store(1_000 + 3_600, std::sync::atomic::Ordering::Relaxed);
+    for key in 25u64..30 {
+        client.insert_batch(key, &[key as u32, key as u32 + 1]).unwrap();
+    }
+    client.insert_batch(777, &[1, 2, 3, 4]).unwrap();
+    wait_for(|| primary_reg.len() == 6, "sweeper to reap the idle keys");
+
+    // Resume from the saved cursor: tombstones and the survivors' new
+    // touches arrive as retained deltas (no full sync), and live state
+    // converges register-identically.
+    let f2 = FollowerServer::start_at_cursor(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+        cursor,
+    )
+    .unwrap();
+    drain(&primary, &f2);
+    assert_live_state_identical(&primary_reg, &follower_reg);
+    assert_eq!(follower_reg.len(), 6);
+    let stats = f2.stats();
+    assert_eq!(stats.full_syncs, 0, "cursor resume must ride the delta log");
+    assert!(stats.tombstones_applied >= 25, "sweeper evictions must arrive as tombstones");
+    assert!(!stats.halted);
+
+    // Sweeps that reap nothing new keep the pair stable.
+    drain(&primary, &f2);
+    assert_live_state_identical(&primary_reg, &follower_reg);
+    f2.shutdown();
+    primary.shutdown();
+}
+
+#[test]
+fn raw_subscriber_sees_typed_v3_tombstone_frames() {
+    use std::io::Write;
+
+    let (primary, primary_reg) = replicating_server(ReplicationConfig {
+        capture_interval: Duration::from_millis(5),
+        ..ReplicationConfig::default()
+    });
+    let mut producer = SketchClient::connect(primary.local_addr()).unwrap();
+    producer.insert_batch(1, &[10, 20, 30]).unwrap();
+    let log = primary.replication_log().unwrap();
+    wait_for(|| primary_reg.dirty_keys() == 0 && log.latest_seq() > 0, "first capture");
+
+    // Hand-rolled follower positioned at the log head: the next frames
+    // it reads are deltas, not a bootstrap image.
+    let mut raw = TcpStream::connect(primary.local_addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let head = log.latest_seq();
+    raw.write_all(&Request::Subscribe { epoch: log.epoch(), cursor: head, wire: protocol::DELTA_WIRE_V3 }.encode()).unwrap();
+
+    // Evict key 1 and re-create it: the wire must carry a DELTA_BATCH_V3
+    // with the tombstone strictly before the re-created key's sketch.
+    producer.evict(EvictPolicy::Key(1)).unwrap();
+    producer.insert_batch(1, &[40, 50]).unwrap();
+    let mut seen: Vec<(u64, SketchDelta)> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while seen.iter().filter(|(k, _)| *k == 1).count() < 2 {
+        assert!(Instant::now() < deadline, "tombstone + resend never arrived; saw {seen:?}");
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::DeltaBatchV3 { entries, .. } => seen.extend(entries),
+            other => panic!("expected DeltaBatchV3 frames, got {other:?}"),
+        }
+    }
+    // We subscribed at the head, past the original sketch's batch, so
+    // key 1's frames here are exactly the eviction and the rebirth — in
+    // that order, whether they sealed into one batch or two.
+    let key1: Vec<&SketchDelta> = seen.iter().filter(|(k, _)| *k == 1).map(|(_, d)| d).collect();
+    assert_eq!(key1[0], &SketchDelta::Tombstone, "tombstone must precede the resend: {key1:?}");
+    assert!(
+        matches!(key1[1], SketchDelta::Full(_)),
+        "re-created key must follow as a full resend: {key1:?}"
+    );
+    primary.shutdown();
+}
+
+#[test]
+fn legacy_v2_subscriber_gets_downgraded_full_sketch_frames() {
+    use std::io::Write;
+
+    let (primary, primary_reg) = replicating_server(ReplicationConfig {
+        capture_interval: Duration::from_millis(5),
+        ..ReplicationConfig::default()
+    });
+    let mut producer = SketchClient::connect(primary.local_addr()).unwrap();
+    // A dense key, so steady-state touches seal as register diffs.
+    let dense: Vec<u32> = (0..3_000u32).map(|w| w.wrapping_mul(2_654_435_761)).collect();
+    producer.insert_batch(9, &dense).unwrap();
+    let log = primary.replication_log().unwrap();
+    wait_for(|| primary_reg.dirty_keys() == 0 && log.latest_seq() > 0, "first capture");
+
+    // Subscribe with a hand-rolled *16-byte* legacy payload (epoch +
+    // cursor, no wire field) — what a pre-v3 follower sends.
+    let mut raw = TcpStream::connect(primary.local_addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let head = log.latest_seq();
+    let mut legacy = Vec::new();
+    legacy.extend_from_slice(&protocol::MAGIC);
+    legacy.push(protocol::PROTO_VERSION);
+    legacy.push(protocol::opcodes::SUBSCRIBE);
+    legacy.extend_from_slice(&16u32.to_le_bytes());
+    legacy.extend_from_slice(&log.epoch().to_le_bytes());
+    legacy.extend_from_slice(&head.to_le_bytes());
+    raw.write_all(&legacy).unwrap();
+
+    // A fresh-word touch on the dense key seals as a register diff; the
+    // legacy subscriber must receive it as a v2 DELTA_BATCH entry
+    // inflated to a full sketch holding only the changed registers.
+    let fresh: Vec<u32> = (0..50u32).map(|w| w.wrapping_mul(97_003).wrapping_add(7)).collect();
+    producer.insert_batch(9, &fresh).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut got: Option<HllSketch> = None;
+    while got.is_none() {
+        assert!(Instant::now() < deadline, "downgraded diff never arrived");
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::DeltaBatch { entries, .. } => {
+                for (key, bytes) in entries {
+                    if key == 9 {
+                        got = Some(HllSketch::from_bytes(&bytes).unwrap());
+                    }
+                }
+            }
+            other => {
+                panic!("legacy subscriber must only see v2 DeltaBatch frames, got {other:?}")
+            }
+        }
+    }
+    let sketch = got.unwrap();
+    let nonzero = sketch.registers().iter().filter(|&&r| r != 0).count();
+    assert!(
+        nonzero > 0 && nonzero <= 50,
+        "inflated diff must hold only the changed registers, got {nonzero}"
+    );
+    primary.shutdown();
+}
+
+#[test]
 fn raw_subscriber_gets_a_restorable_full_sync_image() {
     use std::io::Write;
 
@@ -354,7 +637,7 @@ fn raw_subscriber_gets_a_restorable_full_sync_image() {
 
     // Hand-rolled follower: subscribe at cursor 0, read one frame.
     let mut raw = TcpStream::connect(primary.local_addr()).unwrap();
-    raw.write_all(&Request::Subscribe { epoch: 0, cursor: 0 }.encode()).unwrap();
+    raw.write_all(&Request::Subscribe { epoch: 0, cursor: 0, wire: protocol::DELTA_WIRE_V3 }.encode()).unwrap();
     match protocol::read_response(&mut raw).unwrap() {
         Response::FullSync { epoch, cursor, body } => {
             // The image is a valid HLLSNAP2 snapshot that restores a
