@@ -124,10 +124,11 @@ fn main() {
         pstats.delta_batches_sent, pstats.full_syncs_sent
     );
     println!(
-        "log entry mix: {} diffs / {} fulls / {} tombstones, {} entry bytes sealed",
+        "log entry mix: {} diffs / {} fulls / {} tombstones / {} global diffs, {} entry bytes sealed",
         lstats.sealed_diff_entries,
         lstats.sealed_full_entries,
         lstats.sealed_tombstones,
+        lstats.sealed_global_diffs,
         lstats.sealed_bytes
     );
     follower.shutdown();
@@ -143,7 +144,10 @@ fn main() {
 /// full-resend cost.
 fn delta_compaction_bytes_per_key() {
     let hll = HllConfig::new(12, HashKind::H64).unwrap();
-    let cfg = RegistryConfig { hll, shards: 16, ..RegistryConfig::default() };
+    // No global union: this metric counts *per-key* entries exactly,
+    // and the global union's own GLOBAL_DIFF entry per capture would
+    // fold a second (tiny) stream into the accounting.
+    let cfg = RegistryConfig { hll, shards: 16, track_global: false, ..RegistryConfig::default() };
     let reg = SketchRegistry::new(cfg).unwrap();
     reg.enable_dirty_tracking();
     let log = ReplicationLog::new();

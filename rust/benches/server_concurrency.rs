@@ -1,0 +1,103 @@
+//! Event-loop serving at connection scale: ingest throughput and
+//! resident memory as hundreds of mostly-idle connections ride one loop
+//! thread — the workload shape the reactor rewrite exists for (the
+//! paper's datapath multiplexes flows; a server must multiplex tenants).
+//!
+//! For each connection count N, N clients connect and stay connected;
+//! a small active subset drives pipelined ingest while the rest sit
+//! idle. The old thread-per-connection model's cost scaled with N (one
+//! OS thread + stack per connection, 8 MiB of address space reserved
+//! each by default); the event loop's scales with the *active* subset.
+//! A reference figure for the old model's per-connection reservation is
+//! printed alongside measured RSS.
+//!
+//! Run: `cargo bench --bench server_concurrency` (HLL_BENCH_QUICK=1
+//! shrinks the sweep).
+
+use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+
+/// VmRSS from /proc/self/status, in KiB (`None` off Linux).
+fn resident_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn main() {
+    let b = bench_main("server concurrency — one event loop vs connection count");
+    let words: usize = if quick_mode() { 40_000 } else { 200_000 };
+    let conn_counts: &[usize] = if quick_mode() { &[16, 128] } else { &[16, 128, 512] };
+    const ACTIVE: usize = 8;
+
+    let mut gen = KeyedFlowGen::new(1_000, 1.07, 0xC0FE);
+    let batches = gen.batched(words, 4096);
+    println!(
+        "{words} words in {} batches, 1000 keys (zipf 1.07); {ACTIVE} active producers\n",
+        batches.len()
+    );
+
+    let baseline_rss = resident_kib();
+    for &conns in conn_counts {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 64,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let server = SketchServer::start(
+            "127.0.0.1:0",
+            registry.clone(),
+            ServerConfig {
+                event_loop_threads: 1,
+                max_connections: conns + 64,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+
+        // N resident connections; the first ACTIVE of them produce.
+        let mut clients: Vec<SketchClient> = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            clients.push(SketchClient::connect(addr).unwrap());
+        }
+        // Touch every connection once so all are adopted and live.
+        for c in clients.iter_mut() {
+            c.ping().unwrap();
+        }
+        assert!(server.stats().connections_open as usize >= conns);
+
+        let chunk = batches.len().div_ceil(ACTIVE);
+        let m = b.run_items(&format!("{conns:>4} conns, {ACTIVE} active"), words as u64, || {
+            registry.clear();
+            let mut total = 0u64;
+            for (client, slice) in clients.iter_mut().zip(batches.chunks(chunk)) {
+                total += client.pipeline_insert(slice).unwrap();
+            }
+            total
+        });
+        println!("{}", m.report_line());
+        match (baseline_rss, resident_kib()) {
+            (Some(base), Some(now)) => {
+                let threads_model_kib = conns as u64 * 8 * 1024; // 8 MiB stack reservation each
+                println!(
+                    "      rss now {now} KiB (+{} KiB over baseline); thread-per-conn model \
+                     would reserve {threads_model_kib} KiB of stacks for {conns} conns",
+                    now.saturating_sub(base)
+                );
+            }
+            _ => println!("      rss unavailable on this platform"),
+        }
+
+        // Every idle connection is still alive after the ingest storm.
+        for c in clients.iter_mut() {
+            c.ping().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.error_frames, 0);
+        assert!(stats.connections_peak as usize >= conns);
+        server.shutdown();
+    }
+}

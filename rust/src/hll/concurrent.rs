@@ -19,7 +19,8 @@
 //! calls see some valid intermediate multiset's sketch — never a torn
 //! register.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use super::config::HllConfig;
 use super::estimate::{estimate, EstimateBreakdown};
@@ -27,17 +28,45 @@ use super::sketch::{HllSketch, SketchError};
 
 /// A dense HLL sketch whose register file may be written by many threads
 /// concurrently, lock-free.
+///
+/// With [`ConcurrentHllSketch::enable_dirty_tracking`] on, a lock-free
+/// **dirty bitmap** rides alongside the registers (one bit per
+/// register, set whenever a raise lands): the replication layer drains
+/// it ([`ConcurrentHllSketch::drain_dirty_registers`]) to ship exactly
+/// the global-union registers that moved since the last capture. The
+/// bitmap costs `m/8` bytes (8 KiB at the paper's p=16) and one extra
+/// RMW per *raise* — and is off by default, so non-replicating users
+/// (the same "off = no cost" switch the registry shards use) pay a
+/// single relaxed load per raise and no memory.
 #[derive(Debug)]
 pub struct ConcurrentHllSketch {
     cfg: HllConfig,
     regs: Vec<AtomicU8>,
+    /// Bit i set = register i was raised since the last drain.
+    /// Allocated by [`ConcurrentHllSketch::enable_dirty_tracking`];
+    /// absent = tracking off.
+    dirty: OnceLock<Vec<AtomicU64>>,
 }
 
 impl ConcurrentHllSketch {
     pub fn new(cfg: HllConfig) -> Self {
         let mut regs = Vec::with_capacity(cfg.m());
         regs.resize_with(cfg.m(), || AtomicU8::new(0));
-        Self { cfg, regs }
+        Self { cfg, regs, dirty: OnceLock::new() }
+    }
+
+    /// Turn on raised-register tracking (idempotent; safe alongside
+    /// concurrent inserts). Raises that landed *before* this call are
+    /// not tracked — a replication primary enables tracking before any
+    /// subscriber connects, so earlier state reaches followers through
+    /// their bootstrap full sync, exactly like the shard-level switch.
+    pub fn enable_dirty_tracking(&self) {
+        self.dirty.get_or_init(|| {
+            let words = self.cfg.m().div_ceil(64);
+            let mut bits = Vec::with_capacity(words);
+            bits.resize_with(words, || AtomicU64::new(0));
+            bits
+        });
     }
 
     /// The paper's hardware configuration (p=16, 64-bit hash).
@@ -59,18 +88,41 @@ impl ConcurrentHllSketch {
         &self.cfg
     }
 
-    /// Raise one register to at least `rank` via a CAS-max loop. The
-    /// common case (rank does not beat the current value) is a single
-    /// relaxed load with no RMW traffic — important under key skew,
-    /// where hot buckets saturate early.
+    /// Raise one register to at least `rank` via a CAS-max loop,
+    /// returning whether a store landed. The common case (rank does not
+    /// beat the current value) is a single relaxed load with no RMW
+    /// traffic — important under key skew, where hot buckets saturate
+    /// early.
     #[inline]
-    fn cas_max(slot: &AtomicU8, rank: u8) {
+    fn cas_max(slot: &AtomicU8, rank: u8) -> bool {
         let mut cur = slot.load(Ordering::Relaxed);
         while rank > cur {
             match slot.compare_exchange_weak(cur, rank, Ordering::Relaxed, Ordering::Relaxed) {
-                Ok(_) => return,
+                Ok(_) => return true,
                 Err(now) => cur = now,
             }
+        }
+        false
+    }
+
+    /// Record a landed raise in the dirty bitmap (no-op with tracking
+    /// off). `Release` pairs with the `Acquire` swap in
+    /// [`Self::drain_dirty_registers`]: a drain that observes the bit
+    /// is guaranteed to read a register value at least as high as the
+    /// raise that set it.
+    #[inline]
+    fn mark_dirty(&self, idx: usize) {
+        if let Some(bits) = self.dirty.get() {
+            bits[idx / 64].fetch_or(1u64 << (idx % 64), Ordering::Release);
+        }
+    }
+
+    /// Raise one register and track the raise in the dirty bitmap —
+    /// the one implementation behind every write path.
+    #[inline]
+    fn raise(&self, idx: usize, rank: u8) {
+        if Self::cas_max(&self.regs[idx], rank) {
+            self.mark_dirty(idx);
         }
     }
 
@@ -78,7 +130,7 @@ impl ConcurrentHllSketch {
     #[inline]
     pub fn insert_hash(&self, hash: u64) {
         let (idx, rank) = self.cfg.split_hash(hash);
-        Self::cas_max(&self.regs[idx], rank);
+        self.raise(idx, rank);
     }
 
     /// Raise one register to at least `rank` (CAS-max) — the follower's
@@ -87,7 +139,7 @@ impl ConcurrentHllSketch {
     #[inline]
     pub fn update_register(&self, idx: usize, rank: u8) {
         debug_assert!(rank <= self.cfg.max_rank());
-        Self::cas_max(&self.regs[idx], rank);
+        self.raise(idx, rank);
     }
 
     /// Insert a 32-bit stream word (the paper's stream element type).
@@ -121,9 +173,9 @@ impl ConcurrentHllSketch {
         if self.cfg != *other.config() {
             return Err(SketchError::ConfigMismatch(self.cfg, *other.config()));
         }
-        for (slot, &r) in self.regs.iter().zip(other.registers()) {
+        for (idx, &r) in other.registers().iter().enumerate() {
             if r > 0 {
-                Self::cas_max(slot, r);
+                self.raise(idx, r);
             }
         }
         Ok(())
@@ -134,10 +186,10 @@ impl ConcurrentHllSketch {
         if self.cfg != other.cfg {
             return Err(SketchError::ConfigMismatch(self.cfg, other.cfg));
         }
-        for (slot, src) in self.regs.iter().zip(&other.regs) {
+        for (idx, src) in other.regs.iter().enumerate() {
             let r = src.load(Ordering::Relaxed);
             if r > 0 {
-                Self::cas_max(slot, r);
+                self.raise(idx, r);
             }
         }
         Ok(())
@@ -169,11 +221,52 @@ impl ConcurrentHllSketch {
         estimate(&self.cfg, &regs)
     }
 
-    /// Reset all registers to zero.
+    /// Reset all registers to zero (and the dirty bitmap with them — a
+    /// cleared sketch has nothing worth shipping).
     pub fn clear(&self) {
         for r in &self.regs {
             r.store(0, Ordering::Relaxed);
         }
+        if let Some(bits) = self.dirty.get() {
+            for w in bits {
+                w.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Swap the dirty bitmap out and return `(index, current value)`
+    /// for every register raised since the last drain, sorted by index
+    /// (canonical register-diff order). Values are read *after* the
+    /// `Acquire` swap observes the bit, so each is at least the raise
+    /// that set it — a raise racing the drain lands either in this
+    /// drain (its value already visible) or re-sets the bit for the
+    /// next one; under max-merge both are correct. Zero-valued
+    /// registers (bits left by a concurrent [`Self::clear`]) are
+    /// skipped — a zero never ships.
+    pub fn drain_dirty_registers(&self) -> Vec<(u32, u8)> {
+        let Some(dirty) = self.dirty.get() else { return Vec::new() };
+        let mut out = Vec::new();
+        for (w, word) in dirty.iter().enumerate() {
+            let mut bits = word.swap(0, Ordering::AcqRel);
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let idx = w * 64 + bit;
+                let val = self.regs[idx].load(Ordering::Relaxed);
+                if val > 0 {
+                    out.push((idx as u32, val));
+                }
+            }
+        }
+        out
+    }
+
+    /// Registers currently marked dirty (raised since the last drain),
+    /// read non-destructively. 0 with tracking off.
+    pub fn dirty_registers(&self) -> usize {
+        self.dirty
+            .get()
+            .map_or(0, |bits| bits.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum())
     }
 }
 
@@ -256,5 +349,56 @@ mod tests {
         assert_eq!(shared.snapshot(), dense);
         shared.clear();
         assert_eq!(shared.zero_registers(), dense.config().m());
+    }
+
+    #[test]
+    fn dirty_bitmap_tracks_exactly_the_raised_registers() {
+        let cfg = HllConfig::new(12, HashKind::H64).unwrap();
+        // Off by default: raises cost nothing and drain nothing.
+        let untracked = ConcurrentHllSketch::new(cfg);
+        untracked.insert_batch(&words(500, 3));
+        assert_eq!(untracked.dirty_registers(), 0);
+        assert!(untracked.drain_dirty_registers().is_empty());
+
+        let shared = ConcurrentHllSketch::new(cfg);
+        shared.enable_dirty_tracking();
+        assert_eq!(shared.dirty_registers(), 0);
+        assert!(shared.drain_dirty_registers().is_empty());
+
+        let data = words(3_000, 17);
+        shared.insert_batch(&data);
+        let live = shared.snapshot();
+        let nonzero = cfg.m() - live.zero_registers();
+        assert_eq!(shared.dirty_registers(), nonzero, "every nonzero register was raised once");
+
+        // The drain is sorted, carries current maxima, and applying it
+        // to an empty sketch reproduces the register file bit-exactly.
+        let drained = shared.drain_dirty_registers();
+        assert_eq!(drained.len(), nonzero);
+        assert!(drained.windows(2).all(|w| w[0].0 < w[1].0), "must be index-sorted");
+        let mut rebuilt = HllSketch::new(cfg);
+        rebuilt.apply_register_diff(&drained);
+        assert_eq!(rebuilt, live);
+        assert_eq!(shared.dirty_registers(), 0, "drain must clear the bitmap");
+
+        // Re-inserting the same words raises nothing: no new dirt.
+        shared.insert_batch(&data);
+        assert!(shared.drain_dirty_registers().is_empty(), "no-op inserts must not re-dirty");
+
+        // A genuinely new raise dirties exactly that register; merges
+        // mark what they raise too.
+        shared.update_register(7, cfg.max_rank());
+        assert_eq!(shared.drain_dirty_registers(), vec![(7, cfg.max_rank())]);
+        let mut other = HllSketch::new(cfg);
+        other.update_register(9, 3);
+        shared.merge_sketch(&other).unwrap();
+        let merged_dirt = shared.drain_dirty_registers();
+        // Either the merge raised register 9 (and so dirtied it), or
+        // the random stream had already put it at 3 or higher and the
+        // merge was correctly a no-op.
+        assert!(
+            merged_dirt.iter().any(|&(idx, val)| idx == 9 && val >= 3)
+                || shared.snapshot().registers()[9] >= 3
+        );
     }
 }

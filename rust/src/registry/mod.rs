@@ -47,7 +47,11 @@
 //! [`SketchRegistry::drain_dirty_deltas`] swaps those maps out and
 //! resolves each key into a typed [`SketchDelta`] (tombstone / register
 //! diff / full sketch) — the feed of
-//! [`crate::replica::ReplicationLog`]'s delta batches.
+//! [`crate::replica::ReplicationLog`]'s delta batches. The global
+//! union tracks its own raised registers in a lock-free bitmap,
+//! drained by [`SketchRegistry::drain_dirty_global`] into a
+//! [`SketchDelta::GlobalDiff`], so words whose key is evicted before a
+//! capture still replicate into followers' global estimates.
 
 pub mod config;
 pub mod registry;

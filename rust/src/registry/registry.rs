@@ -25,6 +25,13 @@ pub enum SketchDelta {
     /// sparse-mode keys, merges, re-created keys and diffs past the
     /// density threshold.
     Full(Vec<u8>),
+    /// Registers of the registry's *global union* sketch raised since
+    /// the last capture ([`SketchRegistry::drain_dirty_global`]), in
+    /// the same register-diff wire format. The entry's key field is
+    /// meaningless (encoded as 0). This is what closes the
+    /// evicted-before-capture gap: words whose key died before the
+    /// capture tick still reach followers' `GlobalEstimate`.
+    GlobalDiff(Vec<u8>),
 }
 
 impl SketchDelta {
@@ -34,7 +41,9 @@ impl SketchDelta {
     pub fn body_len(&self) -> usize {
         match self {
             SketchDelta::Tombstone => 0,
-            SketchDelta::RegisterDiff(b) | SketchDelta::Full(b) => b.len(),
+            SketchDelta::RegisterDiff(b) | SketchDelta::Full(b) | SketchDelta::GlobalDiff(b) => {
+                b.len()
+            }
         }
     }
 }
@@ -122,8 +131,14 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
     /// primary enables this before accepting subscribers; keys touched
     /// while tracking was off reach followers through their bootstrap
     /// full sync, not the delta log. With tracking on, evictions are
-    /// recorded as tombstones so TTL/budget sweeps propagate too.
+    /// recorded as tombstones so TTL/budget sweeps propagate too, and
+    /// the global union (if tracked) starts recording its raised
+    /// registers for [`Self::drain_dirty_global`] — off, neither costs
+    /// a byte or an extra atomic.
     pub fn enable_dirty_tracking(&self) {
+        if let Some(global) = &self.global {
+            global.enable_dirty_tracking();
+        }
         self.dirty_enabled.store(true, Ordering::SeqCst);
     }
 
@@ -412,14 +427,24 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         cfg: HllConfig,
         entries: &[(u32, u8)],
     ) -> Result<(), SketchError> {
+        // Validates and raises the global union; the shard apply below
+        // only runs once the whole diff is known good.
+        self.merge_global_diff(cfg, entries)?;
+        let now = self.tick();
+        let wall = self.wall.now_secs();
+        self.shards[self.shard_of(&key)].apply_register_diff(cfg, key, entries, now, wall);
+        Ok(())
+    }
+
+    /// Full range validation before any register moves: these are pub
+    /// APIs, and only the follower's apply path arrives pre-validated
+    /// by `decode_register_diff` — a stray index must be a typed error,
+    /// not an out-of-bounds panic halfway through raising the global
+    /// union.
+    fn validate_diff(&self, cfg: HllConfig, entries: &[(u32, u8)]) -> Result<(), SketchError> {
         if cfg != self.cfg.hll {
             return Err(SketchError::ConfigMismatch(cfg, self.cfg.hll));
         }
-        // Full range validation before any register moves: this is a
-        // pub API, and only the follower's apply path arrives here
-        // pre-validated by `decode_register_diff` — a stray index must
-        // be a typed error, not an out-of-bounds panic halfway through
-        // raising the global union.
         for &(idx, val) in entries {
             if (idx as usize) >= cfg.m() {
                 return Err(SketchError::Malformed(format!(
@@ -434,15 +459,50 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
                 )));
             }
         }
+        Ok(())
+    }
+
+    /// Max-merge a decoded register diff into the *global union* sketch
+    /// only, touching no key — the follower's apply path for
+    /// [`SketchDelta::GlobalDiff`] entries (words whose key was evicted
+    /// on the primary before the capture tick). No-op `Ok` when
+    /// `track_global` is off; config/seed mismatches and out-of-range
+    /// entries fail before any register moves.
+    pub fn merge_global_diff(
+        &self,
+        cfg: HllConfig,
+        entries: &[(u32, u8)],
+    ) -> Result<(), SketchError> {
+        self.validate_diff(cfg, entries)?;
         if let Some(global) = &self.global {
             for &(idx, val) in entries {
                 global.update_register(idx as usize, val);
             }
         }
-        let now = self.tick();
-        let wall = self.wall.now_secs();
-        self.shards[self.shard_of(&key)].apply_register_diff(cfg, key, entries, now, wall);
         Ok(())
+    }
+
+    /// Drain the global union's raised-register set into one encoded
+    /// register diff ([`crate::hll::encode_register_diff`] format), or
+    /// `None` when nothing moved, `track_global` is off, or
+    /// [`Self::enable_dirty_tracking`] was never called. Values are
+    /// the registers' *current* maxima, so draining twice or racing an
+    /// ingest is harmless under max-merge. This is the replication
+    /// capture's global feed — per-key deltas die with an evicted key,
+    /// this does not.
+    pub fn drain_dirty_global(&self) -> Option<Vec<u8>> {
+        let global = self.global.as_ref()?;
+        let entries = global.drain_dirty_registers();
+        if entries.is_empty() {
+            return None;
+        }
+        Some(crate::hll::encode_register_diff(&self.cfg.hll, &entries))
+    }
+
+    /// Number of global-union registers raised since the last
+    /// [`Self::drain_dirty_global`] (0 when `track_global` is off).
+    pub fn dirty_global_registers(&self) -> usize {
+        self.global.as_ref().map_or(0, |g| g.dirty_registers())
     }
 
     /// Number of keys currently awaiting a dirty drain (0 when tracking
@@ -1022,6 +1082,58 @@ mod tests {
         ));
         assert!(reg.estimate(&4).is_none());
         assert_eq!(reg.global_sketch().unwrap(), before, "rejected diffs must not move global");
+    }
+
+    #[test]
+    fn drain_dirty_global_ships_evicted_words_and_merge_global_diff_applies() {
+        use crate::hll::decode_register_diff;
+
+        let reg = registry(8);
+        reg.enable_dirty_tracking();
+        // Words into a key that dies before the drain: the key's delta
+        // is a tombstone, but the global diff still carries the words.
+        reg.ingest(1, &[100, 200, 300]);
+        reg.evict(&1);
+        assert!(reg.dirty_global_registers() > 0);
+        let bytes = reg.drain_dirty_global().expect("raised registers must drain");
+        assert_eq!(reg.dirty_global_registers(), 0);
+        assert!(reg.drain_dirty_global().is_none(), "second drain is empty");
+
+        // A fresh registry that applies the diff reports the same
+        // global estimate — without ever holding the key.
+        let follower = registry(8);
+        let (cfg, entries) = decode_register_diff(&bytes).unwrap();
+        follower.merge_global_diff(cfg, &entries).unwrap();
+        assert_eq!(follower.global_estimate(), reg.global_estimate());
+        assert!(follower.is_empty(), "global diffs must not create keys");
+
+        // Validation mirrors apply_register_diff: mismatched configs
+        // and out-of-range entries fail before any register moves.
+        let before = follower.global_sketch().unwrap();
+        let seeded = HllConfig::PAPER.with_seed(7);
+        assert!(matches!(
+            follower.merge_global_diff(seeded, &[(0, 1)]),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+        assert!(matches!(
+            follower.merge_global_diff(HllConfig::PAPER, &[(HllConfig::PAPER.m() as u32, 1)]),
+            Err(SketchError::Malformed(_))
+        ));
+        assert_eq!(follower.global_sketch().unwrap(), before);
+
+        // A registry without a global union drains nothing and applies
+        // diffs as a no-op Ok.
+        let untracked: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+            shards: 4,
+            track_global: false,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        untracked.enable_dirty_tracking();
+        untracked.ingest(9, &[1, 2, 3]);
+        assert_eq!(untracked.dirty_global_registers(), 0);
+        assert!(untracked.drain_dirty_global().is_none());
+        assert!(untracked.merge_global_diff(HllConfig::PAPER, &entries).is_ok());
     }
 
     #[test]

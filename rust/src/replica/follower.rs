@@ -28,7 +28,7 @@
 //! ([`FollowerStats::halted`] + [`FollowerStats::last_error`] expose
 //! the condition).
 
-use std::io;
+use std::io::{self, Read};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -38,8 +38,10 @@ use std::time::{Duration, Instant};
 use super::ReplicaCursor;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
 use crate::registry::{SketchDelta, SketchRegistry};
-use crate::server::protocol::{ErrorCode, ProtocolError, Request, Response, DELTA_WIRE_V3};
-use crate::server::server::{try_read_frame, write_full};
+use crate::server::protocol::{
+    ErrorCode, FrameDecoder, ProtocolError, Request, Response, DELTA_WIRE_V3,
+};
+use crate::server::server::write_full;
 use crate::server::snapshot;
 use crate::server::{ServerConfig, SketchServer};
 
@@ -77,6 +79,10 @@ pub struct FollowerStats {
     pub tombstones_applied: u64,
     /// Of those, changed-register diffs (wire-v3 compaction path).
     pub diff_entries_applied: u64,
+    /// Of those, global-union register diffs — words whose key was
+    /// evicted on the primary before the capture tick, folded into this
+    /// follower's `GlobalEstimate`.
+    pub global_diffs_applied: u64,
     /// Full syncs applied since start (bootstrap + stale-cursor falls).
     pub full_syncs: u64,
     /// Reconnect attempts after the initial connect.
@@ -97,6 +103,7 @@ struct FollowerShared {
     entries_applied: AtomicU64,
     tombstones_applied: AtomicU64,
     diff_entries_applied: AtomicU64,
+    global_diffs_applied: AtomicU64,
     full_syncs: AtomicU64,
     reconnects: AtomicU64,
     halted: AtomicBool,
@@ -203,6 +210,7 @@ impl FollowerServer {
             entries_applied: self.shared.entries_applied.load(Ordering::Relaxed),
             tombstones_applied: self.shared.tombstones_applied.load(Ordering::Relaxed),
             diff_entries_applied: self.shared.diff_entries_applied.load(Ordering::Relaxed),
+            global_diffs_applied: self.shared.global_diffs_applied.load(Ordering::Relaxed),
             full_syncs: self.shared.full_syncs.load(Ordering::Relaxed),
             reconnects: self.shared.reconnects.load(Ordering::Relaxed),
             halted: self.shared.halted.load(Ordering::SeqCst),
@@ -329,6 +337,16 @@ fn apply_delta(
             let sketch = HllSketch::from_bytes(&bytes)?;
             registry.merge_sketch(key, sketch)
         }
+        SketchDelta::GlobalDiff(bytes) => {
+            // Raises only the global union (the key field is
+            // meaningless): words whose key was evicted on the primary
+            // before the capture tick still count in this follower's
+            // GlobalEstimate.
+            let (cfg, entries) = decode_register_diff(&bytes)?;
+            registry.merge_global_diff(cfg, &entries)?;
+            shared.global_diffs_applied.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
     }
 }
 
@@ -367,37 +385,91 @@ fn apply_batch(
 
 /// Apply frames from an established subscription until the stream
 /// breaks, the primary misbehaves, or we are stopped/halted.
+///
+/// Inbound parsing is the same incremental [`FrameDecoder`] the
+/// server's event loop runs: reads land in the decoder whatever their
+/// size (the socket's read timeout is just the stop-flag poll tick),
+/// and complete frames are pulled out in order — a batch split across
+/// reads resumes instead of blocking mid-`read_exact`.
 fn run_subscription(
     stream: &mut TcpStream,
     registry: &Arc<SketchRegistry<u64>>,
     stop: &AtomicBool,
     shared: &FollowerShared,
 ) {
+    let mut decoder = FrameDecoder::new();
+    let mut buf = vec![0u8; 16 * 1024];
     loop {
         if stop.load(Ordering::SeqCst) || shared.halted.load(Ordering::SeqCst) {
             return;
         }
-        let (opcode, payload) = match try_read_frame(stream, stop) {
-            Ok(Some(frame)) => frame,
-            Ok(None) => continue, // idle tick
-            Err(_) => return,     // disconnect → outer loop reconnects
-        };
-        let resp = match Response::decode(opcode, &payload) {
-            Ok(resp) => resp,
-            Err(e) => {
-                shared.record_error(format!("undecodable frame from primary: {e}"));
-                // An unknown opcode or frame version is a primary
-                // speaking a newer wire than this follower decodes —
-                // reconnecting would replay the same bytes forever.
-                // (Torn streams surface as Io errors above and do
-                // reconnect.)
-                if matches!(e, ProtocolError::BadOpcode(_) | ProtocolError::BadVersion(_)) {
-                    shared.halted.store(true, Ordering::SeqCst);
-                }
+        match stream.read(&mut buf) {
+            Ok(0) => return, // peer closed → outer loop reconnects
+            Ok(n) => decoder.extend(&buf[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue // idle tick: re-check stop, keep waiting
+            }
+            Err(_) => return, // disconnect → outer loop reconnects
+        }
+        loop {
+            if stop.load(Ordering::SeqCst) || shared.halted.load(Ordering::SeqCst) {
                 return;
             }
-        };
-        match resp {
+            let (opcode, payload) = match decoder.next_frame() {
+                Ok(Some(frame)) => frame,
+                Ok(None) => break, // need more bytes
+                Err(e) => {
+                    // Broken framing from the primary. A version this
+                    // follower does not decode cannot be fixed by
+                    // reconnecting (the same bytes replay forever):
+                    // halt. Torn magic/oversize reconnects like any
+                    // stream corruption.
+                    shared.record_error(format!("undecodable frame from primary: {e}"));
+                    if matches!(e, ProtocolError::BadVersion(_)) {
+                        shared.halted.store(true, Ordering::SeqCst);
+                    }
+                    return;
+                }
+            };
+            if !apply_frame(stream, registry, stop, shared, opcode, &payload) {
+                return;
+            }
+        }
+    }
+}
+
+/// Decode and apply one frame of the subscription stream; `false` ends
+/// the subscription (the outer loop decides between reconnect and
+/// halt via the `halted` flag).
+fn apply_frame(
+    stream: &mut TcpStream,
+    registry: &Arc<SketchRegistry<u64>>,
+    stop: &AtomicBool,
+    shared: &FollowerShared,
+    opcode: u8,
+    payload: &[u8],
+) -> bool {
+    let resp = match Response::decode(opcode, payload) {
+        Ok(resp) => resp,
+        Err(e) => {
+            shared.record_error(format!("undecodable frame from primary: {e}"));
+            // An unknown opcode or frame version is a primary speaking
+            // a newer wire than this follower decodes — reconnecting
+            // would replay the same bytes forever.
+            if matches!(e, ProtocolError::BadOpcode(_) | ProtocolError::BadVersion(_)) {
+                shared.halted.store(true, Ordering::SeqCst);
+            }
+            return false;
+        }
+    };
+    match resp {
             Response::FullSync { epoch, cursor, body } => {
                 // A full sync *replaces* local state (keys absent from
                 // the image were evicted on the primary while our
@@ -424,7 +496,7 @@ fn run_subscription(
                         // keep serving last-good state.
                         shared.record_error(format!("full sync rejected: {e}"));
                         shared.halted.store(true, Ordering::SeqCst);
-                        return;
+                        return false;
                     }
                 }
             }
@@ -438,12 +510,12 @@ fn run_subscription(
                     .map(|(key, bytes)| (key, SketchDelta::Full(bytes)))
                     .collect();
                 if !apply_batch(registry, shared, seq, typed) {
-                    return;
+                    return false;
                 }
             }
             Response::DeltaBatchV3 { seq, entries } => {
                 if !apply_batch(registry, shared, seq, entries) {
-                    return;
+                    return false;
                 }
             }
             Response::Error { code, message } => {
@@ -463,19 +535,16 @@ fn run_subscription(
                     // primary work.
                     shared.halted.store(true, Ordering::SeqCst);
                 }
-                return;
+                return false;
             }
             other => {
                 shared.record_error(format!(
                     "unexpected {} frame on the subscription stream",
                     other.label()
                 ));
-                return;
+                return false;
             }
         }
-        let ack = Request::ReplicaAck { cursor: shared.cursor.load(Ordering::SeqCst) }.encode();
-        if !matches!(write_full(stream, &ack, stop), Ok(true)) {
-            return;
-        }
-    }
+    let ack = Request::ReplicaAck { cursor: shared.cursor.load(Ordering::SeqCst) }.encode();
+    matches!(write_full(stream, &ack, stop), Ok(true))
 }

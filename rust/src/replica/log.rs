@@ -112,6 +112,8 @@ pub struct ReplicationLogStats {
     pub sealed_diff_entries: u64,
     /// Of those, full-sketch resends.
     pub sealed_full_entries: u64,
+    /// Of those, global-union register diffs (at most one per capture).
+    pub sealed_global_diffs: u64,
     /// Encoded entry bytes sealed since start (including rotated-out
     /// batches) — with `sealed_entries`, the bytes-per-replicated-key
     /// input of `benches/replication_lag.rs`.
@@ -151,6 +153,7 @@ struct LogInner {
     sealed_tombstones: u64,
     sealed_diff_entries: u64,
     sealed_full_entries: u64,
+    sealed_global_diffs: u64,
     sealed_bytes: u64,
 }
 
@@ -214,6 +217,7 @@ impl ReplicationLog {
                 sealed_tombstones: 0,
                 sealed_diff_entries: 0,
                 sealed_full_entries: 0,
+                sealed_global_diffs: 0,
                 sealed_bytes: 0,
             }),
             capture_gate: Mutex::new(()),
@@ -279,7 +283,17 @@ impl ReplicationLog {
         // ring are never blocked behind a drain's shard walks and
         // sketch serialization.
         let _gate = self.capture_gate.lock().unwrap_or_else(PoisonError::into_inner);
-        let entries = registry.drain_dirty_deltas();
+        let mut entries = registry.drain_dirty_deltas();
+        // The global union's own changed registers ride the same batch
+        // (key 0, ignored on apply): per-key deltas die with an evicted
+        // key, this entry does not — it is what carries
+        // evicted-before-capture words into followers' global estimate.
+        // Drained after the shards, so a racing ingest that already
+        // marked its key dirty cannot leave global registers behind a
+        // drained key delta.
+        if let Some(bytes) = registry.drain_dirty_global() {
+            entries.push((0, SketchDelta::GlobalDiff(bytes)));
+        }
         if entries.is_empty() {
             return None;
         }
@@ -331,6 +345,7 @@ impl ReplicationLog {
                 SketchDelta::Tombstone => inner.sealed_tombstones += 1,
                 SketchDelta::RegisterDiff(_) => inner.sealed_diff_entries += 1,
                 SketchDelta::Full(_) => inner.sealed_full_entries += 1,
+                SketchDelta::GlobalDiff(_) => inner.sealed_global_diffs += 1,
             }
         }
         inner.batches.push_back(Arc::new(SealedBatch { seq, clock, entries, bytes }));
@@ -384,6 +399,7 @@ impl ReplicationLog {
             self.capture(registry, usize::MAX);
             let latest = self.latest_seq();
             if registry.dirty_keys() == 0
+                && registry.dirty_global_registers() == 0
                 && self.captures_in_flight() == 0
                 && self.latest_seq() == latest
             {
@@ -405,6 +421,7 @@ impl ReplicationLog {
             sealed_tombstones: inner.sealed_tombstones,
             sealed_diff_entries: inner.sealed_diff_entries,
             sealed_full_entries: inner.sealed_full_entries,
+            sealed_global_diffs: inner.sealed_global_diffs,
             sealed_bytes: inner.sealed_bytes,
             retained_batches: inner.batches.len(),
             retained_bytes: inner.retained_bytes,
@@ -420,9 +437,14 @@ mod tests {
     use crate::hll::HllSketch;
     use crate::registry::RegistryConfig;
 
+    /// Global tracking off: these tests count sealed entries exactly,
+    /// and a global-union diff entry per capture would shift every
+    /// count (its sealing is covered by
+    /// [`global_union_diffs_seal_alongside_key_entries`]).
     fn registry() -> SketchRegistry<u64> {
         let reg = SketchRegistry::new(RegistryConfig {
             shards: 8,
+            track_global: false,
             ..RegistryConfig::default()
         })
         .unwrap();
@@ -528,6 +550,64 @@ mod tests {
             cursor = batch.seq;
         }
         assert_eq!(cursor, last);
+    }
+
+    #[test]
+    fn global_union_diffs_seal_alongside_key_entries() {
+        use crate::hll::decode_register_diff;
+
+        // A registry *with* a global union: every capture that drained
+        // raised global registers carries one GlobalDiff entry, and an
+        // insert→evict-before-capture key still reaches the global
+        // stream even though its own delta is just a tombstone.
+        let reg = SketchRegistry::new(RegistryConfig {
+            shards: 8,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        reg.enable_dirty_tracking();
+        let log = ReplicationLog::new();
+
+        reg.ingest(1, &[10, 20, 30]);
+        reg.evict(&1);
+        assert!(reg.dirty_global_registers() > 0, "ingest must dirty the global union");
+        assert_eq!(log.capture(&reg, usize::MAX), Some(1));
+        assert_eq!(reg.dirty_global_registers(), 0, "capture must drain the global dirt");
+
+        let global = reg.global_sketch().unwrap();
+        match log.read_after(0) {
+            LogRead::Batch(b) => {
+                let tombs: Vec<u64> = b
+                    .entries
+                    .iter()
+                    .filter(|(_, d)| matches!(d, SketchDelta::Tombstone))
+                    .map(|(k, _)| *k)
+                    .collect();
+                assert_eq!(tombs, vec![1], "the dead key ships a tombstone");
+                let diffs: Vec<&Vec<u8>> = b
+                    .entries
+                    .iter()
+                    .filter_map(|(_, d)| match d {
+                        SketchDelta::GlobalDiff(bytes) => Some(bytes),
+                        _ => None,
+                    })
+                    .collect();
+                assert_eq!(diffs.len(), 1, "exactly one global diff per capture");
+                // Applying the diff to an empty sketch reproduces the
+                // primary's global registers — the words survived the
+                // eviction.
+                let (cfg, entries) = decode_register_diff(diffs[0]).unwrap();
+                assert_eq!(cfg, *global.config());
+                let mut rebuilt = crate::hll::HllSketch::new(cfg);
+                rebuilt.apply_register_diff(&entries);
+                assert_eq!(rebuilt, global);
+            }
+            other => panic!("expected batch 1, got {other:?}"),
+        }
+        assert_eq!(log.stats().sealed_global_diffs, 1);
+
+        // Nothing new: no empty global entry is sealed.
+        assert!(log.capture(&reg, usize::MAX).is_none());
     }
 
     #[test]

@@ -64,14 +64,17 @@
 //! cannot decode its primary's frames halts with a typed error instead
 //! of reconnect-looping.
 //!
-//! One inherent gap remains: words ingested into a key that is evicted
-//! before the next capture never reach the follower's *global* union
-//! (the primary's global sketch counted them; the per-key delta died
-//! with the key). Live-key state — key set, per-key registers and
-//! estimates — converges bit-exactly regardless. A `FULL_SYNC` body is
-//! one in-band frame, so registries whose snapshot image exceeds the
-//! frame cap ([`crate::server::MAX_PAYLOAD`]) must bootstrap followers
-//! from a snapshot file instead.
+//! The *global union* replicates through its own changed-register
+//! dirty tracking: every capture that saw global registers rise seals
+//! one `GLOBAL_DIFF` entry (the global sketch's raised registers, same
+//! codec as a key diff), so words ingested into a key that is evicted
+//! before the next capture still reach followers'
+//! `GlobalEstimate` — per-key deltas die with the key, the global diff
+//! does not. (Legacy v2 subscribers don't receive it; their global
+//! stays derived from live-key merges, grow-only as before.) A
+//! `FULL_SYNC` body is one in-band frame, so registries whose snapshot
+//! image exceeds the frame cap ([`crate::server::MAX_PAYLOAD`]) must
+//! bootstrap followers from a snapshot file instead.
 //!
 //! ```no_run
 //! use std::sync::Arc;

@@ -11,9 +11,18 @@
 //! query methods work unchanged while every mutating call fails with
 //! [`ClientError::Remote`] carrying [`ErrorCode::ReadOnly`] — route
 //! writes to the primary.
+//!
+//! Calls block forever by default (source-compatible with every
+//! existing caller); [`SketchClient::set_read_timeout`] /
+//! [`SketchClient::set_write_timeout`] (or
+//! [`SketchClient::connect_with_timeouts`]) bound them, surfacing
+//! expiry as a typed [`ClientError::Timeout`] that poisons the
+//! connection — a hung server then costs the caller a bounded wait and
+//! a reconnect, not a parked thread.
 
 use std::io::{self, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use super::protocol::{
     encode_insert_batch, read_response, ErrorCode, EvictPolicy, ProtocolError, Request,
@@ -39,6 +48,13 @@ pub enum ClientError {
     /// [`MAX_PAYLOAD`] frame cap; caught client-side before any bytes
     /// hit the wire (the server would reject it and drop the connection).
     TooLarge { bytes: u64 },
+    /// A configured socket timeout ([`SketchClient::set_read_timeout`] /
+    /// [`SketchClient::set_write_timeout`]) expired mid-call. The
+    /// connection is poisoned afterwards — the late reply may still
+    /// arrive and would pair with the wrong request — so reconnect.
+    /// Never raised unless a timeout was explicitly configured
+    /// (defaults are off, matching the old always-blocking client).
+    Timeout,
 }
 
 impl std::fmt::Display for ClientError {
@@ -57,6 +73,9 @@ impl std::fmt::Display for ClientError {
             }
             ClientError::TooLarge { bytes } => {
                 write!(f, "request payload of {bytes} bytes exceeds the {MAX_PAYLOAD}-byte frame cap")
+            }
+            ClientError::Timeout => {
+                write!(f, "socket timeout expired waiting on the server; reconnect")
             }
         }
     }
@@ -92,11 +111,80 @@ pub struct SketchClient {
     poisoned: bool,
 }
 
+/// A socket error that means "the configured timeout expired", on
+/// either platform convention (unix reports `WouldBlock`, Windows
+/// `TimedOut`).
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
 impl SketchClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, ClientError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         Ok(Self { stream, poisoned: false })
+    }
+
+    /// As [`SketchClient::connect`], with read/write timeouts applied
+    /// before the first RPC — the "a hung server must not block my
+    /// caller forever" constructor. The TCP connect itself is bounded
+    /// by the read timeout too (a black-holed address otherwise blocks
+    /// in the OS connect for minutes before any socket timeout could
+    /// apply); a connect that exceeds it fails with
+    /// [`ClientError::Timeout`].
+    pub fn connect_with_timeouts(
+        addr: impl ToSocketAddrs,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<Self, ClientError> {
+        let stream = match read {
+            None => TcpStream::connect(addr)?,
+            Some(bound) => {
+                let mut last: Option<io::Error> = None;
+                let mut connected = None;
+                for candidate in addr.to_socket_addrs().map_err(ClientError::Io)? {
+                    match TcpStream::connect_timeout(&candidate, bound) {
+                        Ok(s) => {
+                            connected = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match (connected, last) {
+                    (Some(s), _) => s,
+                    (None, Some(e)) if is_timeout(&e) => return Err(ClientError::Timeout),
+                    (None, Some(e)) => return Err(ClientError::Io(e)),
+                    (None, None) => {
+                        return Err(ClientError::Io(io::Error::new(
+                            io::ErrorKind::InvalidInput,
+                            "address resolved to no socket addresses",
+                        )))
+                    }
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        let mut client = Self { stream, poisoned: false };
+        client.set_read_timeout(read)?;
+        client.set_write_timeout(write)?;
+        Ok(client)
+    }
+
+    /// Bound how long any call waits on the server's reply. `None`
+    /// (the default) blocks forever — source-compatible with every
+    /// existing caller. With a bound set, an expiry surfaces as
+    /// [`ClientError::Timeout`] and poisons the connection (the late
+    /// reply would pair with the wrong request): reconnect to recover.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.stream.set_read_timeout(timeout).map_err(ClientError::Io)
+    }
+
+    /// Bound how long any call waits for the server to accept request
+    /// bytes (a server that stopped draining its socket). Semantics as
+    /// [`SketchClient::set_read_timeout`].
+    pub fn set_write_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.stream.set_write_timeout(timeout).map_err(ClientError::Io)
     }
 
     fn check_sync(&self) -> Result<(), ClientError> {
@@ -116,17 +204,37 @@ impl SketchClient {
         Ok(())
     }
 
+    /// Write raw frame bytes, mapping a write-timeout expiry to the
+    /// typed [`ClientError::Timeout`] (and poisoning: a partial frame
+    /// may be on the wire).
+    fn write_wire(&mut self, bytes: &[u8]) -> Result<(), ClientError> {
+        match self.stream.write_all(bytes) {
+            Ok(()) => Ok(()),
+            Err(e) if is_timeout(&e) => {
+                self.poisoned = true;
+                Err(ClientError::Timeout)
+            }
+            Err(e) => Err(ClientError::Io(e)),
+        }
+    }
+
     fn send(&mut self, req: &Request) -> Result<(), ClientError> {
         self.check_sync()?;
-        self.stream.write_all(&req.encode())?;
-        Ok(())
+        self.write_wire(&req.encode())
     }
 
     fn recv(&mut self) -> Result<Response, ClientError> {
         self.check_sync()?;
-        match read_response(&mut self.stream)? {
-            Response::Error { code, message } => Err(ClientError::Remote { code, message }),
-            other => Ok(other),
+        match read_response(&mut self.stream) {
+            Ok(Response::Error { code, message }) => Err(ClientError::Remote { code, message }),
+            Ok(other) => Ok(other),
+            Err(ProtocolError::Io(e)) if is_timeout(&e) => {
+                // The reply (or its tail) may still arrive later and
+                // would desynchronize request/reply pairing.
+                self.poisoned = true;
+                Err(ClientError::Timeout)
+            }
+            Err(e) => Err(e.into()),
         }
     }
 
@@ -148,7 +256,7 @@ impl SketchClient {
     pub fn insert_batch(&mut self, key: u64, words: &[u32]) -> Result<u64, ClientError> {
         self.check_sync()?;
         Self::check_payload(12 + words.len() as u64 * 4)?;
-        self.stream.write_all(&encode_insert_batch(key, words))?;
+        self.write_wire(&encode_insert_batch(key, words))?;
         match self.recv()? {
             Response::Ingested { words } => Ok(words),
             other => Err(unexpected("Ingested", &other)),
@@ -175,7 +283,7 @@ impl SketchClient {
             for (key, words) in window {
                 wire.extend_from_slice(&encode_insert_batch(*key, words));
             }
-            self.stream.write_all(&wire)?;
+            self.write_wire(&wire)?;
             for i in 0..window.len() {
                 let replies_outstanding = window.len() - i - 1;
                 match self.recv() {

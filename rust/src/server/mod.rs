@@ -13,19 +13,27 @@
 //!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`, plus the
 //!   replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
 //!   `DeltaBatch` — wire-v3 typed delta entries: register diffs,
-//!   full sketches, eviction tombstones), with typed error frames and
-//!   strict, panic-free decoding;
-//! * [`server`] — a multi-threaded [`std::net::TcpListener`] server:
-//!   one thread per connection, per-connection and aggregate stats,
-//!   graceful shutdown that joins every thread, an optional background
-//!   maintenance sweeper ([`SweeperConfig`]: timer-driven TTL /
-//!   wall-clock-TTL / budget eviction), optional read-only replica
-//!   mode, and — with [`ServerConfig::replication`] — a replication
-//!   primary role (capture thread + `SUBSCRIBE` streams, see
-//!   [`crate::replica`]);
+//!   full sketches, eviction tombstones, global-union diffs), with
+//!   typed error frames, strict panic-free decoding, and the
+//!   incremental [`protocol::FrameDecoder`]/[`protocol::FrameEncoder`]
+//!   state machines that reassemble frames across partial nonblocking
+//!   reads and writes;
+//! * [`reactor`] — a hand-rolled `poll(2)` readiness loop substrate
+//!   (interest sets rebuilt per tick, self-pipe [`reactor::Waker`]s
+//!   for cross-thread wakeups), dependency-free;
+//! * [`server`] — the event-driven server: one (configurably N)
+//!   nonblocking loop thread multiplexing every connection through
+//!   per-connection state machines (reading → dispatching → writing →
+//!   subscribed), write backpressure via interest flipping, idle
+//!   timeouts and a connection cap, graceful shutdown that drains the
+//!   pollers, an optional background maintenance sweeper
+//!   ([`SweeperConfig`]: timer-driven TTL / wall-clock-TTL / budget
+//!   eviction), optional read-only replica mode, and — with
+//!   [`ServerConfig::replication`] — a replication primary role
+//!   (capture thread + `SUBSCRIBE` streams, see [`crate::replica`]);
 //! * [`client`] — a blocking [`SketchClient`] with batch pipelining
 //!   (write a flight of ingest frames, then read the replies — one
-//!   round trip per flight);
+//!   round trip per flight) and optional typed socket timeouts;
 //! * [`snapshot`] — checksummed full-registry snapshot files (format
 //!   v2: per-key records plus the global-union record, v1 read-compat)
 //!   and the restore paths, so a restarted server resumes with
@@ -54,13 +62,14 @@
 
 pub mod client;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 pub mod snapshot;
 
 pub use client::{ClientError, SketchClient};
 pub use protocol::{
-    ErrorCode, EvictPolicy, ProtocolError, Request, Response, StatsSummary, MAX_PAYLOAD,
-    PROTO_VERSION,
+    ErrorCode, EvictPolicy, FrameDecoder, FrameEncoder, ProtocolError, Request, Response,
+    StatsSummary, MAX_PAYLOAD, PROTO_VERSION,
 };
 pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer, SweeperConfig};
 pub use snapshot::{

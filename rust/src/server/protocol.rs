@@ -70,6 +70,7 @@
 //! | 0    | `FULL`         | the key's full sketch, wire format v2          |
 //! | 1    | `REGISTER_DIFF`| changed registers, [`crate::hll::encode_register_diff`] format |
 //! | 2    | `TOMBSTONE`    | empty (`len` must be 0) — the key was evicted  |
+//! | 3    | `GLOBAL_DIFF`  | changed registers of the *global union* sketch (key field ignored, encoded 0) |
 //!
 //! Followers apply a batch's entries **in order**: a key evicted and
 //! re-created between captures arrives as a tombstone immediately
@@ -141,6 +142,12 @@ pub mod delta_kind {
     pub const REGISTER_DIFF: u8 = 1;
     /// No body: the key was evicted on the primary.
     pub const TOMBSTONE: u8 = 2;
+    /// Body is a changed-register diff of the primary's *global union*
+    /// sketch (same codec as `REGISTER_DIFF`); the entry's key field is
+    /// meaningless and encoded as 0. This is what carries words whose
+    /// key was evicted before the capture tick into followers'
+    /// `GlobalEstimate`.
+    pub const GLOBAL_DIFF: u8 = 3;
 }
 
 /// Fixed wire overhead of one `DELTA_BATCH_V3` entry: key (8) + kind
@@ -371,6 +378,7 @@ pub fn encode_delta_batch_v3(seq: u64, entries: &[(u64, SketchDelta)]) -> Vec<u8
             SketchDelta::Full(b) => (delta_kind::FULL, b.as_slice()),
             SketchDelta::RegisterDiff(b) => (delta_kind::REGISTER_DIFF, b.as_slice()),
             SketchDelta::Tombstone => (delta_kind::TOMBSTONE, &[]),
+            SketchDelta::GlobalDiff(b) => (delta_kind::GLOBAL_DIFF, b.as_slice()),
         };
         payload.push(kind);
         payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
@@ -662,6 +670,9 @@ impl Response {
                         delta_kind::REGISTER_DIFF => {
                             SketchDelta::RegisterDiff(r.bytes(len)?.to_vec())
                         }
+                        delta_kind::GLOBAL_DIFF => {
+                            SketchDelta::GlobalDiff(r.bytes(len)?.to_vec())
+                        }
                         delta_kind::TOMBSTONE => {
                             if len != 0 {
                                 return Err(ProtocolError::Malformed(format!(
@@ -735,6 +746,199 @@ pub fn read_request(r: &mut impl Read) -> Result<Request, ProtocolError> {
 pub fn read_response(r: &mut impl Read) -> Result<Response, ProtocolError> {
     let (opcode, payload) = read_frame(r)?;
     Response::decode(opcode, &payload)
+}
+
+// ---------------------------------------------------------------------------
+// Incremental frame codecs (the event loop's nonblocking I/O state machines)
+// ---------------------------------------------------------------------------
+
+/// Incremental, resumable frame *decoder*: feed it whatever bytes a
+/// nonblocking read produced ([`FrameDecoder::extend`]), pull complete
+/// frames out ([`FrameDecoder::next_frame`]) — the replacement for the
+/// blocking `read_exact` pair in [`read_frame`]. A frame split across
+/// any number of reads (down to one byte at a time) reassembles
+/// byte-exactly; validation is as strict as the blocking path: the
+/// header is checked as soon as its 8 bytes are in (bad magic/version
+/// and oversize length fields fail *before* the payload arrives, so a
+/// hostile length can never drive an allocation), and a framing error
+/// is terminal — the caller answers once and drops the connection,
+/// exactly the old server's split between decode errors (recoverable)
+/// and framing errors (fatal).
+///
+/// The decoder also counts **resumed frames**: whenever a pull attempt
+/// ends mid-frame (bytes buffered but no complete frame — the caller
+/// goes back to the poller and waits), the next frame that *does*
+/// complete is one that was suspended across reads. This feeds the
+/// server's `partial_frames_resumed` stat (the slow-loris
+/// observability knob).
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted away periodically).
+    pos: usize,
+    /// The last [`FrameDecoder::next_frame`] returned `Ok(None)` with a
+    /// partial frame buffered: the next completion counts as resumed.
+    partial_pending: bool,
+    resumed: u64,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one read's worth of bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Drain the resumed-frame counter (frames completed since the last
+    /// take after an earlier pull had left them suspended mid-frame).
+    pub fn take_resumed(&mut self) -> u64 {
+        std::mem::take(&mut self.resumed)
+    }
+
+    /// Whether a pull would make progress right now: a complete frame
+    /// is buffered, or a framing error is waiting to be raised. (What
+    /// distinguishes "requests still to serve" from "a dead partial
+    /// tail" on a half-closed connection that will never read more.)
+    pub fn has_work(&self) -> bool {
+        if self.buffered() < FRAME_HEADER_LEN {
+            return false;
+        }
+        let header: [u8; FRAME_HEADER_LEN] =
+            self.buf[self.pos..self.pos + FRAME_HEADER_LEN].try_into().unwrap();
+        match parse_header(&header) {
+            Ok((_, len)) => self.buffered() >= FRAME_HEADER_LEN + len as usize,
+            Err(_) => true,
+        }
+    }
+
+    /// Pull the next complete frame, if the buffer holds one.
+    /// `Ok(None)` = incomplete, feed more bytes. `Err` = the stream's
+    /// framing is broken (bad magic/version, oversize length) and
+    /// cannot resync — drop the connection after answering.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, ProtocolError> {
+        if self.buffered() < FRAME_HEADER_LEN {
+            return self.suspend();
+        }
+        let header: [u8; FRAME_HEADER_LEN] =
+            self.buf[self.pos..self.pos + FRAME_HEADER_LEN].try_into().unwrap();
+        let (opcode, len) = parse_header(&header)?;
+        let total = FRAME_HEADER_LEN + len as usize;
+        if self.buffered() < total {
+            return self.suspend();
+        }
+        let payload = self.buf[self.pos + FRAME_HEADER_LEN..self.pos + total].to_vec();
+        self.pos += total;
+        if self.partial_pending {
+            // This frame sat incomplete when an earlier pull gave up:
+            // its bytes arrived across more than one read.
+            self.partial_pending = false;
+            self.resumed += 1;
+        }
+        self.compact();
+        Ok(Some((opcode, payload)))
+    }
+
+    /// An incomplete pull: remember whether it left a partial frame
+    /// behind (that frame, once completed, counts as resumed).
+    fn suspend(&mut self) -> Result<Option<(u8, Vec<u8>)>, ProtocolError> {
+        if self.buffered() > 0 {
+            self.partial_pending = true;
+        }
+        self.compact();
+        Ok(None)
+    }
+
+    /// Reclaim the consumed prefix once it is fully drained or large;
+    /// amortized O(1) per byte either way. A drained buffer whose
+    /// capacity ballooned (one `MAX_PAYLOAD`-sized frame would
+    /// otherwise pin ~64 MiB for the connection's whole lifetime —
+    /// ruinous at hundreds of resident connections) is released back
+    /// to the allocator.
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+            if self.buf.capacity() > 256 * 1024 {
+                self.buf = Vec::new();
+            }
+        } else if self.pos >= 64 * 1024 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+/// Incremental frame *encoder*: an outbound queue of already-encoded
+/// frames drained by nonblocking writes — the replacement for blocking
+/// `write_all`. [`FrameEncoder::write_to`] pushes as many bytes as the
+/// socket takes and remembers the partial-write offset, so a peer that
+/// reads slowly (or not at all) costs buffered bytes, never a blocked
+/// thread; the server flips `POLLOUT` interest on whenever
+/// [`FrameEncoder::pending`] is nonzero and pauses reads past a
+/// backpressure threshold.
+#[derive(Debug, Default)]
+pub struct FrameEncoder {
+    queue: std::collections::VecDeque<Vec<u8>>,
+    /// Bytes of `queue.front()` already written.
+    front_written: usize,
+    pending: usize,
+}
+
+impl FrameEncoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue one complete encoded frame.
+    pub fn push(&mut self, frame: Vec<u8>) {
+        self.pending += frame.len();
+        self.queue.push_back(frame);
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Write as much as `w` accepts right now. `Ok(true)` = fully
+    /// drained; `Ok(false)` = the socket would block with bytes still
+    /// queued (re-arm write interest); `Err` = the connection is gone.
+    pub fn write_to<W: io::Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        while let Some(front) = self.queue.front() {
+            match w.write(&front[self.front_written..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.front_written += n;
+                    self.pending -= n;
+                    if self.front_written == front.len() {
+                        self.queue.pop_front();
+                        self.front_written = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
 }
 
 /// Strict little-endian payload cursor.
@@ -1163,6 +1367,163 @@ mod tests {
             Request::InsertBatch { key: 2, words: vec![30] }
         );
         assert_eq!(read_request(&mut cur).unwrap(), Request::Stats);
+    }
+
+    #[test]
+    fn frame_decoder_reassembles_at_every_split_point() {
+        // Three pipelined frames, split at every possible boundary: the
+        // incremental decoder must yield exactly what the blocking
+        // reader yields, regardless of where the reads land.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_insert_batch(1, &[10, 20]));
+        wire.extend_from_slice(&Request::Stats.encode());
+        wire.extend_from_slice(&encode_insert_batch(2, &[30]));
+        let expect = vec![
+            Request::InsertBatch { key: 1, words: vec![10, 20] },
+            Request::Stats,
+            Request::InsertBatch { key: 2, words: vec![30] },
+        ];
+        for cut in 0..=wire.len() {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for chunk in [&wire[..cut], &wire[cut..]] {
+                dec.extend(chunk);
+                while let Some((op, payload)) = dec.next_frame().unwrap() {
+                    got.push(Request::decode(op, &payload).unwrap());
+                }
+            }
+            assert_eq!(got, expect, "split at {cut}");
+            assert_eq!(dec.buffered(), 0, "split at {cut} left residue");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_counts_resumed_frames() {
+        let frame = encode_insert_batch(7, &[1, 2, 3]);
+        // Whole frame in one read: nothing resumed.
+        let mut dec = FrameDecoder::new();
+        dec.extend(&frame);
+        assert!(dec.next_frame().unwrap().is_some());
+        assert_eq!(dec.take_resumed(), 0);
+        // One byte per read, pulled between reads like the event loop
+        // does (slow loris): exactly one resumed frame.
+        let mut dec = FrameDecoder::new();
+        for &b in &frame {
+            assert!(dec.next_frame().unwrap().is_none(), "no frame before the last byte");
+            dec.extend(&[b]);
+        }
+        assert!(dec.next_frame().unwrap().is_some());
+        assert_eq!(dec.take_resumed(), 1);
+        assert_eq!(dec.take_resumed(), 0, "counter must drain");
+        // A pipelined pair split mid-second-frame, pulled between the
+        // two reads: only the split frame counts.
+        let mut wire = frame.clone();
+        wire.extend_from_slice(&Request::Ping.encode());
+        let cut = frame.len() + 3;
+        let mut dec = FrameDecoder::new();
+        dec.extend(&wire[..cut]);
+        let mut frames = 0;
+        while dec.next_frame().unwrap().is_some() {
+            frames += 1;
+        }
+        assert_eq!(frames, 1, "only the first frame is complete at the cut");
+        dec.extend(&wire[cut..]);
+        while dec.next_frame().unwrap().is_some() {
+            frames += 1;
+        }
+        assert_eq!(frames, 2);
+        assert_eq!(dec.take_resumed(), 1, "only the split frame counts as resumed");
+    }
+
+    #[test]
+    fn frame_decoder_rejects_hostile_headers_before_payload() {
+        // Bad magic fails as soon as the header is in.
+        let mut dec = FrameDecoder::new();
+        dec.extend(b"XX\x01\x01\x00\x00\x00\x00");
+        assert!(matches!(dec.next_frame(), Err(ProtocolError::BadMagic(_))));
+        // Oversize length fails with no payload byte ever buffered.
+        let mut dec = FrameDecoder::new();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC);
+        hdr.push(PROTO_VERSION);
+        hdr.push(opcodes::PING);
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        dec.extend(&hdr);
+        assert!(matches!(dec.next_frame(), Err(ProtocolError::Oversize(_))));
+        // Bad version, trickled byte-at-a-time, still fails at byte 8.
+        let mut dec = FrameDecoder::new();
+        for &b in b"HL\x63\x01\x00\x00\x00\x00" {
+            dec.extend(&[b]);
+        }
+        assert!(matches!(dec.next_frame(), Err(ProtocolError::BadVersion(0x63))));
+        // An incomplete header is just "feed me more".
+        let mut dec = FrameDecoder::new();
+        dec.extend(b"HL\x01");
+        assert!(matches!(dec.next_frame(), Ok(None)));
+    }
+
+    /// A sink that accepts at most `cap` bytes per write call, then
+    /// reports WouldBlock — a nonblocking socket with a tiny buffer.
+    struct Throttle {
+        out: Vec<u8>,
+        cap: usize,
+        budget: usize,
+    }
+
+    impl std::io::Write for Throttle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.cap).min(self.budget);
+            self.out.extend_from_slice(&buf[..n]);
+            self.budget -= n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn frame_encoder_resumes_partial_writes_byte_exactly() {
+        let frames =
+            [Request::Ping.encode(), encode_insert_batch(9, &[1, 2, 3, 4]), Request::Stats.encode()];
+        let want: Vec<u8> = frames.iter().flatten().copied().collect();
+        let mut enc = FrameEncoder::new();
+        for f in &frames {
+            enc.push(f.clone());
+        }
+        assert_eq!(enc.pending(), want.len());
+        // Drain through a sink that takes 3 bytes per call and blocks
+        // every 7: the encoder must resume mid-frame without loss,
+        // duplication or reordering.
+        let mut sink = Throttle { out: Vec::new(), cap: 3, budget: 7 };
+        while !enc.is_empty() {
+            match enc.write_to(&mut sink).unwrap() {
+                true => break,
+                false => sink.budget = 7, // socket drained; writable again
+            }
+        }
+        assert!(enc.is_empty());
+        assert_eq!(enc.pending(), 0);
+        assert_eq!(sink.out, want);
+    }
+
+    #[test]
+    fn global_diff_entries_roundtrip_on_the_v3_wire() {
+        let entries = vec![
+            (0, SketchDelta::GlobalDiff(vec![1, 2, 3, 4, 5])),
+            (5, SketchDelta::Tombstone),
+        ];
+        let frame = Response::DeltaBatchV3 { seq: 3, entries: entries.clone() }.encode();
+        match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
+            Response::DeltaBatchV3 { seq, entries: got } => {
+                assert_eq!(seq, 3);
+                assert_eq!(got, entries);
+            }
+            other => panic!("expected DeltaBatchV3, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,28 +1,66 @@
-//! The TCP serving front-end: a multi-threaded
-//! [`std::net::TcpListener`] server that owns a shared
-//! [`SketchRegistry`] and speaks the [`super::protocol`] frame protocol.
+//! The TCP serving front-end: an event-driven, nonblocking readiness
+//! loop ([`super::reactor`]) multiplexing every connection through one
+//! (configurably N) loop thread — the software analogue of the paper's
+//! single shared FPGA datapath that many flows progress through
+//! concurrently, replacing the old thread-per-connection model whose
+//! cost scaled with *open* connections rather than *active* ones.
 //!
-//! One thread accepts; each connection gets a dedicated thread (the
-//! blocking analogue of the paper's per-port NIC pipelines). The accept
-//! loop and every connection read poll a shared stop flag on a short
-//! interval, so [`SketchServer::shutdown`] (or drop) stops accepting
-//! and joins every connection thread within one poll tick — a graceful
-//! shutdown with no detached threads left touching the registry. Two
-//! optional maintenance threads ride the same stop flag:
+//! # Connection state machine
+//!
+//! Each accepted socket is a [`Conn`]: a nonblocking stream plus an
+//! incremental [`FrameDecoder`] (inbound) and [`FrameEncoder`]
+//! (outbound). Readiness events drive it through:
+//!
+//! ```text
+//!            readable: bytes → decoder
+//!   ┌────────────────────────────────────────┐
+//!   ▼                                        │
+//! Reading ──frame──▶ Dispatching ──reply──▶ Writing ──drained──▶ (Reading)
+//!   │                     │ SUBSCRIBE                ▲
+//!   │ framing error       ▼                          │ log wakeup /
+//!   ▼                 Subscribed ◀───────────────────┘ REPLICA_ACK
+//! Closing (flush the typed error, then drop)
+//! ```
+//!
+//! * **Reading** — readable events append to the decoder; frames left
+//!   suspended mid-read and completed later feed the
+//!   `partial_frames_resumed` stat (a slow-loris client trickling one
+//!   byte per frame costs buffered bytes, not a parked thread).
+//! * **Dispatching** — complete frames dispatch exactly as before
+//!   (same [`dispatch`]); payload-level decode errors answer a typed
+//!   `ERROR` and keep serving, framing errors answer once and close.
+//! * **Writing** — replies queue in the encoder and drain on writable
+//!   events. **Backpressure is interest flipping**: past a buffered
+//!   threshold the connection's read interest is dropped, so a peer
+//!   that never reads replies stalls *itself* (TCP flow control pushes
+//!   back through its own socket) while every other connection
+//!   progresses. No write ever blocks the loop.
+//! * **Subscribed** — a `SUBSCRIBE` frame flips the connection into a
+//!   nonblocking replication stream: sealed batches are pumped into
+//!   the encoder within the ack window and a byte budget, `REPLICA_ACK`
+//!   frames slide the window, and the capture thread [`Waker`]-wakes
+//!   every loop after sealing so write interest re-arms within one
+//!   syscall instead of one poll tick.
+//!
+//! Idle connections ([`ServerConfig::idle_timeout`]) are reaped by the
+//! loop's tick sweep; [`ServerConfig::max_connections`] stops accepting
+//! (the listener leaves the interest set) until the count drops.
+//! Graceful shutdown raises the stop flag, wakes every loop, drains the
+//! pollers, best-effort-flushes queued replies and joins the loop
+//! threads — no per-connection threads exist to join.
+//!
+//! Two optional maintenance threads ride the same stop flag:
 //!
 //! * the **sweeper** ([`SweeperConfig`]) runs TTL / wall-clock-TTL /
-//!   budget eviction on a timer, so lifecycle policy no longer depends
-//!   on ingest traffic or explicit `Evict` RPCs;
+//!   budget eviction on a timer;
 //! * the **replication capture thread** ([`ReplicationConfig`]) drains
-//!   the registry's dirty keys into the [`ReplicationLog`]'s sealed
-//!   delta batches, which subscriber connections (`SUBSCRIBE` frames —
-//!   see [`crate::replica`]) stream to followers with cursor resume and
-//!   ack-window backpressure.
+//!   the registry's dirty keys (and the global union's dirty registers)
+//!   into the [`ReplicationLog`]'s sealed delta batches, then wakes the
+//!   event loops so subscriber connections ship them.
 //!
 //! With [`ServerConfig::read_only`] set the server fronts a replica:
 //! mutating RPCs answer a typed [`ErrorCode::ReadOnly`] frame while
 //! `Estimate` / `GlobalEstimate` / `Stats` / `Ping` serve normally.
-//!
 //! Malformed frames are answered with typed `ERROR` frames where the
 //! stream is still in sync (decode errors), and the connection is
 //! dropped where it cannot be (framing errors) — the server never
@@ -30,16 +68,18 @@
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::protocol::{
-    encode_delta_batch, encode_delta_batch_v3, parse_header, ErrorCode, EvictPolicy, Request,
-    Response, StatsSummary, DELTA_WIRE_V3, FRAME_HEADER_LEN, MAX_PAYLOAD,
+    encode_delta_batch, encode_delta_batch_v3, ErrorCode, EvictPolicy, FrameDecoder,
+    FrameEncoder, Request, Response, StatsSummary, DELTA_WIRE_V3, MAX_PAYLOAD,
 };
+use super::reactor::{self, Poller, WakeRx, Waker};
 use super::snapshot;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
 use crate::registry::{SketchDelta, SketchRegistry};
@@ -53,6 +93,31 @@ use crate::replica::{LogRead, ReplicationConfig, ReplicationLog, SealedBatch};
 /// background sweeper, when configured, enforces on its timer as well —
 /// this piggyback remains for servers run without one.)
 const BUDGET_ENFORCE_EVERY: u64 = 256;
+
+/// Buffered reply bytes past which a connection's *read* interest is
+/// dropped (write backpressure): the peer stops being served new
+/// requests until it drains what it already owes us. Well above one
+/// full pipeline window of replies, so normal pipelining never pauses.
+const READ_PAUSE_BYTES: usize = 256 * 1024;
+
+/// Per-readiness-event read budget: one connection may buffer at most
+/// this much in a single burst before the loop moves on (fairness
+/// against a firehose peer; level-triggered poll re-reports the rest).
+const READ_BURST_BYTES: usize = 1 << 20;
+
+/// Outbound byte budget a subscriber pump keeps queued. Bounds the
+/// encoder's memory to roughly one batch above this (batches are capped
+/// at `MAX_PAYLOAD / 4`), instead of `ack_window × batch` bytes.
+const SUB_PUMP_TARGET: usize = 1 << 20;
+
+/// Poll tick: upper bound on how late the loop notices timer-ish work
+/// (idle sweeps, manually sealed batches in tests). Stop and capture
+/// wakeups arrive via the waker, not the tick.
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// Poll tokens for the two non-connection descriptors.
+const TOKEN_WAKER: usize = usize::MAX;
+const TOKEN_LISTENER: usize = usize::MAX - 1;
 
 /// Background maintenance sweeper parameters: which eviction policies
 /// run on the timer (ROADMAP item — previously budget enforcement only
@@ -84,7 +149,7 @@ impl Default for SweeperConfig {
 }
 
 /// Static serving parameters.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Where the `SNAPSHOT` RPC persists the registry. `None` makes the
     /// RPC answer [`ErrorCode::Unsupported`].
@@ -101,6 +166,38 @@ pub struct ServerConfig {
     pub replication: Option<ReplicationConfig>,
     /// Run the background maintenance sweeper.
     pub sweeper: Option<SweeperConfig>,
+    /// Event-loop threads multiplexing connections (0 is treated as 1).
+    /// One loop rides hundreds of idle tenants; more loops spread
+    /// *active* connections across cores (accepted sockets are routed
+    /// round-robin).
+    pub event_loop_threads: usize,
+    /// Open-connection cap: at the cap the listener leaves the poll
+    /// set, so further connects wait in the accept backlog until a
+    /// connection closes (nothing is reset mid-handshake). Pair it
+    /// with [`ServerConfig::idle_timeout`] when clients may linger or
+    /// vanish without a FIN (NAT drops): with no timeout, idle
+    /// connections hold their slots forever and a full cap silently
+    /// parks every new connect in the backlog.
+    pub max_connections: usize,
+    /// Drop RPC connections idle (no bytes either way) longer than
+    /// this. Subscriber streams are exempt — a caught-up subscriber on
+    /// a quiet primary is legitimately silent. `None` (default) keeps
+    /// idle connections forever, matching the old server.
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            snapshot_path: None,
+            read_only: false,
+            replication: None,
+            sweeper: None,
+            event_loop_threads: 1,
+            max_connections: 4096,
+            idle_timeout: None,
+        }
+    }
 }
 
 /// Point-in-time server counters.
@@ -108,8 +205,17 @@ pub struct ServerConfig {
 pub struct ServerStatsSnapshot {
     /// Connections accepted since start.
     pub connections: u64,
+    /// Connections currently open (gauge).
+    pub connections_open: u64,
+    /// High-water mark of simultaneously open connections.
+    pub connections_peak: u64,
     /// Frames served (requests fully read, valid or not).
     pub frames: u64,
+    /// Frames whose bytes arrived across more than one socket read —
+    /// partial reads the incremental decoder resumed (nonzero under
+    /// slow or trickling peers; the blocking server would have parked a
+    /// thread for each).
+    pub partial_frames_resumed: u64,
     /// Words ingested through `INSERT_BATCH`.
     pub words_ingested: u64,
     /// Requests answered with an `ERROR` frame.
@@ -128,7 +234,10 @@ pub struct ServerStatsSnapshot {
 #[derive(Debug, Default)]
 struct ServerStats {
     connections: AtomicU64,
+    connections_open: AtomicU64,
+    connections_peak: AtomicU64,
     frames: AtomicU64,
+    partial_frames_resumed: AtomicU64,
     words_ingested: AtomicU64,
     error_frames: AtomicU64,
     sweeps: AtomicU64,
@@ -145,16 +254,27 @@ struct Shared {
     stats: ServerStats,
     /// Present iff this server is a replication primary.
     log: Option<Arc<ReplicationLog>>,
+    /// One waker per event loop: the capture thread and shutdown kick
+    /// every loop out of `poll` the moment there is work.
+    wakers: Vec<Waker>,
+}
+
+impl Shared {
+    fn wake_all(&self) {
+        for w in &self.wakers {
+            w.wake();
+        }
+    }
 }
 
 /// A running sketch server. Dropping it performs a full graceful
-/// shutdown (stop accepting, drain and join every connection thread).
+/// shutdown (stop accepting, drain the pollers, join the loop threads).
 pub struct SketchServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    accept_join: Option<JoinHandle<()>>,
+    loop_joins: Vec<JoinHandle<()>>,
     /// Sweeper and replication-capture threads, joined on shutdown like
-    /// the accept thread.
+    /// the loop threads.
     maint_joins: Vec<JoinHandle<()>>,
 }
 
@@ -168,24 +288,41 @@ impl SketchServer {
     ) -> io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let threads = cfg.event_loop_threads.max(1);
         // A replication primary needs dirty tracking on before any
         // subscriber can connect: every mutation then either lands in a
-        // subscriber's bootstrap full sync (it ran before the accept
-        // thread existed) or in a sealed delta batch — never in
-        // neither. Enabled only after the fallible bind, so a failed
-        // start does not leave the shared registry accumulating dirty
-        // keys that nothing will ever drain.
+        // subscriber's bootstrap full sync (it ran before the loops
+        // existed) or in a sealed delta batch — never in neither.
+        // Enabled only after the fallible bind, so a failed start does
+        // not leave the shared registry accumulating dirty keys that
+        // nothing will ever drain.
         let log = cfg.replication.as_ref().map(|_| {
             registry.enable_dirty_tracking();
             Arc::new(ReplicationLog::new())
         });
+        let mut wakers = Vec::with_capacity(threads);
+        let mut wake_rxs = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (w, r) = reactor::waker_pair()?;
+            wakers.push(w);
+            wake_rxs.push(r);
+        }
         let shared = Arc::new(Shared {
             registry,
             cfg,
             stop: AtomicBool::new(false),
             stats: ServerStats::default(),
             log,
+            wakers,
         });
+        let mut routes = Vec::with_capacity(threads);
+        let mut intakes = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::channel();
+            routes.push(tx);
+            intakes.push(rx);
+        }
         let mut maint_joins = Vec::new();
         if let (Some(log), Some(rcfg)) = (&shared.log, &shared.cfg.replication) {
             let capture_shared = shared.clone();
@@ -206,12 +343,26 @@ impl SketchServer {
                     .spawn(move || sweeper_loop(sweep_shared, sweep_cfg))?,
             );
         }
-        let accept_shared = shared.clone();
-        let accept_join = std::thread::Builder::new()
-            .name("sketch-server-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared))?;
-        crate::log_debug!("server", "listening on {addr}");
-        Ok(Self { addr, shared, accept_join: Some(accept_join), maint_joins })
+        let mut loop_joins = Vec::with_capacity(threads);
+        let mut listener = Some(listener);
+        for (i, (wake_rx, intake)) in wake_rxs.into_iter().zip(intakes).enumerate() {
+            let parts = LoopParts {
+                // Loop 0 owns the listener and routes accepted sockets
+                // round-robin across every loop (itself included).
+                listener: if i == 0 { listener.take() } else { None },
+                wake_rx,
+                intake,
+                routes: if i == 0 { routes.clone() } else { Vec::new() },
+            };
+            let loop_shared = shared.clone();
+            loop_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("sketch-server-loop-{i}"))
+                    .spawn(move || event_loop(loop_shared, parts))?,
+            );
+        }
+        crate::log_debug!("server", "listening on {addr} ({threads} event loop thread(s))");
+        Ok(Self { addr, shared, loop_joins, maint_joins })
     }
 
     /// The bound address (with the real port when started on port 0).
@@ -229,7 +380,10 @@ impl SketchServer {
         let s = &self.shared.stats;
         ServerStatsSnapshot {
             connections: s.connections.load(Ordering::Relaxed),
+            connections_open: s.connections_open.load(Ordering::Relaxed),
+            connections_peak: s.connections_peak.load(Ordering::Relaxed),
             frames: s.frames.load(Ordering::Relaxed),
+            partial_frames_resumed: s.partial_frames_resumed.load(Ordering::Relaxed),
             words_ingested: s.words_ingested.load(Ordering::Relaxed),
             error_frames: s.error_frames.load(Ordering::Relaxed),
             sweeps: s.sweeps.load(Ordering::Relaxed),
@@ -247,20 +401,18 @@ impl SketchServer {
         self.shared.log.as_ref()
     }
 
-    /// Graceful shutdown: stop accepting, join every connection thread.
-    /// In-flight requests finish; idle connections close within the poll
-    /// interval. Also runs on drop.
+    /// Graceful shutdown: stop accepting, wake and join every event
+    /// loop (queued replies get a best-effort flush). Also runs on drop.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
-        // The accept loop polls nonblocking, so it observes the flag
-        // within one poll interval on every platform and bind address
-        // (no wake-up connection needed — one would not be routable for
-        // wildcard binds everywhere).
-        if let Some(join) = self.accept_join.take() {
+        // The wakers kick every loop out of `poll` immediately; the
+        // maintenance threads poll the flag on short sleeps.
+        self.shared.wake_all();
+        for join in self.loop_joins.drain(..) {
             let _ = join.join();
         }
         for join in self.maint_joins.drain(..) {
@@ -275,160 +427,539 @@ impl Drop for SketchServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
-    // Nonblocking accept + short sleep: the loop observes the stop flag
-    // within one poll interval, with no reliance on a wake-up connection
-    // being able to reach the listener's bind address.
-    let _ = listener.set_nonblocking(true);
-    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+/// What one connection is, beyond its socket: the serving mode.
+#[derive(Debug)]
+enum ConnMode {
+    /// Request/response RPC serving.
+    Rpc,
+    /// A replication stream (`SUBSCRIBE` flipped it): a nonblocking
+    /// outbound pump over the sealed batch log, bounded by the unacked
+    /// window, reading only `REPLICA_ACK` frames back.
+    Subscriber { sent: u64, acked: u64, wire: u8, ack_window: u64 },
+}
+
+/// One connection's full state machine.
+#[derive(Debug)]
+struct Conn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    encoder: FrameEncoder,
+    mode: ConnMode,
+    last_activity: Instant,
+    /// Stop reading/dispatching; flush the encoder, then close (the
+    /// "answer the typed error, then drop" path).
+    closing: bool,
+    /// The peer half-closed (FIN): no more bytes will arrive, but
+    /// requests already buffered in the decoder are still served and
+    /// their replies flushed — the connection closes once the decoder
+    /// has no work left and the encoder is drained.
+    read_eof: bool,
+    /// Remove now (peer gone, fatal IO error, idle timeout).
+    dead: bool,
+}
+
+/// Per-loop plumbing handed to each loop thread.
+struct LoopParts {
+    /// Present on the accepting loop (loop 0) only.
+    listener: Option<TcpListener>,
+    wake_rx: WakeRx,
+    /// Connections routed to this loop by the accepting loop.
+    intake: mpsc::Receiver<TcpStream>,
+    /// Round-robin routing targets (accepting loop only; empty elsewhere).
+    routes: Vec<mpsc::Sender<TcpStream>>,
+}
+
+fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
+    let mut poller = Poller::new();
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut next_route = 0usize;
+    let mut read_buf = vec![0u8; 16 * 1024];
+    // Set after a non-WouldBlock accept failure (EMFILE and friends):
+    // the listener leaves the interest set until this passes, so the
+    // backlog's level-triggered readability cannot hot-spin the loop —
+    // and no connection pays a sleep for it.
+    let mut accept_backoff: Option<Instant> = None;
+
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             break;
         }
+        // (1) Adopt connections the accepting loop routed here.
+        while let Ok(stream) = parts.intake.try_recv() {
+            admit(&mut conns, &mut free, stream);
+        }
+        // (2) Pump subscriber streams: fill encoders from the sealed
+        // log up to the ack window / byte budget. Runs every tick and
+        // after every capture wakeup; cheap (one log read) when caught
+        // up.
+        if let Some(log) = shared.log.clone() {
+            for slot in conns.iter_mut() {
+                if let Some(conn) = slot {
+                    if !conn.closing
+                        && !conn.dead
+                        && matches!(conn.mode, ConnMode::Subscriber { .. })
+                    {
+                        pump_subscriber(conn, &shared, &log);
+                    }
+                }
+            }
+        }
+        // (3) Flush pending output; resume frames the decoder buffered
+        // while reads were paused, now that replies drained.
+        for slot in conns.iter_mut() {
+            if let Some(conn) = slot {
+                flush_and_resume(conn, &shared);
+            }
+        }
+        // (4) Reap closed connections; sweep idle ones.
+        for (idx, slot) in conns.iter_mut().enumerate() {
+            let Some(conn) = slot else { continue };
+            // Non-closing subscribers are exempt: a caught-up stream on
+            // a quiet primary is legitimately silent. `closing`
+            // connections of either mode are not — a peer that never
+            // drains its final error frame would otherwise pin the
+            // slot forever.
+            if let Some(t) = shared.cfg.idle_timeout {
+                if (matches!(conn.mode, ConnMode::Rpc) || conn.closing)
+                    && conn.last_activity.elapsed() > t
+                {
+                    conn.dead = true;
+                }
+            }
+            let half_closed_done = conn.read_eof && !conn.decoder.has_work();
+            if conn.dead || ((conn.closing || half_closed_done) && conn.encoder.is_empty()) {
+                *slot = None;
+                free.push(idx);
+                shared.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        // (5) Rebuild the interest set: this is where backpressure
+        // *flips interest* — no read interest past the reply-buffer
+        // threshold, write interest exactly while bytes are queued.
+        poller.clear();
+        poller.register(parts.wake_rx.as_raw_fd(), TOKEN_WAKER, true, false);
+        if accept_backoff.is_some_and(|until| Instant::now() >= until) {
+            accept_backoff = None;
+        }
+        if let Some(listener) = &parts.listener {
+            let open = shared.stats.connections_open.load(Ordering::Relaxed) as usize;
+            if open < shared.cfg.max_connections && accept_backoff.is_none() {
+                poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false);
+            }
+        }
+        for (idx, slot) in conns.iter().enumerate() {
+            let Some(conn) = slot else { continue };
+            // No read interest after the peer's FIN: the socket would
+            // report readable-EOF every tick forever.
+            let readable = !conn.closing
+                && !conn.read_eof
+                && (matches!(conn.mode, ConnMode::Subscriber { .. })
+                    || conn.encoder.pending() < READ_PAUSE_BYTES);
+            let writable = !conn.encoder.is_empty();
+            poller.register(conn.stream.as_raw_fd(), idx, readable, writable);
+        }
+        // (6) Wait for readiness (or the tick).
+        if poller.poll(Some(POLL_TICK)).is_err() {
+            // Transient poll failure: back off instead of hot-spinning.
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        // (7) Handle events. Level-triggered semantics: anything not
+        // finished this pass is re-reported next poll.
+        let ready: Vec<reactor::Readiness> = poller.ready().collect();
+        for r in ready {
+            match r.token {
+                TOKEN_WAKER => parts.wake_rx.drain(),
+                TOKEN_LISTENER => {
+                    if !accept_ready(&shared, &parts, &mut next_route) {
+                        accept_backoff = Some(Instant::now() + Duration::from_millis(20));
+                    }
+                }
+                idx => {
+                    let Some(conn) = conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+                        continue;
+                    };
+                    if r.invalid {
+                        conn.dead = true;
+                        continue;
+                    }
+                    if r.readable {
+                        on_readable(conn, &shared, &mut read_buf);
+                    }
+                    if r.writable {
+                        flush_and_resume(conn, &shared);
+                    }
+                }
+            }
+        }
+    }
+
+    // Shutdown: drain the poller's connections — best-effort flush of
+    // queued replies (sockets are nonblocking; a full buffer just drops
+    // the rest), then close everything. Sockets routed here but not yet
+    // adopted still count in the open gauge: drain them too, or the
+    // gauge reads phantom connections forever after shutdown.
+    for slot in conns.iter_mut() {
+        if let Some(mut conn) = slot.take() {
+            let _ = conn.encoder.write_to(&mut conn.stream);
+            shared.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    while parts.intake.try_recv().is_ok() {
+        shared.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Take ownership of a routed socket as a fresh RPC-mode connection.
+fn admit(conns: &mut Vec<Option<Conn>>, free: &mut Vec<usize>, stream: TcpStream) {
+    let _ = stream.set_nonblocking(true);
+    let _ = stream.set_nodelay(true);
+    let conn = Conn {
+        stream,
+        decoder: FrameDecoder::new(),
+        encoder: FrameEncoder::new(),
+        mode: ConnMode::Rpc,
+        last_activity: Instant::now(),
+        closing: false,
+        read_eof: false,
+        dead: false,
+    };
+    match free.pop() {
+        Some(idx) => conns[idx] = Some(conn),
+        None => conns.push(Some(conn)),
+    }
+}
+
+/// Accept everything pending (up to the connection cap) and route each
+/// socket round-robin across the loops, waking the target. Returns
+/// `false` on a persistent accept failure (EMFILE being the classic):
+/// the failed connection stays in the backlog keeping the listener
+/// level-triggered readable, so the caller must take the listener out
+/// of the interest set briefly or the loop hot-spins.
+fn accept_ready(shared: &Shared, parts: &LoopParts, next_route: &mut usize) -> bool {
+    let Some(listener) = &parts.listener else { return true };
+    loop {
+        // No new work once shutdown began — a socket routed to a loop
+        // that already exited would leak its slot in the open gauge.
+        if shared.stop.load(Ordering::SeqCst) {
+            return true;
+        }
+        let open = shared.stats.connections_open.load(Ordering::Relaxed) as usize;
+        if open >= shared.cfg.max_connections {
+            return true;
+        }
         match listener.accept() {
             Ok((stream, _)) => {
-                // Accepted sockets can inherit the listener's
-                // nonblocking mode on some platforms; connections use
-                // blocking reads with a timeout.
-                let _ = stream.set_nonblocking(false);
-                let id = shared.stats.connections.fetch_add(1, Ordering::Relaxed) + 1;
-                let conn_shared = shared.clone();
-                let spawned = std::thread::Builder::new()
-                    .name(format!("sketch-server-conn-{id}"))
-                    .spawn(move || serve_connection(stream, conn_shared));
-                if let Ok(join) = spawned {
-                    conns.push(join);
+                shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                let now_open = shared.stats.connections_open.fetch_add(1, Ordering::Relaxed) + 1;
+                shared.stats.connections_peak.fetch_max(now_open, Ordering::Relaxed);
+                let target = *next_route % parts.routes.len();
+                *next_route = next_route.wrapping_add(1);
+                if parts.routes[target].send(stream).is_ok() {
+                    shared.wakers[target].wake();
+                } else {
+                    shared.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
                 }
             }
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(_) => return false,
         }
-        // Reap finished connections on every pass — including idle
-        // polls, so a server that went quiet after a burst of
-        // connections does not retain their join handles indefinitely.
-        conns.retain(|j| !j.is_finished());
-    }
-    for join in conns {
-        let _ = join.join();
     }
 }
 
-/// Fill `buf` from the stream, polling the stop flag across read
-/// timeouts. `Ok(true)` = filled; `Ok(false)` = clean end (EOF before
-/// the first byte, or server stopping); `Err` = broken stream or EOF
-/// mid-frame. Shared with [`crate::replica`]'s follower loop.
-pub(crate) fn read_full(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-) -> io::Result<bool> {
-    let mut filled = 0;
-    while filled < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(false);
-        }
-        match stream.read(&mut buf[filled..]) {
+/// Readable event: pull whatever the socket holds into the decoder
+/// (bounded per burst for fairness), then dispatch the complete frames.
+fn on_readable(conn: &mut Conn, shared: &Shared, buf: &mut [u8]) {
+    let mut eof = false;
+    loop {
+        match conn.stream.read(buf) {
             Ok(0) => {
-                if filled == 0 {
-                    return Ok(false);
+                eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.decoder.extend(&buf[..n]);
+                conn.last_activity = Instant::now();
+                if conn.decoder.buffered() >= READ_BURST_BYTES || n < buf.len() {
+                    break;
                 }
-                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-frame"));
             }
-            Ok(n) => filled += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::WouldBlock
-                        | io::ErrorKind::TimedOut
-                        | io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
             }
-            Err(e) => return Err(e),
         }
     }
-    Ok(true)
-}
-
-/// Mirror of [`read_full`] for the reply side: drain `buf` into the
-/// stream, polling the stop flag across write timeouts. Without this, a
-/// peer that pipelines requests but never reads replies would fill the
-/// socket buffers and park the connection thread in an unbounded
-/// `write_all` — wedging [`SketchServer::shutdown`] forever.
-pub(crate) fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Result<bool> {
-    let mut written = 0;
-    while written < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(false);
-        }
-        match stream.write(&buf[written..]) {
-            Ok(0) => {
-                return Err(io::Error::new(
-                    io::ErrorKind::WriteZero,
-                    "peer stopped accepting bytes",
-                ))
-            }
-            Ok(n) => written += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::WouldBlock
-                        | io::ErrorKind::TimedOut
-                        | io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue
-            }
-            Err(e) => return Err(e),
+    process_frames(conn, shared);
+    if eof {
+        match conn.mode {
+            // Half-close: requests pipelined before the FIN keep being
+            // served (the reap waits until the decoder has no work and
+            // the encoder drained — even across backpressure pauses).
+            // A frame cut off mid-stream simply never completes: same
+            // silent close as the blocking server.
+            ConnMode::Rpc => conn.read_eof = true,
+            // A subscriber that can never ack again is useless: flush
+            // what's queued and drop, like the old stream loop's
+            // immediate return on EOF.
+            ConnMode::Subscriber { .. } => conn.closing = true,
         }
     }
-    Ok(true)
 }
 
-/// Try to read one complete raw frame, returning `Ok(None)` when the
-/// stream's read timeout expires before the first byte arrives (the
-/// caller's idle tick). Once a first byte is in, the rest of the frame
-/// is read to completion ([`read_full`] semantics, stop-flag aware). A
-/// clean EOF, a stop mid-frame, or a bad header all surface as `Err` —
-/// replication streams treat every error as "drop the connection".
-/// Shared by the primary's subscriber loop (reading acks between batch
-/// sends) and the follower's apply loop (reading batches between
-/// reconnect checks).
-pub(crate) fn try_read_frame(
-    stream: &mut TcpStream,
-    stop: &AtomicBool,
-) -> io::Result<Option<(u8, Vec<u8>)>> {
-    let mut header = [0u8; FRAME_HEADER_LEN];
-    let first = match stream.read(&mut header) {
-        Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed")),
-        Ok(n) => n,
-        Err(e)
-            if matches!(
-                e.kind(),
-                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
-            ) =>
-        {
-            return Ok(None)
+/// Dispatch every complete frame the decoder holds, honoring the
+/// backpressure pause (RPC mode) and the closing latch. Also rolls the
+/// decoder's resumed-frame count into the server stats.
+fn process_frames(conn: &mut Conn, shared: &Shared) {
+    loop {
+        if conn.closing || conn.dead {
+            break;
         }
-        Err(e) => return Err(e),
+        if matches!(conn.mode, ConnMode::Rpc) && conn.encoder.pending() >= READ_PAUSE_BYTES {
+            // Reply buffer full: leave the remaining frames in the
+            // decoder; `flush_and_resume` picks them back up once the
+            // peer drains replies.
+            break;
+        }
+        let (opcode, payload) = match conn.decoder.next_frame() {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break,
+            Err(e) => {
+                // Framing is broken; resync is impossible. Answer once,
+                // then drop the connection (after the flush).
+                shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+                conn.encoder.push(
+                    Response::Error { code: ErrorCode::Malformed, message: e.to_string() }
+                        .encode(),
+                );
+                conn.closing = true;
+                break;
+            }
+        };
+        shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+        match conn.mode {
+            ConnMode::Rpc => handle_rpc_frame(conn, shared, opcode, &payload),
+            ConnMode::Subscriber { .. } => {
+                handle_subscriber_frame(conn, shared, opcode, &payload)
+            }
+        }
+    }
+    shared
+        .stats
+        .partial_frames_resumed
+        .fetch_add(conn.decoder.take_resumed(), Ordering::Relaxed);
+}
+
+/// One complete frame on an RPC-mode connection: decode, dispatch,
+/// queue the reply — or flip into a subscriber stream on `SUBSCRIBE`.
+fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]) {
+    let resp = match Request::decode(opcode, payload) {
+        Ok(Request::Subscribe { epoch, cursor, wire }) => match shared.log.clone() {
+            Some(log) => {
+                // The connection becomes a replication stream and never
+                // returns to request/response serving. Bootstrap
+                // (cursor 0 = "I have nothing") always full-syncs: the
+                // registry may predate the log. So does a cursor issued
+                // by a *different* log incarnation — a restarted
+                // primary resets seq numbering, and without the epoch
+                // check an old cursor could alias into the new log's
+                // range and silently skip its early batches.
+                let ack_window =
+                    shared.cfg.replication.as_ref().map(|r| r.ack_window).unwrap_or(64);
+                conn.mode = ConnMode::Subscriber { sent: cursor, acked: cursor, wire, ack_window };
+                if (cursor == 0 || epoch != log.epoch()) && !push_full_sync(conn, shared, &log) {
+                    return;
+                }
+                pump_subscriber(conn, shared, &log);
+                return;
+            }
+            None => Response::Error {
+                code: ErrorCode::Unsupported,
+                message: "server is not a replication primary".into(),
+            },
+        },
+        Ok(Request::ReplicaAck { .. }) => Response::Error {
+            code: ErrorCode::Malformed,
+            message: "ReplicaAck outside an active subscription".into(),
+        },
+        Ok(req) => dispatch(req, shared),
+        Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
     };
-    if first < FRAME_HEADER_LEN && !read_full(stream, &mut header[first..], stop)? {
-        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-header"));
+    if matches!(resp, Response::Error { .. }) {
+        shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
     }
-    let (opcode, len) = parse_header(&header)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-    let mut payload = vec![0u8; len as usize];
-    if len > 0 && !read_full(stream, &mut payload, stop)? {
-        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF mid-payload"));
-    }
-    Ok(Some((opcode, payload)))
+    conn.encoder.push(resp.encode());
 }
 
-/// Replication capture thread: drain the registry's dirty keys into a
-/// sealed [`ReplicationLog`] batch on the configured cadence. One
+/// One complete frame on a subscriber stream: only `REPLICA_ACK` is
+/// valid; an ack slides the window and re-pumps.
+fn handle_subscriber_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]) {
+    match Request::decode(opcode, payload) {
+        Ok(Request::ReplicaAck { cursor }) => {
+            if let ConnMode::Subscriber { sent, acked, .. } = &mut conn.mode {
+                // Clamp to what was actually sent: a buggy follower
+                // cannot push the window past reality.
+                *acked = (*acked).max(cursor.min(*sent));
+            }
+            if let Some(log) = shared.log.clone() {
+                pump_subscriber(conn, shared, &log);
+            }
+        }
+        _ => {
+            shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+            conn.encoder.push(
+                Response::Error {
+                    code: ErrorCode::Malformed,
+                    message: "only ReplicaAck frames are valid on a subscription stream".into(),
+                }
+                .encode(),
+            );
+            conn.closing = true;
+        }
+    }
+}
+
+/// Queue a complete registry image for a subscriber whose cursor the
+/// log cannot serve (bootstrap, cross-epoch, or fell behind retention).
+/// The cursor is read *before* the export: anything ingested in between
+/// lands either in the image (a harmless duplicate under max-merge) or
+/// in a batch with seq > cursor that pumps right after. Returns `false`
+/// when the subscription is terminally broken (typed error queued,
+/// connection closing).
+fn push_full_sync(conn: &mut Conn, shared: &Shared, log: &ReplicationLog) -> bool {
+    let ConnMode::Subscriber { sent, acked, .. } = &mut conn.mode else { return false };
+    let cursor = log.latest_seq();
+    let body = snapshot::snapshot_to_vec(&shared.registry);
+    // A FULL_SYNC payload is epoch (8) + cursor (8) + len (4) + body.
+    if body.len() as u64 + 20 > MAX_PAYLOAD as u64 {
+        shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+        conn.encoder.push(
+            Response::Error {
+                code: ErrorCode::Internal,
+                message: format!(
+                    "registry image of {} bytes exceeds the in-band full-sync frame cap; \
+                     bootstrap this follower from a snapshot file",
+                    body.len()
+                ),
+            }
+            .encode(),
+        );
+        conn.closing = true;
+        return false;
+    }
+    conn.encoder.push(Response::FullSync { epoch: log.epoch(), cursor, body }.encode());
+    shared.stats.full_syncs_sent.fetch_add(1, Ordering::Relaxed);
+    *sent = cursor;
+    *acked = cursor;
+    true
+}
+
+/// Fill a subscriber's encoder from the sealed batch log: ship
+/// everything past its position, bounded by the unacked window (slow
+/// followers exert backpressure here) and a queued-byte budget (the
+/// encoder never balloons to `ack_window × batch` bytes). Stale cursors
+/// fall back to a full sync mid-stream.
+fn pump_subscriber(conn: &mut Conn, shared: &Shared, log: &Arc<ReplicationLog>) {
+    loop {
+        if conn.closing || conn.dead {
+            return;
+        }
+        let ConnMode::Subscriber { sent, acked, wire, ack_window } = &conn.mode else { return };
+        if sent.saturating_sub(*acked) >= *ack_window
+            || conn.encoder.pending() >= SUB_PUMP_TARGET
+        {
+            return;
+        }
+        match log.read_after(*sent) {
+            LogRead::Batch(batch) => {
+                let Some(frame) = encode_batch_for_wire(&batch, *wire) else {
+                    // Only legacy renderings can overflow; a v2
+                    // follower cannot take this batch in any form, and
+                    // Internal is in its terminal-halt set.
+                    shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+                    conn.encoder.push(
+                        Response::Error {
+                            code: ErrorCode::Internal,
+                            message: format!(
+                                "batch {} inflates past the legacy frame cap; upgrade the \
+                                 follower to delta wire v3 or bootstrap it from a snapshot",
+                                batch.seq
+                            ),
+                        }
+                        .encode(),
+                    );
+                    conn.closing = true;
+                    return;
+                };
+                conn.encoder.push(frame);
+                shared.stats.delta_batches_sent.fetch_add(1, Ordering::Relaxed);
+                if let ConnMode::Subscriber { sent, .. } = &mut conn.mode {
+                    *sent = batch.seq;
+                }
+            }
+            LogRead::CaughtUp => return,
+            LogRead::Stale => {
+                // Fell behind retention (or resumed with a cursor from
+                // a previous primary incarnation): resync.
+                if !push_full_sync(conn, shared, log) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Nonblocking flush of queued replies; once the buffer drops below the
+/// pause threshold, frames the decoder buffered during the pause are
+/// served (the read-interest flip's other half).
+fn flush_and_resume(conn: &mut Conn, shared: &Shared) {
+    if conn.dead {
+        return;
+    }
+    if !conn.encoder.is_empty() {
+        let before = conn.encoder.pending();
+        let Conn { encoder, stream, .. } = conn;
+        match encoder.write_to(stream) {
+            Ok(_) => {
+                // Any byte accepted = the peer is draining: liveness
+                // for the idle sweep (a backpressured connection
+                // reading its backlog slowly must not be reaped as
+                // idle). A zero-byte WouldBlock is deliberately not a
+                // refresh, so a fully stalled peer still ages out.
+                if conn.encoder.pending() < before {
+                    conn.last_activity = Instant::now();
+                }
+            }
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    if !conn.closing && conn.encoder.pending() < READ_PAUSE_BYTES && conn.decoder.buffered() > 0
+    {
+        process_frames(conn, shared);
+    }
+    if conn.closing && conn.encoder.is_empty() {
+        conn.dead = true;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Maintenance threads
+// ---------------------------------------------------------------------------
+
+/// Replication capture thread: drain the registry's dirty keys (and the
+/// global union's dirty registers) into a sealed [`ReplicationLog`]
+/// batch on the configured cadence, then wake every event loop so
+/// subscriber connections re-arm write interest and ship it. One
 /// capturer per primary; subscriber connections only *read* the log.
 fn capture_loop(shared: Arc<Shared>, log: Arc<ReplicationLog>, cfg: ReplicationConfig) {
     let mut last = Instant::now();
@@ -441,7 +972,9 @@ fn capture_loop(shared: Arc<Shared>, log: Arc<ReplicationLog>, cfg: ReplicationC
             continue;
         }
         last = Instant::now();
-        log.capture(&shared.registry, cfg.retain_bytes);
+        if log.capture(&shared.registry, cfg.retain_bytes).is_some() {
+            shared.wake_all();
+        }
     }
 }
 
@@ -479,51 +1012,52 @@ fn sweeper_loop(shared: Arc<Shared>, cfg: SweeperConfig) {
     }
 }
 
-/// Ship a complete registry image to a subscriber whose cursor the log
-/// cannot serve (bootstrap, or fell behind retention). The cursor is
-/// read *before* the export: anything ingested in between lands either
-/// in the image (a harmless duplicate under max-merge) or in a batch
-/// with seq > cursor that streams right after. Returns `false` when the
-/// connection is no longer usable.
-fn send_full_sync(
-    stream: &mut TcpStream,
-    shared: &Shared,
-    log: &ReplicationLog,
-    sent: &mut u64,
-    acked: &mut u64,
-) -> bool {
-    let cursor = log.latest_seq();
-    let body = snapshot::snapshot_to_vec(&shared.registry);
-    // A FULL_SYNC payload is epoch (8) + cursor (8) + len (4) + body.
-    if body.len() as u64 + 20 > MAX_PAYLOAD as u64 {
-        let err = Response::Error {
-            code: ErrorCode::Internal,
-            message: format!(
-                "registry image of {} bytes exceeds the in-band full-sync frame cap; \
-                 bootstrap this follower from a snapshot file",
-                body.len()
-            ),
-        };
-        let _ = write_full(stream, &err.encode(), &shared.stop);
-        return false;
+// ---------------------------------------------------------------------------
+// Wire helpers and dispatch (shared with the follower)
+// ---------------------------------------------------------------------------
+
+/// Drain `buf` into the stream, polling the stop flag across write
+/// timeouts — the *blocking* write helper the follower's replication
+/// thread still uses for its subscribe and ack frames (the follower is
+/// a client-side thread, not part of the event loop).
+pub(crate) fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) -> io::Result<bool> {
+    let mut written = 0;
+    while written < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match stream.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "peer stopped accepting bytes",
+                ))
+            }
+            Ok(n) => written += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
     }
-    let frame = Response::FullSync { epoch: log.epoch(), cursor, body }.encode();
-    if !matches!(write_full(stream, &frame, &shared.stop), Ok(true)) {
-        return false;
-    }
-    shared.stats.full_syncs_sent.fetch_add(1, Ordering::Relaxed);
-    *sent = cursor;
-    *acked = cursor;
-    true
+    Ok(true)
 }
 
 /// Encode one sealed batch for a subscriber's negotiated delta wire.
 /// Current (v3) subscribers get the typed entries verbatim; legacy
 /// (v2) subscribers get the shape they understand — full sketches only:
 /// register diffs inflate into a sketch holding just those registers
-/// (zeros never lower anything under max-merge), and tombstones are
-/// dropped, leaving legacy followers grow-only exactly as they were
-/// before tombstones existed. An emptied batch still ships, so the
+/// (zeros never lower anything under max-merge), while tombstones and
+/// global-union diffs are dropped, leaving legacy followers grow-only
+/// with a live-keys-derived global exactly as they were before those
+/// entry kinds existed. An emptied batch still ships, so the
 /// subscriber's cursor advances past it.
 ///
 /// Returns `None` when the legacy rendering cannot fit one frame: the
@@ -565,183 +1099,10 @@ fn encode_batch_for_wire(batch: &SealedBatch, wire: u8) -> Option<Vec<u8>> {
                     legacy.push((*key, sketch.to_bytes()));
                 }
             }
-            SketchDelta::Tombstone => {}
+            SketchDelta::Tombstone | SketchDelta::GlobalDiff(_) => {}
         }
     }
     Some(encode_delta_batch(batch.seq, &legacy))
-}
-
-/// A connection that sent `SUBSCRIBE`: stream sealed delta batches (and
-/// full syncs where the cursor is unservable), reading `REPLICA_ACK`
-/// frames back on the same socket. At most
-/// [`ReplicationConfig::ack_window`] batches ride unacked — a slow
-/// follower exerts backpressure here instead of ballooning socket
-/// buffers. Returns when the peer disconnects, misbehaves, or the
-/// server stops.
-fn serve_subscriber(
-    stream: &mut TcpStream,
-    shared: &Shared,
-    log: Arc<ReplicationLog>,
-    sub_epoch: u64,
-    start_cursor: u64,
-    wire: u8,
-) {
-    let rcfg = shared.cfg.replication.clone().unwrap_or_default();
-    // Tighter read timeout than RPC connections: the ack read doubles
-    // as the pacing sleep between log polls, and 50 ms of added
-    // shipping latency per window would dominate convergence lag.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
-    let mut sent = start_cursor;
-    let mut acked = start_cursor;
-    // Bootstrap (cursor 0 = "I have nothing") always full-syncs: the
-    // registry may predate the log (pre-serving ingest, a restored
-    // snapshot). So does a cursor issued by a *different* log
-    // incarnation — a restarted primary resets seq numbering, and
-    // without the epoch check an old cursor could alias into the new
-    // log's range and silently skip its early batches.
-    if (start_cursor == 0 || sub_epoch != log.epoch())
-        && !send_full_sync(stream, shared, &log, &mut sent, &mut acked)
-    {
-        return;
-    }
-    loop {
-        if shared.stop.load(Ordering::SeqCst) {
-            return;
-        }
-        // Ship whatever the log holds past our position, within the
-        // unacked window.
-        while sent.saturating_sub(acked) < rcfg.ack_window {
-            match log.read_after(sent) {
-                LogRead::Batch(batch) => {
-                    let Some(frame) = encode_batch_for_wire(&batch, wire) else {
-                        // Only legacy renderings can overflow; a v2
-                        // follower cannot take this batch in any form,
-                        // and Internal is in its terminal-halt set.
-                        let err = Response::Error {
-                            code: ErrorCode::Internal,
-                            message: format!(
-                                "batch {} inflates past the legacy frame cap; upgrade the \
-                                 follower to delta wire v3 or bootstrap it from a snapshot",
-                                batch.seq
-                            ),
-                        };
-                        let _ = write_full(stream, &err.encode(), &shared.stop);
-                        return;
-                    };
-                    if !matches!(write_full(stream, &frame, &shared.stop), Ok(true)) {
-                        return;
-                    }
-                    sent = batch.seq;
-                    shared.stats.delta_batches_sent.fetch_add(1, Ordering::Relaxed);
-                }
-                LogRead::CaughtUp => break,
-                LogRead::Stale => {
-                    // Fell behind retention (or resumed with a cursor
-                    // from a previous primary incarnation): resync.
-                    if !send_full_sync(stream, shared, &log, &mut sent, &mut acked) {
-                        return;
-                    }
-                }
-            }
-        }
-        // One read-timeout's worth of waiting for an ack — also the
-        // idle tick when there is nothing to ship.
-        match try_read_frame(stream, &shared.stop) {
-            Ok(None) => {}
-            Ok(Some((opcode, payload))) => match Request::decode(opcode, &payload) {
-                Ok(Request::ReplicaAck { cursor }) => {
-                    // Clamp to what was actually sent: a buggy follower
-                    // cannot push the window past reality.
-                    acked = acked.max(cursor.min(sent));
-                }
-                _ => {
-                    let err = Response::Error {
-                        code: ErrorCode::Malformed,
-                        message: "only ReplicaAck frames are valid on a subscription stream"
-                            .into(),
-                    };
-                    let _ = write_full(stream, &err.encode(), &shared.stop);
-                    return;
-                }
-            },
-            Err(_) => return,
-        }
-    }
-}
-
-fn serve_connection(mut stream: TcpStream, shared: Arc<Shared>) {
-    // Short poll intervals on both directions: the price of noticing
-    // shutdown promptly on an idle connection (reads) and on a peer
-    // that stops draining replies (writes).
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
-    let _ = stream.set_nodelay(true);
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
-    let mut conn_frames = 0u64;
-    let mut conn_words = 0u64;
-
-    loop {
-        let mut header = [0u8; FRAME_HEADER_LEN];
-        match read_full(&mut stream, &mut header, &shared.stop) {
-            Ok(true) => {}
-            _ => break,
-        }
-        let (opcode, len) = match parse_header(&header) {
-            Ok(v) => v,
-            Err(e) => {
-                // Framing is broken; resync is impossible. Answer once,
-                // then drop the connection.
-                shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-                let err = Response::Error {
-                    code: ErrorCode::Malformed,
-                    message: e.to_string(),
-                };
-                let _ = write_full(&mut stream, &err.encode(), &shared.stop);
-                break;
-            }
-        };
-        let mut payload = vec![0u8; len as usize];
-        match read_full(&mut stream, &mut payload, &shared.stop) {
-            Ok(true) => {}
-            _ => break,
-        }
-        conn_frames += 1;
-        shared.stats.frames.fetch_add(1, Ordering::Relaxed);
-
-        let resp = match Request::decode(opcode, &payload) {
-            Ok(Request::Subscribe { epoch, cursor, wire }) => {
-                // The connection becomes a replication stream and never
-                // returns to request/response serving.
-                if let Some(log) = shared.log.clone() {
-                    serve_subscriber(&mut stream, &shared, log, epoch, cursor, wire);
-                    break;
-                }
-                Response::Error {
-                    code: ErrorCode::Unsupported,
-                    message: "server is not a replication primary".into(),
-                }
-            }
-            Ok(Request::ReplicaAck { .. }) => Response::Error {
-                code: ErrorCode::Malformed,
-                message: "ReplicaAck outside an active subscription".into(),
-            },
-            Ok(req) => {
-                if let Request::InsertBatch { words, .. } = &req {
-                    conn_words += words.len() as u64;
-                }
-                dispatch(req, &shared)
-            }
-            Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
-        };
-        if matches!(resp, Response::Error { .. }) {
-            shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-        }
-        match write_full(&mut stream, &resp.encode(), &shared.stop) {
-            Ok(true) => {}
-            _ => break,
-        }
-    }
-    crate::log_debug!("server", "connection {peer} closed: {conn_frames} frames, {conn_words} words");
 }
 
 fn dispatch(req: Request, shared: &Shared) -> Response {
@@ -823,7 +1184,7 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
                 message: "server started without a snapshot path".into(),
             },
         },
-        // Handled at the connection layer (serve_connection) before
+        // Handled at the connection layer (handle_rpc_frame) before
         // dispatch; unreachable in practice, answered typed regardless.
         Request::Subscribe { .. } | Request::ReplicaAck { .. } => Response::Error {
             code: ErrorCode::Malformed,

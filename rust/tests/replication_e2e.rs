@@ -625,6 +625,82 @@ fn legacy_v2_subscriber_gets_downgraded_full_sketch_frames() {
 }
 
 #[test]
+fn global_union_converges_despite_evict_before_capture() {
+    // The closed ROADMAP gap: words ingested into a key that is evicted
+    // *before the next capture tick* used to die with the key (the
+    // follower's live-key state converged, its global union silently
+    // lagged). The global sketch's own changed-register dirty tracking
+    // now ships them as a GLOBAL_DIFF entry. A huge capture interval
+    // keeps the background thread out of the window so the
+    // evict-before-capture ordering is deterministic; `drain` forces
+    // the seals.
+    let (primary, primary_reg) = replicating_server(ReplicationConfig {
+        capture_interval: Duration::from_secs(3_600),
+        ..ReplicationConfig::default()
+    });
+    let mut client = SketchClient::connect(primary.local_addr()).unwrap();
+    let follower_reg = SketchRegistry::shared(small_cfg()).unwrap();
+    let follower = FollowerServer::start(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+    )
+    .unwrap();
+    drain(&primary, &follower);
+    // Pin the bootstrap before any ingest: the gap below must then be
+    // closed by a GLOBAL_DIFF delta entry, not absorbed into the
+    // bootstrap image by a lucky race.
+    wait_for(|| follower.stats().full_syncs >= 1, "bootstrap full sync");
+
+    // Key 100 lives and dies entirely between captures.
+    client.insert_batch(100, &(0..500u32).map(|w| w.wrapping_mul(2_654_435_761)).collect::<Vec<_>>()).unwrap();
+    assert_eq!(client.evict(EvictPolicy::Key(100)).unwrap(), 1);
+    // A surviving key too, so the batch carries ordinary entries
+    // alongside the tombstone and the global diff.
+    client.insert_batch(7, &[1, 2, 3, 4, 5]).unwrap();
+    drain(&primary, &follower);
+
+    assert_eq!(follower_reg.estimate(&100), None, "the dead key must not exist");
+    assert_eq!(
+        follower_reg.global_estimate(),
+        primary_reg.global_estimate(),
+        "the dead key's words must still reach the follower's global union"
+    );
+    // Strictly more than the live keys alone can explain: rebuilding
+    // the union from live keys undercounts, the replicated global
+    // sketch does not.
+    assert!(
+        follower_reg.global_estimate().unwrap() > follower_reg.merge_all().estimate(),
+        "global must exceed the live-key union once a key died with unique words"
+    );
+    let fstats = follower.stats();
+    assert!(fstats.global_diffs_applied >= 1, "the gap closes via GLOBAL_DIFF entries");
+    assert!(!fstats.halted);
+
+    // Kill / resume: global diffs ride the retained delta log across a
+    // reconnect like any other entry, still without a full sync.
+    let cursor = follower.shutdown();
+    client.insert_batch(200, &(0..300u32).map(|w| w.wrapping_mul(97_003).wrapping_add(1)).collect::<Vec<_>>()).unwrap();
+    assert_eq!(client.evict(EvictPolicy::Key(200)).unwrap(), 1);
+    let resumed = FollowerServer::start_at_cursor(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg.clone(),
+        FollowerConfig::default(),
+        cursor,
+    )
+    .unwrap();
+    drain(&primary, &resumed);
+    assert_eq!(resumed.stats().full_syncs, 0, "cursor resume must ride the delta log");
+    assert_eq!(follower_reg.estimate(&200), None);
+    assert_eq!(follower_reg.global_estimate(), primary_reg.global_estimate());
+    assert_live_state_identical(&primary_reg, &follower_reg);
+    resumed.shutdown();
+    primary.shutdown();
+}
+
+#[test]
 fn raw_subscriber_gets_a_restorable_full_sync_image() {
     use std::io::Write;
 
