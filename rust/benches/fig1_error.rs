@@ -2,14 +2,106 @@
 //!
 //! Regenerates both subfigures (p=14 and p=16, each with H ∈ {32,64})
 //! and times the sweep. `HLL_BENCH_QUICK=1` or `--quick` reduces reach.
+//!
+//! Also hosts the **estimator regression gate**: a paired sweep that
+//! asserts the Ertl estimator is never worse than the legacy range-split
+//! estimator at any decade, and that there is no error discontinuity at
+//! the old LinearCounting→raw boundary. `--smoke` runs only the gate at
+//! reduced reach — this is the CI invocation.
 
-use hll_fpga::bench_harness::bench_main;
+use hll_fpga::hll::{HashKind, HllConfig};
 use hll_fpga::repro::fig1::{check_claims, curves, render, Fig1Options};
+use hll_fpga::stats::{log_spaced_cardinalities, measure_point_paired, transition_cardinality};
+use hll_fpga::util::fmt::TextTable;
+
+/// Sweep decades with both estimators on identical register files and
+/// enforce the PR's acceptance gate. Panics on violation (the bench exit
+/// code is the CI signal).
+///
+/// Tolerance: at decades where both estimators are near-exact (LC
+/// region, errors ~1e-4) the ratio of two tiny numbers is noisy, so the
+/// gate is `ertl ≤ legacy·1.15 + 1e-3` — loose enough to absorb that
+/// noise, tight enough that any real regression (the legacy bias bump
+/// near the transition is ~2–3% absolute) trips it. Streams are seeded
+/// deterministically, so a passing gate is reproducible, not lucky.
+fn estimator_gate(smoke: bool) {
+    let cfg = HllConfig::new(14, HashKind::H64).unwrap();
+    let (hi_exp, trials) = if smoke { (5, 3) } else { (7, 5) };
+    println!(
+        "\nestimator gate: Ertl vs legacy, p={} {}, 10^2..10^{hi_exp}, {trials} paired trials",
+        cfg.p(),
+        cfg.hash().label(),
+    );
+
+    let mut t = TextTable::new(vec![
+        "cardinality",
+        "ertl mean %",
+        "legacy mean %",
+        "ratio",
+        "verdict",
+    ]);
+    let mut failures = Vec::new();
+    for n in log_spaced_cardinalities(2, hi_exp, 1) {
+        let (ertl, legacy) = measure_point_paired(cfg, n, trials);
+        let bound = legacy.mean * 1.15 + 1e-3;
+        let ok = ertl.mean <= bound;
+        t.row(vec![
+            hll_fpga::util::fmt::count(n),
+            format!("{:.4}", ertl.mean * 100.0),
+            format!("{:.4}", legacy.mean * 100.0),
+            format!("{:.3}", ertl.mean / legacy.mean.max(1e-12)),
+            String::from(if ok { "ok" } else { "WORSE" }),
+        ]);
+        if !ok {
+            failures.push(format!(
+                "n={n}: ertl mean {:.5} > bound {:.5} (legacy {:.5})",
+                ertl.mean, bound, legacy.mean
+            ));
+        }
+    }
+    println!("{}", t.render());
+
+    // No discontinuity at the old LC→raw switch point (2.5·m): the
+    // legacy estimator's bias bump lives here; Ertl must sail through
+    // within the analytic band.
+    let boundary = transition_cardinality(&cfg);
+    let band = 3.5 * cfg.standard_error() + 0.004;
+    for scale in [0.7f64, 1.0, 1.3] {
+        let n = (boundary as f64 * scale) as u64;
+        let (ertl, _) = measure_point_paired(cfg, n, trials);
+        println!(
+            "  transition {:.1}×{}: ertl mean {:.4}% (band {:.4}%)",
+            scale,
+            hll_fpga::util::fmt::count(boundary),
+            ertl.mean * 100.0,
+            band * 100.0
+        );
+        if ertl.mean > band {
+            failures.push(format!(
+                "transition n={n}: ertl mean {:.5} exceeds smoothness band {:.5}",
+                ertl.mean, band
+            ));
+        }
+    }
+
+    assert!(
+        failures.is_empty(),
+        "estimator regression gate FAILED:\n  {}",
+        failures.join("\n  ")
+    );
+    println!("  estimator gate: PASS");
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let quick = hll_fpga::bench_harness::quick_mode()
         || std::env::args().any(|a| a == "--quick");
-    let b = bench_main("Fig 1 — HLL standard error vs cardinality");
+    let b = hll_fpga::bench_harness::bench_main("Fig 1 — HLL standard error vs cardinality");
+
+    estimator_gate(smoke || quick);
+    if smoke {
+        return;
+    }
 
     let opts = Fig1Options {
         full: std::env::args().any(|a| a == "--full"),
@@ -30,7 +122,7 @@ fn main() {
     );
 
     // Time a single representative profiling point for the record.
-    let cfg = hll_fpga::hll::HllConfig::PAPER;
+    let cfg = HllConfig::PAPER;
     let m = b.run_items("measure_point(p16/H64, n=100k, 3 trials)", 300_000, || {
         hll_fpga::stats::measure_point(cfg, 100_000, 3)
     });

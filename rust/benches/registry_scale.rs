@@ -94,10 +94,11 @@ fn main() {
         let summary = run_keyed_stream(&cfg, registry.clone(), &pairs).unwrap();
         let stats = registry.stats();
         println!(
-            "  population: {} keys ({} sparse / {} dense), {} of sketch heap, \
+            "  population: {} keys ({} sparse / {} packed / {} dense), {} of sketch heap, \
              global estimate {:.0}, {:.2} Mpairs/s feeder-side",
             stats.keys(),
             stats.sparse_keys(),
+            stats.packed_keys(),
             stats.dense_keys(),
             hll_fpga::util::fmt::count(stats.memory_bytes() as u64),
             summary.global_estimate.unwrap_or(0.0),

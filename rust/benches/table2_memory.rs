@@ -1,12 +1,98 @@
 //! Bench/regeneration target for Table II: memory footprint, plus the
-//! serialization cost of shipping sketches at each configuration.
+//! serialization cost of shipping sketches at each configuration, plus
+//! the packed-tier capacity column (this repo's three-tier extension):
+//! how many resident keys a fixed byte budget holds when mid-size keys
+//! land in the packed tier instead of going straight dense.
 
 use hll_fpga::bench_harness::bench_main;
-use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+use hll_fpga::hll::{AdaptiveSketch, HashKind, HllConfig, HllSketch};
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::util::fmt::TextTable;
+
+/// Build a representative tenant: `words` distinct values, seeded per
+/// key so streams are disjoint across keys.
+fn tenant_words(key: u64, words: u32) -> Vec<u32> {
+    (0..words)
+        .map(|v| (v as u64 ^ (key << 24)).wrapping_mul(0x9E37_79B9_7F4A_7C15) as u32)
+        .collect()
+}
+
+/// The packed column: measured bytes/key per tier at p=14, then an
+/// end-to-end capacity run under a fixed `max_memory_bytes` budget.
+/// Asserts the ≥2.5× resident-key gate (bench exit code is the signal).
+fn packed_capacity_column() {
+    let cfg = HllConfig::new(14, HashKind::H64).unwrap();
+    let m = cfg.m();
+
+    // Measured bytes/key for a small, a mid-size and a dense-equivalent
+    // tenant. The mid-size (~2 000 distinct words) is the shape the
+    // packed tier exists for: too wide for sparse, mostly-zero dense.
+    let mut t = TextTable::new(vec!["tier", "tenant words", "bytes/key", "keys per MiB"]);
+    let tier_bytes = |words: u32| -> (AdaptiveSketch, usize) {
+        let mut sk = AdaptiveSketch::new(cfg);
+        for &w in &tenant_words(1, words) {
+            sk.insert_u32(w);
+        }
+        let bytes = sk.memory_bytes();
+        (sk, bytes)
+    };
+    let (small, small_b) = tier_bytes(300);
+    assert!(small.is_sparse(), "300-word tenant must stay sparse");
+    let (mid, mid_b) = tier_bytes(2_000);
+    assert!(mid.is_packed(), "2 000-word tenant must land packed");
+    for (tier, words, bytes) in [
+        ("sparse", 300usize, small_b),
+        ("packed", 2_000, mid_b),
+        ("dense", m, m),
+    ] {
+        t.row(vec![
+            tier.to_string(),
+            hll_fpga::util::fmt::count(words as u64),
+            bytes.to_string(),
+            format!("{:.0}", (1 << 20) as f64 / bytes as f64),
+        ]);
+    }
+    println!("Packed-tier capacity at p=14 H64 (m = {m} B dense)\n");
+    println!("{}", t.render());
+
+    // End-to-end: fixed 1 MiB budget, 2 000-word tenants, LRU eviction.
+    // Dense-only floor is budget/m = 64 resident keys; the gate demands
+    // the packed tier carry ≥ 2.5× that.
+    let budget = 1usize << 20;
+    let registry: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
+        hll: cfg,
+        shards: 8,
+        track_global: false,
+        max_memory_bytes: Some(budget),
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    for key in 0..400u64 {
+        registry.ingest(key, &tenant_words(key, 2_000));
+        registry.enforce_budget();
+    }
+    let resident = registry.len();
+    let stats = registry.stats();
+    let dense_floor = budget / m;
+    println!(
+        "1 MiB budget, 2 000-word tenants: {resident} resident keys \
+         ({} packed / {} sparse / {} dense), dense-only floor {dense_floor} \
+         → {:.2}× capacity\n",
+        stats.packed_keys(),
+        stats.sparse_keys(),
+        stats.dense_keys(),
+        resident as f64 / dense_floor as f64,
+    );
+    assert!(
+        resident * 2 >= dense_floor * 5,
+        "packed capacity gate FAILED: {resident} resident < 2.5 × {dense_floor}"
+    );
+}
 
 fn main() {
     let b = bench_main("Table II — HyperLogLog memory footprint");
     println!("{}", hll_fpga::repro::tables::table2());
+    packed_capacity_column();
 
     // The footprint table is analytic; what costs time at runtime is
     // moving sketches around (the coordinator ships partials on merge).

@@ -54,11 +54,13 @@ fn main() {
     println!("global distinct estimate: {global:.0}");
     let stats = client.stats().expect("stats");
     println!(
-        "registry: {} keys ({} sparse / {} dense), {} sketch-heap bytes",
+        "registry: {} keys ({} sparse / {} packed / {} dense), {} sketch-heap bytes, estimator {}",
         count(stats.keys),
         count(stats.sparse_keys),
+        count(stats.packed_keys),
         count(stats.dense_keys),
-        count(stats.memory_bytes)
+        count(stats.memory_bytes),
+        if stats.estimator == 0 { "ertl" } else { "legacy" },
     );
 
     // 4. Lifecycle over RPC: TTL sweep + memory budget.

@@ -1,18 +1,25 @@
 //! The HyperLogLog core library — Algorithm 1 of the paper, complete with
 //! both hash widths, all correction branches, merge (Fig 3's fold),
-//! memory-footprint analysis (Table II), and a sparse/adaptive extension.
+//! memory-footprint analysis (Table II), a three-tier
+//! sparse/packed/dense adaptive representation, and Ertl's improved
+//! estimator alongside the paper's legacy range-split estimator.
 
 pub mod concurrent;
 pub mod config;
 pub mod estimate;
 pub mod murmur3;
+pub mod packed;
 pub mod setops;
 pub mod sketch;
 pub mod sparse;
 
 pub use concurrent::ConcurrentHllSketch;
 pub use config::{ConfigError, HashKind, HllConfig};
-pub use estimate::{estimate, linear_counting, Correction, EstimateBreakdown};
+pub use estimate::{
+    ertl_estimate_from_histogram, estimate, estimate_with, linear_counting, register_histogram,
+    Correction, EstimateBreakdown, EstimatorKind,
+};
+pub use packed::PackedHll;
 pub use setops::{intersection_cardinality, jaccard, union_cardinality};
 pub use sketch::{
     decode_register_diff, diff_wire_len, encode_register_diff, HllSketch, SketchError,

@@ -24,7 +24,7 @@
 //! mismatched seeds is rejected with [`SketchError::ConfigMismatch`].
 
 use super::config::{HashKind, HllConfig};
-use super::estimate::{estimate, EstimateBreakdown};
+use super::estimate::{estimate, estimate_with, EstimateBreakdown, EstimatorKind};
 use super::murmur3::{murmur3_x64_64, murmur3_x64_64_u32, murmur3_x86_32};
 use crate::util::bits::rho;
 
@@ -227,14 +227,26 @@ impl HllSketch {
         self.regs.iter().filter(|&&r| r == 0).count()
     }
 
-    /// Cardinality estimate with all Algorithm-1 corrections.
+    /// Cardinality estimate with the default estimator
+    /// ([`EstimatorKind::Ertl`]).
     pub fn estimate(&self) -> f64 {
         estimate(&self.cfg, &self.regs).estimate
     }
 
-    /// Full estimate breakdown (raw E, V, which correction fired).
+    /// Cardinality estimate with an explicit estimator.
+    pub fn estimate_with(&self, kind: EstimatorKind) -> f64 {
+        estimate_with(&self.cfg, &self.regs, kind).estimate
+    }
+
+    /// Full estimate breakdown (raw E, V, which correction fired) under
+    /// the default estimator.
     pub fn estimate_breakdown(&self) -> EstimateBreakdown {
         estimate(&self.cfg, &self.regs)
+    }
+
+    /// Full estimate breakdown with an explicit estimator.
+    pub fn estimate_breakdown_with(&self, kind: EstimatorKind) -> EstimateBreakdown {
+        estimate_with(&self.cfg, &self.regs, kind)
     }
 
     /// Reset all registers to zero (Algorithm 1, initialization phase).

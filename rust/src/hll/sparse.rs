@@ -1,16 +1,21 @@
 //! Sparse HLL representation (HyperLogLog++-style, Heule et al. [3] in
-//! the paper's bibliography) — an extension beyond the paper's dense
-//! hardware sketch.
+//! the paper's bibliography) and the three-tier [`AdaptiveSketch`] that
+//! grows Sparse → Packed → Dense as a key accumulates distinct values.
 //!
 //! For small cardinalities the dense register file (64 KiB of registers at
 //! p=16) is mostly zeros; the sparse mode stores (index, rank) pairs in a
-//! compact sorted buffer and upgrades to the dense representation when the
-//! buffer would exceed the dense footprint. This is the standard software
-//! optimization used by production HLL implementations (BigQuery's
-//! HLL++, Redis), and it matters for the coordinator when many per-
-//! connection sketches are alive at once.
+//! compact sorted buffer. Once the pair buffer would exceed the *packed*
+//! footprint (≈ 3m/8 bytes — see [`PackedHll`]), the sketch compresses
+//! into base+delta+exception form, and only when the exception list
+//! outgrows its budget does it fall back to the plain m-byte dense file.
+//! This is the standard software optimization used by production HLL
+//! implementations (BigQuery's HLL++, Redis) extended with the
+//! HyperLogLogLog packed tier, and it matters for the registry when many
+//! per-key sketches are resident at once.
 
 use super::config::HllConfig;
+use super::estimate::{ertl_estimate_from_histogram, EstimatorKind};
+use super::packed::PackedHll;
 use super::sketch::{HllSketch, SketchError};
 
 /// Encoded sparse entry: `idx << 8 | rank` (rank always fits in 8 bits —
@@ -25,10 +30,13 @@ fn decode(e: u64) -> (usize, u8) {
     ((e >> 8) as usize, (e & 0xFF) as u8)
 }
 
-/// A cardinality sketch that starts sparse and upgrades to dense.
+/// A cardinality sketch that starts sparse, compresses to packed, and
+/// upgrades to dense — promotions driven by measured bytes, never
+/// demoting, with identical estimates at every tier.
 #[derive(Debug, Clone)]
 pub enum AdaptiveSketch {
     Sparse(SparseHll),
+    Packed(PackedHll),
     Dense(HllSketch),
 }
 
@@ -37,12 +45,13 @@ pub enum AdaptiveSketch {
 /// changed-register dirty tracking (see [`crate::registry`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InsertOutcome {
-    /// The sketch is dense and the insert raised register `idx`.
-    DenseChanged(u32),
-    /// The sketch is dense and the insert changed nothing.
+    /// The sketch tracks per-register state (packed or dense) and the
+    /// insert raised register `idx`.
+    RegisterChanged(u32),
+    /// The insert changed nothing (packed or dense).
     Unchanged,
     /// The sketch took the sparse path (including an insert that
-    /// triggered the sparse→dense upgrade): which registers moved is
+    /// triggered the sparse→packed promotion): which registers moved is
     /// not tracked, so a delta capture must resend the whole sketch.
     Untracked,
 }
@@ -62,6 +71,19 @@ pub struct SparseHll {
 impl SparseHll {
     pub fn new(cfg: HllConfig) -> Self {
         Self { cfg, sorted: Vec::new(), staging: Vec::new(), staging_cap: 256 }
+    }
+
+    /// Build sparse state straight from a dense register file (the
+    /// registry's merge path re-compressing a small incoming sketch).
+    pub fn from_dense(sketch: &HllSketch) -> Self {
+        let sorted: Vec<u64> = sketch
+            .registers()
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| r != 0)
+            .map(|(idx, &r)| encode(idx, r))
+            .collect();
+        Self { cfg: *sketch.config(), sorted, staging: Vec::new(), staging_cap: 256 }
     }
 
     pub fn config(&self) -> &HllConfig {
@@ -92,7 +114,7 @@ impl SparseHll {
         self.sorted.is_empty() && self.staging.is_empty()
     }
 
-    /// Approximate heap bytes used — the upgrade policy input.
+    /// Approximate heap bytes used — the promotion policy input.
     pub fn memory_bytes(&self) -> usize {
         (self.sorted.capacity() + self.staging.capacity()) * std::mem::size_of::<u64>()
     }
@@ -145,7 +167,7 @@ impl SparseHll {
                 j += 1;
             }
         }
-        merged.extend(self.sorted[i..].iter().copied().map(|e| e));
+        merged.extend(self.sorted[i..].iter().copied());
         for &e in &self.staging[j..] {
             take_max(&mut merged, e);
         }
@@ -172,16 +194,43 @@ impl SparseHll {
         HllSketch::from_registers(self.cfg, regs).expect("sparse entries are in range")
     }
 
-    /// Exact LinearCounting-style estimate from the sparse state: with V =
-    /// m − |distinct indices| empty buckets.
-    pub fn estimate(&mut self) -> f64 {
+    /// Register-value histogram (the Ertl sufficient statistic) without
+    /// densifying: the m − len untracked buckets are the zero bucket.
+    pub fn register_histogram(&mut self) -> Vec<u32> {
         self.compact();
-        let m = self.cfg.m();
-        let v = m - self.sorted.len();
-        if v == 0 {
-            return self.to_dense().estimate();
+        let mut hist = vec![0u32; self.cfg.max_rank() as usize + 1];
+        hist[0] = (self.cfg.m() - self.sorted.len()) as u32;
+        for &e in &self.sorted {
+            hist[(e & 0xFF) as usize] += 1;
         }
-        super::estimate::linear_counting(m, v)
+        hist
+    }
+
+    /// Cardinality estimate with the default estimator.
+    pub fn estimate(&mut self) -> f64 {
+        self.estimate_with(EstimatorKind::default())
+    }
+
+    /// Cardinality estimate with an explicit estimator. The Ertl path is
+    /// a pure function of the histogram, so it is bit-identical to the
+    /// dense and packed tiers' estimates of the same state; the legacy
+    /// path keeps the historical exact-LinearCounting shortcut.
+    pub fn estimate_with(&mut self, kind: EstimatorKind) -> f64 {
+        match kind {
+            EstimatorKind::Ertl => {
+                let hist = self.register_histogram();
+                ertl_estimate_from_histogram(&self.cfg, &hist)
+            }
+            EstimatorKind::Legacy => {
+                self.compact();
+                let m = self.cfg.m();
+                let v = m - self.sorted.len();
+                if v == 0 {
+                    return self.to_dense().estimate_with(kind);
+                }
+                super::estimate::linear_counting(m, v)
+            }
+        }
     }
 }
 
@@ -190,57 +239,100 @@ impl AdaptiveSketch {
         AdaptiveSketch::Sparse(SparseHll::new(cfg))
     }
 
+    /// Wrap an incoming dense register file in the most compact tier
+    /// that holds it losslessly — the registry's path for sketches
+    /// arriving by merge, snapshot restore or replication.
+    pub fn from_dense(sketch: HllSketch) -> Self {
+        let occupied = sketch.registers().iter().filter(|&&r| r != 0).count();
+        if occupied * std::mem::size_of::<u64>() <= PackedHll::base_bytes(sketch.config()) {
+            return AdaptiveSketch::Sparse(SparseHll::from_dense(&sketch));
+        }
+        let packed = PackedHll::from_dense(&sketch);
+        if packed.exception_overflow() {
+            AdaptiveSketch::Dense(sketch)
+        } else {
+            AdaptiveSketch::Packed(packed)
+        }
+    }
+
     pub fn config(&self) -> &HllConfig {
         match self {
             AdaptiveSketch::Sparse(s) => s.config(),
+            AdaptiveSketch::Packed(p) => p.config(),
             AdaptiveSketch::Dense(d) => d.config(),
         }
     }
 
-    /// Dense footprint the sparse mode must stay under to pay off.
-    fn upgrade_threshold(&self) -> usize {
-        self.config().m() // bytes: one u8 register per bucket
+    /// Packed footprint the sparse mode must stay under to pay off.
+    fn sparse_promotion_threshold(&self) -> usize {
+        PackedHll::base_bytes(self.config())
     }
 
     pub fn insert_hash(&mut self, hash: u64) {
         match self {
             AdaptiveSketch::Dense(d) => d.insert_hash(hash),
+            AdaptiveSketch::Packed(p) => {
+                p.insert_hash_changed(hash);
+                self.check_packed_overflow();
+            }
             AdaptiveSketch::Sparse(s) => {
                 s.insert_hash(hash);
-                if s.memory_bytes() > self.upgrade_threshold() {
-                    self.upgrade();
+                if s.memory_bytes() > self.sparse_promotion_threshold() {
+                    self.promote_sparse();
                 }
             }
         }
     }
 
     /// As [`AdaptiveSketch::insert_hash`], reporting what the insert
-    /// did (see [`InsertOutcome`]). Dense sketches report the raised
-    /// register exactly; sparse ones report [`InsertOutcome::Untracked`]
-    /// — their staging buffer cannot tell a fresh max from a duplicate
-    /// without a compaction per insert, and a sparse key's full resend
-    /// is cheap in the only place the distinction matters (replication
-    /// delta capture).
+    /// did (see [`InsertOutcome`]). Packed and dense sketches report the
+    /// raised register exactly; sparse ones report
+    /// [`InsertOutcome::Untracked`] — their staging buffer cannot tell a
+    /// fresh max from a duplicate without a compaction per insert, and a
+    /// sparse key's full resend is cheap in the only place the
+    /// distinction matters (replication delta capture). A packed→dense
+    /// promotion preserves every register value, so outcomes reported
+    /// before the promotion stay valid.
     pub fn insert_hash_traced(&mut self, hash: u64) -> InsertOutcome {
-        if let AdaptiveSketch::Dense(d) = self {
-            return match d.insert_hash_changed(hash) {
-                Some(idx) => InsertOutcome::DenseChanged(idx),
-                None => InsertOutcome::Unchanged,
-            };
+        match self {
+            AdaptiveSketch::Dense(d) => {
+                return match d.insert_hash_changed(hash) {
+                    Some(idx) => InsertOutcome::RegisterChanged(idx),
+                    None => InsertOutcome::Unchanged,
+                };
+            }
+            AdaptiveSketch::Packed(p) => {
+                let outcome = match p.insert_hash_changed(hash) {
+                    Some(idx) => InsertOutcome::RegisterChanged(idx),
+                    None => InsertOutcome::Unchanged,
+                };
+                self.check_packed_overflow();
+                return outcome;
+            }
+            AdaptiveSketch::Sparse(_) => {}
         }
-        // Sparse path (runs the upgrade check like a plain insert).
+        // Sparse path (runs the promotion check like a plain insert).
         self.insert_hash(hash);
         InsertOutcome::Untracked
     }
 
     /// Apply a decoded register diff (bucket-wise max) — the follower's
     /// per-key apply path for `RegisterDiff` delta entries. Diffs are
-    /// only ever produced for dense sketches, so a sparse receiver
-    /// upgrades first (mirroring the primary's in-memory state).
+    /// only ever produced by register-tracking tiers (packed or dense),
+    /// so a sparse receiver promotes to packed first (mirroring the
+    /// primary's in-memory state).
     pub fn apply_register_diff(&mut self, entries: &[(u32, u8)]) {
-        self.upgrade_to_dense_in_place();
+        if self.is_sparse() {
+            self.promote_sparse();
+        }
         match self {
             AdaptiveSketch::Dense(d) => d.apply_register_diff(entries),
+            AdaptiveSketch::Packed(p) => {
+                for &(idx, val) in entries {
+                    p.update_register(idx as usize, val);
+                }
+                self.check_packed_overflow();
+            }
             AdaptiveSketch::Sparse(_) => unreachable!(),
         }
     }
@@ -255,18 +347,42 @@ impl AdaptiveSketch {
 
     /// Approximate heap bytes held by this sketch — the registry's
     /// memory-accounting input. Dense sketches report their register
-    /// file; sparse ones their buffers.
+    /// file; sparse and packed ones their buffers.
     pub fn memory_bytes(&self) -> usize {
         match self {
             AdaptiveSketch::Sparse(s) => s.memory_bytes(),
+            AdaptiveSketch::Packed(p) => p.memory_bytes(),
             AdaptiveSketch::Dense(d) => d.config().m(),
         }
     }
 
-    fn upgrade(&mut self) {
+    /// Sparse→Packed promotion (or straight to Dense for pathological
+    /// register distributions no window covers).
+    fn promote_sparse(&mut self) {
         if let AdaptiveSketch::Sparse(s) = self {
             let dense = s.to_dense();
-            *self = AdaptiveSketch::Dense(dense);
+            let packed = PackedHll::from_dense(&dense);
+            *self = if packed.exception_overflow() {
+                AdaptiveSketch::Dense(dense)
+            } else {
+                AdaptiveSketch::Packed(packed)
+            };
+        }
+    }
+
+    /// Packed→Dense promotion check: on exception overflow, first try
+    /// re-centering the delta window (cheap, O(m)); only if the list
+    /// stays oversized does the sketch densify. Register values are
+    /// preserved exactly either way.
+    fn check_packed_overflow(&mut self) {
+        if let AdaptiveSketch::Packed(p) = self {
+            if p.exception_overflow() {
+                p.rebase();
+                if p.exception_overflow() {
+                    let dense = p.to_dense();
+                    *self = AdaptiveSketch::Dense(dense);
+                }
+            }
         }
     }
 
@@ -274,19 +390,44 @@ impl AdaptiveSketch {
         matches!(self, AdaptiveSketch::Sparse(_))
     }
 
-    pub fn estimate(&mut self) -> f64 {
+    pub fn is_packed(&self) -> bool {
+        matches!(self, AdaptiveSketch::Packed(_))
+    }
+
+    /// Current value of one register, for tiers that track registers
+    /// individually (`None` for sparse — the caller falls back to a full
+    /// capture, exactly as with [`InsertOutcome::Untracked`]).
+    pub fn register_value(&self, idx: usize) -> Option<u8> {
         match self {
-            AdaptiveSketch::Sparse(s) => s.estimate(),
-            AdaptiveSketch::Dense(d) => d.estimate(),
+            AdaptiveSketch::Sparse(_) => None,
+            AdaptiveSketch::Packed(p) => Some(p.read_register(idx)),
+            AdaptiveSketch::Dense(d) => Some(d.registers()[idx]),
+        }
+    }
+
+    pub fn estimate(&mut self) -> f64 {
+        self.estimate_with(EstimatorKind::default())
+    }
+
+    /// Estimate with an explicit estimator. Under [`EstimatorKind::Ertl`]
+    /// the result is a pure function of the register histogram, so all
+    /// three tiers agree bit-for-bit on equal state.
+    pub fn estimate_with(&mut self, kind: EstimatorKind) -> f64 {
+        match self {
+            AdaptiveSketch::Sparse(s) => s.estimate_with(kind),
+            AdaptiveSketch::Packed(p) => p.estimate_with(kind).estimate,
+            AdaptiveSketch::Dense(d) => d.estimate_with(kind),
         }
     }
 
     /// Convert to dense unconditionally (needed before merging with a
-    /// dense partner). Consumes in place: an already-dense sketch moves
-    /// its register file out instead of cloning it.
+    /// dense partner and for wire export). Consumes in place: an
+    /// already-dense sketch moves its register file out instead of
+    /// cloning it.
     pub fn into_dense(self) -> HllSketch {
         match self {
             AdaptiveSketch::Sparse(mut s) => s.to_dense(),
+            AdaptiveSketch::Packed(p) => p.to_dense(),
             AdaptiveSketch::Dense(d) => d,
         }
     }
@@ -296,14 +437,17 @@ impl AdaptiveSketch {
         self.upgrade_to_dense_in_place();
         match self {
             AdaptiveSketch::Dense(d) => d.merge(&other),
-            AdaptiveSketch::Sparse(_) => unreachable!(),
+            _ => unreachable!(),
         }
     }
 
     fn upgrade_to_dense_in_place(&mut self) {
-        if self.is_sparse() {
-            self.upgrade();
-        }
+        let dense = match self {
+            AdaptiveSketch::Dense(_) => return,
+            AdaptiveSketch::Sparse(s) => s.to_dense(),
+            AdaptiveSketch::Packed(p) => p.to_dense(),
+        };
+        *self = AdaptiveSketch::Dense(dense);
     }
 }
 
@@ -342,14 +486,60 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_upgrades_under_load() {
+    fn ertl_estimate_is_tier_invariant() {
+        // The same logical state must estimate bit-identically from all
+        // three representations (the estimate is a pure function of the
+        // histogram).
+        let mut rng = Xoshiro256StarStar::seed_from_u64(21);
+        let mut sparse = SparseHll::new(cfg());
+        let mut dense = HllSketch::new(cfg());
+        for _ in 0..2_500 {
+            let v = rng.next_u32();
+            dense.insert_u32(v);
+            sparse.insert_hash(dense.hash_u32(v));
+        }
+        let packed = PackedHll::from_dense(&dense);
+        assert_eq!(sparse.estimate(), dense.estimate());
+        assert_eq!(packed.estimate(), dense.estimate());
+    }
+
+    #[test]
+    fn adaptive_promotes_sparse_to_packed_then_stays_packed() {
         let mut rng = Xoshiro256StarStar::seed_from_u64(2);
         let mut a = AdaptiveSketch::new(cfg());
         assert!(a.is_sparse());
         for _ in 0..50_000 {
             a.insert_u32(rng.next_u32());
         }
-        assert!(!a.is_sparse(), "should have upgraded to dense");
+        assert!(!a.is_sparse(), "should have been promoted");
+        // At p=16 and 50k distinct, register values hug the window: the
+        // packed tier holds with a fraction of the dense footprint.
+        assert!(a.is_packed(), "50k keys at p=16 fit the packed tier");
+        assert!(a.memory_bytes() * 2 < a.config().m());
+    }
+
+    #[test]
+    fn adaptive_promotes_packed_to_dense_on_exception_overflow() {
+        // A bimodal register file (half zeros, half high values) defeats
+        // every 7-wide window; after rebase fails the sketch must land
+        // dense, losslessly.
+        let c = HllConfig::new(6, HashKind::H64).unwrap();
+        let mut a = AdaptiveSketch::new(c);
+        // Drive past the sparse threshold with alternating high ranks.
+        for idx in 0..c.m() {
+            let rank = if idx % 2 == 0 { 12u8 } else { 1 };
+            // Craft a hash that lands in bucket `idx` with rank `rank`:
+            // top p bits select the bucket, low bits set the rank.
+            let w_bits = 64 - c.p() as u32;
+            let w = 1u64 << (w_bits - rank as u32);
+            let h = ((idx as u64) << w_bits) | w;
+            for _ in 0..20 {
+                a.insert_hash(h);
+            }
+        }
+        assert!(!a.is_sparse() && !a.is_packed(), "bimodal file must densify");
+        let d = a.into_dense();
+        assert_eq!(d.registers().iter().filter(|&&r| r == 12).count(), c.m() / 2);
     }
 
     #[test]
@@ -385,42 +575,70 @@ mod tests {
     }
 
     #[test]
+    fn from_dense_picks_the_most_compact_tier() {
+        // Nearly empty → sparse.
+        let mut small = HllSketch::new(cfg());
+        for v in 0..50u32 {
+            small.insert_u32(v);
+        }
+        let a = AdaptiveSketch::from_dense(small.clone());
+        assert!(a.is_sparse());
+        assert_eq!(a.into_dense(), small);
+        // Well occupied → packed.
+        let mut rng = Xoshiro256StarStar::seed_from_u64(6);
+        let mut big = HllSketch::new(cfg());
+        for _ in 0..60_000 {
+            big.insert_u32(rng.next_u32());
+        }
+        let a = AdaptiveSketch::from_dense(big.clone());
+        assert!(a.is_packed());
+        assert_eq!(a.into_dense(), big);
+    }
+
+    #[test]
     fn traced_inserts_match_plain_inserts_and_report_outcomes() {
         let mut rng = Xoshiro256StarStar::seed_from_u64(9);
         let mut traced = AdaptiveSketch::new(cfg());
         let mut plain = AdaptiveSketch::new(cfg());
         let c = *traced.config();
         let mut saw_untracked = false;
-        let mut saw_dense = false;
+        let mut saw_tracked = false;
         for _ in 0..60_000 {
             let h = c.hash_word(rng.next_u32());
             plain.insert_hash(h);
             match traced.insert_hash_traced(h) {
                 InsertOutcome::Untracked => saw_untracked = true,
-                InsertOutcome::DenseChanged(idx) => {
-                    saw_dense = true;
+                InsertOutcome::RegisterChanged(idx) => {
+                    saw_tracked = true;
                     // The reported register really holds this hash's rank
                     // (or better, later).
                     assert!((idx as usize) < c.m());
+                    let (_, rank) = c.split_hash(h);
+                    assert!(traced.register_value(idx as usize).unwrap() >= rank);
                 }
                 InsertOutcome::Unchanged => {}
             }
         }
         assert!(saw_untracked, "sparse phase must report Untracked");
-        assert!(saw_dense, "dense phase must report changed registers");
+        assert!(saw_tracked, "packed/dense phase must report changed registers");
         assert!(!traced.is_sparse());
         assert_eq!(traced.into_dense(), plain.into_dense());
     }
 
     #[test]
-    fn adaptive_apply_register_diff_densifies_and_max_merges() {
+    fn adaptive_apply_register_diff_promotes_and_max_merges() {
         let mut a = AdaptiveSketch::new(cfg());
         assert!(a.is_sparse());
         a.apply_register_diff(&[(3, 7), (100, 2)]);
-        assert!(!a.is_sparse(), "diff apply mirrors the primary's dense state");
+        assert!(!a.is_sparse(), "diff apply mirrors the primary's register-tracking state");
+        assert!(a.is_packed(), "a small diff lands in the packed tier");
+        assert_eq!(a.register_value(3), Some(7));
+        assert_eq!(a.register_value(100), Some(2));
+        // Max semantics on a second diff.
+        a.apply_register_diff(&[(3, 5), (100, 9)]);
         let d = a.into_dense();
         assert_eq!(d.registers()[3], 7);
-        assert_eq!(d.registers()[100], 2);
+        assert_eq!(d.registers()[100], 9);
         assert_eq!(d.registers().iter().filter(|&&r| r != 0).count(), 2);
     }
 

@@ -4,7 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{SystemTime, UNIX_EPOCH};
 
-use crate::hll::HllConfig;
+use crate::hll::{EstimatorKind, HllConfig};
 
 /// Coarse wall-time source for [`super::SketchRegistry`]'s
 /// wall-clock TTL ([`super::SketchRegistry::evict_idle_wall`]).
@@ -67,11 +67,21 @@ pub struct RegistryConfig {
     /// budget. The cap is a target, not a hard limit — ingest never
     /// blocks on it.
     pub max_memory_bytes: Option<usize>,
+    /// Which estimator answers `estimate`/`for_each_estimate` queries.
+    /// Storage is estimator-agnostic; this only selects the computation
+    /// phase ([`EstimatorKind::Ertl`] by default).
+    pub estimator: EstimatorKind,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { hll: HllConfig::PAPER, shards: 64, track_global: true, max_memory_bytes: None }
+        Self {
+            hll: HllConfig::PAPER,
+            shards: 64,
+            track_global: true,
+            max_memory_bytes: None,
+            estimator: EstimatorKind::default(),
+        }
     }
 }
 
@@ -94,6 +104,8 @@ pub struct ShardStats {
     pub keys: usize,
     /// Keys still in the sparse representation.
     pub sparse_keys: usize,
+    /// Keys compressed into the packed (base + 3-bit delta) tier.
+    pub packed_keys: usize,
     /// Keys upgraded to the dense register file.
     pub dense_keys: usize,
     /// Approximate heap bytes held by this shard's sketches.
@@ -102,10 +114,13 @@ pub struct ShardStats {
     pub words: u64,
 }
 
-/// Registry-wide accounting: per-shard stats plus totals.
+/// Registry-wide accounting: per-shard stats plus totals and the
+/// estimator answering this registry's queries.
 #[derive(Debug, Clone, Default)]
 pub struct RegistryStats {
     pub shards: Vec<ShardStats>,
+    /// The configured [`RegistryConfig::estimator`].
+    pub estimator: EstimatorKind,
 }
 
 impl RegistryStats {
@@ -117,8 +132,17 @@ impl RegistryStats {
         self.shards.iter().map(|s| s.sparse_keys).sum()
     }
 
+    pub fn packed_keys(&self) -> usize {
+        self.shards.iter().map(|s| s.packed_keys).sum()
+    }
+
     pub fn dense_keys(&self) -> usize {
         self.shards.iter().map(|s| s.dense_keys).sum()
+    }
+
+    /// Which estimator computed/answers this registry's estimates.
+    pub fn estimator(&self) -> EstimatorKind {
+        self.estimator
     }
 
     pub fn memory_bytes(&self) -> usize {
@@ -164,14 +188,31 @@ mod tests {
     fn stats_totals_sum_shards() {
         let stats = RegistryStats {
             shards: vec![
-                ShardStats { keys: 2, sparse_keys: 1, dense_keys: 1, memory_bytes: 100, words: 7 },
-                ShardStats { keys: 3, sparse_keys: 3, dense_keys: 0, memory_bytes: 50, words: 5 },
+                ShardStats {
+                    keys: 3,
+                    sparse_keys: 1,
+                    packed_keys: 1,
+                    dense_keys: 1,
+                    memory_bytes: 100,
+                    words: 7,
+                },
+                ShardStats {
+                    keys: 3,
+                    sparse_keys: 3,
+                    packed_keys: 0,
+                    dense_keys: 0,
+                    memory_bytes: 50,
+                    words: 5,
+                },
             ],
+            estimator: EstimatorKind::default(),
         };
-        assert_eq!(stats.keys(), 5);
+        assert_eq!(stats.keys(), 6);
         assert_eq!(stats.sparse_keys(), 4);
+        assert_eq!(stats.packed_keys(), 1);
         assert_eq!(stats.dense_keys(), 1);
         assert_eq!(stats.memory_bytes(), 150);
         assert_eq!(stats.words(), 12);
+        assert_eq!(stats.estimator(), EstimatorKind::Ertl);
     }
 }

@@ -242,16 +242,17 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         );
     }
 
-    /// Cardinality estimate for one key (`None` if the key is unknown).
+    /// Cardinality estimate for one key (`None` if the key is unknown),
+    /// computed by the configured [`RegistryConfig::estimator`].
     pub fn estimate(&self, key: &K) -> Option<f64> {
-        self.shards[self.shard_of(key)].estimate(key)
+        self.shards[self.shard_of(key)].estimate(key, self.cfg.estimator)
     }
 
     /// Bulk estimate: every live (key, estimate) pair, shard by shard.
     pub fn estimates(&self) -> Vec<(K, f64)> {
         let mut out = Vec::new();
         for shard in &self.shards {
-            shard.for_each_estimate(|k, e| out.push((k.clone(), e)));
+            shard.for_each_estimate(self.cfg.estimator, |k, e| out.push((k.clone(), e)));
         }
         out
     }
@@ -304,10 +305,13 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         }
         let now = self.tick();
         let wall = self.wall.now_secs();
+        // Re-compress into the most compact tier that holds the
+        // registers losslessly: a restore of a million mostly-small keys
+        // must not resident them all as m-byte dense files.
         self.shards[self.shard_of(&key)].merge_in(
             self.cfg.hll,
             key,
-            AdaptiveSketch::Dense(sketch),
+            AdaptiveSketch::from_dense(sketch),
             now,
             wall,
         )
@@ -395,8 +399,8 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
     /// Drain every shard's dirty map, resolving each key's recorded
     /// changes into a typed [`SketchDelta`] — the feed the replication
     /// log seals into delta batches ([`crate::replica`]): register
-    /// diffs for dense keys whose changed registers were tracked, full
-    /// wire-v2 sketches for sparse keys / merges / spilled diffs, and
+    /// diffs for packed/dense keys whose changed registers were tracked,
+    /// full wire-v2 sketches for sparse keys / merges / spilled diffs, and
     /// tombstones for evicted keys (an evict-then-recreate emits the
     /// tombstone *before* the new full sketch, in entry order). Empty
     /// unless [`Self::enable_dirty_tracking`] was called. The swap
@@ -584,9 +588,13 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         self.len() == 0
     }
 
-    /// Per-shard memory and population accounting.
+    /// Per-shard memory and population accounting, plus the configured
+    /// estimator kind.
     pub fn stats(&self) -> RegistryStats {
-        RegistryStats { shards: self.shards.iter().map(|s| s.stats()).collect() }
+        RegistryStats {
+            shards: self.shards.iter().map(|s| s.stats()).collect(),
+            estimator: self.cfg.estimator,
+        }
     }
 
     /// Drop every key (the global sketch, if any, is reset too).
@@ -678,10 +686,13 @@ mod tests {
     }
 
     #[test]
-    fn sparse_keys_upgrade_to_dense_under_volume() {
+    fn sparse_keys_upgrade_to_packed_under_volume() {
         let reg = registry(4);
         let mut rng = Xoshiro256StarStar::seed_from_u64(4);
-        // Key 0 gets a heavy stream, keys 1..20 stay tiny.
+        // Key 0 gets a heavy stream, keys 1..20 stay tiny. 60k distinct
+        // words blow past the sparse budget but pack cleanly (random
+        // ranks concentrate in a 7-value window), so the heavy key lands
+        // in the packed tier, not dense.
         let heavy: Vec<u32> = (0..60_000).map(|_| rng.next_u32()).collect();
         reg.ingest(0, &heavy);
         for key in 1u64..20 {
@@ -689,9 +700,13 @@ mod tests {
         }
         let stats = reg.stats();
         assert_eq!(stats.keys(), 20);
-        assert_eq!(stats.dense_keys(), 1, "heavy key must have upgraded");
+        assert_eq!(stats.packed_keys(), 1, "heavy key must have upgraded to packed");
+        assert_eq!(stats.dense_keys(), 0);
         assert_eq!(stats.sparse_keys(), 19);
-        assert!(stats.memory_bytes() >= HllConfig::PAPER.m());
+        // Packed holds the register file in ~3 bits per register: well
+        // above the sparse floor, well under the m-byte dense file.
+        assert!(stats.memory_bytes() >= 3 * HllConfig::PAPER.m() / 8);
+        assert!(stats.memory_bytes() < HllConfig::PAPER.m());
         assert_eq!(stats.words(), 60_000 + 19);
     }
 
@@ -956,18 +971,20 @@ mod tests {
     }
 
     #[test]
-    fn dense_keys_drain_register_diffs_that_reconstruct_state() {
+    fn register_keys_drain_register_diffs_that_reconstruct_state() {
         use crate::hll::decode_register_diff;
 
         let reg = registry(8);
         reg.enable_dirty_tracking();
         let mut rng = Xoshiro256StarStar::seed_from_u64(41);
-        // Densify one key (paper config upgrades past ~64 KiB of sparse
-        // entries — 60k distinct words is comfortably beyond).
+        // Promote one key out of sparse (paper config upgrades past
+        // ~24 KiB of sparse entries — 60k distinct words is comfortably
+        // beyond); it lands packed, which tracks changed registers just
+        // like dense.
         let heavy: Vec<u32> = (0..60_000).map(|_| rng.next_u32()).collect();
         reg.ingest(9, &heavy);
-        assert_eq!(reg.stats().dense_keys(), 1);
-        // First drain after densification: the upgrade ran through the
+        assert_eq!(reg.stats().packed_keys(), 1);
+        // First drain after the promotion: the upgrade ran through the
         // sparse path, so this drain is a Full resend.
         let first = reg.drain_dirty_deltas();
         assert_eq!(first.len(), 1);

@@ -30,15 +30,18 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::config::ShardStats;
 use super::registry::SketchDelta;
-use crate::hll::{encode_register_diff, AdaptiveSketch, HllConfig, HllSketch, InsertOutcome};
+use crate::hll::{
+    encode_register_diff, AdaptiveSketch, EstimatorKind, HllConfig, HllSketch, InsertOutcome,
+};
 
 /// Per-key dirty state on a replication primary: what the next capture
 /// must ship for this key (resolved by [`Shard::drain_dirty`]).
 #[derive(Debug)]
 pub(crate) enum DirtyState {
-    /// Dense-register indices raised since the last drain (append-only,
-    /// may repeat across re-raises; sorted and deduplicated at drain
-    /// time). Spills to [`DirtyState::Full`] past [`spill_threshold`].
+    /// Register indices raised since the last drain (append-only, may
+    /// repeat across re-raises; sorted and deduplicated at drain time).
+    /// Tracked for the register-addressable tiers (packed and dense).
+    /// Spills to [`DirtyState::Full`] past [`spill_threshold`].
     Registers(Vec<u32>),
     /// Resend the key's full sketch: sparse-mode keys (changed
     /// registers untracked), merges, or a register list that grew past
@@ -63,7 +66,7 @@ fn spill_threshold(m: usize) -> usize {
 }
 
 impl DirtyState {
-    /// A dense register was raised.
+    /// A tracked (packed or dense) register was raised.
     fn note_register(&mut self, idx: u32, spill: usize) {
         match self {
             DirtyState::Registers(v) => {
@@ -87,7 +90,7 @@ impl DirtyState {
     }
 
     /// The key changed in a way register tracking cannot describe
-    /// (sparse insert, sparse→dense upgrade, merge): full resend.
+    /// (sparse insert, sparse→packed promotion, merge): full resend.
     fn note_full(&mut self) {
         match self {
             DirtyState::Registers(_) | DirtyState::Full => *self = DirtyState::Full,
@@ -101,7 +104,7 @@ impl DirtyState {
 /// Fold one traced insert outcome into the key's dirty state.
 fn note_outcome(state: &mut DirtyState, outcome: InsertOutcome, spill: usize) {
     match outcome {
-        InsertOutcome::DenseChanged(idx) => state.note_register(idx, spill),
+        InsertOutcome::RegisterChanged(idx) => state.note_register(idx, spill),
         InsertOutcome::Unchanged => {}
         InsertOutcome::Untracked => state.note_full(),
     }
@@ -281,9 +284,9 @@ impl<K: Eq + Hash> Shard<K> {
         st.words += n;
     }
 
-    pub(crate) fn estimate(&self, key: &K) -> Option<f64> {
+    pub(crate) fn estimate(&self, key: &K, kind: EstimatorKind) -> Option<f64> {
         let mut st = self.lock();
-        st.map.get_mut(key).map(|e| e.sketch.estimate())
+        st.map.get_mut(key).map(|e| e.sketch.estimate_with(kind))
     }
 
     pub(crate) fn len(&self) -> usize {
@@ -401,25 +404,29 @@ impl<K: Eq + Hash> Shard<K> {
                             continue;
                         }
                         match st.map.get(&key) {
-                            Some(entry) => match &entry.sketch {
-                                AdaptiveSketch::Dense(d) => {
-                                    idxs.sort_unstable();
-                                    idxs.dedup();
-                                    let regs = d.registers();
-                                    let entries: Vec<(u32, u8)> = idxs
-                                        .iter()
-                                        .map(|&i| (i, regs[i as usize]))
-                                        .filter(|&(_, val)| val > 0)
-                                        .collect();
-                                    v.push(Pending::Diff(key, *d.config(), entries));
-                                }
-                                // Register changes are only recorded for
-                                // dense keys and dense never reverts;
-                                // resend defensively if it somehow did.
-                                AdaptiveSketch::Sparse(_) => {
-                                    v.push(Pending::Full(key, entry.sketch.clone()))
-                                }
-                            },
+                            // Register changes are only recorded for the
+                            // register-addressable tiers (packed/dense),
+                            // and those never revert to sparse; resend
+                            // defensively if one somehow did.
+                            Some(entry) if entry.sketch.is_sparse() => {
+                                v.push(Pending::Full(key, entry.sketch.clone()))
+                            }
+                            Some(entry) => {
+                                idxs.sort_unstable();
+                                idxs.dedup();
+                                let entries: Vec<(u32, u8)> = idxs
+                                    .iter()
+                                    .map(|&i| {
+                                        let val = entry
+                                            .sketch
+                                            .register_value(i as usize)
+                                            .expect("packed/dense registers are addressable");
+                                        (i, val)
+                                    })
+                                    .filter(|&(_, val)| val > 0)
+                                    .collect();
+                                v.push(Pending::Diff(key, *entry.sketch.config(), entries));
+                            }
                             // Every eviction path rewrites the state to
                             // Evicted, so a register-tracked key should
                             // still be live; if it is not, the
@@ -582,10 +589,11 @@ impl<K: Eq + Hash> Shard<K> {
     }
 
     /// Fold every sketch in this shard into `acc` (bucket-wise max).
-    /// Dense keys merge register files directly (no clone); sparse keys
-    /// apply only their live entries — O(live entries), not O(m), so a
-    /// million mostly-small keys fold in millions of updates rather
-    /// than billions of register merges.
+    /// Dense keys merge register files directly (no clone); packed keys
+    /// replay their (mostly in-window) registers; sparse keys apply only
+    /// their live entries — O(live entries), not O(m), so a million
+    /// mostly-small keys fold in millions of updates rather than
+    /// billions of register merges.
     pub(crate) fn fold_into(&self, acc: &mut HllSketch) {
         let mut st = self.lock();
         for entry in st.map.values_mut() {
@@ -593,6 +601,14 @@ impl<K: Eq + Hash> Shard<K> {
             match &mut entry.sketch {
                 AdaptiveSketch::Dense(d) => {
                     acc.merge(d).expect("registry sketches share one config");
+                }
+                AdaptiveSketch::Packed(p) => {
+                    for idx in 0..p.config().m() {
+                        let val = p.read_register(idx);
+                        if val > 0 {
+                            acc.update_register(idx, val);
+                        }
+                    }
                 }
                 AdaptiveSketch::Sparse(s) => {
                     s.for_each_entry(|idx, rank| acc.update_register(idx, rank));
@@ -602,10 +618,10 @@ impl<K: Eq + Hash> Shard<K> {
     }
 
     /// Run `f` over every (key, estimate) pair (bulk estimate API).
-    pub(crate) fn for_each_estimate<F: FnMut(&K, f64)>(&self, mut f: F) {
+    pub(crate) fn for_each_estimate<F: FnMut(&K, f64)>(&self, kind: EstimatorKind, mut f: F) {
         let mut st = self.lock();
         for (k, e) in st.map.iter_mut() {
-            let est = e.sketch.estimate();
+            let est = e.sketch.estimate_with(kind);
             f(k, est);
         }
     }
@@ -616,6 +632,8 @@ impl<K: Eq + Hash> Shard<K> {
         for entry in st.map.values() {
             if entry.sketch.is_sparse() {
                 out.sparse_keys += 1;
+            } else if entry.sketch.is_packed() {
+                out.packed_keys += 1;
             } else {
                 out.dense_keys += 1;
             }

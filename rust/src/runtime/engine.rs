@@ -16,7 +16,7 @@
 
 use super::client::{Result, RuntimeError};
 use super::service::XlaHandle;
-use crate::hll::{EstimateBreakdown, HllConfig, HllSketch};
+use crate::hll::{EstimateBreakdown, EstimatorKind, HllConfig, HllSketch};
 
 /// Estimate triple as produced by the computation phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,7 +61,12 @@ impl Engine for NativeEngine {
     }
 
     fn estimate(&self, sketch: &HllSketch) -> Result<EstimateOut> {
-        Ok(sketch.estimate_breakdown().into())
+        // Pinned to the legacy range-split estimator: the XLA engine runs
+        // the AOT-lowered Pallas estimate kernel, which implements exactly
+        // that computation, and engine parity asserts the two backends
+        // agree to ~1e-9. The registry/serving layer, not the engine
+        // pipeline, is where the Ertl default applies.
+        Ok(sketch.estimate_breakdown_with(EstimatorKind::Legacy).into())
     }
 
     fn merge(&self, sketch: &mut HllSketch, other: &HllSketch) -> Result<()> {

@@ -358,6 +358,12 @@ mod tests {
         let stats = handle.stats().unwrap();
         assert_eq!(stats.keys(), 2);
         assert_eq!(stats.words(), 6);
+        // Tiny keys sit in the sparse tier, and the stats carry the
+        // registry's configured estimator.
+        assert_eq!(stats.sparse_keys(), 2);
+        assert_eq!(stats.packed_keys(), 0);
+        assert_eq!(stats.dense_keys(), 0);
+        assert_eq!(stats.estimator(), crate::hll::EstimatorKind::Ertl);
 
         // Handles stay usable from other threads.
         let h2 = handle.clone();

@@ -38,7 +38,7 @@
 //! | `ESTIMATE_REPLY`        | present u8 (0/1) · estimate f64 bits u64       |
 //! | `GLOBAL_ESTIMATE_REPLY` | present u8 (0/1) · estimate f64 bits u64       |
 //! | `MERGED`                | empty                                          |
-//! | `STATS_REPLY`           | keys · sparse · dense · memory_bytes · words (5 × u64) |
+//! | `STATS_REPLY`           | keys · sparse · packed · dense · memory_bytes · words (6 × u64) · estimator u8 |
 //! | `EVICTED`               | keys u64                                       |
 //! | `SNAPSHOT_DONE`         | keys u64 · file bytes u64                      |
 //! | `FULL_SYNC`             | epoch u64 · cursor u64 · len u32 · len × snapshot-format bytes |
@@ -282,14 +282,21 @@ pub enum Request {
     ReplicaAck { cursor: u64 },
 }
 
-/// Registry accounting totals, flattened for the wire.
+/// Registry accounting totals, flattened for the wire: per-tier key
+/// counts (sparse/packed/dense partition `keys`), heap bytes, ingested
+/// words, and which estimator ([`crate::hll::EstimatorKind`] wire byte)
+/// answers the registry's estimate queries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct StatsSummary {
     pub keys: u64,
     pub sparse_keys: u64,
+    pub packed_keys: u64,
     pub dense_keys: u64,
     pub memory_bytes: u64,
     pub words: u64,
+    /// [`crate::hll::EstimatorKind`] as its wire byte (0 = Ertl,
+    /// 1 = Legacy).
+    pub estimator: u8,
 }
 
 impl From<&RegistryStats> for StatsSummary {
@@ -297,9 +304,11 @@ impl From<&RegistryStats> for StatsSummary {
         Self {
             keys: s.keys() as u64,
             sparse_keys: s.sparse_keys() as u64,
+            packed_keys: s.packed_keys() as u64,
             dense_keys: s.dense_keys() as u64,
             memory_bytes: s.memory_bytes() as u64,
             words: s.words(),
+            estimator: s.estimator().as_wire_byte(),
         }
     }
 }
@@ -565,10 +574,18 @@ impl Response {
             }
             Response::Merged => frame(opcodes::MERGED, &[]),
             Response::Stats(s) => {
-                let mut payload = Vec::with_capacity(40);
-                for v in [s.keys, s.sparse_keys, s.dense_keys, s.memory_bytes, s.words] {
+                let mut payload = Vec::with_capacity(49);
+                for v in [
+                    s.keys,
+                    s.sparse_keys,
+                    s.packed_keys,
+                    s.dense_keys,
+                    s.memory_bytes,
+                    s.words,
+                ] {
                     payload.extend_from_slice(&v.to_le_bytes());
                 }
+                payload.push(s.estimator);
                 frame(opcodes::STATS_REPLY, &payload)
             }
             Response::Evicted { keys } => frame(opcodes::EVICTED, &keys.to_le_bytes()),
@@ -611,9 +628,11 @@ impl Response {
             opcodes::STATS_REPLY => Response::Stats(StatsSummary {
                 keys: r.u64()?,
                 sparse_keys: r.u64()?,
+                packed_keys: r.u64()?,
                 dense_keys: r.u64()?,
                 memory_bytes: r.u64()?,
                 words: r.u64()?,
+                estimator: r.u8()?,
             }),
             opcodes::EVICTED => Response::Evicted { keys: r.u64()? },
             opcodes::SNAPSHOT_DONE => {
@@ -1078,9 +1097,11 @@ mod tests {
         roundtrip_response(Response::Stats(StatsSummary {
             keys: 1,
             sparse_keys: 2,
+            packed_keys: 6,
             dense_keys: 3,
             memory_bytes: 4,
             words: 5,
+            estimator: 1,
         }));
         roundtrip_response(Response::Evicted { keys: 17 });
         roundtrip_response(Response::SnapshotDone { keys: 8, bytes: 4096 });
@@ -1528,21 +1549,26 @@ mod tests {
 
     #[test]
     fn stats_summary_from_registry_stats() {
+        use crate::hll::EstimatorKind;
         use crate::registry::ShardStats;
         let stats = RegistryStats {
             shards: vec![ShardStats {
-                keys: 2,
+                keys: 3,
                 sparse_keys: 1,
+                packed_keys: 1,
                 dense_keys: 1,
                 memory_bytes: 640,
                 words: 99,
             }],
+            estimator: EstimatorKind::Legacy,
         };
         let s = StatsSummary::from(&stats);
-        assert_eq!(s.keys, 2);
+        assert_eq!(s.keys, 3);
         assert_eq!(s.sparse_keys, 1);
+        assert_eq!(s.packed_keys, 1);
         assert_eq!(s.dense_keys, 1);
         assert_eq!(s.memory_bytes, 640);
         assert_eq!(s.words, 99);
+        assert_eq!(s.estimator, EstimatorKind::Legacy.as_wire_byte());
     }
 }

@@ -2,7 +2,7 @@
 //! estimation error of HLL across cardinalities, hash widths and
 //! precisions, aggregated over independent trials.
 
-use crate::hll::{HllConfig, HllSketch};
+use crate::hll::{EstimatorKind, HllConfig, HllSketch};
 use crate::stats::datasets::DistinctStream;
 
 /// Error statistics at one (config, cardinality) point.
@@ -14,6 +14,9 @@ pub struct ErrorPoint {
     pub min: f64,
     pub median: f64,
     pub max: f64,
+    /// Mean absolute relative error — the estimator-comparison metric
+    /// (bias and spread folded into one number).
+    pub mean: f64,
     /// Root-mean-square relative error — the empirical "standard error"
     /// comparable to the analytic 1.04/√m.
     pub rms: f64,
@@ -41,14 +44,47 @@ pub fn log_spaced_cardinalities(lo_exp: u32, hi_exp: u32, per_decade: u32) -> Ve
     out
 }
 
+/// Collapse one trial set of relative errors into an [`ErrorPoint`].
+fn summarize(mut errors: Vec<f64>, cardinality: u64) -> ErrorPoint {
+    errors.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trials = errors.len();
+    let mean = errors.iter().sum::<f64>() / trials as f64;
+    let rms = (errors.iter().map(|e| e * e).sum::<f64>() / trials as f64).sqrt();
+    ErrorPoint {
+        cardinality,
+        trials,
+        min: errors[0],
+        median: errors[trials / 2],
+        max: *errors.last().unwrap(),
+        mean,
+        rms,
+    }
+}
+
 /// Measure one point: run `trials` independent streams of exactly
-/// `cardinality` distinct values and collect relative errors.
+/// `cardinality` distinct values and collect relative errors (with the
+/// default estimator).
 pub fn measure_point(cfg: HllConfig, cardinality: u64, trials: usize) -> ErrorPoint {
-    let mut errors: Vec<f64> = Vec::with_capacity(trials);
+    let (point, _) = measure_point_paired(cfg, cardinality, trials);
+    point
+}
+
+/// As [`measure_point`], but evaluate *both* estimators on the same
+/// sketches — identical streams, identical register files — so the
+/// comparison isolates the computation phase from sampling noise.
+/// Returns `(ertl, legacy)`.
+pub fn measure_point_paired(
+    cfg: HllConfig,
+    cardinality: u64,
+    trials: usize,
+) -> (ErrorPoint, ErrorPoint) {
+    let mut ertl_errors: Vec<f64> = Vec::with_capacity(trials);
+    let mut legacy_errors: Vec<f64> = Vec::with_capacity(trials);
     let mut buf = vec![0u32; 65_536];
     for trial in 0..trials {
         let mut sketch = HllSketch::new(cfg);
-        let mut stream = DistinctStream::new(cardinality, 0x9E3779B9u64 ^ (trial as u64) << 32 | cardinality);
+        let seed = 0x9E3779B9u64 ^ ((trial as u64) << 32) ^ cardinality;
+        let mut stream = DistinctStream::new(cardinality, seed);
         loop {
             let k = stream.fill(&mut buf);
             if k == 0 {
@@ -56,19 +92,11 @@ pub fn measure_point(cfg: HllConfig, cardinality: u64, trials: usize) -> ErrorPo
             }
             sketch.insert_batch(&buf[..k]);
         }
-        let est = sketch.estimate();
-        errors.push((est - cardinality as f64).abs() / cardinality as f64);
+        let n = cardinality as f64;
+        ertl_errors.push((sketch.estimate_with(EstimatorKind::Ertl) - n).abs() / n);
+        legacy_errors.push((sketch.estimate_with(EstimatorKind::Legacy) - n).abs() / n);
     }
-    errors.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rms = (errors.iter().map(|e| e * e).sum::<f64>() / errors.len() as f64).sqrt();
-    ErrorPoint {
-        cardinality,
-        trials,
-        min: errors[0],
-        median: errors[errors.len() / 2],
-        max: *errors.last().unwrap(),
-        rms,
-    }
+    (summarize(ertl_errors, cardinality), summarize(legacy_errors, cardinality))
 }
 
 /// Sweep a config over cardinalities (the Fig 1 x-axis).

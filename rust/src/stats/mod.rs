@@ -6,6 +6,6 @@ pub mod error_profile;
 
 pub use datasets::{multiset_stream, DistinctStream};
 pub use error_profile::{
-    log_spaced_cardinalities, measure_point, sweep, transition_cardinality, ErrorCurve,
-    ErrorPoint,
+    log_spaced_cardinalities, measure_point, measure_point_paired, sweep,
+    transition_cardinality, ErrorCurve, ErrorPoint,
 };

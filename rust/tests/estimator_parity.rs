@@ -1,0 +1,87 @@
+//! Cross-language estimator parity: rust `EstimatorKind::Legacy` vs the
+//! python oracle (`python/compile/kernels/ref.py::hll_estimate`).
+//!
+//! Both sides synthesize identical register files from a shared
+//! splitmix64 generator and check the same committed golden estimates —
+//! `python/tests/test_estimator_parity.py` is the twin. The goldens
+//! cover all three legacy branches (LinearCounting, raw, 32-bit
+//! large-range correction) plus a small-m alpha-table config, so any
+//! drift between the serving-layer legacy path and the compiled Pallas
+//! kernel's computation fails on both sides of the language fence.
+
+use hll_fpga::hll::{EstimatorKind, HashKind, HllConfig, HllSketch};
+
+/// One splitmix64 step; mirrors `_splitmix` in the python twin.
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic register file: per register draw (occupied?, rank).
+/// Mirrored line-for-line in the python twin.
+fn synth_registers(cfg: HllConfig, seed: u64, occ_per_mille: u64, rank_offset: u32) -> Vec<u8> {
+    let max_rank = cfg.max_rank() as u32;
+    let mut state = seed;
+    (0..cfg.m())
+        .map(|_| {
+            let x = splitmix(&mut state);
+            let y = splitmix(&mut state);
+            if x % 1000 < occ_per_mille {
+                (rank_offset + 1 + y.trailing_zeros()).min(max_rank) as u8
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// (p, h_bits, seed, occ_per_mille, rank_offset, expected_estimate) —
+/// the `expected` column is the python oracle's output, committed in
+/// both test files.
+const GOLDEN: &[(u8, u8, u64, u64, u32, f64)] = &[
+    (12, 64, 0xA5A5, 1000, 0, 8897.226585133449),   // raw branch
+    (12, 64, 0x1234, 120, 0, 566.4193796524122),    // LinearCounting
+    (14, 64, 0xBEEF, 500, 0, 11618.608482912226),   // LinearCounting
+    (12, 32, 0xCAFE, 1000, 14, 146845837.76433104), // 32-bit large-range
+    (16, 64, 0x42, 1000, 0, 141701.6198943316),     // raw, paper config
+    (4, 32, 0x7, 1000, 0, 32.622579881656804),      // raw, alpha table m=16
+];
+
+#[test]
+fn legacy_estimator_matches_python_oracle() {
+    for &(p, h_bits, seed, occ, off, expected) in GOLDEN {
+        let hash = if h_bits == 32 { HashKind::H32 } else { HashKind::H64 };
+        let cfg = HllConfig::new(p, hash).unwrap();
+        let regs = synth_registers(cfg, seed, occ, off);
+        let sketch = HllSketch::from_registers(cfg, regs).unwrap();
+        let est = sketch.estimate_with(EstimatorKind::Legacy);
+        let rel = (est - expected).abs() / expected;
+        assert!(
+            rel < 1e-9,
+            "p={p} H{h_bits} seed={seed:#x}: legacy {est} vs oracle {expected} (rel {rel:.2e})"
+        );
+    }
+}
+
+#[test]
+fn ertl_estimator_is_sane_on_golden_registers() {
+    // Ertl intentionally computes a *different* (better) function — no
+    // parity claim, but it must stay finite, positive and in the same
+    // regime on every golden register file, including the saturated
+    // 32-bit one where the legacy path needs its range correction.
+    for &(p, h_bits, seed, occ, off, legacy) in GOLDEN {
+        let hash = if h_bits == 32 { HashKind::H32 } else { HashKind::H64 };
+        let cfg = HllConfig::new(p, hash).unwrap();
+        let sketch =
+            HllSketch::from_registers(cfg, synth_registers(cfg, seed, occ, off)).unwrap();
+        let est = sketch.estimate_with(EstimatorKind::Ertl);
+        assert!(est.is_finite() && est > 0.0, "p={p} H{h_bits}: ertl {est}");
+        assert!(
+            est > legacy * 0.3 && est < legacy * 3.0,
+            "p={p} H{h_bits}: ertl {est} not in the same regime as legacy {legacy}"
+        );
+    }
+}

@@ -44,9 +44,10 @@ fn concurrent_ingest_is_register_identical_to_sequential() {
 
 #[test]
 fn registry_upgrade_preserves_estimates() {
-    // Sparse→dense upgrade must not move a key's estimate: right at the
-    // HLL++ threshold both representations are in the LinearCounting
-    // regime, so the handoff is exact.
+    // Tier promotions (sparse→packed, and packed→dense if it ever fires)
+    // must not move a key's estimate: the Ertl estimate is a pure
+    // function of the register histogram, which every tier preserves
+    // exactly, so the handoffs are bit-exact.
     Runner::new("upgrade_preserves_estimate").cases(6).run(|g| {
         let cfg = HllConfig::PAPER;
         let registry: SketchRegistry<u64> = SketchRegistry::new(RegistryConfig {
@@ -77,7 +78,10 @@ fn registry_upgrade_preserves_estimates() {
         }
         assert!(!reference.is_sparse(), "stream too small to force the upgrade");
         let stats = registry.stats();
-        assert_eq!(stats.dense_keys(), 1);
+        // Random streams in this size range compress into the packed
+        // tier (ranks concentrate in a 7-value window) and stay there.
+        assert_eq!(stats.packed_keys(), 1);
+        assert_eq!(stats.dense_keys(), 0);
         // The upgraded sketch equals a dense sketch built directly.
         let mut dense = HllSketch::new(cfg);
         dense.insert_batch(&words);

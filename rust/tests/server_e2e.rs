@@ -89,6 +89,43 @@ fn remote_ingest_is_bit_exact_with_in_process() {
 }
 
 #[test]
+fn stats_rpc_reports_per_tier_counts_and_estimator() {
+    let (server, _registry) = start_server(ServerConfig::default());
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    // One heavy tenant (60k distinct words promotes it out of sparse,
+    // into the packed tier) plus a handful of tiny sparse tenants.
+    let heavy: Vec<u32> = (0..60_000).collect();
+    for chunk in heavy.chunks(8_192) {
+        client.insert_batch(1, chunk).unwrap();
+    }
+    for key in 2u64..=5 {
+        client.insert_batch(key, &[key as u32]).unwrap();
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.keys, 5);
+    assert_eq!(stats.packed_keys, 1, "heavy tenant must be packed");
+    assert_eq!(stats.sparse_keys, 4);
+    assert_eq!(stats.dense_keys, 0);
+    assert_eq!(
+        stats.sparse_keys + stats.packed_keys + stats.dense_keys,
+        stats.keys,
+        "tiers must partition the key population"
+    );
+    // Default registry answers with the Ertl estimator (wire byte 0).
+    assert_eq!(stats.estimator, 0);
+    // Packed keeps the heavy tenant well under a dense register file.
+    assert!(
+        (stats.memory_bytes as usize) < HllConfig::PAPER.m(),
+        "memory {} must undercut one dense file ({})",
+        stats.memory_bytes,
+        HllConfig::PAPER.m()
+    );
+    server.shutdown();
+}
+
+#[test]
 fn pipelined_and_concurrent_clients_match_serial() {
     let (server, registry) = start_server(ServerConfig::default());
     let batches = keyed_batches(500, 40_000, 0xC0DE);
