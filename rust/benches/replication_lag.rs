@@ -123,6 +123,20 @@ fn main() {
         "primary: {} delta batches and {} full syncs streamed",
         pstats.delta_batches_sent, pstats.full_syncs_sent
     );
+    // Seal-to-apply lag straight from the follower's live histogram:
+    // batch seal timestamp on the primary → entries applied here. Same
+    // `(name, label)` returns the cell `apply_frame` records into.
+    let lag = follower.metrics().histogram("replica_seal_to_apply_ns", None).snapshot();
+    assert!(lag.count > 0, "follower must have recorded seal-to-apply samples");
+    let (p50, p99) = (lag.quantile(0.5), lag.quantile(0.99));
+    assert!(p99 > 0, "p99 seal-to-apply lag must be nonzero");
+    println!(
+        "seal-to-apply lag: p50 {:.2}ms  p99 {:.2}ms  max {:.2}ms over {} batches",
+        p50 as f64 / 1e6,
+        p99 as f64 / 1e6,
+        lag.max as f64 / 1e6,
+        lag.count
+    );
     println!(
         "log entry mix: {} diffs / {} fulls / {} tombstones / {} global diffs, {} entry bytes sealed",
         lstats.sealed_diff_entries,

@@ -79,6 +79,23 @@ fn main() {
             total
         });
         println!("{}", m.report_line());
+        // Per-opcode dispatch latency straight from the server's live
+        // histogram (same `(name, label)` returns the same cell the
+        // event loop records into).
+        let dispatch = server
+            .metrics()
+            .histogram("rpc_latency_ns", Some(("op", "insert_batch".to_string())))
+            .snapshot();
+        let (p50, p99) = (dispatch.quantile(0.5), dispatch.quantile(0.99));
+        assert!(dispatch.count > 0, "ingest must have recorded dispatch latencies");
+        assert!(p99 > 0, "p99 dispatch latency must be nonzero");
+        println!(
+            "      insert_batch dispatch: p50 {:.1}us  p99 {:.1}us  max {:.1}us over {} frames",
+            p50 as f64 / 1e3,
+            p99 as f64 / 1e3,
+            dispatch.max as f64 / 1e3,
+            dispatch.count
+        );
         match (baseline_rss, resident_kib()) {
             (Some(base), Some(now)) => {
                 let threads_model_kib = conns as u64 * 8 * 1024; // 8 MiB stack reservation each

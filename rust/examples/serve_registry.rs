@@ -4,15 +4,71 @@
 //! snapshot → restart → restore cycle.
 //!
 //! Run: `cargo run --release --example serve_registry`
+//!
+//! Flags:
+//! - `--metrics-every N`: print the server's metrics exposition every
+//!   N seconds from a background thread while the demo runs.
+//! - `--smoke`: after the demo queries, scrape metrics over the wire
+//!   (`MetricsDump` RPC), validate every line of the exposition, and
+//!   exit nonzero if any expected series is missing or malformed.
 
 use std::sync::Arc;
 
 use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::obs::EXPOSITION_HEADER;
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
 use hll_fpga::server::{EvictPolicy, ServerConfig, SketchClient, SketchServer};
 use hll_fpga::util::fmt::{count, TextTable};
 
+/// Scrape metrics over the `MetricsDump` RPC and validate the text:
+/// versioned header, every line machine-parseable, and the series the
+/// demo must have produced all present. Exits the process on failure
+/// so CI can run this as a gate.
+fn metrics_smoke(client: &mut SketchClient) {
+    let text = client.metrics_dump().expect("metrics dump RPC");
+    let mut lines = text.lines();
+    if lines.next() != Some(EXPOSITION_HEADER) {
+        eprintln!("metrics smoke FAILED: missing exposition header");
+        std::process::exit(1);
+    }
+    let mut parsed = 0usize;
+    for line in lines {
+        if hll_fpga::obs::registry::parse_line(line).is_none() {
+            eprintln!("metrics smoke FAILED: unparseable line {line:?}");
+            std::process::exit(1);
+        }
+        parsed += 1;
+    }
+    // Series the demo traffic must have produced by this point.
+    let expected = [
+        "rpc_total{op=\"ping\"}",
+        "rpc_total{op=\"insert_batch\"}",
+        "rpc_latency_ns{op=\"insert_batch\",quantile=\"0.99\"}",
+        "rpc_payload_bytes{op=\"insert_batch\",quantile=\"0.5\"}",
+        "loop_poll_wait_ns{loop=\"0\",quantile=\"0.99\"}",
+        "server_connections_total",
+        "server_words_ingested_total",
+        "registry_keys",
+        "registry_tier_keys{tier=\"sparse\"}",
+        "registry_memory_bytes",
+    ];
+    for needle in expected {
+        if !text.contains(needle) {
+            eprintln!("metrics smoke FAILED: missing series {needle:?}");
+            std::process::exit(1);
+        }
+    }
+    println!("metrics smoke: {parsed} series lines parsed, all expected series present");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let metrics_every: Option<u64> = args
+        .iter()
+        .position(|a| a == "--metrics-every")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok());
     // 1. A registry shared between ingest and queries, served over TCP.
     let registry = SketchRegistry::shared(RegistryConfig {
         shards: 32,
@@ -31,6 +87,16 @@ fn main() {
     .expect("bind loopback");
     let addr = server.local_addr();
     println!("serving the sketch registry on {addr}");
+    if let Some(secs) = metrics_every {
+        // Periodic exposition dump. The registry Arc outlives the
+        // server handle, so the printer keeps working across the demo's
+        // restart; the detached thread dies with the process.
+        let metrics = server.metrics().clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(secs.max(1)));
+            println!("--- metrics ---\n{}", metrics.render());
+        });
+    }
 
     // 2. A remote producer: 10k tenants, zipf-skewed keyed stream,
     //    pipelined ingest batches.
@@ -62,6 +128,9 @@ fn main() {
         count(stats.memory_bytes),
         if stats.estimator == 0 { "ertl" } else { "legacy" },
     );
+    if smoke {
+        metrics_smoke(&mut client);
+    }
 
     // 4. Lifecycle over RPC: TTL sweep + memory budget.
     let aged = client.evict(EvictPolicy::Idle { max_age: 1_000_000 }).expect("ttl");

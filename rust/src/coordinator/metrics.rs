@@ -1,20 +1,41 @@
 //! Coordinator metrics: lock-free counters shared between the feeder and
 //! workers, snapshotted into reports.
+//!
+//! The counters are [`crate::obs::Counter`] handles, so a coordinator
+//! constructed with [`Metrics::registered`] exposes them through a
+//! [`MetricsRegistry`] exposition with zero double-accounting — the
+//! same cells back both the registry scrape and [`Metrics::snapshot`].
+//! `Metrics::default()` keeps working for standalone runs (the handles
+//! just aren't registered anywhere).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 
-/// Shared counters (one instance per coordinator run).
+use crate::obs::{Counter, MetricsRegistry};
+
+/// Shared counters (one instance per coordinator run). The fields
+/// deref to `AtomicU64`, so hot-path sites `fetch_add` directly.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    pub words_in: AtomicU64,
-    pub batches_routed: AtomicU64,
+    pub words_in: Counter,
+    pub batches_routed: Counter,
     /// Times the feeder blocked on a full worker queue (backpressure).
-    pub backpressure_stalls: AtomicU64,
+    pub backpressure_stalls: Counter,
     /// Batches processed, summed over workers.
-    pub batches_done: AtomicU64,
+    pub batches_done: Counter,
 }
 
 impl Metrics {
+    /// Counters registered into `m` under `coordinator_*` names, so a
+    /// host process's exposition carries them.
+    pub fn registered(m: &MetricsRegistry) -> Self {
+        Self {
+            words_in: m.counter("coordinator_words_in_total", None),
+            batches_routed: m.counter("coordinator_batches_routed_total", None),
+            backpressure_stalls: m.counter("coordinator_backpressure_stalls_total", None),
+            batches_done: m.counter("coordinator_batches_done_total", None),
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             words_in: self.words_in.load(Ordering::Relaxed),
@@ -57,5 +78,18 @@ mod tests {
         assert_eq!(s.words_in, 100);
         assert_eq!(s.batches_routed, 2);
         assert_eq!(s.backpressure_stalls, 0);
+    }
+
+    #[test]
+    fn registered_counters_feed_the_exposition() {
+        let reg = MetricsRegistry::shared();
+        let m = Metrics::registered(&reg);
+        m.words_in.fetch_add(42, Ordering::Relaxed);
+        m.batches_done.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.snapshot().words_in, 42);
+        let text = reg.render();
+        assert!(text.contains("coordinator_words_in_total 42\n"));
+        assert!(text.contains("coordinator_batches_done_total 3\n"));
+        assert!(text.contains("coordinator_backpressure_stalls_total 0\n"));
     }
 }

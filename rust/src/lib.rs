@@ -28,6 +28,7 @@ pub mod cpu_baseline;
 pub mod fpga;
 pub mod hll;
 pub mod net;
+pub mod obs;
 pub mod pcie;
 pub mod proptest_lite;
 pub mod registry;

@@ -1,0 +1,290 @@
+//! Lock-free log-bucketed latency histogram (HDR-style).
+//!
+//! Values (nanoseconds) map to a fixed array of `AtomicU64` buckets:
+//! each power-of-two range is split into `1 << SUB_BITS` linear
+//! sub-buckets, so relative error is bounded by `2^-SUB_BITS` (~3%)
+//! across the full `u64` range. [`LatencyHistogram::record`] is a few
+//! relaxed atomic RMWs — no locks, no allocation, no branching on
+//! contended state — and is safe to call from any number of threads.
+//!
+//! Readout ([`LatencyHistogram::snapshot`]) walks the bucket array once
+//! and answers count / sum / max / quantiles from the copy, so a
+//! scraper never perturbs recorders beyond cache traffic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per power-of-two range (as a shift).
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per power-of-two range.
+const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: values below `SUB` get exact buckets, every
+/// `u64` power-of-two range above that gets `SUB` sub-buckets.
+const BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+/// Index of the bucket holding `v`. Exact for `v < SUB`, otherwise
+/// log-bucketed: the top `SUB_BITS + 1` significant bits select the
+/// bucket, bounding relative error by `2^-SUB_BITS`.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros(); // >= SUB_BITS
+    let block = (exp - SUB_BITS + 1) as usize;
+    let offset = ((v >> (exp - SUB_BITS)) as usize) - SUB;
+    block * SUB + offset
+}
+
+/// Inclusive upper bound of bucket `i` — the value reported for any
+/// sample that landed in it, so quantiles never under-report.
+fn bucket_upper_bound(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let block = (i / SUB) as u32;
+    let offset = (i % SUB) as u64;
+    let exp = block + SUB_BITS - 1;
+    let scale = exp - SUB_BITS;
+    let lower = (SUB as u64 + offset) << scale;
+    lower + ((1u64 << scale) - 1)
+}
+
+/// A concurrent latency histogram. Construct via [`Default`], share
+/// behind an `Arc`, record from any thread.
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    /// Exact sum of recorded values (for mean / `_sum` exposition).
+    sum: AtomicU64,
+    /// Exact maximum recorded value.
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // `AtomicU64` is zero-initializable; build the boxed array
+        // without a large stack temporary.
+        let buckets: Box<[AtomicU64]> =
+            (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets = buckets.try_into().expect("BUCKETS-sized array");
+        Self { buckets, sum: AtomicU64::new(0), max: AtomicU64::new(0) }
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("LatencyHistogram")
+            .field("count", &s.count)
+            .field("p50", &s.quantile(0.5))
+            .field("p99", &s.quantile(0.99))
+            .field("max", &s.max)
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one value. Lock-free: three relaxed atomic RMWs (bucket
+    /// increment, sum accumulate, max raise), no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram's counts into this one (bucket-wise).
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n != 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Total recorded samples (derived from the bucket array, so it is
+    /// consistent with whatever quantile readout would see).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Copy the live buckets into an immutable snapshot for readout.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An immutable point-in-time copy of a [`LatencyHistogram`].
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    /// Total recorded samples.
+    pub count: u64,
+    /// Sum of all recorded values.
+    pub sum: u64,
+    /// Largest recorded value (exact).
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// containing the `ceil(q * count)`-th sample, clamped to the exact
+    /// recorded max. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_upper_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Mean of recorded values (exact, from the running sum).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_index_monotone_and_bounded() {
+        let probes: Vec<u64> = (0..2048)
+            .chain((1..54).map(|e| (1u64 << e) - 1))
+            .chain((1..54).map(|e| 1u64 << e))
+            .chain((1..54).map(|e| (1u64 << e) + 1))
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        let mut prev = 0usize;
+        for v in sorted {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            assert!(i >= prev, "index must be monotone in value ({v})");
+            prev = i;
+            let ub = bucket_upper_bound(i);
+            assert!(ub >= v, "upper bound {ub} below value {v}");
+            // Bounded relative error: the bucket never overstates by
+            // more than one sub-bucket width.
+            if v >= SUB as u64 {
+                assert!((ub - v) as f64 / v as f64 <= 1.0 / SUB as f64 + 1e-9);
+            } else {
+                assert_eq!(ub, v, "small values are exact");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_small_values_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.sum, 55);
+        assert_eq!(s.max, 10);
+        assert_eq!(s.quantile(0.5), 5);
+        assert_eq!(s.quantile(1.0), 10);
+        assert_eq!(s.quantile(0.0), 1);
+        assert!((s.mean() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let s = LatencyHistogram::default().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(0.99), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let h = LatencyHistogram::default();
+        // A deterministic spread over five decades.
+        for i in 1..=10_000u64 {
+            h.record(i * 997);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        for (q, exact) in [(0.5, 5_000 * 997), (0.9, 9_000 * 997), (0.99, 9_900 * 997)] {
+            let got = s.quantile(q);
+            assert!(got >= exact, "quantile {q} must not under-report: {got} < {exact}");
+            let err = (got - exact) as f64 / exact as f64;
+            assert!(err <= 2.0 / SUB as f64, "quantile {q} error {err} too large");
+        }
+        assert_eq!(s.quantile(1.0), 10_000 * 997, "max is exact");
+    }
+
+    #[test]
+    fn concurrent_recorders_exact_count() {
+        // N threads x M records each: total count must be exact and
+        // quantiles must sit within bucket bounds of the recorded set.
+        const THREADS: usize = 8;
+        const PER: u64 = 20_000;
+        let h = Arc::new(LatencyHistogram::default());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        // Values span several orders of magnitude.
+                        h.record((i % 1_000) * 1_000 + t as u64 + 1);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, THREADS as u64 * PER, "no record may be lost");
+        assert_eq!(h.count(), s.count);
+        let max_possible = 999 * 1_000 + THREADS as u64;
+        assert!(s.max <= max_possible && s.max >= 999 * 1_000);
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let v = s.quantile(q);
+            assert!(v <= s.max, "quantile {q} exceeds max");
+            assert!(v > 0, "quantile {q} must be nonzero for nonzero data");
+        }
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let a = LatencyHistogram::default();
+        let b = LatencyHistogram::default();
+        for i in 1..=100 {
+            a.record(i);
+            b.record(i * 1_000);
+        }
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.count, 200);
+        assert_eq!(s.max, 100_000);
+        assert!(s.quantile(0.999) >= 99_000);
+    }
+}

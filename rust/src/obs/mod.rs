@@ -1,0 +1,30 @@
+//! Observability: lock-free latency histograms and a process metrics
+//! registry with a Prometheus-style text exposition.
+//!
+//! The subsystem is dependency-free and allocation-free on the hot
+//! path: recording a latency is a handful of relaxed atomic ops into a
+//! log-bucketed histogram ([`LatencyHistogram`]), and counters/gauges
+//! are plain `AtomicU64`s behind cheap cloneable handles. All readout
+//! cost (bucket walks, quantile interpolation, text rendering) is paid
+//! by the scraper, never by the recording thread.
+//!
+//! Every subsystem registers its instruments into a shared
+//! [`MetricsRegistry`]; [`MetricsRegistry::render`] emits a versioned
+//! `name{label="v"} value` text format served over the `MetricsDump`
+//! RPC and the `SketchServer::metrics_text` side channel.
+
+pub mod hist;
+pub mod registry;
+
+pub use hist::{HistSnapshot, LatencyHistogram};
+pub use registry::{Counter, Gauge, MetricsRegistry, EXPOSITION_HEADER};
+
+/// Wall-clock nanoseconds since the UNIX epoch. Used to stamp sealed
+/// replication batches so the follower can measure seal-to-apply
+/// latency across processes (monotonic clocks don't travel).
+pub fn unix_time_ns() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,400 @@
+//! Process metrics registry: named counters, gauges, and histograms
+//! with cheap handles and a versioned text exposition.
+//!
+//! Instruments are registered once (at subsystem construction) and
+//! then updated through lock-free handles — the registry mutex guards
+//! only registration and scrape, never the hot path. Names are static
+//! strings; an optional single `key="value"` label distinguishes
+//! instances (per-opcode, per-tier, per-loop).
+//!
+//! [`MetricsRegistry::render`] produces the exposition text: a
+//! `# hll-metrics v1` header followed by sorted
+//! `name{label="v"} value` lines (Prometheus-compatible), histograms
+//! expanded into `quantile` series plus `_count` / `_sum` / `_max`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hist::LatencyHistogram;
+
+/// First line of every exposition dump; bump the version when the
+/// format changes shape.
+pub const EXPOSITION_HEADER: &str = "# hll-metrics v1";
+
+/// A monotonically increasing counter handle. Clones share the cell.
+/// Derefs to [`AtomicU64`] so call sites can use `fetch_add`/`load`
+/// directly.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` (relaxed).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 (relaxed).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value (relaxed).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl std::ops::Deref for Counter {
+    type Target = AtomicU64;
+    fn deref(&self) -> &AtomicU64 {
+        &self.0
+    }
+}
+
+/// A settable gauge handle. Clones share the cell.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the value (relaxed).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl std::ops::Deref for Gauge {
+    type Target = AtomicU64;
+    fn deref(&self) -> &AtomicU64 {
+        &self.0
+    }
+}
+
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    /// Computed at scrape time — bridges subsystems that already keep
+    /// their own stats (registry tiers, replication log) without
+    /// double-accounting.
+    GaugeFn(Box<dyn Fn() -> f64 + Send + Sync>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+struct Entry {
+    name: &'static str,
+    /// `Some((key, value))` renders as `name{key="value"}`.
+    label: Option<(&'static str, String)>,
+    instrument: Instrument,
+}
+
+impl Entry {
+    fn series_key(&self) -> (String, String) {
+        match &self.label {
+            Some((k, v)) => (self.name.to_string(), format!("{k}={v}")),
+            None => (self.name.to_string(), String::new()),
+        }
+    }
+}
+
+/// The process-wide instrument registry. Cheap to share (`Arc`); each
+/// `SketchServer` owns one, standalone coordinators create their own.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.entries.lock().map(|e| e.len()).unwrap_or(0);
+        f.debug_struct("MetricsRegistry").field("instruments", &n).finish()
+    }
+}
+
+impl MetricsRegistry {
+    /// Fresh empty registry behind an `Arc`.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    fn find_or_insert<T: Clone>(
+        &self,
+        name: &'static str,
+        label: Option<(&'static str, String)>,
+        matches: impl Fn(&Instrument) -> Option<T>,
+        build: impl FnOnce() -> (T, Instrument),
+    ) -> T {
+        let mut entries = self.entries.lock().expect("metrics registry poisoned");
+        for e in entries.iter() {
+            if e.name == name && e.label == label {
+                if let Some(handle) = matches(&e.instrument) {
+                    return handle;
+                }
+            }
+        }
+        let (handle, instrument) = build();
+        entries.push(Entry { name, label, instrument });
+        handle
+    }
+
+    /// Register (or look up) a counter. Same `(name, label)` returns a
+    /// handle to the same cell.
+    pub fn counter(&self, name: &'static str, label: Option<(&'static str, String)>) -> Counter {
+        self.find_or_insert(
+            name,
+            label,
+            |i| match i {
+                Instrument::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+            || {
+                let c = Counter::default();
+                (c.clone(), Instrument::Counter(c))
+            },
+        )
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &'static str, label: Option<(&'static str, String)>) -> Gauge {
+        self.find_or_insert(
+            name,
+            label,
+            |i| match i {
+                Instrument::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+            || {
+                let g = Gauge::default();
+                (g.clone(), Instrument::Gauge(g))
+            },
+        )
+    }
+
+    /// Register (or look up) a histogram.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        label: Option<(&'static str, String)>,
+    ) -> Arc<LatencyHistogram> {
+        self.find_or_insert(
+            name,
+            label,
+            |i| match i {
+                Instrument::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+            || {
+                let h = Arc::new(LatencyHistogram::default());
+                (h.clone(), Instrument::Histogram(h))
+            },
+        )
+    }
+
+    /// Register a scrape-time computed gauge. Re-registering the same
+    /// `(name, label)` replaces the previous closure.
+    pub fn gauge_fn(
+        &self,
+        name: &'static str,
+        label: Option<(&'static str, String)>,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        let mut entries = self.entries.lock().expect("metrics registry poisoned");
+        if let Some(e) = entries
+            .iter_mut()
+            .find(|e| e.name == name && e.label == label && matches!(e.instrument, Instrument::GaugeFn(_)))
+        {
+            e.instrument = Instrument::GaugeFn(Box::new(f));
+            return;
+        }
+        entries.push(Entry { name, label, instrument: Instrument::GaugeFn(Box::new(f)) });
+    }
+
+    /// Render the exposition text: versioned header + sorted series.
+    pub fn render(&self) -> String {
+        let entries = self.entries.lock().expect("metrics registry poisoned");
+        let mut lines: Vec<(String, String, String)> = Vec::new();
+        for e in entries.iter() {
+            let (name, label) = e.series_key();
+            match &e.instrument {
+                Instrument::Counter(c) => {
+                    lines.push((name, label, c.get().to_string()));
+                }
+                Instrument::Gauge(g) => {
+                    lines.push((name, label, g.get().to_string()));
+                }
+                Instrument::GaugeFn(f) => {
+                    lines.push((name, label, format_f64(f())));
+                }
+                Instrument::Histogram(h) => {
+                    let s = h.snapshot();
+                    for (q, qs) in
+                        [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")]
+                    {
+                        let label = if label.is_empty() {
+                            format!("quantile={qs}")
+                        } else {
+                            format!("{label},quantile={qs}")
+                        };
+                        lines.push((name.clone(), label, s.quantile(q).to_string()));
+                    }
+                    lines.push((format!("{name}_count"), label.clone(), s.count.to_string()));
+                    lines.push((format!("{name}_sum"), label.clone(), s.sum.to_string()));
+                    lines.push((format!("{name}_max"), label, s.max.to_string()));
+                }
+            }
+        }
+        drop(entries);
+        lines.sort();
+        let mut out = String::with_capacity(64 + lines.len() * 48);
+        out.push_str(EXPOSITION_HEADER);
+        out.push('\n');
+        for (name, label, value) in lines {
+            out.push_str(&name);
+            if !label.is_empty() {
+                out.push('{');
+                for (i, pair) in label.split(',').enumerate() {
+                    let (k, v) = pair.split_once('=').expect("label built as k=v");
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(k);
+                    out.push_str("=\"");
+                    out.push_str(v);
+                    out.push('"');
+                }
+                out.push('}');
+            }
+            out.push(' ');
+            out.push_str(&value);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render a float without scientific notation and without trailing
+/// noise: integers print bare, fractions keep up to 3 decimals.
+fn format_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Parse one exposition line back into `(name, labels, value)`.
+/// Used by tests and the smoke scraper to validate the format; strict
+/// enough to reject truncated or mangled lines.
+pub fn parse_line(line: &str) -> Option<(&str, Vec<(&str, &str)>, f64)> {
+    let (series, value) = line.rsplit_once(' ')?;
+    let value: f64 = value.parse().ok()?;
+    let (name, labels) = match series.split_once('{') {
+        None => (series, Vec::new()),
+        Some((name, rest)) => {
+            let body = rest.strip_suffix('}')?;
+            let mut labels = Vec::new();
+            for pair in body.split(',') {
+                let (k, v) = pair.split_once("=\"")?;
+                labels.push((k, v.strip_suffix('"')?));
+            }
+            (name, labels)
+        }
+    };
+    if name.is_empty() || name.contains(|c: char| c.is_whitespace() || c == '{' || c == '}') {
+        return None;
+    }
+    Some((name, labels, value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_and_dedupe() {
+        let reg = MetricsRegistry::shared();
+        let a = reg.counter("frames_total", None);
+        let b = reg.counter("frames_total", None);
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4, "same (name,label) shares one cell");
+        let g = reg.gauge("conns_open", None);
+        g.set(7);
+        assert_eq!(reg.gauge("conns_open", None).get(), 7);
+        // Different labels are distinct series.
+        let ping = reg.counter("rpc_total", Some(("op", "ping".into())));
+        let stats = reg.counter("rpc_total", Some(("op", "stats".into())));
+        ping.inc();
+        assert_eq!(stats.get(), 0);
+    }
+
+    #[test]
+    fn render_is_versioned_sorted_and_parseable() {
+        let reg = MetricsRegistry::shared();
+        reg.counter("zz_last", None).add(9);
+        reg.counter("aa_first", Some(("op", "ping".into()))).add(2);
+        reg.gauge("gauge_plain", None).set(5);
+        reg.gauge_fn("bridged", Some(("tier", "dense".into())), || 12.5);
+        let h = reg.histogram("lat_ns", Some(("op", "ping".into())));
+        h.record(100);
+        h.record(200);
+        let text = reg.render();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some(EXPOSITION_HEADER));
+        let body: Vec<&str> = lines.collect();
+        let mut sorted = body.clone();
+        sorted.sort();
+        assert_eq!(body, sorted, "series must render sorted");
+        for line in &body {
+            assert!(parse_line(line).is_some(), "unparseable line: {line}");
+        }
+        assert!(text.contains("aa_first{op=\"ping\"} 2\n"));
+        assert!(text.contains("bridged{tier=\"dense\"} 12.5\n"));
+        assert!(text.contains("lat_ns_count{op=\"ping\"} 2\n"));
+        assert!(text.contains("lat_ns_sum{op=\"ping\"} 300\n"));
+        assert!(text.contains("lat_ns_max{op=\"ping\"} 200\n"));
+        assert!(text.contains("lat_ns{op=\"ping\",quantile=\"0.5\"} 100\n"));
+        assert!(text.contains("lat_ns{op=\"ping\",quantile=\"0.999\"} 200\n"));
+    }
+
+    #[test]
+    fn gauge_fn_reregistration_replaces() {
+        let reg = MetricsRegistry::shared();
+        reg.gauge_fn("lag", None, || 1.0);
+        reg.gauge_fn("lag", None, || 2.0);
+        let text = reg.render();
+        assert_eq!(text.matches("lag ").count(), 1, "one series, not two");
+        assert!(text.contains("lag 2\n"));
+    }
+
+    #[test]
+    fn parse_line_rejects_hostile_input() {
+        for bad in [
+            "",
+            "no_value",
+            "name{unterminated 3",
+            "name{k=\"v\" 3",
+            "name{k=v\"} 3",
+            "name not_a_number",
+            "{} 3",
+            "na me 3",
+        ] {
+            assert!(parse_line(bad).is_none(), "accepted hostile line: {bad:?}");
+        }
+        let (name, labels, v) = parse_line("rpc_ns{op=\"ping\",quantile=\"0.99\"} 1500").unwrap();
+        assert_eq!(name, "rpc_ns");
+        assert_eq!(labels, vec![("op", "ping"), ("quantile", "0.99")]);
+        assert_eq!(v, 1500.0);
+    }
+}

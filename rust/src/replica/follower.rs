@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use super::ReplicaCursor;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
+use crate::obs::{LatencyHistogram, MetricsRegistry};
 use crate::registry::{SketchDelta, SketchRegistry};
 use crate::server::protocol::{
     ErrorCode, FrameDecoder, ProtocolError, Request, Response, DELTA_WIRE_V3,
@@ -108,6 +109,13 @@ struct FollowerShared {
     reconnects: AtomicU64,
     halted: AtomicBool,
     last_error: Mutex<Option<String>>,
+    /// Seal-to-apply replication latency: wall-clock ns from the
+    /// primary sealing a batch (its `SEAL_TS` stamp on the v3 wire) to
+    /// this follower applying it. Registered into the wrapped server's
+    /// metrics as `replica_seal_to_apply_ns`; crosses processes, so the
+    /// two clocks must be roughly synchronized for absolute values
+    /// (trends survive skew).
+    seal_to_apply_ns: Arc<LatencyHistogram>,
 }
 
 impl FollowerShared {
@@ -159,8 +167,10 @@ impl FollowerServer {
         let shared = Arc::new(FollowerShared {
             epoch: AtomicU64::new(cursor.epoch),
             cursor: AtomicU64::new(cursor.seq),
+            seal_to_apply_ns: server.metrics().histogram("replica_seal_to_apply_ns", None),
             ..FollowerShared::default()
         });
+        register_replica_gauges(server.metrics(), &shared);
         let thread_stop = stop.clone();
         let thread_shared = shared.clone();
         let join = std::thread::Builder::new()
@@ -185,6 +195,14 @@ impl FollowerServer {
     /// The wrapped read-only server (for its serving stats).
     pub fn server(&self) -> &SketchServer {
         &self.server
+    }
+
+    /// The wrapped server's metrics registry — carries the `replica_*`
+    /// series (cursor, applied counts, seal-to-apply latency) alongside
+    /// the serving instruments, so one `MetricsDump` against the
+    /// follower's port reads the whole node.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        self.server.metrics()
     }
 
     /// Highest replication seq applied so far (within the current
@@ -245,6 +263,39 @@ impl Drop for FollowerServer {
     fn drop(&mut self) {
         self.stop_and_join();
     }
+}
+
+/// Bridge the follower's replication counters into the wrapped
+/// server's metrics registry as scrape-time gauges. The closures
+/// capture only `Arc<FollowerShared>`, which holds no reference back
+/// to the registry — no cycle.
+fn register_replica_gauges(metrics: &MetricsRegistry, shared: &Arc<FollowerShared>) {
+    let s = shared.clone();
+    metrics.gauge_fn("replica_cursor", None, move || s.cursor.load(Ordering::SeqCst) as f64);
+    let s = shared.clone();
+    metrics.gauge_fn("replica_batches_applied", None, move || {
+        s.batches_applied.load(Ordering::Relaxed) as f64
+    });
+    let s = shared.clone();
+    metrics.gauge_fn("replica_entries_applied", None, move || {
+        s.entries_applied.load(Ordering::Relaxed) as f64
+    });
+    let s = shared.clone();
+    metrics.gauge_fn("replica_tombstones_applied", None, move || {
+        s.tombstones_applied.load(Ordering::Relaxed) as f64
+    });
+    let s = shared.clone();
+    metrics.gauge_fn("replica_full_syncs", None, move || {
+        s.full_syncs.load(Ordering::Relaxed) as f64
+    });
+    let s = shared.clone();
+    metrics.gauge_fn("replica_reconnects", None, move || {
+        s.reconnects.load(Ordering::Relaxed) as f64
+    });
+    let s = shared.clone();
+    metrics.gauge_fn("replica_halted", None, move || {
+        s.halted.load(Ordering::SeqCst) as u8 as f64
+    });
 }
 
 /// Sleep `d` in small slices, returning early when `stop` is raised.
@@ -513,9 +564,17 @@ fn apply_frame(
                     return false;
                 }
             }
-            Response::DeltaBatchV3 { seq, entries } => {
+            Response::DeltaBatchV3 { seq, entries, seal_unix_ns } => {
                 if !apply_batch(registry, shared, seq, entries) {
                     return false;
+                }
+                // Batches from primaries new enough to stamp a seal
+                // time feed the cross-process replication-latency
+                // histogram (0 = unstamped legacy batch).
+                if seal_unix_ns != 0 {
+                    shared
+                        .seal_to_apply_ns
+                        .record(crate::obs::unix_time_ns().saturating_sub(seal_unix_ns));
                 }
             }
             Response::Error { code, message } => {

@@ -97,6 +97,11 @@ pub struct SealedBatch {
     /// Encoded entry size (bodies + per-entry wire overhead), used for
     /// retention accounting and the batch split cap.
     pub bytes: usize,
+    /// Wall-clock seal time (unix nanoseconds, [`crate::obs::unix_time_ns`]),
+    /// shipped as a trailing `SEAL_TS` wire entry so followers can
+    /// measure seal-to-apply replication latency across processes
+    /// (monotonic clocks don't travel).
+    pub sealed_unix_ns: u64,
 }
 
 /// Point-in-time log accounting.
@@ -348,7 +353,13 @@ impl ReplicationLog {
                 SketchDelta::GlobalDiff(_) => inner.sealed_global_diffs += 1,
             }
         }
-        inner.batches.push_back(Arc::new(SealedBatch { seq, clock, entries, bytes }));
+        inner.batches.push_back(Arc::new(SealedBatch {
+            seq,
+            clock,
+            entries,
+            bytes,
+            sealed_unix_ns: crate::obs::unix_time_ns(),
+        }));
         inner.retained_bytes += bytes;
         inner.sealed_batches += 1;
         inner.sealed_entries += n;
@@ -411,6 +422,25 @@ impl ReplicationLog {
             );
             std::thread::sleep(Duration::from_millis(1));
         }
+    }
+
+    /// How far a subscriber positioned at `cursor` (last applied seq)
+    /// trails the log head, as `(entries, bytes)` over the retained
+    /// batches past the cursor. Cursors that predate retention count
+    /// everything retained (a lower bound); cursors past the head count
+    /// zero. Feeds the primary's per-state replication-lag gauges.
+    pub fn lag_after(&self, cursor: u64) -> (u64, u64) {
+        let inner = self.lock();
+        let mut entries = 0u64;
+        let mut bytes = 0u64;
+        for batch in inner.batches.iter().rev() {
+            if batch.seq <= cursor {
+                break;
+            }
+            entries += batch.entries.len() as u64;
+            bytes += batch.bytes as u64;
+        }
+        (entries, bytes)
     }
 
     pub fn stats(&self) -> ReplicationLogStats {
@@ -494,6 +524,34 @@ mod tests {
             other => panic!("expected batch 2, got {other:?}"),
         }
         assert!(matches!(log.read_after(2), LogRead::CaughtUp));
+    }
+
+    #[test]
+    fn lag_after_counts_retained_entries_and_bytes_past_the_cursor() {
+        let reg = registry();
+        let log = ReplicationLog::new();
+        reg.ingest(1, &[1, 2, 3]);
+        reg.ingest(2, &[4, 5]);
+        log.capture(&reg, usize::MAX); // seq 1: two entries
+        reg.ingest(1, &[6]);
+        log.capture(&reg, usize::MAX); // seq 2: one entry
+
+        assert_eq!(log.lag_after(2), (0, 0), "at the head there is no lag");
+        let (e1, b1) = log.lag_after(1);
+        assert_eq!(e1, 1);
+        assert!(b1 > 0);
+        let (e0, b0) = log.lag_after(0);
+        assert_eq!(e0, 3);
+        assert!(b0 > b1, "a further-back cursor trails by strictly more bytes");
+        // Past the head (a cursor from another incarnation): zero, not
+        // a panic or an underflow.
+        assert_eq!(log.lag_after(99), (0, 0));
+        // Sealed batches carry a wall-clock seal stamp for the
+        // follower's seal-to-apply latency measure.
+        match log.read_after(0) {
+            LogRead::Batch(b) => assert!(b.sealed_unix_ns > 0),
+            other => panic!("expected batch 1, got {other:?}"),
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 use super::artifacts::Manifest;
 use super::client::{Result, RuntimeError, XlaRuntime};
 use crate::hll::HashKind;
+use crate::obs::{Counter, MetricsRegistry};
 use crate::registry::{RegistryStats, SketchRegistry};
 
 enum Request {
@@ -240,32 +241,86 @@ pub struct RegistryService {
     join: Option<JoinHandle<()>>,
 }
 
+/// Per-kind query counters for an instrumented [`RegistryService`].
+struct QueryCounters {
+    estimate: Counter,
+    global_estimate: Counter,
+    keys: Counter,
+    stats: Counter,
+    evict: Counter,
+}
+
+impl QueryCounters {
+    fn register(m: &MetricsRegistry) -> Self {
+        let kind = |k: &'static str| Some(("kind", k.to_string()));
+        Self {
+            estimate: m.counter("registry_service_queries_total", kind("estimate")),
+            global_estimate: m.counter("registry_service_queries_total", kind("global_estimate")),
+            keys: m.counter("registry_service_queries_total", kind("keys")),
+            stats: m.counter("registry_service_queries_total", kind("stats")),
+            evict: m.counter("registry_service_queries_total", kind("evict")),
+        }
+    }
+}
+
 impl RegistryService {
     pub fn start(registry: Arc<SketchRegistry<u64>>) -> Self {
+        Self::spawn(registry, None)
+    }
+
+    /// Like [`RegistryService::start`], but counts served queries per
+    /// kind into `metrics` (`registry_service_queries_total{kind=...}`).
+    pub fn start_with_metrics(
+        registry: Arc<SketchRegistry<u64>>,
+        metrics: &MetricsRegistry,
+    ) -> Self {
+        Self::spawn(registry, Some(QueryCounters::register(metrics)))
+    }
+
+    fn spawn(registry: Arc<SketchRegistry<u64>>, counters: Option<QueryCounters>) -> Self {
         let (tx, rx) = mpsc::channel::<RegistryRequest>();
         let join = std::thread::Builder::new()
             .name("registry-query".into())
-            .spawn(move || Self::serve(registry, rx))
+            .spawn(move || Self::serve(registry, rx, counters))
             .expect("spawn registry-query thread");
         Self { tx, join: Some(join) }
     }
 
-    fn serve(registry: Arc<SketchRegistry<u64>>, rx: mpsc::Receiver<RegistryRequest>) {
+    fn serve(
+        registry: Arc<SketchRegistry<u64>>,
+        rx: mpsc::Receiver<RegistryRequest>,
+        counters: Option<QueryCounters>,
+    ) {
         while let Ok(req) = rx.recv() {
             match req {
                 RegistryRequest::Estimate { key, reply } => {
+                    if let Some(c) = &counters {
+                        c.estimate.inc();
+                    }
                     let _ = reply.send(registry.estimate(&key));
                 }
                 RegistryRequest::GlobalEstimate { reply } => {
+                    if let Some(c) = &counters {
+                        c.global_estimate.inc();
+                    }
                     let _ = reply.send(registry.global_estimate());
                 }
                 RegistryRequest::Keys { reply } => {
+                    if let Some(c) = &counters {
+                        c.keys.inc();
+                    }
                     let _ = reply.send(registry.len());
                 }
                 RegistryRequest::Stats { reply } => {
+                    if let Some(c) = &counters {
+                        c.stats.inc();
+                    }
                     let _ = reply.send(registry.stats());
                 }
                 RegistryRequest::Evict { key, reply } => {
+                    if let Some(c) = &counters {
+                        c.evict.inc();
+                    }
                     let _ = reply.send(registry.evict(&key).is_some());
                 }
                 RegistryRequest::Shutdown => break,
@@ -373,6 +428,28 @@ mod tests {
         assert!(handle.evict(7).unwrap());
         assert!(!handle.evict(7).unwrap());
         assert_eq!(registry.len(), 1);
+    }
+
+    #[test]
+    fn instrumented_service_counts_queries_per_kind() {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            shards: 4,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        registry.ingest(1, &[1, 2, 3]);
+        let metrics = MetricsRegistry::shared();
+        let svc = RegistryService::start_with_metrics(registry, &metrics);
+        let handle = svc.handle();
+        handle.estimate(1).unwrap();
+        handle.estimate(2).unwrap();
+        handle.keys().unwrap();
+        // Drop joins the query thread, so every count is flushed.
+        drop(svc);
+        let text = metrics.render();
+        assert!(text.contains("registry_service_queries_total{kind=\"estimate\"} 2\n"), "{text}");
+        assert!(text.contains("registry_service_queries_total{kind=\"keys\"} 1\n"), "{text}");
+        assert!(text.contains("registry_service_queries_total{kind=\"evict\"} 0\n"), "{text}");
     }
 
     #[test]

@@ -365,6 +365,18 @@ impl SketchClient {
             other => Err(unexpected("SnapshotDone", &other)),
         }
     }
+
+    /// Scrape the server's metrics exposition: a versioned
+    /// `# hll-metrics v1` text of `name{label="v"} value` lines
+    /// (per-opcode latency quantiles, tick profiles, tier gauges,
+    /// replication lag). Served by primaries and read-only replicas
+    /// alike.
+    pub fn metrics_dump(&mut self) -> Result<String, ClientError> {
+        match self.call(&Request::MetricsDump)? {
+            Response::MetricsText(text) => Ok(text),
+            other => Err(unexpected("MetricsText", &other)),
+        }
+    }
 }
 
 fn unexpected(wanted: &'static str, got: &Response) -> ClientError {

@@ -10,8 +10,9 @@
 //! * [`protocol`] — the length-prefixed, versioned binary frame protocol
 //!   (`InsertBatch`, `Estimate`, `GlobalEstimate`, `MergeSketch` using
 //!   the seed-carrying sketch wire format v2, `Stats`, `Evict` with
-//!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`, plus the
-//!   replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
+//!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`,
+//!   `MetricsDump` — the [`crate::obs::MetricsRegistry`] exposition
+//!   scraped over the wire — plus the replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
 //!   `DeltaBatch` — wire-v3 typed delta entries: register diffs,
 //!   full sketches, eviction tombstones, global-union diffs), with
 //!   typed error frames, strict panic-free decoding, and the
@@ -28,7 +29,10 @@
 //!   timeouts and a connection cap, graceful shutdown that drains the
 //!   pollers, an optional background maintenance sweeper
 //!   ([`SweeperConfig`]: timer-driven TTL / wall-clock-TTL / budget
-//!   eviction), optional read-only replica mode, and — with
+//!   eviction), optional read-only replica mode, per-opcode latency /
+//!   payload histograms and event-loop tick profiles feeding the
+//!   process-wide metrics registry (plus rate-limited slow-request
+//!   WARN tracing, threshold via `HLL_SLOW_REQ_MS`), and — with
 //!   [`ServerConfig::replication`] — a replication primary role
 //!   (capture thread + `SUBSCRIBE` streams, see [`crate::replica`]);
 //! * [`client`] — a blocking [`SketchClient`] with batch pipelining

@@ -28,6 +28,7 @@
 //! | `SNAPSHOT`        | empty                                                 |
 //! | `SUBSCRIBE`       | epoch u64 · cursor u64 · wire u8 (epoch 0 or cursor 0 = bootstrap; else resume after this seq of that log incarnation; wire = newest delta format the subscriber reads, legacy 16-byte payloads imply 2) |
 //! | `REPLICA_ACK`     | cursor u64 (highest replication seq applied)          |
+//! | `METRICS_DUMP`    | empty                                                 |
 //!
 //! # Response payloads
 //!
@@ -44,6 +45,7 @@
 //! | `FULL_SYNC`             | epoch u64 · cursor u64 · len u32 · len × snapshot-format bytes |
 //! | `DELTA_BATCH`           | seq u64 · count u32 · count × (key u64 · len u32 · sketch wire-v2 bytes) |
 //! | `DELTA_BATCH_V3`        | seq u64 · count u32 · count × (key u64 · kind u8 · len u32 · len × body) |
+//! | `METRICS_TEXT`          | len u32 · len × utf-8 exposition bytes         |
 //! | `ERROR`                 | code u8 · msg_len u32 · msg_len × utf-8 bytes  |
 //!
 //! # Replication frames
@@ -71,6 +73,7 @@
 //! | 1    | `REGISTER_DIFF`| changed registers, [`crate::hll::encode_register_diff`] format |
 //! | 2    | `TOMBSTONE`    | empty (`len` must be 0) — the key was evicted  |
 //! | 3    | `GLOBAL_DIFF`  | changed registers of the *global union* sketch (key field ignored, encoded 0) |
+//! | 4    | `SEAL_TS`      | wall-clock seal timestamp, unix ns u64 (key 0; batch metadata, not a delta) |
 //!
 //! Followers apply a batch's entries **in order**: a key evicted and
 //! re-created between captures arrives as a tombstone immediately
@@ -117,6 +120,7 @@ pub mod opcodes {
     pub const SNAPSHOT: u8 = 0x08;
     pub const SUBSCRIBE: u8 = 0x09;
     pub const REPLICA_ACK: u8 = 0x0A;
+    pub const METRICS_DUMP: u8 = 0x0B;
 
     pub const PONG: u8 = 0x81;
     pub const INGESTED: u8 = 0x82;
@@ -129,7 +133,32 @@ pub mod opcodes {
     pub const FULL_SYNC: u8 = 0x89;
     pub const DELTA_BATCH: u8 = 0x8A;
     pub const DELTA_BATCH_V3: u8 = 0x8B;
+    pub const METRICS_TEXT: u8 = 0x8C;
     pub const ERROR: u8 = 0xEE;
+}
+
+/// Highest request opcode, bounding the server's per-opcode metric
+/// arrays (requests are contiguous from [`opcodes::PING`]).
+pub const REQUEST_OPCODE_MAX: u8 = opcodes::METRICS_DUMP;
+
+/// Human-readable label of a request opcode, used as the `op` metric
+/// label on per-opcode latency/size series. Stable static strings so
+/// registering series per opcode is allocation-free.
+pub fn request_opcode_name(opcode: u8) -> &'static str {
+    match opcode {
+        opcodes::PING => "ping",
+        opcodes::INSERT_BATCH => "insert_batch",
+        opcodes::ESTIMATE => "estimate",
+        opcodes::GLOBAL_ESTIMATE => "global_estimate",
+        opcodes::MERGE_SKETCH => "merge_sketch",
+        opcodes::STATS => "stats",
+        opcodes::EVICT => "evict",
+        opcodes::SNAPSHOT => "snapshot",
+        opcodes::SUBSCRIBE => "subscribe",
+        opcodes::REPLICA_ACK => "replica_ack",
+        opcodes::METRICS_DUMP => "metrics_dump",
+        _ => "unknown",
+    }
 }
 
 /// Entry kind tags of the `DELTA_BATCH_V3` payload (wire-v3 delta
@@ -148,6 +177,12 @@ pub mod delta_kind {
     /// key was evicted before the capture tick into followers'
     /// `GlobalEstimate`.
     pub const GLOBAL_DIFF: u8 = 3;
+    /// Body is the batch's wall-clock seal timestamp (unix nanoseconds,
+    /// u64 LE, so `len` must be 8); the key field is meaningless and
+    /// encoded as 0. Batch *metadata*, not a delta: followers use it to
+    /// measure seal-to-apply replication latency and never merge it.
+    /// At most one per batch, appended last by the encoder.
+    pub const SEAL_TS: u8 = 4;
 }
 
 /// Fixed wire overhead of one `DELTA_BATCH_V3` entry: key (8) + kind
@@ -280,6 +315,10 @@ pub enum Request {
     /// Follower → primary on a subscription stream: everything up to
     /// `cursor` has been applied (feeds the primary's ack window).
     ReplicaAck { cursor: u64 },
+    /// Scrape the server's metrics registry; answered with
+    /// [`Response::MetricsText`] (the versioned text exposition).
+    /// Allowed on read-only replicas — observability is not a mutation.
+    MetricsDump,
 }
 
 /// Registry accounting totals, flattened for the wire: per-tier key
@@ -339,7 +378,16 @@ pub enum Response {
     /// [`delta_kind`] and the module docs). Diff and full entries are
     /// idempotent max-merges; entries must be applied in order so
     /// tombstones sequence correctly against re-created keys.
-    DeltaBatchV3 { seq: u64, entries: Vec<(u64, SketchDelta)> },
+    /// `seal_unix_ns` is the batch's wall-clock seal timestamp (0 =
+    /// absent, e.g. frames from a pre-observability primary), carried
+    /// on the wire as a trailing [`delta_kind::SEAL_TS`] entry so the
+    /// follower can measure seal-to-apply replication latency.
+    DeltaBatchV3 { seq: u64, entries: Vec<(u64, SketchDelta)>, seal_unix_ns: u64 },
+    /// The metrics registry's text exposition (see
+    /// [`crate::obs::MetricsRegistry::render`]): versioned header line
+    /// plus sorted `name{label="v"} value` lines. Strictly utf-8 on the
+    /// wire — hostile bytes fail decode with a typed error.
+    MetricsText(String),
     Error { code: ErrorCode, message: String },
 }
 
@@ -375,12 +423,18 @@ pub fn encode_delta_batch(seq: u64, entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
 /// borrowed typed entries — the primary's subscriber-streaming hot path
 /// (batches are shared `Arc`s across subscribers; no entry clone per
 /// send).
-pub fn encode_delta_batch_v3(seq: u64, entries: &[(u64, SketchDelta)]) -> Vec<u8> {
-    let payload_len =
-        12 + entries.iter().map(|(_, d)| DELTA_ENTRY_OVERHEAD + d.body_len()).sum::<usize>();
+pub fn encode_delta_batch_v3(
+    seq: u64,
+    entries: &[(u64, SketchDelta)],
+    seal_unix_ns: u64,
+) -> Vec<u8> {
+    let seal = if seal_unix_ns != 0 { 1usize } else { 0 };
+    let payload_len = 12
+        + entries.iter().map(|(_, d)| DELTA_ENTRY_OVERHEAD + d.body_len()).sum::<usize>()
+        + seal * (DELTA_ENTRY_OVERHEAD + 8);
     let mut payload = Vec::with_capacity(payload_len);
     payload.extend_from_slice(&seq.to_le_bytes());
-    payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    payload.extend_from_slice(&((entries.len() + seal) as u32).to_le_bytes());
     for (key, delta) in entries {
         payload.extend_from_slice(&key.to_le_bytes());
         let (kind, body): (u8, &[u8]) = match delta {
@@ -392,6 +446,15 @@ pub fn encode_delta_batch_v3(seq: u64, entries: &[(u64, SketchDelta)]) -> Vec<u8
         payload.push(kind);
         payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
         payload.extend_from_slice(body);
+    }
+    if seal != 0 {
+        // Trailing metadata entry: the seal timestamp. Appended last so
+        // legacy-minded decoders that apply in order see all real
+        // deltas first.
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.push(delta_kind::SEAL_TS);
+        payload.extend_from_slice(&8u32.to_le_bytes());
+        payload.extend_from_slice(&seal_unix_ns.to_le_bytes());
     }
     frame(opcodes::DELTA_BATCH_V3, &payload)
 }
@@ -447,6 +510,7 @@ impl Request {
             Request::ReplicaAck { cursor } => {
                 frame(opcodes::REPLICA_ACK, &cursor.to_le_bytes())
             }
+            Request::MetricsDump => frame(opcodes::METRICS_DUMP, &[]),
         }
     }
 
@@ -514,6 +578,7 @@ impl Request {
                 Request::Subscribe { epoch, cursor, wire }
             }
             opcodes::REPLICA_ACK => Request::ReplicaAck { cursor: r.u64()? },
+            opcodes::METRICS_DUMP => Request::MetricsDump,
             other => return Err(ProtocolError::BadOpcode(other)),
         };
         r.finish()?;
@@ -553,6 +618,7 @@ impl Response {
             Response::FullSync { .. } => "FullSync",
             Response::DeltaBatch { .. } => "DeltaBatch",
             Response::DeltaBatchV3 { .. } => "DeltaBatchV3",
+            Response::MetricsText(_) => "MetricsText",
             Response::Error { .. } => "Error",
         }
     }
@@ -604,7 +670,16 @@ impl Response {
                 frame(opcodes::FULL_SYNC, &payload)
             }
             Response::DeltaBatch { seq, entries } => encode_delta_batch(*seq, entries),
-            Response::DeltaBatchV3 { seq, entries } => encode_delta_batch_v3(*seq, entries),
+            Response::DeltaBatchV3 { seq, entries, seal_unix_ns } => {
+                encode_delta_batch_v3(*seq, entries, *seal_unix_ns)
+            }
+            Response::MetricsText(text) => {
+                let bytes = text.as_bytes();
+                let mut payload = Vec::with_capacity(4 + bytes.len());
+                payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                payload.extend_from_slice(bytes);
+                frame(opcodes::METRICS_TEXT, &payload)
+            }
             Response::Error { code, message } => {
                 let msg = message.as_bytes();
                 let mut payload = Vec::with_capacity(5 + msg.len());
@@ -680,6 +755,7 @@ impl Response {
                     )));
                 }
                 let mut entries = Vec::with_capacity(count as usize);
+                let mut seal_unix_ns = 0u64;
                 for _ in 0..count {
                     let key = r.u64()?;
                     let kind = r.u8()?;
@@ -700,6 +776,18 @@ impl Response {
                             }
                             SketchDelta::Tombstone
                         }
+                        delta_kind::SEAL_TS => {
+                            // Batch metadata, not a delta: capture the
+                            // timestamp and keep it out of `entries`.
+                            if len != 8 {
+                                return Err(ProtocolError::Malformed(format!(
+                                    "seal timestamp entry declares a {len}-byte body (want 8)"
+                                )));
+                            }
+                            let body: [u8; 8] = r.bytes(8)?.try_into().unwrap();
+                            seal_unix_ns = u64::from_le_bytes(body);
+                            continue;
+                        }
                         other => {
                             return Err(ProtocolError::Malformed(format!(
                                 "unknown delta entry kind {other}"
@@ -708,7 +796,14 @@ impl Response {
                     };
                     entries.push((key, delta));
                 }
-                Response::DeltaBatchV3 { seq, entries }
+                Response::DeltaBatchV3 { seq, entries, seal_unix_ns }
+            }
+            opcodes::METRICS_TEXT => {
+                let len = r.u32()? as usize;
+                let text = String::from_utf8(r.bytes(len)?.to_vec()).map_err(|_| {
+                    ProtocolError::Malformed("metrics exposition not utf-8".into())
+                })?;
+                Response::MetricsText(text)
             }
             opcodes::ERROR => {
                 let code = r.u8()?;
@@ -1056,6 +1151,7 @@ mod tests {
             wire: DELTA_WIRE_V2,
         });
         roundtrip_request(Request::ReplicaAck { cursor: 12345 });
+        roundtrip_request(Request::MetricsDump);
     }
 
     #[test]
@@ -1116,7 +1212,11 @@ mod tests {
             seq: 77,
             entries: vec![(1, vec![1, 2, 3]), (u64::MAX, vec![]), (9, vec![0; 64])],
         });
-        roundtrip_response(Response::DeltaBatchV3 { seq: 0, entries: vec![] });
+        roundtrip_response(Response::DeltaBatchV3 {
+            seq: 0,
+            entries: vec![],
+            seal_unix_ns: 0,
+        });
         roundtrip_response(Response::DeltaBatchV3 {
             seq: 91,
             entries: vec![
@@ -1125,7 +1225,19 @@ mod tests {
                 (2, SketchDelta::RegisterDiff(vec![1, 2, 3, 4, 5])),
                 (u64::MAX, SketchDelta::Tombstone),
             ],
+            seal_unix_ns: 0,
         });
+        // The seal timestamp rides as a trailing metadata entry and
+        // roundtrips without polluting `entries`.
+        roundtrip_response(Response::DeltaBatchV3 {
+            seq: 92,
+            entries: vec![(1, SketchDelta::Full(vec![7]))],
+            seal_unix_ns: 1_722_000_000_000_000_000,
+        });
+        roundtrip_response(Response::MetricsText(String::new()));
+        roundtrip_response(Response::MetricsText(
+            "# hll-metrics v1\nrpc_total{op=\"ping\"} 3\n".into(),
+        ));
         roundtrip_response(Response::Error {
             code: ErrorCode::ConfigMismatch,
             message: "seed mismatch".into(),
@@ -1200,6 +1312,7 @@ mod tests {
                 (2, SketchDelta::Tombstone),
                 (3, SketchDelta::RegisterDiff(vec![9])),
             ],
+            seal_unix_ns: 0,
         }
         .encode();
         let payload = &good[FRAME_HEADER_LEN..];
@@ -1275,14 +1388,54 @@ mod tests {
             (5, SketchDelta::RegisterDiff(vec![2, 2])), // diff right after a tombstone
             (5, SketchDelta::Tombstone),                // and dead again
         ];
-        let frame = Response::DeltaBatchV3 { seq: 8, entries: entries.clone() }.encode();
+        let frame =
+            Response::DeltaBatchV3 { seq: 8, entries: entries.clone(), seal_unix_ns: 0 }
+                .encode();
         match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
-            Response::DeltaBatchV3 { seq, entries: got } => {
+            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns } => {
                 assert_eq!(seq, 8);
                 assert_eq!(got, entries, "order and duplicates must survive the wire");
+                assert_eq!(seal_unix_ns, 0);
             }
             other => panic!("expected DeltaBatchV3, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn seal_timestamp_and_metrics_text_hostile_payloads_are_typed_errors() {
+        // A seal entry whose body is not exactly 8 bytes is rejected.
+        let mut bad_seal = 9u64.to_le_bytes().to_vec(); // seq
+        bad_seal.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        bad_seal.extend_from_slice(&0u64.to_le_bytes()); // key 0
+        bad_seal.push(delta_kind::SEAL_TS);
+        bad_seal.extend_from_slice(&4u32.to_le_bytes()); // 4-byte body
+        bad_seal.extend_from_slice(&[1, 2, 3, 4]);
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &bad_seal),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // METRICS_TEXT with non-utf-8 bytes is a typed error, not a panic.
+        let mut bad_text = 4u32.to_le_bytes().to_vec();
+        bad_text.extend_from_slice(&[0xFF, 0xFE, 0x80, 0x00]);
+        assert!(matches!(
+            Response::decode(opcodes::METRICS_TEXT, &bad_text),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A declared length overrunning the payload is rejected.
+        let mut overrun = 100u32.to_le_bytes().to_vec();
+        overrun.extend_from_slice(b"short");
+        assert!(matches!(
+            Response::decode(opcodes::METRICS_TEXT, &overrun),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Trailing bytes past the declared text are rejected.
+        let good = Response::MetricsText("ok".into()).encode();
+        let mut padded = good[FRAME_HEADER_LEN..].to_vec();
+        padded.push(0);
+        assert!(matches!(
+            Response::decode(opcodes::METRICS_TEXT, &padded),
+            Err(ProtocolError::Malformed(_))
+        ));
     }
 
     #[test]
@@ -1537,11 +1690,14 @@ mod tests {
             (0, SketchDelta::GlobalDiff(vec![1, 2, 3, 4, 5])),
             (5, SketchDelta::Tombstone),
         ];
-        let frame = Response::DeltaBatchV3 { seq: 3, entries: entries.clone() }.encode();
+        let frame =
+            Response::DeltaBatchV3 { seq: 3, entries: entries.clone(), seal_unix_ns: 7_777 }
+                .encode();
         match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
-            Response::DeltaBatchV3 { seq, entries: got } => {
+            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns } => {
                 assert_eq!(seq, 3);
                 assert_eq!(got, entries);
+                assert_eq!(seal_unix_ns, 7_777, "seal timestamp must survive the wire");
             }
             other => panic!("expected DeltaBatchV3, got {other:?}"),
         }

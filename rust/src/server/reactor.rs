@@ -181,6 +181,86 @@ pub fn waker_pair() -> io::Result<(Waker, WakeRx)> {
     Ok((Waker { tx }, WakeRx { rx }))
 }
 
+/// Per-event-loop tick profiler: where does a loop's wall time go?
+///
+/// Each tick splits into *wait* (blocked in `poll(2)`) and *work*
+/// (dispatching ready connections, pumping subscribers, reaping). Both
+/// land in lock-free [`LatencyHistogram`]s, ready-event counts per tick
+/// land in a third, and a saturation gauge reports
+/// `work / (work + wait)` in permille over an exponentially decayed
+/// window — the "is this loop the bottleneck?" number the C100K roadmap
+/// item gates on. Recording is a handful of relaxed atomics per tick;
+/// only the loop thread calls [`TickProfile::tick`], scrapers read the
+/// shared histograms.
+#[derive(Debug)]
+pub struct TickProfile {
+    poll_wait_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
+    work_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
+    ready_events: std::sync::Arc<crate::obs::LatencyHistogram>,
+    saturation_permille: crate::obs::Gauge,
+    /// Decayed accumulators (loop-thread-local; plain fields would do,
+    /// but keeping the struct `Sync` costs nothing).
+    busy_ns_acc: std::sync::atomic::AtomicU64,
+    wait_ns_acc: std::sync::atomic::AtomicU64,
+}
+
+/// Decay window for the saturation gauge: once busy+wait exceeds ~5 s,
+/// both halve, so the gauge tracks recent load instead of the lifetime
+/// average.
+const SATURATION_WINDOW_NS: u64 = 5_000_000_000;
+
+impl TickProfile {
+    /// Register this loop's tick series into `metrics` under a
+    /// `loop="N"` label.
+    pub fn register(metrics: &crate::obs::MetricsRegistry, loop_idx: usize) -> Self {
+        let label = loop_label(loop_idx);
+        let l = || Some(("loop", label.to_string()));
+        Self {
+            poll_wait_ns: metrics.histogram("loop_poll_wait_ns", l()),
+            work_ns: metrics.histogram("loop_work_ns", l()),
+            ready_events: metrics.histogram("loop_ready_events", l()),
+            saturation_permille: metrics.gauge("loop_saturation_permille", l()),
+            busy_ns_acc: std::sync::atomic::AtomicU64::new(0),
+            wait_ns_acc: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed tick: `work` spent dispatching before the
+    /// poll, `wait` blocked inside it, `ready` descriptors it returned.
+    pub fn tick(&self, work: Duration, wait: Duration, ready: usize) {
+        use std::sync::atomic::Ordering;
+        let work_ns = work.as_nanos().min(u64::MAX as u128) as u64;
+        let wait_ns = wait.as_nanos().min(u64::MAX as u128) as u64;
+        self.work_ns.record(work_ns);
+        self.poll_wait_ns.record(wait_ns);
+        self.ready_events.record(ready as u64);
+        // Exponentially decayed busy fraction: halve both accumulators
+        // whenever the window fills, then publish permille.
+        let mut busy = self.busy_ns_acc.load(Ordering::Relaxed) + work_ns;
+        let mut wait_acc = self.wait_ns_acc.load(Ordering::Relaxed) + wait_ns;
+        if busy + wait_acc > SATURATION_WINDOW_NS {
+            busy /= 2;
+            wait_acc /= 2;
+        }
+        self.busy_ns_acc.store(busy, Ordering::Relaxed);
+        self.wait_ns_acc.store(wait_acc, Ordering::Relaxed);
+        let total = busy + wait_acc;
+        if total > 0 {
+            self.saturation_permille.set(busy * 1_000 / total);
+        }
+    }
+}
+
+/// Static label for a loop index ("0".."15", then "n" — metric labels
+/// are `&'static str`, and 16 loops is already past the configured
+/// maximum anyone runs).
+fn loop_label(i: usize) -> &'static str {
+    const LABELS: [&str; 16] = [
+        "0", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15",
+    ];
+    LABELS.get(i).copied().unwrap_or("n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

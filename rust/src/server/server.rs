@@ -76,12 +76,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::protocol::{
-    encode_delta_batch, encode_delta_batch_v3, ErrorCode, EvictPolicy, FrameDecoder,
-    FrameEncoder, Request, Response, StatsSummary, DELTA_WIRE_V3, MAX_PAYLOAD,
+    encode_delta_batch, encode_delta_batch_v3, opcodes, request_opcode_name, ErrorCode,
+    EvictPolicy, FrameDecoder, FrameEncoder, Request, Response, StatsSummary, DELTA_WIRE_V3,
+    MAX_PAYLOAD, REQUEST_OPCODE_MAX,
 };
-use super::reactor::{self, Poller, WakeRx, Waker};
+use super::reactor::{self, Poller, TickProfile, WakeRx, Waker};
 use super::snapshot;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
+use crate::obs::{Counter, Gauge, LatencyHistogram, MetricsRegistry};
 use crate::registry::{SketchDelta, SketchRegistry};
 use crate::replica::{LogRead, ReplicationConfig, ReplicationLog, SealedBatch};
 
@@ -184,6 +186,11 @@ pub struct ServerConfig {
     /// a quiet primary is legitimately silent. `None` (default) keeps
     /// idle connections forever, matching the old server.
     pub idle_timeout: Option<Duration>,
+    /// Dispatches slower than this emit a rate-limited warn line (and
+    /// always bump the `rpc_slow_requests_total` counter). The default
+    /// reads the `HLL_SLOW_REQ_MS` env var (milliseconds); unset means
+    /// no threshold and no tracing.
+    pub slow_request_threshold: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -196,6 +203,10 @@ impl Default for ServerConfig {
             event_loop_threads: 1,
             max_connections: 4096,
             idle_timeout: None,
+            slow_request_threshold: std::env::var("HLL_SLOW_REQ_MS")
+                .ok()
+                .and_then(|v| v.trim().parse::<u64>().ok())
+                .map(Duration::from_millis),
         }
     }
 }
@@ -229,21 +240,132 @@ pub struct ServerStatsSnapshot {
     /// `FULL_SYNC` frames streamed to subscribers (bootstraps plus
     /// stale-cursor fallbacks).
     pub full_syncs_sent: u64,
+    /// Sketches accepted through `MERGE_SKETCH`.
+    pub sketches_merged: u64,
+    /// Keys evicted through the `Evict` RPC and ingest-piggybacked
+    /// budget enforcement (the background sweeper's own evictions are
+    /// `keys_swept`).
+    pub keys_evicted: u64,
 }
 
-#[derive(Debug, Default)]
+/// Serving counters. Every field is a [`MetricsRegistry`] handle, so
+/// the same cells feed both [`SketchServer::stats`] and the
+/// `MetricsDump` exposition — no double accounting. The handles deref
+/// to `AtomicU64`, so hot-path sites use `fetch_add`/`fetch_max`
+/// directly.
+#[derive(Debug)]
 struct ServerStats {
-    connections: AtomicU64,
-    connections_open: AtomicU64,
-    connections_peak: AtomicU64,
-    frames: AtomicU64,
-    partial_frames_resumed: AtomicU64,
-    words_ingested: AtomicU64,
-    error_frames: AtomicU64,
-    sweeps: AtomicU64,
-    keys_swept: AtomicU64,
-    delta_batches_sent: AtomicU64,
-    full_syncs_sent: AtomicU64,
+    connections: Counter,
+    connections_open: Gauge,
+    connections_peak: Gauge,
+    frames: Counter,
+    partial_frames_resumed: Counter,
+    words_ingested: Counter,
+    error_frames: Counter,
+    sweeps: Counter,
+    keys_swept: Counter,
+    delta_batches_sent: Counter,
+    full_syncs_sent: Counter,
+    sketches_merged: Counter,
+    keys_evicted: Counter,
+}
+
+impl ServerStats {
+    fn register(m: &MetricsRegistry) -> Self {
+        Self {
+            connections: m.counter("server_connections_total", None),
+            connections_open: m.gauge("server_connections_open", None),
+            connections_peak: m.gauge("server_connections_peak", None),
+            frames: m.counter("server_frames_total", None),
+            partial_frames_resumed: m.counter("server_partial_frames_resumed_total", None),
+            words_ingested: m.counter("server_words_ingested_total", None),
+            error_frames: m.counter("server_error_frames_total", None),
+            sweeps: m.counter("server_sweeps_total", None),
+            keys_swept: m.counter("server_keys_swept_total", None),
+            delta_batches_sent: m.counter("server_delta_batches_sent_total", None),
+            full_syncs_sent: m.counter("server_full_syncs_sent_total", None),
+            sketches_merged: m.counter("server_sketches_merged_total", None),
+            keys_evicted: m.counter("server_keys_evicted_total", None),
+        }
+    }
+}
+
+/// Per-opcode RPC instrumentation: one latency histogram, payload-size
+/// histogram, and request counter per request opcode, pre-registered at
+/// server start so the dispatch path is a bare array index — no name
+/// lookup, no lock.
+#[derive(Debug)]
+struct RpcMetrics {
+    latency_ns: [Arc<LatencyHistogram>; REQUEST_OPCODE_MAX as usize],
+    payload_bytes: [Arc<LatencyHistogram>; REQUEST_OPCODE_MAX as usize],
+    total: [Counter; REQUEST_OPCODE_MAX as usize],
+    slow_requests: Counter,
+    /// Wall-clock ns of the last slow-request warn (rate limiting).
+    last_slow_warn_ns: AtomicU64,
+}
+
+/// Minimum spacing between slow-request warn lines: the counter sees
+/// every slow dispatch, the log sees at most ten per second.
+const SLOW_WARN_EVERY_NS: u64 = 100_000_000;
+
+impl RpcMetrics {
+    fn register(m: &MetricsRegistry) -> Self {
+        let op = |i: usize| Some(("op", request_opcode_name(i as u8 + 1).to_string()));
+        Self {
+            latency_ns: std::array::from_fn(|i| m.histogram("rpc_latency_ns", op(i))),
+            payload_bytes: std::array::from_fn(|i| m.histogram("rpc_payload_bytes", op(i))),
+            total: std::array::from_fn(|i| m.counter("rpc_total", op(i))),
+            slow_requests: m.counter("rpc_slow_requests_total", None),
+            last_slow_warn_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Instrument slot for a request opcode (`None` for unknown bytes —
+    /// those still answer a typed error, they just have no series).
+    fn idx(opcode: u8) -> Option<usize> {
+        (1..=REQUEST_OPCODE_MAX).contains(&opcode).then(|| (opcode - 1) as usize)
+    }
+
+    /// One dispatched frame: bump the per-opcode series and, past the
+    /// configured threshold, the slow-request path (counter always,
+    /// warn line rate-limited).
+    fn observe(&self, cfg: &ServerConfig, opcode: u8, payload: &[u8], elapsed: Duration) {
+        let Some(i) = Self::idx(opcode) else { return };
+        let elapsed_ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.total[i].inc();
+        self.payload_bytes[i].record(payload.len() as u64);
+        self.latency_ns[i].record(elapsed_ns);
+        let Some(threshold) = cfg.slow_request_threshold else { return };
+        if elapsed < threshold {
+            return;
+        }
+        self.slow_requests.inc();
+        let now = crate::obs::unix_time_ns();
+        let last = self.last_slow_warn_ns.load(Ordering::Relaxed);
+        if now.saturating_sub(last) >= SLOW_WARN_EVERY_NS
+            && self
+                .last_slow_warn_ns
+                .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            // The one payload whose item count is knowable without a
+            // full decode: INSERT_BATCH is key (8) + word count (4) + words.
+            let words = if opcode == opcodes::INSERT_BATCH && payload.len() >= 12 {
+                u32::from_le_bytes(payload[8..12].try_into().expect("4-byte slice")) as u64
+            } else {
+                0
+            };
+            crate::log_warn!(
+                "server",
+                "slow request: op={} words={} payload={}B took {:.3}ms (threshold {:.3}ms)",
+                request_opcode_name(opcode),
+                words,
+                payload.len(),
+                elapsed_ns as f64 / 1e6,
+                threshold.as_secs_f64() * 1e3
+            );
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -252,6 +374,19 @@ struct Shared {
     cfg: ServerConfig,
     stop: AtomicBool,
     stats: ServerStats,
+    /// Every instrument this server exposes (stats handles, per-opcode
+    /// RPC series, loop tick profiles, bridged registry/replication
+    /// gauges). `MetricsDump` renders it. Bridge closures registered
+    /// into it must never capture `Arc<Shared>` — that would cycle
+    /// through this field and leak the server.
+    metrics: Arc<MetricsRegistry>,
+    /// Per-opcode dispatch instrumentation.
+    rpc: RpcMetrics,
+    /// Highest cursor any subscriber has acked — the most-advanced
+    /// follower, so the bridged lag gauges are a lower bound when
+    /// several followers subscribe. Shared with the replication-lag
+    /// `gauge_fn` closures (hence the `Arc`, see `metrics` above).
+    acked_seq: Arc<AtomicU64>,
     /// Present iff this server is a replication primary.
     log: Option<Arc<ReplicationLog>>,
     /// One waker per event loop: the capture thread and shutdown kick
@@ -308,11 +443,17 @@ impl SketchServer {
             wakers.push(w);
             wake_rxs.push(r);
         }
+        let metrics = MetricsRegistry::shared();
+        let acked_seq = Arc::new(AtomicU64::new(0));
+        register_bridges(&metrics, &registry, log.as_ref(), &acked_seq);
         let shared = Arc::new(Shared {
             registry,
             cfg,
             stop: AtomicBool::new(false),
-            stats: ServerStats::default(),
+            stats: ServerStats::register(&metrics),
+            rpc: RpcMetrics::register(&metrics),
+            metrics,
+            acked_seq,
             log,
             wakers,
         });
@@ -353,6 +494,7 @@ impl SketchServer {
                 wake_rx,
                 intake,
                 routes: if i == 0 { routes.clone() } else { Vec::new() },
+                profile: TickProfile::register(&shared.metrics, i),
             };
             let loop_shared = shared.clone();
             loop_joins.push(
@@ -390,7 +532,24 @@ impl SketchServer {
             keys_swept: s.keys_swept.load(Ordering::Relaxed),
             delta_batches_sent: s.delta_batches_sent.load(Ordering::Relaxed),
             full_syncs_sent: s.full_syncs_sent.load(Ordering::Relaxed),
+            sketches_merged: s.sketches_merged.load(Ordering::Relaxed),
+            keys_evicted: s.keys_evicted.load(Ordering::Relaxed),
         }
+    }
+
+    /// The server's instrument registry: per-opcode RPC series, loop
+    /// tick profiles, bridged registry/replication gauges and the
+    /// serving counters. Benches and tests fetch live handles from it
+    /// (same `(name, label)` returns the same cell).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.shared.metrics
+    }
+
+    /// Render the metrics exposition text (same bytes the
+    /// `MetricsDump` RPC answers) without a connection — the in-process
+    /// side channel for embedding servers.
+    pub fn metrics_text(&self) -> String {
+        self.shared.metrics.render()
     }
 
     /// The replication log this primary seals delta batches into
@@ -425,6 +584,55 @@ impl Drop for SketchServer {
     fn drop(&mut self) {
         self.stop_and_join();
     }
+}
+
+/// Bridge pre-existing subsystem stats into the metrics registry as
+/// scrape-time gauges, so the exposition carries per-tier key counts,
+/// resident bytes and replication lag without a second set of counters
+/// to keep in sync. The closures capture only the subsystem `Arc`s
+/// (never `Shared`, which owns the registry — see [`Shared::metrics`]).
+fn register_bridges(
+    metrics: &MetricsRegistry,
+    registry: &Arc<SketchRegistry<u64>>,
+    log: Option<&Arc<ReplicationLog>>,
+    acked_seq: &Arc<AtomicU64>,
+) {
+    let tier = |t: &'static str| Some(("tier", t.to_string()));
+    let r = registry.clone();
+    metrics.gauge_fn("registry_keys", None, move || r.stats().keys() as f64);
+    let r = registry.clone();
+    metrics.gauge_fn("registry_tier_keys", tier("sparse"), move || {
+        r.stats().sparse_keys() as f64
+    });
+    let r = registry.clone();
+    metrics.gauge_fn("registry_tier_keys", tier("packed"), move || {
+        r.stats().packed_keys() as f64
+    });
+    let r = registry.clone();
+    metrics.gauge_fn("registry_tier_keys", tier("dense"), move || {
+        r.stats().dense_keys() as f64
+    });
+    let r = registry.clone();
+    metrics.gauge_fn("registry_memory_bytes", None, move || r.stats().memory_bytes() as f64);
+    let r = registry.clone();
+    metrics.gauge_fn("registry_words_total", None, move || r.stats().words() as f64);
+    let Some(log) = log else { return };
+    let l = log.clone();
+    metrics.gauge_fn("replication_latest_seq", None, move || l.latest_seq() as f64);
+    let l = log.clone();
+    metrics.gauge_fn("replication_retained_bytes", None, move || {
+        l.stats().retained_bytes as f64
+    });
+    let l = log.clone();
+    let acked = acked_seq.clone();
+    metrics.gauge_fn("replication_lag_entries", None, move || {
+        l.lag_after(acked.load(Ordering::Relaxed)).0 as f64
+    });
+    let l = log.clone();
+    let acked = acked_seq.clone();
+    metrics.gauge_fn("replication_lag_bytes", None, move || {
+        l.lag_after(acked.load(Ordering::Relaxed)).1 as f64
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -471,6 +679,9 @@ struct LoopParts {
     intake: mpsc::Receiver<TcpStream>,
     /// Round-robin routing targets (accepting loop only; empty elsewhere).
     routes: Vec<mpsc::Sender<TcpStream>>,
+    /// This loop's tick instrumentation (poll-wait vs dispatch time,
+    /// ready events per tick, saturation gauge).
+    profile: TickProfile,
 }
 
 fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
@@ -484,6 +695,9 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
     // backlog's level-triggered readability cannot hot-spin the loop —
     // and no connection pays a sleep for it.
     let mut accept_backoff: Option<Instant> = None;
+    // Tick profiling: everything between two polls is "work", the poll
+    // itself is "wait". The first tick's work window opens here.
+    let mut work_started = Instant::now();
 
     loop {
         if shared.stop.load(Ordering::SeqCst) {
@@ -564,7 +778,10 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
             poller.register(conn.stream.as_raw_fd(), idx, readable, writable);
         }
         // (6) Wait for readiness (or the tick).
-        if poller.poll(Some(POLL_TICK)).is_err() {
+        let poll_started = Instant::now();
+        let polled = poller.poll(Some(POLL_TICK));
+        let waited = poll_started.elapsed();
+        if polled.is_err() {
             // Transient poll failure: back off instead of hot-spinning.
             std::thread::sleep(Duration::from_millis(5));
             continue;
@@ -572,6 +789,12 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
         // (7) Handle events. Level-triggered semantics: anything not
         // finished this pass is re-reported next poll.
         let ready: Vec<reactor::Readiness> = poller.ready().collect();
+        parts.profile.tick(
+            poll_started.duration_since(work_started),
+            waited,
+            ready.len(),
+        );
+        work_started = Instant::now();
         for r in ready {
             match r.token {
                 TOKEN_WAKER => parts.wake_rx.drain(),
@@ -714,9 +937,24 @@ fn on_readable(conn: &mut Conn, shared: &Shared, buf: &mut [u8]) {
     }
 }
 
+/// Queue one reply frame, counting `error_frames` at this single choke
+/// point. Every reply path must come through here: the old per-site
+/// `fetch_add`s drifted (replies built outside `handle_rpc_frame` —
+/// full-sync overflows, subscriber-pump failures — each needed their
+/// own bump, and adding a site silently under-counted until someone
+/// noticed).
+fn queue_reply(conn: &mut Conn, shared: &Shared, resp: Response) {
+    if matches!(resp, Response::Error { .. }) {
+        shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+    }
+    conn.encoder.push(resp.encode());
+}
+
 /// Dispatch every complete frame the decoder holds, honoring the
 /// backpressure pause (RPC mode) and the closing latch. Also rolls the
-/// decoder's resumed-frame count into the server stats.
+/// decoder's resumed-frame count into the server stats, and times each
+/// frame from dispatch start to reply queued for the per-opcode
+/// latency series.
 fn process_frames(conn: &mut Conn, shared: &Shared) {
     loop {
         if conn.closing || conn.dead {
@@ -734,22 +972,24 @@ fn process_frames(conn: &mut Conn, shared: &Shared) {
             Err(e) => {
                 // Framing is broken; resync is impossible. Answer once,
                 // then drop the connection (after the flush).
-                shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-                conn.encoder.push(
-                    Response::Error { code: ErrorCode::Malformed, message: e.to_string() }
-                        .encode(),
+                queue_reply(
+                    conn,
+                    shared,
+                    Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
                 );
                 conn.closing = true;
                 break;
             }
         };
         shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+        let dispatched = Instant::now();
         match conn.mode {
             ConnMode::Rpc => handle_rpc_frame(conn, shared, opcode, &payload),
             ConnMode::Subscriber { .. } => {
                 handle_subscriber_frame(conn, shared, opcode, &payload)
             }
         }
+        shared.rpc.observe(&shared.cfg, opcode, &payload, dispatched.elapsed());
     }
     shared
         .stats
@@ -792,10 +1032,7 @@ fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]
         Ok(req) => dispatch(req, shared),
         Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
     };
-    if matches!(resp, Response::Error { .. }) {
-        shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-    }
-    conn.encoder.push(resp.encode());
+    queue_reply(conn, shared, resp);
 }
 
 /// One complete frame on a subscriber stream: only `REPLICA_ACK` is
@@ -807,19 +1044,22 @@ fn handle_subscriber_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload
                 // Clamp to what was actually sent: a buggy follower
                 // cannot push the window past reality.
                 *acked = (*acked).max(cursor.min(*sent));
+                // Feed the bridged replication-lag gauges: lag is
+                // measured from the most-advanced follower's ack.
+                shared.acked_seq.fetch_max(*acked, Ordering::Relaxed);
             }
             if let Some(log) = shared.log.clone() {
                 pump_subscriber(conn, shared, &log);
             }
         }
         _ => {
-            shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-            conn.encoder.push(
+            queue_reply(
+                conn,
+                shared,
                 Response::Error {
                     code: ErrorCode::Malformed,
                     message: "only ReplicaAck frames are valid on a subscription stream".into(),
-                }
-                .encode(),
+                },
             );
             conn.closing = true;
         }
@@ -839,8 +1079,9 @@ fn push_full_sync(conn: &mut Conn, shared: &Shared, log: &ReplicationLog) -> boo
     let body = snapshot::snapshot_to_vec(&shared.registry);
     // A FULL_SYNC payload is epoch (8) + cursor (8) + len (4) + body.
     if body.len() as u64 + 20 > MAX_PAYLOAD as u64 {
-        shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-        conn.encoder.push(
+        queue_reply(
+            conn,
+            shared,
             Response::Error {
                 code: ErrorCode::Internal,
                 message: format!(
@@ -848,8 +1089,7 @@ fn push_full_sync(conn: &mut Conn, shared: &Shared, log: &ReplicationLog) -> boo
                      bootstrap this follower from a snapshot file",
                     body.len()
                 ),
-            }
-            .encode(),
+            },
         );
         conn.closing = true;
         return false;
@@ -883,8 +1123,9 @@ fn pump_subscriber(conn: &mut Conn, shared: &Shared, log: &Arc<ReplicationLog>) 
                     // Only legacy renderings can overflow; a v2
                     // follower cannot take this batch in any form, and
                     // Internal is in its terminal-halt set.
-                    shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
-                    conn.encoder.push(
+                    queue_reply(
+                        conn,
+                        shared,
                         Response::Error {
                             code: ErrorCode::Internal,
                             message: format!(
@@ -892,8 +1133,7 @@ fn pump_subscriber(conn: &mut Conn, shared: &Shared, log: &Arc<ReplicationLog>) 
                                  follower to delta wire v3 or bootstrap it from a snapshot",
                                 batch.seq
                             ),
-                        }
-                        .encode(),
+                        },
                     );
                     conn.closing = true;
                     return;
@@ -1070,7 +1310,7 @@ pub(crate) fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) 
 /// header parser would reject on every reconnect forever.
 fn encode_batch_for_wire(batch: &SealedBatch, wire: u8) -> Option<Vec<u8>> {
     if wire >= DELTA_WIRE_V3 {
-        return Some(encode_delta_batch_v3(batch.seq, &batch.entries));
+        return Some(encode_delta_batch_v3(batch.seq, &batch.entries, batch.sealed_unix_ns));
     }
     let mut legacy: Vec<(u64, Vec<u8>)> = Vec::with_capacity(batch.entries.len());
     let mut total = 12u64;
@@ -1135,26 +1375,44 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
             if registry.config().max_memory_bytes.is_some()
                 && shared.stats.frames.load(Ordering::Relaxed) % BUDGET_ENFORCE_EVERY == 0
             {
-                registry.enforce_budget();
+                let evicted = registry.enforce_budget();
+                shared.stats.keys_evicted.fetch_add(evicted as u64, Ordering::Relaxed);
             }
             Response::Ingested { words: n }
         }
         Request::Estimate { key } => Response::Estimate(registry.estimate(&key)),
         Request::GlobalEstimate => Response::GlobalEstimate(registry.global_estimate()),
         Request::MergeSketch { key, bytes } => match HllSketch::from_bytes(&bytes) {
-            Ok(sketch) => match registry.merge_sketch(key, sketch) {
-                Ok(()) => Response::Merged,
-                Err(e @ SketchError::ConfigMismatch(..)) => Response::Error {
-                    code: ErrorCode::ConfigMismatch,
-                    message: e.to_string(),
-                },
-                Err(e) => {
-                    Response::Error { code: ErrorCode::Malformed, message: e.to_string() }
+            Ok(sketch) => {
+                // Stats-drift fix: merged sketches used to bypass the
+                // ingest counter entirely, so a merge-heavy workload
+                // reported near-zero ingest. The wire carries no word
+                // count, so credit the sketch's own cardinality
+                // estimate — a documented lower bound (overlap with
+                // already-ingested words is invisible).
+                let approx_words = sketch.estimate().round().max(0.0) as u64;
+                match registry.merge_sketch(key, sketch) {
+                    Ok(()) => {
+                        shared.stats.sketches_merged.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.words_ingested.fetch_add(approx_words, Ordering::Relaxed);
+                        Response::Merged
+                    }
+                    Err(e @ SketchError::ConfigMismatch(..)) => Response::Error {
+                        code: ErrorCode::ConfigMismatch,
+                        message: e.to_string(),
+                    },
+                    Err(e) => {
+                        Response::Error { code: ErrorCode::Malformed, message: e.to_string() }
+                    }
                 }
-            },
+            }
             Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
         },
         Request::Stats => Response::Stats(StatsSummary::from(&registry.stats())),
+        // Served on read-only replicas too (it is how their lag is
+        // observed); renders every registered instrument, including the
+        // scrape-time bridged gauges.
+        Request::MetricsDump => Response::MetricsText(shared.metrics.render()),
         Request::Evict(policy) => {
             let keys = match policy {
                 EvictPolicy::Key(key) => registry.evict(&key).is_some() as u64,
@@ -1170,6 +1428,7 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
                     registry.evict_idle_wall(Duration::from_secs(max_age_secs)) as u64
                 }
             };
+            shared.stats.keys_evicted.fetch_add(keys, Ordering::Relaxed);
             Response::Evicted { keys }
         }
         Request::Snapshot => match &shared.cfg.snapshot_path {

@@ -1,0 +1,222 @@
+//! Observability end-to-end: a live primary + follower pair scraped
+//! over the wire (`MetricsDump` RPC). Verifies the exposition carries
+//! per-opcode latency quantiles, event-loop tick profiles, per-tier
+//! registry gauges, and replication-lag gauges on the primary plus
+//! `replica_*` series (including seal-to-apply lag) on the follower —
+//! and pins the stats-drift fixes (MergeSketch feeds the ingest
+//! counters; hostile frames count exactly once).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use hll_fpga::hll::HllSketch;
+use hll_fpga::net::KeyedFlowGen;
+use hll_fpga::obs::registry::parse_line;
+use hll_fpga::obs::EXPOSITION_HEADER;
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::replica::{FollowerConfig, FollowerServer, ReplicationConfig};
+use hll_fpga::server::{
+    protocol, ErrorCode, Response, ServerConfig, SketchClient, SketchServer,
+};
+
+/// Exact-series lookup: the value of the line whose full series key
+/// (name + rendered labels) equals `series`.
+fn metric(text: &str, series: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let (s, v) = l.rsplit_once(' ')?;
+        if s == series {
+            v.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+/// Header + every line machine-parseable.
+fn assert_well_formed(text: &str) {
+    let mut lines = text.lines();
+    assert_eq!(lines.next(), Some(EXPOSITION_HEADER), "exposition must lead with the header");
+    for line in lines {
+        assert!(parse_line(line).is_some(), "unparseable exposition line {line:?}");
+    }
+}
+
+#[test]
+fn metrics_dump_covers_primary_and_follower() {
+    let cfg = RegistryConfig { shards: 16, ..RegistryConfig::default() };
+    let primary_reg = SketchRegistry::shared(cfg).unwrap();
+    let primary = SketchServer::start(
+        "127.0.0.1:0",
+        primary_reg.clone(),
+        ServerConfig {
+            replication: Some(ReplicationConfig {
+                capture_interval: Duration::from_millis(5),
+                ..ReplicationConfig::default()
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let log = primary.replication_log().unwrap();
+    let follower_reg = SketchRegistry::shared(cfg).unwrap();
+    let follower = FollowerServer::start(
+        "127.0.0.1:0",
+        primary.local_addr(),
+        follower_reg,
+        FollowerConfig::default(),
+    )
+    .unwrap();
+
+    // Mixed traffic: a zipf-keyed stream, one heavy tenant that
+    // promotes past sparse, a sketch merge, and reads.
+    let mut client = SketchClient::connect(primary.local_addr()).unwrap();
+    client.ping().unwrap();
+    let batches = KeyedFlowGen::new(100, 1.07, 0x0B5).batched(20_000, usize::MAX);
+    client.pipeline_insert(&batches).unwrap();
+    let heavy: Vec<u32> = (0..60_000).collect();
+    for chunk in heavy.chunks(8_192) {
+        client.insert_batch(9_999, chunk).unwrap();
+    }
+    let mut local = HllSketch::paper();
+    for v in 0..2_000u32 {
+        local.insert_u32(v.wrapping_mul(2_654_435_761));
+    }
+    client.merge_sketch(77, &local).unwrap();
+    client.estimate(9_999).unwrap();
+    client.global_estimate().unwrap();
+    let stats = client.stats().unwrap();
+
+    // Let replication drain so the follower-side series are live.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while primary_reg.dirty_keys() > 0 || follower.cursor() < log.latest_seq() {
+        assert!(Instant::now() < deadline, "replication never drained");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // --- Primary scrape, over the wire.
+    let text = client.metrics_dump().unwrap();
+    assert_well_formed(&text);
+
+    // Per-opcode latency quantiles and counters.
+    for op in ["ping", "insert_batch", "merge_sketch", "estimate", "stats"] {
+        let q99 = metric(&text, &format!("rpc_latency_ns{{op=\"{op}\",quantile=\"0.99\"}}"))
+            .unwrap_or_else(|| panic!("missing p99 latency for {op}"));
+        assert!(q99 > 0.0, "p99 latency for {op} must be nonzero");
+        let total = metric(&text, &format!("rpc_total{{op=\"{op}\"}}")).unwrap();
+        assert!(total >= 1.0, "rpc_total for {op} must count the traffic");
+    }
+    let frames = metric(&text, "rpc_latency_ns_count{op=\"insert_batch\"}").unwrap();
+    assert!(frames as u64 >= batches.len() as u64, "every insert frame must be timed");
+    assert!(
+        metric(&text, "rpc_payload_bytes{op=\"insert_batch\",quantile=\"0.5\"}").unwrap() > 0.0
+    );
+
+    // Event-loop tick profile: loop 0 polled and did work.
+    assert!(metric(&text, "loop_poll_wait_ns_count{loop=\"0\"}").unwrap() > 0.0);
+    assert!(metric(&text, "loop_work_ns{loop=\"0\",quantile=\"0.99\"}").unwrap() > 0.0);
+    assert!(metric(&text, "loop_ready_events_count{loop=\"0\"}").unwrap() > 0.0);
+    let sat = metric(&text, "loop_saturation_permille{loop=\"0\"}").unwrap();
+    assert!((0.0..=1_000.0).contains(&sat), "saturation must be a permille ({sat})");
+
+    // Per-tier registry gauges agree with the Stats RPC.
+    assert_eq!(metric(&text, "registry_keys").unwrap() as u64, stats.keys);
+    let tiers: f64 = ["sparse", "packed", "dense"]
+        .iter()
+        .map(|t| metric(&text, &format!("registry_tier_keys{{tier=\"{t}\"}}")).unwrap())
+        .sum();
+    assert_eq!(tiers as u64, stats.keys, "tier gauges must partition the key population");
+    assert!(metric(&text, "registry_memory_bytes").unwrap() > 0.0);
+    assert_eq!(metric(&text, "registry_words_total").unwrap() as u64, stats.words);
+
+    // Replication gauges: the log sealed batches and the follower's
+    // acks pulled the lag down to (or near) zero.
+    assert!(metric(&text, "replication_latest_seq").unwrap() >= 1.0);
+    assert!(metric(&text, "replication_lag_entries").is_some());
+    assert!(metric(&text, "replication_lag_bytes").is_some());
+    assert!(metric(&text, "server_delta_batches_sent_total").unwrap() >= 1.0);
+
+    // --- Follower scrape, also over the wire (it serves reads).
+    let mut fclient = SketchClient::connect(follower.local_addr()).unwrap();
+    let ftext = fclient.metrics_dump().unwrap();
+    assert_well_formed(&ftext);
+    assert!(metric(&ftext, "replica_cursor").unwrap() >= 1.0);
+    assert!(metric(&ftext, "replica_batches_applied").unwrap() >= 1.0);
+    assert!(metric(&ftext, "replica_entries_applied").unwrap() >= 1.0);
+    assert_eq!(metric(&ftext, "replica_halted").unwrap(), 0.0);
+    let lag_samples = metric(&ftext, "replica_seal_to_apply_ns_count").unwrap();
+    assert!(lag_samples >= 1.0, "seal-to-apply lag must have samples");
+    assert!(
+        metric(&ftext, "replica_seal_to_apply_ns{quantile=\"0.99\"}").unwrap() > 0.0,
+        "p99 seal-to-apply lag must be nonzero"
+    );
+
+    follower.shutdown();
+    primary.shutdown();
+}
+
+#[test]
+fn merge_sketch_feeds_the_ingest_counters() {
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 16,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    let server =
+        SketchServer::start("127.0.0.1:0", registry, ServerConfig::default()).unwrap();
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    let mut local = HllSketch::paper();
+    for v in 0..5_000u32 {
+        local.insert_u32(v.wrapping_mul(2_654_435_761));
+    }
+    client.merge_sketch(7, &local).unwrap();
+    let s = server.stats();
+    assert_eq!(s.sketches_merged, 1);
+    // The merge credits the sketch's estimated cardinality as a words
+    // floor — before the fix this path left words_ingested at zero.
+    assert!(
+        s.words_ingested >= 4_000,
+        "merge must credit ingested words (got {})",
+        s.words_ingested
+    );
+
+    // A failed merge (truncated bytes) counts an error, not a merge.
+    assert!(client.merge_sketch_bytes(8, &[1, 2, 3]).is_err());
+    let s = server.stats();
+    assert_eq!(s.sketches_merged, 1);
+    assert_eq!(s.error_frames, 1);
+
+    // The same cells back the exposition — no double accounting.
+    let text = client.metrics_dump().unwrap();
+    assert_eq!(metric(&text, "server_sketches_merged_total").unwrap(), 1.0);
+    assert_eq!(metric(&text, "server_error_frames_total").unwrap(), 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn hostile_frames_count_exactly_once() {
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 16,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    let server =
+        SketchServer::start("127.0.0.1:0", registry, ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    // One bad-magic frame → exactly one typed error frame → exactly one
+    // tick of the centralized error counter.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"XX\x01\x01\x00\x00\x00\x00").unwrap();
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Malformed),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+    assert_eq!(server.stats().error_frames, 1, "one hostile frame, one error count");
+    let text = server.metrics_text();
+    assert_eq!(metric(&text, "server_error_frames_total").unwrap(), 1.0);
+    server.shutdown();
+}

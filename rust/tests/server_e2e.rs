@@ -357,6 +357,43 @@ fn background_sweeper_evicts_idle_keys_on_a_timer() {
 }
 
 #[test]
+fn per_opcode_rpc_counters_match_traffic() {
+    let (server, _registry) = start_server(ServerConfig::default());
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
+
+    client.ping().unwrap();
+    client.ping().unwrap();
+    client.insert_batch(1, &[1, 2, 3]).unwrap();
+    client.estimate(1).unwrap();
+    client.global_estimate().unwrap();
+    client.stats().unwrap();
+
+    // The dump itself is timed *after* it renders, so scrape twice: the
+    // second dump sees the first one counted.
+    client.metrics_dump().unwrap();
+    let text = client.metrics_dump().unwrap();
+    let count = |series: &str| -> u64 {
+        text.lines()
+            .find_map(|l| {
+                let (s, v) = l.rsplit_once(' ')?;
+                if s == series { v.parse().ok() } else { None }
+            })
+            .unwrap_or_else(|| panic!("missing series {series}"))
+    };
+    assert_eq!(count("rpc_total{op=\"ping\"}"), 2);
+    assert_eq!(count("rpc_total{op=\"insert_batch\"}"), 1);
+    assert_eq!(count("rpc_total{op=\"estimate\"}"), 1);
+    assert_eq!(count("rpc_total{op=\"global_estimate\"}"), 1);
+    assert_eq!(count("rpc_total{op=\"stats\"}"), 1);
+    assert_eq!(count("rpc_total{op=\"metrics_dump\"}"), 1);
+    assert_eq!(count("rpc_total{op=\"evict\"}"), 0);
+    // Latency histograms saw the same frames the counters did.
+    assert_eq!(count("rpc_latency_ns_count{op=\"ping\"}"), 2);
+    assert_eq!(count("rpc_payload_bytes_count{op=\"insert_batch\"}"), 1);
+    server.shutdown();
+}
+
+#[test]
 fn snapshot_rpc_unsupported_without_path() {
     let (server, _registry) = start_server(ServerConfig::default());
     let mut client = SketchClient::connect(server.local_addr()).unwrap();
