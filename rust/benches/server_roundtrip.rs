@@ -10,6 +10,22 @@ use hll_fpga::net::KeyedFlowGen;
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
 use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
 
+/// Server-side per-request latency for the mode just run, read from
+/// the server's live metrics registry (no scrape round trip).
+fn latency_line(mode: &str, server: &SketchServer) -> String {
+    let lat = server
+        .metrics()
+        .histogram("rpc_latency_ns", Some(("op", "insert_batch".to_string())))
+        .snapshot();
+    format!(
+        "  insert_batch latency ({mode}, {} frames): p50={}ns p99={}ns max={}ns",
+        lat.count,
+        lat.quantile(0.50),
+        lat.quantile(0.99),
+        lat.max
+    )
+}
+
 fn main() {
     let b = bench_main("server roundtrip — remote vs in-process keyed ingest");
     let words: usize = if quick_mode() { 50_000 } else { 500_000 };
@@ -37,12 +53,12 @@ fn main() {
     println!("{}", m.report_line());
     let reference = registry.merge_all();
 
-    // --- Remote: one server, one client, a real loopback socket.
+    // --- Remote: a real loopback socket. Each mode gets a fresh
+    // server so its live `rpc_latency_ns` histogram — the same cells
+    // `MetricsDump` exposes — is that mode's distribution alone.
     let server =
         SketchServer::start("127.0.0.1:0", registry.clone(), ServerConfig::default()).unwrap();
-    let addr = server.local_addr();
-
-    let mut client = SketchClient::connect(addr).unwrap();
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
     let m = b.run_items("remote ingest, one RTT per batch", words as u64, || {
         registry.clear();
         for (key, ws) in &batches {
@@ -50,12 +66,19 @@ fn main() {
         }
     });
     println!("{}", m.report_line());
+    println!("{}", latency_line("one RTT per batch", &server));
+    drop(client);
+    server.shutdown();
 
+    let server =
+        SketchServer::start("127.0.0.1:0", registry.clone(), ServerConfig::default()).unwrap();
+    let mut client = SketchClient::connect(server.local_addr()).unwrap();
     let m = b.run_items("remote ingest, pipelined flight", words as u64, || {
         registry.clear();
         client.pipeline_insert(&batches).unwrap();
     });
     println!("{}", m.report_line());
+    println!("{}", latency_line("pipelined flight", &server));
 
     // Acceptance: the remote path produced register-identical state.
     registry.clear();

@@ -10,12 +10,15 @@
 //!   N seconds from a background thread while the demo runs.
 //! - `--smoke`: after the demo queries, scrape metrics over the wire
 //!   (`MetricsDump` RPC), validate every line of the exposition, and
-//!   exit nonzero if any expected series is missing or malformed.
+//!   exit nonzero if any expected series is missing or malformed —
+//!   then run the trace gate: negotiate tracing, stamp one traced
+//!   ingest, pull the flight recorder over `TraceDump`, and validate
+//!   the request's span chain.
 
 use std::sync::Arc;
 
 use hll_fpga::net::KeyedFlowGen;
-use hll_fpga::obs::EXPOSITION_HEADER;
+use hll_fpga::obs::{EventKind, Stage, EXPOSITION_HEADER};
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
 use hll_fpga::server::{EvictPolicy, ServerConfig, SketchClient, SketchServer};
 use hll_fpga::util::fmt::{count, TextTable};
@@ -59,6 +62,64 @@ fn metrics_smoke(client: &mut SketchClient) {
         }
     }
     println!("metrics smoke: {parsed} series lines parsed, all expected series present");
+}
+
+/// Trace gate: negotiate tracing on the live connection, stamp one
+/// traced ingest, pull the flight recorder over the `TraceDump` RPC,
+/// and validate the request's span chain — every stage present under
+/// the stamped trace id, each begin paired with an end, begins
+/// monotonic. Exits the process on failure so CI can run this as a
+/// gate.
+fn trace_smoke(client: &mut SketchClient) {
+    match client.negotiate_tracing() {
+        Ok(true) => {}
+        Ok(false) => {
+            eprintln!("trace smoke FAILED: live server refused the tracing probe");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("trace smoke FAILED: negotiation error: {e}");
+            std::process::exit(1);
+        }
+    }
+    let (_, trace_id) =
+        client.insert_batch_traced(424_242, &[1, 2, 3, 4, 5]).expect("traced ingest");
+    if trace_id == 0 {
+        eprintln!("trace smoke FAILED: negotiated connection stamped no trace id");
+        std::process::exit(1);
+    }
+    let events = client.trace_dump().expect("trace dump RPC");
+    let chain = [Stage::ClientSend, Stage::Decode, Stage::Dispatch, Stage::ShardIngest];
+    let mut prev_begin = 0u64;
+    for stage in chain {
+        let begin = events.iter().find(|e| {
+            e.trace_id == trace_id && e.stage == stage as u8 && e.kind == EventKind::Begin as u8
+        });
+        let Some(begin) = begin else {
+            eprintln!("trace smoke FAILED: missing {} begin for trace {trace_id:016x}", stage.name());
+            std::process::exit(1);
+        };
+        let end = events.iter().find(|e| {
+            e.trace_id == trace_id && e.stage == stage as u8 && e.kind == EventKind::End as u8
+        });
+        let Some(end) = end else {
+            eprintln!("trace smoke FAILED: missing {} end for trace {trace_id:016x}", stage.name());
+            std::process::exit(1);
+        };
+        if end.ns < begin.ns {
+            eprintln!("trace smoke FAILED: {} span ends before it begins", stage.name());
+            std::process::exit(1);
+        }
+        if begin.ns < prev_begin {
+            eprintln!("trace smoke FAILED: {} began before its upstream stage", stage.name());
+            std::process::exit(1);
+        }
+        prev_begin = begin.ns;
+    }
+    println!(
+        "trace smoke: trace {trace_id:016x} spans client_send -> decode -> dispatch -> \
+         shard_ingest, begins monotonic"
+    );
 }
 
 fn main() {
@@ -130,6 +191,7 @@ fn main() {
     );
     if smoke {
         metrics_smoke(&mut client);
+        trace_smoke(&mut client);
     }
 
     // 4. Lifecycle over RPC: TTL sweep + memory budget.

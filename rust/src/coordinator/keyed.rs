@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use super::config::CoordinatorConfig;
 use super::metrics::{Metrics, MetricsSnapshot};
+use crate::obs::{Span, Stage};
 use crate::registry::SketchRegistry;
 
 /// Per-worker report for a keyed run.
@@ -75,6 +76,10 @@ fn run_keyed_worker(
     let mut busy = std::time::Duration::ZERO;
     while let Ok(mut batch) = rx.recv() {
         let t0 = Instant::now();
+        // Untraced span (keyed batches carry no wire trace context):
+        // with the flight recorder armed, per-batch worker_ingest
+        // begin/end pairs still land in this thread's ring.
+        let _span = Span::enter(Stage::WorkerIngest, 0).with_payload(batch.len() as u64);
         // Group by the precomputed shard (register updates commute, so
         // the unstable sort's reordering cannot change any sketch) and
         // ingest each run under one shard-lock acquisition.

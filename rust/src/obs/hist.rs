@@ -223,6 +223,38 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_quantile_inputs_never_panic_or_lie() {
+        // Empty snapshot: every q, including hostile ones, reads 0.
+        let empty = LatencyHistogram::default().snapshot();
+        for q in [0.0, 0.5, 1.0, -5.0, 7.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(empty.quantile(q), 0, "empty histogram must read 0 at q={q}");
+        }
+        assert_eq!(empty.max, 0);
+        assert_eq!(empty.sum, 0);
+        assert_eq!(empty.mean(), 0.0);
+
+        // One sample: every quantile is that sample, out-of-range q
+        // clamps instead of indexing past the distribution.
+        let h = LatencyHistogram::default();
+        h.record(1234);
+        let one = h.snapshot();
+        for q in [0.0, 0.5, 1.0, -1.0, 2.0, f64::NAN] {
+            assert_eq!(one.quantile(q), 1234, "single-sample quantile at q={q}");
+        }
+        assert_eq!(one.mean(), 1234.0);
+
+        // Boundary values record without panicking and max stays exact.
+        let h = LatencyHistogram::default();
+        h.record(0);
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max, u64::MAX);
+        assert_eq!(s.quantile(0.0), 0);
+        assert_eq!(s.quantile(1.0), u64::MAX);
+    }
+
+    #[test]
     fn quantiles_within_relative_error() {
         let h = LatencyHistogram::default();
         // A deterministic spread over five decades.

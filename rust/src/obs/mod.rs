@@ -1,23 +1,35 @@
-//! Observability: lock-free latency histograms and a process metrics
-//! registry with a Prometheus-style text exposition.
+//! Observability: lock-free latency histograms, a process metrics
+//! registry with a Prometheus-style text exposition, and a
+//! request-scoped tracing layer backed by an in-memory flight recorder.
 //!
 //! The subsystem is dependency-free and allocation-free on the hot
 //! path: recording a latency is a handful of relaxed atomic ops into a
-//! log-bucketed histogram ([`LatencyHistogram`]), and counters/gauges
-//! are plain `AtomicU64`s behind cheap cloneable handles. All readout
-//! cost (bucket walks, quantile interpolation, text rendering) is paid
-//! by the scraper, never by the recording thread.
+//! log-bucketed histogram ([`LatencyHistogram`]), counters/gauges are
+//! plain `AtomicU64`s behind cheap cloneable handles, and a trace
+//! [`Span`] is a stack guard writing fixed-size events into a
+//! per-thread overwrite-oldest ring ([`recorder`]) — one relaxed load
+//! when tracing is off. All readout cost (bucket walks, quantile
+//! interpolation, text rendering, ring merges) is paid by the scraper,
+//! never by the recording thread.
 //!
 //! Every subsystem registers its instruments into a shared
 //! [`MetricsRegistry`]; [`MetricsRegistry::render`] emits a versioned
 //! `name{label="v"} value` text format served over the `MetricsDump`
-//! RPC and the `SketchServer::metrics_text` side channel.
+//! RPC and the `SketchServer::metrics_text` side channel. Trace events
+//! are served over the `TraceDump` RPC and frozen into the recorder's
+//! bounded black box on anomalies ([`recorder::note_anomaly`]).
 
 pub mod hist;
+pub mod recorder;
 pub mod registry;
+pub mod trace;
 
 pub use hist::{HistSnapshot, LatencyHistogram};
 pub use registry::{Counter, Gauge, MetricsRegistry, EXPOSITION_HEADER};
+pub use trace::{
+    decode_trace_ctx, encode_trace_ctx, monotonic_ns, next_trace_id, render_events, EventKind,
+    Span, Stage, StageTimers, TraceEvent, TRACE_CTX_LEN, TRACE_EVENT_WIRE_LEN, TRACE_FLAG_SAMPLED,
+};
 
 /// Wall-clock nanoseconds since the UNIX epoch. Used to stamp sealed
 /// replication batches so the follower can measure seal-to-apply

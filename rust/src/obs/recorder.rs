@@ -1,0 +1,407 @@
+//! The in-memory flight recorder: per-thread overwrite-oldest rings of
+//! [`TraceEvent`]s plus a bounded anomaly "black box".
+//!
+//! Design constraints, in order:
+//!
+//! * **Disabled is free.** Recording starts with one relaxed
+//!   [`AtomicBool`] load; when the recorder is off (the default — the
+//!   server enables it at startup) that branch is the *entire* cost, and
+//!   no thread-local ring is ever allocated.
+//! * **Enabled is lock-free and allocation-free.** Each recording
+//!   thread owns a fixed [`RING_CAPACITY`]-slot ring (leased from a
+//!   global free-list on first record, returned at thread exit so
+//!   short-lived threads reuse rings and a dead thread's events stay
+//!   readable). A push is four relaxed/release atomic stores into a
+//!   pre-allocated slot — no locks, no heap, overwrite-oldest.
+//! * **Readers never stall writers.** [`snapshot`] walks the rings
+//!   without stopping them; a slot being overwritten mid-read is
+//!   skipped via its validity word rather than torn. The dump is
+//!   best-effort by design — it is a flight recorder, not a log.
+//!
+//! The black box ([`note_anomaly`]) freezes the most recent ring
+//! contents when something goes wrong — slow-request warnings, typed
+//! error replies, follower halts — into a bounded deque retrievable
+//! after the fact via [`anomalies`], so the events leading up to an
+//! incident survive the ring overwriting them.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use super::trace::TraceEvent;
+
+/// Events each recording thread retains (per-thread ring slots).
+pub const RING_CAPACITY: usize = 1024;
+
+/// Anomaly snapshots retained before the oldest is dropped.
+pub const BLACK_BOX_CAPACITY: usize = 8;
+
+/// Most-recent events frozen into each anomaly snapshot.
+pub const ANOMALY_EVENT_CAPACITY: usize = 256;
+
+/// Global gate. Off by default so library users pay one relaxed load;
+/// `SketchServer::start` turns it on.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the recorder capturing ring events?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable or disable ring capture. Cheap and safe at any time; events
+/// recorded while disabled are dropped before touching any ring.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Slot validity flag in the packed meta word (bit 63; stage and kind
+/// live in bits 15..8 and 7..0).
+const SLOT_VALID: u64 = 1 << 63;
+
+/// One ring slot: the event fields plus a packed meta word written last
+/// (release) so readers accept only fully written slots.
+struct Slot {
+    ns: AtomicU64,
+    trace_id: AtomicU64,
+    payload: AtomicU64,
+    meta: AtomicU64,
+}
+
+/// A single thread's event ring. Exactly one thread writes (the lease
+/// holder); any thread may read via [`snapshot`].
+struct Ring {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    /// Lease flag: set while a live thread owns this ring, cleared at
+    /// thread exit so the next new thread reuses it. Contents persist
+    /// across leases — a dead thread's tail stays dumpable.
+    in_use: AtomicBool,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        let slots = (0..RING_CAPACITY)
+            .map(|_| Slot {
+                ns: AtomicU64::new(0),
+                trace_id: AtomicU64::new(0),
+                payload: AtomicU64::new(0),
+                meta: AtomicU64::new(0),
+            })
+            .collect();
+        Ring { slots, head: AtomicU64::new(0), in_use: AtomicBool::new(true) }
+    }
+
+    /// Overwrite-oldest push. Single-writer: only the leasing thread
+    /// calls this, so the head bump and field stores never race another
+    /// writer; the meta word is cleared first and re-armed last so a
+    /// concurrent reader skips the slot instead of stitching halves of
+    /// two events together.
+    fn push(&self, e: TraceEvent) {
+        let idx = (self.head.fetch_add(1, Ordering::Relaxed) as usize) % RING_CAPACITY;
+        let slot = &self.slots[idx];
+        slot.meta.store(0, Ordering::Release);
+        slot.ns.store(e.ns, Ordering::Relaxed);
+        slot.trace_id.store(e.trace_id, Ordering::Relaxed);
+        slot.payload.store(e.payload, Ordering::Relaxed);
+        slot.meta.store(
+            SLOT_VALID | ((e.stage as u64) << 8) | e.kind as u64,
+            Ordering::Release,
+        );
+    }
+
+    /// Append every valid slot's event to `out` (unordered; the caller
+    /// sorts the merged set by timestamp).
+    fn events_into(&self, out: &mut Vec<TraceEvent>) {
+        for slot in self.slots.iter() {
+            let meta = slot.meta.load(Ordering::Acquire);
+            if meta & SLOT_VALID == 0 {
+                continue;
+            }
+            out.push(TraceEvent {
+                ns: slot.ns.load(Ordering::Relaxed),
+                trace_id: slot.trace_id.load(Ordering::Relaxed),
+                payload: slot.payload.load(Ordering::Relaxed),
+                stage: ((meta >> 8) & 0xFF) as u8,
+                kind: (meta & 0xFF) as u8,
+            });
+        }
+    }
+}
+
+/// All rings ever created, live or leased-out. The mutex guards only
+/// registration and snapshot — never a record.
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Reuse a free ring or register a fresh one for this thread.
+fn acquire_ring() -> Arc<Ring> {
+    let mut rings = lock_unpoisoned(rings());
+    for ring in rings.iter() {
+        if ring
+            .in_use
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            return ring.clone();
+        }
+    }
+    let ring = Arc::new(Ring::new());
+    rings.push(ring.clone());
+    ring
+}
+
+/// Returns the ring to the free-list when the owning thread exits.
+struct RingLease(Arc<Ring>);
+
+impl Drop for RingLease {
+    fn drop(&mut self) {
+        self.0.in_use.store(false, Ordering::Release);
+    }
+}
+
+thread_local! {
+    static TL_RING: RingLease = RingLease(acquire_ring());
+}
+
+/// Record one event into this thread's ring. When the recorder is
+/// disabled this is a single relaxed load and branch — no thread-local
+/// access, no ring allocation, nothing else.
+#[inline]
+pub fn record(event: TraceEvent) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    // `try_with`: a destructor-phase record (thread teardown) is
+    // silently dropped rather than panicking.
+    let _ = TL_RING.try_with(|lease| lease.0.push(event));
+}
+
+/// Merge every ring's current contents, sorted by timestamp, keeping at
+/// most the `max` most recent events. Best-effort: slots mid-overwrite
+/// are skipped, not torn.
+pub fn snapshot(max: usize) -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Ring>> = lock_unpoisoned(rings()).clone();
+    let mut events = Vec::new();
+    for ring in rings {
+        ring.events_into(&mut events);
+    }
+    events.sort_by_key(|e| (e.ns, e.trace_id, e.kind));
+    if events.len() > max {
+        events.drain(..events.len() - max);
+    }
+    events
+}
+
+/// Number of per-thread rings ever registered. A disabled-mode record
+/// must never grow this (the overhead test's structural assertion).
+pub fn ring_count() -> usize {
+    lock_unpoisoned(rings()).len()
+}
+
+/// One frozen black-box entry: what the rings held when an anomaly was
+/// noted.
+#[derive(Debug, Clone)]
+pub struct AnomalySnapshot {
+    /// Short human label ("slow request: ...", "follower halt: ...").
+    pub label: String,
+    /// Wall-clock nanoseconds when the snapshot was taken.
+    pub unix_ns: u64,
+    /// The most recent [`ANOMALY_EVENT_CAPACITY`] ring events.
+    pub events: Vec<TraceEvent>,
+}
+
+fn black_box() -> &'static Mutex<VecDeque<AnomalySnapshot>> {
+    static BB: OnceLock<Mutex<VecDeque<AnomalySnapshot>>> = OnceLock::new();
+    BB.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// Freeze the current ring contents into the black box under `label`.
+/// Bounded: the oldest snapshot is dropped past
+/// [`BLACK_BOX_CAPACITY`]. Called on anomalies only — it allocates.
+pub fn note_anomaly(label: &str) {
+    let events = snapshot(ANOMALY_EVENT_CAPACITY);
+    let mut bb = lock_unpoisoned(black_box());
+    if bb.len() >= BLACK_BOX_CAPACITY {
+        bb.pop_front();
+    }
+    bb.push_back(AnomalySnapshot {
+        label: label.to_string(),
+        unix_ns: super::unix_time_ns(),
+        events,
+    });
+}
+
+/// Retrieve the retained anomaly snapshots, oldest first.
+pub fn anomalies() -> Vec<AnomalySnapshot> {
+    lock_unpoisoned(black_box()).iter().cloned().collect()
+}
+
+/// Drop every retained anomaly snapshot.
+pub fn clear_anomalies() {
+    lock_unpoisoned(black_box()).clear();
+}
+
+/// Serializes tests that flip the global enable flag or inspect global
+/// ring/black-box state (the library test binary runs tests in
+/// parallel).
+#[cfg(test)]
+pub(crate) fn test_guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    lock_unpoisoned(&GUARD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn ev(trace_id: u64, payload: u64) -> TraceEvent {
+        TraceEvent { ns: super::super::trace::monotonic_ns(), trace_id, payload, stage: 3, kind: 0 }
+    }
+
+    #[test]
+    fn disabled_record_is_one_branch_and_touches_nothing() {
+        let _g = test_guard();
+        set_enabled(false);
+        let marker = 0xD15A_B1ED_0000_0001u64;
+        let rings_before = ring_count();
+        // Structural half: a disabled record returns before the
+        // thread-local, so no ring is created even on a fresh thread.
+        std::thread::spawn(move || {
+            for i in 0..64 {
+                record(ev(marker, i));
+            }
+        })
+        .join()
+        .unwrap();
+        assert_eq!(ring_count(), rings_before, "disabled record must not allocate a ring");
+        assert!(
+            snapshot(usize::MAX).iter().all(|e| e.trace_id != marker),
+            "disabled record must not store events"
+        );
+        // Timing half: the gate adds one relaxed load + branch to a
+        // histogram-record loop. Bound is deliberately loose (CI noise).
+        let h = crate::obs::LatencyHistogram::default();
+        const N: u64 = 200_000;
+        let t0 = Instant::now();
+        for i in 0..N {
+            h.record(i & 0xFFF);
+        }
+        let bare = t0.elapsed();
+        let t1 = Instant::now();
+        for i in 0..N {
+            record(ev(marker, i));
+            h.record(i & 0xFFF);
+        }
+        let gated = t1.elapsed();
+        assert!(
+            gated < bare * 3 + Duration::from_millis(20),
+            "disabled recorder must be noise: bare={bare:?} gated={gated:?}"
+        );
+    }
+
+    #[test]
+    fn enabled_ring_captures_and_overwrites_oldest() {
+        let _g = test_guard();
+        set_enabled(true);
+        let marker = 0xD15A_B1ED_0000_0002u64;
+        let total = RING_CAPACITY as u64 + 17;
+        for i in 0..total {
+            record(ev(marker, i));
+        }
+        set_enabled(false);
+        let mine: Vec<TraceEvent> =
+            snapshot(usize::MAX).into_iter().filter(|e| e.trace_id == marker).collect();
+        assert_eq!(mine.len(), RING_CAPACITY, "ring holds exactly its capacity");
+        let payloads: std::collections::HashSet<u64> =
+            mine.iter().map(|e| e.payload).collect();
+        for old in 0..17 {
+            assert!(!payloads.contains(&old), "oldest events must be overwritten");
+        }
+        for recent in 17..total {
+            assert!(payloads.contains(&recent), "recent event {recent} missing");
+        }
+    }
+
+    #[test]
+    fn exited_threads_rings_are_reused_and_stay_readable() {
+        // Pushes straight into the thread-local ring (no global enable)
+        // so no concurrently running test can race the lease free-list.
+        let _g = test_guard();
+        let marker = 0xD15A_B1ED_0000_0003u64;
+        let first = std::thread::spawn(move || {
+            TL_RING.with(|l| {
+                l.0.push(ev(marker, 1));
+                Arc::as_ptr(&l.0) as usize
+            })
+        })
+        .join()
+        .unwrap();
+        // The dead thread's event is still dumpable.
+        assert!(
+            snapshot(usize::MAX).iter().any(|e| e.trace_id == marker && e.payload == 1),
+            "events must survive their thread"
+        );
+        // A new thread leases a freed ring instead of growing the list.
+        let rings_between = ring_count();
+        let second = std::thread::spawn(move || {
+            TL_RING.with(|l| {
+                l.0.push(ev(marker, 2));
+                Arc::as_ptr(&l.0) as usize
+            })
+        })
+        .join()
+        .unwrap();
+        assert_eq!(first, second, "a freed ring must be reused");
+        assert_eq!(ring_count(), rings_between, "no new ring for a reused lease");
+    }
+
+    #[test]
+    fn black_box_freezes_events_and_stays_bounded() {
+        let _g = test_guard();
+        clear_anomalies();
+        set_enabled(true);
+        let marker = 0xD15A_B1ED_0000_0004u64;
+        record(ev(marker, 99));
+        note_anomaly("test anomaly");
+        set_enabled(false);
+        let got = anomalies();
+        let last = got.last().expect("snapshot retained");
+        assert_eq!(last.label, "test anomaly");
+        assert!(last.unix_ns > 0);
+        assert!(
+            last.events.iter().any(|e| e.trace_id == marker && e.payload == 99),
+            "black box must contain the ring's events"
+        );
+        for i in 0..(BLACK_BOX_CAPACITY + 3) {
+            note_anomaly(&format!("overflow {i}"));
+        }
+        let got = anomalies();
+        assert_eq!(got.len(), BLACK_BOX_CAPACITY, "black box must stay bounded");
+        assert_eq!(got.last().unwrap().label, format!("overflow {}", BLACK_BOX_CAPACITY + 2));
+        clear_anomalies();
+    }
+
+    #[test]
+    fn snapshot_caps_to_most_recent() {
+        let _g = test_guard();
+        let marker = 0xD15A_B1ED_0000_0005u64;
+        TL_RING.with(|l| {
+            for i in 0..32 {
+                l.0.push(ev(marker, i));
+            }
+        });
+        let capped = snapshot(8);
+        assert!(capped.len() <= 8);
+        // The kept tail is the newest slice of the merged timeline.
+        let all = snapshot(usize::MAX);
+        assert_eq!(&all[all.len() - capped.len()..], &capped[..]);
+    }
+}

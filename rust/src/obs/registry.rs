@@ -379,6 +379,74 @@ mod tests {
     }
 
     #[test]
+    fn all_empty_registry_renders_and_parses_round_trip() {
+        // Instruments registered but never touched: the scrape a
+        // monitor takes in the first instant of a process's life.
+        let reg = MetricsRegistry::shared();
+        reg.counter("c_total", None);
+        reg.gauge("g_now", Some(("loop", "0".into())));
+        reg.histogram("h_ns", Some(("op", "ping".into())));
+        reg.gauge_fn("bridge", None, || 0.0);
+        let text = reg.render();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some(EXPOSITION_HEADER));
+        let mut body = 0;
+        for line in lines {
+            let (_, _, value) =
+                parse_line(line).unwrap_or_else(|| panic!("unparseable line: {line:?}"));
+            assert_eq!(value, 0.0, "untouched instrument must scrape as 0: {line:?}");
+            body += 1;
+        }
+        // counter + gauge + gauge_fn + histogram (4 quantiles,
+        // _count, _sum, _max).
+        assert_eq!(body, 3 + 7, "every registered series must render");
+        // The empty histogram's derived series are 0, not NaN/garbage.
+        assert!(text.contains("h_ns{op=\"ping\",quantile=\"0.5\"} 0\n"));
+        assert!(text.contains("h_ns{op=\"ping\",quantile=\"0.999\"} 0\n"));
+        assert!(text.contains("h_ns_count{op=\"ping\"} 0\n"));
+        assert!(text.contains("h_ns_sum{op=\"ping\"} 0\n"));
+        assert!(text.contains("h_ns_max{op=\"ping\"} 0\n"));
+    }
+
+    #[test]
+    fn restarted_follower_reregistration_yields_one_fresh_series() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        let reg = MetricsRegistry::shared();
+        // Generation 1 of a follower bridges its cursor at registration.
+        let gen1 = Arc::new(AtomicU64::new(7));
+        {
+            let c = gen1.clone();
+            reg.gauge_fn("replica_cursor", Some(("role", "follower".into())), move || {
+                c.load(Ordering::Relaxed) as f64
+            });
+        }
+        assert!(reg.render().contains("replica_cursor{role=\"follower\"} 7\n"));
+
+        // The follower restarts and re-registers the same (name, label)
+        // over a fresh state cell; the old generation's cell is gone.
+        let gen2 = Arc::new(AtomicU64::new(42));
+        {
+            let c = gen2.clone();
+            reg.gauge_fn("replica_cursor", Some(("role", "follower".into())), move || {
+                c.load(Ordering::Relaxed) as f64
+            });
+        }
+        drop(gen1);
+        let text = reg.render();
+        assert_eq!(
+            text.matches("replica_cursor").count(),
+            1,
+            "re-registration must replace, not duplicate:\n{text}"
+        );
+        assert!(text.contains("replica_cursor{role=\"follower\"} 42\n"));
+        // Scrape-time evaluation follows the new generation live.
+        gen2.store(43, Ordering::Relaxed);
+        assert!(reg.render().contains("replica_cursor{role=\"follower\"} 43\n"));
+    }
+
+    #[test]
     fn parse_line_rejects_hostile_input() {
         for bad in [
             "",

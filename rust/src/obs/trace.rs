@@ -1,0 +1,424 @@
+//! Request-scoped tracing primitives: pipeline stages, trace IDs, the
+//! compact binary [`TraceEvent`] the flight recorder stores, the
+//! 16-byte wire trace context, and the [`Span`] RAII guard that stitches
+//! them together.
+//!
+//! A trace follows one request through the serving pipeline: the client
+//! stamps a nonzero 64-bit trace ID on the wire ([`encode_trace_ctx`]),
+//! every stage the request crosses records a begin/end event pair into
+//! the process [`recorder`](super::recorder) under that ID, and the
+//! replication seal carries the ID to the follower so the same trace
+//! covers primary *and* replica work. Span ends also feed per-stage
+//! [`LatencyHistogram`]s, so aggregate stage timings appear in the
+//! `MetricsDump` exposition as `stage_latency_ns{stage=...}` even when
+//! the event ring is disabled.
+//!
+//! Everything here is allocation-free on the hot path: a [`Span`] is a
+//! stack value holding copies of five words, and recording it costs one
+//! monotonic clock read per edge plus the recorder's gated ring store.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use super::hist::LatencyHistogram;
+use super::recorder;
+use super::registry::MetricsRegistry;
+
+/// Pipeline stages a span can cover. The discriminants are the wire
+/// encoding (one byte in [`TraceEvent`]); new stages append, never
+/// renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Client-side: frame encoded and written to the socket.
+    ClientSend = 0,
+    /// Server: wire bytes to a typed `Request`.
+    Decode = 1,
+    /// Server: request dispatched against the registry (whole handler).
+    Dispatch = 2,
+    /// Server: the shard-striped registry ingest inside dispatch.
+    ShardIngest = 3,
+    /// Primary: dirty state drained and sealed into a replication batch.
+    Seal = 4,
+    /// Follower: a sealed batch applied into the replica registry.
+    FollowerApply = 5,
+    /// Keyed coordinator: one routed batch ingested by a worker.
+    WorkerIngest = 6,
+}
+
+impl Stage {
+    /// Every stage, in discriminant order (discriminants are indices).
+    pub const ALL: [Stage; 7] = [
+        Stage::ClientSend,
+        Stage::Decode,
+        Stage::Dispatch,
+        Stage::ShardIngest,
+        Stage::Seal,
+        Stage::FollowerApply,
+        Stage::WorkerIngest,
+    ];
+
+    /// Stable snake_case name used as the `stage` label value in the
+    /// metrics exposition and the trace text renderer.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ClientSend => "client_send",
+            Stage::Decode => "decode",
+            Stage::Dispatch => "dispatch",
+            Stage::ShardIngest => "shard_ingest",
+            Stage::Seal => "seal",
+            Stage::FollowerApply => "follower_apply",
+            Stage::WorkerIngest => "worker_ingest",
+        }
+    }
+
+    /// Decode a wire byte. Unknown bytes return `None` (events from a
+    /// newer peer render numerically instead of failing the dump).
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+}
+
+/// What a [`TraceEvent`] marks. One byte on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A span opened.
+    Begin = 0,
+    /// A span closed; the event payload is the span's payload word.
+    End = 1,
+    /// A point event with no duration (anomaly markers).
+    Instant = 2,
+}
+
+impl EventKind {
+    /// Renderer label.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Begin => "begin",
+            EventKind::End => "end",
+            EventKind::Instant => "instant",
+        }
+    }
+
+    /// Decode a wire byte.
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        match v {
+            0 => Some(EventKind::Begin),
+            1 => Some(EventKind::End),
+            2 => Some(EventKind::Instant),
+            _ => None,
+        }
+    }
+}
+
+/// One flight-recorder event: 26 bytes on the `TRACE_EVENTS` wire
+/// (`ns`, `trace_id`, `payload` as LE u64, then `stage`, `kind` raw
+/// bytes). `stage`/`kind` stay raw `u8` in memory so a dump decoded
+/// from a newer peer never fails on an unknown enum value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic nanoseconds (process-local epoch, [`monotonic_ns`]).
+    pub ns: u64,
+    /// The trace this event belongs to; 0 = untraced background work.
+    pub trace_id: u64,
+    /// One stage-defined word (word count, batch seq, opcode, ...).
+    pub payload: u64,
+    /// [`Stage`] discriminant.
+    pub stage: u8,
+    /// [`EventKind`] discriminant.
+    pub kind: u8,
+}
+
+/// Encoded size of one [`TraceEvent`] in a `TRACE_EVENTS` frame.
+pub const TRACE_EVENT_WIRE_LEN: usize = 26;
+
+/// Size of the optional trailing trace context on request frames:
+/// trace_id (LE u64) + flags (LE u64).
+pub const TRACE_CTX_LEN: usize = 16;
+
+/// Flags bit 0: the request is sampled. The only defined bit; a
+/// trailer without it is not a trace context.
+pub const TRACE_FLAG_SAMPLED: u64 = 1;
+
+/// Encode the 16-byte wire trace context for `trace_id`.
+pub fn encode_trace_ctx(trace_id: u64) -> [u8; TRACE_CTX_LEN] {
+    let mut b = [0u8; TRACE_CTX_LEN];
+    b[..8].copy_from_slice(&trace_id.to_le_bytes());
+    b[8..].copy_from_slice(&TRACE_FLAG_SAMPLED.to_le_bytes());
+    b
+}
+
+/// Decode a candidate 16-byte trailer into a trace ID. Returns `None`
+/// unless the length is exact, the sampled flag is set, and the ID is
+/// nonzero — so arbitrary trailing garbage keeps failing decode as it
+/// did before trace contexts existed.
+pub fn decode_trace_ctx(bytes: &[u8]) -> Option<u64> {
+    if bytes.len() != TRACE_CTX_LEN {
+        return None;
+    }
+    let id = u64::from_le_bytes(bytes[..8].try_into().ok()?);
+    let flags = u64::from_le_bytes(bytes[8..].try_into().ok()?);
+    if id == 0 || flags & TRACE_FLAG_SAMPLED == 0 {
+        return None;
+    }
+    Some(id)
+}
+
+/// Monotonic nanoseconds since a process-local epoch (first call).
+/// Every [`TraceEvent`] timestamp comes from this clock, so events from
+/// different threads of one process order correctly; timestamps do
+/// *not* compare across processes.
+pub fn monotonic_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// A fresh nonzero trace ID: a process-random seed mixed with a
+/// sequence counter through an odd multiplier, so IDs are unique within
+/// a process and collide across processes only by 2^-64 chance.
+pub fn next_trace_id() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    static SEED: OnceLock<u64> = OnceLock::new();
+    let seed =
+        *SEED.get_or_init(|| super::unix_time_ns() ^ (std::process::id() as u64).rotate_left(32));
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let id = (seed ^ n).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    if id == 0 {
+        0x9E37_79B9_7F4A_7C15
+    } else {
+        id
+    }
+}
+
+/// Record a point event (no duration) under `trace_id`.
+pub fn instant(stage: Stage, trace_id: u64, payload: u64) {
+    recorder::record(TraceEvent {
+        ns: monotonic_ns(),
+        trace_id,
+        payload,
+        stage: stage as u8,
+        kind: EventKind::Instant as u8,
+    });
+}
+
+/// RAII span guard: records a `Begin` event on construction and an
+/// `End` event (plus an optional histogram sample of the elapsed
+/// nanoseconds) when dropped. Stack-only; cheap enough for per-frame
+/// use.
+#[must_use = "a span records its end when dropped"]
+pub struct Span {
+    stage: Stage,
+    trace_id: u64,
+    payload: u64,
+    begin_ns: u64,
+    hist: Option<Arc<LatencyHistogram>>,
+}
+
+impl Span {
+    /// Open a ring-only span (no histogram) under `trace_id` (0 for
+    /// untraced background work).
+    pub fn enter(stage: Stage, trace_id: u64) -> Span {
+        Span::build(stage, trace_id, None)
+    }
+
+    /// Open a span that also records its elapsed nanoseconds into
+    /// `hist` on drop. The histogram is fed unconditionally — stage
+    /// timings keep flowing to the metrics exposition even while the
+    /// event ring is disabled.
+    pub fn enter_timed(stage: Stage, trace_id: u64, hist: &Arc<LatencyHistogram>) -> Span {
+        Span::build(stage, trace_id, Some(hist.clone()))
+    }
+
+    fn build(stage: Stage, trace_id: u64, hist: Option<Arc<LatencyHistogram>>) -> Span {
+        let begin_ns = monotonic_ns();
+        recorder::record(TraceEvent {
+            ns: begin_ns,
+            trace_id,
+            payload: 0,
+            stage: stage as u8,
+            kind: EventKind::Begin as u8,
+        });
+        Span { stage, trace_id, payload: 0, begin_ns, hist }
+    }
+
+    /// Attach the stage-defined payload word carried by the `End` event
+    /// (word count, batch seq, ...).
+    pub fn with_payload(mut self, payload: u64) -> Span {
+        self.payload = payload;
+        self
+    }
+
+    /// Set the payload word after construction (for values only known
+    /// mid-span).
+    pub fn set_payload(&mut self, payload: u64) {
+        self.payload = payload;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let end_ns = monotonic_ns();
+        if let Some(h) = &self.hist {
+            h.record(end_ns.saturating_sub(self.begin_ns));
+        }
+        recorder::record(TraceEvent {
+            ns: end_ns,
+            trace_id: self.trace_id,
+            payload: self.payload,
+            stage: self.stage as u8,
+            kind: EventKind::End as u8,
+        });
+    }
+}
+
+/// Per-stage `stage_latency_ns{stage=...}` histograms registered into a
+/// [`MetricsRegistry`]. Registering pre-declares every stage (empty
+/// stages render as zero series — a stable scrape schema); handles are
+/// indexed by stage discriminant, so lookup is an array read.
+#[derive(Clone, Debug)]
+pub struct StageTimers {
+    timers: [Arc<LatencyHistogram>; Stage::ALL.len()],
+}
+
+impl StageTimers {
+    /// Register (or re-attach to) the per-stage histograms in
+    /// `metrics`. Same registry returns handles to the same cells.
+    pub fn register(metrics: &MetricsRegistry) -> StageTimers {
+        StageTimers {
+            timers: Stage::ALL.map(|s| {
+                metrics.histogram("stage_latency_ns", Some(("stage", s.name().to_string())))
+            }),
+        }
+    }
+
+    /// The histogram for `stage`.
+    pub fn timer(&self, stage: Stage) -> &Arc<LatencyHistogram> {
+        &self.timers[stage as usize]
+    }
+}
+
+/// Render recorder events as human-readable text, sorted by timestamp.
+/// Unknown stage/kind bytes (a newer peer's dump) render numerically.
+pub fn render_events(events: &[TraceEvent]) -> String {
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| (e.ns, e.trace_id, e.kind));
+    let mut out = String::with_capacity(32 + sorted.len() * 80);
+    out.push_str(&format!("{} trace events\n", sorted.len()));
+    for e in sorted {
+        let stage = match Stage::from_u8(e.stage) {
+            Some(s) => s.name().to_string(),
+            None => format!("stage#{}", e.stage),
+        };
+        let kind = match EventKind::from_u8(e.kind) {
+            Some(k) => k.name().to_string(),
+            None => format!("kind#{}", e.kind),
+        };
+        out.push_str(&format!(
+            "{:>16} ns  trace={:016x}  {:<7} {:<14} payload={}\n",
+            e.ns, e.trace_id, kind, stage, e.payload
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_and_kind_bytes_round_trip() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "discriminants must be indices");
+            assert_eq!(Stage::from_u8(*s as u8), Some(*s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(Stage::ALL.len() as u8), None);
+        for k in [EventKind::Begin, EventKind::End, EventKind::Instant] {
+            assert_eq!(EventKind::from_u8(k as u8), Some(k));
+        }
+        assert_eq!(EventKind::from_u8(3), None);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = next_trace_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "trace ids must not repeat");
+        }
+    }
+
+    #[test]
+    fn trace_ctx_round_trips_and_rejects_garbage() {
+        let id = 0xDEAD_BEEF_CAFE_F00Du64;
+        let bytes = encode_trace_ctx(id);
+        assert_eq!(bytes.len(), TRACE_CTX_LEN);
+        assert_eq!(decode_trace_ctx(&bytes), Some(id));
+        // Wrong length.
+        assert_eq!(decode_trace_ctx(&bytes[..15]), None);
+        assert_eq!(decode_trace_ctx(&[0u8; 17]), None);
+        // Zero trace id.
+        assert_eq!(decode_trace_ctx(&encode_trace_ctx(0)), None);
+        // Sampled flag clear.
+        let mut unsampled = bytes;
+        unsampled[8..].copy_from_slice(&0u64.to_le_bytes());
+        assert_eq!(decode_trace_ctx(&unsampled), None);
+        // All zeros (the classic padding trailer).
+        assert_eq!(decode_trace_ctx(&[0u8; TRACE_CTX_LEN]), None);
+    }
+
+    #[test]
+    fn monotonic_ns_never_goes_backwards() {
+        let mut last = monotonic_ns();
+        for _ in 0..1_000 {
+            let now = monotonic_ns();
+            assert!(now >= last);
+            last = now;
+        }
+    }
+
+    #[test]
+    fn timed_span_feeds_its_histogram() {
+        let h = Arc::new(LatencyHistogram::default());
+        {
+            let _s = Span::enter_timed(Stage::Dispatch, 7, &h).with_payload(42);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1, "span drop must record exactly one sample");
+        assert!(s.max >= 1_000_000, "slept 1ms; recorded {} ns", s.max);
+    }
+
+    #[test]
+    fn stage_timers_share_cells_with_the_registry() {
+        let reg = MetricsRegistry::shared();
+        let timers = StageTimers::register(&reg);
+        timers.timer(Stage::Decode).record(123);
+        let again = StageTimers::register(&reg);
+        assert_eq!(again.timer(Stage::Decode).snapshot().count, 1, "same cell");
+        let text = reg.render();
+        assert!(text.contains("stage_latency_ns_count{stage=\"decode\"} 1\n"));
+        // Every stage pre-declares a series, even untouched ones.
+        assert!(text.contains("stage_latency_ns_count{stage=\"follower_apply\"} 0\n"));
+    }
+
+    #[test]
+    fn renderer_orders_by_time_and_names_stages() {
+        let events = vec![
+            TraceEvent { ns: 200, trace_id: 5, payload: 9, stage: 2, kind: 1 },
+            TraceEvent { ns: 100, trace_id: 5, payload: 0, stage: 2, kind: 0 },
+            TraceEvent { ns: 300, trace_id: 5, payload: 1, stage: 250, kind: 9 },
+        ];
+        let text = render_events(&events);
+        assert!(text.starts_with("3 trace events\n"));
+        let begin = text.find("begin").unwrap();
+        let end = text.find("end ").unwrap();
+        assert!(begin < end, "events must render in time order");
+        assert!(text.contains("dispatch"));
+        assert!(text.contains("stage#250"));
+        assert!(text.contains("kind#9"));
+    }
+}

@@ -37,10 +37,11 @@ use std::time::{Duration, Instant};
 
 use super::ReplicaCursor;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
-use crate::obs::{LatencyHistogram, MetricsRegistry};
+use crate::obs::recorder;
+use crate::obs::{LatencyHistogram, MetricsRegistry, Span, Stage};
 use crate::registry::{SketchDelta, SketchRegistry};
 use crate::server::protocol::{
-    ErrorCode, FrameDecoder, ProtocolError, Request, Response, DELTA_WIRE_V3,
+    ErrorCode, FrameDecoder, ProtocolError, Request, Response, DELTA_WIRE_V4,
 };
 use crate::server::server::write_full;
 use crate::server::snapshot;
@@ -116,11 +117,27 @@ struct FollowerShared {
     /// two clocks must be roughly synchronized for absolute values
     /// (trends survive skew).
     seal_to_apply_ns: Arc<LatencyHistogram>,
+    /// Per-batch apply duration, fed by the `FollowerApply` span into
+    /// the wrapped server's `stage_latency_ns{stage="follower_apply"}`
+    /// series (same cell the server's [`crate::obs::StageTimers`]
+    /// pre-declared).
+    apply_ns: Arc<LatencyHistogram>,
 }
 
 impl FollowerShared {
     fn record_error(&self, e: impl std::fmt::Display) {
         *self.last_error.lock().unwrap_or_else(PoisonError::into_inner) = Some(e.to_string());
+    }
+
+    /// Terminal replication stop: record the reason, raise the halt
+    /// flag, and freeze the flight recorder's ring into the black box —
+    /// a halt is exactly the anomaly the recorder exists for, and the
+    /// events leading up to it (the batch's apply span, the primary's
+    /// spans when in-process) would otherwise be overwritten.
+    fn halt(&self, why: String) {
+        recorder::note_anomaly(&format!("follower halt: {why}"));
+        self.record_error(why);
+        self.halted.store(true, Ordering::SeqCst);
     }
 }
 
@@ -168,6 +185,10 @@ impl FollowerServer {
             epoch: AtomicU64::new(cursor.epoch),
             cursor: AtomicU64::new(cursor.seq),
             seal_to_apply_ns: server.metrics().histogram("replica_seal_to_apply_ns", None),
+            apply_ns: server.metrics().histogram(
+                "stage_latency_ns",
+                Some(("stage", Stage::FollowerApply.name().to_string())),
+            ),
             ..FollowerShared::default()
         });
         register_replica_gauges(server.metrics(), &shared);
@@ -348,7 +369,11 @@ fn replication_loop(
         let _ = stream.set_nodelay(true);
         let epoch = shared.epoch.load(Ordering::SeqCst);
         let cursor = shared.cursor.load(Ordering::SeqCst);
-        let subscribe = Request::Subscribe { epoch, cursor, wire: DELTA_WIRE_V3 }.encode();
+        // Subscribe at delta wire v4: sealed batches additionally carry
+        // the last-writer trace IDs. An older primary accepts the
+        // higher generation byte and streams plain v3 — the trace entry
+        // simply never appears.
+        let subscribe = Request::Subscribe { epoch, cursor, wire: DELTA_WIRE_V4 }.encode();
         if !matches!(write_full(&mut stream, &subscribe, &stop), Ok(true)) {
             shared.record_error("subscribe write failed");
             continue;
@@ -422,8 +447,7 @@ fn apply_batch(
                 // A delta that does not decode or match our config
                 // cannot be fixed by retrying against the same primary:
                 // halt, keep serving last-good state.
-                shared.record_error(format!("delta entry for key {key} rejected: {e}"));
-                shared.halted.store(true, Ordering::SeqCst);
+                shared.halt(format!("delta entry for key {key} rejected: {e}"));
                 return false;
             }
         }
@@ -482,9 +506,11 @@ fn run_subscription(
                     // reconnecting (the same bytes replay forever):
                     // halt. Torn magic/oversize reconnects like any
                     // stream corruption.
-                    shared.record_error(format!("undecodable frame from primary: {e}"));
+                    let why = format!("undecodable frame from primary: {e}");
                     if matches!(e, ProtocolError::BadVersion(_)) {
-                        shared.halted.store(true, Ordering::SeqCst);
+                        shared.halt(why);
+                    } else {
+                        shared.record_error(why);
                     }
                     return;
                 }
@@ -510,12 +536,14 @@ fn apply_frame(
     let resp = match Response::decode(opcode, payload) {
         Ok(resp) => resp,
         Err(e) => {
-            shared.record_error(format!("undecodable frame from primary: {e}"));
             // An unknown opcode or frame version is a primary speaking
             // a newer wire than this follower decodes — reconnecting
             // would replay the same bytes forever.
+            let why = format!("undecodable frame from primary: {e}");
             if matches!(e, ProtocolError::BadOpcode(_) | ProtocolError::BadVersion(_)) {
-                shared.halted.store(true, Ordering::SeqCst);
+                shared.halt(why);
+            } else {
+                shared.record_error(why);
             }
             return false;
         }
@@ -545,8 +573,7 @@ fn apply_frame(
                         // seed mismatch, corrupt image) cannot be fixed
                         // by retrying against the same primary: halt,
                         // keep serving last-good state.
-                        shared.record_error(format!("full sync rejected: {e}"));
-                        shared.halted.store(true, Ordering::SeqCst);
+                        shared.halt(format!("full sync rejected: {e}"));
                         return false;
                     }
                 }
@@ -564,8 +591,22 @@ fn apply_frame(
                     return false;
                 }
             }
-            Response::DeltaBatchV3 { seq, entries, seal_unix_ns } => {
-                if !apply_batch(registry, shared, seq, entries) {
+            Response::DeltaBatchV3 { seq, entries, seal_unix_ns, writer_traces } => {
+                // The apply span joins the batch's first sealed writer
+                // trace (empty on a v3 primary or untraced writes), so
+                // one trace ID stitches the write's primary-side spans
+                // to this follower's apply. Also feeds the
+                // `stage_latency_ns{stage="follower_apply"}` series.
+                let applied = {
+                    let _span = Span::enter_timed(
+                        Stage::FollowerApply,
+                        writer_traces.first().copied().unwrap_or(0),
+                        &shared.apply_ns,
+                    )
+                    .with_payload(seq);
+                    apply_batch(registry, shared, seq, entries)
+                };
+                if !applied {
                     return false;
                 }
                 // Batches from primaries new enough to stamp a seal
@@ -578,7 +619,6 @@ fn apply_frame(
                 }
             }
             Response::Error { code, message } => {
-                shared.record_error(format!("primary answered {code:?}: {message}"));
                 if matches!(
                     code,
                     ErrorCode::Unsupported
@@ -592,7 +632,9 @@ fn apply_frame(
                     // subscribe frame (Malformed) — retrying replays
                     // the identical bytes, and each retry costs the
                     // primary work.
-                    shared.halted.store(true, Ordering::SeqCst);
+                    shared.halt(format!("primary answered {code:?}: {message}"));
+                } else {
+                    shared.record_error(format!("primary answered {code:?}: {message}"));
                 }
                 return false;
             }

@@ -28,8 +28,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
+use crate::obs::{Span, Stage};
 use crate::registry::{SketchDelta, SketchRegistry};
-use crate::server::protocol::{DELTA_ENTRY_OVERHEAD, MAX_PAYLOAD};
+use crate::server::protocol::{DELTA_ENTRY_OVERHEAD, MAX_PAYLOAD, MAX_WRITER_TRACES};
 
 /// Upper bound on one sealed batch's entry payload. A capture that
 /// drains more than this splits into several consecutive batches, so an
@@ -102,6 +103,14 @@ pub struct SealedBatch {
     /// measure seal-to-apply replication latency across processes
     /// (monotonic clocks don't travel).
     pub sealed_unix_ns: u64,
+    /// Trace IDs of traced writes whose mutations this capture sealed
+    /// (the "last writers", at most [`MAX_WRITER_TRACES`], deposited via
+    /// [`ReplicationLog::note_writer_trace`]). Shipped as a trailing
+    /// `TRACE_IDS` wire entry on delta wire v4+, so a follower's apply
+    /// span joins the writer's primary-side trace. Best-effort
+    /// diagnostics: a seal racing an ingest may carry the ID one batch
+    /// early, and untraced writes leave it empty.
+    pub writer_traces: Vec<u64>,
 }
 
 /// Point-in-time log accounting.
@@ -182,6 +191,14 @@ pub struct ReplicationLog {
     /// head is final" from "a concurrent capture is about to seal one
     /// more batch" — see [`ReplicationLog::captures_in_flight`].
     capturing: AtomicU64,
+    /// Rotating deposit slots for traced writers
+    /// ([`ReplicationLog::note_writer_trace`]): lock-free stores on the
+    /// ingest path, drained (swapped to 0) by the next capture that
+    /// seals entries. Past [`MAX_WRITER_TRACES`] concurrent depositors
+    /// the oldest ID is overwritten — last writers win, by design.
+    writer_traces: [AtomicU64; MAX_WRITER_TRACES],
+    /// Next deposit slot (monotonic; modulo the slot count).
+    writer_trace_cursor: AtomicU64,
 }
 
 impl Default for ReplicationLog {
@@ -228,7 +245,39 @@ impl ReplicationLog {
             capture_gate: Mutex::new(()),
             epoch: unique_epoch(),
             capturing: AtomicU64::new(0),
+            writer_traces: std::array::from_fn(|_| AtomicU64::new(0)),
+            writer_trace_cursor: AtomicU64::new(0),
         }
+    }
+
+    /// Deposit a traced write's ID so the next sealed batch carries it
+    /// to followers (see [`SealedBatch::writer_traces`]). Lock-free and
+    /// wait-free: one relaxed `fetch_add` and one relaxed store into a
+    /// rotating slot array — safe on the ingest hot path. Zero IDs
+    /// (untraced) are the empty-slot sentinel and must not be deposited;
+    /// callers gate on `trace_id != 0`.
+    pub fn note_writer_trace(&self, trace_id: u64) {
+        if trace_id == 0 {
+            return;
+        }
+        let slot = self.writer_trace_cursor.fetch_add(1, Ordering::Relaxed) as usize
+            % self.writer_traces.len();
+        self.writer_traces[slot].store(trace_id, Ordering::Relaxed);
+    }
+
+    /// Drain the deposited writer-trace slots (swap to the empty
+    /// sentinel), deduplicated. Called only by a capture that is about
+    /// to seal entries, so deposits never vanish into an empty capture.
+    fn take_writer_traces(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .writer_traces
+            .iter()
+            .map(|slot| slot.swap(0, Ordering::Relaxed))
+            .filter(|&id| id != 0)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// This log incarnation's id (nonzero; 0 on the wire means "no
@@ -302,6 +351,21 @@ impl ReplicationLog {
         if entries.is_empty() {
             return None;
         }
+        // Drained only when entries will actually seal, so a deposit
+        // racing an empty capture is not lost. Every chunk of a split
+        // capture carries the same set — a follower joining mid-split
+        // still sees the writers.
+        let writer_traces = self.take_writer_traces();
+        // The seal span joins the first writer's trace (0 = untraced
+        // background capture), stitching primary-side seal time into
+        // the same timeline as the write's decode/dispatch/ingest
+        // spans. Ring-only: the capture thread has no histogram — the
+        // aggregate seal cadence is already visible in the replication
+        // gauges.
+        let mut seal_span = Span::enter(
+            Stage::Seal,
+            writer_traces.first().copied().unwrap_or(0),
+        );
         let clock = registry.now();
         let mut inner = self.lock();
         // Greedy chunking; chunks get consecutive seqs with nothing
@@ -320,6 +384,7 @@ impl ReplicationLog {
                     chunk_bytes,
                     clock,
                     retain_bytes,
+                    writer_traces.clone(),
                 );
                 chunk_bytes = 0;
             }
@@ -327,8 +392,16 @@ impl ReplicationLog {
             chunk_bytes += entry_bytes;
         }
         if !chunk.is_empty() {
-            last_seq = Self::seal_locked(&mut inner, chunk, chunk_bytes, clock, retain_bytes);
+            last_seq = Self::seal_locked(
+                &mut inner,
+                chunk,
+                chunk_bytes,
+                clock,
+                retain_bytes,
+                writer_traces,
+            );
         }
+        seal_span.set_payload(last_seq);
         Some(last_seq)
     }
 
@@ -341,6 +414,7 @@ impl ReplicationLog {
         bytes: usize,
         clock: u64,
         retain_bytes: usize,
+        writer_traces: Vec<u64>,
     ) -> u64 {
         let n = entries.len() as u64;
         let seq = inner.next_seq;
@@ -359,6 +433,7 @@ impl ReplicationLog {
             entries,
             bytes,
             sealed_unix_ns: crate::obs::unix_time_ns(),
+            writer_traces,
         }));
         inner.retained_bytes += bytes;
         inner.sealed_batches += 1;
@@ -666,6 +741,51 @@ mod tests {
 
         // Nothing new: no empty global entry is sealed.
         assert!(log.capture(&reg, usize::MAX).is_none());
+    }
+
+    #[test]
+    fn writer_traces_ride_the_next_seal_and_are_drained() {
+        let reg = registry();
+        let log = ReplicationLog::new();
+
+        // Deposits before an empty capture survive it.
+        log.note_writer_trace(0xAA);
+        assert!(log.capture(&reg, usize::MAX).is_none(), "nothing dirty");
+
+        log.note_writer_trace(0xBB);
+        log.note_writer_trace(0); // untraced sentinel: never deposited
+        reg.ingest(1, &[1, 2, 3]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(1));
+        match log.read_after(0) {
+            LogRead::Batch(b) => assert_eq!(b.writer_traces, vec![0xAA, 0xBB]),
+            other => panic!("expected batch 1, got {other:?}"),
+        }
+
+        // Drained: the next sealed batch starts clean.
+        reg.ingest(2, &[4]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(2));
+        match log.read_after(1) {
+            LogRead::Batch(b) => assert!(b.writer_traces.is_empty(), "deposits must drain"),
+            other => panic!("expected batch 2, got {other:?}"),
+        }
+
+        // Bounded: past the slot count, old deposits are overwritten
+        // (last writers win) and duplicates collapse.
+        for i in 0..(MAX_WRITER_TRACES as u64 * 3) {
+            log.note_writer_trace(1000 + i % (MAX_WRITER_TRACES as u64 + 4));
+        }
+        reg.ingest(3, &[5]);
+        assert_eq!(log.capture(&reg, usize::MAX), Some(3));
+        match log.read_after(2) {
+            LogRead::Batch(b) => {
+                assert!(!b.writer_traces.is_empty());
+                assert!(b.writer_traces.len() <= MAX_WRITER_TRACES);
+                let mut deduped = b.writer_traces.clone();
+                deduped.dedup();
+                assert_eq!(deduped, b.writer_traces, "IDs must be deduplicated");
+            }
+            other => panic!("expected batch 3, got {other:?}"),
+        }
     }
 
     #[test]

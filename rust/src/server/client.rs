@@ -19,16 +19,26 @@
 //! expiry as a typed [`ClientError::Timeout`] that poisons the
 //! connection — a hung server then costs the caller a bounded wait and
 //! a reconnect, not a parked thread.
+//!
+//! Tracing is opt-in per connection:
+//! [`SketchClient::negotiate_tracing`] probes the server with a
+//! `TraceDump` (servers predating it answer a typed error and the
+//! connection keeps serving untraced), after which ingest calls stamp a
+//! 16-byte trace context on their frames and
+//! [`SketchClient::trace_dump`] /
+//! [`SketchClient::trace_dump_text`] read the server's flight
+//! recorder.
 
 use std::io::{self, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::protocol::{
-    encode_insert_batch, read_response, ErrorCode, EvictPolicy, ProtocolError, Request,
-    Response, StatsSummary, MAX_PAYLOAD,
+    encode_insert_batch, encode_insert_batch_traced, read_response, ErrorCode, EvictPolicy,
+    ProtocolError, Request, Response, StatsSummary, MAX_PAYLOAD,
 };
 use crate::hll::HllSketch;
+use crate::obs::trace::{next_trace_id, render_events, Span, Stage, TraceEvent, TRACE_CTX_LEN};
 
 /// Errors from client calls.
 #[derive(Debug)]
@@ -109,6 +119,11 @@ pub struct SketchClient {
     /// read some earlier request's reply. Once set, all calls fail with
     /// [`ClientError::Poisoned`].
     poisoned: bool,
+    /// Set by a successful [`SketchClient::negotiate_tracing`]: ingest
+    /// frames then carry a trailing 16-byte trace context. Off by
+    /// default — a pre-tracing server's strict payload decode would
+    /// reject the longer frames.
+    tracing: bool,
 }
 
 /// A socket error that means "the configured timeout expired", on
@@ -122,7 +137,7 @@ impl SketchClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, ClientError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(Self { stream, poisoned: false })
+        Ok(Self { stream, poisoned: false, tracing: false })
     }
 
     /// As [`SketchClient::connect`], with read/write timeouts applied
@@ -165,7 +180,7 @@ impl SketchClient {
             }
         };
         stream.set_nodelay(true).ok();
-        let mut client = Self { stream, poisoned: false };
+        let mut client = Self { stream, poisoned: false, tracing: false };
         client.set_read_timeout(read)?;
         client.set_write_timeout(write)?;
         Ok(client)
@@ -251,14 +266,69 @@ impl SketchClient {
         }
     }
 
+    /// Probe whether the server understands tracing, and turn it on for
+    /// this connection if so. Sends a `TraceDump`: a tracing-aware
+    /// server answers with its event ring (any size, including empty);
+    /// an older server answers a typed `Malformed` "unknown opcode"
+    /// error *and keeps the connection serving* (unknown opcodes are a
+    /// payload-decode failure, not a framing one), so `Ok(false)` here
+    /// means "old peer, staying untraced" with no reconnect needed.
+    /// Transport-level failures propagate unchanged.
+    pub fn negotiate_tracing(&mut self) -> Result<bool, ClientError> {
+        match self.call(&Request::TraceDump) {
+            Ok(Response::TraceEvents { .. }) => {
+                self.tracing = true;
+                Ok(true)
+            }
+            Ok(other) => Err(unexpected("TraceEvents", &other)),
+            Err(ClientError::Remote { .. }) => {
+                self.tracing = false;
+                Ok(false)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Whether a successful [`Self::negotiate_tracing`] armed trace
+    /// stamping on this connection.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing
+    }
+
     /// Ingest one keyed batch; returns the number of words the server
-    /// accepted.
+    /// accepted. When tracing is negotiated the frame carries a fresh
+    /// trace context (see [`Self::insert_batch_traced`] to learn the
+    /// stamped id).
     pub fn insert_batch(&mut self, key: u64, words: &[u32]) -> Result<u64, ClientError> {
+        self.insert_batch_traced(key, words).map(|(words, _)| words)
+    }
+
+    /// As [`Self::insert_batch`], also returning the trace id stamped
+    /// on the frame (`0` when tracing is off) so the caller can later
+    /// correlate it against [`Self::trace_dump`] output.
+    pub fn insert_batch_traced(
+        &mut self,
+        key: u64,
+        words: &[u32],
+    ) -> Result<(u64, u64), ClientError> {
         self.check_sync()?;
-        Self::check_payload(12 + words.len() as u64 * 4)?;
-        self.write_wire(&encode_insert_batch(key, words))?;
+        let trace_id = if self.tracing { next_trace_id() } else { 0 };
+        let extra = if trace_id != 0 { TRACE_CTX_LEN as u64 } else { 0 };
+        Self::check_payload(12 + words.len() as u64 * 4 + extra)?;
+        {
+            // The client_send span brackets encode + socket write; it
+            // lands in *this process's* recorder (useful when client
+            // and server share a process, as in tests and benches).
+            let _span =
+                Span::enter(Stage::ClientSend, trace_id).with_payload(words.len() as u64);
+            if trace_id != 0 {
+                self.write_wire(&encode_insert_batch_traced(key, words, trace_id))?;
+            } else {
+                self.write_wire(&encode_insert_batch(key, words))?;
+            }
+        }
         match self.recv()? {
-            Response::Ingested { words } => Ok(words),
+            Response::Ingested { words } => Ok((words, trace_id)),
             other => Err(unexpected("Ingested", &other)),
         }
     }
@@ -274,14 +344,26 @@ impl SketchClient {
     /// reads, client blocked writing requests nobody reads).
     pub fn pipeline_insert(&mut self, batches: &[(u64, Vec<u32>)]) -> Result<u64, ClientError> {
         self.check_sync()?;
+        let extra = if self.tracing { TRACE_CTX_LEN as u64 } else { 0 };
         for (_, words) in batches {
-            Self::check_payload(12 + words.len() as u64 * 4)?;
+            Self::check_payload(12 + words.len() as u64 * 4 + extra)?;
         }
         let mut total = 0u64;
         for window in batches.chunks(PIPELINE_WINDOW) {
             let mut wire = Vec::new();
             for (key, words) in window {
-                wire.extend_from_slice(&encode_insert_batch(*key, words));
+                if self.tracing {
+                    // Each batch in the flight gets its own trace id so
+                    // a server-side dump attributes spans per batch,
+                    // not per window.
+                    wire.extend_from_slice(&encode_insert_batch_traced(
+                        *key,
+                        words,
+                        next_trace_id(),
+                    ));
+                } else {
+                    wire.extend_from_slice(&encode_insert_batch(*key, words));
+                }
             }
             self.write_wire(&wire)?;
             for i in 0..window.len() {
@@ -376,6 +458,23 @@ impl SketchClient {
             Response::MetricsText(text) => Ok(text),
             other => Err(unexpected("MetricsText", &other)),
         }
+    }
+
+    /// Snapshot the server's flight recorder: its most recent trace
+    /// events, merged across threads and sorted by timestamp. Works
+    /// without [`Self::negotiate_tracing`] (the dump itself is the
+    /// negotiation probe) and on read-only replicas.
+    pub fn trace_dump(&mut self) -> Result<Vec<TraceEvent>, ClientError> {
+        match self.call(&Request::TraceDump)? {
+            Response::TraceEvents { events } => Ok(events),
+            other => Err(unexpected("TraceEvents", &other)),
+        }
+    }
+
+    /// As [`Self::trace_dump`], rendered as one human-readable line per
+    /// event (`ts_ns kind stage trace_id payload`).
+    pub fn trace_dump_text(&mut self) -> Result<String, ClientError> {
+        Ok(render_events(&self.trace_dump()?))
     }
 }
 

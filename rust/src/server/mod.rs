@@ -12,9 +12,12 @@
 //!   the seed-carrying sketch wire format v2, `Stats`, `Evict` with
 //!   key/TTL/wall-TTL/budget policies, `Snapshot`, `Ping`,
 //!   `MetricsDump` — the [`crate::obs::MetricsRegistry`] exposition
-//!   scraped over the wire — plus the replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
+//!   scraped over the wire — `TraceDump` — the
+//!   [`crate::obs::recorder`] flight-recorder snapshot as a versioned
+//!   binary event frame — plus the replication frames `Subscribe`/`ReplicaAck`/`FullSync`/
 //!   `DeltaBatch` — wire-v3 typed delta entries: register diffs,
-//!   full sketches, eviction tombstones, global-union diffs), with
+//!   full sketches, eviction tombstones, global-union diffs; wire-v4
+//!   adds last-writer trace ids riding each sealed batch), with
 //!   typed error frames, strict panic-free decoding, and the
 //!   incremental [`protocol::FrameDecoder`]/[`protocol::FrameEncoder`]
 //!   state machines that reassemble frames across partial nonblocking
@@ -37,7 +40,11 @@
 //!   (capture thread + `SUBSCRIBE` streams, see [`crate::replica`]);
 //! * [`client`] — a blocking [`SketchClient`] with batch pipelining
 //!   (write a flight of ingest frames, then read the replies — one
-//!   round trip per flight) and optional typed socket timeouts;
+//!   round trip per flight), optional typed socket timeouts, and
+//!   opt-in request tracing ([`SketchClient::negotiate_tracing`]
+//!   probes the server, after which ingest frames carry a 16-byte
+//!   trace context that threads client → decode → dispatch → shard
+//!   ingest → replication seal → follower apply);
 //! * [`snapshot`] — checksummed full-registry snapshot files (format
 //!   v2: per-key records plus the global-union record, v1 read-compat)
 //!   and the restore paths, so a restarted server resumes with

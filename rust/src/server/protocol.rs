@@ -29,6 +29,15 @@
 //! | `SUBSCRIBE`       | epoch u64 · cursor u64 · wire u8 (epoch 0 or cursor 0 = bootstrap; else resume after this seq of that log incarnation; wire = newest delta format the subscriber reads, legacy 16-byte payloads imply 2) |
 //! | `REPLICA_ACK`     | cursor u64 (highest replication seq applied)          |
 //! | `METRICS_DUMP`    | empty                                                 |
+//! | `TRACE_DUMP`      | empty                                                 |
+//!
+//! An `INSERT_BATCH` payload may carry an optional trailing 16-byte
+//! **trace context** — trace_id u64 · flags u64 (bit 0 = sampled, both
+//! LE; see [`crate::obs::encode_trace_ctx`]) — appended after the word
+//! array. The server peels it before strict decoding; clients only
+//! stamp it after probing that the server answers `TRACE_DUMP` (old
+//! servers reject the longer payload as malformed, and the probe is how
+//! a client discovers it must stay untraced).
 //!
 //! # Response payloads
 //!
@@ -46,6 +55,7 @@
 //! | `DELTA_BATCH`           | seq u64 · count u32 · count × (key u64 · len u32 · sketch wire-v2 bytes) |
 //! | `DELTA_BATCH_V3`        | seq u64 · count u32 · count × (key u64 · kind u8 · len u32 · len × body) |
 //! | `METRICS_TEXT`          | len u32 · len × utf-8 exposition bytes         |
+//! | `TRACE_EVENTS`          | version u8 (1) · count u32 · count × (ns u64 · trace_id u64 · payload u64 · stage u8 · kind u8) |
 //! | `ERROR`                 | code u8 · msg_len u32 · msg_len × utf-8 bytes  |
 //!
 //! # Replication frames
@@ -74,6 +84,7 @@
 //! | 2    | `TOMBSTONE`    | empty (`len` must be 0) — the key was evicted  |
 //! | 3    | `GLOBAL_DIFF`  | changed registers of the *global union* sketch (key field ignored, encoded 0) |
 //! | 4    | `SEAL_TS`      | wall-clock seal timestamp, unix ns u64 (key 0; batch metadata, not a delta) |
+//! | 5    | `TRACE_IDS`    | n × trace_id u64 — last-writer trace IDs of the batch (key 0; metadata; wire v4+ only) |
 //!
 //! Followers apply a batch's entries **in order**: a key evicted and
 //! re-created between captures arrives as a tombstone immediately
@@ -96,6 +107,7 @@
 
 use std::io::{self, Read};
 
+use crate::obs::trace::{decode_trace_ctx, TraceEvent, TRACE_CTX_LEN, TRACE_EVENT_WIRE_LEN};
 use crate::registry::{RegistryStats, SketchDelta};
 
 /// Frame magic: ASCII "HL".
@@ -121,6 +133,7 @@ pub mod opcodes {
     pub const SUBSCRIBE: u8 = 0x09;
     pub const REPLICA_ACK: u8 = 0x0A;
     pub const METRICS_DUMP: u8 = 0x0B;
+    pub const TRACE_DUMP: u8 = 0x0C;
 
     pub const PONG: u8 = 0x81;
     pub const INGESTED: u8 = 0x82;
@@ -134,12 +147,13 @@ pub mod opcodes {
     pub const DELTA_BATCH: u8 = 0x8A;
     pub const DELTA_BATCH_V3: u8 = 0x8B;
     pub const METRICS_TEXT: u8 = 0x8C;
+    pub const TRACE_EVENTS: u8 = 0x8D;
     pub const ERROR: u8 = 0xEE;
 }
 
 /// Highest request opcode, bounding the server's per-opcode metric
 /// arrays (requests are contiguous from [`opcodes::PING`]).
-pub const REQUEST_OPCODE_MAX: u8 = opcodes::METRICS_DUMP;
+pub const REQUEST_OPCODE_MAX: u8 = opcodes::TRACE_DUMP;
 
 /// Human-readable label of a request opcode, used as the `op` metric
 /// label on per-opcode latency/size series. Stable static strings so
@@ -157,6 +171,7 @@ pub fn request_opcode_name(opcode: u8) -> &'static str {
         opcodes::SUBSCRIBE => "subscribe",
         opcodes::REPLICA_ACK => "replica_ack",
         opcodes::METRICS_DUMP => "metrics_dump",
+        opcodes::TRACE_DUMP => "trace_dump",
         _ => "unknown",
     }
 }
@@ -183,6 +198,14 @@ pub mod delta_kind {
     /// measure seal-to-apply replication latency and never merge it.
     /// At most one per batch, appended last by the encoder.
     pub const SEAL_TS: u8 = 4;
+    /// Body is `n` trace IDs (u64 LE each, so `len` must be a multiple
+    /// of 8): the last-writer trace IDs deposited while this batch's
+    /// deltas accumulated, letting a follower stitch its apply span
+    /// onto the primary-side traces. Key field meaningless, encoded 0.
+    /// Batch *metadata* like `SEAL_TS`, never merged. Only sent to
+    /// subscribers that negotiated [`DELTA_WIRE_V4`](super::DELTA_WIRE_V4)
+    /// or newer — wire-v3 decoders reject unknown kinds.
+    pub const TRACE_IDS: u8 = 5;
 }
 
 /// Fixed wire overhead of one `DELTA_BATCH_V3` entry: key (8) + kind
@@ -200,9 +223,25 @@ pub const DELTA_ENTRY_OVERHEAD: usize = 13;
 pub const DELTA_WIRE_V2: u8 = 2;
 
 /// Delta wire generation with typed entries (`DELTA_BATCH_V3`):
-/// register diffs and eviction tombstones. What current followers
-/// request.
+/// register diffs and eviction tombstones.
 pub const DELTA_WIRE_V3: u8 = 3;
+
+/// Delta wire generation adding the `TRACE_IDS` metadata entry to
+/// `DELTA_BATCH_V3` frames (same frame opcode; one more entry kind).
+/// What current followers request. A v3 subscriber never sees the new
+/// kind — its strict decoder treats unknown kinds as malformed — and a
+/// v3 *primary* simply ignores the higher requested generation and
+/// streams plain v3, so either side may be upgraded first.
+pub const DELTA_WIRE_V4: u8 = 4;
+
+/// Version byte leading a `TRACE_EVENTS` response payload; bump when
+/// the event record grows.
+pub const TRACE_EVENTS_VERSION: u8 = 1;
+
+/// Most trace IDs one `TRACE_IDS` metadata entry may carry — bounds
+/// both the log's deposit slots and the decoder's tolerance for a
+/// hostile length field.
+pub const MAX_WRITER_TRACES: usize = 16;
 
 /// Errors reading or decoding a frame.
 #[derive(Debug)]
@@ -319,6 +358,11 @@ pub enum Request {
     /// [`Response::MetricsText`] (the versioned text exposition).
     /// Allowed on read-only replicas — observability is not a mutation.
     MetricsDump,
+    /// Dump the flight recorder's recent trace events; answered with
+    /// [`Response::TraceEvents`]. Allowed on read-only replicas.
+    /// Doubles as the client's tracing-capability probe: servers
+    /// predating it answer a typed `BadOpcode` error.
+    TraceDump,
 }
 
 /// Registry accounting totals, flattened for the wire: per-tier key
@@ -382,12 +426,26 @@ pub enum Response {
     /// absent, e.g. frames from a pre-observability primary), carried
     /// on the wire as a trailing [`delta_kind::SEAL_TS`] entry so the
     /// follower can measure seal-to-apply replication latency.
-    DeltaBatchV3 { seq: u64, entries: Vec<(u64, SketchDelta)>, seal_unix_ns: u64 },
+    /// `writer_traces` holds the last-writer trace IDs deposited while
+    /// the batch accumulated (empty = untraced or pre-v4 peer), carried
+    /// as a [`delta_kind::TRACE_IDS`] metadata entry on wire v4+ so the
+    /// follower's apply span joins the primary-side traces.
+    DeltaBatchV3 {
+        seq: u64,
+        entries: Vec<(u64, SketchDelta)>,
+        seal_unix_ns: u64,
+        writer_traces: Vec<u64>,
+    },
     /// The metrics registry's text exposition (see
     /// [`crate::obs::MetricsRegistry::render`]): versioned header line
     /// plus sorted `name{label="v"} value` lines. Strictly utf-8 on the
     /// wire — hostile bytes fail decode with a typed error.
     MetricsText(String),
+    /// The flight recorder's recent events (see
+    /// [`crate::obs::recorder::snapshot`]), versioned so the event
+    /// record can grow: payload is version u8 (currently 1) + count u32
+    /// + count fixed-size event records.
+    TraceEvents { events: Vec<TraceEvent> },
     Error { code: ErrorCode, message: String },
 }
 
@@ -422,19 +480,44 @@ pub fn encode_delta_batch(seq: u64, entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
 /// Encode a `DELTA_BATCH_V3` frame straight from a sealed batch's
 /// borrowed typed entries — the primary's subscriber-streaming hot path
 /// (batches are shared `Arc`s across subscribers; no entry clone per
-/// send).
+/// send). Never emits the wire-v4 `TRACE_IDS` entry; use
+/// [`encode_delta_batch_v4`] for subscribers that negotiated it.
 pub fn encode_delta_batch_v3(
     seq: u64,
     entries: &[(u64, SketchDelta)],
     seal_unix_ns: u64,
 ) -> Vec<u8> {
+    encode_delta_batch_typed(seq, entries, seal_unix_ns, &[])
+}
+
+/// Encode a wire-v4 delta batch: a `DELTA_BATCH_V3` frame that may
+/// additionally carry the batch's last-writer trace IDs as a trailing
+/// [`delta_kind::TRACE_IDS`] metadata entry. Only for subscribers that
+/// negotiated [`DELTA_WIRE_V4`] — a v3 decoder rejects the new kind.
+pub fn encode_delta_batch_v4(
+    seq: u64,
+    entries: &[(u64, SketchDelta)],
+    seal_unix_ns: u64,
+    writer_traces: &[u64],
+) -> Vec<u8> {
+    encode_delta_batch_typed(seq, entries, seal_unix_ns, writer_traces)
+}
+
+fn encode_delta_batch_typed(
+    seq: u64,
+    entries: &[(u64, SketchDelta)],
+    seal_unix_ns: u64,
+    writer_traces: &[u64],
+) -> Vec<u8> {
     let seal = if seal_unix_ns != 0 { 1usize } else { 0 };
+    let traces = if writer_traces.is_empty() { 0usize } else { 1 };
     let payload_len = 12
         + entries.iter().map(|(_, d)| DELTA_ENTRY_OVERHEAD + d.body_len()).sum::<usize>()
-        + seal * (DELTA_ENTRY_OVERHEAD + 8);
+        + seal * (DELTA_ENTRY_OVERHEAD + 8)
+        + traces * (DELTA_ENTRY_OVERHEAD + writer_traces.len() * 8);
     let mut payload = Vec::with_capacity(payload_len);
     payload.extend_from_slice(&seq.to_le_bytes());
-    payload.extend_from_slice(&((entries.len() + seal) as u32).to_le_bytes());
+    payload.extend_from_slice(&((entries.len() + seal + traces) as u32).to_le_bytes());
     for (key, delta) in entries {
         payload.extend_from_slice(&key.to_le_bytes());
         let (kind, body): (u8, &[u8]) = match delta {
@@ -447,14 +530,22 @@ pub fn encode_delta_batch_v3(
         payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
         payload.extend_from_slice(body);
     }
+    // Trailing metadata entries (seal timestamp, then writer trace
+    // IDs). Appended last so legacy-minded decoders that apply in order
+    // see all real deltas first.
     if seal != 0 {
-        // Trailing metadata entry: the seal timestamp. Appended last so
-        // legacy-minded decoders that apply in order see all real
-        // deltas first.
         payload.extend_from_slice(&0u64.to_le_bytes());
         payload.push(delta_kind::SEAL_TS);
         payload.extend_from_slice(&8u32.to_le_bytes());
         payload.extend_from_slice(&seal_unix_ns.to_le_bytes());
+    }
+    if traces != 0 {
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.push(delta_kind::TRACE_IDS);
+        payload.extend_from_slice(&((writer_traces.len() * 8) as u32).to_le_bytes());
+        for id in writer_traces {
+            payload.extend_from_slice(&id.to_le_bytes());
+        }
     }
     frame(opcodes::DELTA_BATCH_V3, &payload)
 }
@@ -469,6 +560,45 @@ pub fn encode_insert_batch(key: u64, words: &[u32]) -> Vec<u8> {
         payload.extend_from_slice(&w.to_le_bytes());
     }
     frame(opcodes::INSERT_BATCH, &payload)
+}
+
+/// Encode an `INSERT_BATCH` frame with the 16-byte trailing trace
+/// context (see the module docs). Only send to servers that answered
+/// the `TRACE_DUMP` probe — older servers reject the longer payload.
+pub fn encode_insert_batch_traced(key: u64, words: &[u32], trace_id: u64) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(12 + words.len() * 4 + TRACE_CTX_LEN);
+    payload.extend_from_slice(&key.to_le_bytes());
+    payload.extend_from_slice(&(words.len() as u32).to_le_bytes());
+    for &w in words {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    payload.extend_from_slice(&crate::obs::trace::encode_trace_ctx(trace_id));
+    frame(opcodes::INSERT_BATCH, &payload)
+}
+
+/// Split an inbound request payload into (body, trace id): if `opcode`
+/// supports the trailing trace-context extension and `payload` carries
+/// a well-formed one *past its exact expected body length*, return the
+/// body with the trailer peeled and the decoded trace ID. Everything
+/// else passes through untouched, so strict request decoding (and its
+/// error behavior for hostile frames) is exactly what it was before
+/// trace contexts existed.
+pub fn split_trace_ctx(opcode: u8, payload: &[u8]) -> (&[u8], Option<u64>) {
+    if opcode != opcodes::INSERT_BATCH || payload.len() < 12 + TRACE_CTX_LEN {
+        return (payload, None);
+    }
+    // Body length is fully determined by the declared word count, so a
+    // 16-byte surplus is unambiguous.
+    let count = u32::from_le_bytes(payload[8..12].try_into().expect("len checked")) as u64;
+    let expect = 12 + count * 4;
+    if payload.len() as u64 != expect + TRACE_CTX_LEN as u64 {
+        return (payload, None);
+    }
+    let split = expect as usize;
+    match decode_trace_ctx(&payload[split..]) {
+        Some(id) => (&payload[..split], Some(id)),
+        None => (payload, None),
+    }
 }
 
 impl Request {
@@ -511,6 +641,7 @@ impl Request {
                 frame(opcodes::REPLICA_ACK, &cursor.to_le_bytes())
             }
             Request::MetricsDump => frame(opcodes::METRICS_DUMP, &[]),
+            Request::TraceDump => frame(opcodes::TRACE_DUMP, &[]),
         }
     }
 
@@ -579,6 +710,7 @@ impl Request {
             }
             opcodes::REPLICA_ACK => Request::ReplicaAck { cursor: r.u64()? },
             opcodes::METRICS_DUMP => Request::MetricsDump,
+            opcodes::TRACE_DUMP => Request::TraceDump,
             other => return Err(ProtocolError::BadOpcode(other)),
         };
         r.finish()?;
@@ -619,6 +751,7 @@ impl Response {
             Response::DeltaBatch { .. } => "DeltaBatch",
             Response::DeltaBatchV3 { .. } => "DeltaBatchV3",
             Response::MetricsText(_) => "MetricsText",
+            Response::TraceEvents { .. } => "TraceEvents",
             Response::Error { .. } => "Error",
         }
     }
@@ -670,8 +803,8 @@ impl Response {
                 frame(opcodes::FULL_SYNC, &payload)
             }
             Response::DeltaBatch { seq, entries } => encode_delta_batch(*seq, entries),
-            Response::DeltaBatchV3 { seq, entries, seal_unix_ns } => {
-                encode_delta_batch_v3(*seq, entries, *seal_unix_ns)
+            Response::DeltaBatchV3 { seq, entries, seal_unix_ns, writer_traces } => {
+                encode_delta_batch_typed(*seq, entries, *seal_unix_ns, writer_traces)
             }
             Response::MetricsText(text) => {
                 let bytes = text.as_bytes();
@@ -679,6 +812,20 @@ impl Response {
                 payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
                 payload.extend_from_slice(bytes);
                 frame(opcodes::METRICS_TEXT, &payload)
+            }
+            Response::TraceEvents { events } => {
+                let mut payload =
+                    Vec::with_capacity(5 + events.len() * TRACE_EVENT_WIRE_LEN);
+                payload.push(TRACE_EVENTS_VERSION);
+                payload.extend_from_slice(&(events.len() as u32).to_le_bytes());
+                for e in events {
+                    payload.extend_from_slice(&e.ns.to_le_bytes());
+                    payload.extend_from_slice(&e.trace_id.to_le_bytes());
+                    payload.extend_from_slice(&e.payload.to_le_bytes());
+                    payload.push(e.stage);
+                    payload.push(e.kind);
+                }
+                frame(opcodes::TRACE_EVENTS, &payload)
             }
             Response::Error { code, message } => {
                 let msg = message.as_bytes();
@@ -756,6 +903,7 @@ impl Response {
                 }
                 let mut entries = Vec::with_capacity(count as usize);
                 let mut seal_unix_ns = 0u64;
+                let mut writer_traces = Vec::new();
                 for _ in 0..count {
                     let key = r.u64()?;
                     let kind = r.u8()?;
@@ -788,6 +936,22 @@ impl Response {
                             seal_unix_ns = u64::from_le_bytes(body);
                             continue;
                         }
+                        delta_kind::TRACE_IDS => {
+                            // Batch metadata like SEAL_TS: captured off
+                            // to the side, never merged as a delta.
+                            if len % 8 != 0 || len / 8 > MAX_WRITER_TRACES {
+                                return Err(ProtocolError::Malformed(format!(
+                                    "trace ids entry declares a {len}-byte body \
+                                     (want a multiple of 8, at most {})",
+                                    MAX_WRITER_TRACES * 8
+                                )));
+                            }
+                            writer_traces.reserve(len / 8);
+                            for _ in 0..len / 8 {
+                                writer_traces.push(r.u64()?);
+                            }
+                            continue;
+                        }
                         other => {
                             return Err(ProtocolError::Malformed(format!(
                                 "unknown delta entry kind {other}"
@@ -796,7 +960,7 @@ impl Response {
                     };
                     entries.push((key, delta));
                 }
-                Response::DeltaBatchV3 { seq, entries, seal_unix_ns }
+                Response::DeltaBatchV3 { seq, entries, seal_unix_ns, writer_traces }
             }
             opcodes::METRICS_TEXT => {
                 let len = r.u32()? as usize;
@@ -804,6 +968,34 @@ impl Response {
                     ProtocolError::Malformed("metrics exposition not utf-8".into())
                 })?;
                 Response::MetricsText(text)
+            }
+            opcodes::TRACE_EVENTS => {
+                let version = r.u8()?;
+                if version != TRACE_EVENTS_VERSION {
+                    return Err(ProtocolError::Malformed(format!(
+                        "trace events version {version} (want {TRACE_EVENTS_VERSION})"
+                    )));
+                }
+                let count = r.u32()?;
+                // Alloc guard: the declared count must fit the payload
+                // (checked in u64 so a hostile count cannot wrap).
+                if r.remaining() as u64 != count as u64 * TRACE_EVENT_WIRE_LEN as u64 {
+                    return Err(ProtocolError::Malformed(format!(
+                        "trace events declares {count} records but carries {} payload bytes",
+                        r.remaining()
+                    )));
+                }
+                let mut events = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    events.push(TraceEvent {
+                        ns: r.u64()?,
+                        trace_id: r.u64()?,
+                        payload: r.u64()?,
+                        stage: r.u8()?,
+                        kind: r.u8()?,
+                    });
+                }
+                Response::TraceEvents { events }
             }
             opcodes::ERROR => {
                 let code = r.u8()?;
@@ -1152,6 +1344,8 @@ mod tests {
         });
         roundtrip_request(Request::ReplicaAck { cursor: 12345 });
         roundtrip_request(Request::MetricsDump);
+        roundtrip_request(Request::TraceDump);
+        roundtrip_request(Request::Subscribe { epoch: 5, cursor: 6, wire: DELTA_WIRE_V4 });
     }
 
     #[test]
@@ -1216,6 +1410,7 @@ mod tests {
             seq: 0,
             entries: vec![],
             seal_unix_ns: 0,
+            writer_traces: vec![],
         });
         roundtrip_response(Response::DeltaBatchV3 {
             seq: 91,
@@ -1226,6 +1421,7 @@ mod tests {
                 (u64::MAX, SketchDelta::Tombstone),
             ],
             seal_unix_ns: 0,
+            writer_traces: vec![],
         });
         // The seal timestamp rides as a trailing metadata entry and
         // roundtrips without polluting `entries`.
@@ -1233,6 +1429,34 @@ mod tests {
             seq: 92,
             entries: vec![(1, SketchDelta::Full(vec![7]))],
             seal_unix_ns: 1_722_000_000_000_000_000,
+            writer_traces: vec![],
+        });
+        // Writer trace IDs ride as a trailing metadata entry too (wire
+        // v4), alone or alongside the seal timestamp.
+        roundtrip_response(Response::DeltaBatchV3 {
+            seq: 93,
+            entries: vec![(1, SketchDelta::Full(vec![7]))],
+            seal_unix_ns: 0,
+            writer_traces: vec![0xAB, u64::MAX],
+        });
+        roundtrip_response(Response::DeltaBatchV3 {
+            seq: 94,
+            entries: vec![(2, SketchDelta::Tombstone)],
+            seal_unix_ns: 1_722_000_000_000_000_001,
+            writer_traces: (1..=MAX_WRITER_TRACES as u64).collect(),
+        });
+        roundtrip_response(Response::TraceEvents { events: vec![] });
+        roundtrip_response(Response::TraceEvents {
+            events: vec![
+                TraceEvent { ns: 1, trace_id: 2, payload: 3, stage: 1, kind: 0 },
+                TraceEvent {
+                    ns: u64::MAX,
+                    trace_id: u64::MAX,
+                    payload: u64::MAX,
+                    stage: 255,
+                    kind: 255,
+                },
+            ],
         });
         roundtrip_response(Response::MetricsText(String::new()));
         roundtrip_response(Response::MetricsText(
@@ -1313,6 +1537,7 @@ mod tests {
                 (3, SketchDelta::RegisterDiff(vec![9])),
             ],
             seal_unix_ns: 0,
+            writer_traces: vec![],
         }
         .encode();
         let payload = &good[FRAME_HEADER_LEN..];
@@ -1388,14 +1613,19 @@ mod tests {
             (5, SketchDelta::RegisterDiff(vec![2, 2])), // diff right after a tombstone
             (5, SketchDelta::Tombstone),                // and dead again
         ];
-        let frame =
-            Response::DeltaBatchV3 { seq: 8, entries: entries.clone(), seal_unix_ns: 0 }
-                .encode();
+        let frame = Response::DeltaBatchV3 {
+            seq: 8,
+            entries: entries.clone(),
+            seal_unix_ns: 0,
+            writer_traces: vec![],
+        }
+        .encode();
         match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
-            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns } => {
+            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns, writer_traces } => {
                 assert_eq!(seq, 8);
                 assert_eq!(got, entries, "order and duplicates must survive the wire");
                 assert_eq!(seal_unix_ns, 0);
+                assert!(writer_traces.is_empty());
             }
             other => panic!("expected DeltaBatchV3, got {other:?}"),
         }
@@ -1436,6 +1666,135 @@ mod tests {
             Response::decode(opcodes::METRICS_TEXT, &padded),
             Err(ProtocolError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn trace_ids_and_trace_events_hostile_payloads_are_typed_errors() {
+        let trace_ids_payload = |body: &[u8]| {
+            let mut p = 9u64.to_le_bytes().to_vec(); // seq
+            p.extend_from_slice(&1u32.to_le_bytes()); // one entry
+            p.extend_from_slice(&0u64.to_le_bytes()); // key 0
+            p.push(delta_kind::TRACE_IDS);
+            p.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            p.extend_from_slice(body);
+            p
+        };
+        // A body that is not a multiple of 8 is rejected.
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &trace_ids_payload(&[1, 2, 3])),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // More IDs than the cap is rejected (hostile length guard).
+        let fat = vec![0u8; (MAX_WRITER_TRACES + 1) * 8];
+        assert!(matches!(
+            Response::decode(opcodes::DELTA_BATCH_V3, &trace_ids_payload(&fat)),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Exactly the cap decodes.
+        let max = vec![7u8; MAX_WRITER_TRACES * 8];
+        assert!(Response::decode(opcodes::DELTA_BATCH_V3, &trace_ids_payload(&max)).is_ok());
+        // TRACE_EVENTS: unknown version is rejected.
+        let mut bad_version = vec![2u8];
+        bad_version.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(
+            Response::decode(opcodes::TRACE_EVENTS, &bad_version),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A count disagreeing with the payload size is rejected before
+        // allocation, in both directions.
+        for (count, carry) in [(u32::MAX, 0usize), (2, TRACE_EVENT_WIRE_LEN), (1, 0)] {
+            let mut p = vec![TRACE_EVENTS_VERSION];
+            p.extend_from_slice(&count.to_le_bytes());
+            p.extend_from_slice(&vec![0u8; carry]);
+            assert!(
+                matches!(
+                    Response::decode(opcodes::TRACE_EVENTS, &p),
+                    Err(ProtocolError::Malformed(_))
+                ),
+                "count {count} with {carry} body bytes must be Malformed"
+            );
+        }
+        // Trailing bytes rejected.
+        let good = Response::TraceEvents {
+            events: vec![TraceEvent { ns: 1, trace_id: 2, payload: 3, stage: 0, kind: 0 }],
+        }
+        .encode();
+        let mut padded = good[FRAME_HEADER_LEN..].to_vec();
+        padded.push(0);
+        assert!(matches!(
+            Response::decode(opcodes::TRACE_EVENTS, &padded),
+            Err(ProtocolError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn traced_insert_batch_peels_cleanly_and_stays_strict_for_old_decoders() {
+        let trace_id = 0xABCD_EF01_2345_6789u64;
+        for words in [vec![], vec![10u32, 20, 30]] {
+            let frame = encode_insert_batch_traced(42, &words, trace_id);
+            let payload = &frame[FRAME_HEADER_LEN..];
+            // A pre-tracing decoder (strict length check) rejects the
+            // longer payload — which is why clients must probe first.
+            assert!(matches!(
+                Request::decode(opcodes::INSERT_BATCH, payload),
+                Err(ProtocolError::Malformed(_))
+            ));
+            // The server-side peel recovers the body and the ID...
+            let (body, id) = split_trace_ctx(opcodes::INSERT_BATCH, payload);
+            assert_eq!(id, Some(trace_id));
+            assert_eq!(
+                Request::decode(opcodes::INSERT_BATCH, body).unwrap(),
+                Request::InsertBatch { key: 42, words: words.clone() }
+            );
+            // ...and an untraced frame passes through untouched.
+            let plain = encode_insert_batch(42, &words);
+            let (body, id) = split_trace_ctx(opcodes::INSERT_BATCH, &plain[FRAME_HEADER_LEN..]);
+            assert_eq!(id, None);
+            assert_eq!(body, &plain[FRAME_HEADER_LEN..]);
+        }
+        // 16 trailing garbage bytes (sampled flag clear) are NOT peeled:
+        // strict decode rejects them exactly as before tracing existed.
+        let mut garbage = encode_insert_batch(7, &[1, 2])[FRAME_HEADER_LEN..].to_vec();
+        garbage.extend_from_slice(&[0u8; TRACE_CTX_LEN]);
+        let (body, id) = split_trace_ctx(opcodes::INSERT_BATCH, &garbage);
+        assert_eq!(id, None);
+        assert_eq!(body.len(), garbage.len(), "garbage trailer must not be peeled");
+        assert!(matches!(
+            Request::decode(opcodes::INSERT_BATCH, &garbage),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Other opcodes never peel, even with a plausible trailer.
+        let mut est = 5u64.to_le_bytes().to_vec();
+        est.extend_from_slice(&crate::obs::trace::encode_trace_ctx(trace_id));
+        let (_, id) = split_trace_ctx(opcodes::ESTIMATE, &est);
+        assert_eq!(id, None);
+    }
+
+    #[test]
+    fn v3_and_v4_delta_encodings_differ_only_by_the_trace_entry() {
+        let entries = vec![(1, SketchDelta::Full(vec![1, 2, 3]))];
+        // No traces: v4 bytes are exactly v3 bytes.
+        assert_eq!(
+            encode_delta_batch_v4(5, &entries, 99, &[]),
+            encode_delta_batch_v3(5, &entries, 99),
+        );
+        // With traces: the v4 frame decodes back with the IDs; the v3
+        // rendering of the same batch stays free of kind-5 entries (a
+        // v3 subscriber's strict decoder accepts it).
+        let v4 = encode_delta_batch_v4(5, &entries, 99, &[11, 22]);
+        match Response::decode(opcodes::DELTA_BATCH_V3, &v4[FRAME_HEADER_LEN..]).unwrap() {
+            Response::DeltaBatchV3 { entries: got, seal_unix_ns, writer_traces, .. } => {
+                assert_eq!(got, entries);
+                assert_eq!(seal_unix_ns, 99);
+                assert_eq!(writer_traces, vec![11, 22]);
+            }
+            other => panic!("expected DeltaBatchV3, got {other:?}"),
+        }
+        let v3 = encode_delta_batch_v3(5, &entries, 99);
+        match Response::decode(opcodes::DELTA_BATCH_V3, &v3[FRAME_HEADER_LEN..]).unwrap() {
+            Response::DeltaBatchV3 { writer_traces, .. } => assert!(writer_traces.is_empty()),
+            other => panic!("expected DeltaBatchV3, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1690,14 +2049,19 @@ mod tests {
             (0, SketchDelta::GlobalDiff(vec![1, 2, 3, 4, 5])),
             (5, SketchDelta::Tombstone),
         ];
-        let frame =
-            Response::DeltaBatchV3 { seq: 3, entries: entries.clone(), seal_unix_ns: 7_777 }
-                .encode();
+        let frame = Response::DeltaBatchV3 {
+            seq: 3,
+            entries: entries.clone(),
+            seal_unix_ns: 7_777,
+            writer_traces: vec![0xF00D],
+        }
+        .encode();
         match Response::decode(opcodes::DELTA_BATCH_V3, &frame[FRAME_HEADER_LEN..]).unwrap() {
-            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns } => {
+            Response::DeltaBatchV3 { seq, entries: got, seal_unix_ns, writer_traces } => {
                 assert_eq!(seq, 3);
                 assert_eq!(got, entries);
                 assert_eq!(seal_unix_ns, 7_777, "seal timestamp must survive the wire");
+                assert_eq!(writer_traces, vec![0xF00D], "trace ids must survive the wire");
             }
             other => panic!("expected DeltaBatchV3, got {other:?}"),
         }

@@ -76,13 +76,16 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::protocol::{
-    encode_delta_batch, encode_delta_batch_v3, opcodes, request_opcode_name, ErrorCode,
-    EvictPolicy, FrameDecoder, FrameEncoder, Request, Response, StatsSummary, DELTA_WIRE_V3,
-    MAX_PAYLOAD, REQUEST_OPCODE_MAX,
+    encode_delta_batch, encode_delta_batch_v3, encode_delta_batch_v4, opcodes,
+    request_opcode_name, split_trace_ctx, ErrorCode, EvictPolicy, FrameDecoder, FrameEncoder,
+    Request, Response, StatsSummary, DELTA_WIRE_V3, DELTA_WIRE_V4, MAX_PAYLOAD,
+    REQUEST_OPCODE_MAX,
 };
 use super::reactor::{self, Poller, TickProfile, WakeRx, Waker};
 use super::snapshot;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
+use crate::obs::recorder;
+use crate::obs::trace::{EventKind, Span, Stage, StageTimers, TraceEvent};
 use crate::obs::{Counter, Gauge, LatencyHistogram, MetricsRegistry};
 use crate::registry::{SketchDelta, SketchRegistry};
 use crate::replica::{LogRead, ReplicationConfig, ReplicationLog, SealedBatch};
@@ -116,6 +119,10 @@ const SUB_PUMP_TARGET: usize = 1 << 20;
 /// (idle sweeps, manually sealed batches in tests). Stop and capture
 /// wakeups arrive via the waker, not the tick.
 const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// Most recent flight-recorder events a `TraceDump` reply carries
+/// (4096 × 26 wire bytes ≈ 104 KiB, far under `MAX_PAYLOAD`).
+const TRACE_DUMP_MAX_EVENTS: usize = 4096;
 
 /// Poll tokens for the two non-connection descriptors.
 const TOKEN_WAKER: usize = usize::MAX;
@@ -327,9 +334,17 @@ impl RpcMetrics {
     }
 
     /// One dispatched frame: bump the per-opcode series and, past the
-    /// configured threshold, the slow-request path (counter always,
-    /// warn line rate-limited).
-    fn observe(&self, cfg: &ServerConfig, opcode: u8, payload: &[u8], elapsed: Duration) {
+    /// configured threshold, the slow-request path (counter always;
+    /// warn line, structured recorder event and black-box snapshot all
+    /// rate-limited behind the same CAS).
+    fn observe(
+        &self,
+        cfg: &ServerConfig,
+        opcode: u8,
+        payload: &[u8],
+        elapsed: Duration,
+        trace_id: u64,
+    ) {
         let Some(i) = Self::idx(opcode) else { return };
         let elapsed_ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
         self.total[i].inc();
@@ -355,6 +370,23 @@ impl RpcMetrics {
             } else {
                 0
             };
+            // Structured half of the warn: an instant event marks the
+            // slow dispatch in the ring (under its trace, if any), then
+            // the black box freezes the ring — the offending span's
+            // begin/end events were recorded before `observe` ran, so
+            // the snapshot contains them.
+            recorder::record(TraceEvent {
+                ns: crate::obs::monotonic_ns(),
+                trace_id,
+                payload: elapsed_ns,
+                stage: Stage::Dispatch as u8,
+                kind: EventKind::Instant as u8,
+            });
+            recorder::note_anomaly(&format!(
+                "slow request: op={} took {:.3}ms",
+                request_opcode_name(opcode),
+                elapsed_ns as f64 / 1e6
+            ));
             crate::log_warn!(
                 "server",
                 "slow request: op={} words={} payload={}B took {:.3}ms (threshold {:.3}ms)",
@@ -382,6 +414,9 @@ struct Shared {
     metrics: Arc<MetricsRegistry>,
     /// Per-opcode dispatch instrumentation.
     rpc: RpcMetrics,
+    /// Per-stage `stage_latency_ns{stage=...}` histograms fed by the
+    /// serving-path [`Span`]s (decode, dispatch, shard ingest).
+    timers: StageTimers,
     /// Highest cursor any subscriber has acked — the most-advanced
     /// follower, so the bridged lag gauges are a lower bound when
     /// several followers subscribe. Shared with the replication-lag
@@ -446,12 +481,18 @@ impl SketchServer {
         let metrics = MetricsRegistry::shared();
         let acked_seq = Arc::new(AtomicU64::new(0));
         register_bridges(&metrics, &registry, log.as_ref(), &acked_seq);
+        // The flight recorder is process-global and off by default (one
+        // relaxed load for library users); a serving process wants it
+        // on. Never disabled on shutdown — another server in the same
+        // process (tests, embedded replicas) may still be recording.
+        recorder::set_enabled(true);
         let shared = Arc::new(Shared {
             registry,
             cfg,
             stop: AtomicBool::new(false),
             stats: ServerStats::register(&metrics),
             rpc: RpcMetrics::register(&metrics),
+            timers: StageTimers::register(&metrics),
             metrics,
             acked_seq,
             log,
@@ -944,8 +985,16 @@ fn on_readable(conn: &mut Conn, shared: &Shared, buf: &mut [u8]) {
 /// own bump, and adding a site silently under-counted until someone
 /// noticed).
 fn queue_reply(conn: &mut Conn, shared: &Shared, resp: Response) {
-    if matches!(resp, Response::Error { .. }) {
+    if let Response::Error { code, .. } = &resp {
         shared.stats.error_frames.fetch_add(1, Ordering::Relaxed);
+        // Typed errors are anomalies: freeze the flight recorder's ring
+        // into the black box so the events leading up to the error
+        // survive the ring overwriting them. Bounded (the black box
+        // drops its oldest entry), and skipped entirely while the
+        // recorder is off — `note_anomaly` allocates.
+        if recorder::enabled() {
+            recorder::note_anomaly(&format!("error reply: {code:?}"));
+        }
     }
     conn.encoder.push(resp.encode());
 }
@@ -982,14 +1031,19 @@ fn process_frames(conn: &mut Conn, shared: &Shared) {
             }
         };
         shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+        // Peel the optional trailing trace context before the strict
+        // request decode sees the payload; non-matching payloads pass
+        // through byte-identical (trace_id 0 = untraced).
+        let (body, trace_ctx) = split_trace_ctx(opcode, &payload);
+        let trace_id = trace_ctx.unwrap_or(0);
         let dispatched = Instant::now();
         match conn.mode {
-            ConnMode::Rpc => handle_rpc_frame(conn, shared, opcode, &payload),
+            ConnMode::Rpc => handle_rpc_frame(conn, shared, opcode, body, trace_id),
             ConnMode::Subscriber { .. } => {
                 handle_subscriber_frame(conn, shared, opcode, &payload)
             }
         }
-        shared.rpc.observe(&shared.cfg, opcode, &payload, dispatched.elapsed());
+        shared.rpc.observe(&shared.cfg, opcode, &payload, dispatched.elapsed(), trace_id);
     }
     shared
         .stats
@@ -999,8 +1053,15 @@ fn process_frames(conn: &mut Conn, shared: &Shared) {
 
 /// One complete frame on an RPC-mode connection: decode, dispatch,
 /// queue the reply — or flip into a subscriber stream on `SUBSCRIBE`.
-fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]) {
-    let resp = match Request::decode(opcode, payload) {
+/// `payload` arrives with any trace context already peeled off;
+/// `trace_id` is 0 for untraced requests.
+fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8], trace_id: u64) {
+    let decoded = {
+        let _span = Span::enter_timed(Stage::Decode, trace_id, shared.timers.timer(Stage::Decode))
+            .with_payload(payload.len() as u64);
+        Request::decode(opcode, payload)
+    };
+    let resp = match decoded {
         Ok(Request::Subscribe { epoch, cursor, wire }) => match shared.log.clone() {
             Some(log) => {
                 // The connection becomes a replication stream and never
@@ -1029,7 +1090,7 @@ fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]
             code: ErrorCode::Malformed,
             message: "ReplicaAck outside an active subscription".into(),
         },
-        Ok(req) => dispatch(req, shared),
+        Ok(req) => dispatch(req, shared, trace_id),
         Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
     };
     queue_reply(conn, shared, resp);
@@ -1309,6 +1370,17 @@ pub(crate) fn write_full(stream: &mut TcpStream, buf: &[u8], stop: &AtomicBool) 
 /// terminal typed error instead of streaming a frame the follower's
 /// header parser would reject on every reconnect forever.
 fn encode_batch_for_wire(batch: &SealedBatch, wire: u8) -> Option<Vec<u8>> {
+    if wire >= DELTA_WIRE_V4 {
+        // v4 subscribers additionally get the last-writer trace IDs
+        // sealed with the batch (a kind-5 metadata entry a v3 decoder
+        // would reject, hence the gate).
+        return Some(encode_delta_batch_v4(
+            batch.seq,
+            &batch.entries,
+            batch.sealed_unix_ns,
+            &batch.writer_traces,
+        ));
+    }
     if wire >= DELTA_WIRE_V3 {
         return Some(encode_delta_batch_v3(batch.seq, &batch.entries, batch.sealed_unix_ns));
     }
@@ -1345,10 +1417,14 @@ fn encode_batch_for_wire(batch: &SealedBatch, wire: u8) -> Option<Vec<u8>> {
     Some(encode_delta_batch(batch.seq, &legacy))
 }
 
-fn dispatch(req: Request, shared: &Shared) -> Response {
+fn dispatch(req: Request, shared: &Shared, trace_id: u64) -> Response {
+    let _dispatch_span =
+        Span::enter_timed(Stage::Dispatch, trace_id, shared.timers.timer(Stage::Dispatch));
     let registry = &shared.registry;
     // A read-only replica rejects every mutating RPC with a typed frame
-    // before touching the registry; queries pass through untouched.
+    // before touching the registry; queries pass through untouched
+    // (including `TraceDump` — it is how a replica's flight recorder is
+    // read).
     if shared.cfg.read_only
         && matches!(
             req,
@@ -1367,7 +1443,26 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
         Request::Ping => Response::Pong,
         Request::InsertBatch { key, words } => {
             let n = words.len() as u64;
-            registry.ingest(key, &words);
+            // A traced write deposits its ID with the replication log
+            // *before* mutating the registry: the capture thread drains
+            // deposits only when it seals dirty entries, so the ID
+            // rides the batch covering this ingest (or, across a seal
+            // race, the immediately preceding one — both are "last
+            // writers" of the sealed window).
+            if trace_id != 0 {
+                if let Some(log) = &shared.log {
+                    log.note_writer_trace(trace_id);
+                }
+            }
+            {
+                let _ingest_span = Span::enter_timed(
+                    Stage::ShardIngest,
+                    trace_id,
+                    shared.timers.timer(Stage::ShardIngest),
+                )
+                .with_payload(n);
+                registry.ingest(key, &words);
+            }
             shared.stats.words_ingested.fetch_add(n, Ordering::Relaxed);
             // A registry configured with a memory budget holds it without
             // every client having to know the cap: enforcement is
@@ -1413,6 +1508,14 @@ fn dispatch(req: Request, shared: &Shared) -> Response {
         // observed); renders every registered instrument, including the
         // scrape-time bridged gauges.
         Request::MetricsDump => Response::MetricsText(shared.metrics.render()),
+        // The flight recorder's recent events, merged across every
+        // thread's ring and capped to the newest. Served on read-only
+        // replicas too (it is how a follower's apply spans are read);
+        // also the capability probe a tracing client sends — a
+        // pre-tracing server answers a typed BadOpcode error instead.
+        Request::TraceDump => {
+            Response::TraceEvents { events: recorder::snapshot(TRACE_DUMP_MAX_EVENTS) }
+        }
         Request::Evict(policy) => {
             let keys = match policy {
                 EvictPolicy::Key(key) => registry.evict(&key).is_some() as u64,
