@@ -2,12 +2,17 @@
 //! (EXPERIMENTS.md): hash rates, aggregation, estimate, merge, and the
 //! PJRT engine's batch call.
 
-use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::bench_harness::{bench_main, quick_mode, Measurement};
 use hll_fpga::cpu_baseline::{aggregate32_batched, aggregate64_batched};
 use hll_fpga::hll::murmur3::{murmur3_x64_64_u32, murmur3_x86_32_u32};
-use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
+use hll_fpga::hll::{AdaptiveSketch, HashKind, HllConfig, HllSketch};
 use hll_fpga::runtime::{Engine, Manifest, XlaEngine, XlaService};
 use hll_fpga::util::Xoshiro256StarStar;
+
+/// Per-word cost line for the batch-ingest stages.
+fn per_word(m: &Measurement, n: usize) -> String {
+    format!("  -> {:.2} ns/word", m.median() * 1e9 / n as f64)
+}
 
 fn main() {
     let b = bench_main("hot path microbenchmarks");
@@ -61,6 +66,41 @@ fn main() {
         s
     });
     println!("{}", m.report_line());
+
+    // --- Batch ingest path (registry's split: hash once, fold runs) ---
+    // The registry hot path hashes every word in one tight loop
+    // (`hash_words`) and folds the pre-hashed run into register files
+    // (`insert_hashes`); these time each stage and the whole split.
+    let mut hashes = vec![0u64; n];
+    let m = b.run_bytes("hash_words H64 (batch hash loop)", bytes, || {
+        cfg64.hash_words(&words, &mut hashes);
+        hashes[0]
+    });
+    println!("{}", m.report_line());
+    println!("{}", per_word(&m, n));
+    cfg64.hash_words(&words, &mut hashes);
+    let m = b.run_bytes("insert_hashes (pre-hashed dense fold)", bytes, || {
+        let mut s = HllSketch::new(cfg64);
+        s.insert_hashes(&hashes);
+        s
+    });
+    println!("{}", m.report_line());
+    println!("{}", per_word(&m, n));
+    let m = b.run_bytes("hash_words + insert_hashes (full batch path)", bytes, || {
+        let mut s = HllSketch::new(cfg64);
+        cfg64.hash_words(&words, &mut hashes);
+        s.insert_hashes(&hashes);
+        s
+    });
+    println!("{}", m.report_line());
+    println!("{}", per_word(&m, n));
+    let m = b.run_bytes("adaptive insert_hashes (sparse->packed tiers)", bytes, || {
+        let mut s = AdaptiveSketch::new(cfg64);
+        s.insert_hashes(&hashes);
+        s
+    });
+    println!("{}", m.report_line());
+    println!("{}", per_word(&m, n));
 
     // --- Computation phase + merge ---
     let mut filled = HllSketch::new(cfg64);

@@ -1,9 +1,13 @@
 //! Registry scaling bench: keyed-ingest throughput vs thread count and
-//! key cardinality, plus the bit-exactness check that anchors the whole
-//! concurrent design (N-thread shared-sketch ingest == sequential).
+//! key cardinality, the batched-vs-scalar comparison on the dense tier,
+//! plus the bit-exactness checks that anchor the whole concurrent
+//! design (N-thread shared-sketch ingest == sequential; batch ingest ==
+//! word-at-a-time).
 //!
 //! Run: `cargo bench --bench registry_scale` (HLL_BENCH_QUICK=1 shrinks
 //! the word volume but keeps the 1M-key / 4-thread coverage).
+//! `--smoke` runs only the batch/scalar parity gate — the CI invocation
+//! (exits nonzero on any divergence, measures no throughput).
 
 use std::sync::Arc;
 
@@ -13,8 +17,109 @@ use hll_fpga::hll::{ConcurrentHllSketch, HllConfig, HllSketch};
 use hll_fpga::net::KeyedFlowGen;
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
 
+/// A register file the packed tier cannot hold — alternating far-apart
+/// values defeat its 7-wide offset window — so `merge_sketch` residents
+/// the key in the dense tier. This is how the dense-tier comparison
+/// gets resident dense keys without streaming millions of words first.
+fn bimodal_dense(cfg: HllConfig) -> HllSketch {
+    let mut s = HllSketch::new(cfg);
+    for idx in 0..cfg.m() {
+        s.update_register(idx, if idx % 2 == 0 { 1 } else { 40 });
+    }
+    s
+}
+
+/// Fresh registry with `keys` pre-promoted dense-tier keys.
+fn dense_registry(keys: u64) -> Arc<SketchRegistry<u64>> {
+    let registry = SketchRegistry::shared(RegistryConfig {
+        shards: 64,
+        ..RegistryConfig::default()
+    })
+    .unwrap();
+    let dense = bimodal_dense(HllConfig::PAPER);
+    for key in 0..keys {
+        registry.merge_sketch(key, dense.clone()).unwrap();
+    }
+    assert_eq!(registry.stats().dense_keys(), keys as usize, "keys must resident dense");
+    registry
+}
+
+/// Word-at-a-time reference: one `ingest` call per (key, word) pair.
+fn scalar_ingest(registry: &SketchRegistry<u64>, pairs: &[(u64, u32)], threads: usize) {
+    let chunk = pairs.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for slice in pairs.chunks(chunk) {
+            scope.spawn(move || {
+                for &(k, w) in slice {
+                    registry.ingest(k, &[w]);
+                }
+            });
+        }
+    });
+}
+
+/// Batch path: whole routed batches through `ingest_pairs`.
+fn batched_ingest(registry: &SketchRegistry<u64>, pairs: &[(u64, u32)], threads: usize) {
+    let chunk = pairs.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for slice in pairs.chunks(chunk) {
+            scope.spawn(move || {
+                for batch in slice.chunks(8192) {
+                    registry.ingest_pairs(batch);
+                }
+            });
+        }
+    });
+}
+
+/// Parity gate (the `--smoke` CI invocation): batch ingest — registry
+/// entry points and the keyed coordinator — must be bit-exact with the
+/// word-at-a-time reference, estimates AND replication deltas. Any
+/// mismatch panics, which exits the bench nonzero.
+fn smoke_parity() {
+    let mk = || {
+        SketchRegistry::shared(RegistryConfig { shards: 16, ..RegistryConfig::default() }).unwrap()
+    };
+    let mut gen = KeyedFlowGen::new(500, 1.07, 42);
+    let pairs = gen.batch(30_000);
+
+    let batched = mk();
+    let scalar = mk();
+    batched.enable_dirty_tracking();
+    scalar.enable_dirty_tracking();
+    for chunk in pairs.chunks(4_096) {
+        batched.ingest_pairs(chunk);
+    }
+    for &(k, w) in &pairs {
+        scalar.ingest(k, &[w]);
+    }
+    assert_eq!(batched.merge_all(), scalar.merge_all(), "union registers diverge");
+    assert_eq!(batched.len(), scalar.len(), "key population diverges");
+    for (key, est) in scalar.estimates() {
+        assert_eq!(batched.estimate(&key), Some(est), "estimate diverges for key {key}");
+    }
+    let mut a = batched.drain_dirty_deltas();
+    let mut s = scalar.drain_dirty_deltas();
+    a.sort_by_key(|e| e.0);
+    s.sort_by_key(|e| e.0);
+    assert_eq!(a, s, "replication deltas diverge");
+
+    // The keyed coordinator (sorted worker batches over routed runs)
+    // lands the identical union.
+    let keyed = mk();
+    let cfg = CoordinatorConfig { pipelines: 4, batch_size: 1_024, ..Default::default() };
+    run_keyed_stream(&cfg, keyed.clone(), &pairs).unwrap();
+    assert_eq!(keyed.merge_all(), scalar.merge_all(), "keyed coordinator diverges");
+    println!("  batched-ingest parity: PASS (30k words, 500 keys)");
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let b = bench_main("registry scale — keyed ingest");
+    smoke_parity();
+    if smoke {
+        return;
+    }
     let words_per_run: usize = if quick_mode() { 200_000 } else { 2_000_000 };
 
     // --- Concurrent sketch: thread scaling + bit-exactness ---
@@ -104,5 +209,34 @@ fn main() {
             summary.global_estimate.unwrap_or(0.0),
             summary.pairs_per_s() / 1e6,
         );
+    }
+
+    // --- Batched vs scalar keyed ingest on the dense tier ---
+    // The tentpole comparison: the same routed stream through the batch
+    // entry point (`ingest_pairs`: one hash pass, one lock and one map
+    // lookup per key run) against the word-at-a-time path (one `ingest`
+    // call per word). Keys are pre-promoted dense so the measured delta
+    // is pure per-word overhead, not tier churn.
+    println!("\nbatched vs scalar keyed ingest, 64 dense-tier keys (zipf 1.07):");
+    let dense_keys = 64u64;
+    let mut gen = KeyedFlowGen::new(dense_keys, 1.07, 0xDE5E);
+    let dense_pairs = gen.batch(words_per_run / 2);
+    let registry = dense_registry(dense_keys);
+    for threads in [1usize, 8] {
+        let scalar = b.run_items(
+            &format!("scalar word-at-a-time threads={threads}"),
+            dense_pairs.len() as u64,
+            || scalar_ingest(&registry, &dense_pairs, threads),
+        );
+        println!("{}", scalar.report_line());
+        let batched = b.run_items(
+            &format!("batched ingest_pairs threads={threads}"),
+            dense_pairs.len() as u64,
+            || batched_ingest(&registry, &dense_pairs, threads),
+        );
+        println!("{}", batched.report_line());
+        let speedup = batched.throughput_items_per_s().unwrap_or(0.0)
+            / scalar.throughput_items_per_s().unwrap_or(f64::INFINITY);
+        println!("  batched/scalar words-per-second ratio at {threads} thread(s): {speedup:.2}x");
     }
 }

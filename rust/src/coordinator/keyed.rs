@@ -9,6 +9,18 @@
 //! paper uses for its input slicer (Section V-B), applied to lock
 //! stripes instead of wires. Backpressure is identical to the unkeyed
 //! path: bounded queues block the feeder when a worker falls behind.
+//!
+//! Two worker backends fold a routed batch into the registry:
+//!
+//! * **Registry** (the default, [`KeyedCoordinator::start`]) — whole
+//!   shard runs go through [`SketchRegistry::ingest_routed_run`]: one
+//!   batched hash pass, one lock acquisition per shard run, adaptive
+//!   sparse/packed/dense tiers per key.
+//! * **Engine** ([`KeyedCoordinator::start_with_engine`]) — each
+//!   same-key run is aggregated by a [`crate::runtime::Engine`]
+//!   (native or the XLA/Pallas pipeline) into a dense sketch and
+//!   bucket-wise max-merged in. Merge commutes with insertion, so the
+//!   final register files are bit-identical to the registry backend's.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -17,8 +29,10 @@ use std::time::Instant;
 
 use super::config::CoordinatorConfig;
 use super::metrics::{Metrics, MetricsSnapshot};
+use crate::hll::HllSketch;
 use crate::obs::{Span, Stage};
 use crate::registry::SketchRegistry;
+use crate::runtime::{Engine, XlaHandle};
 
 /// Per-worker report for a keyed run.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +67,20 @@ impl KeyedRunSummary {
 /// once; workers never re-hash the key.
 type RoutedPair = (usize, u64, u32);
 
+/// How a keyed worker folds its sorted batch into the registry.
+enum KeyedBackend {
+    /// Direct path: whole shard runs through
+    /// [`SketchRegistry::ingest_routed_run`] (adaptive tiers, batched
+    /// hashing, one lock acquisition per shard run).
+    Registry,
+    /// Compute-engine path: each same-key run is aggregated into a
+    /// dense sketch by the engine (native loop or the XLA/Pallas
+    /// artifacts) and max-merged into the key. Exact under merge
+    /// commutativity; dirty tracking records the merge as a full
+    /// resend.
+    Engine(Box<dyn Engine>),
+}
+
 /// A running keyed coordinator over a shared registry.
 pub struct KeyedCoordinator {
     registry: Arc<SketchRegistry<u64>>,
@@ -68,27 +96,54 @@ pub struct KeyedCoordinator {
 fn run_keyed_worker(
     worker: usize,
     registry: Arc<SketchRegistry<u64>>,
+    backend: KeyedBackend,
     rx: Receiver<Vec<RoutedPair>>,
     metrics: Arc<Metrics>,
 ) -> KeyedWorkerReport {
+    let hll = registry.config().hll;
     let mut batches = 0u64;
     let mut words = 0u64;
     let mut busy = std::time::Duration::ZERO;
+    // Engine-backend word buffer, reused across runs and batches.
+    let mut run_words: Vec<u32> = Vec::new();
     while let Ok(mut batch) = rx.recv() {
         let t0 = Instant::now();
         // Untraced span (keyed batches carry no wire trace context):
         // with the flight recorder armed, per-batch worker_ingest
-        // begin/end pairs still land in this thread's ring.
+        // begin/end pairs still land in this thread's ring. One span
+        // per routed batch, not per word or per run.
         let _span = Span::enter(Stage::WorkerIngest, 0).with_payload(batch.len() as u64);
-        // Group by the precomputed shard (register updates commute, so
-        // the unstable sort's reordering cannot change any sketch) and
-        // ingest each run under one shard-lock acquisition.
-        batch.sort_unstable_by_key(|&(shard, _, _)| shard);
-        let mut rest: &[RoutedPair] = &batch;
-        while let Some(&(shard, _, _)) = rest.first() {
-            let run = rest.iter().take_while(|&&(s, _, _)| s == shard).count();
-            registry.ingest_routed_run(&rest[..run]);
-            rest = &rest[run..];
+        // Sort by (shard, key): shards group so each shard run is one
+        // lock acquisition, and equal keys within a shard become one
+        // maximal run — one map lookup and one dirty resolution per key
+        // per batch downstream. Register updates commute, so the
+        // unstable sort's reordering cannot change any sketch.
+        batch.sort_unstable_by_key(|&(shard, key, _)| (shard, key));
+        match &backend {
+            KeyedBackend::Registry => {
+                let mut rest: &[RoutedPair] = &batch;
+                while let Some(&(shard, _, _)) = rest.first() {
+                    let run = rest.iter().take_while(|&&(s, _, _)| s == shard).count();
+                    registry.ingest_routed_run(&rest[..run]);
+                    rest = &rest[run..];
+                }
+            }
+            KeyedBackend::Engine(engine) => {
+                let mut rest: &[RoutedPair] = &batch;
+                while let Some(&(_, key, _)) = rest.first() {
+                    let run = rest.iter().take_while(|&&(_, k, _)| k == key).count();
+                    run_words.clear();
+                    run_words.extend(rest[..run].iter().map(|&(_, _, w)| w));
+                    let mut sketch = HllSketch::new(hll);
+                    engine
+                        .aggregate(&run_words, &mut sketch)
+                        .expect("keyed engine aggregate failed");
+                    registry
+                        .merge_sketch(key, sketch)
+                        .expect("engine sketch config matches registry");
+                    rest = &rest[run..];
+                }
+            }
         }
         busy += t0.elapsed();
         batches += 1;
@@ -106,12 +161,46 @@ fn run_keyed_worker(
 }
 
 impl KeyedCoordinator {
-    /// Spawn keyed pipeline workers over `registry`. Uses `pipelines`,
-    /// `batch_size` and `queue_depth` from `cfg`; `cfg.hll` must match
-    /// the registry's sketch config.
+    /// Spawn keyed pipeline workers over `registry` using the direct
+    /// registry backend. Uses `pipelines`, `batch_size` and
+    /// `queue_depth` from `cfg`; `cfg.hll` must match the registry's
+    /// sketch config. (`cfg.engine` selects the backend of
+    /// [`Self::start_with_engine`] only; this path always ingests
+    /// through the registry's adaptive tiers.)
     pub fn start(
         cfg: &CoordinatorConfig,
         registry: Arc<SketchRegistry<u64>>,
+    ) -> Result<Self, String> {
+        let backends = (0..cfg.pipelines).map(|_| KeyedBackend::Registry).collect();
+        Self::start_with_backends(cfg, registry, backends)
+    }
+
+    /// Spawn keyed pipeline workers that aggregate each key run through
+    /// a compute engine built from `cfg.engine` (one engine instance
+    /// per worker, mirroring the unkeyed coordinator) and max-merge the
+    /// result into the registry. `xla` is required when `cfg.engine` is
+    /// [`crate::runtime::EngineKind::Xla`].
+    pub fn start_with_engine(
+        cfg: &CoordinatorConfig,
+        registry: Arc<SketchRegistry<u64>>,
+        xla: Option<XlaHandle>,
+    ) -> Result<Self, String> {
+        cfg.validate()?;
+        let mut backends = Vec::with_capacity(cfg.pipelines);
+        for _ in 0..cfg.pipelines {
+            let engine = cfg
+                .engine
+                .build(cfg.hll, xla.clone(), cfg.batch_size)
+                .map_err(|e| format!("keyed engine backend: {e}"))?;
+            backends.push(KeyedBackend::Engine(engine));
+        }
+        Self::start_with_backends(cfg, registry, backends)
+    }
+
+    fn start_with_backends(
+        cfg: &CoordinatorConfig,
+        registry: Arc<SketchRegistry<u64>>,
+        backends: Vec<KeyedBackend>,
     ) -> Result<Self, String> {
         cfg.validate()?;
         if cfg.hll != registry.config().hll {
@@ -124,13 +213,13 @@ impl KeyedCoordinator {
         let metrics = Arc::new(Metrics::default());
         let mut txs = Vec::with_capacity(cfg.pipelines);
         let mut handles = Vec::with_capacity(cfg.pipelines);
-        for w in 0..cfg.pipelines {
+        for (w, backend) in backends.into_iter().enumerate() {
             let (tx, rx) = sync_channel::<Vec<RoutedPair>>(cfg.queue_depth);
             let reg = registry.clone();
             let m = metrics.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("keyed-pipeline-{w}"))
-                .spawn(move || run_keyed_worker(w, reg, rx, m))
+                .spawn(move || run_keyed_worker(w, reg, backend, rx, m))
                 .expect("spawn keyed worker");
             txs.push(tx);
             handles.push(handle);
@@ -234,6 +323,19 @@ pub fn run_keyed_stream(
     Ok(c.finish())
 }
 
+/// As [`run_keyed_stream`], through the engine backend selected by
+/// `cfg.engine` (see [`KeyedCoordinator::start_with_engine`]).
+pub fn run_keyed_stream_with_engine(
+    cfg: &CoordinatorConfig,
+    registry: Arc<SketchRegistry<u64>>,
+    xla: Option<XlaHandle>,
+    pairs: &[(u64, u32)],
+) -> Result<KeyedRunSummary, String> {
+    let mut c = KeyedCoordinator::start_with_engine(cfg, registry, xla)?;
+    c.feed(pairs);
+    Ok(c.finish())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +416,44 @@ mod tests {
 
         assert_eq!(bulk_reg.merge_all(), inc_reg.merge_all());
         assert_eq!(bulk_reg.len(), inc_reg.len());
+    }
+
+    #[test]
+    fn engine_backend_matches_registry_backend() {
+        let mk = || {
+            SketchRegistry::shared(RegistryConfig { shards: 16, ..RegistryConfig::default() })
+                .unwrap()
+        };
+        let cfg = CoordinatorConfig { pipelines: 4, batch_size: 512, ..Default::default() };
+        let data = pairs(25_000, 150, 9);
+
+        let direct = mk();
+        run_keyed_stream(&cfg, direct.clone(), &data).unwrap();
+
+        // Native engine backend: each key run aggregates through
+        // Engine::aggregate and max-merges in. Merge commutes with
+        // insertion, so the union and — because the Ertl estimator is a
+        // pure function of the register file — every per-key estimate
+        // must match the direct path exactly.
+        let engined = mk();
+        let summary = run_keyed_stream_with_engine(&cfg, engined.clone(), None, &data).unwrap();
+        assert_eq!(summary.metrics.words_in, 25_000);
+        assert_eq!(engined.len(), direct.len());
+        assert_eq!(engined.merge_all(), direct.merge_all());
+        assert_eq!(engined.global_estimate(), direct.global_estimate());
+        for (key, est) in direct.estimates() {
+            assert_eq!(engined.estimate(&key), Some(est), "key {key}");
+        }
+    }
+
+    #[test]
+    fn engine_backend_without_handle_rejects_xla() {
+        let registry = SketchRegistry::shared(RegistryConfig::default()).unwrap();
+        let cfg = CoordinatorConfig {
+            engine: crate::runtime::EngineKind::Xla,
+            ..Default::default()
+        };
+        assert!(KeyedCoordinator::start_with_engine(&cfg, registry, None).is_err());
     }
 
     #[test]

@@ -16,7 +16,10 @@ pub mod metrics;
 pub mod worker;
 
 pub use config::CoordinatorConfig;
-pub use keyed::{run_keyed_stream, KeyedCoordinator, KeyedRunSummary, KeyedWorkerReport};
+pub use keyed::{
+    run_keyed_stream, run_keyed_stream_with_engine, KeyedCoordinator, KeyedRunSummary,
+    KeyedWorkerReport,
+};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerReport};
 
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};

@@ -133,6 +133,23 @@ impl ConcurrentHllSketch {
         self.raise(idx, rank);
     }
 
+    /// Fold a run of pre-computed hashes into the shared union in one
+    /// pass — the global-sketch leg of the registry's batch ingest path.
+    /// Each store is still a CAS-max (the union is shared across shard
+    /// locks, so stores here cannot drop the atomics), but the
+    /// split/compare work runs in a tight loop and the common case — a
+    /// register already at or above the incoming rank — takes the
+    /// load-only early exit inside `cas_max` without ever writing.
+    pub fn insert_hashes(&self, hashes: &[u64]) {
+        let w_bits = self.cfg.w_bits();
+        let mask = (1u64 << w_bits) - 1;
+        for &h in hashes {
+            let idx = (h >> w_bits) as usize;
+            let rank = crate::util::bits::rho(h & mask, w_bits);
+            self.raise(idx, rank);
+        }
+    }
+
     /// Raise one register to at least `rank` (CAS-max) — the follower's
     /// global-union apply path for replicated register diffs. Same
     /// monotone semantics as a word insert that hashed to this bucket.

@@ -171,6 +171,31 @@ impl HllConfig {
         }
     }
 
+    /// Hash a run of 32-bit stream words into `out` (`out.len()` must
+    /// equal `words.len()`) — the batch front end of [`Self::hash_word`].
+    /// The hash kind and seed are hoisted out of the loop and the body
+    /// is a dependency-free straight-line map, so the compiler can
+    /// unroll and vectorize it; this is the software analogue of the
+    /// paper's pipelined hash stage feeding 16 words per cycle, and the
+    /// first stage of the registry's batch ingest path.
+    pub fn hash_words(&self, words: &[u32], out: &mut [u64]) {
+        assert_eq!(words.len(), out.len(), "hash_words output slice must match input length");
+        match self.hash {
+            HashKind::H32 => {
+                let seed = self.seed as u32;
+                for (o, &w) in out.iter_mut().zip(words) {
+                    *o = murmur3_x86_32_u32(w, seed) as u64;
+                }
+            }
+            HashKind::H64 => {
+                let seed = self.seed;
+                for (o, &w) in out.iter_mut().zip(words) {
+                    *o = murmur3_x64_64_u32(w, seed);
+                }
+            }
+        }
+    }
+
     /// Split an H-bit hash into (bucket index, rank) — Algorithm 1 lines
     /// 7–8: idx = first p bits, w = remaining H−p bits, rank = ρ(w).
     #[inline]
@@ -235,6 +260,29 @@ mod tests {
         assert_eq!(HllConfig::PAPER.m(), 65536);
         // Expected standard error 0.41% (Section IV).
         assert!((HllConfig::PAPER.standard_error() - 0.0040625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hash_words_matches_hash_word() {
+        for cfg in [
+            HllConfig::PAPER,
+            HllConfig::new(14, HashKind::H32).unwrap(),
+            HllConfig::PAPER.with_seed(42),
+        ] {
+            let words: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+            let mut out = vec![0u64; words.len()];
+            cfg.hash_words(&words, &mut out);
+            for (&w, &h) in words.iter().zip(&out) {
+                assert_eq!(h, cfg.hash_word(w), "cfg {cfg:?} word {w:#x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must match input length")]
+    fn hash_words_rejects_length_mismatch() {
+        let mut out = vec![0u64; 3];
+        HllConfig::PAPER.hash_words(&[1, 2], &mut out);
     }
 
     #[test]

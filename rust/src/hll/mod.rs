@@ -25,4 +25,4 @@ pub use sketch::{
     decode_register_diff, diff_wire_len, encode_register_diff, HllSketch, SketchError,
     DIFF_WIRE_VERSION, WIRE_HEADER_LEN, WIRE_VERSION,
 };
-pub use sparse::{AdaptiveSketch, InsertOutcome, SparseHll};
+pub use sparse::{AdaptiveSketch, BatchOutcome, InsertOutcome, SparseHll};

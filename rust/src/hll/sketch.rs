@@ -207,6 +207,43 @@ impl HllSketch {
         }
     }
 
+    /// Insert a run of pre-computed H-bit hashes — the dense-tier store
+    /// stage of the batch ingest path. The split/compare/max-store body
+    /// has no cross-iteration dependence (register stores commute), so
+    /// the loop pipelines like the FPGA's bucket-update stage.
+    pub fn insert_hashes(&mut self, hashes: &[u64]) {
+        let w_bits = self.cfg.w_bits();
+        let mask = (1u64 << w_bits) - 1;
+        for &h in hashes {
+            let idx = (h >> w_bits) as usize;
+            let r = rho(h & mask, w_bits);
+            let slot = &mut self.regs[idx];
+            if r > *slot {
+                *slot = r;
+            }
+        }
+    }
+
+    /// As [`HllSketch::insert_hashes`], pushing the index of every
+    /// register the run raised into `changed` (duplicates possible when
+    /// a later hash raises the same register again; callers dedup once
+    /// per batch). This is the dense-tier arm of the registry's batched
+    /// dirty capture: one traced store loop per run instead of an
+    /// [`HllSketch::insert_hash_changed`] call per word.
+    pub fn insert_hashes_changed(&mut self, hashes: &[u64], changed: &mut Vec<u32>) {
+        let w_bits = self.cfg.w_bits();
+        let mask = (1u64 << w_bits) - 1;
+        for &h in hashes {
+            let idx = (h >> w_bits) as usize;
+            let r = rho(h & mask, w_bits);
+            let slot = &mut self.regs[idx];
+            if r > *slot {
+                *slot = r;
+                changed.push(idx as u32);
+            }
+        }
+    }
+
     /// Bucket-wise max merge — the "Merge buckets" fold of the parallel
     /// architecture (Fig 3). Commutative, associative, idempotent.
     pub fn merge(&mut self, other: &HllSketch) -> Result<(), SketchError> {

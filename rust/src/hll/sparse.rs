@@ -30,6 +30,12 @@ fn decode(e: u64) -> (usize, u8) {
     ((e >> 8) as usize, (e & 0xFF) as u8)
 }
 
+/// Words the adaptive sparse phase bulk-appends between promotion
+/// checks. Matches the sparse staging cap, so a batch can overshoot the
+/// promotion threshold by at most one staging buffer — the same slack
+/// the word-at-a-time path has between two compactions.
+const SPARSE_BATCH_CHUNK: usize = 256;
+
 /// A cardinality sketch that starts sparse, compresses to packed, and
 /// upgrades to dense — promotions driven by measured bytes, never
 /// demoting, with identical estimates at every tier.
@@ -53,6 +59,22 @@ pub enum InsertOutcome {
     /// The sketch took the sparse path (including an insert that
     /// triggered the sparse→packed promotion): which registers moved is
     /// not tracked, so a delta capture must resend the whole sketch.
+    Untracked,
+}
+
+/// What one [`AdaptiveSketch::insert_hashes_traced`] run did to the
+/// sketch — the batch counterpart of [`InsertOutcome`], collapsed to the
+/// only distinction the dirty-tracking caller needs per *run*: either
+/// every word went through a register-tracking tier (raised registers
+/// were pushed into the caller's capture vec), or at least one word took
+/// the sparse path and the whole key must be resent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchOutcome {
+    /// All inserts hit packed/dense state; `changed` holds every raised
+    /// register index (possibly with duplicates — dedup once per batch).
+    Tracked,
+    /// Some prefix of the run was inserted sparse (untracked), so the
+    /// caller must fall back to a full-sketch capture for this key.
     Untracked,
 }
 
@@ -125,6 +147,23 @@ impl SparseHll {
         self.staging.push(encode(idx, rank));
         if self.staging.len() >= self.staging_cap {
             self.compact();
+        }
+    }
+
+    /// Insert a run of pre-computed hashes. State-identical to a loop of
+    /// [`SparseHll::insert_hash`] (same staging/compaction cadence, so
+    /// capacity-driven promotion decisions are unchanged), but the
+    /// split/encode body is a tight loop with the config fields hoisted.
+    pub fn insert_hashes(&mut self, hashes: &[u64]) {
+        let w_bits = self.cfg.w_bits();
+        let mask = (1u64 << w_bits) - 1;
+        for &h in hashes {
+            let idx = (h >> w_bits) as usize;
+            let rank = crate::util::bits::rho(h & mask, w_bits);
+            self.staging.push(encode(idx, rank));
+            if self.staging.len() >= self.staging_cap {
+                self.compact();
+            }
         }
     }
 
@@ -281,6 +320,98 @@ impl AdaptiveSketch {
                     self.promote_sparse();
                 }
             }
+        }
+    }
+
+    /// Insert a run of pre-computed hashes, promoting tiers mid-run
+    /// exactly as a loop of [`AdaptiveSketch::insert_hash`] would: the
+    /// sparse phase bulk-appends in chunks with a promotion check per
+    /// chunk, the packed phase watches for exception overflow after
+    /// every store (a length compare) and re-tiers on the spot, and the
+    /// dense phase is one uninterruptible max-store loop. Lossless tier
+    /// promotions make the final register state identical to the
+    /// word-at-a-time path regardless of where inside the run a
+    /// promotion lands.
+    pub fn insert_hashes(&mut self, hashes: &[u64]) {
+        let thr = self.sparse_promotion_threshold();
+        let mut rest = hashes;
+        while !rest.is_empty() {
+            match self {
+                AdaptiveSketch::Sparse(s) => {
+                    let take = rest.len().min(SPARSE_BATCH_CHUNK);
+                    s.insert_hashes(&rest[..take]);
+                    rest = &rest[take..];
+                    if s.memory_bytes() > thr {
+                        self.promote_sparse();
+                    }
+                }
+                AdaptiveSketch::Packed(p) => {
+                    let mut consumed = 0;
+                    for &h in rest {
+                        p.insert_hash_changed(h);
+                        consumed += 1;
+                        if p.exception_overflow() {
+                            break;
+                        }
+                    }
+                    rest = &rest[consumed..];
+                    self.check_packed_overflow();
+                }
+                AdaptiveSketch::Dense(d) => {
+                    d.insert_hashes(rest);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// As [`AdaptiveSketch::insert_hashes`], capturing raised register
+    /// indices for dirty tracking: packed/dense stores push every raised
+    /// index into `changed` (duplicates possible; the caller dedups once
+    /// per batch), and the run reports [`BatchOutcome::Untracked`] if any
+    /// word was inserted while the sketch was still sparse — the batch
+    /// analogue of [`InsertOutcome::Untracked`], meaning the caller must
+    /// capture the whole key. One call per key-run replaces one
+    /// [`AdaptiveSketch::insert_hash_traced`] call per word.
+    pub fn insert_hashes_traced(&mut self, hashes: &[u64], changed: &mut Vec<u32>) -> BatchOutcome {
+        let thr = self.sparse_promotion_threshold();
+        let mut rest = hashes;
+        let mut sparse_seen = false;
+        while !rest.is_empty() {
+            match self {
+                AdaptiveSketch::Sparse(s) => {
+                    sparse_seen = true;
+                    let take = rest.len().min(SPARSE_BATCH_CHUNK);
+                    s.insert_hashes(&rest[..take]);
+                    rest = &rest[take..];
+                    if s.memory_bytes() > thr {
+                        self.promote_sparse();
+                    }
+                }
+                AdaptiveSketch::Packed(p) => {
+                    let mut consumed = 0;
+                    for &h in rest {
+                        if let Some(idx) = p.insert_hash_changed(h) {
+                            changed.push(idx);
+                        }
+                        consumed += 1;
+                        if p.exception_overflow() {
+                            break;
+                        }
+                    }
+                    rest = &rest[consumed..];
+                    self.check_packed_overflow();
+                }
+                AdaptiveSketch::Dense(d) => {
+                    d.insert_hashes_changed(rest, changed);
+                    break;
+                }
+            }
+        }
+        if sparse_seen {
+            BatchOutcome::Untracked
+        } else {
+            BatchOutcome::Tracked
         }
     }
 
@@ -623,6 +754,109 @@ mod tests {
         assert!(saw_tracked, "packed/dense phase must report changed registers");
         assert!(!traced.is_sparse());
         assert_eq!(traced.into_dense(), plain.into_dense());
+    }
+
+    #[test]
+    fn batch_insert_matches_scalar_across_all_tier_promotions() {
+        // One batch large enough to drive Sparse → Packed (and, with the
+        // crafted bimodal tail below, → Dense) must land bit-identical
+        // to the word-at-a-time path.
+        let mut rng = Xoshiro256StarStar::seed_from_u64(11);
+        let c = cfg();
+        let hashes: Vec<u64> = (0..60_000).map(|_| c.hash_word(rng.next_u32())).collect();
+        let mut batched = AdaptiveSketch::new(c);
+        let mut scalar = AdaptiveSketch::new(c);
+        batched.insert_hashes(&hashes);
+        for &h in &hashes {
+            scalar.insert_hash(h);
+        }
+        assert!(!batched.is_sparse(), "60k distinct must promote");
+        assert_eq!(batched.into_dense(), scalar.into_dense());
+    }
+
+    #[test]
+    fn batch_traced_matches_scalar_traced_states_and_outcomes() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(12);
+        let c = cfg();
+        let mut batched = AdaptiveSketch::new(c);
+        let mut scalar = AdaptiveSketch::new(c);
+        let mut saw_untracked = false;
+        let mut saw_tracked = false;
+        // Feed in mid-sized runs so some batch straddles the sparse →
+        // packed promotion.
+        for round in 0..40 {
+            let hashes: Vec<u64> =
+                (0..1500).map(|_| c.hash_word(rng.next_u32())).collect();
+            let mut batch_changed: Vec<u32> = Vec::new();
+            let outcome = batched.insert_hashes_traced(&hashes, &mut batch_changed);
+            let mut scalar_changed: Vec<u32> = Vec::new();
+            let mut scalar_untracked = false;
+            for &h in &hashes {
+                match scalar.insert_hash_traced(h) {
+                    InsertOutcome::RegisterChanged(idx) => scalar_changed.push(idx),
+                    InsertOutcome::Untracked => scalar_untracked = true,
+                    InsertOutcome::Unchanged => {}
+                }
+            }
+            match outcome {
+                BatchOutcome::Untracked => {
+                    saw_untracked = true;
+                    assert!(scalar_untracked, "round {round}: scalar path saw no sparse phase");
+                }
+                BatchOutcome::Tracked => {
+                    saw_tracked = true;
+                    assert!(!scalar_untracked, "round {round}: scalar path saw a sparse phase");
+                    // Identical raised-register sets (order/duplicates
+                    // aside — callers dedup per batch).
+                    batch_changed.sort_unstable();
+                    batch_changed.dedup();
+                    scalar_changed.sort_unstable();
+                    scalar_changed.dedup();
+                    assert_eq!(batch_changed, scalar_changed, "round {round}");
+                }
+            }
+        }
+        assert!(saw_untracked && saw_tracked, "test must cover both outcome kinds");
+        assert_eq!(batched.into_dense(), scalar.into_dense());
+    }
+
+    #[test]
+    fn batch_insert_densifies_on_bimodal_overflow_like_scalar() {
+        // Same crafted bimodal file as the scalar overflow test, driven
+        // through the batch path in one call: must densify losslessly.
+        let c = HllConfig::new(6, HashKind::H64).unwrap();
+        let w_bits = 64 - c.p() as u32;
+        let mut hashes = Vec::new();
+        for idx in 0..c.m() {
+            let rank = if idx % 2 == 0 { 12u8 } else { 1 };
+            let w = 1u64 << (w_bits - rank as u32);
+            let h = ((idx as u64) << w_bits) | w;
+            for _ in 0..20 {
+                hashes.push(h);
+            }
+        }
+        let mut a = AdaptiveSketch::new(c);
+        a.insert_hashes(&hashes);
+        assert!(!a.is_sparse() && !a.is_packed(), "bimodal file must densify");
+        let d = a.into_dense();
+        assert_eq!(d.registers().iter().filter(|&&r| r == 12).count(), c.m() / 2);
+    }
+
+    #[test]
+    fn sparse_batch_insert_matches_scalar_cadence() {
+        let c = cfg();
+        let probe = HllSketch::new(c);
+        let hashes: Vec<u64> = (0..3000u32).map(|v| probe.hash_u32(v)).collect();
+        let mut batched = SparseHll::new(c);
+        let mut scalar = SparseHll::new(c);
+        batched.insert_hashes(&hashes);
+        for &h in &hashes {
+            scalar.insert_hash(h);
+        }
+        // Identical compaction cadence ⇒ identical buffers and identical
+        // capacity-driven memory accounting.
+        assert_eq!(batched.to_dense(), scalar.to_dense());
+        assert_eq!(batched.memory_bytes(), scalar.memory_bytes());
     }
 
     #[test]

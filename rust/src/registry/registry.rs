@@ -2,12 +2,77 @@
 
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 use super::config::{RegistryConfig, RegistryStats, WallClock};
 use super::shard::Shard;
 use crate::hll::{AdaptiveSketch, ConcurrentHllSketch, HllConfig, HllSketch, SketchError};
+
+/// Reusable buffers for one batch-ingest call: every ingest entry point
+/// hashes, routes and gathers through these instead of allocating fresh
+/// vectors per call (the old `ingest_pairs` allocated a `Vec<Vec<_>>`
+/// per batch; `ingest` a `Vec<u64>` of hashes). Checked out of the
+/// registry's [`ScratchPool`] for the duration of one call.
+#[derive(Debug, Default)]
+struct IngestScratch {
+    /// The batch's words, copied contiguous so [`HllConfig::hash_words`]
+    /// sees one flat slice (pair/triple inputs interleave words with
+    /// keys).
+    words: Vec<u32>,
+    /// Hash of each batch word, in input order.
+    hashes: Vec<u64>,
+    /// `(shard, route mix, input index)` per pair; sorting groups the
+    /// batch by shard and, within a shard, brings equal keys together
+    /// (equal keys share a mix) while preserving input order per key
+    /// (the index tiebreak).
+    route: Vec<(u32, u64, u32)>,
+    /// Hashes regathered contiguous per key run, one shard at a time.
+    gathered: Vec<u64>,
+    /// Key runs of the shard currently being ingested:
+    /// `(input index of the key, start, len)` into `gathered`.
+    runs: Vec<(u32, u32, u32)>,
+}
+
+impl IngestScratch {
+    fn clear(&mut self) {
+        self.words.clear();
+        self.hashes.clear();
+        self.route.clear();
+        self.gathered.clear();
+        self.runs.clear();
+    }
+}
+
+/// A small pool of [`IngestScratch`] buffers shared by all ingest
+/// threads. Bounded: steady-state concurrency determines how many
+/// buffers exist, and surplus returns are dropped rather than hoarding
+/// the high-water batch size forever.
+#[derive(Debug, Default)]
+struct ScratchPool {
+    bufs: Mutex<Vec<IngestScratch>>,
+}
+
+/// Pooled scratch buffers kept at rest. More concurrent ingest callers
+/// than this just allocate a fresh scratch and drop it on return.
+const SCRATCH_POOL_CAP: usize = 16;
+
+impl ScratchPool {
+    /// Check a scratch out (fresh if the pool is empty). Recovers from
+    /// poison like the shard locks: the pool holds plain buffers that
+    /// cannot be left logically torn.
+    fn take(&self) -> IngestScratch {
+        self.bufs.lock().unwrap_or_else(PoisonError::into_inner).pop().unwrap_or_default()
+    }
+
+    fn put(&self, mut scratch: IngestScratch) {
+        scratch.clear();
+        let mut bufs = self.bufs.lock().unwrap_or_else(PoisonError::into_inner);
+        if bufs.len() < SCRATCH_POOL_CAP {
+            bufs.push(scratch);
+        }
+    }
+}
 
 /// One replication delta for one key — what a dirty-tracking drain
 /// ([`SketchRegistry::drain_dirty_deltas`]) resolved that key's changes
@@ -77,6 +142,9 @@ pub struct SketchRegistry<K> {
     /// log ([`crate::replica`]). Off by default: a registry nobody
     /// drains must not accumulate dirty state forever.
     dirty_enabled: Arc<AtomicBool>,
+    /// Reusable batch-ingest buffers (hash, route, gather) checked out
+    /// per call — see [`IngestScratch`].
+    scratch: ScratchPool,
 }
 
 impl<K: Eq + Hash + Clone> SketchRegistry<K> {
@@ -99,6 +167,7 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             clock: AtomicU64::new(0),
             wall,
             dirty_enabled,
+            scratch: ScratchPool::default(),
         })
     }
 
@@ -146,10 +215,12 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         self.dirty_enabled.load(Ordering::SeqCst)
     }
 
-    /// Which stripe a key lives on. Stable across the registry's
-    /// lifetime; the keyed coordinator also uses it to route whole
-    /// shards to dedicated workers so shard locks never see contention.
-    pub fn shard_of(&self, key: &K) -> usize {
+    /// Route a key: `(stripe, mix)` where `mix` is the full finalized
+    /// key hash the stripe is masked from. Batch ingest sorts on the
+    /// mix to bring equal keys together within a shard group (equal
+    /// keys share a mix; colliding unequal keys just split into more
+    /// runs, harmlessly).
+    fn route_of(&self, key: &K) -> (usize, u64) {
         let mut hasher = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut hasher);
         // Finalize with a splitmix-style mix so low-entropy key hashes
@@ -158,53 +229,116 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
         x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
         x ^= x >> 31;
-        (x as usize) & self.shard_mask
+        ((x as usize) & self.shard_mask, x)
     }
 
-    /// Ingest a batch of words for one key.
+    /// Which stripe a key lives on. Stable across the registry's
+    /// lifetime; the keyed coordinator also uses it to route whole
+    /// shards to dedicated workers so shard locks never see contention.
+    pub fn shard_of(&self, key: &K) -> usize {
+        self.route_of(key).0
+    }
+
+    /// Ingest a batch of words for one key: hash in one tight loop
+    /// (into pooled scratch — no per-call allocation), raise the global
+    /// union in one pass, then fold the whole run into the key's sketch
+    /// under one lock acquisition.
     pub fn ingest(&self, key: K, words: &[u32]) {
         if words.is_empty() {
             return;
         }
         let now = self.tick();
         let wall = self.wall.now_secs();
-        let hashes: Vec<u64> = words.iter().map(|&w| self.cfg.hll.hash_word(w)).collect();
+        let mut scratch = self.scratch.take();
+        scratch.hashes.resize(words.len(), 0);
+        self.cfg.hll.hash_words(words, &mut scratch.hashes);
         if let Some(global) = &self.global {
-            for &h in &hashes {
-                global.insert_hash(h);
-            }
+            global.insert_hashes(&scratch.hashes);
         }
-        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, key, &hashes, now, wall);
+        self.shards[self.shard_of(&key)].ingest_hashes(self.cfg.hll, &key, &scratch.hashes, now, wall);
+        self.scratch.put(scratch);
     }
 
-    /// Keyed batch ingest: group a `(key, word)` batch by shard, then
-    /// fold each group under a single lock acquisition per shard.
+    /// Keyed batch ingest: hash every word in one tight loop, route and
+    /// sort the batch so each shard's pairs group into per-key runs,
+    /// then fold each shard's runs under a single lock acquisition —
+    /// one map lookup, one touch and one dirty-state resolution per
+    /// *key per batch* (the old path paid each per word, plus a
+    /// `Vec<Vec<_>>` allocation per call; all buffers are pooled now).
     pub fn ingest_pairs(&self, pairs: &[(K, u32)]) {
         if pairs.is_empty() {
             return;
         }
         let now = self.tick();
         let wall = self.wall.now_secs();
-        let mut groups: Vec<Vec<(K, u64)>> = vec![Vec::new(); self.shards.len()];
-        for (key, word) in pairs {
-            let h = self.cfg.hll.hash_word(*word);
-            if let Some(global) = &self.global {
-                global.insert_hash(h);
-            }
-            groups[self.shard_of(key)].push((key.clone(), h));
+        let mut scratch = self.scratch.take();
+        scratch.words.extend(pairs.iter().map(|(_, w)| *w));
+        scratch.hashes.resize(pairs.len(), 0);
+        self.cfg.hll.hash_words(&scratch.words, &mut scratch.hashes);
+        if let Some(global) = &self.global {
+            global.insert_hashes(&scratch.hashes);
         }
-        for (shard, group) in self.shards.iter().zip(&groups) {
-            if !group.is_empty() {
-                shard.ingest_pairs(self.cfg.hll, group, now, wall);
+        scratch.route.extend(pairs.iter().enumerate().map(|(i, (key, _))| {
+            let (shard, mix) = self.route_of(key);
+            (shard as u32, mix, i as u32)
+        }));
+        // (shard, mix, input index): shards group, equal keys within a
+        // shard group (same mix), and each key's words stay in input
+        // order (index tiebreak) so per-key insert order — and with it
+        // tier-promotion timing — matches the word-at-a-time path.
+        scratch.route.sort_unstable();
+        let mut seg_start = 0;
+        while seg_start < scratch.route.len() {
+            let shard = scratch.route[seg_start].0;
+            let mut seg_end = seg_start;
+            while seg_end < scratch.route.len() && scratch.route[seg_end].0 == shard {
+                seg_end += 1;
             }
+            // Gather this shard's hashes contiguous, one slice per
+            // maximal equal-key run. Mix equality is the cheap first
+            // test; key equality decides (collisions split runs).
+            scratch.gathered.clear();
+            scratch.runs.clear();
+            let seg = &scratch.route[seg_start..seg_end];
+            let mut run_start = 0;
+            while run_start < seg.len() {
+                let (_, mix, key_idx) = seg[run_start];
+                let key = &pairs[key_idx as usize].0;
+                let start = scratch.gathered.len() as u32;
+                let mut run_end = run_start;
+                while run_end < seg.len()
+                    && seg[run_end].1 == mix
+                    && pairs[seg[run_end].2 as usize].0 == *key
+                {
+                    scratch.gathered.push(scratch.hashes[seg[run_end].2 as usize]);
+                    run_end += 1;
+                }
+                scratch.runs.push((key_idx, start, scratch.gathered.len() as u32 - start));
+                run_start = run_end;
+            }
+            self.shards[shard as usize].ingest_runs(
+                self.cfg.hll,
+                scratch.runs.iter().map(|&(key_idx, start, len)| {
+                    (
+                        &pairs[key_idx as usize].0,
+                        &scratch.gathered[start as usize..(start + len) as usize],
+                    )
+                }),
+                now,
+                wall,
+            );
+            seg_start = seg_end;
         }
+        self.scratch.put(scratch);
     }
 
     /// Keyed ingest for pairs already routed to one shard: callers that
     /// computed [`SketchRegistry::shard_of`] once on the feeder side
     /// (the keyed coordinator) pass it in instead of paying the key
-    /// hash a second time per pair. Words are hashed in-loop under the
-    /// shard lock — no intermediate buffer.
+    /// hash a second time per pair. Hashing runs up front in one tight
+    /// loop (pooled scratch), and *consecutive* equal-key pairs fold as
+    /// one run — feeders that sort by key (the keyed workers do) get
+    /// one map lookup and one dirty resolution per key per batch.
     pub fn ingest_sharded(&self, shard: usize, pairs: &[(K, u32)]) {
         if pairs.is_empty() {
             return;
@@ -213,18 +347,42 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             pairs.iter().all(|(k, _)| self.shard_of(k) == shard),
             "pair routed to the wrong shard"
         );
-        self.shards[shard].ingest_words_iter(
+        let now = self.tick();
+        let wall = self.wall.now_secs();
+        let mut scratch = self.scratch.take();
+        scratch.words.extend(pairs.iter().map(|(_, w)| *w));
+        scratch.hashes.resize(pairs.len(), 0);
+        self.cfg.hll.hash_words(&scratch.words, &mut scratch.hashes);
+        if let Some(global) = &self.global {
+            global.insert_hashes(&scratch.hashes);
+        }
+        let hashes = &scratch.hashes;
+        let mut pos = 0;
+        self.shards[shard].ingest_runs(
             self.cfg.hll,
-            pairs.iter().map(|(k, w)| (k, *w)),
-            self.global.as_ref(),
-            self.tick(),
-            self.wall.now_secs(),
+            std::iter::from_fn(move || {
+                if pos >= pairs.len() {
+                    return None;
+                }
+                let start = pos;
+                let key = &pairs[start].0;
+                let mut end = start + 1;
+                while end < pairs.len() && pairs[end].0 == *key {
+                    end += 1;
+                }
+                pos = end;
+                Some((key, &hashes[start..end]))
+            }),
+            now,
+            wall,
         );
+        self.scratch.put(scratch);
     }
 
     /// As [`SketchRegistry::ingest_sharded`], but over a run of routed
     /// `(shard, key, word)` triples sharing one shard — read in place,
-    /// so the keyed worker needs no reshaping buffer.
+    /// so the keyed worker needs no reshaping buffer. Consecutive equal
+    /// keys fold as one run, like [`SketchRegistry::ingest_sharded`].
     pub fn ingest_routed_run(&self, run: &[(usize, K, u32)]) {
         let Some(&(shard, _, _)) = run.first() else {
             return;
@@ -233,13 +391,36 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
             run.iter().all(|(s, k, _)| *s == shard && self.shard_of(k) == shard),
             "triple routed to the wrong shard"
         );
-        self.shards[shard].ingest_words_iter(
+        let now = self.tick();
+        let wall = self.wall.now_secs();
+        let mut scratch = self.scratch.take();
+        scratch.words.extend(run.iter().map(|(_, _, w)| *w));
+        scratch.hashes.resize(run.len(), 0);
+        self.cfg.hll.hash_words(&scratch.words, &mut scratch.hashes);
+        if let Some(global) = &self.global {
+            global.insert_hashes(&scratch.hashes);
+        }
+        let hashes = &scratch.hashes;
+        let mut pos = 0;
+        self.shards[shard].ingest_runs(
             self.cfg.hll,
-            run.iter().map(|(_, k, w)| (k, *w)),
-            self.global.as_ref(),
-            self.tick(),
-            self.wall.now_secs(),
+            std::iter::from_fn(move || {
+                if pos >= run.len() {
+                    return None;
+                }
+                let start = pos;
+                let key = &run[start].1;
+                let mut end = start + 1;
+                while end < run.len() && run[end].1 == *key {
+                    end += 1;
+                }
+                pos = end;
+                Some((key, &hashes[start..end]))
+            }),
+            now,
+            wall,
         );
+        self.scratch.put(scratch);
     }
 
     /// Cardinality estimate for one key (`None` if the key is unknown),

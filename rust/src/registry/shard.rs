@@ -31,7 +31,8 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use super::config::ShardStats;
 use super::registry::SketchDelta;
 use crate::hll::{
-    encode_register_diff, AdaptiveSketch, EstimatorKind, HllConfig, HllSketch, InsertOutcome,
+    encode_register_diff, AdaptiveSketch, BatchOutcome, EstimatorKind, HllConfig, HllSketch,
+    InsertOutcome,
 };
 
 /// Per-key dirty state on a replication primary: what the next capture
@@ -110,6 +111,61 @@ fn note_outcome(state: &mut DirtyState, outcome: InsertOutcome, spill: usize) {
     }
 }
 
+/// Fold one key's whole hash run into its sketch and dirty state — the
+/// batch counterpart of a loop of `note_outcome` over traced single
+/// inserts, resolving the dirty state once per run instead of once per
+/// word. Register-tracking runs append raised indices straight into the
+/// `Registers` capture vec (the sketch's batch insert pushes into it
+/// directly) and run the spill check once at run end; since the set of
+/// raised registers only grows, spilling at run end iff the deduplicated
+/// set exceeds the threshold reaches exactly the state the per-word
+/// checks would have.
+fn ingest_run_traced(
+    state: &mut DirtyState,
+    sketch: &mut AdaptiveSketch,
+    hashes: &[u64],
+    spill: usize,
+) {
+    if hashes.is_empty() {
+        // A zero-hash touch still created (or kept live) the key.
+        // Without this promotion the state could stay `Evicted` — a
+        // false tombstone for a live key — or a fresh key could sit at
+        // `Registers([])` and never ship.
+        state.note_full();
+        return;
+    }
+    match state {
+        DirtyState::Registers(v) => match sketch.insert_hashes_traced(hashes, v) {
+            BatchOutcome::Tracked => {
+                if v.len() > spill {
+                    v.sort_unstable();
+                    v.dedup();
+                    if v.len() > spill {
+                        *state = DirtyState::Full;
+                    }
+                }
+            }
+            BatchOutcome::Untracked => *state = DirtyState::Full,
+        },
+        DirtyState::Full | DirtyState::EvictedThenFull => {
+            // Already committed to a full resend: no capture needed,
+            // just the plain batch insert.
+            sketch.insert_hashes(hashes);
+        }
+        DirtyState::Evicted => {
+            // Rare: the key was evicted earlier in this capture window
+            // and is being re-created by this run. Replay the per-word
+            // traced path so the Evicted → EvictedThenFull transition
+            // follows the exact scalar rules (an all-Unchanged run must
+            // leave the tombstone alone — impossible here since the key
+            // was just re-created sparse, but cheap to keep airtight).
+            for &h in hashes {
+                note_outcome(state, sketch.insert_hash_traced(h), spill);
+            }
+        }
+    }
+}
+
 #[derive(Debug)]
 pub(crate) struct Shard<K> {
     state: Mutex<ShardState<K>>,
@@ -129,14 +185,17 @@ struct ShardState<K> {
 }
 
 impl<K: Eq + Hash> ShardState<K> {
-    /// Fold `hashes` into `key`'s sketch (created on first touch),
-    /// recording what changed in the dirty map when `dirty` is set —
-    /// the one implementation behind every ingest entry point.
-    fn ingest_key<I: IntoIterator<Item = u64>>(
+    /// Fold one key's run of pre-computed hashes into its sketch
+    /// (created on first touch), recording what changed in the dirty
+    /// map when `dirty` is set — the one implementation behind every
+    /// ingest entry point. The whole run pays exactly one map lookup,
+    /// one touch and one dirty-state resolution; the key is cloned only
+    /// when the run creates a map or dirty-map entry.
+    fn ingest_key_run(
         &mut self,
         cfg: HllConfig,
-        key: K,
-        hashes: I,
+        key: &K,
+        hashes: &[u64],
         dirty: bool,
         spill: usize,
         now: u64,
@@ -144,32 +203,23 @@ impl<K: Eq + Hash> ShardState<K> {
     ) where
         K: Clone,
     {
-        if dirty {
-            let entry =
-                self.map.entry(key.clone()).or_insert_with(|| KeyEntry::new(cfg, now, wall));
-            entry.touch(now, wall);
-            let state =
-                self.dirty.entry(key).or_insert_with(|| DirtyState::Registers(Vec::new()));
-            let mut any = false;
-            for h in hashes {
-                any = true;
-                note_outcome(state, entry.sketch.insert_hash_traced(h), spill);
-            }
-            if !any {
-                // A zero-hash touch still created (or kept live) the
-                // key. No caller currently passes an empty batch this
-                // deep, but without this promotion the state could stay
-                // `Evicted` — a false tombstone for a live key — or a
-                // fresh key could sit at `Registers([])` and never ship.
-                state.note_full();
-            }
-        } else {
-            let entry = self.map.entry(key).or_insert_with(|| KeyEntry::new(cfg, now, wall));
-            entry.touch(now, wall);
-            for h in hashes {
-                entry.sketch.insert_hash(h);
-            }
+        // Borrow the key map and the dirty map disjointly: the entry
+        // borrow below must coexist with the dirty-state borrow.
+        let ShardState { map, dirty: dirty_map, .. } = self;
+        if !map.contains_key(key) {
+            map.insert(key.clone(), KeyEntry::new(cfg, now, wall));
         }
+        let entry = map.get_mut(key).expect("present or just inserted");
+        entry.touch(now, wall);
+        if !dirty {
+            entry.sketch.insert_hashes(hashes);
+            return;
+        }
+        if !dirty_map.contains_key(key) {
+            dirty_map.insert(key.clone(), DirtyState::Registers(Vec::new()));
+        }
+        let state = dirty_map.get_mut(key).expect("present or just inserted");
+        ingest_run_traced(state, &mut entry.sketch, hashes, spill);
     }
 }
 
@@ -228,58 +278,38 @@ impl<K: Eq + Hash> Shard<K> {
 
     /// Fold pre-hashed words into one key's sketch (created on first
     /// touch).
-    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: K, hashes: &[u64], now: u64, wall: u64)
+    pub(crate) fn ingest_hashes(&self, cfg: HllConfig, key: &K, hashes: &[u64], now: u64, wall: u64)
     where
         K: Clone,
     {
         let dirty = self.dirty_on();
         let spill = spill_threshold(cfg.m());
         let mut st = self.lock();
-        st.ingest_key(cfg, key, hashes.iter().copied(), dirty, spill, now, wall);
+        st.ingest_key_run(cfg, key, hashes, dirty, spill, now, wall);
         st.words += hashes.len() as u64;
     }
 
-    /// Fold a run of (key, hash) pairs under one lock acquisition.
-    pub(crate) fn ingest_pairs(&self, cfg: HllConfig, pairs: &[(K, u64)], now: u64, wall: u64)
+    /// Fold a batch of per-key hash runs under one lock acquisition —
+    /// the registry's batch ingest back end. Each `(key, hashes)` run is
+    /// one [`ShardState::ingest_key_run`]: one map lookup, one touch and
+    /// one dirty-state resolution per key per batch, and the register
+    /// stores run as plain (CAS-free) max-stores because this shard's
+    /// lock is already held. Callers hash up front (tight loops, see
+    /// [`HllConfig::hash_words`]) and group equal keys into runs; the
+    /// optional global union is raised by the caller too, outside the
+    /// lock, since it is lock-free and shared across shards.
+    pub(crate) fn ingest_runs<'a, I>(&self, cfg: HllConfig, runs: I, now: u64, wall: u64)
     where
-        K: Clone,
-    {
-        let dirty = self.dirty_on();
-        let spill = spill_threshold(cfg.m());
-        let mut st = self.lock();
-        for (key, h) in pairs {
-            st.ingest_key(cfg, key.clone(), std::iter::once(*h), dirty, spill, now, wall);
-        }
-        st.words += pairs.len() as u64;
-    }
-
-    /// Fold raw (key, word) pairs under one lock acquisition, hashing
-    /// in-loop — the keyed coordinator's hot path (no intermediate
-    /// buffer; callers feed whatever shape they hold through an
-    /// iterator). The optional global union sketch is lock-free, so
-    /// raising it from inside the shard lock is safe and keeps the
-    /// word hashed exactly once.
-    pub(crate) fn ingest_words_iter<'a>(
-        &self,
-        cfg: HllConfig,
-        pairs: impl Iterator<Item = (&'a K, u32)>,
-        global: Option<&crate::hll::ConcurrentHllSketch>,
-        now: u64,
-        wall: u64,
-    ) where
+        I: Iterator<Item = (&'a K, &'a [u64])>,
         K: Clone + 'a,
     {
         let dirty = self.dirty_on();
         let spill = spill_threshold(cfg.m());
         let mut st = self.lock();
         let mut n = 0u64;
-        for (key, word) in pairs {
-            let h = cfg.hash_word(word);
-            if let Some(g) = global {
-                g.insert_hash(h);
-            }
-            st.ingest_key(cfg, key.clone(), std::iter::once(h), dirty, spill, now, wall);
-            n += 1;
+        for (key, hashes) in runs {
+            st.ingest_key_run(cfg, key, hashes, dirty, spill, now, wall);
+            n += hashes.len() as u64;
         }
         st.words += n;
     }

@@ -1455,6 +1455,11 @@ fn dispatch(req: Request, shared: &Shared, trace_id: u64) -> Response {
                 }
             }
             {
+                // One span covers the whole routed run: `ingest` is the
+                // batch-native entry point (hash every word in one tight
+                // loop into pooled scratch, raise the global union in
+                // one pass, fold the run into the key's sketch under a
+                // single shard-lock acquisition).
                 let _ingest_span = Span::enter_timed(
                     Stage::ShardIngest,
                     trace_id,

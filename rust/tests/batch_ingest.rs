@@ -1,0 +1,243 @@
+//! Differential tests for the batch-first ingest hot path: every batch
+//! entry point must be *bit-exact* with the word-at-a-time reference —
+//! not just estimates, but sketch tiers, memory accounting and the
+//! replication deltas a dirty-tracking drain produces. The batch path
+//! restructures hashing (one tight loop), shard routing (group-by-key
+//! runs) and register stores (run folds under one lock), so these tests
+//! are the contract that none of that restructuring is observable.
+
+use hll_fpga::hll::{HllConfig, HllSketch};
+use hll_fpga::registry::{RegistryConfig, SketchDelta, SketchRegistry};
+use hll_fpga::util::Xoshiro256StarStar;
+
+fn registry(shards: usize) -> SketchRegistry<u64> {
+    SketchRegistry::new(RegistryConfig {
+        hll: HllConfig::PAPER,
+        shards,
+        track_global: true,
+        ..RegistryConfig::default()
+    })
+    .unwrap()
+}
+
+/// Drain both registries and compare delta-for-delta. Shard iteration
+/// and in-shard map order are nondeterministic, so entries sort by key
+/// first — *stably*, because a tombstone-then-full pair for one key is
+/// two entries whose relative order is part of the contract.
+fn assert_drains_equal(batch: &SketchRegistry<u64>, scalar: &SketchRegistry<u64>, ctx: &str) {
+    let mut a = batch.drain_dirty_deltas();
+    let mut b = scalar.drain_dirty_deltas();
+    a.sort_by_key(|e| e.0);
+    b.sort_by_key(|e| e.0);
+    assert_eq!(a, b, "{ctx}: drained deltas diverge");
+}
+
+/// Full-state comparison: per-key estimates, union registers, global
+/// union, and the stats block (tier counts, words, memory accounting —
+/// batch ingest must not even change sparse-capacity growth cadence).
+fn assert_registries_equal(batch: &SketchRegistry<u64>, scalar: &SketchRegistry<u64>, ctx: &str) {
+    assert_eq!(batch.len(), scalar.len(), "{ctx}: key count");
+    assert_eq!(batch.merge_all(), scalar.merge_all(), "{ctx}: union registers");
+    assert_eq!(batch.global_sketch(), scalar.global_sketch(), "{ctx}: global union");
+    for (key, est) in scalar.estimates() {
+        assert_eq!(batch.estimate(&key), Some(est), "{ctx}: key {key}");
+    }
+    let (bs, ss) = (batch.stats(), scalar.stats());
+    assert_eq!(bs.words(), ss.words(), "{ctx}: words accounting");
+    assert_eq!(bs.sparse_keys(), ss.sparse_keys(), "{ctx}: sparse tier population");
+    assert_eq!(bs.packed_keys(), ss.packed_keys(), "{ctx}: packed tier population");
+    assert_eq!(bs.dense_keys(), ss.dense_keys(), "{ctx}: dense tier population");
+    assert_eq!(bs.memory_bytes(), ss.memory_bytes(), "{ctx}: memory accounting");
+}
+
+#[test]
+fn batched_pairs_match_scalar_word_at_a_time_with_dirty_drains() {
+    let batch = registry(8);
+    let scalar = registry(8);
+    batch.enable_dirty_tracking();
+    scalar.enable_dirty_tracking();
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xBA7C);
+    // 250 keys of mixed weight: key 0 is heavy enough to promote out of
+    // sparse mid-stream, the rest stay small.
+    let pairs: Vec<(u64, u32)> = (0..30_000)
+        .map(|_| {
+            let key = if rng.next_u32() % 3 == 0 { 0 } else { rng.next_u64_below(250) };
+            (key, rng.next_u32())
+        })
+        .collect();
+
+    // Interleave drains with ingest so deltas are compared at several
+    // capture points, not only after everything settled.
+    for (i, chunk) in pairs.chunks(1_000).enumerate() {
+        batch.ingest_pairs(chunk);
+        for &(k, w) in chunk {
+            scalar.ingest(k, &[w]);
+        }
+        if i % 5 == 4 {
+            assert_drains_equal(&batch, &scalar, &format!("chunk {i}"));
+        }
+    }
+    assert_drains_equal(&batch, &scalar, "final drain");
+    assert_registries_equal(&batch, &scalar, "after full stream");
+}
+
+#[test]
+fn one_key_promotes_sparse_to_packed_inside_a_single_batch() {
+    let batch = registry(4);
+    let scalar = registry(4);
+    batch.enable_dirty_tracking();
+    scalar.enable_dirty_tracking();
+
+    // 60k distinct random words blow past the sparse budget well inside
+    // one call: the promotion happens mid-batch on the batch path and
+    // mid-stream on the scalar path, and both must land the same tier
+    // at the same word with the same dirty state (Full — the promotion
+    // ran through sparse inserts, which register tracking cannot see).
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0x9E0);
+    let words: Vec<u32> = (0..60_000).map(|_| rng.next_u32()).collect();
+    batch.ingest(7, &words);
+    for &w in &words {
+        scalar.ingest(7, &[w]);
+    }
+    assert_eq!(batch.stats().packed_keys(), 1, "heavy key must be packed");
+    let drained = batch.drain_dirty_deltas();
+    assert_eq!(drained.len(), 1);
+    assert!(
+        matches!(drained[0].1, SketchDelta::Full(_)),
+        "promotion through sparse must drain Full, got {:?}",
+        drained[0].1
+    );
+    let _ = scalar.drain_dirty_deltas();
+    assert_registries_equal(&batch, &scalar, "after one-batch promotion");
+}
+
+#[test]
+fn dense_key_batch_runs_drain_identical_register_diffs() {
+    let batch = registry(8);
+    let scalar = registry(8);
+    batch.enable_dirty_tracking();
+    scalar.enable_dirty_tracking();
+
+    // Build a register file the packed tier cannot hold: alternating
+    // far-apart values defeat its 7-wide offset window, so from_dense
+    // lands the key in the dense tier on both registries.
+    let cfg = HllConfig::PAPER;
+    let mut bimodal = HllSketch::new(cfg);
+    for idx in 0..cfg.m() {
+        bimodal.update_register(idx, if idx % 2 == 0 { 1 } else { 40 });
+    }
+    batch.merge_sketch(9, bimodal.clone()).unwrap();
+    scalar.merge_sketch(9, bimodal).unwrap();
+    assert_eq!(batch.stats().dense_keys(), 1, "bimodal file must resident dense");
+    // Clear the merge's Full markers so the next drain shows only what
+    // the ingest below changes.
+    assert_drains_equal(&batch, &scalar, "post-merge drain");
+
+    // Now stream keyed batches over the dense key (plus bystanders):
+    // the dense arm of the run fold captures changed registers in bulk,
+    // and the drained diff must match the scalar per-word capture
+    // byte-for-byte.
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xD1FF);
+    let pairs: Vec<(u64, u32)> = (0..8_000)
+        .map(|_| {
+            let key = if rng.next_u32() % 2 == 0 { 9 } else { rng.next_u64_below(10) };
+            (key, rng.next_u32())
+        })
+        .collect();
+    batch.ingest_pairs(&pairs);
+    for &(k, w) in &pairs {
+        scalar.ingest(k, &[w]);
+    }
+
+    let mut drained = batch.drain_dirty_deltas();
+    drained.sort_by_key(|e| e.0);
+    let dense_delta = drained.iter().find(|(k, _)| *k == 9).expect("dense key drained");
+    assert!(
+        matches!(dense_delta.1, SketchDelta::RegisterDiff(_)),
+        "dense key must drain a register diff, got {:?}",
+        dense_delta.1
+    );
+    let mut scalar_drained = scalar.drain_dirty_deltas();
+    scalar_drained.sort_by_key(|e| e.0);
+    assert_eq!(drained, scalar_drained, "dense diff capture diverges");
+    assert_registries_equal(&batch, &scalar, "after dense-tier batches");
+}
+
+#[test]
+fn evicted_then_recreated_key_drains_tombstone_before_full_in_batch() {
+    let batch = registry(4);
+    let scalar = registry(4);
+    batch.enable_dirty_tracking();
+    scalar.enable_dirty_tracking();
+
+    for reg in [&batch, &scalar] {
+        reg.ingest(5, &[1, 2, 3]);
+    }
+    assert_drains_equal(&batch, &scalar, "setup drain");
+
+    // Evict, then re-create through a *batch* that also carries other
+    // keys: the batch path's rare Evicted arm must produce the same
+    // tombstone-then-full pair the scalar path does.
+    batch.evict(&5);
+    scalar.evict(&5);
+    let pairs: Vec<(u64, u32)> = vec![(5, 9), (6, 11), (5, 10), (6, 12), (5, 13)];
+    batch.ingest_pairs(&pairs);
+    for &(k, w) in &pairs {
+        scalar.ingest(k, &[w]);
+    }
+
+    let mut drained = batch.drain_dirty_deltas();
+    drained.sort_by_key(|e| e.0);
+    let key5: Vec<&SketchDelta> = drained.iter().filter(|(k, _)| *k == 5).map(|(_, d)| d).collect();
+    assert_eq!(key5.len(), 2, "evict + recreate is two entries");
+    assert_eq!(*key5[0], SketchDelta::Tombstone, "tombstone must precede the resend");
+    assert!(matches!(*key5[1], SketchDelta::Full(_)));
+    let mut scalar_drained = scalar.drain_dirty_deltas();
+    scalar_drained.sort_by_key(|e| e.0);
+    assert_eq!(drained, scalar_drained);
+    assert_registries_equal(&batch, &scalar, "after evict/recreate batch");
+}
+
+#[test]
+fn sharded_and_routed_entry_points_match_pairs() {
+    // The coordinator-facing entry points (`ingest_sharded`,
+    // `ingest_routed_run`) must agree with `ingest_pairs` and the
+    // scalar path for the same stream.
+    let by_pairs = registry(8);
+    let by_sharded = registry(8);
+    let by_routed = registry(8);
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0x570);
+    let pairs: Vec<(u64, u32)> =
+        (0..20_000).map(|_| (rng.next_u64_below(120), rng.next_u32())).collect();
+
+    by_pairs.ingest_pairs(&pairs);
+
+    // Group by shard (preserving input order per key) the way a keyed
+    // worker would, then push whole shard groups through each routed
+    // entry point.
+    let shards = by_sharded.config().shards;
+    let mut grouped: Vec<Vec<(u64, u32)>> = vec![Vec::new(); shards];
+    for &(k, w) in &pairs {
+        grouped[by_sharded.shard_of(&k)].push((k, w));
+    }
+    for (shard, group) in grouped.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        by_sharded.ingest_sharded(shard, group);
+        let routed: Vec<(usize, u64, u32)> =
+            group.iter().map(|&(k, w)| (shard, k, w)).collect();
+        by_routed.ingest_routed_run(&routed);
+    }
+
+    for (key, est) in by_pairs.estimates() {
+        assert_eq!(by_sharded.estimate(&key), Some(est), "sharded: key {key}");
+        assert_eq!(by_routed.estimate(&key), Some(est), "routed: key {key}");
+    }
+    assert_eq!(by_pairs.merge_all(), by_sharded.merge_all());
+    assert_eq!(by_pairs.merge_all(), by_routed.merge_all());
+    assert_eq!(by_pairs.stats().words(), by_sharded.stats().words());
+    assert_eq!(by_pairs.stats().words(), by_routed.stats().words());
+}

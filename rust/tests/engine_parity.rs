@@ -4,9 +4,12 @@
 //!
 //! Requires `make artifacts`; tests are skipped (with a note) otherwise.
 
+use hll_fpga::coordinator::{run_keyed_stream, run_keyed_stream_with_engine, CoordinatorConfig};
 use hll_fpga::hll::{HashKind, HllConfig, HllSketch};
-use hll_fpga::runtime::{Engine, Manifest, NativeEngine, XlaEngine, XlaService};
+use hll_fpga::registry::{RegistryConfig, SketchRegistry};
+use hll_fpga::runtime::{Engine, EngineKind, Manifest, NativeEngine, XlaEngine, XlaService};
 use hll_fpga::util::Xoshiro256StarStar;
+use std::sync::Arc;
 
 fn artifacts_ready() -> bool {
     let ok = Manifest::default_dir().join("manifest.tsv").exists();
@@ -136,6 +139,67 @@ fn empty_batch_is_noop() {
     let mut s = HllSketch::new(cfg);
     xla.aggregate(&[], &mut s).unwrap();
     assert_eq!(s.zero_registers(), cfg.m());
+}
+
+fn keyed_pairs(n: usize, keys: u64, seed: u64) -> Vec<(u64, u32)> {
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    (0..n).map(|_| (rng.next_u64_below(keys), rng.next_u32())).collect()
+}
+
+fn fresh_registry() -> Arc<SketchRegistry<u64>> {
+    SketchRegistry::shared(RegistryConfig { shards: 16, ..RegistryConfig::default() }).unwrap()
+}
+
+/// Keyed batched ingest through the native engine backend must land the
+/// registry in the same state as the direct registry backend: identical
+/// union registers and — the Ertl estimator being a pure function of
+/// each key's register file — identical per-key estimates. Ungated: the
+/// native engine needs no artifacts.
+#[test]
+fn keyed_batched_ingest_native_engine_matches_registry_path() {
+    let pairs = keyed_pairs(40_000, 300, 0x5EED);
+    let cfg = CoordinatorConfig { pipelines: 4, batch_size: 1024, ..Default::default() };
+
+    let direct = fresh_registry();
+    run_keyed_stream(&cfg, direct.clone(), &pairs).unwrap();
+    let engined = fresh_registry();
+    run_keyed_stream_with_engine(&cfg, engined.clone(), None, &pairs).unwrap();
+
+    assert_eq!(engined.len(), direct.len());
+    assert_eq!(engined.merge_all(), direct.merge_all());
+    assert_eq!(engined.global_estimate(), direct.global_estimate());
+    for (key, est) in direct.estimates() {
+        assert_eq!(engined.estimate(&key), Some(est), "key {key}");
+    }
+}
+
+/// Same parity through the XLA engine backend: keyed runs aggregated by
+/// the AOT Pallas artifacts, max-merged into the registry.
+#[test]
+fn keyed_batched_ingest_xla_engine_matches_registry_path() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = service();
+    let pairs = keyed_pairs(20_000, 100, 0xFACE);
+    let cfg = CoordinatorConfig {
+        pipelines: 2,
+        batch_size: 2048,
+        engine: EngineKind::Xla,
+        ..Default::default()
+    };
+
+    let direct = fresh_registry();
+    // The registry backend ignores cfg.engine; same routing either way.
+    run_keyed_stream(&cfg, direct.clone(), &pairs).unwrap();
+    let engined = fresh_registry();
+    run_keyed_stream_with_engine(&cfg, engined.clone(), Some(svc.handle()), &pairs).unwrap();
+
+    assert_eq!(engined.len(), direct.len());
+    assert_eq!(engined.merge_all(), direct.merge_all());
+    for (key, est) in direct.estimates() {
+        assert_eq!(engined.estimate(&key), Some(est), "key {key}");
+    }
 }
 
 #[test]
