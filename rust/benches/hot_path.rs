@@ -72,8 +72,14 @@ fn main() {
     // (`hash_words`) and folds the pre-hashed run into register files
     // (`insert_hashes`); these time each stage and the whole split.
     let mut hashes = vec![0u64; n];
-    let m = b.run_bytes("hash_words H64 (batch hash loop)", bytes, || {
+    let m = b.run_bytes("hash_words H64 (8-lane batch hash loop)", bytes, || {
         cfg64.hash_words(&words, &mut hashes);
+        hashes[0]
+    });
+    println!("{}", m.report_line());
+    println!("{}", per_word(&m, n));
+    let m = b.run_bytes("hash_words H32 (8-lane batch hash loop)", bytes, || {
+        cfg32.hash_words(&words, &mut hashes);
         hashes[0]
     });
     println!("{}", m.report_line());

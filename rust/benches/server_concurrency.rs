@@ -1,23 +1,31 @@
-//! Event-loop serving at connection scale: ingest throughput and
-//! resident memory as hundreds of mostly-idle connections ride one loop
-//! thread — the workload shape the reactor rewrite exists for (the
-//! paper's datapath multiplexes flows; a server must multiplex tenants).
+//! Event-loop serving at connection scale: ingest throughput, resident
+//! memory, and per-tick loop cost as thousands of mostly-idle
+//! connections ride one loop thread — the workload shape the reactor
+//! rewrite exists for (the paper's datapath multiplexes flows; a server
+//! must multiplex tenants).
 //!
-//! For each connection count N, N clients connect and stay connected;
-//! a small active subset drives pipelined ingest while the rest sit
-//! idle. The old thread-per-connection model's cost scaled with N (one
-//! OS thread + stack per connection, 8 MiB of address space reserved
-//! each by default); the event loop's scales with the *active* subset.
-//! A reference figure for the old model's per-connection reservation is
-//! printed alongside measured RSS.
+//! For each poller backend and connection count N, N clients connect
+//! and stay connected; a small active subset drives pipelined ingest
+//! while the rest sit idle. The old thread-per-connection model's cost
+//! scaled with N (one OS thread + stack per connection); `poll(2)`'s
+//! scales with N too (the kernel rescans every registered descriptor
+//! per tick); epoll's scales with the *ready* subset only. The sweep
+//! prints per-backend throughput/RSS/p99 columns plus the event loop's
+//! own tick telemetry (`loop_poll_wait_ns`, `loop_saturation_permille`)
+//! so the flat-in-N claim is read off the server's live histograms, not
+//! inferred.
 //!
-//! Run: `cargo bench --bench server_concurrency` (HLL_BENCH_QUICK=1
-//! shrinks the sweep).
+//! `--smoke` runs only the cross-backend parity gate — identical
+//! traffic through every available backend must leave bit-identical
+//! registry state with clean frame accounting. That is the CI
+//! invocation; the full sweep (including the 10 000-connection tier)
+//! is for workstation runs. `HLL_BENCH_QUICK=1` shrinks the sweep.
 
 use hll_fpga::bench_harness::{bench_main, quick_mode};
+use hll_fpga::hll::HllSketch;
 use hll_fpga::net::KeyedFlowGen;
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
-use hll_fpga::server::{ServerConfig, SketchClient, SketchServer};
+use hll_fpga::server::{PollerBackend, ServerConfig, SketchClient, SketchServer};
 
 /// VmRSS from /proc/self/status, in KiB (`None` off Linux).
 fn resident_kib() -> Option<u64> {
@@ -26,23 +34,67 @@ fn resident_kib() -> Option<u64> {
     line.split_whitespace().nth(1)?.parse().ok()
 }
 
-fn main() {
-    let b = bench_main("server concurrency — one event loop vs connection count");
-    let words: usize = if quick_mode() { 40_000 } else { 200_000 };
-    let conn_counts: &[usize] = if quick_mode() { &[16, 128] } else { &[16, 128, 512] };
-    const ACTIVE: usize = 8;
+/// Raise the soft RLIMIT_NOFILE toward the hard limit (capped at 32k —
+/// both socket ends of every connection live in this process, so the
+/// 10 000-connection tier needs ~20k descriptors plus slack). Returns
+/// the effective soft limit.
+#[cfg(target_os = "linux")]
+fn raise_nofile_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 0;
+        }
+        let want = r.max.min(32_768);
+        if r.cur < want {
+            let bumped = RLimit { cur: want, max: r.max };
+            let _ = setrlimit(RLIMIT_NOFILE, &bumped);
+            let _ = getrlimit(RLIMIT_NOFILE, &mut r);
+        }
+        r.cur
+    }
+}
 
-    let mut gen = KeyedFlowGen::new(1_000, 1.07, 0xC0FE);
-    let batches = gen.batched(words, 4096);
-    println!(
-        "{words} words in {} batches, 1000 keys (zipf 1.07); {ACTIVE} active producers\n",
-        batches.len()
-    );
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile_limit() -> u64 {
+    u64::MAX
+}
 
-    let baseline_rss = resident_kib();
-    for &conns in conn_counts {
+/// One (backend, connection-count) sweep point, read back for the
+/// summary table and the flatness assertions.
+struct Tier {
+    backend: &'static str,
+    conns: usize,
+    mitems_per_s: f64,
+    dispatch_p99_us: f64,
+    rss_delta_kib: Option<u64>,
+    poll_wait_p50_us: f64,
+    saturation_permille: u64,
+}
+
+/// Parity gate (the `--smoke` CI invocation): identical keyed traffic
+/// through a server on every available poller backend must produce
+/// bit-identical registry state — same merged sketch, same key count —
+/// with zero error frames. A backend that drops, reorders into
+/// corruption, or double-applies a frame diverges here.
+fn smoke_parity() {
+    const WORDS: usize = 20_000;
+    let mut gen = KeyedFlowGen::new(500, 1.07, 0xFEED);
+    let batches = gen.batched(WORDS, 1_024);
+    let mut results: Vec<(&'static str, HllSketch, usize)> = Vec::new();
+    for &backend in PollerBackend::available() {
         let registry = SketchRegistry::shared(RegistryConfig {
-            shards: 64,
+            shards: 8,
             ..RegistryConfig::default()
         })
         .unwrap();
@@ -50,71 +102,268 @@ fn main() {
             "127.0.0.1:0",
             registry.clone(),
             ServerConfig {
+                poller_backend: backend,
                 event_loop_threads: 1,
-                max_connections: conns + 64,
                 ..ServerConfig::default()
             },
         )
         .unwrap();
-        let addr = server.local_addr();
-
-        // N resident connections; the first ACTIVE of them produce.
-        let mut clients: Vec<SketchClient> = Vec::with_capacity(conns);
-        for _ in 0..conns {
-            clients.push(SketchClient::connect(addr).unwrap());
+        let mut clients: Vec<SketchClient> = (0..4)
+            .map(|_| SketchClient::connect(server.local_addr()).unwrap())
+            .collect();
+        let chunk = batches.len().div_ceil(clients.len());
+        let mut total = 0u64;
+        for (client, slice) in clients.iter_mut().zip(batches.chunks(chunk)) {
+            total += client.pipeline_insert(slice).unwrap();
         }
-        // Touch every connection once so all are adopted and live.
-        for c in clients.iter_mut() {
-            c.ping().unwrap();
-        }
-        assert!(server.stats().connections_open as usize >= conns);
-
-        let chunk = batches.len().div_ceil(ACTIVE);
-        let m = b.run_items(&format!("{conns:>4} conns, {ACTIVE} active"), words as u64, || {
-            registry.clear();
-            let mut total = 0u64;
-            for (client, slice) in clients.iter_mut().zip(batches.chunks(chunk)) {
-                total += client.pipeline_insert(slice).unwrap();
-            }
-            total
-        });
-        println!("{}", m.report_line());
-        // Per-opcode dispatch latency straight from the server's live
-        // histogram (same `(name, label)` returns the same cell the
-        // event loop records into).
-        let dispatch = server
-            .metrics()
-            .histogram("rpc_latency_ns", Some(("op", "insert_batch".to_string())))
-            .snapshot();
-        let (p50, p99) = (dispatch.quantile(0.5), dispatch.quantile(0.99));
-        assert!(dispatch.count > 0, "ingest must have recorded dispatch latencies");
-        assert!(p99 > 0, "p99 dispatch latency must be nonzero");
-        println!(
-            "      insert_batch dispatch: p50 {:.1}us  p99 {:.1}us  max {:.1}us over {} frames",
-            p50 as f64 / 1e3,
-            p99 as f64 / 1e3,
-            dispatch.max as f64 / 1e3,
-            dispatch.count
-        );
-        match (baseline_rss, resident_kib()) {
-            (Some(base), Some(now)) => {
-                let threads_model_kib = conns as u64 * 8 * 1024; // 8 MiB stack reservation each
-                println!(
-                    "      rss now {now} KiB (+{} KiB over baseline); thread-per-conn model \
-                     would reserve {threads_model_kib} KiB of stacks for {conns} conns",
-                    now.saturating_sub(base)
-                );
-            }
-            _ => println!("      rss unavailable on this platform"),
-        }
-
-        // Every idle connection is still alive after the ingest storm.
-        for c in clients.iter_mut() {
-            c.ping().unwrap();
-        }
+        assert_eq!(total as usize, WORDS, "{}: every word must be acked", backend.label());
         let stats = server.stats();
-        assert_eq!(stats.error_frames, 0);
-        assert!(stats.connections_peak as usize >= conns);
+        assert_eq!(
+            stats.error_frames,
+            0,
+            "{}: frame accounting must be clean",
+            backend.label()
+        );
+        let merged = registry.merge_all();
+        let keys = registry.len();
         server.shutdown();
+        results.push((backend.label(), merged, keys));
+    }
+    let (first_label, first_sketch, first_keys) = &results[0];
+    for (label, sketch, keys) in &results[1..] {
+        assert_eq!(
+            sketch, first_sketch,
+            "merged registry sketch diverges between {label} and {first_label}"
+        );
+        assert_eq!(
+            keys, first_keys,
+            "registry key count diverges between {label} and {first_label}"
+        );
+    }
+    println!(
+        "smoke parity: {} backend(s) left bit-identical registry state over {WORDS} words",
+        results.len()
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    smoke_parity();
+    if smoke {
+        return;
+    }
+
+    let b = bench_main("server concurrency — poller backends vs connection count");
+    let words: usize = if quick_mode() { 40_000 } else { 200_000 };
+    let mut conn_counts: Vec<usize> = if quick_mode() {
+        vec![16, 128]
+    } else {
+        vec![16, 512, 10_000]
+    };
+    const ACTIVE: usize = 8;
+
+    // Both socket ends of every connection live in this process.
+    let fd_limit = raise_nofile_limit();
+    conn_counts.retain(|&conns| {
+        let need = 2 * conns as u64 + 512;
+        if fd_limit < need {
+            eprintln!(
+                "SKIPPING {conns}-connection tier: RLIMIT_NOFILE={fd_limit} < {need} \
+                 (raise the hard limit to include it)"
+            );
+            false
+        } else {
+            true
+        }
+    });
+
+    let mut gen = KeyedFlowGen::new(1_000, 1.07, 0xC0FE);
+    let batches = gen.batched(words, 4096);
+    println!(
+        "{words} words in {} batches, 1000 keys (zipf 1.07); {ACTIVE} active producers; \
+         backends: {:?}\n",
+        batches.len(),
+        PollerBackend::available()
+            .iter()
+            .map(|bk| bk.label())
+            .collect::<Vec<_>>()
+    );
+
+    let baseline_rss = resident_kib();
+    let mut tiers: Vec<Tier> = Vec::new();
+    for &backend in PollerBackend::available() {
+        for &conns in &conn_counts {
+            let registry = SketchRegistry::shared(RegistryConfig {
+                shards: 64,
+                ..RegistryConfig::default()
+            })
+            .unwrap();
+            let server = SketchServer::start(
+                "127.0.0.1:0",
+                registry.clone(),
+                ServerConfig {
+                    poller_backend: backend,
+                    event_loop_threads: 1,
+                    max_connections: conns + 64,
+                    ..ServerConfig::default()
+                },
+            )
+            .unwrap();
+            let addr = server.local_addr();
+
+            // N resident connections; the first ACTIVE of them produce.
+            // A periodic ping during connect keeps the accept queue
+            // drained so the 10k tier cannot overflow the backlog.
+            let mut clients: Vec<SketchClient> = Vec::with_capacity(conns);
+            for i in 0..conns {
+                clients.push(SketchClient::connect(addr).unwrap());
+                if i % 512 == 511 {
+                    clients[i].ping().unwrap();
+                }
+            }
+            // Touch every connection once so all are adopted and live.
+            for c in clients.iter_mut() {
+                c.ping().unwrap();
+            }
+            assert!(server.stats().connections_open as usize >= conns);
+
+            let chunk = batches.len().div_ceil(ACTIVE);
+            let m = b.run_items(
+                &format!("[{}] {conns:>5} conns, {ACTIVE} active", backend.label()),
+                words as u64,
+                || {
+                    registry.clear();
+                    let mut total = 0u64;
+                    for (client, slice) in clients.iter_mut().zip(batches.chunks(chunk)) {
+                        total += client.pipeline_insert(slice).unwrap();
+                    }
+                    total
+                },
+            );
+            println!("{}", m.report_line());
+            // Per-opcode dispatch latency straight from the server's
+            // live histogram (same `(name, label)` returns the same
+            // cell the event loop records into).
+            let dispatch = server
+                .metrics()
+                .histogram("rpc_latency_ns", Some(("op", "insert_batch".to_string())))
+                .snapshot();
+            let (p50, p99) = (dispatch.quantile(0.5), dispatch.quantile(0.99));
+            assert!(dispatch.count > 0, "ingest must have recorded dispatch latencies");
+            assert!(p99 > 0, "p99 dispatch latency must be nonzero");
+            println!(
+                "      insert_batch dispatch: p50 {:.1}us  p99 {:.1}us  max {:.1}us over {} frames",
+                p50 as f64 / 1e3,
+                p99 as f64 / 1e3,
+                dispatch.max as f64 / 1e3,
+                dispatch.count
+            );
+            // Per-tick loop telemetry: with one loop thread the whole
+            // story is in the `loop="0"` cells. `loop_poll_wait_ns`
+            // includes the kernel's readiness scan, so poll(2) shows
+            // its O(N) rescans here while epoll stays flat.
+            let wait = server
+                .metrics()
+                .histogram("loop_poll_wait_ns", Some(("loop", "0".to_string())))
+                .snapshot();
+            let saturation = server
+                .metrics()
+                .gauge("loop_saturation_permille", Some(("loop", "0".to_string())))
+                .get();
+            println!(
+                "      loop tick: poll-wait p50 {:.1}us p99 {:.1}us over {} ticks; \
+                 saturation {saturation} permille",
+                wait.quantile(0.5) as f64 / 1e3,
+                wait.quantile(0.99) as f64 / 1e3,
+                wait.count
+            );
+            let rss_delta_kib = match (baseline_rss, resident_kib()) {
+                (Some(base), Some(now)) => {
+                    let threads_model_kib = conns as u64 * 8 * 1024; // 8 MiB stack reservation each
+                    println!(
+                        "      rss now {now} KiB (+{} KiB over baseline); thread-per-conn model \
+                         would reserve {threads_model_kib} KiB of stacks for {conns} conns",
+                        now.saturating_sub(base)
+                    );
+                    Some(now.saturating_sub(base))
+                }
+                _ => {
+                    println!("      rss unavailable on this platform");
+                    None
+                }
+            };
+
+            // Every idle connection is still alive after the ingest storm.
+            for c in clients.iter_mut() {
+                c.ping().unwrap();
+            }
+            let stats = server.stats();
+            assert_eq!(stats.error_frames, 0);
+            assert!(stats.connections_peak as usize >= conns);
+            tiers.push(Tier {
+                backend: backend.label(),
+                conns,
+                mitems_per_s: m.throughput_items_per_s().unwrap_or(0.0) / 1e6,
+                dispatch_p99_us: p99 as f64 / 1e3,
+                rss_delta_kib,
+                poll_wait_p50_us: wait.quantile(0.5) as f64 / 1e3,
+                saturation_permille: saturation,
+            });
+            server.shutdown();
+        }
+    }
+
+    println!("\nbackend   conns   Mwords/s   p99(us)   tick-wait p50(us)   saturation(permille)   rss+KiB");
+    for t in &tiers {
+        println!(
+            "{:<8} {:>6}   {:>8.2}   {:>7.1}   {:>17.1}   {:>20}   {}",
+            t.backend,
+            t.conns,
+            t.mitems_per_s,
+            t.dispatch_p99_us,
+            t.poll_wait_p50_us,
+            t.saturation_permille,
+            t.rss_delta_kib.map_or_else(|| "n/a".to_string(), |k| k.to_string()),
+        );
+    }
+
+    // Flat-in-N gate: on epoll, per-tick loop cost must not grow with
+    // the resident connection count — same active load, more idle
+    // descriptors. Saturation is a 5 s busy-fraction window, so allow a
+    // generous additive margin; a kernel-scan regression (poll-shaped
+    // behaviour) overshoots it by an order of magnitude.
+    let epoll: Vec<&Tier> = tiers.iter().filter(|t| t.backend == "epoll").collect();
+    if epoll.len() >= 2 {
+        let smallest = epoll.first().unwrap();
+        let largest = epoll.last().unwrap();
+        assert!(
+            largest.saturation_permille <= smallest.saturation_permille + 400,
+            "epoll loop saturation grew with idle connections: {} permille at {} conns vs \
+             {} permille at {} conns",
+            largest.saturation_permille,
+            largest.conns,
+            smallest.saturation_permille,
+            smallest.conns
+        );
+        if let Some(poll_peer) = tiers
+            .iter()
+            .find(|t| t.backend == "poll" && t.conns == largest.conns)
+        {
+            println!(
+                "\nat {} conns: epoll saturation {} permille vs poll {} permille; \
+                 tick-wait p50 {:.1}us vs {:.1}us",
+                largest.conns,
+                largest.saturation_permille,
+                poll_peer.saturation_permille,
+                largest.poll_wait_p50_us,
+                poll_peer.poll_wait_p50_us
+            );
+            assert!(
+                largest.saturation_permille <= poll_peer.saturation_permille + 400,
+                "epoll must not be busier than poll at the same load: {} vs {} permille",
+                largest.saturation_permille,
+                poll_peer.saturation_permille
+            );
+        }
     }
 }

@@ -22,6 +22,7 @@
 //!   bucket-wise max-merged in. Merge commutes with insertion, so the
 //!   final register files are bit-identical to the registry backend's.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -67,6 +68,45 @@ impl KeyedRunSummary {
 /// once; workers never re-hash the key.
 type RoutedPair = (usize, u64, u32);
 
+/// Adaptive batch sizing: a batch is worth growing only while sorting
+/// it still lengthens same-key runs — the ingest fold amortizes one map
+/// lookup and one dirty resolution per key *run*, so the flush target
+/// is the observed run length × this factor (≈ this many runs per
+/// batch), clamped to `[ADAPTIVE_BATCH_FLOOR, cfg.batch_size]`.
+/// High-dispersion streams (runs ≈ 1, which a bigger sort cannot
+/// improve) flush small low-latency batches; hot-keyed streams grow to
+/// the configured ceiling, where one lock acquisition folds thousands
+/// of pairs.
+const RUN_AMORTIZATION: usize = 64;
+
+/// Floor of the adaptive flush target: channel/sort fixed costs stay
+/// amortized even when every run has length 1.
+const ADAPTIVE_BATCH_FLOOR: usize = 256;
+
+/// Fold one batch's observed mean run length into the per-worker EMA
+/// (fixed-point, ×256; 0 = no observation yet). Quarter-weight
+/// exponential decay: a workload shift re-targets within a few batches
+/// without any single skewed batch yanking the threshold around.
+fn fold_run_ema(prev: u64, batch_len: usize, distinct_keys: usize) -> u64 {
+    let obs = ((batch_len as u64) << 8) / distinct_keys.max(1) as u64;
+    if prev == 0 {
+        obs
+    } else {
+        prev - prev / 4 + obs / 4
+    }
+}
+
+/// The feeder's flush threshold for a worker given its run-length EMA:
+/// `run_length × RUN_AMORTIZATION`, clamped. An untouched EMA (no batch
+/// folded yet) targets the ceiling — the configured batch size.
+fn flush_target_for(ema: u64, ceiling: usize) -> usize {
+    if ema == 0 {
+        return ceiling;
+    }
+    let target = (ema as usize).saturating_mul(RUN_AMORTIZATION) >> 8;
+    target.clamp(ADAPTIVE_BATCH_FLOOR.min(ceiling), ceiling)
+}
+
 /// How a keyed worker folds its sorted batch into the registry.
 enum KeyedBackend {
     /// Direct path: whole shard runs through
@@ -87,9 +127,16 @@ pub struct KeyedCoordinator {
     txs: Vec<SyncSender<Vec<RoutedPair>>>,
     handles: Vec<JoinHandle<KeyedWorkerReport>>,
     metrics: Arc<Metrics>,
-    /// Per-worker accumulation buffers (flushed at `batch_size`).
+    /// Per-worker accumulation buffers, flushed at that worker's
+    /// adaptive target (≤ `batch_size`).
     buffers: Vec<Vec<RoutedPair>>,
+    /// The configured batch size — now the *ceiling* of the adaptive
+    /// flush target.
     batch_size: usize,
+    /// Per-worker observed run-length EMA (fixed-point ×256), written
+    /// by the worker after each sort, read by the feeder to size the
+    /// next flush.
+    run_ema: Vec<Arc<AtomicU64>>,
     started: Instant,
 }
 
@@ -99,6 +146,7 @@ fn run_keyed_worker(
     backend: KeyedBackend,
     rx: Receiver<Vec<RoutedPair>>,
     metrics: Arc<Metrics>,
+    run_ema: Arc<AtomicU64>,
 ) -> KeyedWorkerReport {
     let hll = registry.config().hll;
     let mut batches = 0u64;
@@ -119,6 +167,12 @@ fn run_keyed_worker(
         // per batch downstream. Register updates commute, so the
         // unstable sort's reordering cannot change any sketch.
         batch.sort_unstable_by_key(|&(shard, key, _)| (shard, key));
+        // Feed the adaptive batch sizer: mean same-key run length in
+        // this sorted batch (a key lives on exactly one shard, so key
+        // transitions alone count the runs).
+        let distinct = 1 + batch.windows(2).filter(|pair| pair[0].1 != pair[1].1).count();
+        let prev = run_ema.load(Ordering::Relaxed);
+        run_ema.store(fold_run_ema(prev, batch.len(), distinct), Ordering::Relaxed);
         match &backend {
             KeyedBackend::Registry => {
                 let mut rest: &[RoutedPair] = &batch;
@@ -213,20 +267,24 @@ impl KeyedCoordinator {
         let metrics = Arc::new(Metrics::default());
         let mut txs = Vec::with_capacity(cfg.pipelines);
         let mut handles = Vec::with_capacity(cfg.pipelines);
+        let mut run_ema = Vec::with_capacity(cfg.pipelines);
         for (w, backend) in backends.into_iter().enumerate() {
             let (tx, rx) = sync_channel::<Vec<RoutedPair>>(cfg.queue_depth);
             let reg = registry.clone();
             let m = metrics.clone();
+            let ema = Arc::new(AtomicU64::new(0));
+            let worker_ema = ema.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("keyed-pipeline-{w}"))
-                .spawn(move || run_keyed_worker(w, reg, backend, rx, m))
+                .spawn(move || run_keyed_worker(w, reg, backend, rx, m, worker_ema))
                 .expect("spawn keyed worker");
             txs.push(tx);
             handles.push(handle);
+            run_ema.push(ema);
         }
         crate::log_info!(
             "coordinator",
-            "keyed mode: {} workers over {} shards (batch={}, depth={})",
+            "keyed mode: {} workers over {} shards (batch≤{} adaptive, depth={})",
             cfg.pipelines,
             registry.config().shards,
             cfg.batch_size,
@@ -235,6 +293,7 @@ impl KeyedCoordinator {
         Ok(Self {
             buffers: vec![Vec::with_capacity(cfg.batch_size); cfg.pipelines],
             batch_size: cfg.batch_size,
+            run_ema,
             registry,
             txs,
             handles,
@@ -268,8 +327,10 @@ impl KeyedCoordinator {
         }
     }
 
-    /// Feed a slice of keyed pairs; full per-worker batches are shipped
-    /// as they fill.
+    /// Feed a slice of keyed pairs; per-worker batches are shipped when
+    /// they reach that worker's adaptive flush target (observed run
+    /// length × [`RUN_AMORTIZATION`], clamped to
+    /// `[ADAPTIVE_BATCH_FLOOR, batch_size]`).
     pub fn feed(&mut self, pairs: &[(u64, u32)]) {
         self.metrics
             .words_in
@@ -279,9 +340,9 @@ impl KeyedCoordinator {
             let shard = self.registry.shard_of(&key);
             let w = shard % workers;
             self.buffers[w].push((shard, key, word));
-            if self.buffers[w].len() >= self.batch_size {
-                let full =
-                    std::mem::replace(&mut self.buffers[w], Vec::with_capacity(self.batch_size));
+            let target = flush_target_for(self.run_ema[w].load(Ordering::Relaxed), self.batch_size);
+            if self.buffers[w].len() >= target {
+                let full = std::mem::replace(&mut self.buffers[w], Vec::with_capacity(target));
                 Self::route(&self.txs, &self.metrics, w, full);
             }
         }
@@ -454,6 +515,74 @@ mod tests {
             ..Default::default()
         };
         assert!(KeyedCoordinator::start_with_engine(&cfg, registry, None).is_err());
+    }
+
+    #[test]
+    fn adaptive_targets_move_with_run_length() {
+        // No observation yet: flush at the configured ceiling.
+        assert_eq!(flush_target_for(0, 8192), 8192);
+
+        // Hot stream: 8192-pair batches covering only 2 distinct keys
+        // (mean run 4096). run × 64 saturates far above the ceiling, so
+        // the target clamps to the configured batch size.
+        let mut ema = 0u64;
+        for _ in 0..32 {
+            ema = fold_run_ema(ema, 8192, 2);
+        }
+        assert_eq!(flush_target_for(ema, 8192), 8192);
+
+        // Dispersed stream: every pair a distinct key (mean run 1).
+        // 1 × 64 = 64 is below the floor, so the target clamps to
+        // ADAPTIVE_BATCH_FLOOR — small, low-latency flushes.
+        for _ in 0..32 {
+            ema = fold_run_ema(ema, 8192, 8192);
+        }
+        assert_eq!(flush_target_for(ema, 8192), ADAPTIVE_BATCH_FLOOR);
+
+        // Mid-range workload: mean run 8 → target 8 × 64 = 512, inside
+        // the clamp window (quarter-weight EMA converges to ~run×256
+        // fixed-point; allow the ±1 integer-fixpoint wobble).
+        let mut mid = 0u64;
+        for _ in 0..64 {
+            mid = fold_run_ema(mid, 8192, 1024);
+        }
+        let target = flush_target_for(mid, 8192);
+        assert!((448..=576).contains(&target), "mid target {target}");
+
+        // A tiny ceiling wins over the floor.
+        assert_eq!(flush_target_for(1 << 8, 128), 128);
+    }
+
+    #[test]
+    fn adaptive_flush_preserves_results() {
+        // End-to-end: a hot-keyed stream (long runs → large targets)
+        // and a dispersed stream (floor-sized flushes) both produce
+        // registries identical to the fixed-batch serial reference.
+        let mk = || {
+            SketchRegistry::shared(RegistryConfig { shards: 8, ..RegistryConfig::default() })
+                .unwrap()
+        };
+        let cfg = CoordinatorConfig { pipelines: 2, batch_size: 4096, ..Default::default() };
+
+        // Hot: 4 keys over 40k pairs — runs are long, EMA drives the
+        // target toward the ceiling after the first flush.
+        let hot = pairs(40_000, 4, 7);
+        let adaptive_reg = mk();
+        run_keyed_stream(&cfg, adaptive_reg.clone(), &hot).unwrap();
+        let reference_reg = mk();
+        let small = CoordinatorConfig { pipelines: 1, batch_size: 64, ..Default::default() };
+        run_keyed_stream(&small, reference_reg.clone(), &hot).unwrap();
+        assert_eq!(adaptive_reg.merge_all(), reference_reg.merge_all());
+
+        // Dispersed: ~20k distinct keys — the EMA collapses to run≈1
+        // and flushes drop to the floor without changing any sketch.
+        let dispersed = pairs(20_000, 1 << 20, 11);
+        let a = mk();
+        run_keyed_stream(&cfg, a.clone(), &dispersed).unwrap();
+        let b = mk();
+        run_keyed_stream(&small, b.clone(), &dispersed).unwrap();
+        assert_eq!(a.merge_all(), b.merge_all());
+        assert_eq!(a.len(), b.len());
     }
 
     #[test]

@@ -498,6 +498,52 @@ impl<K: Eq + Hash + Clone> SketchRegistry<K> {
         )
     }
 
+    /// Batched [`Self::merge_sketch`]: every sketch's config is
+    /// validated up front (the whole batch is rejected before any state
+    /// changes), the global union is raised, then the entries are
+    /// grouped by shard so each shard's run applies under a single lock
+    /// acquisition — the follower's apply path for runs of consecutive
+    /// full-sketch delta entries ([`crate::replica`]), where per-entry
+    /// [`Self::merge_sketch`] paid one lock round trip per key. Merges
+    /// are bucket-wise max (commutative, idempotent), so the grouping's
+    /// reordering across keys cannot change any register.
+    pub fn merge_sketch_batch(&self, entries: Vec<(K, HllSketch)>) -> Result<(), SketchError> {
+        for (_, sketch) in &entries {
+            if *sketch.config() != self.cfg.hll {
+                return Err(SketchError::ConfigMismatch(*sketch.config(), self.cfg.hll));
+            }
+        }
+        if let Some(global) = &self.global {
+            for (_, sketch) in &entries {
+                global.merge_sketch(sketch)?;
+            }
+        }
+        let now = self.tick();
+        let wall = self.wall.now_secs();
+        let mut routed: Vec<(usize, K, AdaptiveSketch)> = entries
+            .into_iter()
+            .map(|(key, sketch)| {
+                let shard = self.shard_of(&key);
+                (shard, key, AdaptiveSketch::from_dense(sketch))
+            })
+            .collect();
+        // Stable sort: equal-shard entries keep their batch order (the
+        // documented apply-order contract, though max-merge makes any
+        // order equivalent).
+        routed.sort_by_key(|&(shard, _, _)| shard);
+        while !routed.is_empty() {
+            let shard = routed[0].0;
+            let run = routed.iter().take_while(|&&(s, _, _)| s == shard).count();
+            self.shards[shard].merge_in_batch(
+                self.cfg.hll,
+                routed.drain(..run).map(|(_, key, sketch)| (key, sketch)),
+                now,
+                wall,
+            )?;
+        }
+        Ok(())
+    }
+
     /// Visit every live key's sketch serialized in wire format v2
     /// (seed-carrying header; see [`crate::hll::sketch`]), shard by
     /// shard. Only one shard's records are materialized at a time, so a
@@ -1063,6 +1109,60 @@ mod tests {
             .collect();
         fresh.restore(decoded_again).unwrap();
         assert_eq!(fresh.merge_all(), reg.merge_all());
+    }
+
+    #[test]
+    fn merge_sketch_batch_matches_per_key_merge() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(53);
+        // A batch of dense sketches across many keys, some keys twice
+        // (replication batches may carry two Full entries for one key).
+        let mut entries: Vec<(u64, HllSketch)> = Vec::new();
+        for key in 0u64..60 {
+            let n = 10 + (key as usize * 97) % 2_000;
+            let mut s = HllSketch::new(HllConfig::PAPER);
+            for _ in 0..n {
+                s.insert_u32(rng.next_u32());
+            }
+            entries.push((key, s));
+            if key % 7 == 0 {
+                let mut extra = HllSketch::new(HllConfig::PAPER);
+                extra.insert_u32(rng.next_u32());
+                entries.push((key, extra));
+            }
+        }
+
+        let batched = registry(8);
+        batched.enable_dirty_tracking();
+        let per_key = registry(8);
+        batched.merge_sketch_batch(entries.clone()).unwrap();
+        for (key, sketch) in entries.clone() {
+            per_key.merge_sketch(key, sketch).unwrap();
+        }
+        assert_eq!(batched.len(), per_key.len());
+        for (key, est) in per_key.estimates() {
+            assert_eq!(batched.estimate(&key), Some(est), "key {key}");
+        }
+        assert_eq!(batched.merge_all(), per_key.merge_all());
+        assert_eq!(batched.global_estimate(), per_key.global_estimate());
+        // Every merged key is dirty as a full resend, same as the
+        // per-key path would leave it.
+        let drained = batched.drain_dirty_deltas();
+        assert_eq!(drained.len(), 60);
+        assert!(drained.iter().all(|(_, d)| matches!(d, SketchDelta::Full(_))));
+
+        // One mismatched sketch rejects the whole batch before any
+        // state changes — no key created, no global register raised.
+        let fresh = registry(8);
+        let mut bad = entries;
+        bad.push((999, HllSketch::new(HllConfig::PAPER.with_seed(7))));
+        assert!(matches!(
+            fresh.merge_sketch_batch(bad),
+            Err(SketchError::ConfigMismatch(..))
+        ));
+        assert!(fresh.is_empty());
+        assert_eq!(fresh.global_sketch().unwrap(), HllSketch::new(HllConfig::PAPER));
+        // An empty batch is a no-op Ok.
+        fresh.merge_sketch_batch(Vec::new()).unwrap();
     }
 
     #[test]

@@ -591,29 +591,56 @@ impl<K: Eq + Hash> Shard<K> {
     where
         K: Clone,
     {
+        self.merge_in_batch(cfg, std::iter::once((key, other)), now, wall)
+    }
+
+    /// Merge a run of `(key, sketch)` entries under a single lock
+    /// acquisition — the batched back end of [`Shard::merge_in`] and
+    /// the follower's apply path for runs of consecutive `Full` delta
+    /// entries ([`SketchRegistry::merge_sketch_batch`]). Per-entry
+    /// semantics are exactly [`Shard::merge_in`]'s; the first rejected
+    /// entry aborts the run (entries before it stay applied — callers
+    /// that need all-or-nothing validate configs up front, which is the
+    /// only failure a pre-validated batch can hit).
+    ///
+    /// [`SketchRegistry::merge_sketch_batch`]: super::SketchRegistry::merge_sketch_batch
+    pub(crate) fn merge_in_batch<I>(
+        &self,
+        cfg: HllConfig,
+        entries: I,
+        now: u64,
+        wall: u64,
+    ) -> Result<(), crate::hll::SketchError>
+    where
+        I: Iterator<Item = (K, AdaptiveSketch)>,
+        K: Clone,
+    {
         let dirty = self.dirty_on();
         let mut st = self.lock();
-        // Only mark dirty once the merge is known to apply; a failed
-        // config check must not enqueue a key that was never created.
-        match st.map.entry(key.clone()) {
-            std::collections::hash_map::Entry::Occupied(mut e) => {
-                let entry = e.get_mut();
-                entry.sketch.merge_into(other)?;
-                entry.touch(now, wall);
-            }
-            std::collections::hash_map::Entry::Vacant(e) => {
-                if *other.config() != cfg {
-                    return Err(crate::hll::SketchError::ConfigMismatch(*other.config(), cfg));
+        let st = &mut *st;
+        for (key, other) in entries {
+            // Only mark dirty once the merge is known to apply; a failed
+            // config check must not enqueue a key that was never created.
+            match st.map.entry(key.clone()) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let entry = e.get_mut();
+                    entry.sketch.merge_into(other)?;
+                    entry.touch(now, wall);
                 }
-                e.insert(KeyEntry { sketch: other, last_touch: now, last_touch_wall: wall });
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    if *other.config() != cfg {
+                        return Err(crate::hll::SketchError::ConfigMismatch(*other.config(), cfg));
+                    }
+                    e.insert(KeyEntry { sketch: other, last_touch: now, last_touch_wall: wall });
+                }
             }
-        }
-        if dirty {
-            // A merge can raise arbitrary registers; full resend.
-            st.dirty
-                .entry(key)
-                .or_insert_with(|| DirtyState::Registers(Vec::new()))
-                .note_full();
+            if dirty {
+                // A merge can raise arbitrary registers; full resend.
+                st.dirty
+                    .entry(key)
+                    .or_insert_with(|| DirtyState::Registers(Vec::new()))
+                    .note_full();
+            }
         }
         Ok(())
     }

@@ -386,8 +386,11 @@ fn replication_loop(
 /// Apply one wire-v3 delta entry to the follower registry. Tombstones
 /// evict (the primary dropped the key — TTL, budget, or explicit);
 /// register diffs max-merge the changed registers; full sketches
-/// max-merge whole. Malformed or config-mismatched bodies surface as
-/// [`SketchError`]s for the caller to halt on.
+/// max-merge whole (the batch path folds *runs* of full sketches
+/// through [`SketchRegistry::merge_sketch_batch`] instead — this arm
+/// is the flush-boundary singleton case). Malformed or
+/// config-mismatched bodies surface as [`SketchError`]s for the caller
+/// to halt on.
 fn apply_delta(
     registry: &SketchRegistry<u64>,
     key: u64,
@@ -426,6 +429,28 @@ fn apply_delta(
     }
 }
 
+/// Flush an accumulated run of decoded full-sketch entries as one
+/// batched merge ([`SketchRegistry::merge_sketch_batch`]: one shard
+/// lock acquisition per shard run instead of one per key). `false`
+/// halts replication, exactly as a per-entry rejection would — the
+/// batch is config-validated whole before any state changes, so a
+/// rejection leaves the registry as the per-entry path's first-entry
+/// rejection did.
+fn flush_full_run(
+    registry: &SketchRegistry<u64>,
+    shared: &FollowerShared,
+    run: &mut Vec<(u64, HllSketch)>,
+) -> bool {
+    if run.is_empty() {
+        return true;
+    }
+    if let Err(e) = registry.merge_sketch_batch(std::mem::take(run)) {
+        shared.halt(format!("full-sketch delta run rejected: {e}"));
+        return false;
+    }
+    true
+}
+
 /// Apply one delta batch (any wire generation, already normalized to
 /// typed entries) if it advances the cursor. Entry order matters: an
 /// evict-then-recreate ships tombstone first, then the new sketch.
@@ -433,6 +458,14 @@ fn apply_delta(
 /// could not interleave wrongly anyway (same entries), but skipping
 /// keeps the tombstone-ordering argument a per-batch-once argument.
 /// Returns `false` when replication has halted on a rejected entry.
+///
+/// Runs of consecutive [`SketchDelta::Full`] entries — the bulk of a
+/// bootstrap-adjacent or sparse-heavy stream — decode up front and
+/// apply through the registry's run-folding batch path; any other
+/// delta kind flushes the pending run *first*, so cross-kind ordering
+/// (the tombstone-before-recreate contract) is untouched: max-merge
+/// commutes across the keys inside a run, but never across a
+/// tombstone.
 fn apply_batch(
     registry: &SketchRegistry<u64>,
     shared: &FollowerShared,
@@ -442,7 +475,23 @@ fn apply_batch(
     let applied = shared.cursor.load(Ordering::SeqCst);
     if seq > applied {
         let count = entries.len() as u64;
+        let mut full_run: Vec<(u64, HllSketch)> = Vec::new();
         for (key, delta) in entries {
+            if let SketchDelta::Full(bytes) = &delta {
+                match HllSketch::from_bytes(bytes) {
+                    Ok(sketch) => {
+                        full_run.push((key, sketch));
+                        continue;
+                    }
+                    Err(e) => {
+                        shared.halt(format!("delta entry for key {key} rejected: {e}"));
+                        return false;
+                    }
+                }
+            }
+            if !flush_full_run(registry, shared, &mut full_run) {
+                return false;
+            }
             if let Err(e) = apply_delta(registry, key, delta, shared) {
                 // A delta that does not decode or match our config
                 // cannot be fixed by retrying against the same primary:
@@ -450,6 +499,9 @@ fn apply_batch(
                 shared.halt(format!("delta entry for key {key} rejected: {e}"));
                 return false;
             }
+        }
+        if !flush_full_run(registry, shared, &mut full_run) {
+            return false;
         }
         shared.cursor.store(seq, Ordering::SeqCst);
         shared.batches_applied.fetch_add(1, Ordering::Relaxed);

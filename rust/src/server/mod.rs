@@ -22,22 +22,33 @@
 //!   incremental [`protocol::FrameDecoder`]/[`protocol::FrameEncoder`]
 //!   state machines that reassemble frames across partial nonblocking
 //!   reads and writes;
-//! * [`reactor`] — a hand-rolled `poll(2)` readiness loop substrate
-//!   (interest sets rebuilt per tick, self-pipe [`reactor::Waker`]s
-//!   for cross-thread wakeups), dependency-free;
+//! * [`reactor`] — the readiness substrate: a three-method `Poller`
+//!   surface over interchangeable kernel backends
+//!   ([`reactor::PollerBackend`]: `poll(2)` everywhere, `epoll(7)` on
+//!   Linux with persistent level-triggered interest mutated only on
+//!   state change, a `kqueue` selection stub for BSD/macOS; default =
+//!   best available, env override `HLL_POLLER`), plus self-pipe
+//!   [`reactor::Waker`]s for cross-thread wakeups — dependency-free;
+//! * [`reuseport`] — raw-syscall `SO_REUSEPORT` listener groups: one
+//!   listening socket per event loop on a shared port, so the kernel
+//!   shards accepts across loops instead of funneling them through
+//!   loop 0 (Linux; other platforms fall back to routed accepts);
 //! * [`server`] — the event-driven server: one (configurably N)
 //!   nonblocking loop thread multiplexing every connection through
 //!   per-connection state machines (reading → dispatching → writing →
-//!   subscribed), write backpressure via interest flipping, idle
-//!   timeouts and a connection cap, graceful shutdown that drains the
-//!   pollers, an optional background maintenance sweeper
+//!   subscribed), vectored `writev` reply draining, write backpressure
+//!   via interest flipping, idle timeouts and a connection cap, a
+//!   small worker pool taking blocking work (`Snapshot` RPC, full-sync
+//!   image serialization) off the loops, graceful shutdown that drains
+//!   the pollers, an optional background maintenance sweeper
 //!   ([`SweeperConfig`]: timer-driven TTL / wall-clock-TTL / budget
 //!   eviction), optional read-only replica mode, per-opcode latency /
-//!   payload histograms and event-loop tick profiles feeding the
-//!   process-wide metrics registry (plus rate-limited slow-request
-//!   WARN tracing, threshold via `HLL_SLOW_REQ_MS`), and — with
-//!   [`ServerConfig::replication`] — a replication primary role
-//!   (capture thread + `SUBSCRIBE` streams, see [`crate::replica`]);
+//!   payload histograms and per-loop + per-backend event-loop tick
+//!   profiles feeding the process-wide metrics registry (plus
+//!   rate-limited slow-request WARN tracing, threshold via
+//!   `HLL_SLOW_REQ_MS`), and — with [`ServerConfig::replication`] — a
+//!   replication primary role (capture thread + `SUBSCRIBE` streams,
+//!   see [`crate::replica`]);
 //! * [`client`] — a blocking [`SketchClient`] with batch pipelining
 //!   (write a flight of ingest frames, then read the replies — one
 //!   round trip per flight), optional typed socket timeouts, and
@@ -74,6 +85,7 @@
 pub mod client;
 pub mod protocol;
 pub mod reactor;
+pub mod reuseport;
 pub mod server;
 pub mod snapshot;
 
@@ -82,6 +94,7 @@ pub use protocol::{
     ErrorCode, EvictPolicy, FrameDecoder, FrameEncoder, ProtocolError, Request, Response,
     StatsSummary, MAX_PAYLOAD, PROTO_VERSION,
 };
+pub use reactor::PollerBackend;
 pub use server::{ServerConfig, ServerStatsSnapshot, SketchServer, SweeperConfig};
 pub use snapshot::{
     decode_snapshot_bytes, read_snapshot, read_snapshot_contents, replace_from_bytes,

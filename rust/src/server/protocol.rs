@@ -1245,6 +1245,96 @@ impl FrameEncoder {
         }
         Ok(true)
     }
+
+    /// Vectored drain for real sockets: gathers up to [`WRITEV_BATCH`]
+    /// queued frames (front partial-write offset honored) into one
+    /// `writev(2)`, so a pipelined burst of small replies costs one
+    /// syscall instead of one `write` per frame. Same contract as
+    /// [`Self::write_to`]: `Ok(true)` = fully drained; `Ok(false)` =
+    /// the socket would block (or took a short write) with bytes still
+    /// queued — re-arm write interest; `Err` = the connection is gone.
+    #[cfg(unix)]
+    pub fn write_vectored_to(&mut self, fd: std::os::unix::io::RawFd) -> io::Result<bool> {
+        use std::os::raw::c_int;
+        while !self.queue.is_empty() {
+            let mut iov = [IoVec { base: std::ptr::null(), len: 0 }; WRITEV_BATCH];
+            let mut cnt = 0usize;
+            let mut offered = 0usize;
+            for (i, frame) in self.queue.iter().enumerate() {
+                if cnt == WRITEV_BATCH {
+                    break;
+                }
+                let skip = if i == 0 { self.front_written } else { 0 };
+                let slice = &frame[skip..];
+                if slice.is_empty() {
+                    continue;
+                }
+                iov[cnt] = IoVec { base: slice.as_ptr(), len: slice.len() };
+                cnt += 1;
+                offered += slice.len();
+            }
+            let rc = unsafe { writev(fd, iov.as_ptr(), cnt as c_int) };
+            if rc < 0 {
+                let e = io::Error::last_os_error();
+                match e.kind() {
+                    io::ErrorKind::WouldBlock => return Ok(false),
+                    io::ErrorKind::Interrupted => continue,
+                    _ => return Err(e),
+                }
+            }
+            let written = rc as usize;
+            if written == 0 && offered > 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "peer stopped accepting bytes",
+                ));
+            }
+            self.pending -= written;
+            // Advance the queue past the accepted bytes.
+            let mut n = written;
+            while n > 0 {
+                let front_left = match self.queue.front() {
+                    Some(f) => f.len() - self.front_written,
+                    None => break,
+                };
+                if n >= front_left {
+                    n -= front_left;
+                    self.queue.pop_front();
+                    self.front_written = 0;
+                } else {
+                    self.front_written += n;
+                    n = 0;
+                }
+            }
+            // A short write means the socket buffer filled mid-batch:
+            // stop here instead of spinning into a guaranteed EAGAIN.
+            if written < offered {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+}
+
+/// Max frames gathered into one `writev` call (well under every
+/// platform's `IOV_MAX` of 1024).
+#[cfg(unix)]
+const WRITEV_BATCH: usize = 64;
+
+/// `struct iovec` — identical layout on every unix libc. `base` is
+/// `*const`: `writev` never writes through it; the C prototype's
+/// non-const `void *` is ABI-identical.
+#[cfg(unix)]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct IoVec {
+    base: *const u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn writev(fd: std::os::raw::c_int, iov: *const IoVec, iovcnt: std::os::raw::c_int) -> isize;
 }
 
 /// Strict little-endian payload cursor.
@@ -2041,6 +2131,53 @@ mod tests {
         assert!(enc.is_empty());
         assert_eq!(enc.pending(), 0);
         assert_eq!(sink.out, want);
+    }
+
+    /// The vectored drain must deliver the same byte stream as the
+    /// scalar one: many small frames (spanning several `writev`
+    /// batches) plus one large frame, driven against a real socket
+    /// with a finite buffer so short writes and `WouldBlock` both
+    /// occur.
+    #[cfg(unix)]
+    #[test]
+    fn frame_encoder_vectored_drain_is_byte_exact() {
+        use std::io::Read;
+        use std::os::unix::io::AsRawFd;
+        use std::os::unix::net::UnixStream;
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut enc = FrameEncoder::new();
+        let mut want: Vec<u8> = Vec::new();
+        for i in 0..200u32 {
+            let f = encode_insert_batch(i as u64, &[i, i + 1, i + 2]);
+            want.extend_from_slice(&f);
+            enc.push(f);
+        }
+        let words: Vec<u32> = vec![42; 60_000];
+        let big = encode_insert_batch(7, &words);
+        want.extend_from_slice(&big);
+        enc.push(big);
+        let mut got = Vec::new();
+        let mut buf = [0u8; 16384];
+        loop {
+            let drained = enc.write_vectored_to(a.as_raw_fd()).unwrap();
+            // Pull whatever landed so the socket buffer frees up.
+            loop {
+                match (&b).read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => got.extend_from_slice(&buf[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => panic!("read: {e}"),
+                }
+            }
+            if drained {
+                break;
+            }
+        }
+        assert!(enc.is_empty());
+        assert_eq!(enc.pending(), 0);
+        assert_eq!(got, want);
     }
 
     #[test]

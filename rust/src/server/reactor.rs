@@ -1,26 +1,48 @@
-//! A minimal `poll(2)` reactor — the readiness substrate of the
-//! event-driven server ([`super::server`]).
+//! Readiness substrate of the event-driven server ([`super::server`]):
+//! a three-method `Poller` surface (`clear` / `register` / `poll`) with
+//! two interchangeable kernel backends.
 //!
-//! The offline crate set has no `mio`/`libc`, so this is a hand-rolled
-//! wrapper over the one portable-enough readiness syscall `std` links
-//! anyway: `poll(2)`, declared directly via `extern "C"` with our own
-//! `pollfd` layout. The interest set is rebuilt from scratch every loop
-//! iteration (the classic poll shape): registration is just pushing
-//! into a vector, there is no persistent kernel-side state to keep
-//! consistent, and interest *flipping* — the server's write
-//! backpressure mechanism — is simply "register with different flags
-//! next tick". O(connections) per tick, which is exactly the regime the
-//! paper's single shared datapath lives in and comfortably handles the
-//! hundreds-to-thousands of connections this server targets. (An
-//! epoll/kqueue upgrade would slot in behind the same three-method
-//! surface: `clear` / `register` / `poll`.)
+//! The offline crate set has no `mio`/`libc`, so both backends are
+//! hand-rolled `extern "C"` wrappers with our own struct layouts:
+//!
+//! * **`poll(2)`** — the portable baseline. The interest set is rebuilt
+//!   from scratch every loop iteration (the classic poll shape):
+//!   registration is just pushing into a vector and there is no
+//!   persistent kernel-side state to keep consistent. The kernel scans
+//!   the whole set per call, so per-tick cost is O(resident
+//!   connections) — fine to ~1k conns, the wall the C100K roadmap item
+//!   hits.
+//! * **`epoll(7)`** (Linux) — level-triggered, persistent kernel
+//!   interest. `clear`/`register` only mutate a userspace *desired*
+//!   set; `poll` diffs it against a mirror of what the kernel currently
+//!   holds and issues `EPOLL_CTL_ADD/MOD/DEL` **only on state change**.
+//!   A steady-state tick where no connection flipped interest performs
+//!   exactly one syscall (`epoll_wait`), and `epoll_wait` returns in
+//!   O(ready), not O(registered) — per-tick cost flat in connection
+//!   count.
+//! * **`kqueue(2)`** (BSD/macOS) — selection stub only: the backend
+//!   enum carries the variant and `resolve()` falls back to `poll`
+//!   until a `kevent` wrapper lands (struct kevent layouts diverge
+//!   across the BSDs; the poll backend is correct everywhere).
+//!
+//! Backend choice is [`PollerBackend`]: servers default to
+//! `Auto` (= best available for the platform, overridable with
+//! `HLL_POLLER=poll|epoll|kqueue`); an explicitly requested backend
+//! that is unavailable falls back to the best available one.
+//!
+//! Interest *flipping* — the server's write-backpressure mechanism —
+//! stays "register with different flags next tick" under every backend;
+//! epoll turns the flip into a single `EPOLL_CTL_MOD` for just the
+//! connection that changed.
 //!
 //! Cross-thread wakeups use a [`Waker`]: a nonblocking
 //! [`UnixStream::pair`] self-pipe whose read end rides in the poll set.
 //! Anything may call [`Waker::wake`] from any thread — the replication
 //! capture thread does, after sealing a batch, so subscriber
 //! connections re-arm write interest within one syscall instead of one
-//! poll timeout; shutdown does, so loops exit immediately.
+//! poll timeout; worker-pool threads do, to deliver completed blocking
+//! work back to the owning loop; shutdown does, so loops exit
+//! immediately.
 //!
 //! Unix-only by construction (as is `poll(2)`); the serving stack
 //! targets the Linux containers CI and production run on.
@@ -30,6 +52,117 @@ use std::os::raw::c_int;
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::UnixStream;
 use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Which kernel readiness API a [`Poller`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PollerBackend {
+    /// Best available for the platform, overridable via `HLL_POLLER`.
+    #[default]
+    Auto,
+    /// Portable `poll(2)`: interest rebuilt per tick, O(conns)/tick.
+    Poll,
+    /// Linux `epoll(7)`: persistent interest, ctl only on state change.
+    Epoll,
+    /// BSD/macOS `kqueue(2)` — selection stub; resolves to `poll` today.
+    Kqueue,
+}
+
+impl PollerBackend {
+    /// Backends that actually work on this platform, best first.
+    pub fn available() -> &'static [PollerBackend] {
+        #[cfg(target_os = "linux")]
+        {
+            &[PollerBackend::Epoll, PollerBackend::Poll]
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            &[PollerBackend::Poll]
+        }
+    }
+
+    /// Best backend this platform supports.
+    pub fn best() -> PollerBackend {
+        Self::available()[0]
+    }
+
+    fn is_available(self) -> bool {
+        Self::available().contains(&self)
+    }
+
+    /// Parse a backend name (the `HLL_POLLER` value format).
+    pub fn parse(s: &str) -> Option<PollerBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PollerBackend::Auto),
+            "poll" => Some(PollerBackend::Poll),
+            "epoll" => Some(PollerBackend::Epoll),
+            "kqueue" => Some(PollerBackend::Kqueue),
+            _ => None,
+        }
+    }
+
+    /// The `HLL_POLLER` environment override, if set to a known name.
+    pub fn from_env() -> Option<PollerBackend> {
+        std::env::var("HLL_POLLER").ok().and_then(|v| Self::parse(&v))
+    }
+
+    /// Resolve to a concrete, available backend: `Auto` honors the
+    /// `HLL_POLLER` override and otherwise picks [`Self::best`]; an
+    /// explicit but unavailable choice (e.g. `epoll` on macOS, or the
+    /// `kqueue` stub anywhere) falls back to [`Self::best`].
+    pub fn resolve(self) -> PollerBackend {
+        let requested = match self {
+            PollerBackend::Auto => Self::from_env().unwrap_or_else(Self::best),
+            explicit => explicit,
+        };
+        let requested = match requested {
+            PollerBackend::Auto => Self::best(),
+            other => other,
+        };
+        if requested.is_available() {
+            requested
+        } else {
+            Self::best()
+        }
+    }
+
+    /// Stable label for metrics and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            PollerBackend::Auto => "auto",
+            PollerBackend::Poll => "poll",
+            PollerBackend::Epoll => "epoll",
+            PollerBackend::Kqueue => "kqueue",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared readiness type
+// ---------------------------------------------------------------------------
+
+/// One ready descriptor, translated out of the backend's event record.
+#[derive(Debug, Clone, Copy)]
+pub struct Readiness {
+    /// The caller-chosen token passed to [`Poller::register`].
+    pub token: usize,
+    /// Readable — includes hangup/error conditions, so the owner's next
+    /// `read` surfaces the EOF or error instead of the event being
+    /// silently dropped.
+    pub readable: bool,
+    /// Writable — includes error conditions for the same reason.
+    pub writable: bool,
+    /// The fd is invalid (`POLLNVAL`, or an `epoll_ctl` the kernel
+    /// refused): close the connection outright.
+    pub invalid: bool,
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) backend
+// ---------------------------------------------------------------------------
 
 /// `struct pollfd` — identical layout on every unix libc.
 #[repr(C)]
@@ -55,43 +188,20 @@ extern "C" {
     fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
 }
 
-/// One ready descriptor, translated out of `revents`.
-#[derive(Debug, Clone, Copy)]
-pub struct Readiness {
-    /// The caller-chosen token passed to [`Poller::register`].
-    pub token: usize,
-    /// Readable — includes `POLLHUP`/`POLLERR`, so the owner's next
-    /// `read` surfaces the EOF or error instead of the event being
-    /// silently dropped.
-    pub readable: bool,
-    /// Writable — includes `POLLERR` for the same reason.
-    pub writable: bool,
-    /// The fd is invalid (`POLLNVAL`): close the connection outright.
-    pub invalid: bool,
-}
-
 /// A rebuilt-per-tick `poll(2)` interest set.
 #[derive(Debug, Default)]
-pub struct Poller {
+struct PollSet {
     fds: Vec<PollFd>,
     tokens: Vec<usize>,
 }
 
-impl Poller {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Drop all registrations (start of a new tick).
-    pub fn clear(&mut self) {
+impl PollSet {
+    fn clear(&mut self) {
         self.fds.clear();
         self.tokens.clear();
     }
 
-    /// Add `fd` to this tick's interest set under `token`. Registering
-    /// with neither interest still reports errors/hangups (poll always
-    /// delivers those).
-    pub fn register(&mut self, fd: RawFd, token: usize, readable: bool, writable: bool) {
+    fn register(&mut self, fd: RawFd, token: usize, readable: bool, writable: bool) {
         let mut events = 0i16;
         if readable {
             events |= POLLIN;
@@ -103,40 +213,388 @@ impl Poller {
         self.tokens.push(token);
     }
 
-    /// Block until at least one registered fd is ready or `timeout`
-    /// elapses (`None` = wait forever). Returns the ready count (0 =
-    /// timeout). `EINTR` retries with the full timeout — callers poll
-    /// on short ticks, so the drift is bounded and harmless.
-    pub fn poll(&mut self, timeout: Option<Duration>) -> io::Result<usize> {
-        let timeout_ms: c_int = match timeout {
-            None => -1,
-            Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
-        };
+    fn poll(&mut self, timeout: Option<Duration>, out: &mut Vec<Readiness>) -> io::Result<usize> {
+        let timeout_ms = timeout_millis(timeout);
         loop {
             let rc = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, timeout_ms) };
             if rc >= 0 {
-                return Ok(rc as usize);
+                break;
             }
             let err = io::Error::last_os_error();
             if err.kind() != io::ErrorKind::Interrupted {
                 return Err(err);
             }
         }
-    }
-
-    /// Iterate this tick's ready descriptors (entries whose `revents`
-    /// came back nonzero).
-    pub fn ready(&self) -> impl Iterator<Item = Readiness> + '_ {
-        self.fds.iter().zip(&self.tokens).filter(|(fd, _)| fd.revents != 0).map(|(fd, &token)| {
-            Readiness {
+        for (fd, &token) in self.fds.iter().zip(&self.tokens) {
+            if fd.revents == 0 {
+                continue;
+            }
+            out.push(Readiness {
                 token,
                 readable: fd.revents & (POLLIN | POLLHUP | POLLERR) != 0,
                 writable: fd.revents & (POLLOUT | POLLERR) != 0,
                 invalid: fd.revents & POLLNVAL != 0,
-            }
-        })
+            });
+        }
+        Ok(out.len())
     }
 }
+
+/// Millisecond timeout in poll/epoll convention (`-1` = forever).
+fn timeout_millis(timeout: Option<Duration>) -> c_int {
+    match timeout {
+        None => -1,
+        Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// epoll(7) backend (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{timeout_millis, Readiness};
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    const ENOENT: i32 = 2;
+    const EEXIST: i32 = 17;
+
+    /// `struct epoll_event`. Packed on x86/x86_64 (the kernel ABI), the
+    /// natural C layout elsewhere — the same dance libc does.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        /// Carries the caller token. Never a pointer, so fd-reuse can't
+        /// dangle anything.
+        data: u64,
+    }
+
+    impl std::fmt::Debug for EpollEvent {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            // Copy out of the (possibly packed) struct before formatting.
+            let (events, data) = (self.events, self.data);
+            f.debug_struct("EpollEvent").field("events", &events).field("data", &data).finish()
+        }
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Per-fd interest record: what the caller wants this tick vs what
+    /// the kernel currently holds.
+    #[derive(Debug)]
+    struct Entry {
+        token: usize,
+        /// Desired event mask as of generation `gen`.
+        want: u32,
+        /// Generation of the last `register` for this fd; entries whose
+        /// generation lags the poller's were dropped by the caller and
+        /// get an `EPOLL_CTL_DEL`.
+        gen: u64,
+        /// `(token, mask)` the kernel currently has registered, if any.
+        kernel: Option<(usize, u32)>,
+    }
+
+    /// Persistent-interest epoll set. `clear`/`register` touch only the
+    /// userspace desired set; [`EpollSet::poll`] reconciles it against
+    /// the kernel mirror with the minimal `epoll_ctl` sequence, then
+    /// waits.
+    #[derive(Debug)]
+    pub(super) struct EpollSet {
+        epfd: RawFd,
+        entries: HashMap<RawFd, Entry>,
+        /// Current registration generation; bumped by `clear`.
+        gen: u64,
+        events: Vec<EpollEvent>,
+    }
+
+    fn ctl_op(epfd: RawFd, op: c_int, fd: RawFd, mask: u32, token: usize) -> io::Result<()> {
+        let mut ev = EpollEvent { events: mask, data: token as u64 };
+        let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(io::Error::last_os_error())
+        }
+    }
+
+    impl EpollSet {
+        pub(super) fn new() -> io::Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { epfd, entries: HashMap::new(), gen: 0, events: Vec::new() })
+        }
+
+        /// Start a new registration generation. Nothing is unregistered
+        /// yet — fds absent from the new generation are `DEL`ed during
+        /// the next [`Self::poll`], so a steady-state re-registration
+        /// with identical interest costs zero syscalls.
+        pub(super) fn clear(&mut self) {
+            self.gen = self.gen.wrapping_add(1);
+        }
+
+        /// Declare interest for `fd` this generation. Last write wins
+        /// if an fd is registered twice in one tick.
+        pub(super) fn register(&mut self, fd: RawFd, token: usize, readable: bool, writable: bool) {
+            let mut want = 0u32;
+            if readable {
+                want |= EPOLLIN;
+            }
+            if writable {
+                want |= EPOLLOUT;
+            }
+            let gen = self.gen;
+            self.entries
+                .entry(fd)
+                .and_modify(|e| {
+                    e.token = token;
+                    e.want = want;
+                    e.gen = gen;
+                })
+                .or_insert(Entry { token, want, gen, kernel: None });
+        }
+
+        /// Reconcile kernel interest with the desired set, then wait.
+        ///
+        /// Reconciliation issues `EPOLL_CTL_DEL` for fds dropped this
+        /// generation and `ADD`/`MOD` only where `(token, mask)`
+        /// changed. Races with fd close/reuse are absorbed by the
+        /// errno fallbacks (`MOD`→`ENOENT`→`ADD`, `ADD`→`EEXIST`→`MOD`);
+        /// an fd the kernel still refuses is surfaced as a synthetic
+        /// `invalid` readiness — the same contract `poll(2)` expresses
+        /// with `POLLNVAL` — and the wait degrades to a zero-timeout
+        /// sweep so the owner reaps it promptly.
+        pub(super) fn poll(
+            &mut self,
+            timeout: Option<Duration>,
+            out: &mut Vec<Readiness>,
+        ) -> io::Result<usize> {
+            let epfd = self.epfd;
+            let gen = self.gen;
+            let mut synthetic: Vec<Readiness> = Vec::new();
+            self.entries.retain(|&fd, e| {
+                if e.gen != gen {
+                    if e.kernel.is_some() {
+                        // Best effort: the fd may already be closed (the
+                        // kernel then dropped it from the set itself).
+                        let _ = ctl_op(epfd, EPOLL_CTL_DEL, fd, 0, 0);
+                    }
+                    return false;
+                }
+                if e.kernel == Some((e.token, e.want)) {
+                    return true;
+                }
+                let first_op = if e.kernel.is_some() { EPOLL_CTL_MOD } else { EPOLL_CTL_ADD };
+                let mut res = ctl_op(epfd, first_op, fd, e.want, e.token);
+                if let Err(err) = &res {
+                    match (first_op, err.raw_os_error()) {
+                        // Mirror drift: kernel lost the fd (close+reuse).
+                        (EPOLL_CTL_MOD, Some(ENOENT)) => {
+                            res = ctl_op(epfd, EPOLL_CTL_ADD, fd, e.want, e.token);
+                        }
+                        // Mirror drift the other way: already registered.
+                        (EPOLL_CTL_ADD, Some(EEXIST)) => {
+                            res = ctl_op(epfd, EPOLL_CTL_MOD, fd, e.want, e.token);
+                        }
+                        _ => {}
+                    }
+                }
+                match res {
+                    Ok(()) => {
+                        e.kernel = Some((e.token, e.want));
+                        true
+                    }
+                    Err(_) => {
+                        synthetic.push(Readiness {
+                            token: e.token,
+                            readable: false,
+                            writable: false,
+                            invalid: true,
+                        });
+                        false
+                    }
+                }
+            });
+
+            let timeout_ms =
+                if synthetic.is_empty() { timeout_millis(timeout) } else { 0 };
+            let want_events = self.entries.len().max(64);
+            self.events.resize(want_events, EpollEvent { events: 0, data: 0 });
+            let rc = loop {
+                let rc = unsafe {
+                    epoll_wait(
+                        self.epfd,
+                        self.events.as_mut_ptr(),
+                        self.events.len() as c_int,
+                        timeout_ms,
+                    )
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            for ev in &self.events[..rc] {
+                let (events, data) = (ev.events, ev.data);
+                out.push(Readiness {
+                    token: data as usize,
+                    readable: events & (EPOLLIN | EPOLLHUP | EPOLLERR) != 0,
+                    writable: events & (EPOLLOUT | EPOLLERR) != 0,
+                    invalid: false,
+                });
+            }
+            out.extend_from_slice(&synthetic);
+            Ok(out.len())
+        }
+    }
+
+    impl Drop for EpollSet {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poller: backend dispatch behind the three-method surface
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Imp {
+    Poll(PollSet),
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::EpollSet),
+}
+
+/// The reactor's interest set + wait primitive. Same three-method
+/// surface regardless of backend: `clear` (new tick), `register`
+/// (declare interest), `poll` (wait), then iterate [`Poller::ready`].
+#[derive(Debug)]
+pub struct Poller {
+    imp: Imp,
+    backend: PollerBackend,
+    results: Vec<Readiness>,
+}
+
+impl Default for Poller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Poller {
+    /// Poller on the resolved best backend (honoring `HLL_POLLER`).
+    /// Infallible: if the preferred backend fails to initialize (e.g.
+    /// `epoll_create1` hits the fd limit), falls back to `poll(2)`.
+    pub fn new() -> Self {
+        Self::with_backend(PollerBackend::Auto)
+            .unwrap_or_else(|_| Self::poll_backed())
+    }
+
+    fn poll_backed() -> Self {
+        Self {
+            imp: Imp::Poll(PollSet::default()),
+            backend: PollerBackend::Poll,
+            results: Vec::new(),
+        }
+    }
+
+    /// Poller on a specific backend (`Auto` resolves as documented on
+    /// [`PollerBackend::resolve`]). Errors only if the resolved
+    /// backend's kernel object cannot be created.
+    pub fn with_backend(backend: PollerBackend) -> io::Result<Self> {
+        match backend.resolve() {
+            PollerBackend::Poll => Ok(Self::poll_backed()),
+            #[cfg(target_os = "linux")]
+            PollerBackend::Epoll => Ok(Self {
+                imp: Imp::Epoll(epoll::EpollSet::new()?),
+                backend: PollerBackend::Epoll,
+                results: Vec::new(),
+            }),
+            // resolve() never returns Auto/Kqueue, nor Epoll off-Linux;
+            // keep the fallback total anyway.
+            _ => Ok(Self::poll_backed()),
+        }
+    }
+
+    /// The concrete backend in use.
+    pub fn backend(&self) -> PollerBackend {
+        self.backend
+    }
+
+    /// Drop all registrations (start of a new tick). Under epoll this
+    /// only opens a new generation — kernel interest is reconciled
+    /// lazily at [`Self::poll`], so unchanged registrations cost no
+    /// syscalls.
+    pub fn clear(&mut self) {
+        match &mut self.imp {
+            Imp::Poll(p) => p.clear(),
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(e) => e.clear(),
+        }
+    }
+
+    /// Add `fd` to this tick's interest set under `token`. Registering
+    /// with neither interest still reports errors/hangups (both
+    /// backends always deliver those).
+    pub fn register(&mut self, fd: RawFd, token: usize, readable: bool, writable: bool) {
+        match &mut self.imp {
+            Imp::Poll(p) => p.register(fd, token, readable, writable),
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(e) => e.register(fd, token, readable, writable),
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// elapses (`None` = wait forever). Returns the ready count (0 =
+    /// timeout). `EINTR` retries with the full timeout — callers poll
+    /// on short ticks, so the drift is bounded and harmless.
+    pub fn poll(&mut self, timeout: Option<Duration>) -> io::Result<usize> {
+        self.results.clear();
+        match &mut self.imp {
+            Imp::Poll(p) => p.poll(timeout, &mut self.results),
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(e) => e.poll(timeout, &mut self.results),
+        }
+    }
+
+    /// Iterate the descriptors the last [`Self::poll`] reported ready.
+    pub fn ready(&self) -> impl Iterator<Item = Readiness> + '_ {
+        self.results.iter().copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Waker
+// ---------------------------------------------------------------------------
 
 /// The write end of a loop's self-pipe: wake the loop out of `poll`
 /// from any thread. Wakes coalesce — if the pipe already holds an
@@ -165,7 +623,7 @@ impl WakeRx {
         self.rx.as_raw_fd()
     }
 
-    /// Swallow all pending wake bytes (level-triggered poll would
+    /// Swallow all pending wake bytes (level-triggered polling would
     /// otherwise re-report forever).
     pub fn drain(&self) {
         let mut buf = [0u8; 64];
@@ -181,22 +639,35 @@ pub fn waker_pair() -> io::Result<(Waker, WakeRx)> {
     Ok((Waker { tx }, WakeRx { rx }))
 }
 
+// ---------------------------------------------------------------------------
+// Tick profile
+// ---------------------------------------------------------------------------
+
 /// Per-event-loop tick profiler: where does a loop's wall time go?
 ///
-/// Each tick splits into *wait* (blocked in `poll(2)`) and *work*
-/// (dispatching ready connections, pumping subscribers, reaping). Both
-/// land in lock-free [`LatencyHistogram`]s, ready-event counts per tick
-/// land in a third, and a saturation gauge reports
+/// Each tick splits into *wait* (blocked in the readiness syscall) and
+/// *work* (dispatching ready connections, pumping subscribers,
+/// reaping). Both land in lock-free [`LatencyHistogram`]s — once under
+/// a per-loop `loop="N"` label, and again under a per-backend
+/// `backend="epoll|poll"` label shared by every loop on that backend,
+/// so poll-vs-epoll comparisons read one series per side instead of
+/// joining per-loop series. Ready-event counts per tick land in a
+/// third histogram pair, and a saturation gauge reports
 /// `work / (work + wait)` in permille over an exponentially decayed
 /// window — the "is this loop the bottleneck?" number the C100K roadmap
 /// item gates on. Recording is a handful of relaxed atomics per tick;
 /// only the loop thread calls [`TickProfile::tick`], scrapers read the
 /// shared histograms.
+///
+/// [`LatencyHistogram`]: crate::obs::LatencyHistogram
 #[derive(Debug)]
 pub struct TickProfile {
     poll_wait_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
     work_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
     ready_events: std::sync::Arc<crate::obs::LatencyHistogram>,
+    backend_poll_wait_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
+    backend_work_ns: std::sync::Arc<crate::obs::LatencyHistogram>,
+    backend_ready_events: std::sync::Arc<crate::obs::LatencyHistogram>,
     saturation_permille: crate::obs::Gauge,
     /// Decayed accumulators (loop-thread-local; plain fields would do,
     /// but keeping the struct `Sync` costs nothing).
@@ -211,14 +682,24 @@ const SATURATION_WINDOW_NS: u64 = 5_000_000_000;
 
 impl TickProfile {
     /// Register this loop's tick series into `metrics` under a
-    /// `loop="N"` label.
-    pub fn register(metrics: &crate::obs::MetricsRegistry, loop_idx: usize) -> Self {
+    /// `loop="N"` label, plus the per-backend aggregate series under
+    /// `backend="…"` (shared across loops on the same backend — the
+    /// histograms are lock-free, concurrent recording is fine).
+    pub fn register(
+        metrics: &crate::obs::MetricsRegistry,
+        loop_idx: usize,
+        backend: PollerBackend,
+    ) -> Self {
         let label = loop_label(loop_idx);
         let l = || Some(("loop", label.to_string()));
+        let b = || Some(("backend", backend.label().to_string()));
         Self {
             poll_wait_ns: metrics.histogram("loop_poll_wait_ns", l()),
             work_ns: metrics.histogram("loop_work_ns", l()),
             ready_events: metrics.histogram("loop_ready_events", l()),
+            backend_poll_wait_ns: metrics.histogram("loop_poll_wait_ns", b()),
+            backend_work_ns: metrics.histogram("loop_work_ns", b()),
+            backend_ready_events: metrics.histogram("loop_ready_events", b()),
             saturation_permille: metrics.gauge("loop_saturation_permille", l()),
             busy_ns_acc: std::sync::atomic::AtomicU64::new(0),
             wait_ns_acc: std::sync::atomic::AtomicU64::new(0),
@@ -234,6 +715,9 @@ impl TickProfile {
         self.work_ns.record(work_ns);
         self.poll_wait_ns.record(wait_ns);
         self.ready_events.record(ready as u64);
+        self.backend_work_ns.record(work_ns);
+        self.backend_poll_wait_ns.record(wait_ns);
+        self.backend_ready_events.record(ready as u64);
         // Exponentially decayed busy fraction: halve both accumulators
         // whenever the window fills, then publish permille.
         let mut busy = self.busy_ns_acc.load(Ordering::Relaxed) + work_ns;
@@ -268,67 +752,189 @@ mod tests {
     use std::net::{TcpListener, TcpStream};
     use std::time::Duration;
 
+    /// Every backend that actually works here, as live pollers.
+    fn pollers() -> Vec<Poller> {
+        PollerBackend::available()
+            .iter()
+            .map(|&b| {
+                let p = Poller::with_backend(b).unwrap();
+                assert_eq!(p.backend(), b);
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn backend_resolution_and_parsing() {
+        assert_eq!(PollerBackend::parse("poll"), Some(PollerBackend::Poll));
+        assert_eq!(PollerBackend::parse(" EPOLL "), Some(PollerBackend::Epoll));
+        assert_eq!(PollerBackend::parse("kqueue"), Some(PollerBackend::Kqueue));
+        assert_eq!(PollerBackend::parse("auto"), Some(PollerBackend::Auto));
+        assert_eq!(PollerBackend::parse("io_uring"), None);
+        // The kqueue stub always resolves to something available.
+        assert!(PollerBackend::Kqueue.resolve().is_available());
+        assert!(PollerBackend::best().is_available());
+        // Poll is available everywhere and resolves to itself.
+        assert_eq!(PollerBackend::Poll.resolve(), PollerBackend::Poll);
+        #[cfg(target_os = "linux")]
+        {
+            assert_eq!(PollerBackend::best(), PollerBackend::Epoll);
+            assert_eq!(PollerBackend::Epoll.resolve(), PollerBackend::Epoll);
+        }
+    }
+
     #[test]
     fn waker_crosses_poll_and_coalesces() {
-        let (waker, rx) = waker_pair().unwrap();
-        let mut poller = Poller::new();
-        // No wake pending: poll times out.
-        poller.clear();
-        poller.register(rx.as_raw_fd(), 1, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0);
-        // Wakes (from another thread) make the pipe readable; repeated
-        // wakes coalesce and drain clears them.
-        let t = std::thread::spawn(move || {
-            for _ in 0..100 {
-                waker.wake();
-            }
-            waker
-        });
-        let _waker = t.join().unwrap();
-        poller.clear();
-        poller.register(rx.as_raw_fd(), 1, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
-        let ready: Vec<Readiness> = poller.ready().collect();
-        assert_eq!(ready.len(), 1);
-        assert_eq!(ready[0].token, 1);
-        assert!(ready[0].readable);
-        rx.drain();
-        poller.clear();
-        poller.register(rx.as_raw_fd(), 1, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0, "drained");
+        for mut poller in pollers() {
+            let (waker, rx) = waker_pair().unwrap();
+            // No wake pending: poll times out.
+            poller.clear();
+            poller.register(rx.as_raw_fd(), 1, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0);
+            // Wakes (from another thread) make the pipe readable; repeated
+            // wakes coalesce and drain clears them.
+            let t = std::thread::spawn(move || {
+                for _ in 0..100 {
+                    waker.wake();
+                }
+                waker
+            });
+            let _waker = t.join().unwrap();
+            poller.clear();
+            poller.register(rx.as_raw_fd(), 1, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            let ready: Vec<Readiness> = poller.ready().collect();
+            assert_eq!(ready.len(), 1);
+            assert_eq!(ready[0].token, 1);
+            assert!(ready[0].readable);
+            rx.drain();
+            poller.clear();
+            poller.register(rx.as_raw_fd(), 1, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0, "drained");
+        }
     }
 
     #[test]
     fn poller_reports_tcp_readability_and_writability() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let mut poller = Poller::new();
+        for mut poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
 
-        // Nothing pending: the listener is not readable.
-        poller.clear();
-        poller.register(listener.as_raw_fd(), 7, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0);
+            // Nothing pending: the listener is not readable.
+            poller.clear();
+            poller.register(listener.as_raw_fd(), 7, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_millis(10))).unwrap(), 0);
 
-        // A pending connection makes it readable.
-        let client = TcpStream::connect(addr).unwrap();
-        poller.clear();
-        poller.register(listener.as_raw_fd(), 7, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
-        assert!(poller.ready().any(|r| r.token == 7 && r.readable));
-        let (server_side, _) = listener.accept().unwrap();
+            // A pending connection makes it readable.
+            let client = TcpStream::connect(addr).unwrap();
+            poller.clear();
+            poller.register(listener.as_raw_fd(), 7, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            assert!(poller.ready().any(|r| r.token == 7 && r.readable));
+            let (server_side, _) = listener.accept().unwrap();
 
-        // A fresh connected socket: writable, not readable.
-        poller.clear();
-        poller.register(client.as_raw_fd(), 8, true, true);
-        assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
-        let r: Vec<Readiness> = poller.ready().collect();
-        assert!(r[0].writable && !r[0].readable);
+            // A fresh connected socket: writable, not readable.
+            poller.clear();
+            poller.register(client.as_raw_fd(), 8, true, true);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            let r: Vec<Readiness> = poller.ready().collect();
+            assert!(r[0].writable && !r[0].readable);
 
-        // Peer data arrives: readable too.
-        (&server_side).write_all(&[9u8; 4]).unwrap();
-        poller.clear();
-        poller.register(client.as_raw_fd(), 8, true, false);
-        assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
-        assert!(poller.ready().any(|r| r.token == 8 && r.readable));
+            // Peer data arrives: readable too.
+            (&server_side).write_all(&[9u8; 4]).unwrap();
+            poller.clear();
+            poller.register(client.as_raw_fd(), 8, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            assert!(poller.ready().any(|r| r.token == 8 && r.readable));
+        }
+    }
+
+    /// Interest dropped for one tick must actually stop event delivery
+    /// (the epoll backend has to issue `EPOLL_CTL_DEL`, not just skip
+    /// the fd in userspace), and re-registering must resume it.
+    #[test]
+    fn dropped_registration_stops_delivery() {
+        for mut poller in pollers() {
+            let (a_far, a) = UnixStream::pair().unwrap();
+            let (_b_far, b) = UnixStream::pair().unwrap();
+            a.set_nonblocking(true).unwrap();
+            b.set_nonblocking(true).unwrap();
+            (&a_far).write_all(&[1u8; 8]).unwrap();
+
+            // Both registered: only `a` (with pending data) is ready.
+            poller.clear();
+            poller.register(a.as_raw_fd(), 1, true, false);
+            poller.register(b.as_raw_fd(), 2, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            assert!(poller.ready().any(|r| r.token == 1 && r.readable));
+
+            // `a` dropped from the set: its still-pending data must not
+            // surface.
+            poller.clear();
+            poller.register(b.as_raw_fd(), 2, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_millis(20))).unwrap(), 0);
+
+            // Re-registered (fresh token): delivery resumes.
+            poller.clear();
+            poller.register(a.as_raw_fd(), 9, true, false);
+            poller.register(b.as_raw_fd(), 2, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            assert!(poller.ready().any(|r| r.token == 9 && r.readable));
+        }
+    }
+
+    /// Interest flips (the server's backpressure mechanism) must
+    /// translate to updated kernel state under every backend.
+    #[test]
+    fn interest_flip_changes_reported_events() {
+        for mut poller in pollers() {
+            let (far, near) = UnixStream::pair().unwrap();
+            near.set_nonblocking(true).unwrap();
+            (&far).write_all(&[7u8; 4]).unwrap();
+
+            // Readable+writable: both reported.
+            poller.clear();
+            poller.register(near.as_raw_fd(), 3, true, true);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            let r: Vec<Readiness> = poller.ready().collect();
+            assert!(r[0].readable && r[0].writable);
+
+            // Flip to write-only: pending read data must not surface.
+            poller.clear();
+            poller.register(near.as_raw_fd(), 3, false, true);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            let r: Vec<Readiness> = poller.ready().collect();
+            assert!(r[0].writable && !r[0].readable);
+
+            // Flip back to read-only.
+            poller.clear();
+            poller.register(near.as_raw_fd(), 3, true, false);
+            assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+            let r: Vec<Readiness> = poller.ready().collect();
+            assert!(r[0].readable && !r[0].writable);
+        }
+    }
+
+    /// A closed-then-reused registration slot must not leak stale
+    /// kernel state: dropping the fd's registration after close and
+    /// registering a fresh fd (possibly with the same number) works.
+    #[test]
+    fn close_and_reuse_cycle_is_absorbed() {
+        for mut poller in pollers() {
+            for round in 0..4 {
+                let (far, near) = UnixStream::pair().unwrap();
+                near.set_nonblocking(true).unwrap();
+                (&far).write_all(&[round as u8 + 1; 2]).unwrap();
+                poller.clear();
+                poller.register(near.as_raw_fd(), 100 + round, true, false);
+                assert_eq!(poller.poll(Some(Duration::from_secs(5))).unwrap(), 1);
+                assert!(poller.ready().any(|r| r.token == 100 + round && r.readable));
+                // `near`/`far` drop here: the fd closes while still in
+                // the kernel set; next round likely reuses the number.
+            }
+            // After the churn an empty set still polls cleanly.
+            poller.clear();
+            assert_eq!(poller.poll(Some(Duration::from_millis(5))).unwrap(), 0);
+        }
     }
 }

@@ -1,0 +1,252 @@
+//! `SO_REUSEPORT` listener groups: one listening socket per event loop
+//! sharing a single port, so the kernel shards incoming connections
+//! across loops by 4-tuple hash and accepts stop funneling through
+//! loop 0's listener + cross-thread routing channel.
+//!
+//! `std::net::TcpListener` cannot express this — `SO_REUSEPORT` must be
+//! set between `socket(2)` and `bind(2)`, and std exposes no hook there
+//! (and the offline crate set has no `socket2`/`libc`). So this module
+//! performs the socket/setsockopt/bind/listen sequence through raw
+//! `extern "C"` declarations, then hands the fd to
+//! [`TcpListener::from_raw_fd`] so everything downstream (accept,
+//! readiness registration, drop-closes) is plain std.
+//!
+//! Linux-only: `SO_REUSEPORT`'s per-socket-queue semantics are what the
+//! accept-sharding design relies on, and the serving stack targets the
+//! Linux containers CI and production run on. On other platforms
+//! [`bind_group`] reports `Unsupported` and the server falls back to
+//! the single-listener + round-robin-routing model, which remains fully
+//! correct (just accept-funneled).
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, ToSocketAddrs};
+
+/// Bind `count` listeners on `addr`, all sharing the port via
+/// `SO_REUSEPORT`. With `addr` on port 0 the first bind picks the
+/// concrete port and the rest join it. All-or-nothing: any failure
+/// closes the partial group and returns the error, so the caller can
+/// fall back to a single listener.
+pub fn bind_group(addr: impl ToSocketAddrs, count: usize) -> io::Result<Vec<TcpListener>> {
+    let requested = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "no address to bind"))?;
+    if count == 0 {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "empty listener group"));
+    }
+    imp::bind_group(requested, count)
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::*;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: c_int = 2;
+    const AF_INET6: c_int = 10;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_NONBLOCK: c_int = 0o4000;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    const SO_REUSEPORT: c_int = 15;
+    /// Matches the default net.core.somaxconn ceiling; the kernel clamps.
+    const BACKLOG: c_int = 1024;
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: u32,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// `struct sockaddr_in`. Port and address are stored as byte arrays
+    /// already in network order, sidestepping endianness bookkeeping.
+    #[repr(C)]
+    struct SockAddrIn {
+        family: u16,
+        port: [u8; 2],
+        addr: [u8; 4],
+        zero: [u8; 8],
+    }
+
+    /// `struct sockaddr_in6`.
+    #[repr(C)]
+    struct SockAddrIn6 {
+        family: u16,
+        port: [u8; 2],
+        flowinfo: u32,
+        addr: [u8; 16],
+        scope_id: u32,
+    }
+
+    fn bind_one(addr: SocketAddr) -> io::Result<TcpListener> {
+        let domain = match addr {
+            SocketAddr::V4(_) => AF_INET,
+            SocketAddr::V6(_) => AF_INET6,
+        };
+        let fd = unsafe { socket(domain, SOCK_STREAM | SOCK_NONBLOCK | SOCK_CLOEXEC, 0) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // From here on, any failure must close `fd` before returning.
+        let result = (|| {
+            let one: c_int = 1;
+            for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+                let rc = unsafe {
+                    setsockopt(
+                        fd,
+                        SOL_SOCKET,
+                        opt,
+                        &one as *const c_int as *const c_void,
+                        std::mem::size_of::<c_int>() as u32,
+                    )
+                };
+                if rc != 0 {
+                    return Err(io::Error::last_os_error());
+                }
+            }
+            let rc = match addr {
+                SocketAddr::V4(v4) => {
+                    let sa = SockAddrIn {
+                        family: AF_INET as u16,
+                        port: v4.port().to_be_bytes(),
+                        addr: v4.ip().octets(),
+                        zero: [0; 8],
+                    };
+                    unsafe {
+                        bind(
+                            fd,
+                            &sa as *const SockAddrIn as *const c_void,
+                            std::mem::size_of::<SockAddrIn>() as u32,
+                        )
+                    }
+                }
+                SocketAddr::V6(v6) => {
+                    let sa = SockAddrIn6 {
+                        family: AF_INET6 as u16,
+                        port: v6.port().to_be_bytes(),
+                        flowinfo: v6.flowinfo(),
+                        addr: v6.ip().octets(),
+                        scope_id: v6.scope_id(),
+                    };
+                    unsafe {
+                        bind(
+                            fd,
+                            &sa as *const SockAddrIn6 as *const c_void,
+                            std::mem::size_of::<SockAddrIn6>() as u32,
+                        )
+                    }
+                }
+            };
+            if rc != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            if unsafe { listen(fd, BACKLOG) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        })();
+        match result {
+            Ok(()) => Ok(unsafe { TcpListener::from_raw_fd(fd) }),
+            Err(e) => {
+                unsafe {
+                    close(fd);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    pub(super) fn bind_group(requested: SocketAddr, count: usize) -> io::Result<Vec<TcpListener>> {
+        let mut group = Vec::with_capacity(count);
+        // The first bind resolves port 0 to a concrete port; siblings
+        // must join that exact port or they'd each get their own.
+        let first = bind_one(requested)?;
+        let concrete = first.local_addr()?;
+        group.push(first);
+        for _ in 1..count {
+            group.push(bind_one(concrete)?);
+        }
+        Ok(group)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    use super::*;
+
+    pub(super) fn bind_group(_requested: SocketAddr, _count: usize) -> io::Result<Vec<TcpListener>> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "SO_REUSEPORT listener groups are Linux-only here",
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn group_shares_one_port_and_serves_connects() {
+        let group = bind_group("127.0.0.1:0", 3).unwrap();
+        let addr = group[0].local_addr().unwrap();
+        for l in &group {
+            assert_eq!(l.local_addr().unwrap().port(), addr.port(), "one shared port");
+            l.set_nonblocking(true).unwrap();
+        }
+        // Every connect lands in exactly one member's accept queue.
+        let n_clients = 24;
+        let clients: Vec<TcpStream> =
+            (0..n_clients).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut accepted = Vec::new();
+        while accepted.len() < n_clients && std::time::Instant::now() < deadline {
+            let mut progressed = false;
+            for l in &group {
+                match l.accept() {
+                    Ok((s, _)) => {
+                        accepted.push(s);
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) => panic!("accept: {e}"),
+                }
+            }
+            if !progressed {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        assert_eq!(accepted.len(), n_clients, "every connect accepted somewhere");
+        // The sockets are real: bytes flow end to end.
+        (&clients[0]).write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        let mut found = false;
+        for s in &accepted {
+            s.set_nonblocking(true).unwrap();
+            let mut r = s;
+            if let Ok(4) = r.read(&mut buf) {
+                assert_eq!(&buf, b"ping");
+                found = true;
+            }
+        }
+        assert!(found, "payload surfaced on an accepted socket");
+    }
+
+    #[test]
+    fn empty_group_is_rejected() {
+        assert!(bind_group("127.0.0.1:0", 0).is_err());
+    }
+}

@@ -49,6 +49,31 @@
 //! pollers, best-effort-flushes queued replies and joins the loop
 //! threads — no per-connection threads exist to join.
 //!
+//! # Syscall-lean serving (the C100K path)
+//!
+//! * The readiness substrate is backend-selectable
+//!   ([`ServerConfig::poller_backend`], default best available, env
+//!   override `HLL_POLLER`): `epoll` on Linux keeps persistent kernel
+//!   interest and mutates it only on state change, so a steady tick is
+//!   one syscall regardless of resident connections; `poll(2)` remains
+//!   the portable fallback.
+//! * With several loops on Linux, each loop gets its *own* listener on
+//!   the shared port via `SO_REUSEPORT` ([`super::reuseport`]): the
+//!   kernel shards accepts across loops and each loop admits locally —
+//!   no cross-thread routing channel on the accept path. Where
+//!   unavailable, loop 0 owns the single listener and routes accepted
+//!   sockets round-robin as before.
+//! * Reply draining is vectored: queued frames are gathered into one
+//!   `writev(2)` per flush, so a pipelined burst of small replies
+//!   costs one syscall instead of one per frame.
+//! * Blocking work leaves the loop: with
+//!   [`ServerConfig::worker_threads`] > 0, the `Snapshot` RPC's file
+//!   write and a subscriber full-sync's registry-image serialization
+//!   run on a small worker pool; the owning loop halts just that
+//!   connection (preserving pipelined reply order), is woken through
+//!   its [`Waker`] on completion, and delivers the result from its
+//!   per-loop completion queue.
+//!
 //! Two optional maintenance threads ride the same stop flag:
 //!
 //! * the **sweeper** ([`SweeperConfig`]) runs TTL / wall-clock-TTL /
@@ -71,7 +96,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::os::unix::io::AsRawFd;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -81,7 +106,8 @@ use super::protocol::{
     Request, Response, StatsSummary, DELTA_WIRE_V3, DELTA_WIRE_V4, MAX_PAYLOAD,
     REQUEST_OPCODE_MAX,
 };
-use super::reactor::{self, Poller, TickProfile, WakeRx, Waker};
+use super::reactor::{self, Poller, PollerBackend, TickProfile, WakeRx, Waker};
+use super::reuseport;
 use super::snapshot;
 use crate::hll::{decode_register_diff, HllSketch, SketchError};
 use crate::obs::recorder;
@@ -198,6 +224,24 @@ pub struct ServerConfig {
     /// reads the `HLL_SLOW_REQ_MS` env var (milliseconds); unset means
     /// no threshold and no tracing.
     pub slow_request_threshold: Option<Duration>,
+    /// Kernel readiness backend for the event loops. The default
+    /// (`Auto`) resolves to the best available for the platform (epoll
+    /// on Linux, poll elsewhere), overridable at runtime with
+    /// `HLL_POLLER=poll|epoll|kqueue`; an unavailable explicit choice
+    /// falls back to the best available.
+    pub poller_backend: PollerBackend,
+    /// With more than one event loop, give every loop its own listener
+    /// on the shared port via `SO_REUSEPORT` so the kernel shards
+    /// accepts across loops (no cross-thread accept routing). Falls
+    /// back to the single-listener + routing model where the raw bind
+    /// fails or the platform lacks support. Default: on for Linux.
+    pub reuseport: bool,
+    /// Worker threads taking blocking work (`Snapshot` RPC file writes,
+    /// subscriber full-sync image serialization) off the event loops;
+    /// the loop halts only the requesting connection and answers on
+    /// completion via its waker. 0 = serve those inline on the loop
+    /// (the pre-pool behavior).
+    pub worker_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -214,6 +258,9 @@ impl Default for ServerConfig {
                 .ok()
                 .and_then(|v| v.trim().parse::<u64>().ok())
                 .map(Duration::from_millis),
+            poller_backend: PollerBackend::Auto,
+            reuseport: cfg!(target_os = "linux"),
+            worker_threads: 1,
         }
     }
 }
@@ -400,6 +447,47 @@ impl RpcMetrics {
     }
 }
 
+/// A blocking unit of work shipped to the worker pool.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Submission side of the worker pool. The `Mutex` serializes the
+/// (rare) submits across loop threads; workers share the receiving end
+/// behind their own lock.
+#[derive(Debug)]
+struct WorkerPool {
+    tx: Mutex<mpsc::Sender<Job>>,
+}
+
+impl WorkerPool {
+    /// `false` = the pool is gone (shutdown race); run the work inline.
+    fn submit(&self, job: Job) -> bool {
+        self.tx.lock().map(|tx| tx.send(job).is_ok()).unwrap_or(false)
+    }
+}
+
+/// Result of an off-loop job, parked in the owning loop's completion
+/// queue until its waker-roused tick applies it.
+#[derive(Debug)]
+struct Completion {
+    /// Slot index of the requesting connection on its loop.
+    conn_idx: usize,
+    /// Admission generation of that connection when the job was
+    /// submitted: a slot reused by a newer connection has a different
+    /// generation, so a stale result is dropped instead of answering
+    /// the wrong peer.
+    gen: u64,
+    kind: CompletionKind,
+}
+
+#[derive(Debug)]
+enum CompletionKind {
+    /// Queue this reply frame (the `Snapshot` RPC path).
+    Reply(Response),
+    /// A serialized registry image for a subscriber full sync; the loop
+    /// thread applies the frame-cap check and cursor bookkeeping.
+    FullSync { epoch: u64, cursor: u64, body: Vec<u8> },
+}
+
 #[derive(Debug)]
 struct Shared {
     registry: Arc<SketchRegistry<u64>>,
@@ -427,11 +515,33 @@ struct Shared {
     /// One waker per event loop: the capture thread and shutdown kick
     /// every loop out of `poll` the moment there is work.
     wakers: Vec<Waker>,
+    /// Present iff [`ServerConfig::worker_threads`] > 0: blocking work
+    /// (snapshot writes, full-sync serialization) leaves the loops
+    /// through here.
+    workers: Option<WorkerPool>,
+    /// One completion queue per event loop: worker threads park results
+    /// here via [`Shared::deliver`], the owning loop drains its queue at
+    /// the top of each tick.
+    completions: Vec<Mutex<Vec<Completion>>>,
 }
 
 impl Shared {
     fn wake_all(&self) {
         for w in &self.wakers {
+            w.wake();
+        }
+    }
+
+    /// Park a finished off-loop job on its owning loop's completion
+    /// queue, then kick that loop's waker so it applies the result
+    /// within one syscall instead of one poll tick.
+    fn deliver(&self, loop_idx: usize, done: Completion) {
+        if let Some(q) = self.completions.get(loop_idx) {
+            if let Ok(mut q) = q.lock() {
+                q.push(done);
+            }
+        }
+        if let Some(w) = self.wakers.get(loop_idx) {
             w.wake();
         }
     }
@@ -456,10 +566,9 @@ impl SketchServer {
         registry: Arc<SketchRegistry<u64>>,
         cfg: ServerConfig,
     ) -> io::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let threads = cfg.event_loop_threads.max(1);
+        let (listeners, addr, sharded) = bind_listeners(addr, threads, cfg.reuseport)?;
+        let worker_threads = cfg.worker_threads;
         // A replication primary needs dirty tracking on before any
         // subscriber can connect: every mutation then either lands in a
         // subscriber's bootstrap full sync (it ran before the loops
@@ -486,6 +595,12 @@ impl SketchServer {
         // on. Never disabled on shutdown — another server in the same
         // process (tests, embedded replicas) may still be recording.
         recorder::set_enabled(true);
+        let mut worker_rx = None;
+        let workers = (worker_threads > 0).then(|| {
+            let (tx, rx) = mpsc::channel::<Job>();
+            worker_rx = Some(Arc::new(Mutex::new(rx)));
+            WorkerPool { tx: Mutex::new(tx) }
+        });
         let shared = Arc::new(Shared {
             registry,
             cfg,
@@ -497,6 +612,8 @@ impl SketchServer {
             acked_seq,
             log,
             wakers,
+            workers,
+            completions: (0..threads).map(|_| Mutex::new(Vec::new())).collect(),
         });
         let mut routes = Vec::with_capacity(threads);
         let mut intakes = Vec::with_capacity(threads);
@@ -525,17 +642,49 @@ impl SketchServer {
                     .spawn(move || sweeper_loop(sweep_shared, sweep_cfg))?,
             );
         }
+        if let Some(rx) = worker_rx {
+            for w in 0..worker_threads {
+                let worker_shared = shared.clone();
+                let worker_rx = rx.clone();
+                maint_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("sketch-server-worker-{w}"))
+                        .spawn(move || worker_loop(worker_shared, worker_rx))?,
+                );
+            }
+        }
+        shared
+            .metrics
+            .gauge("server_accept_sharded", None)
+            .store(sharded as u64, Ordering::Relaxed);
         let mut loop_joins = Vec::with_capacity(threads);
-        let mut listener = Some(listener);
-        for (i, (wake_rx, intake)) in wake_rxs.into_iter().zip(intakes).enumerate() {
+        for (i, ((wake_rx, intake), listener)) in
+            wake_rxs.into_iter().zip(intakes).zip(listeners).enumerate()
+        {
+            // Create the poller here (not in the loop thread) so the
+            // tick profile registers under the backend actually in use,
+            // including any init-failure fallback.
+            let poller = Poller::with_backend(shared.cfg.poller_backend)
+                .unwrap_or_else(|_| Poller::new());
+            shared
+                .metrics
+                .gauge(
+                    "server_poller_loops",
+                    Some(("backend", poller.backend().label().to_string())),
+                )
+                .fetch_add(1, Ordering::Relaxed);
             let parts = LoopParts {
-                // Loop 0 owns the listener and routes accepted sockets
-                // round-robin across every loop (itself included).
-                listener: if i == 0 { listener.take() } else { None },
+                loop_idx: i,
+                // Sharded: every loop owns a REUSEPORT listener and
+                // admits locally. Fallback: loop 0 owns the single
+                // listener and routes accepted sockets round-robin
+                // across every loop (itself included).
+                listener,
                 wake_rx,
                 intake,
-                routes: if i == 0 { routes.clone() } else { Vec::new() },
-                profile: TickProfile::register(&shared.metrics, i),
+                routes: if sharded || i != 0 { Vec::new() } else { routes.clone() },
+                profile: TickProfile::register(&shared.metrics, i, poller.backend()),
+                poller,
             };
             let loop_shared = shared.clone();
             loop_joins.push(
@@ -544,7 +693,11 @@ impl SketchServer {
                     .spawn(move || event_loop(loop_shared, parts))?,
             );
         }
-        crate::log_debug!("server", "listening on {addr} ({threads} event loop thread(s))");
+        crate::log_debug!(
+            "server",
+            "listening on {addr} ({threads} event loop thread(s), accepts {})",
+            if sharded { "sharded via SO_REUSEPORT" } else { "routed from loop 0" }
+        );
         Ok(Self { addr, shared, loop_joins, maint_joins })
     }
 
@@ -625,6 +778,34 @@ impl Drop for SketchServer {
     fn drop(&mut self) {
         self.stop_and_join();
     }
+}
+
+/// Bind the per-loop listener set. With several loops and `reuseport`
+/// requested, every loop gets its own `SO_REUSEPORT` listener on the
+/// shared port (`sharded = true`: the kernel spreads accepts, no
+/// cross-thread routing). Anywhere that can't work — one loop, the
+/// option off, a non-Linux platform, or the raw bind failing — loop 0
+/// gets the one `std` listener and the caller keeps the routing model.
+fn bind_listeners(
+    addr: impl ToSocketAddrs,
+    threads: usize,
+    want_reuseport: bool,
+) -> io::Result<(Vec<Option<TcpListener>>, SocketAddr, bool)> {
+    if threads > 1 && want_reuseport {
+        // `&addr`: keep the original for the fallback bind below.
+        if let Ok(group) = reuseport::bind_group(&addr, threads) {
+            let bound = group[0].local_addr()?;
+            // Group sockets are born nonblocking (SOCK_NONBLOCK).
+            return Ok((group.into_iter().map(Some).collect(), bound, true));
+        }
+    }
+    let listener = TcpListener::bind(&addr)?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let mut listeners: Vec<Option<TcpListener>> = Vec::with_capacity(threads);
+    listeners.push(Some(listener));
+    listeners.resize_with(threads, || None);
+    Ok((listeners, bound, false))
 }
 
 /// Bridge pre-existing subsystem stats into the metrics registry as
@@ -709,27 +890,48 @@ struct Conn {
     read_eof: bool,
     /// Remove now (peer gone, fatal IO error, idle timeout).
     dead: bool,
+    /// Which event loop owns this connection (completions route back
+    /// here).
+    loop_idx: usize,
+    /// This connection's index in its loop's `conns` vec.
+    slot: usize,
+    /// Admission generation: paired with `slot` to detect a completion
+    /// addressed to a connection that died and had its slot reused.
+    gen: u64,
+    /// An off-loop job is in flight for this connection: frame
+    /// dispatching and subscriber pumping halt (preserving reply order),
+    /// and the reaper leaves the slot alone, until the completion lands.
+    awaiting: bool,
 }
 
 /// Per-loop plumbing handed to each loop thread.
 struct LoopParts {
-    /// Present on the accepting loop (loop 0) only.
+    /// This loop's index (completion routing, waker addressing).
+    loop_idx: usize,
+    /// Present on every loop when accepts are REUSEPORT-sharded; on the
+    /// accepting loop (loop 0) only otherwise.
     listener: Option<TcpListener>,
     wake_rx: WakeRx,
     /// Connections routed to this loop by the accepting loop.
     intake: mpsc::Receiver<TcpStream>,
-    /// Round-robin routing targets (accepting loop only; empty elsewhere).
+    /// Round-robin routing targets (unsharded accepting loop only;
+    /// empty elsewhere — an empty set means "admit locally").
     routes: Vec<mpsc::Sender<TcpStream>>,
     /// This loop's tick instrumentation (poll-wait vs dispatch time,
-    /// ready events per tick, saturation gauge).
+    /// ready events per tick, saturation gauge), labeled per loop and
+    /// per backend.
     profile: TickProfile,
+    /// The readiness backend, built in `start` so the profile's backend
+    /// label matches reality.
+    poller: Poller,
 }
 
-fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
-    let mut poller = Poller::new();
+fn event_loop(shared: Arc<Shared>, mut parts: LoopParts) {
     let mut conns: Vec<Option<Conn>> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
     let mut next_route = 0usize;
+    // Admission generations (see [`Conn::gen`]); per-loop, never 0.
+    let mut next_gen: u64 = 1;
     let mut read_buf = vec![0u8; 16 * 1024];
     // Set after a non-WouldBlock accept failure (EMFILE and friends):
     // the listener leaves the interest set until this passes, so the
@@ -746,7 +948,19 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
         }
         // (1) Adopt connections the accepting loop routed here.
         while let Ok(stream) = parts.intake.try_recv() {
-            admit(&mut conns, &mut free, stream);
+            admit(&mut conns, &mut free, stream, parts.loop_idx, &mut next_gen);
+        }
+        // (1b) Land worker-pool results addressed to this loop. Swap the
+        // queue out under the lock, apply outside it — a completion's
+        // `process_frames` can submit the next job, which could deliver
+        // (other workers) while we're still applying.
+        let done: Vec<Completion> = shared
+            .completions
+            .get(parts.loop_idx)
+            .and_then(|q| q.lock().ok().map(|mut q| std::mem::take(&mut *q)))
+            .unwrap_or_default();
+        for c in done {
+            apply_completion(&mut conns, &shared, c);
         }
         // (2) Pump subscriber streams: fill encoders from the sealed
         // log up to the ack window / byte budget. Runs every tick and
@@ -779,14 +993,20 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
             // connections of either mode are not — a peer that never
             // drains its final error frame would otherwise pin the
             // slot forever.
+            // A connection waiting on an off-loop job is not idle and
+            // is still owed its reply: the sweep and the half-close
+            // reap both stand down until the completion lands (stale
+            // completions are generation-checked anyway, so this is
+            // about answering the peer, not memory safety).
             if let Some(t) = shared.cfg.idle_timeout {
                 if (matches!(conn.mode, ConnMode::Rpc) || conn.closing)
+                    && !conn.awaiting
                     && conn.last_activity.elapsed() > t
                 {
                     conn.dead = true;
                 }
             }
-            let half_closed_done = conn.read_eof && !conn.decoder.has_work();
+            let half_closed_done = conn.read_eof && !conn.decoder.has_work() && !conn.awaiting;
             if conn.dead || ((conn.closing || half_closed_done) && conn.encoder.is_empty()) {
                 *slot = None;
                 free.push(idx);
@@ -796,15 +1016,15 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
         // (5) Rebuild the interest set: this is where backpressure
         // *flips interest* — no read interest past the reply-buffer
         // threshold, write interest exactly while bytes are queued.
-        poller.clear();
-        poller.register(parts.wake_rx.as_raw_fd(), TOKEN_WAKER, true, false);
+        parts.poller.clear();
+        parts.poller.register(parts.wake_rx.as_raw_fd(), TOKEN_WAKER, true, false);
         if accept_backoff.is_some_and(|until| Instant::now() >= until) {
             accept_backoff = None;
         }
         if let Some(listener) = &parts.listener {
             let open = shared.stats.connections_open.load(Ordering::Relaxed) as usize;
             if open < shared.cfg.max_connections && accept_backoff.is_none() {
-                poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false);
+                parts.poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false);
             }
         }
         for (idx, slot) in conns.iter().enumerate() {
@@ -816,11 +1036,11 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
                 && (matches!(conn.mode, ConnMode::Subscriber { .. })
                     || conn.encoder.pending() < READ_PAUSE_BYTES);
             let writable = !conn.encoder.is_empty();
-            poller.register(conn.stream.as_raw_fd(), idx, readable, writable);
+            parts.poller.register(conn.stream.as_raw_fd(), idx, readable, writable);
         }
         // (6) Wait for readiness (or the tick).
         let poll_started = Instant::now();
-        let polled = poller.poll(Some(POLL_TICK));
+        let polled = parts.poller.poll(Some(POLL_TICK));
         let waited = poll_started.elapsed();
         if polled.is_err() {
             // Transient poll failure: back off instead of hot-spinning.
@@ -829,7 +1049,7 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
         }
         // (7) Handle events. Level-triggered semantics: anything not
         // finished this pass is re-reported next poll.
-        let ready: Vec<reactor::Readiness> = poller.ready().collect();
+        let ready: Vec<reactor::Readiness> = parts.poller.ready().collect();
         parts.profile.tick(
             poll_started.duration_since(work_started),
             waited,
@@ -840,7 +1060,14 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
             match r.token {
                 TOKEN_WAKER => parts.wake_rx.drain(),
                 TOKEN_LISTENER => {
-                    if !accept_ready(&shared, &parts, &mut next_route) {
+                    if !accept_ready(
+                        &shared,
+                        &parts,
+                        &mut next_route,
+                        &mut conns,
+                        &mut free,
+                        &mut next_gen,
+                    ) {
                         accept_backoff = Some(Instant::now() + Duration::from_millis(20));
                     }
                 }
@@ -879,10 +1106,20 @@ fn event_loop(shared: Arc<Shared>, parts: LoopParts) {
     }
 }
 
-/// Take ownership of a routed socket as a fresh RPC-mode connection.
-fn admit(conns: &mut Vec<Option<Conn>>, free: &mut Vec<usize>, stream: TcpStream) {
+/// Take ownership of an accepted socket as a fresh RPC-mode connection
+/// on this loop.
+fn admit(
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    stream: TcpStream,
+    loop_idx: usize,
+    next_gen: &mut u64,
+) {
     let _ = stream.set_nonblocking(true);
     let _ = stream.set_nodelay(true);
+    let gen = *next_gen;
+    *next_gen = next_gen.wrapping_add(1);
+    let slot = free.pop().unwrap_or(conns.len());
     let conn = Conn {
         stream,
         decoder: FrameDecoder::new(),
@@ -892,20 +1129,34 @@ fn admit(conns: &mut Vec<Option<Conn>>, free: &mut Vec<usize>, stream: TcpStream
         closing: false,
         read_eof: false,
         dead: false,
+        loop_idx,
+        slot,
+        gen,
+        awaiting: false,
     };
-    match free.pop() {
-        Some(idx) => conns[idx] = Some(conn),
-        None => conns.push(Some(conn)),
+    if slot == conns.len() {
+        conns.push(Some(conn));
+    } else {
+        conns[slot] = Some(conn);
     }
 }
 
-/// Accept everything pending (up to the connection cap) and route each
-/// socket round-robin across the loops, waking the target. Returns
-/// `false` on a persistent accept failure (EMFILE being the classic):
-/// the failed connection stays in the backlog keeping the listener
-/// level-triggered readable, so the caller must take the listener out
-/// of the interest set briefly or the loop hot-spins.
-fn accept_ready(shared: &Shared, parts: &LoopParts, next_route: &mut usize) -> bool {
+/// Accept everything pending (up to the connection cap). With REUSEPORT
+/// sharding (`routes` empty) each socket is admitted locally — the
+/// kernel already chose this loop; otherwise sockets are routed
+/// round-robin across the loops, waking the target. Returns `false` on
+/// a persistent accept failure (EMFILE being the classic): the failed
+/// connection stays in the backlog keeping the listener level-triggered
+/// readable, so the caller must take the listener out of the interest
+/// set briefly or the loop hot-spins.
+fn accept_ready(
+    shared: &Shared,
+    parts: &LoopParts,
+    next_route: &mut usize,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    next_gen: &mut u64,
+) -> bool {
     let Some(listener) = &parts.listener else { return true };
     loop {
         // No new work once shutdown began — a socket routed to a loop
@@ -922,6 +1173,10 @@ fn accept_ready(shared: &Shared, parts: &LoopParts, next_route: &mut usize) -> b
                 shared.stats.connections.fetch_add(1, Ordering::Relaxed);
                 let now_open = shared.stats.connections_open.fetch_add(1, Ordering::Relaxed) + 1;
                 shared.stats.connections_peak.fetch_max(now_open, Ordering::Relaxed);
+                if parts.routes.is_empty() {
+                    admit(conns, free, stream, parts.loop_idx, next_gen);
+                    continue;
+                }
                 let target = *next_route % parts.routes.len();
                 *next_route = next_route.wrapping_add(1);
                 if parts.routes[target].send(stream).is_ok() {
@@ -938,7 +1193,7 @@ fn accept_ready(shared: &Shared, parts: &LoopParts, next_route: &mut usize) -> b
 
 /// Readable event: pull whatever the socket holds into the decoder
 /// (bounded per burst for fairness), then dispatch the complete frames.
-fn on_readable(conn: &mut Conn, shared: &Shared, buf: &mut [u8]) {
+fn on_readable(conn: &mut Conn, shared: &Arc<Shared>, buf: &mut [u8]) {
     let mut eof = false;
     loop {
         match conn.stream.read(buf) {
@@ -1004,9 +1259,11 @@ fn queue_reply(conn: &mut Conn, shared: &Shared, resp: Response) {
 /// decoder's resumed-frame count into the server stats, and times each
 /// frame from dispatch start to reply queued for the per-opcode
 /// latency series.
-fn process_frames(conn: &mut Conn, shared: &Shared) {
+fn process_frames(conn: &mut Conn, shared: &Arc<Shared>) {
     loop {
-        if conn.closing || conn.dead {
+        // `awaiting`: an off-loop job owns the next reply slot; frames
+        // behind it stay buffered so pipelined replies keep their order.
+        if conn.closing || conn.dead || conn.awaiting {
             break;
         }
         if matches!(conn.mode, ConnMode::Rpc) && conn.encoder.pending() >= READ_PAUSE_BYTES {
@@ -1055,7 +1312,13 @@ fn process_frames(conn: &mut Conn, shared: &Shared) {
 /// queue the reply — or flip into a subscriber stream on `SUBSCRIBE`.
 /// `payload` arrives with any trace context already peeled off;
 /// `trace_id` is 0 for untraced requests.
-fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8], trace_id: u64) {
+fn handle_rpc_frame(
+    conn: &mut Conn,
+    shared: &Arc<Shared>,
+    opcode: u8,
+    payload: &[u8],
+    trace_id: u64,
+) {
     let decoded = {
         let _span = Span::enter_timed(Stage::Decode, trace_id, shared.timers.timer(Stage::Decode))
             .with_payload(payload.len() as u64);
@@ -1090,6 +1353,21 @@ fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]
             code: ErrorCode::Malformed,
             message: "ReplicaAck outside an active subscription".into(),
         },
+        // A snapshot the server can actually take blocks on file IO for
+        // the whole registry: ship it to the worker pool and answer on
+        // completion. Requests it would *reject* (read-only, no path)
+        // still answer inline through `dispatch` below.
+        Ok(Request::Snapshot)
+            if !shared.cfg.read_only
+                && shared.cfg.snapshot_path.is_some()
+                && shared.workers.is_some() =>
+        {
+            if submit_snapshot_job(conn, shared, trace_id) {
+                return;
+            }
+            // Pool refused (shutdown race): serve it inline after all.
+            dispatch(Request::Snapshot, shared, trace_id)
+        }
         Ok(req) => dispatch(req, shared, trace_id),
         Err(e) => Response::Error { code: ErrorCode::Malformed, message: e.to_string() },
     };
@@ -1098,7 +1376,7 @@ fn handle_rpc_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]
 
 /// One complete frame on a subscriber stream: only `REPLICA_ACK` is
 /// valid; an ack slides the window and re-pumps.
-fn handle_subscriber_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload: &[u8]) {
+fn handle_subscriber_frame(conn: &mut Conn, shared: &Arc<Shared>, opcode: u8, payload: &[u8]) {
     match Request::decode(opcode, payload) {
         Ok(Request::ReplicaAck { cursor }) => {
             if let ConnMode::Subscriber { sent, acked, .. } = &mut conn.mode {
@@ -1134,7 +1412,43 @@ fn handle_subscriber_frame(conn: &mut Conn, shared: &Shared, opcode: u8, payload
 /// in a batch with seq > cursor that pumps right after. Returns `false`
 /// when the subscription is terminally broken (typed error queued,
 /// connection closing).
-fn push_full_sync(conn: &mut Conn, shared: &Shared, log: &ReplicationLog) -> bool {
+///
+/// With a worker pool, the image serialization — O(keys × registers),
+/// the largest single stall an event loop could take — runs off-loop:
+/// the connection is flagged `awaiting` (which halts its pump and
+/// dispatch) and the loop finishes the job in [`apply_completion`].
+fn push_full_sync(conn: &mut Conn, shared: &Arc<Shared>, log: &ReplicationLog) -> bool {
+    if conn.awaiting {
+        // An image is already being built for this connection.
+        return true;
+    }
+    if !matches!(conn.mode, ConnMode::Subscriber { .. }) {
+        return false;
+    }
+    if let Some(workers) = &shared.workers {
+        let job_shared = shared.clone();
+        let (loop_idx, slot, gen) = (conn.loop_idx, conn.slot, conn.gen);
+        let submitted = workers.submit(Box::new(move || {
+            let Some(log) = job_shared.log.clone() else { return };
+            // Same ordering as the inline path: cursor before export.
+            let epoch = log.epoch();
+            let cursor = log.latest_seq();
+            let body = snapshot::snapshot_to_vec(&job_shared.registry);
+            job_shared.deliver(
+                loop_idx,
+                Completion {
+                    conn_idx: slot,
+                    gen,
+                    kind: CompletionKind::FullSync { epoch, cursor, body },
+                },
+            );
+        }));
+        if submitted {
+            conn.awaiting = true;
+            return true;
+        }
+        // Pool refused (shutdown race): fall through to the inline path.
+    }
     let ConnMode::Subscriber { sent, acked, .. } = &mut conn.mode else { return false };
     let cursor = log.latest_seq();
     let body = snapshot::snapshot_to_vec(&shared.registry);
@@ -1167,9 +1481,12 @@ fn push_full_sync(conn: &mut Conn, shared: &Shared, log: &ReplicationLog) -> boo
 /// followers exert backpressure here) and a queued-byte budget (the
 /// encoder never balloons to `ack_window × batch` bytes). Stale cursors
 /// fall back to a full sync mid-stream.
-fn pump_subscriber(conn: &mut Conn, shared: &Shared, log: &Arc<ReplicationLog>) {
+fn pump_subscriber(conn: &mut Conn, shared: &Arc<Shared>, log: &Arc<ReplicationLog>) {
     loop {
-        if conn.closing || conn.dead {
+        // `awaiting` also catches the async full-sync: `push_full_sync`
+        // below returns `true` after merely *submitting* the image job,
+        // and without this gate the `Stale` arm would re-submit forever.
+        if conn.closing || conn.dead || conn.awaiting {
             return;
         }
         let ConnMode::Subscriber { sent, acked, wire, ack_window } = &conn.mode else { return };
@@ -1219,15 +1536,17 @@ fn pump_subscriber(conn: &mut Conn, shared: &Shared, log: &Arc<ReplicationLog>) 
 
 /// Nonblocking flush of queued replies; once the buffer drops below the
 /// pause threshold, frames the decoder buffered during the pause are
-/// served (the read-interest flip's other half).
-fn flush_and_resume(conn: &mut Conn, shared: &Shared) {
+/// served (the read-interest flip's other half). The flush is vectored:
+/// every queued frame gathers into `writev` batches, so a pipelined
+/// burst of small replies drains in one syscall instead of one each.
+fn flush_and_resume(conn: &mut Conn, shared: &Arc<Shared>) {
     if conn.dead {
         return;
     }
     if !conn.encoder.is_empty() {
         let before = conn.encoder.pending();
-        let Conn { encoder, stream, .. } = conn;
-        match encoder.write_to(stream) {
+        let fd = conn.stream.as_raw_fd();
+        match conn.encoder.write_vectored_to(fd) {
             Ok(_) => {
                 // Any byte accepted = the peer is draining: liveness
                 // for the idle sweep (a backpressured connection
@@ -1253,9 +1572,116 @@ fn flush_and_resume(conn: &mut Conn, shared: &Shared) {
     }
 }
 
+/// Ship the `Snapshot` RPC's registry walk and file write to the worker
+/// pool; the reply comes back as a [`CompletionKind::Reply`]. Returns
+/// `false` when the pool refused (shutdown race) — the caller serves
+/// the request inline instead.
+fn submit_snapshot_job(conn: &mut Conn, shared: &Arc<Shared>, trace_id: u64) -> bool {
+    let Some(workers) = &shared.workers else { return false };
+    let Some(path) = shared.cfg.snapshot_path.clone() else { return false };
+    let job_shared = shared.clone();
+    let (loop_idx, slot, gen) = (conn.loop_idx, conn.slot, conn.gen);
+    let submitted = workers.submit(Box::new(move || {
+        let resp = {
+            // The dispatch span moves with the work: a traced snapshot
+            // shows its real (off-loop) duration, not the submit cost.
+            let _span = Span::enter_timed(
+                Stage::Dispatch,
+                trace_id,
+                job_shared.timers.timer(Stage::Dispatch),
+            );
+            match snapshot::write_snapshot(&job_shared.registry, &path) {
+                Ok(s) => Response::SnapshotDone { keys: s.keys, bytes: s.bytes },
+                Err(e) => Response::Error { code: ErrorCode::Internal, message: e.to_string() },
+            }
+        };
+        job_shared.deliver(
+            loop_idx,
+            Completion { conn_idx: slot, gen, kind: CompletionKind::Reply(resp) },
+        );
+    }));
+    if submitted {
+        conn.awaiting = true;
+    }
+    submitted
+}
+
+/// Land one worker-pool result on its connection: clear the halt, queue
+/// the reply (or the full-sync frame), and resume the frames that
+/// buffered up behind the offloaded one. Results addressed to a
+/// connection that died — slot empty, or reused under a newer
+/// generation — are dropped.
+fn apply_completion(conns: &mut [Option<Conn>], shared: &Arc<Shared>, done: Completion) {
+    let Some(conn) = conns.get_mut(done.conn_idx).and_then(|s| s.as_mut()) else { return };
+    if conn.gen != done.gen || conn.dead {
+        return;
+    }
+    conn.awaiting = false;
+    conn.last_activity = Instant::now();
+    match done.kind {
+        CompletionKind::Reply(resp) => {
+            queue_reply(conn, shared, resp);
+            process_frames(conn, shared);
+        }
+        CompletionKind::FullSync { epoch, cursor, body } => {
+            // Same frame-cap check as the inline path in
+            // `push_full_sync` — the image was built off-loop, the
+            // verdict is delivered here.
+            if body.len() as u64 + 20 > MAX_PAYLOAD as u64 {
+                queue_reply(
+                    conn,
+                    shared,
+                    Response::Error {
+                        code: ErrorCode::Internal,
+                        message: format!(
+                            "registry image of {} bytes exceeds the in-band full-sync frame \
+                             cap; bootstrap this follower from a snapshot file",
+                            body.len()
+                        ),
+                    },
+                );
+                conn.closing = true;
+                return;
+            }
+            conn.encoder.push(Response::FullSync { epoch, cursor, body }.encode());
+            shared.stats.full_syncs_sent.fetch_add(1, Ordering::Relaxed);
+            if let ConnMode::Subscriber { sent, acked, .. } = &mut conn.mode {
+                *sent = cursor;
+                *acked = cursor;
+            }
+            // Batches sealed while the image was being built ship now.
+            if let Some(log) = shared.log.clone() {
+                pump_subscriber(conn, shared, &log);
+            }
+            process_frames(conn, shared);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Maintenance threads
 // ---------------------------------------------------------------------------
+
+/// Worker-pool thread: pull blocking jobs off the shared queue and run
+/// them. The receiver lock is held only for the bounded wait, never
+/// while a job runs, so siblings keep draining the queue; the bounded
+/// wait doubles as the stop-flag poll for shutdown.
+fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let job = match rx.lock() {
+            Ok(rx) => rx.recv_timeout(Duration::from_millis(25)),
+            Err(_) => break,
+        };
+        match job {
+            Ok(job) => job(),
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
 
 /// Replication capture thread: drain the registry's dirty keys (and the
 /// global union's dirty registers) into a sealed [`ReplicationLog`]

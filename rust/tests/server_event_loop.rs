@@ -5,6 +5,10 @@
 //! never drain their stream, hundreds of concurrent idle connections on
 //! a single loop thread, idle-timeout reaping, and the client's typed
 //! socket timeouts.
+//!
+//! Every scenario runs once per kernel [`PollerBackend`] this host
+//! supports (`epoll` + `poll` on Linux, `poll` elsewhere): the hostile
+//! IO must be survived by each backend, not just the default.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -15,7 +19,8 @@ use hll_fpga::hll::{HashKind, HllConfig};
 use hll_fpga::registry::{RegistryConfig, SketchRegistry};
 use hll_fpga::replica::ReplicationConfig;
 use hll_fpga::server::{
-    protocol, ClientError, Request, Response, ServerConfig, SketchClient, SketchServer,
+    protocol, ClientError, PollerBackend, Request, Response, ServerConfig, SketchClient,
+    SketchServer,
 };
 
 fn start_server(cfg: ServerConfig) -> (SketchServer, Arc<SketchRegistry<u64>>) {
@@ -28,6 +33,16 @@ fn start_server(cfg: ServerConfig) -> (SketchServer, Arc<SketchRegistry<u64>>) {
     (server, registry)
 }
 
+/// Run `test` once per available poller backend, passing a base
+/// `ServerConfig` pinned to that backend (tests layer their own fields
+/// on top with struct update syntax).
+fn for_each_backend(test: impl Fn(ServerConfig)) {
+    for &backend in PollerBackend::available() {
+        eprintln!("--- poller backend: {} ---", backend.label());
+        test(ServerConfig { poller_backend: backend, ..ServerConfig::default() });
+    }
+}
+
 fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
     let deadline = Instant::now() + Duration::from_secs(20);
     while !cond() {
@@ -38,95 +53,101 @@ fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
 
 #[test]
 fn slow_loris_one_byte_per_write_is_served_not_parked() {
-    let (server, _registry) = start_server(ServerConfig::default());
-    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
-    raw.set_nodelay(true).unwrap();
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(cfg);
+        let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+        raw.set_nodelay(true).unwrap();
 
-    // A ping frame trickled one byte per write: the decoder must
-    // reassemble and answer it (the blocking server parked a thread in
-    // read_exact for the whole trickle; the loop just buffers 8 bytes).
-    for &b in &Request::Ping.encode() {
-        raw.write_all(&[b]).unwrap();
-        std::thread::sleep(Duration::from_millis(2));
-    }
-    assert_eq!(protocol::read_response(&mut raw).unwrap(), Response::Pong);
+        // A ping frame trickled one byte per write: the decoder must
+        // reassemble and answer it (the blocking server parked a thread
+        // in read_exact for the whole trickle; the loop just buffers 8
+        // bytes).
+        for &b in &Request::Ping.encode() {
+            raw.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(protocol::read_response(&mut raw).unwrap(), Response::Pong);
 
-    // Same treatment for a frame with a payload.
-    for &b in &Request::InsertBatch { key: 9, words: vec![1, 2, 3] }.encode() {
-        raw.write_all(&[b]).unwrap();
-        std::thread::sleep(Duration::from_millis(2));
-    }
-    match protocol::read_response(&mut raw).unwrap() {
-        Response::Ingested { words } => assert_eq!(words, 3),
-        other => panic!("expected Ingested, got {other:?}"),
-    }
+        // Same treatment for a frame with a payload.
+        for &b in &Request::InsertBatch { key: 9, words: vec![1, 2, 3] }.encode() {
+            raw.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        match protocol::read_response(&mut raw).unwrap() {
+            Response::Ingested { words } => assert_eq!(words, 3),
+            other => panic!("expected Ingested, got {other:?}"),
+        }
 
-    // ≥ 1, not == 2: a heavily-delayed CI scheduler could let one
-    // frame's bytes coalesce into a single read, but 28 bytes over
-    // ~56 ms of trickling cannot all land in one.
-    let stats = server.stats();
-    assert!(
-        stats.partial_frames_resumed >= 1,
-        "trickled frames must count as resumed partial reads, got {}",
-        stats.partial_frames_resumed
-    );
-    assert_eq!(stats.error_frames, 0);
-    server.shutdown();
+        // ≥ 1, not == 2: a heavily-delayed CI scheduler could let one
+        // frame's bytes coalesce into a single read, but 28 bytes over
+        // ~56 ms of trickling cannot all land in one.
+        let stats = server.stats();
+        assert!(
+            stats.partial_frames_resumed >= 1,
+            "trickled frames must count as resumed partial reads, got {}",
+            stats.partial_frames_resumed
+        );
+        assert_eq!(stats.error_frames, 0);
+        server.shutdown();
+    });
 }
 
 #[test]
 fn pipelining_client_that_never_reads_cannot_wedge_other_connections() {
-    let (server, _registry) = start_server(ServerConfig::default());
-    let addr = server.local_addr();
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(cfg);
+        let addr = server.local_addr();
 
-    // A client that floods pipelined Stats requests and reads nothing:
-    // 50k requests → ~2.4 MiB of replies, far past the server's
-    // backpressure threshold and any socket buffer, so the server is
-    // guaranteed to park this connection's replies in its outbound
-    // queue and flip its read interest off — without blocking the loop
-    // thread. The flood runs on its own thread (its blocking writes
-    // are *supposed* to stall once the server stops reading from it).
-    let total = 50_000usize;
-    let hog = TcpStream::connect(addr).unwrap();
-    hog.set_nodelay(true).unwrap();
-    let mut hog_write = hog.try_clone().unwrap();
-    let writer = std::thread::spawn(move || {
-        let frame = Request::Stats.encode();
-        let mut burst = Vec::with_capacity(frame.len() * 1_000);
-        for _ in 0..1_000 {
-            burst.extend_from_slice(&frame);
+        // A client that floods pipelined Stats requests and reads
+        // nothing: 50k requests → ~2.4 MiB of replies, far past the
+        // server's backpressure threshold and any socket buffer, so the
+        // server is guaranteed to park this connection's replies in its
+        // outbound queue and flip its read interest off — without
+        // blocking the loop thread. The flood runs on its own thread
+        // (its blocking writes are *supposed* to stall once the server
+        // stops reading from it).
+        let total = 50_000usize;
+        let hog = TcpStream::connect(addr).unwrap();
+        hog.set_nodelay(true).unwrap();
+        let mut hog_write = hog.try_clone().unwrap();
+        let writer = std::thread::spawn(move || {
+            let frame = Request::Stats.encode();
+            let mut burst = Vec::with_capacity(frame.len() * 1_000);
+            for _ in 0..1_000 {
+                burst.extend_from_slice(&frame);
+            }
+            for _ in 0..total / 1_000 {
+                hog_write.write_all(&burst).unwrap();
+            }
+        });
+
+        // While the flood is in progress (and the hog's unread replies
+        // pin its connection in the paused state), a well-behaved client
+        // on the same single loop thread is served normally, repeatedly.
+        let mut polite = SketchClient::connect(addr).unwrap();
+        for round in 0..20 {
+            polite.ping().unwrap();
+            polite.insert_batch(1, &[round, round + 1]).unwrap();
+            assert!(polite.estimate(1).unwrap().is_some());
+            std::thread::sleep(Duration::from_millis(5));
         }
-        for _ in 0..total / 1_000 {
-            hog_write.write_all(&burst).unwrap();
+
+        // Now drain the hog's replies: every one of the 50k must
+        // arrive, in order, none lost to the pause/resume cycle.
+        let mut hog_read = hog;
+        hog_read.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for i in 0..total {
+            match protocol::read_response(&mut hog_read) {
+                Ok(Response::Stats(_)) => {}
+                other => panic!("reply {i}: expected Stats, got {other:?}"),
+            }
         }
+        writer.join().unwrap();
+        let stats = server.stats();
+        assert!(stats.frames >= total as u64);
+        assert_eq!(stats.error_frames, 0);
+        server.shutdown();
     });
-
-    // While the flood is in progress (and the hog's unread replies pin
-    // its connection in the paused state), a well-behaved client on the
-    // same single loop thread is served normally, repeatedly.
-    let mut polite = SketchClient::connect(addr).unwrap();
-    for round in 0..20 {
-        polite.ping().unwrap();
-        polite.insert_batch(1, &[round, round + 1]).unwrap();
-        assert!(polite.estimate(1).unwrap().is_some());
-        std::thread::sleep(Duration::from_millis(5));
-    }
-
-    // Now drain the hog's replies: every one of the 50k must arrive, in
-    // order, none lost to the pause/resume cycle.
-    let mut hog_read = hog;
-    hog_read.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    for i in 0..total {
-        match protocol::read_response(&mut hog_read) {
-            Ok(Response::Stats(_)) => {}
-            other => panic!("reply {i}: expected Stats, got {other:?}"),
-        }
-    }
-    writer.join().unwrap();
-    let stats = server.stats();
-    assert!(stats.frames >= total as u64);
-    assert_eq!(stats.error_frames, 0);
-    server.shutdown();
 }
 
 #[test]
@@ -136,81 +157,88 @@ fn half_close_after_backpressured_pipeline_still_answers_every_request() {
     // only then read: every single reply must still arrive — the
     // half-close must not discard requests the decoder had buffered
     // while reads were paused — followed by a clean EOF.
-    let (server, _registry) = start_server(ServerConfig::default());
-    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
-    raw.set_nodelay(true).unwrap();
-    let total = 10_000usize;
-    let frame = Request::Stats.encode();
-    let mut wire = Vec::with_capacity(frame.len() * total);
-    for _ in 0..total {
-        wire.extend_from_slice(&frame);
-    }
-    raw.write_all(&wire).unwrap();
-    raw.shutdown(std::net::Shutdown::Write).unwrap();
-
-    raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    for i in 0..total {
-        match protocol::read_response(&mut raw) {
-            Ok(Response::Stats(_)) => {}
-            other => panic!("reply {i}: expected Stats, got {other:?}"),
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(cfg);
+        let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+        raw.set_nodelay(true).unwrap();
+        let total = 10_000usize;
+        let frame = Request::Stats.encode();
+        let mut wire = Vec::with_capacity(frame.len() * total);
+        for _ in 0..total {
+            wire.extend_from_slice(&frame);
         }
-    }
-    let mut tail = [0u8; 8];
-    match raw.read(&mut tail) {
-        Ok(0) => {}
-        other => panic!("expected EOF after the final reply, got {other:?}"),
-    }
-    wait_for(|| server.stats().connections_open == 0, "the half-closed conn to be reaped");
-    server.shutdown();
+        raw.write_all(&wire).unwrap();
+        raw.shutdown(std::net::Shutdown::Write).unwrap();
+
+        raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for i in 0..total {
+            match protocol::read_response(&mut raw) {
+                Ok(Response::Stats(_)) => {}
+                other => panic!("reply {i}: expected Stats, got {other:?}"),
+            }
+        }
+        let mut tail = [0u8; 8];
+        match raw.read(&mut tail) {
+            Ok(0) => {}
+            other => panic!("expected EOF after the final reply, got {other:?}"),
+        }
+        wait_for(|| server.stats().connections_open == 0, "the half-closed conn to be reaped");
+        server.shutdown();
+    });
 }
 
 #[test]
 fn subscriber_that_never_reads_does_not_wedge_ingest_or_shutdown() {
-    let registry = SketchRegistry::shared(RegistryConfig {
-        hll: HllConfig::new(12, HashKind::H64).unwrap(),
-        shards: 16,
-        ..RegistryConfig::default()
-    })
-    .unwrap();
-    let server = SketchServer::start(
-        "127.0.0.1:0",
-        registry.clone(),
-        ServerConfig {
-            replication: Some(ReplicationConfig {
-                capture_interval: Duration::from_millis(5),
-                ..ReplicationConfig::default()
-            }),
-            ..ServerConfig::default()
-        },
-    )
-    .unwrap();
-
-    // A subscriber that sends SUBSCRIBE and then never reads a byte:
-    // its stream backs up (bounded by the pump's byte budget and the
-    // socket buffers), which must not stall the capture thread, the
-    // loop, or other connections.
-    let mut dead_sub = TcpStream::connect(server.local_addr()).unwrap();
-    dead_sub
-        .write_all(
-            &Request::Subscribe { epoch: 0, cursor: 0, wire: protocol::DELTA_WIRE_V3 }.encode(),
+    for_each_backend(|cfg| {
+        let registry = SketchRegistry::shared(RegistryConfig {
+            hll: HllConfig::new(12, HashKind::H64).unwrap(),
+            shards: 16,
+            ..RegistryConfig::default()
+        })
+        .unwrap();
+        let server = SketchServer::start(
+            "127.0.0.1:0",
+            registry.clone(),
+            ServerConfig {
+                replication: Some(ReplicationConfig {
+                    capture_interval: Duration::from_millis(5),
+                    ..ReplicationConfig::default()
+                }),
+                ..cfg
+            },
         )
         .unwrap();
 
-    let mut producer = SketchClient::connect(server.local_addr()).unwrap();
-    for key in 0u64..200 {
-        let words: Vec<u32> = (0..400u32).map(|w| w.wrapping_mul(key as u32 * 37 + 11)).collect();
-        producer.insert_batch(key, &words).unwrap();
-    }
-    // The registry took everything and queries stay live while the
-    // dead subscriber's bytes rot in its buffers.
-    assert_eq!(registry.len(), 200);
-    assert!(producer.estimate(7).unwrap().is_some());
-    wait_for(|| server.stats().full_syncs_sent >= 1, "bootstrap full sync to be queued");
+        // A subscriber that sends SUBSCRIBE and then never reads a
+        // byte: its stream backs up (bounded by the pump's byte budget
+        // and the socket buffers), which must not stall the capture
+        // thread, the loop, or other connections.
+        let mut dead_sub = TcpStream::connect(server.local_addr()).unwrap();
+        dead_sub
+            .write_all(
+                &Request::Subscribe { epoch: 0, cursor: 0, wire: protocol::DELTA_WIRE_V3 }
+                    .encode(),
+            )
+            .unwrap();
 
-    // Graceful shutdown must complete despite the wedged stream (the
-    // old server's blocking write path could park here forever).
-    drop(dead_sub);
-    server.shutdown();
+        let mut producer = SketchClient::connect(server.local_addr()).unwrap();
+        for key in 0u64..200 {
+            let words: Vec<u32> =
+                (0..400u32).map(|w| w.wrapping_mul(key as u32 * 37 + 11)).collect();
+            producer.insert_batch(key, &words).unwrap();
+        }
+        // The registry took everything and queries stay live while the
+        // dead subscriber's bytes rot in its buffers.
+        assert_eq!(registry.len(), 200);
+        assert!(producer.estimate(7).unwrap().is_some());
+        wait_for(|| server.stats().full_syncs_sent >= 1, "bootstrap full sync to be queued");
+
+        // Graceful shutdown must complete despite the wedged stream
+        // (the old server's blocking write path could park here
+        // forever).
+        drop(dead_sub);
+        server.shutdown();
+    });
 }
 
 /// Best-effort `RLIMIT_NOFILE` raise so the 500-connection test has fd
@@ -259,76 +287,80 @@ fn one_loop_thread_sustains_five_hundred_concurrent_connections() {
         return;
     }
 
-    let (server, _registry) = start_server(ServerConfig {
-        event_loop_threads: 1,
-        max_connections: 2_048,
-        ..ServerConfig::default()
-    });
-    let addr = server.local_addr();
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(ServerConfig {
+            event_loop_threads: 1,
+            max_connections: 2_048,
+            ..cfg
+        });
+        let addr = server.local_addr();
 
-    // Open 520 connections and keep every one of them alive and idle.
-    let total = 520usize;
-    let mut socks: Vec<TcpStream> = Vec::with_capacity(total);
-    for i in 0..total {
-        let s = TcpStream::connect(addr).unwrap_or_else(|e| panic!("connect {i}: {e}"));
-        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
-        socks.push(s);
-    }
-    wait_for(
-        || server.stats().connections_open as usize >= total,
-        "the loop to adopt all connections",
-    );
-    let stats = server.stats();
-    assert!(stats.connections_peak as usize >= total);
-
-    // Every single connection answers a ping — none starved, none
-    // dropped, all multiplexed through the one loop thread.
-    let ping = Request::Ping.encode();
-    for (i, s) in socks.iter_mut().enumerate() {
-        s.write_all(&ping).unwrap_or_else(|e| panic!("write {i}: {e}"));
-        match protocol::read_response(s) {
-            Ok(Response::Pong) => {}
-            other => panic!("conn {i}: expected Pong, got {other:?}"),
+        // Open 520 connections and keep every one alive and idle.
+        let total = 520usize;
+        let mut socks: Vec<TcpStream> = Vec::with_capacity(total);
+        for i in 0..total {
+            let s = TcpStream::connect(addr).unwrap_or_else(|e| panic!("connect {i}: {e}"));
+            s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            socks.push(s);
         }
-    }
-    // And real work still flows while the 520 sit connected.
-    let mut client = SketchClient::connect(addr).unwrap();
-    client.insert_batch(42, &[1, 2, 3, 4]).unwrap();
-    assert!(client.estimate(42).unwrap().is_some());
+        wait_for(
+            || server.stats().connections_open as usize >= total,
+            "the loop to adopt all connections",
+        );
+        let stats = server.stats();
+        assert!(stats.connections_peak as usize >= total);
 
-    drop(socks);
-    wait_for(|| server.stats().connections_open <= 1, "closed connections to be reaped");
-    server.shutdown();
+        // Every single connection answers a ping — none starved, none
+        // dropped, all multiplexed through the one loop thread.
+        let ping = Request::Ping.encode();
+        for (i, s) in socks.iter_mut().enumerate() {
+            s.write_all(&ping).unwrap_or_else(|e| panic!("write {i}: {e}"));
+            match protocol::read_response(s) {
+                Ok(Response::Pong) => {}
+                other => panic!("conn {i}: expected Pong, got {other:?}"),
+            }
+        }
+        // And real work still flows while the 520 sit connected.
+        let mut client = SketchClient::connect(addr).unwrap();
+        client.insert_batch(42, &[1, 2, 3, 4]).unwrap();
+        assert!(client.estimate(42).unwrap().is_some());
+
+        drop(socks);
+        wait_for(|| server.stats().connections_open <= 1, "closed connections to be reaped");
+        server.shutdown();
+    });
 }
 
 #[test]
 fn idle_timeout_reaps_quiet_connections_but_not_active_ones() {
-    let (server, _registry) = start_server(ServerConfig {
-        idle_timeout: Some(Duration::from_millis(150)),
-        ..ServerConfig::default()
-    });
-    let addr = server.local_addr();
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(ServerConfig {
+            idle_timeout: Some(Duration::from_millis(150)),
+            ..cfg
+        });
+        let addr = server.local_addr();
 
-    // An idle connection is dropped after the timeout: the next read
-    // observes EOF (clean close), not a hang.
-    let mut quiet = TcpStream::connect(addr).unwrap();
-    quiet.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-    wait_for(|| server.stats().connections_open == 0, "the idle connection to be reaped");
-    let mut buf = [0u8; 8];
-    match quiet.read(&mut buf) {
-        Ok(0) => {}
-        other => panic!("expected EOF after the idle reap, got {other:?}"),
-    }
+        // An idle connection is dropped after the timeout: the next
+        // read observes EOF (clean close), not a hang.
+        let mut quiet = TcpStream::connect(addr).unwrap();
+        quiet.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        wait_for(|| server.stats().connections_open == 0, "the idle connection to be reaped");
+        let mut buf = [0u8; 8];
+        match quiet.read(&mut buf) {
+            Ok(0) => {}
+            other => panic!("expected EOF after the idle reap, got {other:?}"),
+        }
 
-    // A connection that keeps talking inside the window survives far
-    // past the timeout.
-    let mut chatty = SketchClient::connect(addr).unwrap();
-    for _ in 0..8 {
+        // A connection that keeps talking inside the window survives
+        // far past the timeout.
+        let mut chatty = SketchClient::connect(addr).unwrap();
+        for _ in 0..8 {
+            chatty.ping().unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+        }
         chatty.ping().unwrap();
-        std::thread::sleep(Duration::from_millis(50));
-    }
-    chatty.ping().unwrap();
-    server.shutdown();
+        server.shutdown();
+    });
 }
 
 #[test]
@@ -358,16 +390,18 @@ fn client_read_timeout_is_a_typed_error_that_poisons() {
     }
 
     // Against a live server, the same bounded client works normally —
-    // timeouts are a ceiling, not a latency floor.
-    let (server, _registry) = start_server(ServerConfig::default());
-    let mut bounded = SketchClient::connect_with_timeouts(
-        server.local_addr(),
-        Some(Duration::from_secs(10)),
-        Some(Duration::from_secs(10)),
-    )
-    .unwrap();
-    bounded.ping().unwrap();
-    bounded.insert_batch(5, &[1, 2, 3]).unwrap();
-    assert!(bounded.estimate(5).unwrap().is_some());
-    server.shutdown();
+    // timeouts are a ceiling, not a latency floor — on every backend.
+    for_each_backend(|cfg| {
+        let (server, _registry) = start_server(cfg);
+        let mut bounded = SketchClient::connect_with_timeouts(
+            server.local_addr(),
+            Some(Duration::from_secs(10)),
+            Some(Duration::from_secs(10)),
+        )
+        .unwrap();
+        bounded.ping().unwrap();
+        bounded.insert_batch(5, &[1, 2, 3]).unwrap();
+        assert!(bounded.estimate(5).unwrap().is_some());
+        server.shutdown();
+    });
 }
